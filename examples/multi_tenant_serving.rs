@@ -1,0 +1,186 @@
+//! END-TO-END driver (the repo's headline experiment, recorded in
+//! EXPERIMENTS.md): serve batched inference for N tenants through the REAL
+//! PJRT path under all four schedulers, reporting p50/p99 latency and
+//! throughput — plus the V100 simulator's projection of the same contest
+//! next to it.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example multi_tenant_serving
+//! ```
+//!
+//! Workload: 8 tenants, each a two-layer MLP block with its own weights
+//! (paper §2: same architecture, different weights), closed-loop clients
+//! keeping 8 requests in flight each (saturated queues).
+
+use std::time::{Duration, Instant};
+
+use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::Coordinator;
+use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::server::{ServeOpts, Server};
+use stgpu::util::bench::{fmt_flops, fmt_secs, Table};
+use stgpu::util::prng::Rng;
+use stgpu::workload::sgemm_tenants;
+
+const TENANTS: usize = 8;
+const DEPTH: usize = 8;
+const DURATION: Duration = Duration::from_secs(3);
+
+fn config(scheduler: SchedulerKind) -> ServerConfig {
+    ServerConfig {
+        scheduler,
+        max_batch: 64,
+        batch_timeout_us: 200,
+        artifacts_dir: "artifacts".into(),
+        tenants: (0..TENANTS)
+            .map(|i| TenantConfig {
+                name: format!("tenant{i}"),
+                model: "mlp".into(),
+                batch: 1,
+                slo_ms: 250.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    }
+}
+
+struct RunResult {
+    scheduler: &'static str,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    superkernels: u64,
+    singletons: u64,
+    fusion_hit_rate: f64,
+}
+
+fn serve_one(kind: SchedulerKind) -> anyhow::Result<RunResult> {
+    let cfg = config(kind);
+    let coord = Coordinator::new(&cfg)?;
+    coord.warmup()?;
+    let label = coord.scheduler_label();
+    let server = Server::start(
+        coord,
+        ServeOpts {
+            batch_timeout: Duration::from_micros(cfg.batch_timeout_us),
+            ..Default::default()
+        },
+    );
+    let stop_at = Instant::now() + DURATION;
+    let mut clients = Vec::new();
+    for t in 0..TENANTS {
+        let h = server.handle();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xE2E + t as u64);
+            let mut ok = 0u64;
+            while Instant::now() < stop_at {
+                let pending: Vec<_> = (0..DEPTH)
+                    .map(|_| {
+                        h.submit(t, vec![stgpu::runtime::HostTensor::random(&[8, 256], &mut rng)])
+                    })
+                    .collect();
+                for rx in pending {
+                    if matches!(rx.recv(), Ok(Ok(_))) {
+                        ok += 1;
+                    }
+                }
+            }
+            ok
+        }));
+    }
+    for c in clients {
+        c.join().expect("client");
+    }
+    let coord = server.shutdown();
+    let snap = coord.snapshot();
+    let mut p50s = Vec::new();
+    let mut p99s = Vec::new();
+    for t in snap.tenants.values() {
+        if t.completed > 0 {
+            p50s.push(t.latency_p50_ns as f64 / 1e6);
+            p99s.push(t.latency_p99_ns as f64 / 1e6);
+        }
+    }
+    p50s.sort_by(f64::total_cmp);
+    p99s.sort_by(f64::total_cmp);
+    Ok(RunResult {
+        scheduler: label,
+        rps: snap.throughput_rps(),
+        p50_ms: stgpu::util::stats::percentile(&p50s, 50.0),
+        p99_ms: p99s.last().copied().unwrap_or(0.0),
+        superkernels: snap.superkernel_launches,
+        singletons: snap.kernel_launches,
+        fusion_hit_rate: coord.fusion_cache_stats().hit_rate(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== multi-tenant serving: {TENANTS} MLP tenants, depth {DEPTH}, {:?} per scheduler ==\n", DURATION);
+
+    // --- The real PJRT serving contest -----------------------------------
+    let mut table = Table::new(&[
+        "scheduler", "req/s", "p50_ms", "worst_p99_ms", "superkernels", "singletons", "fusion_hit_%",
+    ]);
+    let mut best_st_rps = 0.0;
+    let mut tm_rps = 0.0;
+    for kind in [
+        SchedulerKind::Exclusive,
+        SchedulerKind::TimeMux,
+        SchedulerKind::SpaceMux,
+        SchedulerKind::SpaceTime,
+    ] {
+        let r = serve_one(kind)?;
+        if kind == SchedulerKind::SpaceTime {
+            best_st_rps = r.rps;
+        }
+        if kind == SchedulerKind::TimeMux {
+            tm_rps = r.rps;
+        }
+        table.row(&[
+            r.scheduler.to_string(),
+            format!("{:.0}", r.rps),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            r.superkernels.to_string(),
+            r.singletons.to_string(),
+            format!("{:.0}", r.fusion_hit_rate * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "headline (real PJRT-CPU path): space-time {:.0} req/s vs time-mux {:.0} req/s \
+         ({:.2}x)\n",
+        best_st_rps,
+        tm_rps,
+        best_st_rps / tm_rps.max(1e-9)
+    );
+
+    // --- The V100-scaled projection of the same contest ------------------
+    println!("V100 simulator projection (conv2_2 SGEMM per request, {TENANTS} tenants):");
+    let mut sim = Table::new(&["policy", "throughput", "mean_latency"]);
+    for policy in [
+        Policy::Exclusive,
+        Policy::TimeMux,
+        Policy::SpaceMuxMps { anomaly_seed: 3 },
+        Policy::SpaceTime { max_batch: 64 },
+    ] {
+        let cfg = SimConfig::new(DeviceSpec::v100(), policy);
+        let report = gpusim::run(
+            &cfg,
+            &sgemm_tenants(TENANTS, 50, GemmShape::RESNET18_CONV2_2),
+        );
+        sim.row(&[
+            cfg.policy.label().to_string(),
+            fmt_flops(report.throughput_flops()),
+            fmt_secs(report.mean_latency()),
+        ]);
+    }
+    println!("{}", sim.render());
+    println!(
+        "Recorded in EXPERIMENTS.md — the CPU path demonstrates the real\n\
+         mechanism (one fused launch, cached device-resident weights); the\n\
+         simulator scales the shape to the paper's V100 testbed."
+    );
+    Ok(())
+}

@@ -1,0 +1,168 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for rust (L3).
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Emits one ``<name>.hlo.txt`` per (graph kind, shape class, R bucket) plus a
+``manifest.json`` the rust runtime uses to locate and type-check artifacts.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--quick]``
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# R buckets the rust batcher rounds up to. Powers of two bound padding waste
+# to <2x while keeping the executable cache small (ablated in
+# benches/ablation_batcher.rs).
+R_BUCKETS = [1, 2, 4, 8, 16, 32, 64]
+
+# The paper's Table 1 shape classes (m, n, k).
+TABLE1_SHAPES = {
+    "rnn_matvec": (512, 1, 512),
+    "conv2_2": (256, 128, 1152),
+    "square": (256, 256, 256),
+}
+
+# Additional lowered shape classes: a small GEMM for fast integration tests
+# and CI-grade serving checks (not part of the paper's evaluation grid).
+EXTRA_SHAPES = {
+    "small": (64, 32, 48),
+}
+
+# Serving-path model blocks for the end-to-end example.
+MLP_BLOCK = {"m": 8, "hidden": 512, "k": 256, "n_out": 256}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+# Implementation flavors (see model._gemm): the `pallas` flavor validates
+# the L1 kernel through the whole pipeline and carries the TPU BlockSpec
+# structure; the `xla` flavor is the fast CPU-PJRT lowering the serving
+# benches execute. Both compute identical math (pytest pins them together).
+IMPLS = ("pallas", "xla")
+
+
+def build_catalog(quick: bool) -> list[dict]:
+    """Everything to lower: name, builder, metadata for the manifest."""
+    buckets = [1, 2, 8] if quick else R_BUCKETS
+    catalog = []
+
+    def add(name: str, kind: str, builder, meta: dict) -> None:
+        for impl in IMPLS:
+            fn, args = builder(impl)
+            catalog.append(
+                dict(
+                    name=f"{name}.{impl}",
+                    kind=kind,
+                    impl=impl,
+                    fn=fn,
+                    args=args,
+                    meta=meta,
+                )
+            )
+
+    all_shapes = {**TABLE1_SHAPES, **EXTRA_SHAPES}
+    for shape_name, (m, n, k) in all_shapes.items():
+        for r in buckets:
+            add(
+                f"gemm_{shape_name}_r{r}",
+                "batched_gemm",
+                lambda impl, r=r, m=m, n=n, k=k: model.build_batched_gemm(
+                    r, m, n, k, impl=impl
+                ),
+                dict(m=m, n=n, k=k, r=r),
+            )
+    mb = MLP_BLOCK
+    for r in buckets:
+        add(
+            f"fused_linear_r{r}",
+            "fused_linear",
+            lambda impl, r=r: model.build_fused_linear(r, 8, 256, 512, impl=impl),
+            dict(m=8, n=256, k=512, r=r),
+        )
+        add(
+            f"mlp_block_r{r}",
+            "mlp_block",
+            lambda impl, r=r: model.build_mlp_block(
+                r, mb["m"], mb["hidden"], mb["k"], mb["n_out"], impl=impl
+            ),
+            dict(m=mb["m"], k=mb["k"], hidden=mb["hidden"], n=mb["n_out"], r=r),
+        )
+        add(
+            f"rnn_cell_r{r}",
+            "rnn_cell",
+            lambda impl, r=r: model.build_rnn_cell(r, 512, impl=impl),
+            dict(m=512, n=1, k=512, r=r, hidden=512),
+        )
+    return catalog
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="small R-bucket subset (tests)"
+    )
+    ap.add_argument(
+        "--only", default=None, help="lower only artifacts whose name contains this"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": 1, "artifacts": []}
+    catalog = build_catalog(args.quick)
+    if args.only:
+        catalog = [c for c in catalog if args.only in c["name"]]
+    if not catalog:
+        print("nothing to lower", file=sys.stderr)
+        sys.exit(1)
+
+    for entry in catalog:
+        path = os.path.join(args.out, f"{entry['name']}.hlo.txt")
+        text = lower_entry(entry["fn"], entry["args"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            dict(
+                name=entry["name"],
+                kind=entry["kind"],
+                impl=entry["impl"],
+                file=os.path.basename(path),
+                meta=entry["meta"],
+                inputs=[
+                    dict(shape=list(a.shape), dtype=str(a.dtype))
+                    for a in entry["args"]
+                ],
+            )
+        )
+        print(f"lowered {entry['name']}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""L1: the batched-GEMM super-kernel (Pallas).
+
+This is the TPU re-think of the paper's `cublasSgemmBatched` super-kernel
+(DESIGN.md §2 Hardware-Adaptation):
+
+* CUDA threadblocks -> a Pallas grid ``(R, M/bm, N/bn, K/bk)``: each grid
+  cell moves one ``(bm, bk)`` LHS tile and one ``(bk, bn)`` RHS tile
+  HBM->VMEM and accumulates a ``(bm, bn)`` output tile. The R problems the
+  paper spread over CUDA streams become the leading grid dimension of ONE
+  launch -- the super-kernel insight taken to its limit.
+* Tensor-core WMMA -> MXU: the inner op is ``jnp.dot`` with
+  ``preferred_element_type=f32``, tiled to the 128x128 systolic array.
+* Shared-memory staging -> VMEM budget: tile sizes are the largest
+  divisors of (M, N, K) that fit ``VMEM_BUDGET_BYTES`` with
+  double-buffering headroom; asserted at trace time.
+
+The kernel always runs ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Estimated real-TPU MXU
+utilization is analyzed in EXPERIMENTS.md §Perf from the BlockSpec
+structure, not from interpret-mode wallclock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Per-core VMEM is ~16 MiB on modern TPUs; leave headroom for
+# double-buffering (Pallas pipelines the HBM->VMEM copies, so two tiles of
+# each operand may be resident) plus the output tile.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+# MXU systolic array edge: prefer 128-multiples so the dot feeds the array
+# fully; the VPU lane width (128) makes 128 the right N tile even for
+# narrow problems.
+MXU_EDGE = 128
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap``."""
+    cap = min(n, cap)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_tiles(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Choose (bm, bn, bk): MXU-aligned when possible, VMEM-bounded always.
+
+    Preference order mirrors the paper's CUDA tiling discussion: output
+    tiles first (they are revisited across the K loop), then the deepest K
+    tile that still fits the budget with double-buffering.
+    """
+    bm = _largest_divisor_leq(m, MXU_EDGE)
+    bn = _largest_divisor_leq(n, MXU_EDGE)
+    # Deepest K tile fitting: 2*(bm*bk + bk*bn) + bm*bn floats <= budget.
+    budget_floats = VMEM_BUDGET_BYTES // 4
+    avail = budget_floats - bm * bn
+    cap = max(1, avail // (2 * (bm + bn)))
+    bk = _largest_divisor_leq(k, min(cap, 512))
+    assert_vmem_budget(bm, bn, bk)
+    return bm, bn, bk
+
+
+def assert_vmem_budget(bm: int, bn: int, bk: int) -> None:
+    """Trace-time guard: tiles (double-buffered) must fit the VMEM budget."""
+    resident = 2 * (bm * bk + bk * bn) + bm * bn
+    bytes_ = 4 * resident
+    assert bytes_ <= VMEM_BUDGET_BYTES, (
+        f"tile ({bm},{bn},{bk}) needs {bytes_} B of VMEM, "
+        f"budget is {VMEM_BUDGET_BYTES} B"
+    )
+
+
+def batched_gemm(a: jax.Array, b: jax.Array, *, bias: jax.Array | None = None,
+                 fuse_relu: bool = False,
+                 tiles: tuple[int, int, int] | None = None) -> jax.Array:
+    """``out[r] = a[r] @ b[r]`` for r in 0..R as ONE Pallas launch.
+
+    a: f32[R, M, K], b: f32[R, K, N] -> f32[R, M, N].
+    Optional fused epilogue: ``relu(out + bias)`` with bias f32[R, 1, N]
+    (the inference bias+activation of a dense/conv layer, folded into the
+    GEMM the way TensorRT folds them -- keeps the request path one kernel).
+    """
+    r, m, k = a.shape
+    rb, kb, n = b.shape
+    assert r == rb and k == kb, f"shape mismatch: {a.shape} vs {b.shape}"
+    bm, bn, bk = tiles if tiles is not None else pick_tiles(m, n, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tiles ({bm},{bn},{bk}) must divide problem ({m},{n},{k})"
+    )
+    nk = k // bk
+    fuse = fuse_relu or bias is not None
+    if fuse and bias is None:
+        bias = jnp.zeros((r, 1, n), jnp.float32)
+
+    grid = (r, m // bm, n // bn, nk)
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda ri, mi, ni, ki: (ri, mi, ki)),
+        pl.BlockSpec((1, bk, bn), lambda ri, mi, ni, ki: (ri, ki, ni)),
+    ]
+    args = [a, b]
+    if fuse:
+        in_specs.append(pl.BlockSpec((1, 1, bn), lambda ri, mi, ni, ki: (ri, 0, ni)))
+        args.append(bias)
+
+    kernel = functools.partial(
+        _squeeze_lead_kernel, nk=nk, fuse_bias_relu=fuse
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ri, mi, ni, ki: (ri, mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((r, m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*args)
+
+
+def _squeeze_lead_kernel(a_ref, b_ref, *rest, nk: int, fuse_bias_relu: bool):
+    """Adapter: blocks carry a leading length-1 R axis; squeeze it away."""
+    if fuse_bias_relu:
+        bias_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+        bias_ref = None
+
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+    o_ref[0, :, :] += acc.astype(o_ref.dtype)
+
+    if fuse_bias_relu:
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            o_ref[0, :, :] = jnp.maximum(o_ref[0, :, :] + bias_ref[0], 0.0)
+
+
+def vmem_report(m: int, n: int, k: int) -> dict:
+    """Static L1 profile for DESIGN.md/EXPERIMENTS.md: tile geometry, VMEM
+    footprint, MXU-utilization estimate for one grid cell."""
+    bm, bn, bk = pick_tiles(m, n, k)
+    resident_bytes = 4 * (2 * (bm * bk + bk * bn) + bm * bn)
+    # MXU estimate: fraction of the 128x128 array the (bm, bn) tile feeds,
+    # times the K-depth efficiency (pipelining startup over bk cycles).
+    mxu_fill = min(bm, MXU_EDGE) * min(bn, MXU_EDGE) / (MXU_EDGE * MXU_EDGE)
+    k_eff = bk / (bk + MXU_EDGE)  # systolic fill/drain amortization
+    return {
+        "tiles": (bm, bn, bk),
+        "grid_cells_per_problem": (m // bm) * (n // bn) * (k // bk),
+        "vmem_resident_bytes": resident_bytes,
+        "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+        "mxu_fill": mxu_fill,
+        "k_efficiency": k_eff,
+        "mxu_utilization_estimate": mxu_fill * k_eff,
+    }

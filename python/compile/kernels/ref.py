@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything in this file is deliberately the most obvious possible
+implementation; pytest compares the Pallas kernels against these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """out[r] = a[r] @ b[r]; a: [R, M, K], b: [R, K, N] -> [R, M, N]."""
+    return jnp.einsum(
+        "rmk,rkn->rmn", a, b, preferred_element_type=jnp.float32
+    ).astype(jnp.float32)
+
+
+def fused_linear_ref(a: jax.Array, b: jax.Array, bias: jax.Array) -> jax.Array:
+    """relu(a @ b + bias); bias broadcast over M: [R, 1, N]."""
+    return jnp.maximum(batched_gemm_ref(a, b) + bias, 0.0)
+
+
+def mlp_block_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                  w2: jax.Array) -> jax.Array:
+    """Two-layer block: relu(x @ w1 + b1) @ w2 — the multi-layer inference
+    unit served end-to-end by the rust coordinator."""
+    h = fused_linear_ref(x, w1, b1)
+    return batched_gemm_ref(h, w2)

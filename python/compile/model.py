@@ -1,0 +1,102 @@
+"""L2: the JAX compute graphs wrapping the L1 Pallas super-kernel.
+
+These are the functions `aot.py` lowers to HLO text for the rust runtime.
+Each builder returns ``(fn, example_args)`` so lowering and testing share
+one definition. All functions call the Pallas kernel from
+``kernels.batched_gemm`` so the kernel lowers into the same HLO module —
+Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.batched_gemm import batched_gemm
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _gemm(a, b, *, bias=None, fuse_relu=False, impl="pallas"):
+    """Dispatch between the Pallas super-kernel and the plain-XLA lowering.
+
+    Both implement the identical math (pytest pins them together). The
+    ``pallas`` flavor carries the TPU BlockSpec structure and validates the
+    L1 kernel through the whole AOT pipeline; the ``xla`` flavor lets XLA's
+    native dot emitter produce the fast CPU code the serving benches run
+    (interpret-mode Pallas on CPU pays a ~20x dynamic-slice tax — DESIGN.md
+    §7). On a real TPU the pallas flavor IS the fast path.
+    """
+    if impl == "pallas":
+        return batched_gemm(a, b, bias=bias, fuse_relu=fuse_relu)
+    assert impl == "xla", impl
+    if bias is not None or fuse_relu:
+        b_ = bias if bias is not None else jnp.zeros((a.shape[0], 1, b.shape[2]), jnp.float32)
+        return ref.fused_linear_ref(a, b, b_)
+    return ref.batched_gemm_ref(a, b)
+
+
+def build_batched_gemm(r: int, m: int, n: int, k: int, impl: str = "pallas"):
+    """The super-kernel itself: out[i] = a[i] @ b[i], one launch.
+
+    This is the paper's `cublasSgemmBatched` analog and the unit the rust
+    batcher dispatches for Figure 7 / Table 1 workloads.
+    """
+
+    def fn(a, b):
+        return (_gemm(a, b, impl=impl),)
+
+    return fn, (spec(r, m, k), spec(r, k, n))
+
+
+def build_fused_linear(r: int, m: int, n: int, k: int, impl: str = "pallas"):
+    """Dense/conv layer with folded inference epilogue:
+    relu(a @ w + bias). One kernel on the request path."""
+
+    def fn(a, w, bias):
+        return (_gemm(a, w, bias=bias, fuse_relu=True, impl=impl),)
+
+    return fn, (spec(r, m, k), spec(r, k, n), spec(r, 1, n))
+
+
+def build_mlp_block(r: int, m: int, hidden: int, k: int, n_out: int,
+                    impl: str = "pallas"):
+    """A two-layer inference block: relu(x@w1 + b1) @ w2.
+
+    The multi-layer unit the end-to-end serving example executes per
+    request batch: two super-kernel launches, weights are per-tenant
+    inputs (tenants share architecture, never weights — paper §2).
+    """
+
+    def fn(x, w1, b1, w2):
+        h = _gemm(x, w1, bias=b1, fuse_relu=True, impl=impl)
+        return (_gemm(h, w2, impl=impl),)
+
+    return fn, (
+        spec(r, m, k),
+        spec(r, k, hidden),
+        spec(r, 1, hidden),
+        spec(r, hidden, n_out),
+    )
+
+
+def build_rnn_cell(r: int, hidden: int, impl: str = "pallas"):
+    """The paper's Table 1 RNN workload: h' = tanh(x@W_ih + h@W_hh).
+
+    Both matvecs are Pallas super-kernel calls over the R-problem batch
+    (the paper's M=512, N=1, K=512 shape per problem at hidden=512).
+    """
+
+    def fn(w_ih, w_hh, x, h):
+        a = _gemm(w_ih, x, impl=impl)  # [R,hidden,hidden] @ [R,hidden,1]
+        b = _gemm(w_hh, h, impl=impl)
+        return (jnp.tanh(a + b),)
+
+    # Paper layout: M=hidden rows of W times the length-1 activation column.
+    return fn, (
+        spec(r, hidden, hidden),
+        spec(r, hidden, hidden),
+        spec(r, hidden, 1),
+        spec(r, hidden, 1),
+    )

@@ -1,0 +1,203 @@
+"""L1 correctness: the Pallas batched-GEMM super-kernel vs the pure-jnp
+oracle, swept over shapes (hypothesis) and pinned on the paper's Table 1
+shape classes."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.batched_gemm import (
+    MXU_EDGE,
+    VMEM_BUDGET_BYTES,
+    assert_vmem_budget,
+    batched_gemm,
+    pick_tiles,
+    vmem_report,
+)
+
+TABLE1_SHAPES = {
+    "rnn_matvec": (512, 1, 512),
+    "conv2_2": (256, 128, 1152),
+    "square": (256, 256, 256),
+}
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def make_inputs(r, m, n, k, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return rand(k1, r, m, k), rand(k2, r, k, n)
+
+
+def tol(k):
+    """f32 GEMM tolerance: accumulation-order error grows ~sqrt(K).
+
+    The Pallas kernel accumulates in bk-sized chunks while the einsum
+    reference uses a different reduction order; for K ~ 1e3 the reassociation
+    error on N(0,1) inputs is ~1e-4 absolute. Scale atol accordingly.
+    """
+    atol = max(1e-5, 3e-6 * float(k) ** 0.5 * 4)
+    return dict(rtol=1e-4, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Pinned paper shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TABLE1_SHAPES))
+@pytest.mark.parametrize("r", [1, 2, 4, 8])
+def test_table1_shapes_match_ref(name, r):
+    m, n, k = TABLE1_SHAPES[name]
+    a, b = make_inputs(r, m, n, k)
+    got = batched_gemm(a, b)
+    want = ref.batched_gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, **tol(k))
+
+
+@pytest.mark.parametrize("r", [1, 3, 8])
+def test_fused_bias_relu_matches_ref(r):
+    m, n, k = 64, 32, 48
+    a, b = make_inputs(r, m, n, k, seed=1)
+    bias = rand(jax.random.PRNGKey(7), r, 1, n)
+    got = batched_gemm(a, b, bias=bias, fuse_relu=True)
+    want = ref.fused_linear_ref(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(got) >= 0.0).all(), "relu epilogue must clamp at 0"
+
+
+def test_relu_without_bias():
+    a, b = make_inputs(2, 16, 8, 8, seed=2)
+    got = batched_gemm(a, b, fuse_relu=True)
+    want = jnp.maximum(ref.batched_gemm_ref(a, b), 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bias_without_relu_clamps_too():
+    # bias implies the fused epilogue (relu included): documented behaviour.
+    a, b = make_inputs(1, 8, 8, 8, seed=3)
+    bias = rand(jax.random.PRNGKey(9), 1, 1, 8)
+    got = batched_gemm(a, b, bias=bias)
+    want = ref.fused_linear_ref(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape sweep
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([1, 2, 3, 4, 6, 8, 16, 24, 64, 128, 130, 256])
+rs = st.integers(min_value=1, max_value=9)
+
+
+@hypothesis.given(r=rs, m=dims, n=dims, k=dims)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_sweep_matches_ref(r, m, n, k):
+    a, b = make_inputs(r, m, n, k, seed=(r * 1000003 + m * 101 + n * 11 + k))
+    got = batched_gemm(a, b)
+    want = ref.batched_gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(r=rs, m=dims, n=dims, k=dims)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_sweep_fused_matches_ref(r, m, n, k):
+    a, b = make_inputs(r, m, n, k, seed=(r + m + n + k))
+    bias = rand(jax.random.PRNGKey(m * n + k), r, 1, n)
+    got = batched_gemm(a, b, bias=bias, fuse_relu=True)
+    want = ref.fused_linear_ref(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tile picker invariants
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    m=st.integers(1, 2048), n=st.integers(1, 2048), k=st.integers(1, 4096)
+)
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_tiles_divide_and_fit_budget(m, n, k):
+    bm, bn, bk = pick_tiles(m, n, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert_vmem_budget(bm, bn, bk)  # raises on violation
+    assert 1 <= bm <= min(m, MXU_EDGE)
+    assert 1 <= bn <= min(n, MXU_EDGE)
+
+
+def test_tiles_mxu_aligned_for_paper_shapes():
+    for m, n, k in TABLE1_SHAPES.values():
+        bm, bn, bk = pick_tiles(m, n, k)
+        # Output tiles should hit the MXU edge whenever the dims allow.
+        if m % MXU_EDGE == 0:
+            assert bm == MXU_EDGE
+        if n % MXU_EDGE == 0:
+            assert bn == MXU_EDGE
+
+
+def test_vmem_report_fields():
+    rep = vmem_report(256, 128, 1152)
+    assert rep["vmem_resident_bytes"] <= VMEM_BUDGET_BYTES
+    assert 0.0 < rep["mxu_utilization_estimate"] <= 1.0
+    bm, bn, bk = rep["tiles"]
+    assert rep["grid_cells_per_problem"] == (256 // bm) * (128 // bn) * (1152 // bk)
+
+
+def test_explicit_tiles_respected():
+    a, b = make_inputs(2, 64, 64, 64, seed=11)
+    got = batched_gemm(a, b, tiles=(32, 32, 16))
+    want = ref.batched_gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bad_tiles_rejected():
+    a, b = make_inputs(1, 64, 64, 64, seed=12)
+    with pytest.raises(AssertionError):
+        batched_gemm(a, b, tiles=(48, 32, 16))  # 48 does not divide 64
+
+
+def test_shape_mismatch_rejected():
+    a = jnp.zeros((2, 8, 8), jnp.float32)
+    b = jnp.zeros((3, 8, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        batched_gemm(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Numerical edge cases
+# ---------------------------------------------------------------------------
+
+def test_zero_inputs():
+    a = jnp.zeros((2, 16, 16), jnp.float32)
+    b = jnp.zeros((2, 16, 16), jnp.float32)
+    np.testing.assert_array_equal(batched_gemm(a, b), np.zeros((2, 16, 16)))
+
+
+def test_identity_matmul():
+    eye = jnp.tile(jnp.eye(32, dtype=jnp.float32)[None], (3, 1, 1))
+    b = make_inputs(3, 32, 32, 32, seed=4)[1]
+    np.testing.assert_allclose(batched_gemm(eye, b), b, rtol=1e-6, atol=1e-6)
+
+
+def test_large_magnitudes_accumulate_in_f32():
+    a, b = make_inputs(1, 8, 8, 1024, seed=5)
+    a = a * 100.0
+    got = batched_gemm(a, b)
+    want = ref.batched_gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_problems_are_independent():
+    """Problem r's result must not depend on other problems in the batch —
+    the isolation property the super-kernel must preserve (paper §4)."""
+    m, n, k = 32, 16, 24
+    a, b = make_inputs(4, m, n, k, seed=6)
+    full = batched_gemm(a, b)
+    for i in range(4):
+        solo = batched_gemm(a[i : i + 1], b[i : i + 1])
+        np.testing.assert_allclose(full[i], solo[0], rtol=1e-5, atol=1e-5)

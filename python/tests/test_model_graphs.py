@@ -1,0 +1,117 @@
+"""L2 correctness: the JAX graph builders (model.py) — pallas and xla
+flavors must agree with each other and with the reference composition, and
+their lowered HLO must declare the shapes the manifest promises."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def materialize(args, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(args))
+    return [
+        jax.random.normal(k, tuple(a.shape), dtype=jnp.float32)
+        for k, a in zip(keys, args)
+    ]
+
+
+BUILDERS = {
+    "batched_gemm": lambda impl: model.build_batched_gemm(3, 32, 16, 24, impl=impl),
+    "fused_linear": lambda impl: model.build_fused_linear(2, 8, 64, 32, impl=impl),
+    "mlp_block": lambda impl: model.build_mlp_block(2, 8, 64, 32, 16, impl=impl),
+    "rnn_cell": lambda impl: model.build_rnn_cell(2, 64, impl=impl),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(BUILDERS))
+def test_pallas_and_xla_flavors_agree(kind):
+    fn_p, args = BUILDERS[kind]("pallas")
+    fn_x, _ = BUILDERS[kind]("xla")
+    vals = materialize(args, seed=hash(kind) % 2**31)
+    out_p = fn_p(*vals)[0]
+    out_x = fn_x(*vals)[0]
+    np.testing.assert_allclose(out_p, out_x, rtol=1e-4, atol=1e-4)
+
+
+def test_batched_gemm_vs_ref():
+    fn, args = model.build_batched_gemm(2, 16, 8, 12, impl="pallas")
+    a, b = materialize(args, seed=1)
+    np.testing.assert_allclose(
+        fn(a, b)[0], ref.batched_gemm_ref(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mlp_block_vs_ref():
+    fn, args = model.build_mlp_block(2, 8, 32, 16, 8, impl="pallas")
+    x, w1, b1, w2 = materialize(args, seed=2)
+    np.testing.assert_allclose(
+        fn(x, w1, b1, w2)[0],
+        ref.mlp_block_ref(x, w1, b1, w2),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_rnn_cell_is_tanh_of_sum():
+    fn, args = model.build_rnn_cell(2, 32, impl="pallas")
+    w_ih, w_hh, x, h = materialize(args, seed=3)
+    want = jnp.tanh(
+        ref.batched_gemm_ref(w_ih, x) + ref.batched_gemm_ref(w_hh, h)
+    )
+    np.testing.assert_allclose(fn(w_ih, w_hh, x, h)[0], want, rtol=1e-5, atol=1e-5)
+
+
+def test_rnn_cell_output_bounded():
+    fn, args = model.build_rnn_cell(1, 16, impl="xla")
+    vals = [v * 10 for v in materialize(args, seed=4)]
+    out = np.asarray(fn(*vals)[0])
+    assert (np.abs(out) <= 1.0).all(), "tanh output must be in [-1, 1]"
+
+
+# ---------------------------------------------------------------------------
+# Lowering / manifest contract
+# ---------------------------------------------------------------------------
+
+def test_lower_entry_produces_hlo_text():
+    fn, args = model.build_batched_gemm(1, 8, 8, 8, impl="xla")
+    text = aot.lower_entry(fn, args)
+    assert "HloModule" in text
+    assert "f32[1,8,8]" in text
+
+
+def test_catalog_quick_subset():
+    cat = aot.build_catalog(quick=True)
+    names = {c["name"] for c in cat}
+    # (3 table1 + 1 extra) shapes x 3 buckets x 2 impls
+    #   + 3 serving kinds x 3 buckets x 2 impls
+    n_shapes = len(aot.TABLE1_SHAPES) + len(aot.EXTRA_SHAPES)
+    assert len(cat) == len(names) == (n_shapes * 3 + 3 * 3) * 2
+    rs = {c["meta"]["r"] for c in cat}
+    assert rs == {1, 2, 8}
+
+
+def test_catalog_full_buckets():
+    cat = aot.build_catalog(quick=False)
+    rs = sorted({c["meta"]["r"] for c in cat})
+    assert rs == aot.R_BUCKETS == [1, 2, 4, 8, 16, 32, 64]
+
+
+def test_catalog_args_match_meta():
+    for entry in aot.build_catalog(quick=True):
+        r = entry["meta"]["r"]
+        for a in entry["args"]:
+            assert a.shape[0] == r, f"{entry['name']}: leading dim != R"
+            assert a.dtype == jnp.float32
+
+
+def test_lowered_entry_runs_under_jit():
+    """What aot lowers must be exactly what jit executes."""
+    fn, args = model.build_fused_linear(2, 4, 16, 8, impl="pallas")
+    vals = materialize(args, seed=5)
+    eager = fn(*vals)[0]
+    jitted = jax.jit(fn)(*vals)[0]
+    np.testing.assert_allclose(eager, jitted, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,66 @@
+//! Figure 2 — small batch sizes are forced by latency SLOs and leave the
+//! GPU underutilized.
+//!
+//! Paper claim: the largest ResNet-50 batch on a V100 within the SLO is 26,
+//! achieving only ~28 % of peak FP32 throughput on average.
+//!
+//! Regenerates the figure's series: batch size vs latency + achieved
+//! fraction of peak, with the SLO line and the max-feasible batch marked.
+
+use stgpu::gpusim::{self, DeviceSpec, Policy, SimConfig};
+use stgpu::models::zoo;
+use stgpu::util::bench::{banner, fmt_secs, Table};
+use stgpu::workload::model_tenants;
+
+fn main() {
+    banner(
+        "Figure 2: ResNet-50 batch size vs latency vs utilization (V100)",
+        "largest batch within SLO = 26, at ~28% of peak FP32",
+    );
+    let spec = DeviceSpec::v100();
+    let peak = spec.peak_flops();
+    // The simulator models kernel time only (no framework / cuDNN-descriptor
+    // overhead), so its absolute ResNet-50 latencies run ~2.4x below the
+    // paper's measured stack. The SLO line is scaled by the same factor so
+    // the *operating point* (which batch the SLO admits, and the utilization
+    // there) is comparable — see EXPERIMENTS.md "Fig 2" for the derivation.
+    let slo_s = 0.100 / 2.33;
+    let model = zoo::resnet50();
+
+    let mut table = Table::new(&["batch", "latency", "peak_frac", "within_slo"]);
+    let mut max_within = 0u32;
+    let mut frac_at_max = 0.0;
+    let batches: Vec<u32> = (0..=6).map(|p| 1u32 << p).chain([26, 48].iter().copied()).collect();
+    let mut batches = batches;
+    batches.sort_unstable();
+    batches.dedup();
+    for batch in batches {
+        let cfg = SimConfig::new(spec.clone(), Policy::Exclusive);
+        let report = gpusim::run(&cfg, &model_tenants(1, 3, &model, batch));
+        let lat = report.mean_latency();
+        let frac = report.throughput_flops() / peak;
+        let within = lat <= slo_s;
+        if within && batch > max_within {
+            max_within = batch;
+            frac_at_max = frac;
+        }
+        table.row(&[
+            batch.to_string(),
+            fmt_secs(lat),
+            format!("{:.1}%", frac * 100.0),
+            if within { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    table.emit("fig2_batch_slo");
+    println!(
+        "largest batch within the {:.1} ms (scaled) SLO: {} at {:.1}% of peak \
+         (paper: 26 at ~28%)",
+        slo_s * 1e3,
+        max_within,
+        frac_at_max * 100.0
+    );
+    println!(
+        "shape check: utilization climbs with batch but the SLO caps the\n\
+         feasible batch far below saturation — the gap multi-tenancy must fill."
+    );
+}

@@ -1,0 +1,57 @@
+//! Figure 4 — latency predictability under MPS spatial sharing.
+//!
+//! Paper claim: across tenants under MPS there is up to a 25% latency gap
+//! between the fastest and slowest model on the GPU, and the anomaly is
+//! exacerbated with an ODD number of concurrent processes.
+//!
+//! Regenerates the figure's series: per-tenant mean latency spread
+//! (fastest vs straggler) for 2..15 tenants, even vs odd, plus the same
+//! run with the space-time scheduler + eviction showing the gap closing.
+
+use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::util::bench::{banner, Table};
+use stgpu::workload::sgemm_tenants;
+
+fn main() {
+    banner(
+        "Figure 4: fastest-vs-straggler latency gap under MPS",
+        "up to 25% gap; worse for odd tenant counts",
+    );
+    let spec = DeviceSpec::v100();
+    let shape = GemmShape::RESNET18_CONV2_2;
+    let iters = 24;
+
+    let mut table = Table::new(&["tenants", "parity", "mps_gap_%", "streams_gap_%", "space_time_gap_%"]);
+    let mut worst_even: f64 = 0.0;
+    let mut worst_odd: f64 = 0.0;
+    for n in 2..=15usize {
+        let gap = |policy: Policy| {
+            let cfg = SimConfig::new(spec.clone(), policy);
+            gpusim::run(&cfg, &sgemm_tenants(n, iters, shape)).straggler_gap() * 100.0
+        };
+        let mps = gap(Policy::SpaceMuxMps { anomaly_seed: 7 });
+        let streams = gap(Policy::SpaceMuxStreams);
+        let st = gap(Policy::SpaceTime { max_batch: 64 });
+        if n % 2 == 0 {
+            worst_even = worst_even.max(mps);
+        } else {
+            worst_odd = worst_odd.max(mps);
+        }
+        table.row(&[
+            n.to_string(),
+            if n % 2 == 0 { "even".into() } else { "odd".into() },
+            format!("{mps:.1}"),
+            format!("{streams:.1}"),
+            format!("{st:.1}"),
+        ]);
+    }
+    table.emit("fig4_predictability");
+    println!(
+        "worst MPS gap — even tenants: {worst_even:.1}% | odd tenants: {worst_odd:.1}% \
+         (paper: up to 25%, odd worse)"
+    );
+    println!(
+        "shape check: space-time keeps the gap near zero — one super-kernel\n\
+         gives every fused problem the same service time (isolation restored)."
+    );
+}

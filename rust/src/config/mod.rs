@@ -1,0 +1,10 @@
+//! Configuration system: a TOML-subset parser (sections, key = value,
+//! strings / numbers / booleans / inline arrays) plus the typed schema the
+//! server and benches consume. `toml`/`serde` are not vendored offline —
+//! see DESIGN.md §7.
+
+pub mod schema;
+pub mod toml_lite;
+
+pub use schema::{SchedulerKind, ServerConfig, TenantConfig};
+pub use toml_lite::TomlDoc;

@@ -1,0 +1,283 @@
+//! Typed configuration schema for the serving binary and examples.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::toml_lite::{TomlDoc, TomlTable};
+
+/// Which scheduler the coordinator runs (paper §3/§4 policies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Exclusive,
+    TimeMux,
+    SpaceMux,
+    SpaceTime,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "exclusive" => Ok(Self::Exclusive),
+            "time-mux" | "time" => Ok(Self::TimeMux),
+            "space-mux" | "space" => Ok(Self::SpaceMux),
+            "space-time" | "spacetime" => Ok(Self::SpaceTime),
+            other => Err(format!(
+                "unknown scheduler {other:?} (expected exclusive|time-mux|space-mux|space-time)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Exclusive => "exclusive",
+            Self::TimeMux => "time-mux",
+            Self::SpaceMux => "space-mux",
+            Self::SpaceTime => "space-time",
+        }
+    }
+}
+
+/// One tenant: a deployed model instance with its own weights and SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantConfig {
+    pub name: String,
+    /// Model zoo entry ("resnet18", "resnet50", "mobilenet_v2", "rnn_cell")
+    /// or GEMM shape spec ("sgemm:256x128x1152").
+    pub model: String,
+    pub batch: u32,
+    /// Latency SLO in milliseconds (p99 target for the SLO monitor).
+    pub slo_ms: f64,
+    /// Seed that derives this tenant's weights (tenants share architecture,
+    /// never weights — paper §2).
+    pub weight_seed: u64,
+}
+
+impl TenantConfig {
+    fn from_table(t: &TomlTable, idx: usize) -> Result<Self, String> {
+        let name = t
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("tenant{idx}"));
+        let model = t
+            .get("model")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("tenant {name}: missing model"))?
+            .to_string();
+        let batch = t.get("batch").and_then(|v| v.as_int()).unwrap_or(1) as u32;
+        let slo_ms = t.get("slo_ms").and_then(|v| v.as_float()).unwrap_or(100.0);
+        let weight_seed = t
+            .get("weight_seed")
+            .and_then(|v| v.as_int())
+            .unwrap_or(idx as i64) as u64;
+        if batch == 0 {
+            return Err(format!("tenant {name}: batch must be >= 1"));
+        }
+        if slo_ms <= 0.0 {
+            return Err(format!("tenant {name}: slo_ms must be positive"));
+        }
+        Ok(Self {
+            name,
+            model,
+            batch,
+            slo_ms,
+            weight_seed,
+        })
+    }
+}
+
+/// Server configuration (the `stgpu serve` entrypoint and the examples).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    pub scheduler: SchedulerKind,
+    /// Max problems fused into one super-kernel.
+    pub max_batch: u32,
+    /// Padding policy: `false` (default) rounds chunks up to the next R
+    /// bucket (paper-faithful — padded lanes are ~free on a parallel GPU);
+    /// `true` splits chunks into their exact binary bucket decomposition
+    /// (zero padding — right when a padded lane costs real compute, e.g.
+    /// this repo's CPU-PJRT substrate).
+    pub split_exact: bool,
+    /// SLO-aware drain (space-time only): visit backlogged tenants in
+    /// head-of-queue deadline order instead of round-robin (paper §4.1:
+    /// "determine when to execute workloads based on per-model SLOs").
+    pub slo_aware: bool,
+    /// How long the batcher waits to accumulate a batch, microseconds.
+    pub batch_timeout_us: u64,
+    /// Per-tenant admission queue depth.
+    pub queue_depth: usize,
+    /// Straggler eviction: tenants slower than `eviction_threshold` × the
+    /// median for `eviction_strikes` windows are evicted (paper §4).
+    pub eviction_enabled: bool,
+    pub eviction_threshold: f64,
+    pub eviction_strikes: u32,
+    /// Directory holding the AOT artifacts (HLO text + manifest).
+    pub artifacts_dir: PathBuf,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    pub seed: u64,
+    pub tenants: Vec<TenantConfig>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            scheduler: SchedulerKind::SpaceTime,
+            max_batch: 64,
+            split_exact: false,
+            slo_aware: false,
+            batch_timeout_us: 200,
+            queue_depth: 256,
+            eviction_enabled: true,
+            eviction_threshold: 1.15,
+            eviction_strikes: 3,
+            artifacts_dir: PathBuf::from("artifacts"),
+            workers: 1,
+            seed: 0,
+            tenants: Vec::new(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Parse from a TOML-subset document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let mut cfg = ServerConfig::default();
+        let server = doc.sections.get("server").unwrap_or(&doc.root);
+        if let Some(v) = server.get("scheduler").and_then(|v| v.as_str()) {
+            cfg.scheduler = SchedulerKind::parse(v)?;
+        }
+        if let Some(v) = server.get("max_batch").and_then(|v| v.as_int()) {
+            if v < 1 {
+                return Err("max_batch must be >= 1".into());
+            }
+            cfg.max_batch = v as u32;
+        }
+        if let Some(v) = server.get("split_exact").and_then(|v| v.as_bool()) {
+            cfg.split_exact = v;
+        }
+        if let Some(v) = server.get("slo_aware").and_then(|v| v.as_bool()) {
+            cfg.slo_aware = v;
+        }
+        if let Some(v) = server.get("batch_timeout_us").and_then(|v| v.as_int()) {
+            cfg.batch_timeout_us = v as u64;
+        }
+        if let Some(v) = server.get("queue_depth").and_then(|v| v.as_int()) {
+            if v < 1 {
+                return Err("queue_depth must be >= 1".into());
+            }
+            cfg.queue_depth = v as usize;
+        }
+        if let Some(v) = server.get("eviction_enabled").and_then(|v| v.as_bool()) {
+            cfg.eviction_enabled = v;
+        }
+        if let Some(v) = server.get("eviction_threshold").and_then(|v| v.as_float()) {
+            if v <= 1.0 {
+                return Err("eviction_threshold must be > 1.0".into());
+            }
+            cfg.eviction_threshold = v;
+        }
+        if let Some(v) = server.get("eviction_strikes").and_then(|v| v.as_int()) {
+            cfg.eviction_strikes = v as u32;
+        }
+        if let Some(v) = server.get("artifacts_dir").and_then(|v| v.as_str()) {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = server.get("workers").and_then(|v| v.as_int()) {
+            cfg.workers = (v as usize).max(1);
+        }
+        if let Some(v) = server.get("seed").and_then(|v| v.as_int()) {
+            cfg.seed = v as u64;
+        }
+        if let Some(tenants) = doc.lists.get("tenant") {
+            cfg.tenants = tenants
+                .iter()
+                .enumerate()
+                .map(|(i, t)| TenantConfig::from_table(t, i))
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        Self::from_doc(&TomlDoc::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+        [server]
+        scheduler = "space-time"
+        max_batch = 32
+        batch_timeout_us = 150
+        eviction_threshold = 1.2
+
+        [[tenant]]
+        name = "a"
+        model = "resnet18"
+        batch = 2
+        slo_ms = 50.0
+
+        [[tenant]]
+        name = "b"
+        model = "sgemm:256x128x1152"
+    "#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ServerConfig::from_doc(&TomlDoc::parse(EXAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.scheduler, SchedulerKind::SpaceTime);
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.batch_timeout_us, 150);
+        assert_eq!(cfg.eviction_threshold, 1.2);
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0].name, "a");
+        assert_eq!(cfg.tenants[0].batch, 2);
+        assert_eq!(cfg.tenants[1].model, "sgemm:256x128x1152");
+        assert_eq!(cfg.tenants[1].batch, 1); // default
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.scheduler, SchedulerKind::SpaceTime);
+        assert!(cfg.max_batch >= 1);
+        assert!(cfg.eviction_threshold > 1.0);
+    }
+
+    #[test]
+    fn scheduler_kind_parse_all() {
+        assert_eq!(
+            SchedulerKind::parse("exclusive").unwrap(),
+            SchedulerKind::Exclusive
+        );
+        assert_eq!(SchedulerKind::parse("time").unwrap(), SchedulerKind::TimeMux);
+        assert_eq!(
+            SchedulerKind::parse("space-mux").unwrap(),
+            SchedulerKind::SpaceMux
+        );
+        assert!(SchedulerKind::parse("warp-mux").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[server]\nmax_batch = 0").is_err());
+        assert!(bad("[server]\neviction_threshold = 0.9").is_err());
+        assert!(bad("[server]\nqueue_depth = 0").is_err());
+        assert!(bad("[[tenant]]\nname = \"x\"").is_err(), "missing model");
+        assert!(bad("[[tenant]]\nmodel = \"resnet18\"\nbatch = 0").is_err());
+    }
+
+    #[test]
+    fn tenant_defaults_fill_in() {
+        let cfg = ServerConfig::from_doc(
+            &TomlDoc::parse("[[tenant]]\nmodel = \"resnet50\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.tenants[0].name, "tenant0");
+        assert_eq!(cfg.tenants[0].slo_ms, 100.0);
+    }
+}

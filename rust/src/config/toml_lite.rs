@@ -1,0 +1,291 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports exactly what `stgpu` config files use:
+//! * `[section]` and `[[array-of-tables]]` headers
+//! * `key = "string" | 123 | 1.5 | true | [1, 2, 3]` pairs
+//! * `#` comments and blank lines
+//!
+//! Not supported (rejected with an error, never silently misparsed):
+//! nested inline tables, multi-line strings, dotted keys, dates.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` (or one element of a `[[section]]` list).
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: top-level keys, named sections, array-of-table lists.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    pub root: TomlTable,
+    pub sections: BTreeMap<String, TomlTable>,
+    pub lists: BTreeMap<String, Vec<TomlTable>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        enum Target {
+            Root,
+            Section(String),
+            ListElem(String),
+        }
+        let mut doc = TomlDoc::default();
+        let mut target = Target::Root;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty table name", lineno + 1));
+                }
+                doc.lists.entry(name.clone()).or_default().push(TomlTable::new());
+                target = Target::ListElem(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                doc.sections.entry(name.clone()).or_default();
+                target = Target::Section(name);
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                if key.is_empty() {
+                    return Err(format!("line {}: empty key", lineno + 1));
+                }
+                let value = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                let table = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Section(name) => doc.sections.get_mut(name).unwrap(),
+                    Target::ListElem(name) => {
+                        doc.lists.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                };
+                table.insert(key, value);
+            } else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Read a file and parse it.
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string is not a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = t.strip_prefix('"') {
+        let Some(end) = rest.find('"') else {
+            return Err("unterminated string".into());
+        };
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing data after string".into());
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if t == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if t == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>, String> =
+            split_top_level(inner).iter().map(|s| parse_value(s)).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {t:?}"))
+}
+
+/// Split a comma-separated list, respecting quotes and nested brackets.
+fn split_top_level(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in text.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse(
+            r#"
+            # server config
+            seed = 42
+            [server]
+            scheduler = "space-time"
+            max_batch = 64
+            timeout_us = 200.5
+            verbose = true
+            shapes = [256, 128, 1152]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.root["seed"].as_int(), Some(42));
+        let s = &doc.sections["server"];
+        assert_eq!(s["scheduler"].as_str(), Some("space-time"));
+        assert_eq!(s["max_batch"].as_int(), Some(64));
+        assert_eq!(s["timeout_us"].as_float(), Some(200.5));
+        assert_eq!(s["verbose"].as_bool(), Some(true));
+        let arr = s["shapes"].as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_int(), Some(1152));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = TomlDoc::parse(
+            r#"
+            [[tenant]]
+            name = "resnet-a"
+            batch = 4
+            [[tenant]]
+            name = "resnet-b"
+            batch = 8
+            "#,
+        )
+        .unwrap();
+        let tenants = &doc.lists["tenant"];
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0]["name"].as_str(), Some("resnet-a"));
+        assert_eq!(tenants[1]["batch"].as_int(), Some(8));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"label = "a#b"  # real comment"##).unwrap();
+        assert_eq!(doc.root["label"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TomlDoc::parse("just some words").is_err());
+        assert!(TomlDoc::parse("key = ").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+        assert!(TomlDoc::parse(r#"k = "unterminated"#).is_err());
+        assert!(TomlDoc::parse("k = [1, ").is_err());
+    }
+
+    #[test]
+    fn int_coerces_to_float_but_not_reverse() {
+        let doc = TomlDoc::parse("a = 3\nb = 2.5").unwrap();
+        assert_eq!(doc.root["a"].as_float(), Some(3.0));
+        assert_eq!(doc.root["b"].as_int(), None);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse(r#"m = [[1, 2], [3, 4]]"#).unwrap();
+        let outer = doc.root["m"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+}

@@ -1,0 +1,331 @@
+//! The dynamic inter-model batcher — the mechanism behind the paper's
+//! space-time scheduler (§4): merge many concurrent small GEMM problems
+//! from *disjoint* model graphs into a small set of batched super-kernels
+//! that together fill the device.
+//!
+//! `cublasSgemmBatched` (and our Pallas analog) requires all fused problems
+//! to share (M, N, K); MAGMA-style variable-size batching is emulated by
+//! *shape-class bucketing*: requests fuse only within a class, and the lane
+//! count rounds up to the next precompiled R bucket with zero-padded lanes
+//! (waste is accounted and ablated in `benches/ablation_batcher.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::request::{InferenceRequest, ShapeClass};
+
+/// A planned super-kernel launch: `entries.len()` real problems padded up
+/// to `r_bucket` lanes of one artifact execution.
+#[derive(Debug)]
+pub struct Launch {
+    pub class: ShapeClass,
+    pub entries: Vec<InferenceRequest>,
+    pub r_bucket: usize,
+}
+
+impl Launch {
+    pub fn occupancy(&self) -> f64 {
+        self.entries.len() as f64 / self.r_bucket.max(1) as f64
+    }
+
+    pub fn padded_lanes(&self) -> usize {
+        self.r_bucket - self.entries.len()
+    }
+}
+
+/// Padding/occupancy accounting across a batcher's lifetime.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct BatcherStats {
+    pub launches: u64,
+    pub problems: u64,
+    pub padded_lanes: u64,
+}
+
+impl BatcherStats {
+    /// Fraction of executed lanes that were padding.
+    pub fn padding_waste(&self) -> f64 {
+        let lanes = self.problems + self.padded_lanes;
+        if lanes == 0 {
+            0.0
+        } else {
+            self.padded_lanes as f64 / lanes as f64
+        }
+    }
+
+    /// Mean problems per launch (the R the device actually sees).
+    pub fn mean_fused(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.problems as f64 / self.launches as f64
+        }
+    }
+}
+
+/// How a chunk that doesn't exactly match an R bucket is dispatched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaddingPolicy {
+    /// Round up to the next bucket; padded lanes compute zeros. Fewest
+    /// launches — right when lanes are (near-)free, i.e. a parallel device
+    /// with idle SMs (the paper's V100 setting).
+    PadToBucket,
+    /// Decompose the chunk into its binary bucket representation
+    /// (5 → 4+1): zero padding, ≤ log2(max) launches. Right when a padded
+    /// lane costs real compute (serial hardware) or when padding waste is
+    /// the binding constraint. Ablated in `benches/ablation_batcher.rs`.
+    SplitExact,
+}
+
+/// The batcher: groups by shape class, chunks to `max_batch`, dispatches
+/// chunks per the [`PaddingPolicy`].
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    /// Available R buckets (ascending), from the artifact manifest.
+    buckets: Vec<usize>,
+    /// Cap on problems fused into one launch.
+    max_batch: usize,
+    policy: PaddingPolicy,
+    pub stats: BatcherStats,
+}
+
+impl DynamicBatcher {
+    pub fn new(buckets: Vec<usize>, max_batch: usize) -> Self {
+        Self::with_policy(buckets, max_batch, PaddingPolicy::PadToBucket)
+    }
+
+    pub fn with_policy(
+        mut buckets: Vec<usize>,
+        max_batch: usize,
+        policy: PaddingPolicy,
+    ) -> Self {
+        assert!(!buckets.is_empty(), "need at least one R bucket");
+        assert!(max_batch >= 1);
+        buckets.sort_unstable();
+        buckets.dedup();
+        Self { buckets, max_batch, policy, stats: BatcherStats::default() }
+    }
+
+    /// Powers-of-two buckets matching `python/compile/aot.py::R_BUCKETS`.
+    pub fn default_buckets() -> Vec<usize> {
+        vec![1, 2, 4, 8, 16, 32, 64]
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn largest_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket >= n (None if n exceeds the largest bucket).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Plan launches for a set of pending requests (already drained from
+    /// the queues by the scheduler). Grouping is deterministic: classes in
+    /// sorted order, requests in the order given (schedulers drain
+    /// round-robin for fairness).
+    pub fn plan(&mut self, pending: Vec<InferenceRequest>) -> Vec<Launch> {
+        let mut by_class: BTreeMap<ShapeClass, Vec<InferenceRequest>> = BTreeMap::new();
+        for r in pending {
+            by_class.entry(r.class).or_default().push(r);
+        }
+        let mut launches = Vec::new();
+        for (class, reqs) in by_class {
+            let chunk_cap = self.max_batch.min(self.largest_bucket());
+            let mut reqs = reqs.into_iter().peekable();
+            while reqs.peek().is_some() {
+                let chunk: Vec<InferenceRequest> =
+                    reqs.by_ref().take(chunk_cap).collect();
+                self.dispatch_chunk(class, chunk, &mut launches);
+            }
+        }
+        launches
+    }
+
+    fn dispatch_chunk(
+        &mut self,
+        class: ShapeClass,
+        mut chunk: Vec<InferenceRequest>,
+        out: &mut Vec<Launch>,
+    ) {
+        // Canonical lane assignment: sort by (tenant, id). All requests in
+        // a chunk complete in the same launch, so intra-chunk order carries
+        // no fairness meaning — but a *stable* assignment makes recurring
+        // tenant sets hit the fusion cache (same key ⇒ weight operands
+        // already device-resident) regardless of drain order, and keeps
+        // per-tenant FIFO (ids ascend within a tenant).
+        chunk.sort_by_key(|r| (r.tenant, r.id));
+        match self.policy {
+            PaddingPolicy::PadToBucket => {
+                let r_bucket = self
+                    .bucket_for(chunk.len())
+                    .expect("chunk_cap bounded by largest bucket");
+                self.stats.launches += 1;
+                self.stats.problems += chunk.len() as u64;
+                self.stats.padded_lanes += (r_bucket - chunk.len()) as u64;
+                out.push(Launch { class, entries: chunk, r_bucket });
+            }
+            PaddingPolicy::SplitExact => {
+                // Greedy largest-bucket-first decomposition. With the
+                // default power-of-two buckets this is exactly the binary
+                // representation of the chunk size (zero padding); with
+                // arbitrary buckets the final fragment may still pad.
+                let mut rest = chunk;
+                while !rest.is_empty() {
+                    let take = self
+                        .buckets
+                        .iter()
+                        .rev()
+                        .copied()
+                        .find(|&b| b <= rest.len())
+                        .unwrap_or_else(|| self.buckets[0]);
+                    let take = take.min(rest.len());
+                    let piece: Vec<InferenceRequest> =
+                        rest.drain(..take).collect();
+                    let r_bucket = self
+                        .bucket_for(piece.len())
+                        .expect("piece fits smallest covering bucket");
+                    self.stats.launches += 1;
+                    self.stats.problems += piece.len() as u64;
+                    self.stats.padded_lanes += (r_bucket - piece.len()) as u64;
+                    out.push(Launch { class, entries: piece, r_bucket });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, tenant: usize, class: ShapeClass) -> InferenceRequest {
+        InferenceRequest { id, tenant, class, payload: vec![], arrived: Instant::now(), deadline: Instant::now() }
+    }
+
+    fn gemm(m: usize) -> ShapeClass {
+        ShapeClass::batched_gemm(m, 64, 64)
+    }
+
+    #[test]
+    fn fuses_same_class_across_tenants() {
+        let mut b = DynamicBatcher::new(DynamicBatcher::default_buckets(), 64);
+        let pending = (0..5).map(|i| req(i, i as usize, gemm(128))).collect();
+        let launches = b.plan(pending);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].entries.len(), 5);
+        assert_eq!(launches[0].r_bucket, 8, "5 rounds up to bucket 8");
+        assert_eq!(launches[0].padded_lanes(), 3);
+        let tenants: Vec<usize> = launches[0].entries.iter().map(|e| e.tenant).collect();
+        assert_eq!(tenants, vec![0, 1, 2, 3, 4], "cross-tenant fusion");
+    }
+
+    #[test]
+    fn distinct_classes_never_fuse() {
+        let mut b = DynamicBatcher::new(DynamicBatcher::default_buckets(), 64);
+        let pending = vec![
+            req(0, 0, gemm(128)),
+            req(1, 1, gemm(256)),
+            req(2, 2, gemm(128)),
+        ];
+        let launches = b.plan(pending);
+        assert_eq!(launches.len(), 2);
+        for l in &launches {
+            assert!(l.entries.iter().all(|e| e.class == l.class));
+        }
+    }
+
+    #[test]
+    fn splits_at_max_batch() {
+        let mut b = DynamicBatcher::new(DynamicBatcher::default_buckets(), 4);
+        let pending = (0..10).map(|i| req(i, 0, gemm(64))).collect();
+        let launches = b.plan(pending);
+        assert_eq!(launches.len(), 3); // 4 + 4 + 2
+        assert_eq!(launches[0].entries.len(), 4);
+        assert_eq!(launches[0].r_bucket, 4);
+        assert_eq!(launches[2].entries.len(), 2);
+        assert_eq!(launches[2].r_bucket, 2);
+    }
+
+    #[test]
+    fn exact_bucket_has_zero_padding() {
+        let mut b = DynamicBatcher::new(DynamicBatcher::default_buckets(), 64);
+        let launches = b.plan((0..16).map(|i| req(i, 0, gemm(64))).collect());
+        assert_eq!(launches[0].r_bucket, 16);
+        assert_eq!(launches[0].padded_lanes(), 0);
+        assert_eq!(b.stats.padding_waste(), 0.0);
+        assert_eq!(launches[0].occupancy(), 1.0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 4);
+        b.plan((0..3).map(|i| req(i, 0, gemm(64))).collect()); // 3 -> bucket 4
+        b.plan((0..2).map(|i| req(i, 0, gemm(64))).collect()); // 2 -> bucket 2
+        assert_eq!(b.stats.launches, 2);
+        assert_eq!(b.stats.problems, 5);
+        assert_eq!(b.stats.padded_lanes, 1);
+        assert!((b.stats.padding_waste() - 1.0 / 6.0).abs() < 1e-12);
+        assert!((b.stats.mean_fused() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_assignment_is_canonical_and_fifo_per_tenant() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4, 8], 8);
+        let launches = b.plan((0..6).map(|i| req(i, (i % 3) as usize, gemm(64))).collect());
+        // Sorted by (tenant, id): tenant 0 -> {0,3}, 1 -> {1,4}, 2 -> {2,5}.
+        let lanes: Vec<(usize, u64)> =
+            launches[0].entries.iter().map(|e| (e.tenant, e.id)).collect();
+        assert_eq!(lanes, vec![(0, 0), (0, 3), (1, 1), (1, 4), (2, 2), (2, 5)]);
+        // The same request set drained in a different order produces the
+        // SAME lane assignment (the fusion-cache key stability property).
+        let mut b2 = DynamicBatcher::new(vec![1, 2, 4, 8], 8);
+        let mut reqs: Vec<_> = (0..6).map(|i| req(i, (i % 3) as usize, gemm(64))).collect();
+        reqs.reverse();
+        let launches2 = b2.plan(reqs);
+        let lanes2: Vec<(usize, u64)> =
+            launches2[0].entries.iter().map(|e| (e.tenant, e.id)).collect();
+        assert_eq!(lanes, lanes2);
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let mut b = DynamicBatcher::new(vec![1, 2], 2);
+        assert!(b.plan(vec![]).is_empty());
+        assert_eq!(b.stats, BatcherStats::default());
+    }
+
+    #[test]
+    fn split_exact_is_binary_decomposition() {
+        let mut b = DynamicBatcher::with_policy(
+            DynamicBatcher::default_buckets(),
+            64,
+            PaddingPolicy::SplitExact,
+        );
+        // 13 = 8 + 4 + 1 — three launches, zero padding.
+        let launches = b.plan((0..13).map(|i| req(i, 0, gemm(64))).collect());
+        let sizes: Vec<usize> = launches.iter().map(|l| l.entries.len()).collect();
+        assert_eq!(sizes, vec![8, 4, 1]);
+        assert!(launches.iter().all(|l| l.padded_lanes() == 0));
+        assert_eq!(b.stats.padding_waste(), 0.0);
+        // FIFO preserved across the split.
+        let ids: Vec<u64> = launches
+            .iter()
+            .flat_map(|l| l.entries.iter().map(|e| e.id))
+            .collect();
+        assert_eq!(ids, (0..13).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn split_exact_conserves_and_respects_cap() {
+        let mut b = DynamicBatcher::with_policy(vec![1, 2, 4, 8], 6, PaddingPolicy::SplitExact);
+        let launches = b.plan((0..11).map(|i| req(i, i as usize % 3, gemm(64))).collect());
+        let total: usize = launches.iter().map(|l| l.entries.len()).sum();
+        assert_eq!(total, 11);
+        assert!(launches.iter().all(|l| l.entries.len() <= 6));
+        assert!(launches.iter().all(|l| l.entries.len() <= l.r_bucket));
+    }
+}

@@ -1,0 +1,355 @@
+//! The coordinator driver: the serve loop gluing queues → scheduler →
+//! super-kernel execution → SLO monitoring → metrics.
+//!
+//! This is the leader's request path. It is deliberately synchronous and
+//! deterministic per round (the threaded frontend in `server/` pumps it);
+//! every round:
+//!   1. the scheduler drains queued problems into a launch plan,
+//!   2. each launch gathers operands, executes ONE PJRT executable, and
+//!      scatters outputs,
+//!   3. completions feed the SLO monitor and metrics,
+//!   4. periodically the monitor evicts stragglers and their queues drain.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServerConfig;
+use crate::coordinator::fusion_cache::{FusionCache, FusionCacheStats};
+use crate::coordinator::monitor::{Eviction, MonitorConfig, SloMonitor};
+use crate::coordinator::queue::QueueSet;
+use crate::coordinator::request::{
+    InferenceRequest, InferenceResponse, Reject, RequestId,
+};
+use crate::coordinator::scheduler::{make_scheduler, Scheduler};
+use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
+use crate::coordinator::tenant::TenantRegistry;
+use crate::metrics::MetricsRegistry;
+use crate::runtime::{HostTensor, PjrtEngine};
+use crate::util::prng::Rng;
+
+/// Outcome of one scheduling round.
+#[derive(Debug, Default)]
+pub struct RoundOutcome {
+    pub responses: Vec<InferenceResponse>,
+    pub rejections: Vec<(RequestId, Reject)>,
+    pub evictions: Vec<Eviction>,
+    pub launches: usize,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    engine: Arc<PjrtEngine>,
+    pub tenants: TenantRegistry,
+    queues: QueueSet,
+    scheduler: Box<dyn Scheduler>,
+    flavor: Flavor,
+    fusion_cache: FusionCache,
+    monitor: SloMonitor,
+    pub metrics: Arc<MetricsRegistry>,
+    next_id: RequestId,
+    rounds_since_check: u32,
+    /// Monitor window length, in scheduling rounds.
+    check_every: u32,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Build from config: loads the manifest, registers tenants, picks the
+    /// scheduler, and pre-warms the executables the workload will need.
+    pub fn new(cfg: &ServerConfig) -> Result<Self> {
+        Self::with_flavor(cfg, Flavor::Xla)
+    }
+
+    pub fn with_flavor(cfg: &ServerConfig, flavor: Flavor) -> Result<Self> {
+        let engine = Arc::new(PjrtEngine::new(&cfg.artifacts_dir)?);
+        let tenants = TenantRegistry::from_configs(&cfg.tenants)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let queues = QueueSet::new(tenants.len(), cfg.queue_depth);
+        // R buckets from the manifest (all kinds share aot.py's bucket set).
+        let mut buckets = engine.manifest().r_buckets("batched_gemm", flavor.as_str());
+        if buckets.is_empty() {
+            buckets = vec![1];
+        }
+        // Fail fast: every tenant's shape class must have lowered artifacts
+        // (the catalog is fixed at `make artifacts` time).
+        for t in tenants.iter() {
+            let class = t.spec.shape_class();
+            let servable = engine
+                .manifest()
+                .find(class.kind, flavor.as_str(), class.mnk(), buckets[0])
+                .or_else(|| {
+                    if class.kind == "batched_gemm" {
+                        None
+                    } else {
+                        engine.manifest().find(class.kind, flavor.as_str(), (0, 0, 0), buckets[0])
+                    }
+                })
+                .is_some();
+            if !servable {
+                return Err(anyhow::anyhow!(
+                    "tenant {}: no AOT artifact for shape class {class} \
+                     (lowered classes are fixed at `make artifacts` time)",
+                    t.name
+                ));
+            }
+        }
+        let policy = if cfg.split_exact {
+            crate::coordinator::batcher::PaddingPolicy::SplitExact
+        } else {
+            crate::coordinator::batcher::PaddingPolicy::PadToBucket
+        };
+        let scheduler = crate::coordinator::scheduler::make_scheduler_with_policy(
+            cfg.scheduler,
+            buckets,
+            cfg.max_batch as usize,
+            policy,
+            cfg.slo_aware,
+        );
+        let monitor = SloMonitor::new(
+            MonitorConfig {
+                enabled: cfg.eviction_enabled,
+                threshold: cfg.eviction_threshold,
+                strikes: cfg.eviction_strikes,
+                ..Default::default()
+            },
+            &tenants,
+        );
+        Ok(Self {
+            engine,
+            tenants,
+            queues,
+            scheduler,
+            flavor,
+            fusion_cache: FusionCache::new(256),
+            monitor,
+            metrics: Arc::new(MetricsRegistry::new()),
+            next_id: 0,
+            rounds_since_check: 0,
+            check_every: 16,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<PjrtEngine> {
+        &self.engine
+    }
+
+    pub fn scheduler_label(&self) -> &'static str {
+        self.scheduler.label()
+    }
+
+    pub fn batcher_stats(&self) -> Option<crate::coordinator::batcher::BatcherStats> {
+        self.scheduler.batcher_stats()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.total_pending()
+    }
+
+    /// Pre-compile every executable this coordinator's tenants can hit, so
+    /// the serving path never compiles.
+    pub fn warmup(&self) -> Result<usize> {
+        let kinds: std::collections::BTreeSet<&'static str> = self
+            .tenants
+            .iter()
+            .map(|t| t.spec.shape_class().kind)
+            .collect();
+        let flavor = self.flavor.as_str();
+        Ok(self.engine.warmup(|a| {
+            a.impl_ == flavor && kinds.contains(a.kind.as_str())
+        })?)
+    }
+
+    /// Submit a request for `tenant` with the given payload tensors.
+    pub fn submit(
+        &mut self,
+        tenant: usize,
+        payload: Vec<HostTensor>,
+    ) -> Result<RequestId, Reject> {
+        let t = self
+            .tenants
+            .get(tenant)
+            .ok_or_else(|| Reject::BadRequest(format!("unknown tenant {tenant}")))?;
+        if !t.is_servable() {
+            self.metrics.tenant(&t.name).record_rejection();
+            return Err(Reject::TenantEvicted);
+        }
+        let shapes = t.spec.payload_shapes();
+        if payload.len() != shapes.len() {
+            return Err(Reject::BadRequest(format!(
+                "expected {} payload tensors, got {}",
+                shapes.len(),
+                payload.len()
+            )));
+        }
+        for (p, want) in payload.iter().zip(&shapes) {
+            if &p.shape != want {
+                return Err(Reject::BadRequest(format!(
+                    "payload shape {:?} != expected {:?}",
+                    p.shape, want
+                )));
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let arrived = Instant::now();
+        let req = InferenceRequest {
+            id,
+            tenant,
+            class: t.spec.shape_class(),
+            payload,
+            arrived,
+            deadline: arrived + std::time::Duration::from_secs_f64(t.slo_ms / 1e3),
+        };
+        let name = t.name.clone();
+        match self.queues.push(req) {
+            Ok(()) => Ok(id),
+            Err(rej) => {
+                self.metrics.tenant(&name).record_rejection();
+                Err(rej)
+            }
+        }
+    }
+
+    /// Synthesize a random request payload for a tenant (tests/benches).
+    pub fn random_payload(&self, tenant: usize, rng: &mut Rng) -> Vec<HostTensor> {
+        self.tenants
+            .get(tenant)
+            .map(|t| {
+                t.spec
+                    .payload_shapes()
+                    .iter()
+                    .map(|s| HostTensor::random(s, rng))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Run one scheduling round.
+    pub fn run_round(&mut self) -> Result<RoundOutcome> {
+        let mut outcome = RoundOutcome::default();
+        let plan = self.scheduler.plan_round(&mut self.queues);
+        outcome.launches = plan.launches.len();
+        let exec = SuperKernelExec::new(&self.engine, self.flavor);
+        for launch in &plan.launches {
+            let fused = launch.entries.len();
+            if fused > 1 {
+                self.metrics.record_superkernel_launch();
+            } else {
+                self.metrics.record_kernel_launch();
+            }
+            let hits_before = self.fusion_cache.stats.hits;
+            let misses_before = self.fusion_cache.stats.misses;
+            let res = exec.execute(launch, &self.tenants, &mut self.fusion_cache)?;
+            if self.fusion_cache.stats.hits > hits_before {
+                self.metrics.record_cache(true);
+            } else if self.fusion_cache.stats.misses > misses_before {
+                self.metrics.record_cache(false);
+            }
+            let done = Instant::now();
+            for (entry, output) in launch.entries.iter().zip(res.outputs) {
+                let latency_s = done.duration_since(entry.arrived).as_secs_f64();
+                let tenant = self.tenants.get(entry.tenant).expect("tenant");
+                self.metrics.tenant(&tenant.name).record_completion(
+                    (latency_s * 1e9) as u64,
+                    (res.service_s * 1e9) as u64,
+                    entry.class.flops(),
+                );
+                self.monitor.observe(entry.tenant, res.service_s);
+                outcome.responses.push(InferenceResponse {
+                    id: entry.id,
+                    tenant: entry.tenant,
+                    output,
+                    latency_s,
+                    service_s: res.service_s,
+                    fused_r: fused,
+                });
+            }
+        }
+        // Periodic straggler check.
+        self.rounds_since_check += 1;
+        if self.rounds_since_check >= self.check_every {
+            self.rounds_since_check = 0;
+            let evictions = self.monitor.check(&mut self.tenants);
+            for ev in &evictions {
+                let name = self.tenants.get(ev.tenant).expect("tenant").name.clone();
+                self.metrics.tenant(&name).record_eviction();
+                // Drop the evicted tenant's device-resident weights and fail
+                // everything it still has queued.
+                self.fusion_cache.invalidate_tenant(ev.tenant);
+                if let Some(q) = self.queues.tenant_mut(ev.tenant) {
+                    for req in q.drain() {
+                        outcome.rejections.push((req.id, Reject::TenantEvicted));
+                    }
+                }
+            }
+            outcome.evictions = evictions;
+        }
+        Ok(outcome)
+    }
+
+    /// Run rounds until all queues drain; returns every response.
+    pub fn run_until_drained(&mut self) -> Result<Vec<InferenceResponse>> {
+        let mut all = Vec::new();
+        while !self.queues.is_empty() {
+            let out = self.run_round()?;
+            all.extend(out.responses);
+        }
+        Ok(all)
+    }
+
+    /// Force an immediate monitor window check (tests/benches).
+    pub fn force_check(&mut self) -> Vec<Eviction> {
+        let evictions = self.monitor.check(&mut self.tenants);
+        for ev in &evictions {
+            self.fusion_cache.invalidate_tenant(ev.tenant);
+        }
+        evictions
+    }
+
+    /// Feed an out-of-band latency observation to the SLO monitor —
+    /// the anomaly-injection hook used by failure tests and the
+    /// straggler_eviction example (the serve path observes automatically).
+    pub fn monitor_observe(&mut self, tenant: usize, service_s: f64) {
+        self.monitor.observe(tenant, service_s);
+    }
+
+    pub fn monitor(&self) -> &SloMonitor {
+        &self.monitor
+    }
+
+    /// Fusion-cache accounting (weight-operand reuse across launches).
+    pub fn fusion_cache_stats(&self) -> FusionCacheStats {
+        self.fusion_cache.stats
+    }
+
+    /// Replace the fusion cache (benches/ablations: e.g. capacity 1 to
+    /// force the cold path). Serving uses the default capacity-256 cache.
+    pub fn set_fusion_cache_capacity(&mut self, capacity: usize) {
+        self.fusion_cache = FusionCache::new(capacity);
+    }
+
+    /// Metrics snapshot over the coordinator's lifetime.
+    pub fn snapshot(&self) -> crate::metrics::Snapshot {
+        self.metrics.snapshot(self.started.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Coordinator tests require artifacts; see
+    // rust/tests/integration_coordinator.rs. Pure plumbing tests here.
+    use super::*;
+    use crate::config::ServerConfig;
+
+    #[test]
+    fn bad_artifact_dir_fails_fast() {
+        let cfg = ServerConfig {
+            artifacts_dir: "/nonexistent".into(),
+            ..Default::default()
+        };
+        assert!(Coordinator::new(&cfg).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Super-kernel fusion cache — the paper's §4 observation made concrete:
+//! "we notice that overheads gradually decrease if we cache super-kernels
+//! as workloads stabilize over time."
+//!
+//! A launch's *weight* operands are fully determined by (graph kind,
+//! R bucket, the ordered tenant ids occupying its lanes): tenant weights
+//! are immutable after registration. Under steady closed-loop load the
+//! fair-drain scheduler keeps producing the same lane assignments, so we
+//! cache the stacked weight operands as **device-resident PJRT buffers**
+//! keyed by that tuple. A cache hit turns a launch's host→device traffic
+//! from (weights + activations) into activations only — for the MLP serving
+//! block that is a ~128× reduction in bytes marshaled per launch.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Launch;
+use crate::runtime::{HostTensor, PjrtEngine};
+
+/// Cache key: kind + bucket + the exact lane assignment.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FusionKey {
+    pub kind: &'static str,
+    pub r_bucket: usize,
+    pub tenants: Vec<usize>,
+}
+
+impl FusionKey {
+    pub fn of(launch: &Launch) -> Self {
+        Self {
+            kind: launch.class.kind,
+            r_bucket: launch.r_bucket,
+            tenants: launch.entries.iter().map(|e| e.tenant).collect(),
+        }
+    }
+}
+
+/// Hit/miss accounting (read by benches + EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FusionCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: u64,
+    pub evictions: u64,
+}
+
+impl FusionCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Device-resident stacked weight operands for one fusion key.
+struct Entry {
+    buffers: Vec<xla::PjRtBuffer>,
+    last_used: u64,
+}
+
+/// The cache. Single-owner (the coordinator's leader thread).
+pub struct FusionCache {
+    map: HashMap<FusionKey, Entry>,
+    capacity: usize,
+    clock: u64,
+    pub stats: FusionCacheStats,
+}
+
+// PJRT buffers are plain device handles; all mutation happens under the
+// single leader thread that owns the coordinator (same argument as
+// `PjrtEngine`'s Send/Sync).
+unsafe impl Send for FusionCache {}
+
+impl FusionCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            map: HashMap::new(),
+            capacity,
+            clock: 0,
+            stats: FusionCacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch the device-resident weight operands for `key`, building them
+    /// with `build` (host gather + upload) on a miss. LRU eviction at
+    /// capacity.
+    pub fn get_or_build(
+        &mut self,
+        engine: &PjrtEngine,
+        key: FusionKey,
+        build: impl FnOnce() -> Vec<HostTensor>,
+    ) -> Result<&[xla::PjRtBuffer]> {
+        self.clock += 1;
+        let clock = self.clock;
+        if self.map.contains_key(&key) {
+            self.stats.hits += 1;
+            let e = self.map.get_mut(&key).unwrap();
+            e.last_used = clock;
+            return Ok(&e.buffers);
+        }
+        self.stats.misses += 1;
+        if self.map.len() >= self.capacity {
+            // Evict the least-recently-used entry.
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        let host = build();
+        let buffers = host
+            .iter()
+            .map(|t| engine.to_device(t))
+            .collect::<Result<Vec<_>>>()?;
+        self.stats.entries += 1;
+        let e = self.map.entry(key).or_insert(Entry { buffers, last_used: clock });
+        Ok(&e.buffers)
+    }
+
+    /// Drop every entry touching `tenant` (called on eviction: its weights
+    /// must not linger on device).
+    pub fn invalidate_tenant(&mut self, tenant: usize) {
+        let before = self.map.len();
+        self.map.retain(|k, _| !k.tenants.contains(&tenant));
+        self.stats.evictions += (before - self.map.len()) as u64;
+    }
+
+    pub fn clear(&mut self) {
+        self.stats.evictions += self.map.len() as u64;
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_captures_lane_assignment() {
+        use crate::coordinator::request::{InferenceRequest, ShapeClass};
+        use std::time::Instant;
+        let mk = |tenants: &[usize]| Launch {
+            class: ShapeClass::batched_gemm(8, 8, 8),
+            entries: tenants
+                .iter()
+                .map(|&t| InferenceRequest {
+                    id: t as u64,
+                    tenant: t,
+                    class: ShapeClass::batched_gemm(8, 8, 8),
+                    payload: vec![],
+                    arrived: Instant::now(),
+            deadline: Instant::now(),
+                })
+                .collect(),
+            r_bucket: 4,
+        };
+        assert_eq!(FusionKey::of(&mk(&[0, 1, 2])), FusionKey::of(&mk(&[0, 1, 2])));
+        assert_ne!(FusionKey::of(&mk(&[0, 1, 2])), FusionKey::of(&mk(&[0, 2, 1])));
+        assert_ne!(FusionKey::of(&mk(&[0, 1])), FusionKey::of(&mk(&[0, 1, 2])));
+    }
+
+    #[test]
+    fn stats_hit_rate() {
+        let s = FusionCacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(FusionCacheStats::default().hit_rate(), 0.0);
+    }
+}

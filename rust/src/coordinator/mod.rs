@@ -1,0 +1,40 @@
+//! The dynamic space-time scheduler — the paper's system contribution.
+//!
+//! Multi-tenant GPU inference coordination: per-tenant admission queues, a
+//! shape-class dynamic batcher that merges same-shape GEMM problems from
+//! *disjoint* model graphs into padded super-kernels (the paper's
+//! `cublasSgemmBatched` insight), four scheduling policies (the §3
+//! baselines plus the §4 space-time contribution), and an SLO monitor that
+//! evicts stragglers to preserve predictability and isolation.
+//!
+//! * [`request`] — request/response types and the [`request::ShapeClass`]
+//!   fusion key.
+//! * [`tenant`] — registry of deployed models (same architecture,
+//!   per-tenant weights — paper §2).
+//! * [`queue`] — bounded per-tenant admission queues (backpressure).
+//! * [`batcher`] — shape-class bucketing + R-bucket round-up with padding
+//!   accounting (MAGMA vbatch emulation).
+//! * [`scheduler`] — Exclusive / TimeMux / SpaceMux / SpaceTime policies.
+//! * [`superkernel`] — gather → one PJRT execution → scatter.
+//! * [`monitor`] — per-tenant latency EWMA + straggler eviction.
+//! * [`driver`] — the serve loop gluing it all together.
+
+pub mod batcher;
+pub mod driver;
+pub mod fusion_cache;
+pub mod monitor;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod superkernel;
+pub mod tenant;
+
+pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
+pub use driver::{Coordinator, RoundOutcome};
+pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey};
+pub use monitor::{Eviction, MonitorConfig, SloMonitor};
+pub use queue::{QueueSet, TenantQueue};
+pub use request::{InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass};
+pub use scheduler::{make_scheduler, RoundPlan, Scheduler};
+pub use superkernel::{Flavor, LaunchResult, SuperKernelExec};
+pub use tenant::{Health, ModelSpec, Tenant, TenantRegistry};

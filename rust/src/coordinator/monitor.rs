@@ -1,0 +1,263 @@
+//! SLO monitor + straggler evictor (paper §4).
+//!
+//! "We preserve predictability and isolation during virtualization by
+//! monitoring inference latencies per-kernel. [...] CUDA Stream scheduling
+//! anomalies typically only create a few stragglers, so we can simply evict
+//! degraded workers without significantly impacting total system
+//! throughput."
+//!
+//! The monitor keeps an EWMA of per-tenant service latency; a tenant whose
+//! EWMA exceeds `threshold ×` the median of all healthy tenants for
+//! `strikes` consecutive observation windows is evicted.
+
+use crate::coordinator::tenant::{Health, TenantRegistry};
+use crate::util::stats;
+
+/// Per-tenant latency tracking state.
+#[derive(Debug, Clone)]
+struct TenantTrack {
+    ewma_s: f64,
+    samples: u64,
+    strikes: u32,
+    slo_ms: f64,
+    slo_violations: u64,
+}
+
+/// Eviction decision emitted by a check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Eviction {
+    pub tenant: usize,
+    /// EWMA / median ratio at eviction time.
+    pub ratio: f64,
+}
+
+/// Monitor configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorConfig {
+    pub enabled: bool,
+    /// Straggler threshold: evict when ewma > threshold * median.
+    pub threshold: f64,
+    /// Consecutive over-threshold windows before eviction.
+    pub strikes: u32,
+    /// EWMA decay (weight of the newest sample).
+    pub alpha: f64,
+    /// Minimum samples before a tenant can be judged.
+    pub min_samples: u64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        Self { enabled: true, threshold: 1.15, strikes: 3, alpha: 0.2, min_samples: 8 }
+    }
+}
+
+/// The SLO monitor.
+#[derive(Debug)]
+pub struct SloMonitor {
+    cfg: MonitorConfig,
+    tracks: Vec<TenantTrack>,
+    pub evictions: Vec<Eviction>,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: MonitorConfig, tenants: &TenantRegistry) -> Self {
+        let tracks = tenants
+            .iter()
+            .map(|t| TenantTrack {
+                ewma_s: 0.0,
+                samples: 0,
+                strikes: 0,
+                slo_ms: t.slo_ms,
+                slo_violations: 0,
+            })
+            .collect();
+        Self { cfg, tracks, evictions: Vec::new() }
+    }
+
+    /// Record one completed request's service latency.
+    pub fn observe(&mut self, tenant: usize, service_s: f64) {
+        let Some(t) = self.tracks.get_mut(tenant) else { return };
+        if t.samples == 0 {
+            t.ewma_s = service_s;
+        } else {
+            t.ewma_s = self.cfg.alpha * service_s + (1.0 - self.cfg.alpha) * t.ewma_s;
+        }
+        t.samples += 1;
+        if service_s * 1e3 > t.slo_ms {
+            t.slo_violations += 1;
+        }
+    }
+
+    pub fn ewma(&self, tenant: usize) -> Option<f64> {
+        self.tracks.get(tenant).filter(|t| t.samples > 0).map(|t| t.ewma_s)
+    }
+
+    pub fn slo_violations(&self, tenant: usize) -> u64 {
+        self.tracks.get(tenant).map_or(0, |t| t.slo_violations)
+    }
+
+    /// End-of-window check: update strike counts, evict offenders.
+    /// Mutates `tenants` (marks Degraded/Evicted) and returns new evictions.
+    pub fn check(&mut self, tenants: &mut TenantRegistry) -> Vec<Eviction> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        // Median over healthy, sampled tenants.
+        let healthy: Vec<f64> = self
+            .tracks
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| {
+                t.samples >= self.cfg.min_samples
+                    && tenants.get(*i).map_or(false, |x| x.is_servable())
+            })
+            .map(|(_, t)| t.ewma_s)
+            .collect();
+        if healthy.len() < 2 {
+            return Vec::new(); // nothing to compare against
+        }
+        let median = stats::percentile(&healthy, 50.0);
+        if median <= 0.0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (i, t) in self.tracks.iter_mut().enumerate() {
+            let servable = tenants.get(i).map_or(false, |x| x.is_servable());
+            if !servable || t.samples < self.cfg.min_samples {
+                continue;
+            }
+            let ratio = t.ewma_s / median;
+            if ratio > self.cfg.threshold {
+                t.strikes += 1;
+                if t.strikes >= self.cfg.strikes {
+                    tenants.evict(i);
+                    out.push(Eviction { tenant: i, ratio });
+                } else if let Some(x) = tenants.get_mut(i) {
+                    x.health = Health::Degraded { strikes: t.strikes };
+                }
+            } else {
+                t.strikes = 0;
+                if let Some(x) = tenants.get_mut(i) {
+                    if matches!(x.health, Health::Degraded { .. }) {
+                        x.health = Health::Healthy;
+                    }
+                }
+            }
+        }
+        self.evictions.extend(out.iter().cloned());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(n: usize) -> TenantRegistry {
+        let mut reg = TenantRegistry::new();
+        for i in 0..n {
+            reg.register(&format!("t{i}"), "sgemm:64x64x64", 100.0, i as u64)
+                .unwrap();
+        }
+        reg
+    }
+
+    fn feed(mon: &mut SloMonitor, tenant: usize, latency_s: f64, n: u64) {
+        for _ in 0..n {
+            mon.observe(tenant, latency_s);
+        }
+    }
+
+    #[test]
+    fn straggler_evicted_after_strikes() {
+        let mut reg = registry(4);
+        let cfg = MonitorConfig { strikes: 3, ..Default::default() };
+        let mut mon = SloMonitor::new(cfg, &reg);
+        // Tenants 0-2 run at 1 ms, tenant 3 at 2 ms (ratio 2.0 > 1.15).
+        for t in 0..3 {
+            feed(&mut mon, t, 1e-3, 10);
+        }
+        feed(&mut mon, 3, 2e-3, 10);
+        assert!(mon.check(&mut reg).is_empty()); // strike 1
+        assert_eq!(reg.get(3).unwrap().health, Health::Degraded { strikes: 1 });
+        assert!(mon.check(&mut reg).is_empty()); // strike 2
+        let ev = mon.check(&mut reg); // strike 3 -> evict
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].tenant, 3);
+        assert!(ev[0].ratio > 1.5);
+        assert_eq!(reg.get(3).unwrap().health, Health::Evicted);
+        // Healthy tenants untouched.
+        for t in 0..3 {
+            assert_eq!(reg.get(t).unwrap().health, Health::Healthy);
+        }
+    }
+
+    #[test]
+    fn recovery_resets_strikes() {
+        let mut reg = registry(3);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        feed(&mut mon, 0, 1e-3, 10);
+        feed(&mut mon, 1, 1e-3, 10);
+        feed(&mut mon, 2, 2e-3, 10);
+        mon.check(&mut reg);
+        assert_eq!(reg.get(2).unwrap().health, Health::Degraded { strikes: 1 });
+        // Tenant 2 recovers: many fast samples pull the EWMA down.
+        feed(&mut mon, 2, 0.8e-3, 40);
+        mon.check(&mut reg);
+        assert_eq!(reg.get(2).unwrap().health, Health::Healthy);
+        // It never gets evicted afterwards.
+        for _ in 0..5 {
+            assert!(mon.check(&mut reg).is_empty());
+        }
+    }
+
+    #[test]
+    fn disabled_monitor_never_evicts() {
+        let mut reg = registry(2);
+        let cfg = MonitorConfig { enabled: false, ..Default::default() };
+        let mut mon = SloMonitor::new(cfg, &reg);
+        feed(&mut mon, 0, 1e-3, 20);
+        feed(&mut mon, 1, 50e-3, 20);
+        assert!(mon.check(&mut reg).is_empty());
+        assert_eq!(reg.evicted_count(), 0);
+    }
+
+    #[test]
+    fn needs_min_samples() {
+        let mut reg = registry(2);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        feed(&mut mon, 0, 1e-3, 2);
+        feed(&mut mon, 1, 10e-3, 2);
+        assert!(mon.check(&mut reg).is_empty(), "too few samples to judge");
+    }
+
+    #[test]
+    fn single_tenant_never_self_evicts() {
+        let mut reg = registry(1);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        feed(&mut mon, 0, 100e-3, 50);
+        assert!(mon.check(&mut reg).is_empty());
+    }
+
+    #[test]
+    fn slo_violations_counted() {
+        let reg = registry(1);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        mon.observe(0, 0.05); // 50 ms < 100 ms SLO
+        mon.observe(0, 0.15); // 150 ms > SLO
+        mon.observe(0, 0.2);
+        assert_eq!(mon.slo_violations(0), 2);
+    }
+
+    #[test]
+    fn ewma_tracks_recent() {
+        let reg = registry(1);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        mon.observe(0, 1.0);
+        assert!((mon.ewma(0).unwrap() - 1.0).abs() < 1e-12);
+        for _ in 0..100 {
+            mon.observe(0, 2.0);
+        }
+        assert!((mon.ewma(0).unwrap() - 2.0).abs() < 1e-3);
+    }
+}

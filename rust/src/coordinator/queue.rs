@@ -1,0 +1,194 @@
+//! Per-tenant admission queues with bounded depth (backpressure).
+//!
+//! The paper's §2 model saturates queues; the bound keeps an overloaded or
+//! evicted tenant from consuming unbounded memory and gives the frontend a
+//! crisp rejection signal.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::request::{InferenceRequest, Reject};
+
+/// A bounded FIFO of pending requests for one tenant.
+#[derive(Debug)]
+pub struct TenantQueue {
+    items: VecDeque<InferenceRequest>,
+    depth: usize,
+    /// Lifetime counters for metrics/backpressure analysis.
+    pub enqueued: u64,
+    pub rejected: u64,
+}
+
+impl TenantQueue {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1);
+        Self {
+            items: VecDeque::with_capacity(depth.min(1024)),
+            depth,
+            enqueued: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) -> Result<(), Reject> {
+        if self.items.len() >= self.depth {
+            self.rejected += 1;
+            return Err(Reject::QueueFull);
+        }
+        self.items.push_back(req);
+        self.enqueued += 1;
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<InferenceRequest> {
+        self.items.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&InferenceRequest> {
+        self.items.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Drop everything (tenant eviction); returns the drained requests so
+    /// the caller can complete them with `Reject::TenantEvicted`.
+    pub fn drain(&mut self) -> Vec<InferenceRequest> {
+        self.items.drain(..).collect()
+    }
+}
+
+/// All tenants' queues; index == tenant id.
+#[derive(Debug)]
+pub struct QueueSet {
+    queues: Vec<TenantQueue>,
+    depth: usize,
+}
+
+impl QueueSet {
+    pub fn new(n_tenants: usize, depth: usize) -> Self {
+        Self {
+            queues: (0..n_tenants).map(|_| TenantQueue::new(depth)).collect(),
+            depth,
+        }
+    }
+
+    /// Add a queue for a late-registered tenant; returns its index.
+    pub fn add_tenant(&mut self) -> usize {
+        self.queues.push(TenantQueue::new(self.depth));
+        self.queues.len() - 1
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) -> Result<(), Reject> {
+        let t = req.tenant;
+        self.queues
+            .get_mut(t)
+            .ok_or_else(|| Reject::BadRequest(format!("unknown tenant {t}")))?
+            .push(req)
+    }
+
+    pub fn tenant(&self, id: usize) -> Option<&TenantQueue> {
+        self.queues.get(id)
+    }
+
+    pub fn tenant_mut(&mut self, id: usize) -> Option<&mut TenantQueue> {
+        self.queues.get_mut(id)
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn total_pending(&self) -> usize {
+        self.queues.iter().map(TenantQueue::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(TenantQueue::is_empty)
+    }
+
+    /// Tenants with at least one pending request, ascending id.
+    pub fn backlogged(&self) -> Vec<usize> {
+        (0..self.queues.len())
+            .filter(|&i| !self.queues[i].is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ShapeClass;
+    use std::time::Instant;
+
+    fn req(id: u64, tenant: usize) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            tenant,
+            class: ShapeClass::batched_gemm(8, 8, 8),
+            payload: vec![],
+            arrived: Instant::now(),
+            deadline: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = TenantQueue::new(4);
+        q.push(req(1, 0)).unwrap();
+        q.push(req(2, 0)).unwrap();
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_at_depth() {
+        let mut q = TenantQueue::new(2);
+        q.push(req(1, 0)).unwrap();
+        q.push(req(2, 0)).unwrap();
+        assert_eq!(q.push(req(3, 0)), Err(Reject::QueueFull));
+        assert_eq!(q.rejected, 1);
+        assert_eq!(q.enqueued, 2);
+        // Popping frees a slot.
+        q.pop();
+        assert!(q.push(req(3, 0)).is_ok());
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut q = TenantQueue::new(8);
+        for i in 0..5 {
+            q.push(req(i, 0)).unwrap();
+        }
+        let drained = q.drain();
+        assert_eq!(drained.len(), 5);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_set_routes_by_tenant() {
+        let mut qs = QueueSet::new(3, 4);
+        qs.push(req(1, 0)).unwrap();
+        qs.push(req(2, 2)).unwrap();
+        assert_eq!(qs.tenant(0).unwrap().len(), 1);
+        assert_eq!(qs.tenant(1).unwrap().len(), 0);
+        assert_eq!(qs.tenant(2).unwrap().len(), 1);
+        assert_eq!(qs.total_pending(), 2);
+        assert_eq!(qs.backlogged(), vec![0, 2]);
+        assert!(matches!(qs.push(req(3, 9)), Err(Reject::BadRequest(_))));
+    }
+
+    #[test]
+    fn add_tenant_grows() {
+        let mut qs = QueueSet::new(1, 4);
+        let id = qs.add_tenant();
+        assert_eq!(id, 1);
+        qs.push(req(1, 1)).unwrap();
+        assert_eq!(qs.tenant(1).unwrap().len(), 1);
+    }
+}

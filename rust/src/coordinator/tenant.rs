@@ -1,0 +1,292 @@
+//! Tenant registry: deployed model instances sharing one device.
+//!
+//! Paper §2 application model: all tenants on a GPU share the same
+//! architecture but have *different weights*. The registry owns each
+//! tenant's weights (seeded deterministically), SLO, and health state the
+//! straggler monitor mutates.
+
+use crate::config::TenantConfig;
+use crate::coordinator::request::ShapeClass;
+use crate::runtime::HostTensor;
+use crate::util::prng::Rng;
+
+/// Health as tracked by the SLO monitor (paper §4: monitor per-kernel
+/// latency, evict degraded workers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    /// Exceeded the straggler threshold in the last window(s).
+    Degraded { strikes: u32 },
+    Evicted,
+}
+
+/// Architecture deployed by a tenant, parsed from the config `model` string.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    /// Raw SGEMM problems (`sgemm:MxNxK`) — the paper's §4.1 benchmark unit.
+    Sgemm { m: usize, n: usize, k: usize },
+    /// Two-layer MLP block (`mlp`) — the end-to-end serving unit.
+    Mlp { m: usize, hidden: usize, k: usize, n_out: usize },
+    /// Single dense layer with fused bias+ReLU epilogue (`fused_linear`) —
+    /// the one-kernel-per-request unit (TensorRT-style folded inference).
+    FusedLinear { m: usize, k: usize, n: usize },
+    /// RNN cell (`rnn_cell`) — the paper's Table 1 matvec workload.
+    RnnCell { hidden: usize },
+}
+
+impl ModelSpec {
+    /// Parse the config string: `sgemm:256x128x1152`, `mlp`, `rnn_cell`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(dims) = s.strip_prefix("sgemm:") {
+            let parts: Vec<usize> = dims
+                .split('x')
+                .map(|p| p.parse().map_err(|_| format!("bad sgemm dims {dims:?}")))
+                .collect::<Result<_, _>>()?;
+            if parts.len() != 3 || parts.contains(&0) {
+                return Err(format!("sgemm spec needs MxNxK, got {dims:?}"));
+            }
+            return Ok(ModelSpec::Sgemm { m: parts[0], n: parts[1], k: parts[2] });
+        }
+        match s {
+            "mlp" | "mlp_block" => Ok(ModelSpec::Mlp {
+                m: 8,
+                hidden: 512,
+                k: 256,
+                n_out: 256,
+            }),
+            "fused_linear" | "linear" => {
+                Ok(ModelSpec::FusedLinear { m: 8, k: 512, n: 256 })
+            }
+            "rnn_cell" | "rnn" => Ok(ModelSpec::RnnCell { hidden: 512 }),
+            other => Err(format!(
+                "unknown model {other:?} (expected sgemm:MxNxK | mlp | fused_linear | rnn_cell)"
+            )),
+        }
+    }
+
+    pub fn shape_class(&self) -> ShapeClass {
+        match *self {
+            ModelSpec::Sgemm { m, n, k } => ShapeClass::batched_gemm(m, n, k),
+            ModelSpec::Mlp { m, hidden, k, n_out } => {
+                ShapeClass::mlp_block(m, hidden, k, n_out)
+            }
+            ModelSpec::FusedLinear { m, k, n } => ShapeClass::fused_linear(m, n, k),
+            ModelSpec::RnnCell { hidden } => ShapeClass::rnn_cell(hidden),
+        }
+    }
+
+    /// Per-request payload tensor shapes (what clients must send).
+    pub fn payload_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            ModelSpec::Sgemm { m, n, k } => vec![vec![m, k], vec![k, n]],
+            ModelSpec::Mlp { m, k, .. } => vec![vec![m, k]],
+            ModelSpec::FusedLinear { m, k, .. } => vec![vec![m, k]],
+            ModelSpec::RnnCell { hidden } => vec![vec![hidden, 1], vec![hidden, 1]],
+        }
+    }
+
+    /// Weight tensor shapes owned by the tenant (empty for raw SGEMM).
+    pub fn weight_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            ModelSpec::Sgemm { .. } => vec![],
+            ModelSpec::Mlp { hidden, k, n_out, .. } => vec![
+                vec![k, hidden],
+                vec![1, hidden],
+                vec![hidden, n_out],
+            ],
+            ModelSpec::FusedLinear { k, n, .. } => {
+                vec![vec![k, n], vec![1, n]]
+            }
+            ModelSpec::RnnCell { hidden } => {
+                vec![vec![hidden, hidden], vec![hidden, hidden]]
+            }
+        }
+    }
+}
+
+/// One deployed tenant.
+#[derive(Debug)]
+pub struct Tenant {
+    pub id: usize,
+    pub name: String,
+    pub spec: ModelSpec,
+    pub slo_ms: f64,
+    /// Deterministic per-tenant weights (paper §2: same architecture,
+    /// different weights).
+    pub weights: Vec<HostTensor>,
+    pub health: Health,
+}
+
+impl Tenant {
+    pub fn is_servable(&self) -> bool {
+        self.health != Health::Evicted
+    }
+}
+
+/// The registry. Index == tenant id.
+#[derive(Debug, Default)]
+pub struct TenantRegistry {
+    tenants: Vec<Tenant>,
+}
+
+impl TenantRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from config entries.
+    pub fn from_configs(cfgs: &[TenantConfig]) -> Result<Self, String> {
+        let mut reg = Self::new();
+        for c in cfgs {
+            reg.register(&c.name, &c.model, c.slo_ms, c.weight_seed)?;
+        }
+        Ok(reg)
+    }
+
+    /// Register a tenant; returns its id.
+    pub fn register(
+        &mut self,
+        name: &str,
+        model: &str,
+        slo_ms: f64,
+        weight_seed: u64,
+    ) -> Result<usize, String> {
+        let spec = ModelSpec::parse(model)?;
+        let mut rng = Rng::new(weight_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1F3);
+        let weights = spec
+            .weight_shapes()
+            .iter()
+            .map(|s| HostTensor::random(s, &mut rng))
+            .collect();
+        let id = self.tenants.len();
+        self.tenants.push(Tenant {
+            id,
+            name: name.to_string(),
+            spec,
+            slo_ms,
+            weights,
+            health: Health::Healthy,
+        });
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn get(&self, id: usize) -> Option<&Tenant> {
+        self.tenants.get(id)
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut Tenant> {
+        self.tenants.get_mut(id)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Tenant> {
+        self.tenants.iter()
+    }
+
+    pub fn servable(&self) -> impl Iterator<Item = &Tenant> {
+        self.tenants.iter().filter(|t| t.is_servable())
+    }
+
+    pub fn evict(&mut self, id: usize) {
+        if let Some(t) = self.tenants.get_mut(id) {
+            t.health = Health::Evicted;
+        }
+    }
+
+    pub fn evicted_count(&self) -> usize {
+        self.tenants
+            .iter()
+            .filter(|t| t.health == Health::Evicted)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_model_specs() {
+        assert_eq!(
+            ModelSpec::parse("sgemm:256x128x1152").unwrap(),
+            ModelSpec::Sgemm { m: 256, n: 128, k: 1152 }
+        );
+        assert!(matches!(ModelSpec::parse("mlp").unwrap(), ModelSpec::Mlp { .. }));
+        assert!(matches!(
+            ModelSpec::parse("rnn_cell").unwrap(),
+            ModelSpec::RnnCell { hidden: 512 }
+        ));
+        assert!(ModelSpec::parse("sgemm:1x2").is_err());
+        assert!(ModelSpec::parse("sgemm:0x1x1").is_err());
+        assert!(ModelSpec::parse("bert").is_err());
+    }
+
+    #[test]
+    fn weights_differ_by_seed_not_by_call() {
+        let mut reg = TenantRegistry::new();
+        let a = reg.register("a", "mlp", 100.0, 1).unwrap();
+        let b = reg.register("b", "mlp", 100.0, 2).unwrap();
+        let c = reg.register("c", "mlp", 100.0, 1).unwrap();
+        let (wa, wb, wc) = (
+            &reg.get(a).unwrap().weights,
+            &reg.get(b).unwrap().weights,
+            &reg.get(c).unwrap().weights,
+        );
+        assert_eq!(wa.len(), 3);
+        assert_ne!(wa[0], wb[0], "different seeds -> different weights");
+        assert_eq!(wa[0], wc[0], "same seed -> same weights");
+    }
+
+    #[test]
+    fn sgemm_tenants_have_no_weights() {
+        let mut reg = TenantRegistry::new();
+        let id = reg.register("g", "sgemm:64x64x64", 50.0, 0).unwrap();
+        assert!(reg.get(id).unwrap().weights.is_empty());
+        assert_eq!(
+            reg.get(id).unwrap().spec.payload_shapes(),
+            vec![vec![64, 64], vec![64, 64]]
+        );
+    }
+
+    #[test]
+    fn eviction_flips_servability() {
+        let mut reg = TenantRegistry::new();
+        let id = reg.register("x", "mlp", 100.0, 0).unwrap();
+        assert!(reg.get(id).unwrap().is_servable());
+        reg.evict(id);
+        assert!(!reg.get(id).unwrap().is_servable());
+        assert_eq!(reg.evicted_count(), 1);
+        assert_eq!(reg.servable().count(), 0);
+    }
+
+    #[test]
+    fn from_configs_roundtrip() {
+        let cfgs = vec![
+            TenantConfig {
+                name: "t0".into(),
+                model: "sgemm:256x256x256".into(),
+                batch: 1,
+                slo_ms: 25.0,
+                weight_seed: 7,
+            },
+            TenantConfig {
+                name: "t1".into(),
+                model: "mlp".into(),
+                batch: 1,
+                slo_ms: 50.0,
+                weight_seed: 8,
+            },
+        ];
+        let reg = TenantRegistry::from_configs(&cfgs).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get(0).unwrap().slo_ms, 25.0);
+        assert_eq!(reg.get(1).unwrap().name, "t1");
+    }
+}

@@ -1,0 +1,213 @@
+//! Roofline cost model: how long does a kernel take on `s` SMs?
+//!
+//! `duration = max(compute_time, memory_time)` where
+//!   compute_time = flops / (used_sms · flops_per_sm · occupancy_eff · interference)
+//!   memory_time  = bytes / (hbm_bw · bw_fraction(used_sms) · interference)
+//!
+//! plus the launch overhead, which the *engine* accounts separately because
+//! it depends on the dispatch path (plain launch, MPS proxy, context switch).
+//!
+//! The occupancy curve is the load-bearing piece: a kernel with 1 CTA per SM
+//! cannot hide memory latency and reaches only ~14 % of per-SM peak; a
+//! super-kernel with 16+ CTAs per SM approaches peak. This is exactly the
+//! mechanism the paper's Figure 7 exploits (merging R small problems to fill
+//! the machine), so the shape of the figure follows from the mechanism, not
+//! from curve-fitting the paper's series.
+
+use crate::gpusim::device::DeviceSpec;
+use crate::gpusim::kernel::KernelDesc;
+
+/// Execution context for a cost query.
+#[derive(Debug, Clone, Copy)]
+pub struct CostCtx {
+    /// SMs allocated to this kernel (may be fractional under MPS QoS).
+    pub sms: f64,
+    /// Concurrently-resident kernels from distinct clients (>= 1).
+    pub concurrency: u32,
+    /// If true, memory bandwidth is statically partitioned `1/concurrency`
+    /// (MPS QoS behaviour — non-work-conserving), instead of demand-shared.
+    pub static_bw_partition: bool,
+}
+
+impl CostCtx {
+    /// Whole device, alone.
+    pub fn exclusive(spec: &DeviceSpec) -> Self {
+        Self {
+            sms: spec.sms as f64,
+            concurrency: 1,
+            static_bw_partition: false,
+        }
+    }
+}
+
+/// Pure service time of `kernel` (seconds), excluding launch overhead.
+pub fn kernel_service_time(spec: &DeviceSpec, kernel: &KernelDesc, ctx: &CostCtx) -> f64 {
+    debug_assert!(ctx.sms > 0.0, "kernel must be allocated SMs");
+    debug_assert!(ctx.concurrency >= 1);
+
+    // A kernel cannot spread over more SMs than it has CTAs.
+    let used_sms = ctx.sms.min(kernel.ctas as f64).max(1e-9);
+    let cpsm = kernel.ctas as f64 / used_sms;
+    let interf = spec.interference(ctx.concurrency);
+    let eff = spec.occupancy_eff(cpsm) * interf;
+
+    let compute = kernel.flops / (used_sms * spec.flops_per_sm * eff.max(1e-12));
+
+    let bw_frac = if ctx.static_bw_partition {
+        (1.0 / ctx.concurrency as f64).min(spec.bw_fraction(used_sms))
+    } else {
+        spec.bw_fraction(used_sms)
+    };
+    let memory = kernel.bytes / (spec.hbm_bw * bw_frac * interf);
+
+    compute.max(memory)
+}
+
+/// Service time with the whole device, alone (the exclusive baseline).
+pub fn exclusive_time(spec: &DeviceSpec, kernel: &KernelDesc) -> f64 {
+    kernel_service_time(spec, kernel, &CostCtx::exclusive(spec))
+}
+
+/// Effective FLOP/s a kernel achieves in a context.
+pub fn achieved_flops(spec: &DeviceSpec, kernel: &KernelDesc, ctx: &CostCtx) -> f64 {
+    kernel.flops / kernel_service_time(spec, kernel, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::GemmShape;
+
+    fn v100() -> DeviceSpec {
+        DeviceSpec::v100()
+    }
+
+    #[test]
+    fn single_conv_sgemm_matches_cublas_scale() {
+        // A lone conv2_2-shaped SGEMM on V100 measures ~35 us with cuBLAS;
+        // the model should land in the same decade (20-80 us).
+        let spec = v100();
+        let k = KernelDesc::sgemm(0, GemmShape::RESNET18_CONV2_2);
+        let t = exclusive_time(&spec, &k);
+        assert!(
+            (15e-6..120e-6).contains(&t),
+            "conv2_2 exclusive time {t} outside plausible range"
+        );
+    }
+
+    #[test]
+    fn superkernel_beats_sum_of_parts() {
+        // Merging R small GEMMs must be much faster than running them
+        // back-to-back: that is the paper's core claim.
+        let spec = v100();
+        let parts: Vec<KernelDesc> = (0..32)
+            .map(|t| KernelDesc::sgemm(t, GemmShape::RESNET18_CONV2_2))
+            .collect();
+        let serial: f64 = parts.iter().map(|k| exclusive_time(&spec, k)).sum();
+        let merged = KernelDesc::superkernel(&parts);
+        let fused = exclusive_time(&spec, &merged);
+        assert!(
+            fused < serial / 3.0,
+            "fused {fused} should be >3x faster than serial {serial}"
+        );
+    }
+
+    #[test]
+    fn superkernel_throughput_approaches_peak() {
+        let spec = v100();
+        let parts: Vec<KernelDesc> = (0..120)
+            .map(|t| KernelDesc::sgemm(t, GemmShape::RESNET18_CONV2_2))
+            .collect();
+        let merged = KernelDesc::superkernel(&parts);
+        let ctx = CostCtx::exclusive(&spec);
+        let f = achieved_flops(&spec, &merged, &ctx);
+        assert!(
+            f > 0.6 * spec.peak_flops(),
+            "large super-kernel should reach >60% of peak, got {}",
+            f / spec.peak_flops()
+        );
+    }
+
+    #[test]
+    fn matvec_is_memory_bound() {
+        let spec = v100();
+        let k = KernelDesc::sgemm(0, GemmShape::RNN_MATVEC);
+        // At full BW the matvec moves ~1 MB; it must be memory-bound: the
+        // achieved FLOP/s should be far below compute peak even when batched.
+        let parts: Vec<KernelDesc> = (0..64).map(|t| KernelDesc::sgemm(t, GemmShape::RNN_MATVEC)).collect();
+        let merged = KernelDesc::superkernel(&parts);
+        let f = achieved_flops(&spec, &merged, &CostCtx::exclusive(&spec));
+        assert!(f < 0.2 * spec.peak_flops(), "matvec cannot be compute-bound");
+        assert!(exclusive_time(&spec, &k) > 0.0);
+    }
+
+    #[test]
+    fn more_sms_never_slower() {
+        let spec = v100();
+        let k = KernelDesc::sgemm(0, GemmShape::SQUARE_256);
+        let mut last = f64::INFINITY;
+        for sms in [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 80.0] {
+            let t = kernel_service_time(
+                &spec,
+                &k,
+                &CostCtx {
+                    sms,
+                    concurrency: 1,
+                    static_bw_partition: false,
+                },
+            );
+            assert!(t <= last * 1.0000001, "monotonic in SMs: {sms} -> {t}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn interference_slows_kernels() {
+        let spec = v100();
+        let k = KernelDesc::sgemm(0, GemmShape::SQUARE_256);
+        let alone = kernel_service_time(
+            &spec,
+            &k,
+            &CostCtx {
+                sms: 10.0,
+                concurrency: 1,
+                static_bw_partition: false,
+            },
+        );
+        let crowded = kernel_service_time(
+            &spec,
+            &k,
+            &CostCtx {
+                sms: 10.0,
+                concurrency: 16,
+                static_bw_partition: false,
+            },
+        );
+        assert!(crowded > alone * 1.5);
+    }
+
+    #[test]
+    fn static_bw_partition_hurts_memory_bound_kernels() {
+        let spec = v100();
+        let k = KernelDesc::sgemm(0, GemmShape::RNN_MATVEC);
+        let shared = kernel_service_time(
+            &spec,
+            &k,
+            &CostCtx {
+                sms: 80.0,
+                concurrency: 8,
+                static_bw_partition: false,
+            },
+        );
+        let partitioned = kernel_service_time(
+            &spec,
+            &k,
+            &CostCtx {
+                sms: 80.0,
+                concurrency: 8,
+                static_bw_partition: true,
+            },
+        );
+        assert!(partitioned > shared);
+    }
+}

@@ -1,0 +1,178 @@
+//! Device specifications for the discrete-event GPU simulator.
+//!
+//! The simulator replaces the paper's AWS p3 V100 testbed (see DESIGN.md §1).
+//! All constants are grounded in the V100 datasheet where public, and
+//! calibrated against the paper's measured ratios where not (each calibrated
+//! constant is marked `CALIBRATED`).
+
+/// A simulated accelerator (or CPU, for the Figure 1 baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub sms: u32,
+    /// Peak FP32 FLOP/s per SM. V100: 14 TFLOP/s over 80 SMs = 175 GFLOP/s.
+    pub flops_per_sm: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Device memory capacity, bytes.
+    pub hbm_capacity: u64,
+    /// Hardware queue count (Hyper-Q): max kernels co-resident on device.
+    pub max_concurrent_kernels: u32,
+    /// Kernel launch overhead for an in-context launch, seconds.
+    pub launch_overhead_s: f64,
+    /// Extra per-kernel overhead when dispatched through the MPS proxy,
+    /// seconds. CALIBRATED: MPS adds client→server IPC on the launch path.
+    pub mps_launch_overhead_s: f64,
+    /// Device-wide grid dispatch serialization: two kernels cannot begin
+    /// occupying SMs in the same instant, seconds per dispatch.
+    pub dispatch_serialization_s: f64,
+    /// CUDA context switch penalty (time multiplexing), seconds.
+    pub ctx_switch_s: f64,
+    /// Time-multiplexing scheduler quantum, seconds.
+    pub timeslice_quantum_s: f64,
+    /// Fixed device-memory overhead per CUDA context (runtime + workspace).
+    /// CALIBRATED so 18 ResNet-50 replicas exhaust 16 GB (paper Fig 5).
+    pub per_context_mem: u64,
+    /// cuDNN/cuBLAS per-process workspace reservation, bytes.
+    pub per_process_workspace: u64,
+    /// Occupancy half-saturation constant: per-SM efficiency is
+    /// `cpsm / (cpsm + occupancy_half_sat)` where cpsm = CTAs per used SM.
+    /// CALIBRATED: one 64x64 SGEMM CTA per SM reaches ~14% of per-SM peak
+    /// (matches a ~35 us cuBLAS conv2_2-shaped SGEMM on V100).
+    pub occupancy_half_sat: f64,
+    /// Inter-stream interference: concurrent kernels from distinct clients
+    /// derate each other's per-SM efficiency by `1/(1 + coeff*(n-1))`.
+    /// CALIBRATED against the paper's space-only-vs-batched gap (Table 1).
+    pub interference_coeff: f64,
+    /// Number of SMs whose combined demand saturates HBM bandwidth: a kernel
+    /// occupying s SMs can draw at most `min(1, s/bw_saturation_sms)` of BW.
+    pub bw_saturation_sms: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA V100 (SXM2 16 GB) — the paper's testbed GPU.
+    pub fn v100() -> Self {
+        Self {
+            name: "V100-SXM2-16GB",
+            sms: 80,
+            flops_per_sm: 175e9, // 14 TFLOP/s FP32 / 80 SMs
+            hbm_bw: 900e9,
+            hbm_capacity: 16 * (1 << 30),
+            max_concurrent_kernels: 32, // Hyper-Q hardware queues
+            launch_overhead_s: 5e-6,
+            mps_launch_overhead_s: 9e-6,
+            dispatch_serialization_s: 2e-6,
+            ctx_switch_s: 100e-6,
+            timeslice_quantum_s: 1e-3,
+            // CALIBRATED (Fig 5): CUDA context + cuDNN workspace sized so a
+            // ResNet-50 replica (batch 26: 91 MB weights + 167 MB acts)
+            // costs ~955 MB per process — the paper's 16 GB wall lands at
+            // exactly 18 process-per-replica deployments while a shared
+            // process reaches 60+.
+            per_context_mem: 400 * (1 << 20),
+            per_process_workspace: 250 * (1 << 20),
+            occupancy_half_sat: 6.0,
+            interference_coeff: 0.08,
+            bw_saturation_sms: 20.0,
+        }
+    }
+
+    /// A Skylake-class server CPU, used only for the Figure 1 CPU-latency
+    /// trend. Modeled as a single "SM".
+    ///
+    /// CALIBRATED: `flops_per_sm` is the *effective* serving-path FP32
+    /// throughput of a latency-oriented (small-batch, framework-overhead-
+    /// dominated) CPU inference stack circa 2018, set so SENet's ~20.7
+    /// GFLOP forward pass lands at the paper's quoted ~4.1 s (Figure 1) —
+    /// not the socket's peak.
+    pub fn cpu_xeon() -> Self {
+        Self {
+            name: "Xeon-8175M (CPU, serving-path)",
+            sms: 1,
+            flops_per_sm: 5.1e9,
+            hbm_bw: 20e9,
+            hbm_capacity: 256 * (1 << 30),
+            max_concurrent_kernels: 1,
+            launch_overhead_s: 1e-6, // function call, not a device launch
+            mps_launch_overhead_s: 0.0,
+            dispatch_serialization_s: 0.0,
+            ctx_switch_s: 10e-6,
+            timeslice_quantum_s: 10e-3,
+            per_context_mem: 0,
+            per_process_workspace: 0,
+            occupancy_half_sat: 0.05, // CPUs do not need CTA oversubscription
+            interference_coeff: 0.0,
+            bw_saturation_sms: 1.0,
+        }
+    }
+
+    /// Peak FP32 throughput of the whole device.
+    pub fn peak_flops(&self) -> f64 {
+        self.sms as f64 * self.flops_per_sm
+    }
+
+    /// Occupancy efficiency for `cpsm` CTAs per used SM (saturating curve).
+    pub fn occupancy_eff(&self, cpsm: f64) -> f64 {
+        debug_assert!(cpsm >= 0.0);
+        if cpsm <= 0.0 {
+            return 0.0;
+        }
+        cpsm / (cpsm + self.occupancy_half_sat)
+    }
+
+    /// Interference derate with `n` concurrently-resident kernels from
+    /// distinct clients (n >= 1).
+    pub fn interference(&self, n: u32) -> f64 {
+        1.0 / (1.0 + self.interference_coeff * (n.saturating_sub(1)) as f64)
+    }
+
+    /// Fraction of HBM bandwidth reachable from `sms` SMs.
+    pub fn bw_fraction(&self, sms: f64) -> f64 {
+        (sms / self.bw_saturation_sms).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_peak_matches_datasheet() {
+        let d = DeviceSpec::v100();
+        assert!((d.peak_flops() - 14e12).abs() < 1e9);
+        assert_eq!(d.sms, 80);
+        assert_eq!(d.hbm_capacity, 16 * (1 << 30));
+    }
+
+    #[test]
+    fn occupancy_curve_saturates() {
+        let d = DeviceSpec::v100();
+        assert!(d.occupancy_eff(1.0) < 0.2);
+        assert!(d.occupancy_eff(6.0) == 0.5);
+        assert!(d.occupancy_eff(64.0) > 0.9);
+        assert!(d.occupancy_eff(0.0) == 0.0);
+        // monotone
+        let mut last = 0.0;
+        for i in 1..100 {
+            let e = d.occupancy_eff(i as f64);
+            assert!(e > last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn interference_decreases_with_concurrency() {
+        let d = DeviceSpec::v100();
+        assert_eq!(d.interference(1), 1.0);
+        assert!(d.interference(2) < 1.0);
+        assert!(d.interference(32) < d.interference(2));
+    }
+
+    #[test]
+    fn bw_fraction_caps_at_one() {
+        let d = DeviceSpec::v100();
+        assert!(d.bw_fraction(5.0) < 1.0);
+        assert_eq!(d.bw_fraction(40.0), 1.0);
+    }
+}

@@ -1,0 +1,838 @@
+//! Discrete-event execution engine: runs multi-tenant kernel workloads under
+//! each of the paper's multiplexing policies and reports per-tenant latency,
+//! throughput, launch counts and a schedule trace.
+//!
+//! Policies (paper §3):
+//! * [`Policy::Exclusive`] — every tenant gets a *private* GPU (the paper's
+//!   single-tenant lower bound; simulated as independent devices).
+//! * [`Policy::TimeMux`] — one device, one resident CUDA context at a time,
+//!   round-robin quanta with context-switch penalties.
+//! * [`Policy::SpaceMuxMps`] — implicit spatial sharing through the MPS
+//!   proxy: concurrent kernels, static BW partitioning, straggler anomalies.
+//! * [`Policy::SpaceMuxStreams`] — explicit CUDA streams in one process:
+//!   concurrent kernels, demand-shared bandwidth, no MPS proxy overhead.
+//! * [`Policy::SpaceTime`] — the paper's contribution: per-round inter-model
+//!   batching of same-shape GEMMs into super-kernels that fill the device.
+
+use crate::gpusim::cost::{kernel_service_time, CostCtx};
+use crate::gpusim::device::DeviceSpec;
+use crate::gpusim::kernel::{KernelDesc, TenantId};
+use crate::gpusim::mps::MpsAnomaly;
+use crate::gpusim::trace::{Trace, TraceEvent};
+
+/// One tenant's closed-loop workload: `iterations` repetitions of the kernel
+/// sequence (one sequence = one inference / forward pass).
+#[derive(Debug, Clone)]
+pub struct TenantWorkload {
+    pub kernels: Vec<KernelDesc>,
+    pub iterations: u32,
+}
+
+impl TenantWorkload {
+    pub fn new(kernels: Vec<KernelDesc>, iterations: u32) -> Self {
+        Self { kernels, iterations }
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum::<f64>() * self.iterations as f64
+    }
+}
+
+/// Multiplexing policy under simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    Exclusive,
+    TimeMux,
+    SpaceMuxMps { anomaly_seed: u64 },
+    SpaceMuxStreams,
+    SpaceTime { max_batch: u32 },
+}
+
+impl Policy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Exclusive => "exclusive",
+            Policy::TimeMux => "time-mux",
+            Policy::SpaceMuxMps { .. } => "space-mux (MPS)",
+            Policy::SpaceMuxStreams => "space-mux (streams)",
+            Policy::SpaceTime { .. } => "space-time",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub spec: DeviceSpec,
+    pub policy: Policy,
+    pub capture_trace: bool,
+}
+
+impl SimConfig {
+    pub fn new(spec: DeviceSpec, policy: Policy) -> Self {
+        Self {
+            spec,
+            policy,
+            capture_trace: false,
+        }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.capture_trace = true;
+        self
+    }
+}
+
+/// Per-tenant results.
+#[derive(Debug, Clone, Default)]
+pub struct TenantReport {
+    /// Wall-clock latency of each completed inference, seconds.
+    pub latencies: Vec<f64>,
+    pub completed: u64,
+    pub flops: f64,
+}
+
+impl TenantReport {
+    pub fn mean_latency(&self) -> f64 {
+        crate::util::stats::mean(&self.latencies)
+    }
+}
+
+/// Whole-run results.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub tenants: Vec<TenantReport>,
+    pub makespan: f64,
+    pub kernel_launches: u64,
+    pub superkernel_launches: u64,
+    /// Total problems executed inside super-kernels.
+    pub fused_problems: u64,
+    pub trace: Trace,
+}
+
+impl SimReport {
+    pub fn total_flops(&self) -> f64 {
+        self.tenants.iter().map(|t| t.flops).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.completed).sum()
+    }
+
+    pub fn throughput_flops(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.total_flops() / self.makespan
+        }
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        let all: Vec<f64> = self
+            .tenants
+            .iter()
+            .flat_map(|t| t.latencies.iter().copied())
+            .collect();
+        crate::util::stats::mean(&all)
+    }
+
+    /// Fastest vs slowest tenant mean-latency gap (Figure 4 metric).
+    pub fn straggler_gap(&self) -> f64 {
+        let means: Vec<f64> = self
+            .tenants
+            .iter()
+            .filter(|t| !t.latencies.is_empty())
+            .map(|t| t.mean_latency())
+            .collect();
+        if means.len() < 2 {
+            return 0.0;
+        }
+        let fast = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let slow = means.iter().cloned().fold(0.0, f64::max);
+        if fast <= 0.0 {
+            0.0
+        } else {
+            slow / fast - 1.0
+        }
+    }
+}
+
+/// Run `workloads` under `cfg`.
+pub fn run(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    match &cfg.policy {
+        Policy::Exclusive => run_exclusive(cfg, workloads),
+        Policy::TimeMux => run_time_mux(cfg, workloads),
+        Policy::SpaceMuxMps { anomaly_seed } => {
+            let anomaly = MpsAnomaly::new(*anomaly_seed, workloads.len());
+            run_space_mux(cfg, workloads, &anomaly, true, cfg.spec.mps_launch_overhead_s)
+        }
+        Policy::SpaceMuxStreams => {
+            let anomaly = MpsAnomaly::none(workloads.len());
+            run_space_mux(
+                cfg,
+                workloads,
+                &anomaly,
+                false,
+                cfg.spec.dispatch_serialization_s,
+            )
+        }
+        Policy::SpaceTime { max_batch } => run_space_time(cfg, workloads, *max_batch),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exclusive: each tenant on a private device.
+// ---------------------------------------------------------------------------
+
+fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    let spec = &cfg.spec;
+    let mut report = SimReport {
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    let ctx = CostCtx::exclusive(spec);
+    let mut makespan: f64 = 0.0;
+    for (tid, w) in workloads.iter().enumerate() {
+        let mut t = 0.0;
+        let mut tr = TenantReport::default();
+        if w.kernels.is_empty() {
+            report.tenants.push(tr);
+            continue;
+        }
+        for _ in 0..w.iterations {
+            let start = t;
+            for k in &w.kernels {
+                let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
+                report.trace.record(TraceEvent {
+                    t_start: t,
+                    t_end: t + dur,
+                    lane: tid,
+                    tenant: tid,
+                    label: k.name.clone(),
+                    sms: (k.ctas as f64).min(spec.sms as f64),
+                    fused: k.fused,
+                });
+                t += dur;
+                report.kernel_launches += 1;
+                tr.flops += k.flops;
+            }
+            tr.latencies.push(t - start);
+            tr.completed += 1;
+        }
+        makespan = makespan.max(t);
+        report.tenants.push(tr);
+    }
+    report.makespan = makespan;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Time multiplexing: one resident context, round-robin quanta.
+// ---------------------------------------------------------------------------
+
+fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let mut report = SimReport {
+        tenants: vec![TenantReport::default(); n],
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    // Per-tenant cursor. `inf_start` is the *submission* time of the
+    // in-flight inference: in the saturated closed loop every tenant's
+    // first inference is submitted at t=0 and each completion immediately
+    // submits the next, so waiting for other tenants' quanta is part of the
+    // measured latency (this is what makes time-mux latency grow linearly
+    // with the tenant count — paper Fig 3).
+    struct Cursor {
+        iter: u32,
+        kidx: usize,
+        inf_start: f64,
+    }
+    let mut cursors: Vec<Cursor> = workloads
+        .iter()
+        .map(|_| Cursor {
+            iter: 0,
+            kidx: 0,
+            inf_start: 0.0,
+        })
+        .collect();
+    let ctx = CostCtx::exclusive(spec);
+    let mut clock = 0.0f64;
+    let pending = |c: &Cursor, w: &TenantWorkload| c.iter < w.iterations && !w.kernels.is_empty();
+    let mut current = 0usize;
+    // Number of tenants with work left.
+    let mut live: usize = workloads
+        .iter()
+        .zip(cursors.iter())
+        .filter(|(w, c)| pending(c, w))
+        .count();
+    let multi = live > 1;
+    while live > 0 {
+        // Find next tenant with pending work.
+        let mut hops = 0;
+        while !pending(&cursors[current], &workloads[current]) {
+            current = (current + 1) % n;
+            hops += 1;
+            debug_assert!(hops <= n, "live>0 but no pending tenant");
+        }
+        // Context switch cost applies when more than one context exists.
+        if multi {
+            clock += spec.ctx_switch_s;
+        }
+        // Run this tenant's kernels until the quantum is spent (kernels are
+        // non-preemptible: always finish the one we started).
+        let mut quantum_left = spec.timeslice_quantum_s;
+        let w = &workloads[current];
+        while quantum_left > 0.0 && pending(&cursors[current], w) {
+            let c = &mut cursors[current];
+            let k = &w.kernels[c.kidx];
+            let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
+            report.trace.record(TraceEvent {
+                t_start: clock,
+                t_end: clock + dur,
+                lane: current,
+                tenant: current,
+                label: k.name.clone(),
+                sms: (k.ctas as f64).min(spec.sms as f64),
+                fused: k.fused,
+            });
+            clock += dur;
+            quantum_left -= dur;
+            report.kernel_launches += 1;
+            report.tenants[current].flops += k.flops;
+            c.kidx += 1;
+            if c.kidx == w.kernels.len() {
+                c.kidx = 0;
+                c.iter += 1;
+                report.tenants[current].latencies.push(clock - c.inf_start);
+                report.tenants[current].completed += 1;
+                c.inf_start = clock; // next inference submitted immediately
+                if c.iter == w.iterations {
+                    live -= 1;
+                }
+            }
+        }
+        current = (current + 1) % n;
+    }
+    report.makespan = clock;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Spatial multiplexing: event-driven processor sharing over SMs.
+// ---------------------------------------------------------------------------
+
+fn run_space_mux(
+    cfg: &SimConfig,
+    workloads: &[TenantWorkload],
+    anomaly: &MpsAnomaly,
+    static_bw: bool,
+    per_kernel_overhead: f64,
+) -> SimReport {
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let mut report = SimReport {
+        tenants: vec![TenantReport::default(); n],
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+
+    /// In-flight kernel state: a dispatch phase of absolute duration followed
+    /// by an execution phase tracked as a remaining fraction (the service
+    /// time is re-evaluated whenever the resident set changes).
+    struct Flight {
+        tenant: TenantId,
+        dispatch_left: f64,
+        exec_frac_left: f64,
+        started_at: f64,
+    }
+    struct Cursor {
+        iter: u32,
+        kidx: usize,
+        /// Submission time of the in-flight inference (saturated closed
+        /// loop: t=0, then each completion submits the next).
+        inf_start: f64,
+        done: bool,
+    }
+
+    let mut cursors: Vec<Cursor> = workloads
+        .iter()
+        .map(|w| Cursor {
+            iter: 0,
+            kidx: 0,
+            inf_start: 0.0,
+            done: w.iterations == 0 || w.kernels.is_empty(),
+        })
+        .collect();
+
+    let max_resident = spec.max_concurrent_kernels as usize;
+    let mut resident: Vec<Flight> = Vec::with_capacity(max_resident);
+    // Tenants whose next kernel is ready but waiting for a hardware queue.
+    let mut waiting: std::collections::VecDeque<TenantId> = (0..n)
+        .filter(|&t| !cursors[t].done)
+        .collect();
+    let mut clock = 0.0f64;
+
+    // Admit from the waiting queue into the resident set.
+    fn admit(
+        resident: &mut Vec<Flight>,
+        waiting: &mut std::collections::VecDeque<TenantId>,
+        cursors: &mut [Cursor],
+        clock: f64,
+        max_resident: usize,
+        overhead: f64,
+    ) {
+        while resident.len() < max_resident {
+            let Some(t) = waiting.pop_front() else { break };
+            debug_assert!(!cursors[t].done);
+            resident.push(Flight {
+                tenant: t,
+                dispatch_left: overhead,
+                exec_frac_left: 1.0,
+                started_at: clock,
+            });
+        }
+    }
+
+    admit(
+        &mut resident,
+        &mut waiting,
+        &mut cursors,
+        clock,
+        max_resident,
+        per_kernel_overhead,
+    );
+
+    while !resident.is_empty() {
+        let conc = resident.len() as u32;
+        // SM allocation proportional to CTA demand, capped by each kernel's
+        // own CTA count; one redistribution round picks up the slack.
+        let total_ctas: f64 = resident
+            .iter()
+            .map(|f| workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64)
+            .sum();
+        let total_sms = spec.sms as f64;
+        let mut allocs: Vec<f64> = resident
+            .iter()
+            .map(|f| {
+                let ctas = workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64;
+                (total_sms * ctas / total_ctas.max(1.0)).min(ctas)
+            })
+            .collect();
+        let used: f64 = allocs.iter().sum();
+        let slack = (total_sms - used).max(0.0);
+        if slack > 0.0 {
+            // Give slack to kernels that can still use it (ctas > alloc).
+            let extra_demand: f64 = resident
+                .iter()
+                .zip(allocs.iter())
+                .map(|(f, &a)| {
+                    (workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64 - a).max(0.0)
+                })
+                .sum();
+            if extra_demand > 0.0 {
+                for (i, f) in resident.iter().enumerate() {
+                    let ctas = workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64;
+                    let want = (ctas - allocs[i]).max(0.0);
+                    allocs[i] += slack * want / extra_demand;
+                    allocs[i] = allocs[i].min(ctas);
+                }
+            }
+        }
+
+        // Time to next completion.
+        let mut dt = f64::INFINITY;
+        let mut times: Vec<f64> = Vec::with_capacity(resident.len());
+        for (i, f) in resident.iter().enumerate() {
+            let k = &workloads[f.tenant].kernels[cursors[f.tenant].kidx];
+            let t_exec = kernel_service_time(
+                spec,
+                k,
+                &CostCtx {
+                    sms: allocs[i].max(1e-9),
+                    concurrency: conc,
+                    static_bw_partition: static_bw,
+                },
+            ) * anomaly.multiplier(f.tenant);
+            times.push(t_exec);
+            let remaining = f.dispatch_left + f.exec_frac_left * t_exec;
+            dt = dt.min(remaining);
+        }
+        debug_assert!(dt.is_finite() && dt >= 0.0);
+
+        clock += dt;
+        // Advance all flights by dt; collect completions.
+        let mut completed_idx: Vec<usize> = Vec::new();
+        for (i, f) in resident.iter_mut().enumerate() {
+            let mut step = dt;
+            if f.dispatch_left > 0.0 {
+                let d = f.dispatch_left.min(step);
+                f.dispatch_left -= d;
+                step -= d;
+            }
+            if step > 0.0 && f.exec_frac_left > 0.0 {
+                f.exec_frac_left -= step / times[i];
+            }
+            if f.dispatch_left <= 1e-15 && f.exec_frac_left <= 1e-9 {
+                completed_idx.push(i);
+            }
+        }
+
+        // Process completions (highest index first so removals are stable).
+        for &i in completed_idx.iter().rev() {
+            let f = resident.swap_remove(i);
+            let t = f.tenant;
+            let c = &mut cursors[t];
+            let k = &workloads[t].kernels[c.kidx];
+            report.kernel_launches += 1;
+            report.tenants[t].flops += k.flops;
+            report.trace.record(TraceEvent {
+                t_start: f.started_at,
+                t_end: clock,
+                lane: t % max_resident.max(1),
+                tenant: t,
+                label: k.name.clone(),
+                sms: (k.ctas as f64).min(spec.sms as f64 / (conc as f64)),
+                fused: k.fused,
+            });
+            c.kidx += 1;
+            if c.kidx == workloads[t].kernels.len() {
+                c.kidx = 0;
+                c.iter += 1;
+                report.tenants[t].latencies.push(clock - c.inf_start);
+                report.tenants[t].completed += 1;
+                c.inf_start = clock;
+                if c.iter == workloads[t].iterations {
+                    c.done = true;
+                }
+            }
+            if !c.done {
+                waiting.push_back(t);
+            }
+        }
+        admit(
+            &mut resident,
+            &mut waiting,
+            &mut cursors,
+            clock,
+            max_resident,
+            per_kernel_overhead,
+        );
+    }
+    report.makespan = clock;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Space-time: per-round inter-model super-kernel batching (the contribution).
+// ---------------------------------------------------------------------------
+
+fn run_space_time(cfg: &SimConfig, workloads: &[TenantWorkload], max_batch: u32) -> SimReport {
+    assert!(max_batch >= 1);
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let mut report = SimReport {
+        tenants: vec![TenantReport::default(); n],
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    struct Cursor {
+        iter: u32,
+        kidx: usize,
+        inf_start: f64,
+        done: bool,
+    }
+    let mut cursors: Vec<Cursor> = workloads
+        .iter()
+        .map(|w| Cursor {
+            iter: 0,
+            kidx: 0,
+            inf_start: 0.0,
+            done: w.iterations == 0 || w.kernels.is_empty(),
+        })
+        .collect();
+    let ctx = CostCtx::exclusive(spec);
+    let mut clock = 0.0f64;
+
+    loop {
+        // Heads of all live tenants this round.
+        let live: Vec<TenantId> = (0..n).filter(|&t| !cursors[t].done).collect();
+        if live.is_empty() {
+            break;
+        }
+        // Group heads: GEMMs by shape class, others by kernel name (the
+        // same-architecture assumption of paper §2 makes names align).
+        use std::collections::BTreeMap;
+        #[derive(PartialEq, Eq, PartialOrd, Ord)]
+        enum GroupKey {
+            Gemm(u32, u32, u32),
+            Other(String),
+        }
+        let mut groups: BTreeMap<GroupKey, Vec<TenantId>> = BTreeMap::new();
+        for &t in &live {
+            let k = &workloads[t].kernels[cursors[t].kidx];
+            let key = match k.shape {
+                Some(s) => GroupKey::Gemm(s.m, s.n, s.k),
+                None => GroupKey::Other(k.name.clone()),
+            };
+            groups.entry(key).or_default().push(t);
+        }
+
+        // Execute groups serially; each group in chunks of max_batch.
+        for (key, members) in groups {
+            for chunk in members.chunks(max_batch as usize) {
+                let kernels: Vec<KernelDesc> = chunk
+                    .iter()
+                    .map(|&t| workloads[t].kernels[cursors[t].kidx].clone())
+                    .collect();
+                let merged = match key {
+                    GroupKey::Gemm(..) if kernels.len() > 1 => {
+                        KernelDesc::superkernel(&kernels)
+                    }
+                    _ => {
+                        // Non-GEMM heads (or a singleton): pack grids by
+                        // concatenation — same cost structure, summed work.
+                        let mut k = kernels[0].clone();
+                        for extra in &kernels[1..] {
+                            k.flops += extra.flops;
+                            k.bytes += extra.bytes;
+                            k.ctas += extra.ctas;
+                            k.fused += extra.fused;
+                        }
+                        k
+                    }
+                };
+                let dur = spec.launch_overhead_s + kernel_service_time(spec, &merged, &ctx);
+                report.trace.record(TraceEvent {
+                    t_start: clock,
+                    t_end: clock + dur,
+                    lane: 0,
+                    tenant: if chunk.len() == 1 { chunk[0] } else { usize::MAX },
+                    label: merged.name.clone(),
+                    sms: (merged.ctas as f64).min(spec.sms as f64),
+                    fused: merged.fused,
+                });
+                clock += dur;
+                report.kernel_launches += 1;
+                if merged.fused > 1 {
+                    report.superkernel_launches += 1;
+                    report.fused_problems += merged.fused as u64;
+                }
+                for &t in chunk {
+                    let k = &workloads[t].kernels[cursors[t].kidx];
+                    report.tenants[t].flops += k.flops;
+                }
+                // Members complete at chunk end.
+                for &t in chunk {
+                    let c = &mut cursors[t];
+                    c.kidx += 1;
+                    if c.kidx == workloads[t].kernels.len() {
+                        c.kidx = 0;
+                        c.iter += 1;
+                        report.tenants[t].latencies.push(clock - c.inf_start);
+                        report.tenants[t].completed += 1;
+                        c.inf_start = clock;
+                        if c.iter == workloads[t].iterations {
+                            c.done = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    report.makespan = clock;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::GemmShape;
+
+    fn sgemm_workloads(n: usize, iters: u32, shape: GemmShape) -> Vec<TenantWorkload> {
+        (0..n)
+            .map(|t| TenantWorkload::new(vec![KernelDesc::sgemm(t, shape)], iters))
+            .collect()
+    }
+
+    fn cfg(policy: Policy) -> SimConfig {
+        SimConfig::new(DeviceSpec::v100(), policy)
+    }
+
+    #[test]
+    fn all_policies_complete_all_work() {
+        let w = sgemm_workloads(6, 5, GemmShape::RESNET18_CONV2_2);
+        for policy in [
+            Policy::Exclusive,
+            Policy::TimeMux,
+            Policy::SpaceMuxMps { anomaly_seed: 1 },
+            Policy::SpaceMuxStreams,
+            Policy::SpaceTime { max_batch: 64 },
+        ] {
+            let r = run(&cfg(policy.clone()), &w);
+            assert_eq!(
+                r.total_completed(),
+                30,
+                "policy {policy:?} must complete all inferences"
+            );
+            for t in &r.tenants {
+                assert_eq!(t.completed, 5);
+                assert_eq!(t.latencies.len(), 5);
+                assert!(t.latencies.iter().all(|&l| l > 0.0));
+            }
+            assert!(r.makespan > 0.0);
+        }
+    }
+
+    #[test]
+    fn exclusive_latency_flat_in_tenant_count() {
+        // Private GPUs: more tenants must not slow each other down.
+        let l1 = run(&cfg(Policy::Exclusive), &sgemm_workloads(1, 10, GemmShape::SQUARE_256))
+            .mean_latency();
+        let l8 = run(&cfg(Policy::Exclusive), &sgemm_workloads(8, 10, GemmShape::SQUARE_256))
+            .mean_latency();
+        assert!((l1 - l8).abs() / l1 < 1e-9);
+    }
+
+    #[test]
+    fn time_mux_latency_grows_linearly() {
+        // Paper Fig 3: "linear-slowdown as the number of replicas grows".
+        let shape = GemmShape::RESNET18_CONV2_2;
+        let l2 = run(&cfg(Policy::TimeMux), &sgemm_workloads(2, 20, shape)).mean_latency();
+        let l8 = run(&cfg(Policy::TimeMux), &sgemm_workloads(8, 20, shape)).mean_latency();
+        let ratio = l8 / l2;
+        assert!(
+            (2.5..6.5).contains(&ratio),
+            "8 vs 2 tenants should be ~4x slower, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn space_mux_beats_time_mux_for_conv() {
+        // Paper Fig 3: spatial multiplexing delivers better latency than
+        // time multiplexing.
+        let shape = GemmShape::RESNET18_CONV2_2;
+        let w = sgemm_workloads(8, 20, shape);
+        let t = run(&cfg(Policy::TimeMux), &w);
+        let s = run(&cfg(Policy::SpaceMuxMps { anomaly_seed: 3 }), &w);
+        assert!(
+            s.mean_latency() < t.mean_latency(),
+            "space {} should beat time {}",
+            s.mean_latency(),
+            t.mean_latency()
+        );
+        assert!(s.throughput_flops() > t.throughput_flops());
+    }
+
+    #[test]
+    fn space_time_beats_both_for_conv() {
+        // Paper Fig 7 / Table 1 direction.
+        let shape = GemmShape::RESNET18_CONV2_2;
+        let w = sgemm_workloads(20, 10, shape);
+        let time = run(&cfg(Policy::TimeMux), &w).throughput_flops();
+        let space = run(&cfg(Policy::SpaceMuxMps { anomaly_seed: 3 }), &w).throughput_flops();
+        let st = run(&cfg(Policy::SpaceTime { max_batch: 128 }), &w).throughput_flops();
+        assert!(st > space * 1.5, "space-time {st} vs space {space}");
+        assert!(st > time * 3.0, "space-time {st} vs time {time}");
+    }
+
+    #[test]
+    fn space_time_counts_superkernels() {
+        let w = sgemm_workloads(10, 4, GemmShape::SQUARE_256);
+        let r = run(&cfg(Policy::SpaceTime { max_batch: 64 }), &w);
+        assert_eq!(r.superkernel_launches, 4, "one super-kernel per round");
+        assert_eq!(r.fused_problems, 40);
+        assert_eq!(r.kernel_launches, 4);
+    }
+
+    #[test]
+    fn space_time_respects_max_batch() {
+        let w = sgemm_workloads(10, 1, GemmShape::SQUARE_256);
+        let r = run(&cfg(Policy::SpaceTime { max_batch: 4 }), &w);
+        // 10 problems in chunks of 4 → 3 launches (4+4+2).
+        assert_eq!(r.kernel_launches, 3);
+        assert_eq!(r.fused_problems, 10);
+    }
+
+    #[test]
+    fn mps_anomaly_creates_straggler_gap() {
+        let w = sgemm_workloads(9, 30, GemmShape::RESNET18_CONV2_2);
+        let r = run(&cfg(Policy::SpaceMuxMps { anomaly_seed: 11 }), &w);
+        assert!(
+            r.straggler_gap() > 0.02,
+            "MPS run should show a visible straggler gap, got {}",
+            r.straggler_gap()
+        );
+        // Explicit streams have no anomaly; gap should be (near) zero.
+        let r2 = run(&cfg(Policy::SpaceMuxStreams), &w);
+        assert!(r2.straggler_gap() < r.straggler_gap());
+    }
+
+    #[test]
+    fn flops_conserved_across_policies() {
+        let w = sgemm_workloads(5, 7, GemmShape::SQUARE_256);
+        let expected: f64 = w.iter().map(|x| x.total_flops()).sum();
+        for policy in [
+            Policy::Exclusive,
+            Policy::TimeMux,
+            Policy::SpaceMuxMps { anomaly_seed: 5 },
+            Policy::SpaceMuxStreams,
+            Policy::SpaceTime { max_batch: 8 },
+        ] {
+            let r = run(&cfg(policy), &w);
+            assert!(
+                (r.total_flops() - expected).abs() < 1e-3,
+                "FLOPs must be conserved"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_capture_respects_flag() {
+        let w = sgemm_workloads(2, 2, GemmShape::SQUARE_256);
+        let with = run(&cfg(Policy::TimeMux).with_trace(), &w);
+        let without = run(&cfg(Policy::TimeMux), &w);
+        assert!(with.trace.launches() > 0);
+        assert_eq!(without.trace.launches(), 0);
+    }
+
+    #[test]
+    fn empty_and_zero_iteration_workloads() {
+        let w = vec![
+            TenantWorkload::new(vec![KernelDesc::sgemm(0, GemmShape::SQUARE_256)], 0),
+            TenantWorkload::new(vec![], 3),
+            TenantWorkload::new(vec![KernelDesc::sgemm(2, GemmShape::SQUARE_256)], 2),
+        ];
+        for policy in [
+            Policy::Exclusive,
+            Policy::TimeMux,
+            Policy::SpaceMuxMps { anomaly_seed: 1 },
+            Policy::SpaceMuxStreams,
+            Policy::SpaceTime { max_batch: 8 },
+        ] {
+            let r = run(&cfg(policy.clone()), &w);
+            assert_eq!(r.total_completed(), 2, "{policy:?}");
+            assert_eq!(r.tenants[0].completed, 0);
+            assert_eq!(r.tenants[1].completed, 0);
+            assert_eq!(r.tenants[2].completed, 2);
+        }
+    }
+
+    #[test]
+    fn multi_layer_inference_latency_spans_all_layers() {
+        // A 3-kernel inference must have latency >= sum of its own kernels.
+        let kernels: Vec<KernelDesc> = (0..3)
+            .map(|_| KernelDesc::sgemm(0, GemmShape::SQUARE_256))
+            .collect();
+        let w = vec![TenantWorkload::new(kernels.clone(), 4)];
+        let spec = DeviceSpec::v100();
+        let per_kernel: f64 = kernels
+            .iter()
+            .map(|k| kernel_service_time(&spec, k, &CostCtx::exclusive(&spec)))
+            .sum();
+        let r = run(&cfg(Policy::SpaceMuxStreams), &w);
+        for &l in &r.tenants[0].latencies {
+            assert!(l >= per_kernel * 0.99, "latency {l} < service {per_kernel}");
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Kernel descriptors: the unit of work the simulator schedules.
+//!
+//! A kernel is characterized by its FLOP count, HBM traffic, and CTA
+//! (threadblock) count — everything the roofline cost model in
+//! [`crate::gpusim::cost`] needs. GEMM kernels additionally carry their
+//! problem shape so the space-time batcher can merge same-shape work.
+
+/// Identifies a tenant (a deployed model instance) inside the simulator.
+pub type TenantId = usize;
+
+/// An SGEMM problem shape: C[M,N] += A[M,K] · B[K,N], fp32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+}
+
+impl GemmShape {
+    pub const fn new(m: u32, n: u32, k: u32) -> Self {
+        Self { m, n, k }
+    }
+
+    /// The paper's three Table 1 shapes.
+    pub const RNN_MATVEC: GemmShape = GemmShape::new(512, 1, 512);
+    pub const RESNET18_CONV2_2: GemmShape = GemmShape::new(256, 128, 1152);
+    pub const SQUARE_256: GemmShape = GemmShape::new(256, 256, 256);
+
+    /// Multiply-accumulate FLOPs (2·M·N·K).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Minimum HBM traffic in bytes (read A, B; write C), fp32.
+    pub fn min_bytes(&self) -> f64 {
+        4.0 * (self.m as f64 * self.k as f64
+            + self.k as f64 * self.n as f64
+            + self.m as f64 * self.n as f64)
+    }
+
+    /// Tile selection heuristic mirroring cuBLAS behaviour qualitatively:
+    /// large tiles for large outputs, split-K parallelism when the output is
+    /// small but K is deep, narrow tiles for matrix-vector shapes.
+    /// Returns (tile_m, tile_n, split_k).
+    pub fn tiling(&self) -> (u32, u32, u32) {
+        if self.n <= 4 {
+            // GEMV-like: one CTA per 64 rows, no N tiling.
+            return (64, self.n.max(1), 1);
+        }
+        let tm = if self.m >= 128 { 128 } else { 64.min(self.m.next_power_of_two()) };
+        let tn = if self.n >= 128 { 64 } else { 32.min(self.n.next_power_of_two()) };
+        // Split-K: aim for at least 32 CTAs so a lone kernel can spread over
+        // a meaningful fraction of the machine (cuBLAS splitK heuristic).
+        let base_ctas = self.m.div_ceil(tm) * self.n.div_ceil(tn);
+        let split_k = if base_ctas < 32 && self.k >= 256 {
+            (32 / base_ctas).clamp(1, 8)
+        } else {
+            1
+        };
+        (tm, tn, split_k)
+    }
+
+    /// CTA count under the tiling heuristic.
+    pub fn ctas(&self) -> u32 {
+        let (tm, tn, split_k) = self.tiling();
+        self.m.div_ceil(tm) * self.n.div_ceil(tn) * split_k
+    }
+
+    /// Actual HBM traffic under the tiling (tiles re-read panels of A and B
+    /// once per opposing tile; split-K adds a partial-sum reduction pass).
+    pub fn tiled_bytes(&self) -> f64 {
+        let (tm, tn, split_k) = self.tiling();
+        let m = self.m as f64;
+        let n = self.n as f64;
+        let k = self.k as f64;
+        let n_tiles = (self.n.div_ceil(tn)) as f64;
+        let m_tiles = (self.m.div_ceil(tm)) as f64;
+        let a_traffic = m * k * n_tiles;
+        let b_traffic = k * n * m_tiles;
+        let c_traffic = m * n * if split_k > 1 { 2.0 * split_k as f64 } else { 1.0 };
+        4.0 * (a_traffic + b_traffic + c_traffic)
+    }
+
+    /// Shape-class key used by the dynamic batcher: problems with identical
+    /// (M, N, K) may be merged into one batched super-kernel (the
+    /// `cublasSgemmBatched` constraint; variable-size batching is emulated by
+    /// bucketing + padding at the coordinator level).
+    pub fn class_key(&self) -> (u32, u32, u32) {
+        (self.m, self.n, self.k)
+    }
+}
+
+/// A single schedulable kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    /// Human-readable label (layer name or "sgemm MxNxK").
+    pub name: String,
+    pub tenant: TenantId,
+    pub flops: f64,
+    /// HBM bytes moved.
+    pub bytes: f64,
+    /// Threadblock count.
+    pub ctas: u32,
+    /// GEMM shape when this kernel is a (batchable) matrix multiply.
+    pub shape: Option<GemmShape>,
+    /// Problems already fused inside this kernel (1 for a plain kernel,
+    /// R for a super-kernel formed by the space-time batcher).
+    pub fused: u32,
+}
+
+impl KernelDesc {
+    /// A plain SGEMM kernel for one tenant.
+    pub fn sgemm(tenant: TenantId, shape: GemmShape) -> Self {
+        Self {
+            name: format!("sgemm {}x{}x{}", shape.m, shape.n, shape.k),
+            tenant,
+            flops: shape.flops(),
+            bytes: shape.tiled_bytes(),
+            ctas: shape.ctas(),
+            shape: Some(shape),
+            fused: 1,
+        }
+    }
+
+    /// A non-GEMM kernel (elementwise, pooling, normalization...).
+    pub fn other(tenant: TenantId, name: impl Into<String>, flops: f64, bytes: f64, ctas: u32) -> Self {
+        Self {
+            name: name.into(),
+            tenant,
+            flops,
+            bytes,
+            ctas: ctas.max(1),
+            shape: None,
+            fused: 1,
+        }
+    }
+
+    /// Merge `R` same-shape GEMM kernels into one batched super-kernel.
+    /// Panics if shapes differ (the batcher guarantees shape-class purity —
+    /// enforced again here as a defense-in-depth invariant).
+    pub fn superkernel(kernels: &[KernelDesc]) -> Self {
+        assert!(!kernels.is_empty(), "superkernel of zero kernels");
+        let shape = kernels[0]
+            .shape
+            .expect("superkernel requires GEMM kernels");
+        for k in kernels {
+            assert_eq!(
+                k.shape,
+                Some(shape),
+                "superkernel requires identical shapes (batcher invariant)"
+            );
+        }
+        let r: u32 = kernels.iter().map(|k| k.fused).sum();
+        Self {
+            name: format!("sgemm_batched R={r} {}x{}x{}", shape.m, shape.n, shape.k),
+            tenant: usize::MAX, // belongs to no single tenant
+            flops: kernels.iter().map(|k| k.flops).sum(),
+            bytes: kernels.iter().map(|k| k.bytes).sum(),
+            ctas: kernels.iter().map(|k| k.ctas).sum(),
+            shape: Some(shape),
+            fused: r,
+        }
+    }
+
+    /// Arithmetic intensity (FLOP per byte).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shapes_flops() {
+        assert_eq!(GemmShape::RNN_MATVEC.flops(), 2.0 * 512.0 * 512.0);
+        assert_eq!(
+            GemmShape::RESNET18_CONV2_2.flops(),
+            2.0 * 256.0 * 128.0 * 1152.0
+        );
+        assert_eq!(GemmShape::SQUARE_256.flops(), 2.0 * 256.0f64.powi(3));
+    }
+
+    #[test]
+    fn matvec_uses_gemv_tiling() {
+        let (tm, tn, sk) = GemmShape::RNN_MATVEC.tiling();
+        assert_eq!((tm, tn, sk), (64, 1, 1));
+        assert_eq!(GemmShape::RNN_MATVEC.ctas(), 8);
+    }
+
+    #[test]
+    fn conv_shape_gets_split_k() {
+        let shape = GemmShape::RESNET18_CONV2_2;
+        let (_, _, sk) = shape.tiling();
+        assert!(sk > 1, "deep-K small-output shape should split K");
+        assert!(shape.ctas() >= 32, "split-K should give >= 32 CTAs");
+    }
+
+    #[test]
+    fn tiled_bytes_at_least_min_bytes() {
+        for shape in [
+            GemmShape::RNN_MATVEC,
+            GemmShape::RESNET18_CONV2_2,
+            GemmShape::SQUARE_256,
+            GemmShape::new(1024, 1024, 1024),
+        ] {
+            assert!(
+                shape.tiled_bytes() >= shape.min_bytes() * 0.99,
+                "tiling can only add traffic: {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn superkernel_sums_work() {
+        let a = KernelDesc::sgemm(0, GemmShape::SQUARE_256);
+        let b = KernelDesc::sgemm(1, GemmShape::SQUARE_256);
+        let s = KernelDesc::superkernel(&[a.clone(), b.clone()]);
+        assert_eq!(s.fused, 2);
+        assert_eq!(s.flops, a.flops + b.flops);
+        assert_eq!(s.ctas, a.ctas + b.ctas);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical shapes")]
+    fn superkernel_rejects_mixed_shapes() {
+        let a = KernelDesc::sgemm(0, GemmShape::SQUARE_256);
+        let b = KernelDesc::sgemm(1, GemmShape::RNN_MATVEC);
+        let _ = KernelDesc::superkernel(&[a, b]);
+    }
+
+    #[test]
+    fn superkernel_of_superkernels_accumulates_fused() {
+        let a = KernelDesc::sgemm(0, GemmShape::SQUARE_256);
+        let b = KernelDesc::sgemm(1, GemmShape::SQUARE_256);
+        let s1 = KernelDesc::superkernel(&[a, b]);
+        let c = KernelDesc::sgemm(2, GemmShape::SQUARE_256);
+        let s2 = KernelDesc::superkernel(&[s1, c]);
+        assert_eq!(s2.fused, 3);
+    }
+
+    #[test]
+    fn intensity_is_flops_over_bytes() {
+        let k = KernelDesc::other(0, "relu", 100.0, 400.0, 1);
+        assert_eq!(k.intensity(), 0.25);
+    }
+}

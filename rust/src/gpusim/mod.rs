@@ -1,0 +1,24 @@
+//! V100-class GPU simulator — the substrate substituting for the paper's AWS
+//! p3 testbed (DESIGN.md §1, §6).
+//!
+//! * [`device`] — device specifications (V100, CPU baseline) and the
+//!   calibrated efficiency curves.
+//! * [`kernel`] — kernel descriptors and GEMM shape/tiling math.
+//! * [`cost`] — the roofline cost model.
+//! * [`engine`] — the discrete-event executor for each multiplexing policy.
+//! * [`mps`] — the MPS straggler-anomaly model (paper Figure 4).
+//! * [`memory`] — device memory accounting (paper Figure 5) + allocator.
+//! * [`trace`] — schedule trace capture and Gantt rendering (Figure 6).
+
+pub mod cost;
+pub mod device;
+pub mod engine;
+pub mod kernel;
+pub mod memory;
+pub mod mps;
+pub mod trace;
+
+pub use device::DeviceSpec;
+pub use engine::{run, Policy, SimConfig, SimReport, TenantWorkload};
+pub use kernel::{GemmShape, KernelDesc, TenantId};
+pub use trace::{Trace, TraceEvent};

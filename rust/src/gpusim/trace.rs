@@ -1,0 +1,207 @@
+//! Schedule trace capture and rendering (paper Figure 6).
+//!
+//! Every simulated kernel execution appends a [`TraceEvent`]; the renderer
+//! draws an ASCII Gantt chart of device occupancy per lane (stream/context),
+//! which is the reproduction of the paper's Figure 6 illustration.
+
+use crate::gpusim::kernel::TenantId;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Lane: stream id / context id — one row in the Gantt chart.
+    pub lane: usize,
+    pub tenant: TenantId,
+    pub label: String,
+    /// SMs occupied during execution.
+    pub sms: f64,
+    /// Problems fused into this launch (R for a super-kernel).
+    pub fused: u32,
+}
+
+/// An append-only trace. Capture can be disabled for long simulations.
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub enabled: bool,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            events: Vec::new(),
+            enabled,
+        }
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.enabled {
+            debug_assert!(ev.t_end >= ev.t_start, "trace event must not be reversed");
+            self.events.push(ev);
+        }
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.events.iter().map(|e| e.t_end).fold(0.0, f64::max)
+    }
+
+    /// Number of kernel launches recorded.
+    pub fn launches(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Render an ASCII Gantt chart with `width` columns covering the span.
+    /// Each lane is one row; cells show the tenant id (or '#' for fused
+    /// super-kernels spanning many tenants).
+    pub fn render_gantt(&self, width: usize) -> String {
+        if self.events.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let span = self.makespan();
+        if span <= 0.0 {
+            return String::from("(zero-length trace)\n");
+        }
+        let nlanes = self.events.iter().map(|e| e.lane).max().unwrap() + 1;
+        let mut rows = vec![vec![b'.'; width]; nlanes];
+        for ev in &self.events {
+            let c0 = ((ev.t_start / span) * width as f64).floor() as usize;
+            let c1 = (((ev.t_end / span) * width as f64).ceil() as usize).min(width);
+            let glyph = if ev.fused > 1 {
+                b'#'
+            } else {
+                // Tenant id modulo 10 for readability.
+                b'0' + (ev.tenant % 10) as u8
+            };
+            for c in c0..c1.max(c0 + 1).min(width) {
+                rows[ev.lane][c] = glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "time → ({} total, {} launches)\n",
+            crate::util::bench::fmt_secs(span),
+            self.events.len()
+        ));
+        for (i, row) in rows.iter().enumerate() {
+            out.push_str(&format!("lane {i:>2} |"));
+            out.push_str(std::str::from_utf8(row).unwrap());
+            out.push_str("|\n");
+        }
+        out
+    }
+
+    /// CSV dump (t_start, t_end, lane, tenant, label, sms, fused).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_start,t_end,lane,tenant,label,sms,fused\n");
+        for e in &self.events {
+            out.push_str(&format!(
+                "{:.9},{:.9},{},{},{},{:.1},{}\n",
+                e.t_start,
+                e.t_end,
+                e.lane,
+                e.tenant,
+                e.label.replace(',', ";"),
+                e.sms,
+                e.fused
+            ));
+        }
+        out
+    }
+
+    /// Device occupancy integral: Σ (duration · sms) / (makespan · total_sms).
+    pub fn occupancy(&self, total_sms: f64) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .events
+            .iter()
+            .map(|e| (e.t_end - e.t_start) * e.sms)
+            .sum();
+        busy / (span * total_sms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t0: f64, t1: f64, lane: usize, tenant: usize, fused: u32) -> TraceEvent {
+        TraceEvent {
+            t_start: t0,
+            t_end: t1,
+            lane,
+            tenant,
+            label: "k".into(),
+            sms: 80.0,
+            fused,
+        }
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new(false);
+        t.record(ev(0.0, 1.0, 0, 0, 1));
+        assert_eq!(t.launches(), 0);
+    }
+
+    #[test]
+    fn makespan_is_max_end() {
+        let mut t = Trace::new(true);
+        t.record(ev(0.0, 1.0, 0, 0, 1));
+        t.record(ev(0.5, 3.0, 1, 1, 1));
+        assert_eq!(t.makespan(), 3.0);
+    }
+
+    #[test]
+    fn gantt_renders_lanes_and_fused_glyphs() {
+        let mut t = Trace::new(true);
+        t.record(ev(0.0, 1.0, 0, 3, 1));
+        t.record(ev(1.0, 2.0, 1, 7, 4));
+        let g = t.render_gantt(40);
+        assert!(g.contains("lane  0"));
+        assert!(g.contains("lane  1"));
+        assert!(g.contains('3'));
+        assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn occupancy_full_device() {
+        let mut t = Trace::new(true);
+        t.record(ev(0.0, 2.0, 0, 0, 1)); // 80 SMs for whole span
+        assert!((t.occupancy(80.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_half_device() {
+        let mut t = Trace::new(true);
+        t.record(TraceEvent {
+            t_start: 0.0,
+            t_end: 2.0,
+            lane: 0,
+            tenant: 0,
+            label: "k".into(),
+            sms: 40.0,
+            fused: 1,
+        });
+        assert!((t.occupancy(80.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Trace::new(true);
+        t.record(ev(0.0, 1.0, 0, 0, 1));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("t_start,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn empty_trace_renders_placeholder() {
+        let t = Trace::new(true);
+        assert!(t.render_gantt(10).contains("empty"));
+        assert_eq!(t.occupancy(80.0), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! # stgpu — Dynamic Space-Time Scheduling for GPU Inference
+//!
+//! A production-shaped reproduction of *Dynamic Space-Time Scheduling for
+//! GPU Inference* (Jain et al., 2018): a multi-tenant inference coordinator
+//! that merges same-shape GEMM kernels from disjoint model graphs into
+//! batched *super-kernels*, trading off spatial and temporal multiplexing to
+//! keep the GPU full while preserving latency predictability and isolation.
+//!
+//! Three layers (see DESIGN.md):
+//! 1. **L1** — a Pallas batched-GEMM super-kernel (`python/compile/kernels`),
+//!    AOT-lowered to HLO text at build time.
+//! 2. **L2** — JAX compute graphs wrapping the kernel
+//!    (`python/compile/model.py`).
+//! 3. **L3** — this crate: the rust coordinator (scheduling, batching, SLO
+//!    monitoring), the PJRT runtime that executes the AOT artifacts, and the
+//!    V100 simulator substrate that stands in for the paper's testbed.
+
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

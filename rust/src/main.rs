@@ -1,0 +1,327 @@
+//! `stgpu` — the leader binary: serve, simulate, inspect.
+//!
+//! Subcommands:
+//! * `serve    --config <toml> [--duration-s N] [--status ADDR]`
+//!   Start the coordinator + threaded frontend, drive closed-loop synthetic
+//!   clients (paper §2: saturated queues), print the metrics snapshot.
+//! * `simulate --policy <p> --tenants N [--shape MxNxK] [--iters N]`
+//!   Run the V100 discrete-event simulator under a multiplexing policy.
+//! * `artifacts [--dir artifacts]`
+//!   List the AOT artifact manifest the runtime would load.
+//! * `trace    [--tenants N] [--policy <p>]`
+//!   Render a Figure-6-style schedule Gantt from the simulator.
+//!
+//! The arg parser is hand-rolled: `clap` is not vendored offline
+//! (DESIGN.md §7).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use stgpu::config::{SchedulerKind, ServerConfig};
+use stgpu::coordinator::Coordinator;
+use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::runtime::Manifest;
+use stgpu::server::{ServeOpts, Server, StatusEndpoint};
+use stgpu::util::bench::{fmt_flops, fmt_secs, Table};
+use stgpu::util::prng::Rng;
+use stgpu::workload::sgemm_tenants;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse(&args);
+    let code = match cmd.as_deref() {
+        Some("serve") => cmd_serve(&flags),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("artifacts") => cmd_artifacts(&flags),
+        Some("trace") => cmd_trace(&flags),
+        _ => {
+            eprintln!("usage: stgpu <serve|simulate|artifacts|trace> [--flag value]...");
+            eprintln!("{}", include_str!("main_help.txt"));
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// `--flag value` pairs after the subcommand; bare `--flag` maps to "true".
+fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+    let mut flags = HashMap::new();
+    let cmd = args.first().cloned();
+    let mut i = 1;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            eprintln!("ignoring stray argument {:?}", args[i]);
+        }
+        i += 1;
+    }
+    (cmd, flags)
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, name: &str, default: &'a str) -> &'a str {
+    flags.get(name).map(String::as_str).unwrap_or(default)
+}
+
+fn parse_policy(s: &str, max_batch: u32) -> Result<Policy, String> {
+    Ok(match SchedulerKind::parse(s)? {
+        SchedulerKind::Exclusive => Policy::Exclusive,
+        SchedulerKind::TimeMux => Policy::TimeMux,
+        SchedulerKind::SpaceMux => Policy::SpaceMuxMps { anomaly_seed: 42 },
+        SchedulerKind::SpaceTime => Policy::SpaceTime { max_batch },
+    })
+}
+
+fn parse_shape(s: &str) -> Result<GemmShape, String> {
+    let parts: Vec<u32> = s
+        .split('x')
+        .map(|p| p.parse().map_err(|_| format!("bad shape {s:?}")))
+        .collect::<Result<_, _>>()?;
+    if parts.len() != 3 {
+        return Err(format!("shape must be MxNxK, got {s:?}"));
+    }
+    Ok(GemmShape::new(parts[0], parts[1], parts[2]))
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let cfg_path = flag(flags, "config", "");
+    let cfg = if cfg_path.is_empty() {
+        eprintln!("serve: no --config given; using 4 built-in sgemm tenants");
+        let mut c = ServerConfig::default();
+        for i in 0..4 {
+            c.tenants.push(stgpu::config::TenantConfig {
+                name: format!("tenant{i}"),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 100.0,
+                weight_seed: i as u64,
+            });
+        }
+        c
+    } else {
+        match ServerConfig::load(std::path::Path::new(cfg_path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("serve: config error: {e}");
+                return 2;
+            }
+        }
+    };
+    let duration_s: f64 = flag(flags, "duration-s", "5").parse().unwrap_or(5.0);
+    let n_tenants = cfg.tenants.len();
+    if n_tenants == 0 {
+        eprintln!("serve: config has no tenants");
+        return 2;
+    }
+
+    let coord = match Coordinator::new(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            return 1;
+        }
+    };
+    let warmed = coord.warmup().unwrap_or(0);
+    eprintln!(
+        "serve: scheduler={} tenants={} warmed={} executables, platform={}",
+        coord.scheduler_label(),
+        n_tenants,
+        warmed,
+        coord.engine().platform()
+    );
+
+    let server = Server::start(
+        coord,
+        ServeOpts {
+            batch_timeout: Duration::from_micros(cfg.batch_timeout_us),
+            ..Default::default()
+        },
+    );
+    let status = flags.get("status").map(|addr| {
+        let ep = StatusEndpoint::start(addr.as_str(), server.handle())
+            .expect("bind status endpoint");
+        eprintln!("serve: status endpoint on {}", ep.addr());
+        ep
+    });
+
+    // Closed-loop clients: one thread per tenant, resubmit on completion
+    // (saturated queues — paper §2).
+    let stop_at = Instant::now() + Duration::from_secs_f64(duration_s);
+    let mut clients = Vec::new();
+    for t in 0..n_tenants {
+        let h = server.handle();
+        let model = cfg.tenants[t].model.clone();
+        clients.push(std::thread::spawn(move || {
+            let spec = stgpu::coordinator::ModelSpec::parse(&model).expect("model");
+            let mut rng = Rng::new(0xC11E + t as u64);
+            let mut done = 0u64;
+            while Instant::now() < stop_at {
+                let payload = spec
+                    .payload_shapes()
+                    .iter()
+                    .map(|s| stgpu::runtime::HostTensor::random(s, &mut rng))
+                    .collect();
+                match h.submit_blocking(t, payload) {
+                    Ok(_) => done += 1,
+                    Err(stgpu::coordinator::Reject::TenantEvicted) => break,
+                    Err(_) => std::thread::sleep(Duration::from_millis(1)),
+                }
+            }
+            done
+        }));
+    }
+    for c in clients {
+        let _ = c.join();
+    }
+    if let Some(ep) = status {
+        ep.stop();
+    }
+    let coord = server.shutdown();
+    let snap = coord.snapshot();
+
+    let mut table = Table::new(&["tenant", "completed", "p50", "p99", "mean", "rps"]);
+    for (name, t) in &snap.tenants {
+        table.row(&[
+            name.clone(),
+            t.completed.to_string(),
+            fmt_secs(t.latency_p50_ns as f64 / 1e9),
+            fmt_secs(t.latency_p99_ns as f64 / 1e9),
+            fmt_secs(t.latency_mean_ns / 1e9),
+            format!("{:.1}", t.completed as f64 / snap.wall_seconds),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "total: {} completed in {:.2}s ({:.1} req/s, {} throughput), {} superkernels, {} singleton kernels",
+        snap.total_completed(),
+        snap.wall_seconds,
+        snap.throughput_rps(),
+        fmt_flops(snap.throughput_flops()),
+        snap.superkernel_launches,
+        snap.kernel_launches,
+    );
+    if let Some(bs) = coord.batcher_stats() {
+        println!(
+            "batcher: {} launches, mean fused R = {:.2}, padding waste = {:.1}%",
+            bs.launches,
+            bs.mean_fused(),
+            bs.padding_waste() * 100.0
+        );
+    }
+    0
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    let tenants: usize = flag(flags, "tenants", "8").parse().unwrap_or(8);
+    let iters: u32 = flag(flags, "iters", "50").parse().unwrap_or(50);
+    let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
+    let shape = match parse_shape(flag(flags, "shape", "256x128x1152")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("simulate: {e}");
+            return 2;
+        }
+    };
+    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("simulate: {e}");
+            return 2;
+        }
+    };
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy);
+    let workloads = sgemm_tenants(tenants, iters, shape);
+    let report = gpusim::run(&cfg, &workloads);
+    println!(
+        "policy={} tenants={} shape={}x{}x{} iters={}",
+        cfg.policy.label(),
+        tenants,
+        shape.m,
+        shape.n,
+        shape.k,
+        iters
+    );
+    println!(
+        "makespan={} throughput={} mean_latency={} straggler_gap={:.1}% launches={} (super={}, fused_problems={})",
+        fmt_secs(report.makespan),
+        fmt_flops(report.throughput_flops()),
+        fmt_secs(report.mean_latency()),
+        report.straggler_gap() * 100.0,
+        report.kernel_launches,
+        report.superkernel_launches,
+        report.fused_problems,
+    );
+    0
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_artifacts(flags: &HashMap<String, String>) -> i32 {
+    let dir = flag(flags, "dir", "artifacts");
+    let m = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifacts: {e}");
+            return 1;
+        }
+    };
+    let mut table = Table::new(&["name", "kind", "impl", "r", "m", "n", "k", "flops"]);
+    for a in &m.artifacts {
+        let (mm, nn, kk) = a.mnk();
+        table.row(&[
+            a.name.clone(),
+            a.kind.clone(),
+            a.impl_.clone(),
+            a.r().to_string(),
+            mm.to_string(),
+            nn.to_string(),
+            kk.to_string(),
+            fmt_flops(a.flops()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("{} artifacts in {dir}", m.len());
+    0
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_trace(flags: &HashMap<String, String>) -> i32 {
+    let tenants: usize = flag(flags, "tenants", "4").parse().unwrap_or(4);
+    let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
+    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("trace: {e}");
+            return 2;
+        }
+    };
+    let shape = match parse_shape(flag(flags, "shape", "256x128x1152")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace: {e}");
+            return 2;
+        }
+    };
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy).with_trace();
+    let workloads = sgemm_tenants(tenants, 3, shape);
+    let report = gpusim::run(&cfg, &workloads);
+    println!("{}", report.trace.render_gantt(100));
+    println!(
+        "makespan={} launches={} occupancy={:.0}%",
+        fmt_secs(report.trace.makespan()),
+        report.trace.launches(),
+        report.trace.occupancy(DeviceSpec::v100().sms as f64) * 100.0
+    );
+    0
+}

@@ -1,0 +1,244 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, base-2 sub-bucketed).
+//!
+//! Values are recorded in nanoseconds as `u64`. Buckets are exponential with
+//! `SUB_BUCKETS` linear sub-buckets per octave, giving a bounded relative
+//! error of `1/SUB_BUCKETS` — sufficient for p50/p99 reporting while keeping
+//! recording allocation-free and O(1), which the coordinator hot path needs.
+
+/// Linear sub-buckets per power-of-two octave. 32 → ≤3.2 % relative error.
+const SUB_BUCKETS: u64 = 32;
+/// Number of octaves covered: 2^40 ns ≈ 18 minutes, far above any latency.
+const OCTAVES: usize = 40;
+const NBUCKETS: usize = OCTAVES * SUB_BUCKETS as usize;
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NBUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_index(value: u64) -> usize {
+        if value < SUB_BUCKETS {
+            return value as usize;
+        }
+        // Octave = position of the highest set bit above the sub-bucket base.
+        let octave = 63 - value.leading_zeros() as u64; // >= 5
+        let base_octave = SUB_BUCKETS.trailing_zeros() as u64; // 5 for 32
+        let oct = octave - base_octave; // >= 0
+        let shift = oct; // divide into SUB_BUCKETS linear slots
+        let sub = (value >> shift) - SUB_BUCKETS; // in [0, SUB_BUCKETS)
+        let idx = ((oct + 1) * SUB_BUCKETS + sub) as usize;
+        idx.min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of a bucket (inverse of `bucket_index`, approximate).
+    fn bucket_value(idx: usize) -> u64 {
+        let idx = idx as u64;
+        if idx < SUB_BUCKETS {
+            return idx;
+        }
+        let oct = idx / SUB_BUCKETS - 1;
+        let sub = idx % SUB_BUCKETS;
+        (SUB_BUCKETS + sub) << oct
+    }
+
+    #[inline]
+    pub fn record(&mut self, value_ns: u64) {
+        self.counts[Self::bucket_index(value_ns)] += 1;
+        self.total += 1;
+        self.sum += value_ns as u128;
+        self.min = self.min.min(value_ns);
+        self.max = self.max.max(value_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile (p in [0,100]) in nanoseconds.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // Clamp to observed extrema so tails stay exact-ish.
+                return Self::bucket_value(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.total)
+            .field("mean_ns", &self.mean_ns())
+            .field("p50_ns", &self.percentile_ns(50.0))
+            .field("p99_ns", &self.percentile_ns(99.0))
+            .field("max_ns", &self.max_ns())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile_ns(50.0), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn exact_for_small_values() {
+        let mut h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 31);
+        assert_eq!(h.count(), 32);
+    }
+
+    #[test]
+    fn bucket_index_monotone() {
+        let mut last = 0usize;
+        for v in (0..1_000_000u64).step_by(997) {
+            let idx = Histogram::bucket_index(v);
+            assert!(idx >= last, "bucket index must be monotone in value");
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn bucket_value_inverts_within_error() {
+        for v in [1u64, 31, 32, 33, 100, 1_000, 123_456, 10_000_000, 1 << 35] {
+            let idx = Histogram::bucket_index(v);
+            let lo = Histogram::bucket_value(idx);
+            let hi = Histogram::bucket_value(idx + 1);
+            assert!(lo <= v && v < hi.max(lo + 1), "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn percentile_relative_error_bounded() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(11);
+        let mut values: Vec<u64> = (0..50_000)
+            .map(|_| rng.gen_range_inclusive(100, 50_000_000))
+            .collect();
+        for &v in &values {
+            h.record(v);
+        }
+        values.sort_unstable();
+        for &p in &[50.0, 90.0, 99.0] {
+            let exact = values[((p / 100.0) * (values.len() - 1) as f64) as usize] as f64;
+            let approx = h.percentile_ns(p) as f64;
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.05, "p{p}: approx {approx} exact {exact} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        let mut rng = Rng::new(12);
+        for i in 0..10_000 {
+            let v = rng.gen_range_inclusive(1, 1_000_000);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.percentile_ns(50.0), both.percentile_ns(50.0));
+        assert_eq!(a.max_ns(), both.max_ns());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut h = Histogram::new();
+        h.record(123);
+        h.reset();
+        assert!(h.is_empty());
+        assert_eq!(h.max_ns(), 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: latency histograms, throughput counters and a registry that the
+//! server exposes and the bench harness snapshots.
+
+pub mod histogram;
+pub mod registry;
+
+pub use histogram::Histogram;
+pub use registry::{MetricsRegistry, Snapshot, TenantMetrics};

@@ -1,0 +1,314 @@
+//! Per-tenant and global metric registry.
+//!
+//! Shared between the server's worker threads (which record) and the
+//! frontend/bench harness (which snapshot). Recording takes a mutex per
+//! tenant; the hot path amortizes this by recording per *super-kernel batch*
+//! rather than per request where possible.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::histogram::Histogram;
+use crate::util::json::Json;
+
+/// Metrics owned by one tenant (one deployed model replica).
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    inner: Mutex<TenantInner>,
+    /// Requests completed (atomic so readers never block the hot path).
+    pub completed: AtomicU64,
+    /// Requests rejected at admission (queue full).
+    pub rejected: AtomicU64,
+    /// Times this tenant was evicted for straggling.
+    pub evictions: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct TenantInner {
+    /// End-to-end request latency (queue + service), ns.
+    latency: Histogram,
+    /// Service time only (kernel execution), ns.
+    service: Histogram,
+    /// FLOPs completed on behalf of this tenant.
+    flops: f64,
+}
+
+impl TenantMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_completion(&self, latency_ns: u64, service_ns: u64, flops: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.latency.record(latency_ns);
+        inner.service.record(service_ns);
+        inner.flops += flops;
+        drop(inner);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejection(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TenantSnapshot {
+        let inner = self.inner.lock().unwrap();
+        TenantSnapshot {
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            latency_p50_ns: inner.latency.percentile_ns(50.0),
+            latency_p99_ns: inner.latency.percentile_ns(99.0),
+            latency_mean_ns: inner.latency.mean_ns(),
+            latency_max_ns: inner.latency.max_ns(),
+            service_p50_ns: inner.service.percentile_ns(50.0),
+            service_mean_ns: inner.service.mean_ns(),
+            flops: inner.flops,
+        }
+    }
+}
+
+/// Immutable view of one tenant's metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub evictions: u64,
+    pub latency_p50_ns: u64,
+    pub latency_p99_ns: u64,
+    pub latency_mean_ns: f64,
+    pub latency_max_ns: u64,
+    pub service_p50_ns: u64,
+    pub service_mean_ns: f64,
+    pub flops: f64,
+}
+
+/// Whole-system snapshot: per-tenant plus aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub tenants: BTreeMap<String, TenantSnapshot>,
+    pub wall_seconds: f64,
+    /// Super-kernel launches issued by the space-time scheduler.
+    pub superkernel_launches: u64,
+    /// Total kernel launches (any scheduler).
+    pub kernel_launches: u64,
+    /// Super-kernel cache hits (compiled-executable reuse).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl Snapshot {
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.values().map(|t| t.completed).sum()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.tenants.values().map(|t| t.flops).sum()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_completed() as f64 / self.wall_seconds
+        }
+    }
+
+    pub fn throughput_flops(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_flops() / self.wall_seconds
+        }
+    }
+
+    /// Fastest-vs-slowest mean-latency gap across tenants — the paper's
+    /// Figure 4 predictability metric. Returns e.g. 0.25 for a 25 % gap.
+    pub fn straggler_gap(&self) -> f64 {
+        let means: Vec<f64> = self
+            .tenants
+            .values()
+            .filter(|t| t.completed > 0)
+            .map(|t| t.latency_mean_ns)
+            .collect();
+        if means.len() < 2 {
+            return 0.0;
+        }
+        let fastest = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let slowest = means.iter().cloned().fold(0.0, f64::max);
+        if fastest <= 0.0 {
+            0.0
+        } else {
+            slowest / fastest - 1.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let tenants = Json::Obj(
+            self.tenants
+                .iter()
+                .map(|(name, t)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("completed", Json::num(t.completed as f64)),
+                            ("rejected", Json::num(t.rejected as f64)),
+                            ("evictions", Json::num(t.evictions as f64)),
+                            ("latency_p50_ns", Json::num(t.latency_p50_ns as f64)),
+                            ("latency_p99_ns", Json::num(t.latency_p99_ns as f64)),
+                            ("latency_mean_ns", Json::num(t.latency_mean_ns)),
+                            ("flops", Json::num(t.flops)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("tenants", tenants),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+            ("throughput_flops", Json::num(self.throughput_flops())),
+            (
+                "superkernel_launches",
+                Json::num(self.superkernel_launches as f64),
+            ),
+            ("kernel_launches", Json::num(self.kernel_launches as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+        ])
+    }
+}
+
+/// Registry mapping tenant name → metrics, plus global counters.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    tenants: Mutex<BTreeMap<String, std::sync::Arc<TenantMetrics>>>,
+    pub superkernel_launches: AtomicU64,
+    pub kernel_launches: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the metrics handle for a tenant.
+    pub fn tenant(&self, name: &str) -> std::sync::Arc<TenantMetrics> {
+        let mut map = self.tenants.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(TenantMetrics::new()))
+            .clone()
+    }
+
+    pub fn record_superkernel_launch(&self) {
+        self.superkernel_launches.fetch_add(1, Ordering::Relaxed);
+        self.kernel_launches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_kernel_launch(&self) {
+        self.kernel_launches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_cache(&self, hit: bool) {
+        if hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self, wall_seconds: f64) -> Snapshot {
+        let map = self.tenants.lock().unwrap();
+        Snapshot {
+            tenants: map
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+            wall_seconds,
+            superkernel_launches: self.superkernel_launches.load(Ordering::Relaxed),
+            kernel_launches: self.kernel_launches.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_records_and_snapshots() {
+        let m = TenantMetrics::new();
+        m.record_completion(1_000_000, 400_000, 1e9);
+        m.record_completion(3_000_000, 500_000, 1e9);
+        m.record_rejection();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.rejected, 1);
+        assert!(s.latency_mean_ns > 1_000_000.0 && s.latency_mean_ns < 3_000_000.0);
+        assert_eq!(s.flops, 2e9);
+    }
+
+    #[test]
+    fn registry_reuses_tenant_handles() {
+        let r = MetricsRegistry::new();
+        let a = r.tenant("m0");
+        let b = r.tenant("m0");
+        a.record_completion(100, 50, 1.0);
+        assert_eq!(b.snapshot().completed, 1);
+    }
+
+    #[test]
+    fn snapshot_aggregates() {
+        let r = MetricsRegistry::new();
+        r.tenant("a").record_completion(1_000, 500, 100.0);
+        r.tenant("b").record_completion(2_000, 900, 300.0);
+        r.record_superkernel_launch();
+        r.record_cache(true);
+        r.record_cache(false);
+        let s = r.snapshot(2.0);
+        assert_eq!(s.total_completed(), 2);
+        assert_eq!(s.total_flops(), 400.0);
+        assert_eq!(s.throughput_rps(), 1.0);
+        assert_eq!(s.superkernel_launches, 1);
+        assert_eq!(s.kernel_launches, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+    }
+
+    #[test]
+    fn straggler_gap_computation() {
+        let r = MetricsRegistry::new();
+        // tenant a mean 1ms, tenant b mean 1.25ms → 25 % gap.
+        r.tenant("a").record_completion(1_000_000, 1, 1.0);
+        r.tenant("b").record_completion(1_250_000, 1, 1.0);
+        let s = r.snapshot(1.0);
+        assert!((s.straggler_gap() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_gap_single_tenant_is_zero() {
+        let r = MetricsRegistry::new();
+        r.tenant("only").record_completion(1_000, 1, 1.0);
+        assert_eq!(r.snapshot(1.0).straggler_gap(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let r = MetricsRegistry::new();
+        r.tenant("a").record_completion(1_000, 500, 100.0);
+        let j = r.snapshot(1.0).to_json();
+        let text = j.to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert!(back.get("tenants").is_some());
+        assert_eq!(back.get("throughput_rps").unwrap().as_f64(), Some(1.0));
+    }
+}

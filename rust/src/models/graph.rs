@@ -1,0 +1,320 @@
+//! Model graphs: an ordered layer list with channel/spatial bookkeeping,
+//! plus lowering of a whole forward pass to a kernel stream.
+
+use crate::gpusim::kernel::{KernelDesc, TenantId};
+use crate::gpusim::memory::ModelFootprint;
+use crate::models::layer::{Layer, LayerOp};
+
+/// A sequential model graph. Residual/dense skip connections contribute
+/// negligible FLOPs and are folded into the epilogues of their join layers,
+/// so a sequence is sufficient for cost and scheduling purposes (the
+/// *dependency* structure that matters to the scheduler — layer i before
+/// layer i+1 — is preserved).
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    /// Publication year — used by the Figure 1 latency-trend bench.
+    pub year: u32,
+    pub layers: Vec<Layer>,
+    /// Channels flowing *into* each layer (for pooling byte accounting).
+    channels_in: Vec<u32>,
+}
+
+/// Incremental builder tracking spatial size and channel count.
+pub struct GraphBuilder {
+    name: String,
+    year: u32,
+    h: u32,
+    w: u32,
+    c: u32,
+    layers: Vec<Layer>,
+    channels_in: Vec<u32>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>, year: u32, input_hw: u32, input_c: u32) -> Self {
+        Self {
+            name: name.into(),
+            year,
+            h: input_hw,
+            w: input_hw,
+            c: input_c,
+            layers: Vec::new(),
+            channels_in: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, name: String, op: LayerOp) -> &mut Self {
+        let layer = Layer {
+            name,
+            op,
+            h_in: self.h,
+            w_in: self.w,
+        };
+        let (ho, wo) = layer.out_hw();
+        self.channels_in.push(self.c);
+        let out_c = layer.out_channels();
+        if out_c > 0 {
+            self.c = out_c;
+        }
+        self.h = ho;
+        self.w = wo;
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn conv(&mut self, name: &str, cout: u32, kernel: u32, stride: u32) -> &mut Self {
+        self.conv_grouped(name, cout, kernel, stride, 1)
+    }
+
+    /// Grouped convolution (ResNeXt/SENet-154): `groups` independent
+    /// channel-slice GEMMs; FLOPs and params shrink by the group count.
+    pub fn conv_grouped(
+        &mut self,
+        name: &str,
+        cout: u32,
+        kernel: u32,
+        stride: u32,
+        groups: u32,
+    ) -> &mut Self {
+        let cin = self.c;
+        debug_assert!(groups >= 1 && cin % groups == 0 && cout % groups == 0);
+        self.push(
+            name.to_string(),
+            LayerOp::Conv {
+                cin,
+                cout,
+                kernel,
+                stride,
+                groups,
+            },
+        )
+    }
+
+    pub fn dwconv(&mut self, name: &str, kernel: u32, stride: u32) -> &mut Self {
+        let channels = self.c;
+        self.push(
+            name.to_string(),
+            LayerOp::DwConv {
+                channels,
+                kernel,
+                stride,
+            },
+        )
+    }
+
+    /// Padded ("same") pooling — ResNet-style.
+    pub fn pool(&mut self, name: &str, kernel: u32, stride: u32) -> &mut Self {
+        self.push(
+            name.to_string(),
+            LayerOp::Pool {
+                kernel,
+                stride,
+                valid: false,
+            },
+        )
+    }
+
+    /// Unpadded ("valid") pooling — AlexNet/VGG-style.
+    pub fn pool_valid(&mut self, name: &str, kernel: u32, stride: u32) -> &mut Self {
+        self.push(
+            name.to_string(),
+            LayerOp::Pool {
+                kernel,
+                stride,
+                valid: true,
+            },
+        )
+    }
+
+    /// Global average pool: collapses spatial dims to 1×1.
+    pub fn global_pool(&mut self, name: &str) -> &mut Self {
+        let k = self.h.max(1);
+        self.push(
+            name.to_string(),
+            LayerOp::Pool {
+                kernel: k,
+                stride: k,
+                valid: false,
+            },
+        )
+    }
+
+    /// Override the tracked channel count — models concatenation joins
+    /// (DenseNet) whose contributing layers are bookkept separately.
+    pub fn set_channels(&mut self, c: u32) -> &mut Self {
+        self.c = c;
+        self
+    }
+
+    pub fn dense(&mut self, name: &str, d_out: u32) -> &mut Self {
+        let d_in = if self.h * self.w > 1 {
+            self.c * self.h * self.w
+        } else {
+            self.c
+        };
+        self.h = 1;
+        self.w = 1;
+        self.push(name.to_string(), LayerOp::Dense { d_in, d_out })
+    }
+
+    pub fn se_gate(&mut self, name: &str, reduction: u32) -> &mut Self {
+        let channels = self.c;
+        self.push(
+            name.to_string(),
+            LayerOp::SeGate {
+                channels,
+                reduction,
+            },
+        )
+    }
+
+    pub fn rnn_step(&mut self, name: &str, hidden: u32) -> &mut Self {
+        self.push(name.to_string(), LayerOp::RnnStep { hidden })
+    }
+
+    pub fn build(&mut self) -> ModelGraph {
+        ModelGraph {
+            name: std::mem::take(&mut self.name),
+            year: self.year,
+            layers: std::mem::take(&mut self.layers),
+            channels_in: std::mem::take(&mut self.channels_in),
+        }
+    }
+}
+
+impl ModelGraph {
+    /// Total trainable parameters.
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Weight bytes (fp32).
+    pub fn weight_bytes(&self) -> u64 {
+        self.params() * 4
+    }
+
+    /// FLOPs of one forward pass at `batch`.
+    pub fn flops(&self, batch: u32) -> f64 {
+        self.layers.iter().map(|l| l.flops(batch)).sum()
+    }
+
+    /// Peak activation bytes at `batch` — approximated as twice the largest
+    /// inter-layer tensor (double-buffered producer/consumer).
+    pub fn activation_bytes(&self, batch: u32) -> u64 {
+        let mut peak: u64 = 0;
+        let mut h;
+        let mut w;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (ho, wo) = layer.out_hw();
+            h = ho;
+            w = wo;
+            let c = if layer.out_channels() > 0 {
+                layer.out_channels()
+            } else {
+                self.channels_in[i]
+            };
+            let bytes = 4u64 * batch as u64 * c as u64 * (h as u64) * (w as u64);
+            peak = peak.max(bytes);
+        }
+        peak * 2
+    }
+
+    /// Memory footprint used by the Figure 5 memory-wall model.
+    pub fn footprint(&self, batch: u32) -> ModelFootprint {
+        ModelFootprint {
+            weights: self.weight_bytes(),
+            activations: self.activation_bytes(batch),
+        }
+    }
+
+    /// Lower the whole forward pass to an ordered kernel stream for `tenant`.
+    pub fn lower(&self, tenant: TenantId, batch: u32) -> Vec<KernelDesc> {
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            out.extend(layer.lower(tenant, batch, self.channels_in[i]));
+        }
+        out
+    }
+
+    /// Number of GEMM-lowered kernels at `batch` (batchability measure).
+    pub fn gemm_kernel_count(&self, batch: u32) -> usize {
+        self.lower(0, batch)
+            .iter()
+            .filter(|k| k.shape.is_some())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelGraph {
+        GraphBuilder::new("tiny", 2020, 32, 3)
+            .conv("c1", 16, 3, 1)
+            .pool("p1", 2, 2)
+            .conv("c2", 32, 3, 1)
+            .global_pool("gap")
+            .dense("fc", 10)
+            .build()
+    }
+
+    #[test]
+    fn builder_tracks_shapes() {
+        let g = tiny();
+        assert_eq!(g.layers.len(), 5);
+        assert_eq!(g.layers[0].h_in, 32);
+        assert_eq!(g.layers[2].h_in, 16); // after 2×2 pool
+        // fc input: 32 channels after global pool.
+        match g.layers[4].op {
+            LayerOp::Dense { d_in, d_out } => {
+                assert_eq!(d_in, 32);
+                assert_eq!(d_out, 10);
+            }
+            _ => panic!("expected dense"),
+        }
+    }
+
+    #[test]
+    fn params_sum_layers() {
+        let g = tiny();
+        let expect: u64 = (3 * 16 * 9 + 16) + (16 * 32 * 9 + 32) + (32 * 10 + 10);
+        assert_eq!(g.params(), expect);
+        assert_eq!(g.weight_bytes(), expect * 4);
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_batch() {
+        let g = tiny();
+        assert!((g.flops(4) - 4.0 * g.flops(1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lowering_preserves_layer_order() {
+        let g = tiny();
+        let kernels = g.lower(0, 1);
+        assert!(kernels.len() >= g.layers.len());
+        // conv kernels come before the fc kernel.
+        let conv_pos = kernels.iter().position(|k| k.name.contains("c1")).unwrap();
+        let fc_pos = kernels.iter().position(|k| k.name.contains("fc")).unwrap();
+        assert!(conv_pos < fc_pos);
+    }
+
+    #[test]
+    fn activation_bytes_positive_and_batch_scaled() {
+        let g = tiny();
+        let a1 = g.activation_bytes(1);
+        let a8 = g.activation_bytes(8);
+        assert!(a1 > 0);
+        assert_eq!(a8, a1 * 8);
+    }
+
+    #[test]
+    fn gemm_kernel_count_counts_only_gemms() {
+        let g = tiny();
+        let total = g.lower(0, 1).len();
+        let gemms = g.gemm_kernel_count(1);
+        assert!(gemms > 0 && gemms < total);
+    }
+}

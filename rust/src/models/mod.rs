@@ -1,0 +1,9 @@
+//! Model substrate: layer descriptions, sequential model graphs, and the
+//! zoo of architectures the paper's evaluation uses (DESIGN.md S5).
+
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::{GraphBuilder, ModelGraph};
+pub use layer::{Layer, LayerOp};

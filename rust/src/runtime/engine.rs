@@ -1,0 +1,238 @@
+//! PJRT execution engine: loads AOT artifacts (HLO text), compiles them on
+//! the CPU PJRT client, caches the executables, and runs them from the
+//! coordinator's hot path.
+//!
+//! Design constraints (DESIGN.md §7, /opt/xla-example/README.md):
+//! * HLO **text** interchange — `HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping xla_extension 0.5.1's 32-bit-id limit.
+//! * Everything lowered with `return_tuple=True`, so results unwrap with
+//!   `to_tuple`.
+//! * One `PjRtClient` per process; executables are compiled once and
+//!   cached behind an `RwLock` (reads on the hot path are shared).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+use super::tensor::HostTensor;
+
+/// Statistics the engine accumulates (read by metrics + benches).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// A compiled executable plus its manifest entry.
+pub struct LoadedArtifact {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with host tensors; validates shapes against the manifest.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.info.inputs).enumerate() {
+            if t.shape != spec.shape {
+                return Err(anyhow!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    self.info.name,
+                    t.shape,
+                    spec.shape
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal().map_err(|e| anyhow!("{e:?}")))
+            .collect::<Result<_>>()?;
+        self.execute_literals(&literals)
+    }
+
+    /// Execute with prebuilt literals (hot path: the caller owns pooling).
+    pub fn execute_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("execute {}", self.info.name))?;
+        Self::fetch_outputs(&result[0][0], &self.info.name)
+    }
+
+    /// Execute with device-resident buffers (the fast path: weight operands
+    /// cached on device skip the host→device copy entirely — the paper's
+    /// "data is preallocated on the device as in a real-world DNN inference
+    /// setting", §4.1).
+    pub fn execute_buffers(&self, buffers: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        if buffers.len() != self.info.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                buffers.len()
+            ));
+        }
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(buffers)
+            .with_context(|| format!("execute_b {}", self.info.name))?;
+        Self::fetch_outputs(&result[0][0], &self.info.name)
+    }
+
+    fn fetch_outputs(buf: &xla::PjRtBuffer, name: &str) -> Result<Vec<HostTensor>> {
+        let lit = buf
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {name}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        parts
+            .iter()
+            .map(|p| HostTensor::from_literal(p).map_err(|e| anyhow!("{e:?}")))
+            .collect()
+    }
+}
+
+/// The process-wide PJRT runtime.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RwLock<HashMap<String, Arc<LoadedArtifact>>>,
+    stats: Mutex<EngineStats>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest =
+            Manifest::load(&artifact_dir).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: RwLock::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.read().unwrap().len()
+    }
+
+    /// Load (compile-once, cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.read().unwrap().get(name) {
+            self.stats.lock().unwrap().cache_hits += 1;
+            return Ok(hit.clone());
+        }
+        let info = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.manifest.hlo_path(&info);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.compiles += 1;
+            s.compile_secs += dt;
+            s.cache_misses += 1;
+        }
+        let loaded = Arc::new(LoadedArtifact { info, exe });
+        let mut w = self.cache.write().unwrap();
+        // Another thread may have compiled concurrently; first write wins.
+        Ok(w.entry(name.to_string()).or_insert(loaded).clone())
+    }
+
+    /// Load + execute in one call, with timing recorded in the stats.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let out = exe.execute(inputs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.execute_secs += dt;
+        Ok(out)
+    }
+
+    /// Upload a host tensor to a device-resident buffer (weights pinned at
+    /// tenant registration / first use; reused across launches).
+    pub fn to_device(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("to_device: {e:?}"))
+    }
+
+    /// Precompile every artifact matching a predicate (warm-up; the serving
+    /// path then never compiles).
+    pub fn warmup(&self, pred: impl Fn(&ArtifactInfo) -> bool) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| pred(a))
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+}
+
+// The xla crate's raw pointers are not Sync-annotated, but the PJRT CPU
+// client is thread-safe for compile/execute (it is exactly how the C API is
+// used from multi-threaded serving frameworks). The engine wraps all
+// mutable state in locks.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(PjrtEngine::new("/nonexistent/artifacts").is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! The artifact manifest: the contract between `python/compile/aot.py`
+//! (which lowers every (graph kind, shape class, R bucket) variant to HLO
+//! text) and the rust runtime (which loads and executes them).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one executable input, as promised by the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// Unique name, e.g. `gemm_conv2_2_r8.pallas`.
+    pub name: String,
+    /// Graph kind: `batched_gemm`, `fused_linear`, `mlp_block`, `rnn_cell`.
+    pub kind: String,
+    /// Implementation flavor: `pallas` (L1 kernel) or `xla` (native dot).
+    pub impl_: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// GEMM metadata: m, n, k, r (+ kind-specific keys like `hidden`).
+    pub meta: BTreeMap<String, usize>,
+    /// Input specs in positional order.
+    pub inputs: Vec<TensorSpec>,
+}
+
+impl ArtifactInfo {
+    pub fn r(&self) -> usize {
+        *self.meta.get("r").expect("artifact meta missing 'r'")
+    }
+
+    pub fn mnk(&self) -> (usize, usize, usize) {
+        (
+            *self.meta.get("m").unwrap_or(&0),
+            *self.meta.get("n").unwrap_or(&0),
+            *self.meta.get("k").unwrap_or(&0),
+        )
+    }
+
+    /// FLOPs one execution performs (2·M·N·K per GEMM problem, times R,
+    /// times the number of GEMMs in the graph kind).
+    pub fn flops(&self) -> f64 {
+        let (m, n, k) = self.mnk();
+        let gemms = match self.kind.as_str() {
+            "mlp_block" => {
+                let hidden = *self.meta.get("hidden").unwrap_or(&0);
+                // x@w1 [m,k]·[k,h] + h@w2 [m,h]·[h,n]
+                return self.r() as f64
+                    * 2.0
+                    * (m * k * hidden + m * hidden * n) as f64;
+            }
+            "rnn_cell" => 2, // two matvecs
+            _ => 1,
+        };
+        self.r() as f64 * gemms as f64 * 2.0 * (m * n * k) as f64
+    }
+}
+
+/// Parsed manifest: lookup tables over the artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let json = Json::parse(text)?;
+        let format = json
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or("manifest missing 'format'")?;
+        if format != 1 {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let arr = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            artifacts.push(Self::parse_artifact(a)?);
+        }
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Manifest {
+            dir,
+            artifacts,
+            by_name,
+        })
+    }
+
+    fn parse_artifact(a: &Json) -> Result<ArtifactInfo, String> {
+        let get_str = |k: &str| {
+            a.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("artifact missing '{k}'"))
+        };
+        let meta = a
+            .get("meta")
+            .and_then(|m| match m {
+                Json::Obj(o) => Some(o),
+                _ => None,
+            })
+            .ok_or("artifact missing 'meta'")?
+            .iter()
+            .filter_map(|(k, v)| v.as_usize().map(|n| (k.clone(), n)))
+            .collect();
+        let mut inputs = Vec::new();
+        for inp in a
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or("artifact missing 'inputs'")?
+        {
+            let shape = inp
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or("input missing 'shape'")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let dtype = inp
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("float32")
+                .to_string();
+            inputs.push(TensorSpec { shape, dtype });
+        }
+        Ok(ArtifactInfo {
+            name: get_str("name")?,
+            kind: get_str("kind")?,
+            impl_: get_str("impl")?,
+            file: get_str("file")?,
+            meta,
+            inputs,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// All R buckets available for a (kind, impl) pair, ascending.
+    pub fn r_buckets(&self, kind: &str, impl_: &str) -> Vec<usize> {
+        let mut rs: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.impl_ == impl_)
+            .map(ArtifactInfo::r)
+            .collect();
+        rs.sort_unstable();
+        rs.dedup();
+        rs
+    }
+
+    /// Find the artifact for (kind, impl, shape-class, exact R bucket).
+    /// `mnk = (0,0,0)` skips the shape filter (kinds with one shape class).
+    pub fn find(
+        &self,
+        kind: &str,
+        impl_: &str,
+        mnk: (usize, usize, usize),
+        r: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind
+                && a.impl_ == impl_
+                && a.r() == r
+                && (mnk == (0, 0, 0) || a.mnk() == mnk)
+        })
+    }
+
+    /// Smallest R bucket >= `r` for (kind, impl, shape). The batcher's
+    /// round-up rule; returns None if `r` exceeds the largest bucket.
+    pub fn bucket_for(
+        &self,
+        kind: &str,
+        impl_: &str,
+        mnk: (usize, usize, usize),
+        r: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind
+                    && a.impl_ == impl_
+                    && a.r() >= r
+                    && (mnk == (0, 0, 0) || a.mnk() == mnk)
+            })
+            .min_by_key(|a| a.r())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+ "format": 1,
+ "artifacts": [
+  {"name": "gemm_square_r1.xla", "kind": "batched_gemm", "impl": "xla",
+   "file": "gemm_square_r1.xla.hlo.txt",
+   "meta": {"m": 256, "n": 256, "k": 256, "r": 1},
+   "inputs": [{"shape": [1, 256, 256], "dtype": "float32"},
+              {"shape": [1, 256, 256], "dtype": "float32"}]},
+  {"name": "gemm_square_r4.xla", "kind": "batched_gemm", "impl": "xla",
+   "file": "gemm_square_r4.xla.hlo.txt",
+   "meta": {"m": 256, "n": 256, "k": 256, "r": 4},
+   "inputs": [{"shape": [4, 256, 256], "dtype": "float32"},
+              {"shape": [4, 256, 256], "dtype": "float32"}]},
+  {"name": "rnn_cell_r2.pallas", "kind": "rnn_cell", "impl": "pallas",
+   "file": "rnn_cell_r2.pallas.hlo.txt",
+   "meta": {"m": 512, "n": 1, "k": 512, "r": 2, "hidden": 512},
+   "inputs": [{"shape": [2, 512, 512], "dtype": "float32"},
+              {"shape": [2, 512, 512], "dtype": "float32"},
+              {"shape": [2, 512, 1], "dtype": "float32"},
+              {"shape": [2, 512, 1], "dtype": "float32"}]}
+ ]
+}"#
+    }
+
+    fn manifest() -> Manifest {
+        Manifest::parse(sample(), PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = manifest();
+        assert_eq!(m.len(), 3);
+        let a = m.get("gemm_square_r4.xla").unwrap();
+        assert_eq!(a.r(), 4);
+        assert_eq!(a.mnk(), (256, 256, 256));
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![4, 256, 256]);
+        assert_eq!(a.inputs[0].elements(), 4 * 256 * 256);
+    }
+
+    #[test]
+    fn bucket_rounds_up() {
+        let m = manifest();
+        let a = m
+            .bucket_for("batched_gemm", "xla", (256, 256, 256), 2)
+            .unwrap();
+        assert_eq!(a.r(), 4);
+        let exact = m
+            .bucket_for("batched_gemm", "xla", (256, 256, 256), 1)
+            .unwrap();
+        assert_eq!(exact.r(), 1);
+        assert!(m
+            .bucket_for("batched_gemm", "xla", (256, 256, 256), 5)
+            .is_none());
+    }
+
+    #[test]
+    fn find_is_exact() {
+        let m = manifest();
+        assert!(m.find("batched_gemm", "xla", (256, 256, 256), 4).is_some());
+        assert!(m.find("batched_gemm", "xla", (256, 256, 256), 2).is_none());
+        assert!(m.find("batched_gemm", "pallas", (256, 256, 256), 4).is_none());
+    }
+
+    #[test]
+    fn r_buckets_sorted_dedup() {
+        let m = manifest();
+        assert_eq!(m.r_buckets("batched_gemm", "xla"), vec![1, 4]);
+        assert_eq!(m.r_buckets("rnn_cell", "pallas"), vec![2]);
+        assert!(m.r_buckets("nope", "xla").is_empty());
+    }
+
+    #[test]
+    fn flops_scales_with_r_and_kind() {
+        let m = manifest();
+        let a1 = m.get("gemm_square_r1.xla").unwrap();
+        let a4 = m.get("gemm_square_r4.xla").unwrap();
+        assert!((a4.flops() / a1.flops() - 4.0).abs() < 1e-9);
+        // rnn_cell does two matvecs per problem.
+        let rnn = m.get("rnn_cell_r2.pallas").unwrap();
+        assert!((rnn.flops() - 2.0 * 2.0 * 2.0 * (512 * 512) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 9, "artifacts": []}"#, "/tmp".into()).is_err());
+        assert!(Manifest::parse("not json", "/tmp".into()).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": []}"#, "/tmp".into()).is_err());
+    }
+}

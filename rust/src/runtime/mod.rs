@@ -1,0 +1,12 @@
+//! PJRT runtime (L3 ↔ artifacts boundary): loads the HLO-text executables
+//! `python/compile/aot.py` produced, compiles them once on the CPU PJRT
+//! client, and executes them from the coordinator's hot path. Python never
+//! runs at serving time.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{EngineStats, LoadedArtifact, PjrtEngine};
+pub use manifest::{ArtifactInfo, Manifest, TensorSpec};
+pub use tensor::{host_batched_gemm, host_fused_linear, HostTensor};

@@ -1,0 +1,251 @@
+//! Host-side tensors crossing the PJRT boundary.
+//!
+//! `HostTensor` is the coordinator's in-memory representation of request
+//! payloads and model weights: a dense row-major f32 buffer plus shape.
+//! Conversion to/from `xla::Literal` happens only at the runtime boundary.
+
+use crate::util::prng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match buffer length {}",
+            data.len()
+        );
+        HostTensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// Uniform(-0.5, 0.5) tensor — deterministic per seed; stands in for
+    /// per-tenant weights/inputs in tests, benches and examples.
+    pub fn random(shape: &[usize], rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        HostTensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Convert to an XLA literal of the same shape.
+    pub fn to_literal(&self) -> Result<xla::Literal, xla::Error> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data).reshape(&dims)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self, xla::Error> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor::new(dims, data))
+    }
+
+    /// Slice out problem `r` of a leading-R batch: `[R, ...] -> [...]`.
+    pub fn slice_problem(&self, r: usize) -> HostTensor {
+        assert!(self.rank() >= 1 && r < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        HostTensor::new(
+            self.shape[1..].to_vec(),
+            self.data[r * inner..(r + 1) * inner].to_vec(),
+        )
+    }
+
+    /// Stack `parts` (all the same shape) into a leading-R batch, padding
+    /// with zero-problems up to `r_total`. This is the batcher's gather
+    /// step: R tenant sub-problems -> one super-kernel operand.
+    pub fn stack(parts: &[&HostTensor], r_total: usize) -> HostTensor {
+        assert!(!parts.is_empty() && parts.len() <= r_total);
+        let inner_shape = parts[0].shape.clone();
+        let inner: usize = inner_shape.iter().product();
+        let mut data = Vec::with_capacity(r_total * inner);
+        for p in parts {
+            assert_eq!(p.shape, inner_shape, "stack requires uniform shapes");
+            data.extend_from_slice(&p.data);
+        }
+        data.resize(r_total * inner, 0.0);
+        let mut shape = vec![r_total];
+        shape.extend_from_slice(&inner_shape);
+        HostTensor::new(shape, data)
+    }
+
+    /// Stack into a preallocated buffer (the hot-path variant: no
+    /// allocation when the pool already has a tensor of the right size).
+    pub fn stack_into(parts: &[&HostTensor], r_total: usize, out: &mut HostTensor) {
+        assert!(!parts.is_empty() && parts.len() <= r_total);
+        let inner_shape = &parts[0].shape;
+        let inner: usize = inner_shape.iter().product();
+        out.shape.clear();
+        out.shape.push(r_total);
+        out.shape.extend_from_slice(inner_shape);
+        out.data.clear();
+        out.data.reserve(r_total * inner);
+        for p in parts {
+            debug_assert_eq!(&p.shape, inner_shape);
+            out.data.extend_from_slice(&p.data);
+        }
+        out.data.resize(r_total * inner, 0.0);
+    }
+
+    /// Max |a - b| across elements (shape-checked).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Reference batched GEMM on the host: `out[r] = a[r] @ b[r]`.
+///
+/// The rust-side oracle used by integration tests to validate what comes
+/// back from the PJRT executables (mirrors python `kernels/ref.py`).
+pub fn host_batched_gemm(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    assert_eq!(a.rank(), 3);
+    assert_eq!(b.rank(), 3);
+    let (r, m, k) = (a.shape[0], a.shape[1], a.shape[2]);
+    let (rb, kb, n) = (b.shape[0], b.shape[1], b.shape[2]);
+    assert_eq!(r, rb);
+    assert_eq!(k, kb);
+    let mut out = vec![0.0f32; r * m * n];
+    for ri in 0..r {
+        let ab = &a.data[ri * m * k..(ri + 1) * m * k];
+        let bb = &b.data[ri * k * n..(ri + 1) * k * n];
+        let ob = &mut out[ri * m * n..(ri + 1) * m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = ab[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bb[kk * n..(kk + 1) * n];
+                let orow = &mut ob[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    HostTensor::new(vec![r, m, n], out)
+}
+
+/// Reference fused linear: `relu(a @ b + bias)`, bias `[R, 1, N]`.
+pub fn host_fused_linear(a: &HostTensor, b: &HostTensor, bias: &HostTensor) -> HostTensor {
+    let mut out = host_batched_gemm(a, b);
+    let (r, m, n) = (out.shape[0], out.shape[1], out.shape[2]);
+    assert_eq!(bias.shape, vec![r, 1, n]);
+    for ri in 0..r {
+        for i in 0..m {
+            for j in 0..n {
+                let idx = ri * m * n + i * n + j;
+                out.data[idx] = (out.data[idx] + bias.data[ri * n + j]).max(0.0);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_and_slice_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = HostTensor::random(&[2, 3], &mut rng);
+        let b = HostTensor::random(&[2, 3], &mut rng);
+        let stacked = HostTensor::stack(&[&a, &b], 4);
+        assert_eq!(stacked.shape, vec![4, 2, 3]);
+        assert_eq!(stacked.slice_problem(0), a);
+        assert_eq!(stacked.slice_problem(1), b);
+        // Padding problems are zero.
+        assert!(stacked.slice_problem(2).data.iter().all(|&x| x == 0.0));
+        assert!(stacked.slice_problem(3).data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn stack_into_matches_stack() {
+        let mut rng = Rng::new(2);
+        let a = HostTensor::random(&[4, 4], &mut rng);
+        let b = HostTensor::random(&[4, 4], &mut rng);
+        let want = HostTensor::stack(&[&a, &b], 8);
+        let mut got = HostTensor::zeros(&[1]);
+        HostTensor::stack_into(&[&a, &b], 8, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stack_rejects_mixed_shapes() {
+        let a = HostTensor::zeros(&[2, 3]);
+        let b = HostTensor::zeros(&[3, 2]);
+        HostTensor::stack(&[&a, &b], 2);
+    }
+
+    #[test]
+    fn host_gemm_identity() {
+        let mut eye = HostTensor::zeros(&[1, 3, 3]);
+        for i in 0..3 {
+            eye.data[i * 3 + i] = 1.0;
+        }
+        let mut rng = Rng::new(3);
+        let b = HostTensor::random(&[1, 3, 3], &mut rng);
+        let out = host_batched_gemm(&eye, &b);
+        assert!(out.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn host_gemm_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = HostTensor::new(vec![1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::new(vec![1, 2, 2], vec![1.0; 4]);
+        let out = host_batched_gemm(&a, &b);
+        assert_eq!(out.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn fused_linear_clamps_at_zero() {
+        let a = HostTensor::new(vec![1, 1, 1], vec![-2.0]);
+        let b = HostTensor::new(vec![1, 1, 1], vec![3.0]);
+        let bias = HostTensor::new(vec![1, 1, 1], vec![1.0]);
+        let out = host_fused_linear(&a, &b, &bias);
+        assert_eq!(out.data, vec![0.0]); // relu(-6 + 1)
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let a = HostTensor::random(&[8], &mut Rng::new(7));
+        let b = HostTensor::random(&[8], &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

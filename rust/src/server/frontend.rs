@@ -1,0 +1,234 @@
+//! Threaded serving frontend: clients submit requests through a channel;
+//! a dedicated leader thread owns the [`Coordinator`] and pumps scheduling
+//! rounds, routing each completion back to its submitter.
+//!
+//! The design mirrors a vLLM-style router: submission is non-blocking with
+//! admission control; batching happens inside the coordinator; the leader
+//! thread is the only mutator, so no lock is held across a PJRT execution.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, InferenceResponse, Reject, RequestId};
+use crate::metrics::Snapshot;
+use crate::runtime::HostTensor;
+
+/// What a submitter gets back.
+pub type Reply = Result<InferenceResponse, Reject>;
+
+enum Msg {
+    Submit {
+        tenant: usize,
+        payload: Vec<HostTensor>,
+        reply: Sender<Reply>,
+    },
+    Snapshot {
+        reply: Sender<Snapshot>,
+    },
+    Shutdown,
+}
+
+/// Handle cloned into client threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+}
+
+impl ServerHandle {
+    /// Submit and return a receiver for the eventual reply.
+    pub fn submit(&self, tenant: usize, payload: Vec<HostTensor>) -> Receiver<Reply> {
+        let (reply_tx, reply_rx) = channel();
+        // If the server is gone the receiver errors out on recv.
+        let _ = self.tx.send(Msg::Submit { tenant, payload, reply: reply_tx });
+        reply_rx
+    }
+
+    /// Submit and block for the reply.
+    pub fn submit_blocking(&self, tenant: usize, payload: Vec<HostTensor>) -> Reply {
+        self.submit(tenant, payload)
+            .recv()
+            .unwrap_or(Err(Reject::BadRequest("server stopped".into())))
+    }
+
+    /// Snapshot the server's metrics.
+    pub fn snapshot(&self) -> Option<Snapshot> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Snapshot { reply: tx }).ok()?;
+        rx.recv().ok()
+    }
+}
+
+/// The running server: leader thread + handle.
+pub struct Server {
+    handle: ServerHandle,
+    leader: Option<JoinHandle<Coordinator>>,
+    tx: Sender<Msg>,
+}
+
+/// Leader-loop tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// How long to accumulate submissions before a round when the backlog
+    /// is shallow (the batching window; paper §4 "dynamically schedule
+    /// kernels as they arrive").
+    pub batch_timeout: Duration,
+    /// Backlog depth that triggers an immediate round.
+    pub eager_backlog: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self { batch_timeout: Duration::from_micros(200), eager_backlog: 16 }
+    }
+}
+
+impl Server {
+    /// Start the leader thread over a warmed coordinator.
+    pub fn start(coordinator: Coordinator, opts: ServeOpts) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let handle = ServerHandle { tx: tx.clone() };
+        let leader = std::thread::Builder::new()
+            .name("stgpu-leader".into())
+            .spawn(move || leader_loop(coordinator, rx, opts))
+            .expect("spawn leader");
+        Self { handle, leader: Some(leader), tx }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the leader and recover the coordinator (for final reporting).
+    pub fn shutdown(mut self) -> Coordinator {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.leader
+            .take()
+            .expect("leader present")
+            .join()
+            .expect("leader panicked")
+    }
+}
+
+/// In-flight bookkeeping: request id -> reply channel.
+struct Inflight {
+    entries: Vec<(RequestId, Sender<Reply>)>,
+}
+
+impl Inflight {
+    fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    fn add(&mut self, id: RequestId, reply: Sender<Reply>) {
+        self.entries.push((id, reply));
+    }
+
+    fn complete(&mut self, id: RequestId, reply: Reply) {
+        if let Some(pos) = self.entries.iter().position(|(i, _)| *i == id) {
+            let (_, tx) = self.entries.swap_remove(pos);
+            let _ = tx.send(reply);
+        }
+    }
+}
+
+fn leader_loop(mut coord: Coordinator, rx: Receiver<Msg>, opts: ServeOpts) -> Coordinator {
+    let mut inflight = Inflight::new();
+    'serve: loop {
+        // Phase 1: accumulate submissions for the batching window. The
+        // window clock starts at the FIRST enqueue of the round (not at
+        // phase entry), so an idle server never charges waiting time
+        // against the batching budget.
+        let mut window_end: Option<Instant> = if coord.pending() > 0 {
+            Some(Instant::now() + opts.batch_timeout)
+        } else {
+            None
+        };
+        loop {
+            let timeout = match window_end {
+                // Work pending: wait only out the remaining window.
+                Some(end) => end.saturating_duration_since(Instant::now()),
+                // Idle: block in short slices for the next message.
+                None => Duration::from_millis(50),
+            };
+            let msg = match rx.recv_timeout(timeout) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break 'serve,
+            };
+            match msg {
+                Some(Msg::Submit { tenant, payload, reply }) => {
+                    match coord.submit(tenant, payload) {
+                        Ok(id) => inflight.add(id, reply),
+                        Err(rej) => {
+                            let _ = reply.send(Err(rej));
+                        }
+                    }
+                    if window_end.is_none() {
+                        window_end = Some(Instant::now() + opts.batch_timeout);
+                    }
+                    if coord.pending() >= opts.eager_backlog {
+                        break; // enough to fill a super-kernel: go now
+                    }
+                }
+                Some(Msg::Snapshot { reply }) => {
+                    let _ = reply.send(coord.snapshot());
+                }
+                Some(Msg::Shutdown) => break 'serve,
+                None => {
+                    if coord.pending() > 0 {
+                        break; // window elapsed with work queued
+                    }
+                    // Idle: keep waiting.
+                }
+            }
+        }
+        // Phase 2: one scheduling round.
+        if coord.pending() > 0 {
+            match coord.run_round() {
+                Ok(outcome) => {
+                    for resp in outcome.responses {
+                        inflight.complete(resp.id, Ok(resp));
+                    }
+                    for (id, rej) in outcome.rejections {
+                        inflight.complete(id, Err(rej));
+                    }
+                }
+                Err(e) => {
+                    log::error!("round failed: {e:#}");
+                }
+            }
+        }
+    }
+    // Drain what's left so no submitter hangs.
+    while coord.pending() > 0 {
+        match coord.run_round() {
+            Ok(outcome) => {
+                for resp in outcome.responses {
+                    inflight.complete(resp.id, Ok(resp));
+                }
+                for (id, rej) in outcome.rejections {
+                    inflight.complete(id, Err(rej));
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    for (_, tx) in inflight.entries.drain(..) {
+        let _ = tx.send(Err(Reject::BadRequest("server shutting down".into())));
+    }
+    coord
+}
+
+#[cfg(test)]
+mod tests {
+    // Live-server tests need artifacts; see rust/tests/integration_server.rs.
+    use super::*;
+
+    #[test]
+    fn serve_opts_default_sane() {
+        let o = ServeOpts::default();
+        assert!(o.batch_timeout < Duration::from_millis(10));
+        assert!(o.eager_backlog >= 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving frontend: the threaded leader loop that pumps the coordinator,
+//! plus a plaintext TCP status endpoint.
+
+pub mod frontend;
+pub mod status;
+
+pub use frontend::{Reply, ServeOpts, Server, ServerHandle};
+pub use status::StatusEndpoint;

@@ -1,0 +1,71 @@
+//! Plaintext status endpoint: a minimal TCP listener that writes the
+//! current metrics snapshot as JSON to every connection and closes it
+//! (curl-able; no HTTP stack is vendored offline — DESIGN.md §7).
+
+use std::io::Write;
+use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::server::frontend::ServerHandle;
+
+/// Running status endpoint.
+pub struct StatusEndpoint {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl StatusEndpoint {
+    /// Bind and serve snapshots; `addr` may use port 0 for an ephemeral
+    /// port (read back via [`StatusEndpoint::addr`]).
+    pub fn start(addr: impl ToSocketAddrs, handle: ServerHandle) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("stgpu-status".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut sock, _)) => {
+                            let body = handle
+                                .snapshot()
+                                .map(|s| s.to_json().to_string())
+                                .unwrap_or_else(|| "{\"error\":\"no snapshot\"}".into());
+                            let _ = sock.write_all(body.as_bytes());
+                            let _ = sock.write_all(b"\n");
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Self { addr: local, stop, thread: Some(thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for StatusEndpoint {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Criterion-less benchmark harness.
+//!
+//! `criterion` is not vendored offline, so every `benches/*.rs` binary uses
+//! this harness instead: warmup + timed iterations, robust summary statistics,
+//! and table/CSV emission that mirrors the paper's figures and tables.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement: wall-clock samples of a closure.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            sample_iters: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Self {
+            warmup_iters,
+            sample_iters,
+        }
+    }
+
+    /// Time `f` returning per-iteration durations (seconds).
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Vec<f64> {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        (0..self.sample_iters)
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_secs_f64()
+            })
+            .collect()
+    }
+
+    /// Time `f` and summarize.
+    pub fn summarize<F: FnMut()>(&self, f: F) -> Summary {
+        Summary::of(&self.run(f))
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a throughput in FLOP/s with an adaptive unit.
+pub fn fmt_flops(f: f64) -> String {
+    if f >= 1e12 {
+        format!("{:.2} TFLOP/s", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2} GFLOP/s", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2} MFLOP/s", f / 1e6)
+    } else {
+        format!("{f:.0} FLOP/s")
+    }
+}
+
+/// Simple fixed-width table writer for bench output; mirrors the row/series
+/// layout of the paper's figures so EXPERIMENTS.md can quote it verbatim.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width must match header width"
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1))
+        ));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting / EXPERIMENTS.md appendices).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print the table and also write the CSV next to the bench results.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{name}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warn: could not write {path:?}: {e}");
+            } else {
+                println!("[csv written to {}]", path.display());
+            }
+        }
+    }
+}
+
+/// Banner printed at the top of each figure/table bench binary.
+pub fn banner(id: &str, claim: &str) {
+    println!("==============================================================");
+    println!("  {id}");
+    println!("  paper claim: {claim}");
+    println!("==============================================================");
+}
+
+/// Measure wall-clock of a single invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_counts_iterations() {
+        let mut calls = 0usize;
+        let b = Bencher::new(2, 5);
+        let samples = b.run(|| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn table_renders_and_escapes_csv() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "x,y".into()]);
+        let txt = t.render();
+        assert!(txt.contains('a') && txt.contains("x,y"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(2.0), "2.000 s");
+        assert_eq!(fmt_secs(0.002), "2.000 ms");
+        assert_eq!(fmt_secs(2e-6), "2.000 us");
+        assert!(fmt_flops(3.2e12).contains("TFLOP"));
+        assert!(fmt_flops(3.2e9).contains("GFLOP"));
+    }
+}

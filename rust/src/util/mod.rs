@@ -1,0 +1,10 @@
+//! Shared infrastructure: PRNG, statistics, property-test runner, bench
+//! harness, and a minimal JSON reader/writer. Everything here exists because
+//! the offline environment vendors only the `xla` crate's dependency closure
+//! (no rand / proptest / criterion / serde).
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,115 @@
+//! Minimal property-based testing support.
+//!
+//! `proptest` is not vendored in this offline environment, so we provide the
+//! subset the test-suite needs: a seeded case runner with shrinking-free
+//! failure reporting (the failing seed + case index is printed, which is
+//! enough to reproduce deterministically), plus generator combinators built
+//! on [`crate::util::prng::Rng`].
+
+use crate::util::prng::Rng;
+
+/// Number of cases each property runs by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` for `cases` random cases. On panic, re-raises with the seed and
+/// case index embedded so the exact failing input can be regenerated.
+pub fn run_prop<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    for case in 0..cases {
+        // Derive a per-case seed so failures identify a single case.
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience wrapper using the default case count.
+pub fn check<F>(name: &str, seed: u64, prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    run_prop(name, seed, DEFAULT_CASES, prop);
+}
+
+/// Generate a vector of length in `[min_len, max_len]` with `gen` per element.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let len = rng.gen_range_inclusive(min_len as u64, max_len as u64) as usize;
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+/// A biased "size" generator: mostly small values, occasionally large — the
+/// distribution that shakes out boundary bugs fastest.
+pub fn sized(rng: &mut Rng, max: u64) -> u64 {
+    debug_assert!(max >= 1);
+    match rng.gen_range(10) {
+        0..=5 => rng.gen_range_inclusive(1, max.min(8)),
+        6..=8 => rng.gen_range_inclusive(1, max.min(64).max(1)),
+        _ => rng.gen_range_inclusive(1, max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        run_prop("count", 1, 50, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        run_prop("fails", 2, 50, |rng| {
+            // Fails at the first case where a generated value exceeds 10.
+            assert!(rng.gen_range(100) <= 10, "value too big");
+        });
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 2, 9, |r| r.gen_range(5));
+            assert!((2..=9).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn sized_in_bounds_and_biased_small() {
+        let mut rng = Rng::new(4);
+        let mut small = 0;
+        for _ in 0..1000 {
+            let v = sized(&mut rng, 10_000);
+            assert!((1..=10_000).contains(&v));
+            if v <= 8 {
+                small += 1;
+            }
+        }
+        assert!(small > 400, "expected a bias to small sizes, got {small}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Arrival processes and request traces.
+//!
+//! The paper's experiments saturate request queues (§2), which the simulator
+//! expresses directly as closed-loop iteration counts. The *serving* path
+//! (examples/, server/) additionally supports open-loop Poisson arrivals and
+//! trace replay so the system is usable beyond the paper's simplification.
+
+use crate::util::prng::Rng;
+
+/// An open-loop arrival process generating request timestamps.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Deterministic arrivals every `period` seconds.
+    Uniform { period: f64 },
+    /// Markov-modulated Poisson: alternates `low`/`high` rates with mean
+    /// dwell `dwell` seconds — a simple bursty-load model.
+    Bursty { low: f64, high: f64, dwell: f64 },
+}
+
+impl ArrivalProcess {
+    /// Generate arrival timestamps within `[0, horizon)`.
+    pub fn generate(&self, rng: &mut Rng, horizon: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0, "rate must be positive");
+                let mut t = rng.gen_exp(rate);
+                while t < horizon {
+                    out.push(t);
+                    t += rng.gen_exp(rate);
+                }
+            }
+            ArrivalProcess::Uniform { period } => {
+                assert!(period > 0.0, "period must be positive");
+                let mut t = period;
+                while t < horizon {
+                    out.push(t);
+                    t += period;
+                }
+            }
+            ArrivalProcess::Bursty { low, high, dwell } => {
+                assert!(low > 0.0 && high >= low && dwell > 0.0);
+                let mut t = 0.0;
+                let mut phase_high = false;
+                let mut phase_end = rng.gen_exp(1.0 / dwell);
+                loop {
+                    let rate = if phase_high { high } else { low };
+                    t += rng.gen_exp(rate);
+                    while t > phase_end {
+                        phase_high = !phase_high;
+                        phase_end += rng.gen_exp(1.0 / dwell);
+                    }
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean request rate of the process.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Uniform { period } => 1.0 / period,
+            ArrivalProcess::Bursty { low, high, .. } => (low + high) / 2.0,
+        }
+    }
+}
+
+/// One request in a trace: which tenant, when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracedRequest {
+    pub t_arrival: f64,
+    pub tenant: usize,
+}
+
+/// A merged multi-tenant request trace, sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct RequestTrace {
+    pub requests: Vec<TracedRequest>,
+}
+
+impl RequestTrace {
+    /// Build a trace from per-tenant arrival processes over `horizon`.
+    pub fn generate(
+        processes: &[(usize, ArrivalProcess)],
+        seed: u64,
+        horizon: f64,
+    ) -> Self {
+        let mut requests = Vec::new();
+        for (tenant, proc_) in processes {
+            let mut rng = Rng::new(seed ^ (*tenant as u64).wrapping_mul(0x2545_F491_4F6C_DD1D));
+            for t in proc_.generate(&mut rng, horizon) {
+                requests.push(TracedRequest {
+                    t_arrival: t,
+                    tenant: *tenant,
+                });
+            }
+        }
+        requests.sort_by(|a, b| a.t_arrival.partial_cmp(&b.t_arrival).unwrap());
+        Self { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Serialize to CSV (t_arrival, tenant) for replay.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t_arrival,tenant\n");
+        for r in &self.requests {
+            s.push_str(&format!("{:.9},{}\n", r.t_arrival, r.tenant));
+        }
+        s
+    }
+
+    /// Parse a CSV produced by [`RequestTrace::to_csv`].
+    pub fn from_csv(text: &str) -> Result<Self, String> {
+        let mut requests = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header / blank
+            }
+            let mut parts = line.split(',');
+            let t = parts
+                .next()
+                .and_then(|s| s.trim().parse::<f64>().ok())
+                .ok_or_else(|| format!("line {}: bad t_arrival", i + 1))?;
+            let tenant = parts
+                .next()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .ok_or_else(|| format!("line {}: bad tenant", i + 1))?;
+            requests.push(TracedRequest {
+                t_arrival: t,
+                tenant,
+            });
+        }
+        requests.sort_by(|a, b| a.t_arrival.partial_cmp(&b.t_arrival).unwrap());
+        Ok(Self { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut rng = Rng::new(1);
+        let p = ArrivalProcess::Poisson { rate: 1000.0 };
+        let arrivals = p.generate(&mut rng, 10.0);
+        let rate = arrivals.len() as f64 / 10.0;
+        assert!((rate - 1000.0).abs() < 50.0, "rate {rate}");
+        // sorted & in-range
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        assert!(arrivals.iter().all(|&t| (0.0..10.0).contains(&t)));
+    }
+
+    #[test]
+    fn uniform_is_periodic() {
+        let mut rng = Rng::new(2);
+        let p = ArrivalProcess::Uniform { period: 0.5 };
+        let arrivals = p.generate(&mut rng, 5.0);
+        assert_eq!(arrivals.len(), 9); // 0.5, 1.0, ..., 4.5
+        assert!((arrivals[1] - arrivals[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bursty_rate_between_low_and_high() {
+        let mut rng = Rng::new(3);
+        let p = ArrivalProcess::Bursty {
+            low: 100.0,
+            high: 2000.0,
+            dwell: 0.5,
+        };
+        let arrivals = p.generate(&mut rng, 20.0);
+        let rate = arrivals.len() as f64 / 20.0;
+        assert!(rate > 100.0 && rate < 2000.0, "rate {rate}");
+    }
+
+    #[test]
+    fn trace_merges_and_sorts() {
+        let tr = RequestTrace::generate(
+            &[
+                (0, ArrivalProcess::Poisson { rate: 50.0 }),
+                (1, ArrivalProcess::Poisson { rate: 50.0 }),
+            ],
+            7,
+            5.0,
+        );
+        assert!(!tr.is_empty());
+        assert!(tr
+            .requests
+            .windows(2)
+            .all(|w| w[0].t_arrival <= w[1].t_arrival));
+        assert!(tr.requests.iter().any(|r| r.tenant == 0));
+        assert!(tr.requests.iter().any(|r| r.tenant == 1));
+    }
+
+    #[test]
+    fn trace_csv_roundtrip() {
+        let tr = RequestTrace::generate(&[(0, ArrivalProcess::Uniform { period: 1.0 })], 1, 5.0);
+        let csv = tr.to_csv();
+        let back = RequestTrace::from_csv(&csv).unwrap();
+        assert_eq!(tr.requests.len(), back.requests.len());
+        for (a, b) in tr.requests.iter().zip(back.requests.iter()) {
+            assert!((a.t_arrival - b.t_arrival).abs() < 1e-9);
+            assert_eq!(a.tenant, b.tenant);
+        }
+    }
+
+    #[test]
+    fn trace_csv_rejects_garbage() {
+        assert!(RequestTrace::from_csv("t,tenant\nnot-a-number,0\n").is_err());
+        assert!(RequestTrace::from_csv("t,tenant\n1.0,not-a-tenant\n").is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let p = [(0usize, ArrivalProcess::Poisson { rate: 100.0 })];
+        let a = RequestTrace::generate(&p, 42, 5.0);
+        let b = RequestTrace::generate(&p, 42, 5.0);
+        let c = RequestTrace::generate(&p, 43, 5.0);
+        assert_eq!(a.requests, b.requests);
+        assert_ne!(a.requests, c.requests);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation: closed-loop saturated clients (the paper's §2
+//! setting), open-loop Poisson arrivals (future-work scenario kept for the
+//! serving examples), and deterministic trace replay.
+
+pub mod arrivals;
+pub mod spec;
+
+pub use arrivals::{ArrivalProcess, RequestTrace, TracedRequest};
+pub use spec::{sgemm_tenants, model_tenants, WorkloadSpec};

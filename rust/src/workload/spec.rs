@@ -1,0 +1,89 @@
+//! Workload specifications: helpers that turn models / GEMM shapes into the
+//! multi-tenant closed-loop workloads the simulator and benches consume.
+
+use crate::gpusim::engine::TenantWorkload;
+use crate::gpusim::kernel::{GemmShape, KernelDesc};
+use crate::models::graph::ModelGraph;
+
+/// Declarative description of a bench workload (also what the CLI accepts).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub tenants: usize,
+    pub iterations: u32,
+    pub kind: WorkloadKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum WorkloadKind {
+    /// Every tenant repeatedly submits one SGEMM of this shape
+    /// (the paper's Figure 7 / Table 1 microbenchmark).
+    Sgemm(GemmShape),
+    /// Every tenant serves one model replica at a fixed batch size
+    /// (the paper's Figure 3/4 macrobenchmark).
+    Model { model: String, batch: u32 },
+}
+
+/// `n` tenants each submitting `iterations` SGEMMs of `shape` — the
+/// saturated-queue microbenchmark of paper §4.1 ("R SGEMM kernel
+/// evaluations are queued").
+pub fn sgemm_tenants(n: usize, iterations: u32, shape: GemmShape) -> Vec<TenantWorkload> {
+    (0..n)
+        .map(|t| TenantWorkload::new(vec![KernelDesc::sgemm(t, shape)], iterations))
+        .collect()
+}
+
+/// `n` replicas of `model` (same architecture, different weights — paper
+/// §2's simplification), each running `iterations` forward passes at
+/// `batch`.
+pub fn model_tenants(
+    n: usize,
+    iterations: u32,
+    model: &ModelGraph,
+    batch: u32,
+) -> Vec<TenantWorkload> {
+    (0..n)
+        .map(|t| TenantWorkload::new(model.lower(t, batch), iterations))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn sgemm_tenants_have_correct_ownership() {
+        let w = sgemm_tenants(4, 10, GemmShape::SQUARE_256);
+        assert_eq!(w.len(), 4);
+        for (t, tw) in w.iter().enumerate() {
+            assert_eq!(tw.iterations, 10);
+            assert_eq!(tw.kernels.len(), 1);
+            assert_eq!(tw.kernels[0].tenant, t);
+        }
+    }
+
+    #[test]
+    fn model_tenants_share_shape_classes() {
+        let m = zoo::resnet18(128);
+        let w = model_tenants(3, 2, &m, 1);
+        assert_eq!(w.len(), 3);
+        // Same architecture ⇒ kernel k of tenant i has the same GEMM shape
+        // as kernel k of tenant j (the batchability precondition).
+        for k in 0..w[0].kernels.len() {
+            assert_eq!(w[0].kernels[k].shape, w[1].kernels[k].shape);
+            assert_eq!(w[0].kernels[k].shape, w[2].kernels[k].shape);
+        }
+        // Distinct tenants own their kernels.
+        assert!(w[1].kernels.iter().all(|k| k.tenant == 1));
+    }
+
+    #[test]
+    fn model_tenants_flops_match_model() {
+        let m = zoo::mobilenet_v2();
+        let w = model_tenants(1, 1, &m, 2);
+        let kernel_flops: f64 = w[0].kernels.iter().map(|k| k.flops).sum();
+        let rel = (kernel_flops - m.flops(2)).abs() / m.flops(2);
+        assert!(rel < 0.05, "lowered FLOPs should match graph FLOPs");
+    }
+}

@@ -1,0 +1,288 @@
+//! Integration: the coordinator over real PJRT artifacts — every scheduler
+//! produces correct numerics, cross-tenant fusion happens for space-time,
+//! and the eviction path drains cleanly.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::{Coordinator, Flavor, Reject};
+use stgpu::runtime::{host_batched_gemm, HostTensor};
+use stgpu::util::prng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn config(scheduler: SchedulerKind, n_tenants: usize, model: &str) -> Option<ServerConfig> {
+    let dir = artifacts_dir()?;
+    Some(ServerConfig {
+        scheduler,
+        artifacts_dir: dir,
+        tenants: (0..n_tenants)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                model: model.into(),
+                batch: 1,
+                slo_ms: 1000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    })
+}
+
+/// Submit `per_tenant` random sgemm requests per tenant; return payload copies
+/// keyed by request id for post-hoc verification.
+fn submit_sgemm(
+    coord: &mut Coordinator,
+    per_tenant: usize,
+    rng: &mut Rng,
+) -> Vec<(u64, usize, Vec<HostTensor>)> {
+    let n = coord.tenants.len();
+    let mut sent = Vec::new();
+    for round in 0..per_tenant {
+        for t in 0..n {
+            let payload = coord.random_payload(t, rng);
+            let id = coord.submit(t, payload.clone()).unwrap();
+            let _ = round;
+            sent.push((id, t, payload));
+        }
+    }
+    sent
+}
+
+fn verify_sgemm(sent: &[(u64, usize, Vec<HostTensor>)], responses: &[stgpu::coordinator::InferenceResponse]) {
+    for (id, _tenant, payload) in sent {
+        let resp = responses
+            .iter()
+            .find(|r| r.id == *id)
+            .unwrap_or_else(|| panic!("no response for request {id}"));
+        let a = HostTensor::stack(&[&payload[0]], 1);
+        let b = HostTensor::stack(&[&payload[1]], 1);
+        let want = host_batched_gemm(&a, &b).slice_problem(0);
+        let diff = resp.output.max_abs_diff(&want);
+        assert!(diff < 1e-2, "request {id}: diff {diff}");
+    }
+}
+
+#[test]
+fn space_time_fuses_and_computes_correctly() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 4, "sgemm:64x32x48") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(1);
+    let sent = submit_sgemm(&mut coord, 2, &mut rng);
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 8);
+    // All 8 same-class problems fused into one launch (bucket 8).
+    assert!(
+        responses.iter().all(|r| r.fused_r == 8),
+        "expected every response fused at R=8, got {:?}",
+        responses.iter().map(|r| r.fused_r).collect::<Vec<_>>()
+    );
+    verify_sgemm(&sent, &responses);
+    let snap = coord.snapshot();
+    assert_eq!(snap.superkernel_launches, 1);
+    assert_eq!(snap.total_completed(), 8);
+}
+
+#[test]
+fn time_mux_serializes_one_problem_per_launch() {
+    let Some(cfg) = config(SchedulerKind::TimeMux, 3, "sgemm:64x32x48") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(2);
+    let sent = submit_sgemm(&mut coord, 2, &mut rng);
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 6);
+    assert!(responses.iter().all(|r| r.fused_r == 1));
+    verify_sgemm(&sent, &responses);
+    let snap = coord.snapshot();
+    assert_eq!(snap.kernel_launches, 6, "six singleton launches");
+    assert_eq!(snap.superkernel_launches, 0);
+}
+
+#[test]
+fn space_mux_matches_oracle_too() {
+    let Some(cfg) = config(SchedulerKind::SpaceMux, 3, "sgemm:64x32x48") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(3);
+    let sent = submit_sgemm(&mut coord, 2, &mut rng);
+    let responses = coord.run_until_drained().unwrap();
+    verify_sgemm(&sent, &responses);
+    assert!(responses.iter().all(|r| r.fused_r == 1));
+}
+
+#[test]
+fn exclusive_batches_within_tenant_only() {
+    let Some(cfg) = config(SchedulerKind::Exclusive, 2, "sgemm:64x32x48") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(4);
+    let sent = submit_sgemm(&mut coord, 4, &mut rng);
+    let responses = coord.run_until_drained().unwrap();
+    verify_sgemm(&sent, &responses);
+    // 2 tenants × 4 requests → 2 launches of R=4 (single-tenant batches).
+    assert!(responses.iter().all(|r| r.fused_r == 4));
+    assert_eq!(coord.snapshot().superkernel_launches, 2);
+}
+
+#[test]
+fn mlp_tenants_use_their_own_weights() {
+    // Two mlp tenants with different weight seeds fused into one launch
+    // must produce DIFFERENT outputs for the SAME input — per-lane weights
+    // are per-tenant (disjoint models in one super-kernel).
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 2, "mlp") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(5);
+    let x = coord.random_payload(0, &mut rng);
+    coord.submit(0, x.clone()).unwrap();
+    coord.submit(1, x.clone()).unwrap();
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 2);
+    assert_eq!(responses[0].fused_r, 2, "both fused in one launch");
+    let d = responses[0].output.max_abs_diff(&responses[1].output);
+    assert!(d > 1e-3, "different weights must give different outputs (d={d})");
+}
+
+#[test]
+fn mlp_output_matches_host_oracle() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 1, "mlp") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(6);
+    let payload = coord.random_payload(0, &mut rng);
+    coord.submit(0, payload.clone()).unwrap();
+    let responses = coord.run_until_drained().unwrap();
+    let w = &coord.tenants.get(0).unwrap().weights;
+    let x = HostTensor::stack(&[&payload[0]], 1);
+    let w1 = HostTensor::stack(&[&w[0]], 1);
+    let b1 = HostTensor::stack(&[&w[1]], 1);
+    let w2 = HostTensor::stack(&[&w[2]], 1);
+    let h = stgpu::runtime::host_fused_linear(&x, &w1, &b1);
+    let want = host_batched_gemm(&h, &w2).slice_problem(0);
+    let diff = responses[0].output.max_abs_diff(&want);
+    assert!(diff < 1e-2, "mlp diff {diff}");
+}
+
+#[test]
+fn fused_linear_serves_and_matches_oracle() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 2, "fused_linear") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(21);
+    let payload = coord.random_payload(0, &mut rng);
+    coord.submit(0, payload.clone()).unwrap();
+    coord.submit(1, coord.random_payload(1, &mut rng)).unwrap();
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 2);
+    assert_eq!(responses[0].fused_r, 2, "cross-tenant fused");
+    let r0 = responses.iter().find(|r| r.tenant == 0).unwrap();
+    assert_eq!(r0.output.shape, vec![8, 256]);
+    assert!(r0.output.data.iter().all(|&v| v >= 0.0), "relu clamps");
+    // Oracle for tenant 0.
+    let w = &coord.tenants.get(0).unwrap().weights;
+    let want = stgpu::runtime::host_fused_linear(
+        &HostTensor::stack(&[&payload[0]], 1),
+        &HostTensor::stack(&[&w[0]], 1),
+        &HostTensor::stack(&[&w[1]], 1),
+    )
+    .slice_problem(0);
+    assert!(r0.output.max_abs_diff(&want) < 1e-2);
+}
+
+#[test]
+fn rnn_cell_outputs_bounded_by_tanh() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 2, "rnn_cell") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(7);
+    for t in 0..2 {
+        let p = coord.random_payload(t, &mut rng);
+        coord.submit(t, p).unwrap();
+    }
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 2);
+    for r in &responses {
+        assert_eq!(r.output.shape, vec![512, 1]);
+        assert!(r.output.data.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+}
+
+#[test]
+fn pallas_flavor_serves_identically() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 2, "sgemm:64x32x48") else { return };
+    let mut rng = Rng::new(8);
+    let mut coord_x = Coordinator::with_flavor(&cfg, Flavor::Xla).unwrap();
+    let sent = submit_sgemm(&mut coord_x, 1, &mut rng);
+    let rx = coord_x.run_until_drained().unwrap();
+
+    let mut coord_p = Coordinator::with_flavor(&cfg, Flavor::Pallas).unwrap();
+    for (_, t, payload) in &sent {
+        coord_p.submit(*t, payload.clone()).unwrap();
+    }
+    let rp = coord_p.run_until_drained().unwrap();
+    for (a, b) in rx.iter().zip(&rp) {
+        let d = a.output.max_abs_diff(&b.output);
+        assert!(d < 1e-3, "xla vs pallas serving diff {d}");
+    }
+}
+
+#[test]
+fn submit_validates_payload_shapes() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 1, "sgemm:64x32x48") else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    // Wrong tensor count.
+    assert!(matches!(
+        coord.submit(0, vec![HostTensor::zeros(&[64, 48])]),
+        Err(Reject::BadRequest(_))
+    ));
+    // Wrong shape.
+    assert!(matches!(
+        coord.submit(
+            0,
+            vec![HostTensor::zeros(&[64, 48]), HostTensor::zeros(&[48, 33])]
+        ),
+        Err(Reject::BadRequest(_))
+    ));
+    // Unknown tenant.
+    assert!(matches!(coord.submit(9, vec![]), Err(Reject::BadRequest(_))));
+}
+
+#[test]
+fn queue_depth_backpressures() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        artifacts_dir: dir,
+        queue_depth: 2,
+        tenants: vec![TenantConfig {
+            name: "t0".into(),
+            model: "sgemm:64x32x48".into(),
+            batch: 1,
+            slo_ms: 1000.0,
+            weight_seed: 0,
+        }],
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(9);
+    let p = coord.random_payload(0, &mut rng);
+    coord.submit(0, p.clone()).unwrap();
+    coord.submit(0, p.clone()).unwrap();
+    assert_eq!(coord.submit(0, p.clone()), Err(Reject::QueueFull));
+    // Draining frees capacity.
+    coord.run_until_drained().unwrap();
+    assert!(coord.submit(0, p).is_ok());
+}
+
+#[test]
+fn warmup_covers_tenant_kinds() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 2, "mlp") else { return };
+    let coord = Coordinator::new(&cfg).unwrap();
+    let n = coord.warmup().unwrap();
+    assert_eq!(n, 7, "mlp_block xla artifacts across 7 R buckets");
+    // After warmup the serving path never compiles.
+    let before = coord.engine().stats().compiles;
+    assert_eq!(before as usize, n);
+}

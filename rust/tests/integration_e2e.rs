@@ -1,0 +1,195 @@
+//! End-to-end: config file → coordinator → threaded server → concurrent
+//! closed-loop clients → metrics, across all four schedulers — the full
+//! stack the `stgpu serve` binary runs, validated in-process.
+//!
+//! Requires `make artifacts` (skips otherwise).
+
+use std::time::{Duration, Instant};
+
+use stgpu::config::ServerConfig;
+use stgpu::coordinator::Coordinator;
+use stgpu::server::{ServeOpts, Server};
+use stgpu::util::prng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built");
+        None
+    }
+}
+
+/// The e2e config is written as TOML and round-tripped through the real
+/// config loader — the same path `stgpu serve --config` takes.
+fn load_config(scheduler: &str, dir: &std::path::Path) -> ServerConfig {
+    let toml = format!(
+        r#"
+        [server]
+        scheduler = "{scheduler}"
+        max_batch = 32
+        batch_timeout_us = 300
+        queue_depth = 64
+        artifacts_dir = "{}"
+
+        [[tenant]]
+        name = "mlp-a"
+        model = "mlp"
+        slo_ms = 250.0
+        weight_seed = 1
+
+        [[tenant]]
+        name = "mlp-b"
+        model = "mlp"
+        slo_ms = 250.0
+        weight_seed = 2
+
+        [[tenant]]
+        name = "mlp-c"
+        model = "mlp"
+        slo_ms = 250.0
+        weight_seed = 3
+
+        [[tenant]]
+        name = "mlp-d"
+        model = "mlp"
+        slo_ms = 250.0
+        weight_seed = 4
+        "#,
+        dir.display()
+    );
+    let doc = stgpu::config::TomlDoc::parse(&toml).expect("toml");
+    ServerConfig::from_doc(&doc).expect("config")
+}
+
+/// Run a closed-loop workload: one client thread per tenant, each keeping
+/// `DEPTH` requests outstanding (the saturated-queue setting of paper §2 —
+/// "request queues are always saturated"). Returns (completed, snapshot).
+fn run_workload(
+    cfg: &ServerConfig,
+    duration: Duration,
+) -> (u64, stgpu::metrics::Snapshot) {
+    const DEPTH: usize = 8;
+    let coord = Coordinator::new(cfg).unwrap();
+    coord.warmup().unwrap();
+    let server = Server::start(
+        coord,
+        ServeOpts { batch_timeout: Duration::from_micros(cfg.batch_timeout_us), ..Default::default() },
+    );
+    let stop_at = Instant::now() + duration;
+    let mut clients = Vec::new();
+    for t in 0..cfg.tenants.len() {
+        let h = server.handle();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(7000 + t as u64);
+            let mut ok = 0u64;
+            while Instant::now() < stop_at {
+                // Keep DEPTH in flight, then reap the whole window.
+                let pending: Vec<_> = (0..DEPTH)
+                    .map(|_| {
+                        let payload =
+                            vec![stgpu::runtime::HostTensor::random(&[8, 256], &mut rng)];
+                        h.submit(t, payload)
+                    })
+                    .collect();
+                for rx in pending {
+                    if matches!(rx.recv(), Ok(Ok(_))) {
+                        ok += 1;
+                    }
+                }
+            }
+            ok
+        }));
+    }
+    let completed: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    let coord = server.shutdown();
+    (completed, coord.snapshot())
+}
+
+#[test]
+fn e2e_space_time_serves_and_fuses() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = load_config("space-time", &dir);
+    let (completed, snap) = run_workload(&cfg, Duration::from_millis(1500));
+    assert!(completed > 20, "completed only {completed}");
+    assert_eq!(snap.total_completed(), completed);
+    assert!(
+        snap.superkernel_launches > 0,
+        "space-time must fuse cross-tenant work"
+    );
+    // Every tenant made progress (fairness).
+    for (name, t) in &snap.tenants {
+        assert!(t.completed > 0, "tenant {name} starved");
+    }
+}
+
+#[test]
+fn e2e_all_schedulers_complete_same_workload() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut results = Vec::new();
+    for sched in ["exclusive", "time-mux", "space-mux", "space-time"] {
+        let cfg = load_config(sched, &dir);
+        let (completed, snap) = run_workload(&cfg, Duration::from_millis(800));
+        assert!(completed > 0, "{sched} served nothing");
+        assert_eq!(snap.total_completed(), completed, "{sched} lost requests");
+        results.push((sched, completed, snap));
+    }
+    // The space-time run must not be the worst performer: on the real CPU
+    // path its advantage is launch amortization, so it should complete at
+    // least as much as time-mux.
+    let get = |name: &str| results.iter().find(|(s, ..)| *s == name).unwrap().1;
+    let st = get("space-time");
+    let tm = get("time-mux");
+    assert!(
+        st as f64 >= tm as f64 * 0.8,
+        "space-time {st} fell behind time-mux {tm}"
+    );
+}
+
+#[test]
+fn e2e_latency_predictability_across_tenants() {
+    // Paper criterion: predictability — same-architecture tenants under
+    // space-time should see comparable p50s (no straggler tenant).
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = load_config("space-time", &dir);
+    let (_, snap) = run_workload(&cfg, Duration::from_millis(1500));
+    let p50s: Vec<f64> = snap
+        .tenants
+        .values()
+        .filter(|t| t.completed >= 5)
+        .map(|t| t.latency_p50_ns as f64)
+        .collect();
+    assert!(p50s.len() >= 3, "not enough sampled tenants");
+    let fast = p50s.iter().cloned().fold(f64::INFINITY, f64::min);
+    let slow = p50s.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        slow / fast < 3.0,
+        "tenant p50 spread too wide: {:.2}x (fast {fast:.0} ns, slow {slow:.0} ns)",
+        slow / fast
+    );
+}
+
+#[test]
+fn e2e_metrics_account_every_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = load_config("space-time", &dir);
+    let coord = Coordinator::new(&cfg).unwrap();
+    let server = Server::start(coord, ServeOpts::default());
+    let h = server.handle();
+    let mut rng = Rng::new(11);
+    let mut ok = 0u64;
+    for i in 0..20 {
+        let t = i % 4;
+        let payload = vec![stgpu::runtime::HostTensor::random(&[8, 256], &mut rng)];
+        if h.submit_blocking(t, payload).is_ok() {
+            ok += 1;
+        }
+    }
+    let coord = server.shutdown();
+    let snap = coord.snapshot();
+    assert_eq!(snap.total_completed(), ok);
+    let per_tenant: u64 = snap.tenants.values().map(|t| t.completed).sum();
+    assert_eq!(per_tenant, ok, "per-tenant counts must sum to total");
+    assert!(snap.cache_misses <= 7 * 4, "bounded by warmup set");
+}

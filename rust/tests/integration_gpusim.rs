@@ -1,0 +1,213 @@
+//! Integration: the V100 simulator reproduces the *shapes* of the paper's
+//! findings — who wins, by roughly what factor, where the walls fall.
+//! (Absolute numbers live in the benches; these tests pin the orderings the
+//! paper's figures depend on.)
+
+use stgpu::gpusim::memory::{max_replicas, DeploymentShape};
+use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::models::zoo;
+use stgpu::workload::{model_tenants, sgemm_tenants};
+
+fn throughput(policy: Policy, tenants: usize, shape: GemmShape) -> f64 {
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy);
+    let report = gpusim::run(&cfg, &sgemm_tenants(tenants, 30, shape));
+    report.throughput_flops()
+}
+
+#[test]
+fn spacetime_beats_space_beats_time_at_conv2_2() {
+    // Figure 7 ordering at the paper's conv2_2 shape.
+    let shape = GemmShape::RESNET18_CONV2_2;
+    for r in [10, 20, 60] {
+        let st = throughput(Policy::SpaceTime { max_batch: 64 }, r, shape);
+        let sp = throughput(Policy::SpaceMuxMps { anomaly_seed: 1 }, r, shape);
+        let tm = throughput(Policy::TimeMux, r, shape);
+        assert!(st > sp, "R={r}: space-time {st:.3e} must beat space {sp:.3e}");
+        assert!(sp > tm, "R={r}: space {sp:.3e} must beat time {tm:.3e}");
+    }
+}
+
+#[test]
+fn spacetime_speedup_over_space_is_multiple_x() {
+    // Paper: 3.23x over space-only at conv2_2 (geomean 2 <= R <= 120).
+    let shape = GemmShape::RESNET18_CONV2_2;
+    let mut ratios = Vec::new();
+    for r in [10usize, 20, 40, 80, 120] {
+        let st = throughput(Policy::SpaceTime { max_batch: 128 }, r, shape);
+        let sp = throughput(Policy::SpaceMuxMps { anomaly_seed: 1 }, r, shape);
+        ratios.push(st / sp);
+    }
+    let geomean = stgpu::util::stats::geomean(&ratios);
+    assert!(
+        geomean > 2.0 && geomean < 6.0,
+        "conv2_2 space-time/space geomean {geomean:.2} out of paper-shaped band"
+    );
+}
+
+#[test]
+fn time_mux_slowdown_grows_linearly() {
+    // Figure 3: time multiplexing latency degrades roughly linearly in the
+    // number of tenants.
+    let shape = GemmShape::RESNET18_CONV2_2;
+    let mean_latency = |n: usize| {
+        let cfg = SimConfig::new(DeviceSpec::v100(), Policy::TimeMux);
+        gpusim::run(&cfg, &sgemm_tenants(n, 20, shape)).mean_latency()
+    };
+    let l2 = mean_latency(2);
+    let l8 = mean_latency(8);
+    let l16 = mean_latency(16);
+    let r8 = l8 / l2; // ≈ 4 for linear scaling
+    let r16 = l16 / l2; // ≈ 8
+    assert!((2.5..6.0).contains(&r8), "8/2 tenant latency ratio {r8:.2}");
+    assert!((5.0..12.0).contains(&r16), "16/2 tenant latency ratio {r16:.2}");
+}
+
+#[test]
+fn exclusive_is_the_latency_floor() {
+    let shape = GemmShape::SQUARE_256;
+    let run = |p: Policy| {
+        let cfg = SimConfig::new(DeviceSpec::v100(), p);
+        gpusim::run(&cfg, &sgemm_tenants(6, 20, shape)).mean_latency()
+    };
+    let excl = run(Policy::Exclusive);
+    for p in [
+        Policy::TimeMux,
+        Policy::SpaceMuxMps { anomaly_seed: 3 },
+        Policy::SpaceMuxStreams,
+    ] {
+        let l = run(p.clone());
+        assert!(
+            l >= excl * 0.99,
+            "{}: latency {l:.3e} below exclusive floor {excl:.3e}",
+            p.label()
+        );
+    }
+}
+
+#[test]
+fn mps_straggler_gap_within_paper_band() {
+    // Figure 4: up to ~25% fastest-vs-slowest gap under MPS; worse for odd
+    // tenant counts.
+    let shape = GemmShape::RESNET18_CONV2_2;
+    let gap = |n: usize| {
+        let cfg = SimConfig::new(
+            DeviceSpec::v100(),
+            Policy::SpaceMuxMps { anomaly_seed: 7 },
+        );
+        gpusim::run(&cfg, &sgemm_tenants(n, 20, shape)).straggler_gap()
+    };
+    let g_even = gap(8);
+    let g_odd = gap(9);
+    assert!(g_even >= 0.0 && g_even <= 0.30, "even gap {g_even:.3}");
+    assert!(g_odd <= 0.30, "odd gap {g_odd:.3}");
+    assert!(g_odd >= g_even, "odd tenant counts amplify the anomaly");
+    // Streams (no MPS proxy) shows no anomaly gap.
+    let cfg = SimConfig::new(DeviceSpec::v100(), Policy::SpaceMuxStreams);
+    let g_streams = gpusim::run(&cfg, &sgemm_tenants(8, 20, shape)).straggler_gap();
+    assert!(g_streams < g_even.max(0.02), "streams gap {g_streams:.3}");
+}
+
+#[test]
+fn memory_wall_matches_figure5() {
+    // Figure 5: process-per-replica hits the 16 GB wall around 18 ResNet-50
+    // replicas; explicit streams scale to at least 60.
+    let spec = DeviceSpec::v100();
+    let resnet50 = zoo::resnet50();
+    let fp = resnet50.footprint(26);
+    let wall_proc = max_replicas(&spec, DeploymentShape::ProcessPerReplica, &fp);
+    let wall_streams = max_replicas(&spec, DeploymentShape::SharedProcessStreams, &fp);
+    assert!(
+        (14..=22).contains(&wall_proc),
+        "process-per-replica wall {wall_proc} (paper: 18)"
+    );
+    assert!(wall_streams >= 60, "streams wall {wall_streams} (paper: >= 60)");
+}
+
+#[test]
+fn superkernel_reduces_launch_count() {
+    // Figure 6's point: space-time collapses R launches into ~R/max_batch.
+    let shape = GemmShape::SQUARE_256;
+    let n = 32;
+    let cfg_st = SimConfig::new(DeviceSpec::v100(), Policy::SpaceTime { max_batch: 64 });
+    let st = gpusim::run(&cfg_st, &sgemm_tenants(n, 10, shape));
+    let cfg_sp = SimConfig::new(DeviceSpec::v100(), Policy::SpaceMuxStreams);
+    let sp = gpusim::run(&cfg_sp, &sgemm_tenants(n, 10, shape));
+    assert!(st.superkernel_launches > 0);
+    assert!(
+        st.superkernel_launches * 8 <= sp.kernel_launches,
+        "super-kernels {} should be far fewer than stream launches {}",
+        st.superkernel_launches,
+        sp.kernel_launches
+    );
+    assert_eq!(st.fused_problems, (n as u64) * 10);
+}
+
+#[test]
+fn model_workloads_complete_under_all_policies() {
+    // Figure 3 macro-workload: MobileNetV2 + ResNet-50 replicas complete
+    // every inference under every policy (conservation).
+    for model in [zoo::mobilenet_v2(), zoo::resnet50()] {
+        let workloads = model_tenants(4, 3, &model, 4);
+        for policy in [
+            Policy::Exclusive,
+            Policy::TimeMux,
+            Policy::SpaceMuxMps { anomaly_seed: 5 },
+            Policy::SpaceMuxStreams,
+            Policy::SpaceTime { max_batch: 32 },
+        ] {
+            let cfg = SimConfig::new(DeviceSpec::v100(), policy.clone());
+            let report = gpusim::run(&cfg, &workloads);
+            assert_eq!(
+                report.total_completed(),
+                4 * 3,
+                "{} on {}: lost inferences",
+                policy.label(),
+                model.name
+            );
+            assert!(report.makespan > 0.0);
+        }
+    }
+}
+
+#[test]
+fn throughput_never_exceeds_device_peak() {
+    let spec = DeviceSpec::v100();
+    let peak = spec.peak_flops();
+    for policy in [
+        Policy::Exclusive,
+        Policy::TimeMux,
+        Policy::SpaceMuxStreams,
+        Policy::SpaceTime { max_batch: 64 },
+    ] {
+        let cfg = SimConfig::new(spec.clone(), policy);
+        let report = gpusim::run(&cfg, &sgemm_tenants(16, 20, GemmShape::SQUARE_256));
+        assert!(
+            report.throughput_flops() <= peak * 1.001,
+            "{}: {:.3e} exceeds peak {:.3e}",
+            cfg.policy.label(),
+            report.throughput_flops(),
+            peak
+        );
+    }
+}
+
+#[test]
+fn figure1_lineup_latency_grows_with_model_year() {
+    // Figure 1's trend: CPU batch-1 latency increases across generations;
+    // SENet-154 ≈ 4.1 s on CPU.
+    let cpu = DeviceSpec::cpu_xeon();
+    let mut latencies = Vec::new();
+    for model in zoo::figure1_lineup() {
+        let cfg = SimConfig::new(cpu.clone(), Policy::Exclusive);
+        let report = gpusim::run(&cfg, &model_tenants(1, 1, &model, 1));
+        latencies.push((model.name.clone(), report.mean_latency()));
+    }
+    // NB: exact match — "densenet121".contains("senet") is true!
+    let alexnet = latencies.iter().find(|(n, _)| n == "alexnet").unwrap().1;
+    let senet = latencies.iter().find(|(n, _)| n == "senet154").unwrap().1;
+    assert!(senet > alexnet * 10.0, "senet {senet:.2}s vs alexnet {alexnet:.2}s");
+    assert!(
+        (2.0..8.0).contains(&senet),
+        "senet CPU latency {senet:.2}s (paper: ~4.1 s)"
+    );
+}

@@ -1,0 +1,173 @@
+//! Integration: the full AOT bridge — python-lowered HLO text artifacts
+//! loaded, compiled, and executed through the PJRT CPU client, validated
+//! against the rust host oracle.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use stgpu::runtime::{host_batched_gemm, host_fused_linear, HostTensor, PjrtEngine};
+use stgpu::util::prng::Rng;
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::new(dir).expect("engine"))
+}
+
+#[test]
+fn manifest_lists_all_kinds_and_buckets() {
+    let Some(eng) = engine() else { return };
+    let m = eng.manifest();
+    for kind in ["batched_gemm", "fused_linear", "mlp_block", "rnn_cell"] {
+        for impl_ in ["pallas", "xla"] {
+            let buckets = m.r_buckets(kind, impl_);
+            assert_eq!(
+                buckets,
+                vec![1, 2, 4, 8, 16, 32, 64],
+                "kind={kind} impl={impl_}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_batched_gemm_matches_host_oracle() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(42);
+    // square shape class, R bucket 2
+    let a = HostTensor::random(&[2, 256, 256], &mut rng);
+    let b = HostTensor::random(&[2, 256, 256], &mut rng);
+    let out = eng.run("gemm_square_r2.xla", &[a.clone(), b.clone()]).unwrap();
+    assert_eq!(out.len(), 1);
+    let want = host_batched_gemm(&a, &b);
+    let diff = out[0].max_abs_diff(&want);
+    assert!(diff < 1e-2, "max abs diff {diff}");
+}
+
+#[test]
+fn pallas_and_xla_flavors_agree_through_pjrt() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(7);
+    let a = HostTensor::random(&[1, 512, 512], &mut rng);
+    let b = HostTensor::random(&[1, 512, 1], &mut rng);
+    let p = eng
+        .run("gemm_rnn_matvec_r1.pallas", &[a.clone(), b.clone()])
+        .unwrap();
+    let x = eng.run("gemm_rnn_matvec_r1.xla", &[a, b]).unwrap();
+    let diff = p[0].max_abs_diff(&x[0]);
+    assert!(diff < 1e-3, "pallas vs xla diff {diff}");
+}
+
+#[test]
+fn fused_linear_epilogue_matches_host() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let a = HostTensor::random(&[2, 8, 512], &mut rng);
+    let w = HostTensor::random(&[2, 512, 256], &mut rng);
+    let bias = HostTensor::random(&[2, 1, 256], &mut rng);
+    let out = eng
+        .run("fused_linear_r2.xla", &[a.clone(), w.clone(), bias.clone()])
+        .unwrap();
+    let want = host_fused_linear(&a, &w, &bias);
+    let diff = out[0].max_abs_diff(&want);
+    assert!(diff < 1e-2, "diff {diff}");
+    assert!(out[0].data.iter().all(|&v| v >= 0.0), "relu must clamp");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let a = HostTensor::random(&[1, 256, 256], &mut rng);
+    let b = HostTensor::random(&[1, 256, 256], &mut rng);
+    let inputs = [a, b];
+    eng.run("gemm_square_r1.xla", &inputs).unwrap();
+    let s1 = eng.stats();
+    for _ in 0..3 {
+        eng.run("gemm_square_r1.xla", &inputs).unwrap();
+    }
+    let s2 = eng.stats();
+    assert_eq!(s1.compiles, s2.compiles, "cache must prevent recompiles");
+    assert_eq!(s2.executions, s1.executions + 3);
+    assert!(s2.cache_hits >= 3);
+}
+
+#[test]
+fn shape_mismatch_is_rejected_not_ub() {
+    let Some(eng) = engine() else { return };
+    let bad = HostTensor::zeros(&[3, 256, 256]); // wrong R for r1 artifact
+    let ok = HostTensor::zeros(&[1, 256, 256]);
+    assert!(eng.run("gemm_square_r1.xla", &[bad, ok]).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(eng) = engine() else { return };
+    assert!(eng.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn warmup_precompiles_matching_set() {
+    let Some(eng) = engine() else { return };
+    let n = eng
+        .warmup(|a| a.kind == "mlp_block" && a.impl_ == "xla" && a.r() <= 2)
+        .unwrap();
+    assert_eq!(n, 2); // r1 + r2
+    assert!(eng.cached_count() >= 2);
+}
+
+#[test]
+fn mlp_block_runs_end_to_end() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(11);
+    let x = HostTensor::random(&[1, 8, 256], &mut rng);
+    let w1 = HostTensor::random(&[1, 256, 512], &mut rng);
+    let b1 = HostTensor::random(&[1, 1, 512], &mut rng);
+    let w2 = HostTensor::random(&[1, 512, 256], &mut rng);
+    let out = eng
+        .run("mlp_block_r1.xla", &[x.clone(), w1.clone(), b1.clone(), w2.clone()])
+        .unwrap();
+    assert_eq!(out[0].shape, vec![1, 8, 256]);
+    // Oracle: relu(x@w1+b1) @ w2 on the host.
+    let h = host_fused_linear(&x, &w1, &b1);
+    let want = host_batched_gemm(&h, &w2);
+    assert!(out[0].max_abs_diff(&want) < 1e-2);
+}
+
+#[test]
+fn superkernel_problems_are_isolated() {
+    // Isolation (paper §4): problem r's output must not depend on what else
+    // is in the super-kernel batch — including zero padding.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(13);
+    let a0 = HostTensor::random(&[256, 256], &mut rng);
+    let b0 = HostTensor::random(&[256, 256], &mut rng);
+    // Run solo in the r1 executable...
+    let solo = eng
+        .run(
+            "gemm_square_r1.xla",
+            &[
+                HostTensor::stack(&[&a0], 1),
+                HostTensor::stack(&[&b0], 1),
+            ],
+        )
+        .unwrap();
+    // ...and padded into the r4 executable alongside zeros.
+    let padded = eng
+        .run(
+            "gemm_square_r4.xla",
+            &[
+                HostTensor::stack(&[&a0], 4),
+                HostTensor::stack(&[&b0], 4),
+            ],
+        )
+        .unwrap();
+    let diff = solo[0].slice_problem(0).max_abs_diff(&padded[0].slice_problem(0));
+    assert!(diff < 1e-4, "batch padding changed problem 0: {diff}");
+    // Padding lanes are exactly zero.
+    for r in 1..4 {
+        assert!(padded[0].slice_problem(r).data.iter().all(|&v| v == 0.0));
+    }
+}

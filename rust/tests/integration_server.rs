@@ -1,0 +1,171 @@
+//! Integration: the threaded serving frontend — concurrent clients,
+//! batching window, snapshot, status endpoint, clean shutdown.
+//!
+//! Requires `make artifacts` (skips otherwise).
+
+use std::io::Read;
+use std::time::Duration;
+
+use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::Coordinator;
+use stgpu::server::{ServeOpts, Server, StatusEndpoint};
+use stgpu::util::prng::Rng;
+
+fn config(scheduler: SchedulerKind, n_tenants: usize) -> Option<ServerConfig> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built");
+        return None;
+    }
+    Some(ServerConfig {
+        scheduler,
+        artifacts_dir: dir,
+        tenants: (0..n_tenants)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                model: "sgemm:64x32x48".into(),
+                batch: 1,
+                slo_ms: 1000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    })
+}
+
+fn start(cfg: &ServerConfig) -> Server {
+    let coord = Coordinator::new(cfg).unwrap();
+    coord.warmup().unwrap();
+    Server::start(coord, ServeOpts::default())
+}
+
+#[test]
+fn blocking_submit_roundtrips() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 2) else { return };
+    let server = start(&cfg);
+    let h = server.handle();
+    let mut rng = Rng::new(1);
+    let payload = vec![
+        stgpu::runtime::HostTensor::random(&[64, 48], &mut rng),
+        stgpu::runtime::HostTensor::random(&[48, 32], &mut rng),
+    ];
+    let resp = h.submit_blocking(0, payload).expect("response");
+    assert_eq!(resp.tenant, 0);
+    assert_eq!(resp.output.shape, vec![64, 32]);
+    assert!(resp.latency_s > 0.0);
+    let coord = server.shutdown();
+    assert_eq!(coord.snapshot().total_completed(), 1);
+}
+
+#[test]
+fn concurrent_clients_all_complete() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 4) else { return };
+    let server = start(&cfg);
+    let mut clients = Vec::new();
+    for t in 0..4usize {
+        let h = server.handle();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t as u64);
+            let mut ok = 0;
+            for _ in 0..10 {
+                let payload = vec![
+                    stgpu::runtime::HostTensor::random(&[64, 48], &mut rng),
+                    stgpu::runtime::HostTensor::random(&[48, 32], &mut rng),
+                ];
+                if h.submit_blocking(t, payload).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(total, 40);
+    let coord = server.shutdown();
+    let snap = coord.snapshot();
+    assert_eq!(snap.total_completed(), 40);
+    // Closed-loop with 4 concurrent clients: the batching window must have
+    // fused at least some cross-tenant launches.
+    assert!(
+        snap.superkernel_launches > 0,
+        "expected some fused launches, got 0 (kernel_launches={})",
+        snap.kernel_launches
+    );
+}
+
+#[test]
+fn snapshot_while_serving() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 1) else { return };
+    let server = start(&cfg);
+    let h = server.handle();
+    let snap = h.snapshot().expect("snapshot");
+    assert_eq!(snap.total_completed(), 0);
+    let mut rng = Rng::new(2);
+    let payload = vec![
+        stgpu::runtime::HostTensor::random(&[64, 48], &mut rng),
+        stgpu::runtime::HostTensor::random(&[48, 32], &mut rng),
+    ];
+    h.submit_blocking(0, payload).unwrap();
+    let snap = h.snapshot().expect("snapshot");
+    assert_eq!(snap.total_completed(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn bad_tenant_rejected_without_hanging() {
+    let Some(cfg) = config(SchedulerKind::TimeMux, 1) else { return };
+    let server = start(&cfg);
+    let h = server.handle();
+    let res = h.submit_blocking(7, vec![]);
+    assert!(res.is_err());
+    server.shutdown();
+}
+
+#[test]
+fn status_endpoint_serves_json() {
+    let Some(cfg) = config(SchedulerKind::SpaceTime, 1) else { return };
+    let server = start(&cfg);
+    let ep = StatusEndpoint::start("127.0.0.1:0", server.handle()).unwrap();
+    let addr = ep.addr();
+    let mut body = String::new();
+    {
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        sock.read_to_string(&mut body).unwrap();
+    }
+    assert!(body.contains("\"tenants\""), "status body: {body}");
+    let parsed = stgpu::util::json::Json::parse(body.trim()).expect("valid json");
+    assert!(parsed.get("wall_seconds").is_some());
+    ep.stop();
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight() {
+    let Some(cfg) = config(SchedulerKind::TimeMux, 2) else { return };
+    let server = start(&cfg);
+    let h = server.handle();
+    let mut rng = Rng::new(3);
+    // Fire-and-collect: submit a burst, then shut down; every receiver must
+    // resolve (either a response or a shutdown rejection) — no hangs.
+    let mut pending = Vec::new();
+    for t in 0..2usize {
+        for _ in 0..5 {
+            let payload = vec![
+                stgpu::runtime::HostTensor::random(&[64, 48], &mut rng),
+                stgpu::runtime::HostTensor::random(&[48, 32], &mut rng),
+            ];
+            pending.push(h.submit(t, payload));
+        }
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let coord = server.shutdown();
+    let mut resolved = 0;
+    for rx in pending {
+        if rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+            resolved += 1;
+        }
+    }
+    assert_eq!(resolved, 10, "every submission resolves");
+    assert!(coord.snapshot().total_completed() <= 10);
+}

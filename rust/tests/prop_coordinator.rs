@@ -1,0 +1,330 @@
+//! Property tests over coordinator invariants: batching, routing, queueing
+//! and monitor state machines. These run against the pure logic (no PJRT),
+//! so thousands of cases are cheap.
+
+use std::time::Instant;
+
+use stgpu::coordinator::batcher::DynamicBatcher;
+use stgpu::coordinator::monitor::{MonitorConfig, SloMonitor};
+use stgpu::coordinator::queue::QueueSet;
+use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
+use stgpu::coordinator::scheduler::{make_scheduler, Scheduler};
+use stgpu::coordinator::tenant::TenantRegistry;
+use stgpu::config::SchedulerKind;
+use stgpu::util::prng::Rng;
+use stgpu::util::prop::{check, run_prop, sized};
+
+const SHAPES: [(usize, usize, usize); 4] =
+    [(512, 1, 512), (256, 128, 1152), (256, 256, 256), (64, 32, 48)];
+
+fn rand_class(rng: &mut Rng) -> ShapeClass {
+    let (m, n, k) = SHAPES[rng.gen_range(SHAPES.len() as u64) as usize];
+    ShapeClass::batched_gemm(m, n, k)
+}
+
+fn rand_requests(rng: &mut Rng, n_tenants: usize, max: usize) -> Vec<InferenceRequest> {
+    let n = sized(rng, max as u64) as usize;
+    (0..n)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            tenant: rng.gen_range(n_tenants as u64) as usize,
+            class: rand_class(rng),
+            payload: vec![],
+            arrived: Instant::now(),
+            deadline: Instant::now(),
+        })
+        .collect()
+}
+
+fn buckets() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32, 64]
+}
+
+// ---------------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    check("batcher conserves requests", 0xB0, |rng| {
+        let max_batch = 1 + sized(rng, 64) as usize;
+        let mut b = DynamicBatcher::new(buckets(), max_batch);
+        let reqs = rand_requests(rng, 8, 200);
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let launches = b.plan(reqs);
+        let mut out: Vec<u64> = launches
+            .iter()
+            .flat_map(|l| l.entries.iter().map(|e| e.id))
+            .collect();
+        out.sort_unstable();
+        let mut want = ids;
+        want.sort_unstable();
+        assert_eq!(out, want, "every request appears in exactly one launch");
+    });
+}
+
+#[test]
+fn prop_batcher_never_mixes_classes() {
+    check("no cross-class fusion", 0xB1, |rng| {
+        let mut b = DynamicBatcher::new(buckets(), 1 + sized(rng, 64) as usize);
+        for l in b.plan(rand_requests(rng, 8, 200)) {
+            assert!(l.entries.iter().all(|e| e.class == l.class));
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_respects_max_batch_and_buckets() {
+    check("launch sizes legal", 0xB2, |rng| {
+        let max_batch = 1 + sized(rng, 64) as usize;
+        let mut b = DynamicBatcher::new(buckets(), max_batch);
+        for l in b.plan(rand_requests(rng, 8, 200)) {
+            assert!(!l.entries.is_empty());
+            assert!(l.entries.len() <= max_batch);
+            assert!(l.entries.len() <= l.r_bucket);
+            assert!(buckets().contains(&l.r_bucket), "bucket {}", l.r_bucket);
+            // Round-up is tight: the next smaller bucket wouldn't fit.
+            let smaller: Vec<usize> =
+                buckets().into_iter().filter(|&x| x < l.r_bucket).collect();
+            if let Some(&prev) = smaller.last() {
+                assert!(
+                    l.entries.len() > prev,
+                    "{} problems should not use bucket {} (prev {})",
+                    l.entries.len(),
+                    l.r_bucket,
+                    prev
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_padding_bounded_by_2x() {
+    // Powers-of-two buckets bound padding waste to < 50% of lanes.
+    check("padding waste < 0.5", 0xB3, |rng| {
+        let mut b = DynamicBatcher::new(buckets(), 64);
+        let reqs = rand_requests(rng, 8, 300);
+        if reqs.is_empty() {
+            return;
+        }
+        b.plan(reqs);
+        assert!(
+            b.stats.padding_waste() < 0.5,
+            "waste {}",
+            b.stats.padding_waste()
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler invariants
+// ---------------------------------------------------------------------------
+
+fn fill_queues(rng: &mut Rng, n_tenants: usize, max_per: usize) -> (QueueSet, usize) {
+    let mut q = QueueSet::new(n_tenants, 10_000);
+    let mut total = 0;
+    let mut id = 0u64;
+    for t in 0..n_tenants {
+        let n = rng.gen_range(max_per as u64 + 1) as usize;
+        for _ in 0..n {
+            q.push(InferenceRequest {
+                id,
+                tenant: t,
+                class: rand_class(rng),
+                payload: vec![],
+                arrived: Instant::now(),
+            deadline: Instant::now(),
+            })
+            .unwrap();
+            id += 1;
+            total += 1;
+        }
+    }
+    (q, total)
+}
+
+#[test]
+fn prop_all_schedulers_drain_everything() {
+    for kind in [
+        SchedulerKind::Exclusive,
+        SchedulerKind::TimeMux,
+        SchedulerKind::SpaceMux,
+        SchedulerKind::SpaceTime,
+    ] {
+        run_prop(&format!("{kind:?} drains"), 0xC0, 64, |rng| {
+            let n_tenants = 1 + rng.gen_range(8) as usize;
+            let (mut q, total) = fill_queues(rng, n_tenants, 30);
+            let mut s = make_scheduler(kind, buckets(), 16);
+            let mut served = 0;
+            let mut rounds = 0;
+            while !q.is_empty() {
+                let plan = s.plan_round(&mut q);
+                served += plan.drained;
+                rounds += 1;
+                assert!(
+                    rounds <= total.max(1) * 2 + 8,
+                    "{}: too many rounds ({rounds}) for {total} requests",
+                    s.label()
+                );
+                assert_eq!(
+                    plan.drained,
+                    plan.launches.iter().map(|l| l.entries.len()).sum::<usize>()
+                );
+            }
+            assert_eq!(served, total);
+        });
+    }
+}
+
+#[test]
+fn prop_timemux_launches_are_singletons() {
+    check("time-mux singletons", 0xC1, |rng| {
+        let (mut q, _) = fill_queues(rng, 4, 20);
+        let mut s = make_scheduler(SchedulerKind::TimeMux, buckets(), 16);
+        while !q.is_empty() {
+            for l in s.plan_round(&mut q).launches {
+                assert_eq!(l.entries.len(), 1);
+                assert_eq!(l.r_bucket, 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_exclusive_never_mixes_tenants() {
+    check("exclusive single-tenant launches", 0xC2, |rng| {
+        let (mut q, _) = fill_queues(rng, 6, 20);
+        let mut s = make_scheduler(SchedulerKind::Exclusive, buckets(), 16);
+        while !q.is_empty() {
+            for l in s.plan_round(&mut q).launches {
+                let t0 = l.entries[0].tenant;
+                assert!(l.entries.iter().all(|e| e.tenant == t0));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spacetime_fifo_per_tenant_and_class() {
+    // FIFO holds per (tenant, shape class): a tenant's same-class requests
+    // complete in submission order. Cross-class order within one round is
+    // concurrent by design (launches are independent super-kernels), and
+    // lane order within a launch is canonicalized for fusion-cache reuse.
+    check("space-time preserves per-(tenant,class) FIFO", 0xC3, |rng| {
+        let (mut q, _) = fill_queues(rng, 5, 30);
+        let mut s = make_scheduler(SchedulerKind::SpaceTime, buckets(), 16);
+        let mut last_seen: std::collections::HashMap<(usize, ShapeClass), u64> =
+            std::collections::HashMap::new();
+        while !q.is_empty() {
+            for l in s.plan_round(&mut q).launches {
+                for e in &l.entries {
+                    if let Some(&prev) = last_seen.get(&(e.tenant, e.class)) {
+                        assert!(
+                            e.id > prev,
+                            "tenant {} class {} ids out of order: {} after {}",
+                            e.tenant,
+                            e.class,
+                            e.id,
+                            prev
+                        );
+                    }
+                    last_seen.insert((e.tenant, e.class), e.id);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spacetime_single_class_fills_before_splitting() {
+    // With one shape class and <= max_batch total, everything lands in one
+    // launch — the paper's "merge all queued problems" roofline case.
+    check("space-time merges all queued", 0xC4, |rng| {
+        let n_tenants = 1 + rng.gen_range(6) as usize;
+        let class = ShapeClass::batched_gemm(256, 256, 256);
+        let mut q = QueueSet::new(n_tenants, 1000);
+        let total = 1 + sized(rng, 64) as usize;
+        for i in 0..total {
+            q.push(InferenceRequest {
+                id: i as u64,
+                tenant: i % n_tenants,
+                class,
+                payload: vec![],
+                arrived: Instant::now(),
+            deadline: Instant::now(),
+            })
+            .unwrap();
+        }
+        let mut s = make_scheduler(SchedulerKind::SpaceTime, buckets(), 64);
+        let plan = s.plan_round(&mut q);
+        assert_eq!(plan.launches.len(), 1, "total={total}");
+        assert_eq!(plan.launches[0].entries.len(), total.min(64));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Queue + monitor invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_queue_depth_is_hard_bound() {
+    check("queue depth bound", 0xD0, |rng| {
+        let depth = 1 + sized(rng, 64) as usize;
+        let mut q = QueueSet::new(1, depth);
+        let n = sized(rng, 200) as usize;
+        let mut accepted = 0;
+        for i in 0..n {
+            let r = InferenceRequest {
+                id: i as u64,
+                tenant: 0,
+                class: rand_class(rng),
+                payload: vec![],
+                arrived: Instant::now(),
+            deadline: Instant::now(),
+            };
+            if q.push(r).is_ok() {
+                accepted += 1;
+            }
+            assert!(q.total_pending() <= depth);
+        }
+        assert_eq!(accepted, n.min(depth));
+    });
+}
+
+#[test]
+fn prop_monitor_evicts_at_most_the_stragglers() {
+    run_prop("monitor evicts only stragglers", 0xD1, 128, |rng| {
+        let n = 3 + rng.gen_range(6) as usize;
+        let n_stragglers = rng.gen_range((n as u64 - 1) / 2) as usize; // minority
+        let mut reg = TenantRegistry::new();
+        for i in 0..n {
+            reg.register(&format!("t{i}"), "sgemm:64x64x64", 1000.0, i as u64)
+                .unwrap();
+        }
+        let mut mon = SloMonitor::new(
+            MonitorConfig { strikes: 2, ..Default::default() },
+            &reg,
+        );
+        let slow_factor = 1.5 + rng.next_f64() * 3.0;
+        for _round in 0..40 {
+            for t in 0..n {
+                let base = 1e-3 * (1.0 + 0.01 * rng.next_f64()); // small jitter
+                let lat = if t < n_stragglers { base * slow_factor } else { base };
+                mon.observe(t, lat);
+            }
+        }
+        for _ in 0..4 {
+            mon.check(&mut reg);
+        }
+        // Every straggler evicted, no healthy tenant evicted.
+        for t in 0..n {
+            let evicted = !reg.get(t).unwrap().is_servable();
+            if t < n_stragglers {
+                assert!(evicted, "straggler {t} (x{slow_factor:.2}) not evicted");
+            } else {
+                assert!(!evicted, "healthy tenant {t} wrongly evicted");
+            }
+        }
+    });
+}

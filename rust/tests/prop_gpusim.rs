@@ -1,0 +1,202 @@
+//! Property tests over the GPU simulator: conservation laws, cost-model
+//! monotonicity, and policy-independent invariants. Pure logic — thousands
+//! of randomized cases are cheap.
+
+use stgpu::gpusim::cost::{exclusive_time, kernel_service_time, CostCtx};
+use stgpu::gpusim::kernel::KernelDesc;
+use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::util::prng::Rng;
+use stgpu::util::prop::{check, run_prop, sized};
+use stgpu::workload::sgemm_tenants;
+
+fn rand_shape(rng: &mut Rng) -> GemmShape {
+    GemmShape::new(
+        1 + sized(rng, 1024) as u32,
+        1 + sized(rng, 1024) as u32,
+        1 + sized(rng, 2048) as u32,
+    )
+}
+
+fn policies(rng: &mut Rng) -> Policy {
+    match rng.gen_range(5) {
+        0 => Policy::Exclusive,
+        1 => Policy::TimeMux,
+        2 => Policy::SpaceMuxMps { anomaly_seed: rng.next_u64() },
+        3 => Policy::SpaceMuxStreams,
+        _ => Policy::SpaceTime { max_batch: 1 + rng.gen_range(64) as u32 },
+    }
+}
+
+#[test]
+fn prop_every_policy_conserves_inferences() {
+    run_prop("conservation", 0xA0, 96, |rng| {
+        let n = 1 + rng.gen_range(12) as usize;
+        let iters = 1 + rng.gen_range(10) as u32;
+        let shape = rand_shape(rng);
+        let policy = policies(rng);
+        let cfg = SimConfig::new(DeviceSpec::v100(), policy);
+        let report = gpusim::run(&cfg, &sgemm_tenants(n, iters, shape));
+        assert_eq!(report.total_completed(), n as u64 * iters as u64);
+        for t in &report.tenants {
+            assert_eq!(t.completed, iters as u64, "every tenant finishes");
+            assert_eq!(t.latencies.len(), iters as usize);
+            assert!(t.latencies.iter().all(|&l| l > 0.0));
+        }
+        assert!(report.makespan > 0.0);
+        assert!(report.makespan.is_finite());
+    });
+}
+
+#[test]
+fn prop_throughput_bounded_by_peak() {
+    run_prop("roofline bound", 0xA1, 96, |rng| {
+        let spec = DeviceSpec::v100();
+        let peak = spec.peak_flops();
+        let policy = policies(rng);
+        let cfg = SimConfig::new(spec, policy);
+        let n = 1 + rng.gen_range(24) as usize;
+        let report = gpusim::run(&cfg, &sgemm_tenants(n, 5, rand_shape(rng)));
+        assert!(
+            report.throughput_flops() <= peak * 1.001,
+            "{}: {:.3e} > peak {:.3e}",
+            cfg.policy.label(),
+            report.throughput_flops(),
+            peak
+        );
+    });
+}
+
+#[test]
+fn prop_kernel_time_monotone_in_work() {
+    // More FLOPs (K depth) at fixed resources never gets faster.
+    check("service time monotone in K", 0xA2, |rng| {
+        let spec = DeviceSpec::v100();
+        let ctx = CostCtx::exclusive(&spec);
+        let m = 1 + sized(rng, 512) as u32;
+        let n = 1 + sized(rng, 512) as u32;
+        let k1 = 1 + sized(rng, 1024) as u32;
+        let k2 = k1 + 1 + sized(rng, 1024) as u32;
+        let t1 = kernel_service_time(&spec, &KernelDesc::sgemm(0, GemmShape::new(m, n, k1)), &ctx);
+        let t2 = kernel_service_time(&spec, &KernelDesc::sgemm(0, GemmShape::new(m, n, k2)), &ctx);
+        assert!(t2 >= t1, "K {k1}->{k2} made kernel faster: {t1} -> {t2}");
+    });
+}
+
+#[test]
+fn prop_superkernel_beats_sum_of_parts() {
+    // One fused R-problem launch is never slower than R sequential
+    // launches of the same problem under exclusive cost (launch overhead
+    // amortization — the space-time mechanism).
+    check("fusion amortizes overhead", 0xA3, |rng| {
+        let spec = DeviceSpec::v100();
+        let shape = rand_shape(rng);
+        let r = 2 + rng.gen_range(63) as usize;
+        let parts: Vec<KernelDesc> =
+            (0..r).map(|t| KernelDesc::sgemm(t, shape)).collect();
+        let fused = KernelDesc::superkernel(&parts);
+        let t_fused = exclusive_time(&spec, &fused);
+        let t_seq: f64 = parts.iter().map(|k| exclusive_time(&spec, k)).sum();
+        assert!(
+            t_fused <= t_seq * 1.0001,
+            "fused {t_fused:.3e} slower than sequential {t_seq:.3e} (R={r})"
+        );
+    });
+}
+
+#[test]
+fn prop_superkernel_conserves_flops() {
+    check("superkernel flops additive", 0xA4, |rng| {
+        let r = 1 + rng.gen_range(64) as usize;
+        // Same shape across parts — the batcher invariant superkernel()
+        // asserts (cross-shape fusion is the batcher's job to prevent).
+        let shape = rand_shape(rng);
+        let parts: Vec<KernelDesc> = (0..r)
+            .map(|t| KernelDesc::sgemm(t, shape))
+            .collect();
+        let fused = KernelDesc::superkernel(&parts);
+        let sum: f64 = parts.iter().map(|k| k.flops).sum();
+        assert!(
+            (fused.flops - sum).abs() <= sum * 1e-9,
+            "fused flops {} != sum {}",
+            fused.flops,
+            sum
+        );
+    });
+}
+
+#[test]
+fn prop_time_mux_latency_monotone_in_tenants() {
+    // Adding tenants under time multiplexing never reduces mean latency.
+    run_prop("time-mux monotone", 0xA5, 48, |rng| {
+        let shape = rand_shape(rng);
+        let n1 = 1 + rng.gen_range(8) as usize;
+        let n2 = n1 + 1 + rng.gen_range(8) as usize;
+        let lat = |n: usize| {
+            let cfg = SimConfig::new(DeviceSpec::v100(), Policy::TimeMux);
+            gpusim::run(&cfg, &sgemm_tenants(n, 5, shape)).mean_latency()
+        };
+        let l1 = lat(n1);
+        let l2 = lat(n2);
+        assert!(
+            l2 >= l1 * 0.999,
+            "{n1}->{n2} tenants reduced time-mux latency {l1:.3e}->{l2:.3e}"
+        );
+    });
+}
+
+#[test]
+fn prop_exclusive_latency_independent_of_tenant_count() {
+    // Exclusive = private device per tenant: per-inference latency must not
+    // depend on how many other tenants exist.
+    run_prop("exclusive isolation", 0xA6, 48, |rng| {
+        let shape = rand_shape(rng);
+        let lat = |n: usize| {
+            let cfg = SimConfig::new(DeviceSpec::v100(), Policy::Exclusive);
+            gpusim::run(&cfg, &sgemm_tenants(n, 5, shape)).mean_latency()
+        };
+        let l1 = lat(1);
+        let l8 = lat(1 + rng.gen_range(16) as usize);
+        let rel = (l8 - l1).abs() / l1;
+        assert!(rel < 1e-9, "exclusive latency changed with tenants: {rel}");
+    });
+}
+
+#[test]
+fn prop_trace_events_cover_makespan_without_overlap_violations() {
+    run_prop("trace well-formed", 0xA7, 48, |rng| {
+        let policy = policies(rng);
+        let cfg = SimConfig::new(DeviceSpec::v100(), policy).with_trace();
+        let n = 1 + rng.gen_range(8) as usize;
+        let report = gpusim::run(&cfg, &sgemm_tenants(n, 3, rand_shape(rng)));
+        let trace = &report.trace;
+        assert!(trace.launches() > 0);
+        for ev in &trace.events {
+            assert!(ev.t_start >= 0.0);
+            assert!(ev.t_end > ev.t_start, "zero/negative-length event");
+            assert!(ev.t_end <= report.makespan * (1.0 + 1e-9));
+        }
+    });
+}
+
+#[test]
+fn prop_deterministic_given_seed() {
+    // Same config + workload -> identical report (required for the benches
+    // to be reproducible).
+    run_prop("determinism", 0xA8, 32, |rng| {
+        let seed = rng.next_u64();
+        let shape = rand_shape(rng);
+        let n = 1 + rng.gen_range(10) as usize;
+        let run = || {
+            let cfg = SimConfig::new(
+                DeviceSpec::v100(),
+                Policy::SpaceMuxMps { anomaly_seed: seed },
+            );
+            gpusim::run(&cfg, &sgemm_tenants(n, 4, shape))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.kernel_launches, b.kernel_launches);
+        assert_eq!(a.straggler_gap(), b.straggler_gap());
+    });
+}
