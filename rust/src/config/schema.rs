@@ -103,8 +103,16 @@ pub struct ServerConfig {
     pub slo_aware: bool,
     /// How long the batcher waits to accumulate a batch, microseconds.
     pub batch_timeout_us: u64,
+    /// Devices in the pool. Tenants are sharded across devices by the
+    /// placement layer (least-loaded with shape-class affinity); 1 runs
+    /// the classic single-device coordinator.
+    pub devices: usize,
     /// Per-tenant admission queue depth.
     pub queue_depth: usize,
+    /// Global admission cap across all tenants and devices: once this many
+    /// requests are pending, new submissions shed with `Reject::Overloaded`
+    /// (429-style) instead of queuing without bound.
+    pub queue_cap: usize,
     /// Straggler eviction: tenants slower than `eviction_threshold` × the
     /// median for `eviction_strikes` windows are evicted (paper §4).
     pub eviction_enabled: bool,
@@ -126,7 +134,9 @@ impl Default for ServerConfig {
             split_exact: false,
             slo_aware: false,
             batch_timeout_us: 200,
+            devices: 1,
             queue_depth: 256,
+            queue_cap: 4096,
             eviction_enabled: true,
             eviction_threshold: 1.15,
             eviction_strikes: 3,
@@ -161,11 +171,23 @@ impl ServerConfig {
         if let Some(v) = server.get("batch_timeout_us").and_then(|v| v.as_int()) {
             cfg.batch_timeout_us = v as u64;
         }
+        if let Some(v) = server.get("devices").and_then(|v| v.as_int()) {
+            if v < 1 {
+                return Err("devices must be >= 1".into());
+            }
+            cfg.devices = v as usize;
+        }
         if let Some(v) = server.get("queue_depth").and_then(|v| v.as_int()) {
             if v < 1 {
                 return Err("queue_depth must be >= 1".into());
             }
             cfg.queue_depth = v as usize;
+        }
+        if let Some(v) = server.get("queue_cap").and_then(|v| v.as_int()) {
+            if v < 1 {
+                return Err("queue_cap must be >= 1".into());
+            }
+            cfg.queue_cap = v as usize;
         }
         if let Some(v) = server.get("eviction_enabled").and_then(|v| v.as_bool()) {
             cfg.eviction_enabled = v;
@@ -245,6 +267,19 @@ mod tests {
         assert_eq!(cfg.scheduler, SchedulerKind::SpaceTime);
         assert!(cfg.max_batch >= 1);
         assert!(cfg.eviction_threshold > 1.0);
+        assert_eq!(cfg.devices, 1, "single device is the default");
+        assert!(cfg.queue_cap >= cfg.queue_depth);
+    }
+
+    #[test]
+    fn devices_and_queue_cap_parse_and_validate() {
+        let doc = TomlDoc::parse("[server]\ndevices = 4\nqueue_cap = 128").unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.queue_cap, 128);
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[server]\ndevices = 0").is_err());
+        assert!(bad("[server]\nqueue_cap = 0").is_err());
     }
 
     #[test]

@@ -23,12 +23,18 @@ pub struct Launch {
 }
 
 impl Launch {
+    /// Fraction of lanes carrying real problems. The batcher guarantees
+    /// `entries.len() <= r_bucket`; a hand-built over-full launch (tests,
+    /// external callers) clamps to 1.0 rather than reporting >100%.
     pub fn occupancy(&self) -> f64 {
-        self.entries.len() as f64 / self.r_bucket.max(1) as f64
+        (self.entries.len() as f64 / self.r_bucket.max(1) as f64).min(1.0)
     }
 
+    /// Zero-padded lanes in this launch. Saturating: an over-full launch
+    /// (`entries.len() > r_bucket`) reports 0 padding instead of panicking
+    /// on usize underflow in debug builds.
     pub fn padded_lanes(&self) -> usize {
-        self.r_bucket - self.entries.len()
+        self.r_bucket.saturating_sub(self.entries.len())
     }
 }
 
@@ -289,6 +295,24 @@ mod tests {
         let lanes2: Vec<(usize, u64)> =
             launches2[0].entries.iter().map(|e| (e.tenant, e.id)).collect();
         assert_eq!(lanes, lanes2);
+    }
+
+    #[test]
+    fn overfull_launch_saturates_instead_of_panicking() {
+        // Regression: entries.len() > r_bucket used to underflow (debug
+        // panic) in padded_lanes() and report >100% occupancy. The batcher
+        // never emits such a launch, but Launch is a public type.
+        let overfull = Launch {
+            class: gemm(64),
+            entries: (0..5).map(|i| req(i, 0, gemm(64))).collect(),
+            r_bucket: 2,
+        };
+        assert_eq!(overfull.padded_lanes(), 0);
+        assert_eq!(overfull.occupancy(), 1.0);
+        // Zero-bucket degenerate case stays finite too.
+        let zero = Launch { class: gemm(64), entries: vec![], r_bucket: 0 };
+        assert_eq!(zero.padded_lanes(), 0);
+        assert_eq!(zero.occupancy(), 0.0);
     }
 
     #[test]

@@ -1,14 +1,26 @@
 //! The coordinator driver: the serve loop gluing queues → scheduler →
-//! super-kernel execution → SLO monitoring → metrics.
+//! super-kernel execution → SLO monitoring → metrics, across a pool of
+//! one or more devices.
 //!
 //! This is the leader's request path. It is deliberately synchronous and
 //! deterministic per round (the threaded frontend in `server/` pumps it);
-//! every round:
-//!   1. the scheduler drains queued problems into a launch plan,
+//! every round, for **each device shard**:
+//!   1. the shard's scheduler drains its queued problems into a launch plan,
 //!   2. each launch gathers operands, executes ONE PJRT executable, and
 //!      scatters outputs,
 //!   3. completions feed the SLO monitor and metrics,
-//!   4. periodically the monitor evicts stragglers and their queues drain.
+//!   4. periodically the monitor evicts stragglers (relative to their
+//!      device peers) and their queues drain.
+//!
+//! Sharding (the multi-device generalization): tenants are assigned to
+//! devices at registration time by the [`placement`] layer — least-loaded
+//! with shape-class affinity, so fusion opportunities are never split
+//! across shards. Each shard owns an independent scheduler instance and a
+//! bounded [`QueueSet`]; admission additionally enforces a **global** cap
+//! (`queue_cap`) across the whole pool, shedding with
+//! [`Reject::Overloaded`] instead of growing without bound.
+//!
+//! [`placement`]: crate::coordinator::placement
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,32 +30,49 @@ use anyhow::Result;
 use crate::config::ServerConfig;
 use crate::coordinator::fusion_cache::{FusionCache, FusionCacheStats};
 use crate::coordinator::monitor::{Eviction, MonitorConfig, SloMonitor};
+use crate::coordinator::placement::DevicePlacer;
 use crate::coordinator::queue::QueueSet;
 use crate::coordinator::request::{
     InferenceRequest, InferenceResponse, Reject, RequestId,
 };
-use crate::coordinator::scheduler::{make_scheduler, Scheduler};
+use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
 use crate::coordinator::tenant::TenantRegistry;
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{DeviceSnapshot, MetricsRegistry};
 use crate::runtime::{HostTensor, PjrtEngine};
 use crate::util::prng::Rng;
 
-/// Outcome of one scheduling round.
+/// Outcome of one scheduling round (all devices).
 #[derive(Debug, Default)]
 pub struct RoundOutcome {
     pub responses: Vec<InferenceResponse>,
     pub rejections: Vec<(RequestId, Reject)>,
     pub evictions: Vec<Eviction>,
+    /// Total launches across the pool this round.
     pub launches: usize,
+    /// Launches per device this round (index == device id).
+    pub launches_per_device: Vec<usize>,
+}
+
+/// One device shard: its own admission queues, scheduler instance, and
+/// lifetime counters.
+struct DeviceShard {
+    queues: QueueSet,
+    scheduler: Box<dyn Scheduler>,
+    launches: u64,
+    superkernel_launches: u64,
+    drained: u64,
+    flops: f64,
 }
 
 /// The coordinator.
 pub struct Coordinator {
     engine: Arc<PjrtEngine>,
     pub tenants: TenantRegistry,
-    queues: QueueSet,
-    scheduler: Box<dyn Scheduler>,
+    shards: Vec<DeviceShard>,
+    placer: DevicePlacer,
+    /// Global admission cap across all shards.
+    queue_cap: usize,
     flavor: Flavor,
     fusion_cache: FusionCache,
     monitor: SloMonitor,
@@ -56,8 +85,9 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build from config: loads the manifest, registers tenants, picks the
-    /// scheduler, and pre-warms the executables the workload will need.
+    /// Build from config: loads the manifest, registers tenants, places
+    /// them on the device pool, picks the scheduler, and pre-warms the
+    /// executables the workload will need.
     pub fn new(cfg: &ServerConfig) -> Result<Self> {
         Self::with_flavor(cfg, Flavor::Xla)
     }
@@ -66,7 +96,6 @@ impl Coordinator {
         let engine = Arc::new(PjrtEngine::new(&cfg.artifacts_dir)?);
         let tenants = TenantRegistry::from_configs(&cfg.tenants)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let queues = QueueSet::new(tenants.len(), cfg.queue_depth);
         // R buckets from the manifest (all kinds share aot.py's bucket set).
         let mut buckets = engine.manifest().r_buckets("batched_gemm", flavor.as_str());
         if buckets.is_empty() {
@@ -100,13 +129,45 @@ impl Coordinator {
         } else {
             crate::coordinator::batcher::PaddingPolicy::PadToBucket
         };
-        let scheduler = crate::coordinator::scheduler::make_scheduler_with_policy(
-            cfg.scheduler,
-            buckets,
-            cfg.max_batch as usize,
-            policy,
-            cfg.slo_aware,
-        );
+        // Place tenants on the device pool: least-loaded, class-affine
+        // (load weight = per-request FLOPs of the tenant's shape class).
+        let devices = cfg.devices.max(1);
+        let tenant_classes: Vec<_> = tenants
+            .iter()
+            .map(|t| {
+                let class = t.spec.shape_class();
+                (class, class.flops())
+            })
+            .collect();
+        let placer = DevicePlacer::new(&tenant_classes, devices);
+        // Per-shard queues enforce only the per-tenant depth; the pool-wide
+        // `queue_cap` spans shards, so `submit` enforces it and records
+        // sheds on the target shard's QueueSet counter.
+        //
+        // Each shard's QueueSet is indexed by GLOBAL tenant id (O(devices x
+        // tenants) queue slots, most permanently empty). That keeps the
+        // schedulers device-blind — no id remapping between shards and
+        // launch entries — at the cost of per-round backlogged() scans over
+        // empty queues; compact per-shard id maps are a follow-up if tenant
+        // counts grow past the low hundreds.
+        let shards = (0..devices)
+            .map(|_| DeviceShard {
+                queues: QueueSet::new(tenants.len(), cfg.queue_depth),
+                scheduler: crate::coordinator::scheduler::make_scheduler_with_policy(
+                    cfg.scheduler,
+                    buckets.clone(),
+                    cfg.max_batch as usize,
+                    policy,
+                    cfg.slo_aware,
+                ),
+                launches: 0,
+                superkernel_launches: 0,
+                drained: 0,
+                flops: 0.0,
+            })
+            .collect();
+        let device_map: Vec<usize> =
+            (0..tenants.len()).map(|t| placer.device_of(t)).collect();
         let monitor = SloMonitor::new(
             MonitorConfig {
                 enabled: cfg.eviction_enabled,
@@ -115,12 +176,14 @@ impl Coordinator {
                 ..Default::default()
             },
             &tenants,
-        );
+        )
+        .with_device_map(device_map);
         Ok(Self {
             engine,
             tenants,
-            queues,
-            scheduler,
+            shards,
+            placer,
+            queue_cap: cfg.queue_cap,
             flavor,
             fusion_cache: FusionCache::new(256),
             monitor,
@@ -137,15 +200,63 @@ impl Coordinator {
     }
 
     pub fn scheduler_label(&self) -> &'static str {
-        self.scheduler.label()
+        self.shards[0].scheduler.label()
     }
 
+    /// Devices in the pool.
+    pub fn devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which device a tenant's requests execute on.
+    pub fn device_of(&self, tenant: usize) -> usize {
+        self.placer.device_of(tenant)
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Requests shed by the global admission cap over the lifetime.
+    pub fn shed_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.queues.shed).sum()
+    }
+
+    /// Batcher statistics summed across the pool (None for non-batching
+    /// schedulers).
     pub fn batcher_stats(&self) -> Option<crate::coordinator::batcher::BatcherStats> {
-        self.scheduler.batcher_stats()
+        let mut merged: Option<crate::coordinator::batcher::BatcherStats> = None;
+        for shard in &self.shards {
+            if let Some(bs) = shard.scheduler.batcher_stats() {
+                let m = merged.get_or_insert_with(Default::default);
+                m.launches += bs.launches;
+                m.problems += bs.problems;
+                m.padded_lanes += bs.padded_lanes;
+            }
+        }
+        merged
     }
 
     pub fn pending(&self) -> usize {
-        self.queues.total_pending()
+        self.shards.iter().map(|s| s.queues.total_pending()).sum()
+    }
+
+    /// Per-device counters (index == device id).
+    pub fn device_snapshots(&self) -> Vec<DeviceSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(d, s)| DeviceSnapshot {
+                device: d,
+                tenants: self.placer.members(d).len() as u64,
+                pending: s.queues.total_pending() as u64,
+                launches: s.launches,
+                superkernel_launches: s.superkernel_launches,
+                drained: s.drained,
+                shed: s.queues.shed,
+                flops: s.flops,
+            })
+            .collect()
     }
 
     /// Pre-compile every executable this coordinator's tenants can hit, so
@@ -163,6 +274,10 @@ impl Coordinator {
     }
 
     /// Submit a request for `tenant` with the given payload tensors.
+    ///
+    /// Admission is bounded twice: a global cap across the pool
+    /// ([`Reject::Overloaded`], 429-style shed) and the per-tenant queue
+    /// depth ([`Reject::QueueFull`]).
     pub fn submit(
         &mut self,
         tenant: usize,
@@ -192,19 +307,28 @@ impl Coordinator {
                 )));
             }
         }
+        let name = t.name.clone();
+        let slo_ms = t.slo_ms;
+        let class = t.spec.shape_class();
+        let device = self.placer.device_of(tenant);
+        // Global admission cap across every shard: shed, don't grow.
+        if self.pending() >= self.queue_cap {
+            self.shards[device].queues.record_shed();
+            self.metrics.tenant(&name).record_rejection();
+            return Err(Reject::Overloaded);
+        }
         let id = self.next_id;
         self.next_id += 1;
         let arrived = Instant::now();
         let req = InferenceRequest {
             id,
             tenant,
-            class: t.spec.shape_class(),
+            class,
             payload,
             arrived,
-            deadline: arrived + std::time::Duration::from_secs_f64(t.slo_ms / 1e3),
+            deadline: arrived + std::time::Duration::from_secs_f64(slo_ms / 1e3),
         };
-        let name = t.name.clone();
-        match self.queues.push(req) {
+        match self.shards[device].queues.push(req) {
             Ok(()) => Ok(id),
             Err(rej) => {
                 self.metrics.tenant(&name).record_rejection();
@@ -227,48 +351,63 @@ impl Coordinator {
             .unwrap_or_default()
     }
 
-    /// Run one scheduling round.
+    /// Run one scheduling round: one `RoundPlan` per device, executed
+    /// shard by shard (the pool's devices are independent; on real
+    /// multi-GPU hardware these launches run concurrently — the CPU-PJRT
+    /// substrate executes them back-to-back, which preserves scheduling
+    /// semantics and per-device accounting).
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
-        let mut outcome = RoundOutcome::default();
-        let plan = self.scheduler.plan_round(&mut self.queues);
-        outcome.launches = plan.launches.len();
+        let mut outcome = RoundOutcome {
+            launches_per_device: vec![0; self.shards.len()],
+            ..Default::default()
+        };
         let exec = SuperKernelExec::new(&self.engine, self.flavor);
-        for launch in &plan.launches {
-            let fused = launch.entries.len();
-            if fused > 1 {
-                self.metrics.record_superkernel_launch();
-            } else {
-                self.metrics.record_kernel_launch();
-            }
-            let hits_before = self.fusion_cache.stats.hits;
-            let misses_before = self.fusion_cache.stats.misses;
-            let res = exec.execute(launch, &self.tenants, &mut self.fusion_cache)?;
-            if self.fusion_cache.stats.hits > hits_before {
-                self.metrics.record_cache(true);
-            } else if self.fusion_cache.stats.misses > misses_before {
-                self.metrics.record_cache(false);
-            }
-            let done = Instant::now();
-            for (entry, output) in launch.entries.iter().zip(res.outputs) {
-                let latency_s = done.duration_since(entry.arrived).as_secs_f64();
-                let tenant = self.tenants.get(entry.tenant).expect("tenant");
-                self.metrics.tenant(&tenant.name).record_completion(
-                    (latency_s * 1e9) as u64,
-                    (res.service_s * 1e9) as u64,
-                    entry.class.flops(),
-                );
-                self.monitor.observe(entry.tenant, res.service_s);
-                outcome.responses.push(InferenceResponse {
-                    id: entry.id,
-                    tenant: entry.tenant,
-                    output,
-                    latency_s,
-                    service_s: res.service_s,
-                    fused_r: fused,
-                });
+        for (device, shard) in self.shards.iter_mut().enumerate() {
+            let plan = shard.scheduler.plan_round(&mut shard.queues);
+            outcome.launches += plan.launches.len();
+            outcome.launches_per_device[device] = plan.launches.len();
+            shard.launches += plan.launches.len() as u64;
+            shard.drained += plan.drained as u64;
+            for launch in &plan.launches {
+                let fused = launch.entries.len();
+                if fused > 1 {
+                    self.metrics.record_superkernel_launch();
+                    shard.superkernel_launches += 1;
+                } else {
+                    self.metrics.record_kernel_launch();
+                }
+                let hits_before = self.fusion_cache.stats.hits;
+                let misses_before = self.fusion_cache.stats.misses;
+                let res = exec.execute(launch, &self.tenants, &mut self.fusion_cache)?;
+                if self.fusion_cache.stats.hits > hits_before {
+                    self.metrics.record_cache(true);
+                } else if self.fusion_cache.stats.misses > misses_before {
+                    self.metrics.record_cache(false);
+                }
+                let done = Instant::now();
+                for (entry, output) in launch.entries.iter().zip(res.outputs) {
+                    let latency_s = done.duration_since(entry.arrived).as_secs_f64();
+                    let tenant = self.tenants.get(entry.tenant).expect("tenant");
+                    self.metrics.tenant(&tenant.name).record_completion(
+                        (latency_s * 1e9) as u64,
+                        (res.service_s * 1e9) as u64,
+                        entry.class.flops(),
+                    );
+                    shard.flops += entry.class.flops();
+                    self.monitor.observe(entry.tenant, res.service_s);
+                    outcome.responses.push(InferenceResponse {
+                        id: entry.id,
+                        tenant: entry.tenant,
+                        output,
+                        latency_s,
+                        service_s: res.service_s,
+                        fused_r: fused,
+                    });
+                }
             }
         }
-        // Periodic straggler check.
+        // Periodic straggler check (stragglers judged against same-device
+        // peers — see SloMonitor::with_device_map).
         self.rounds_since_check += 1;
         if self.rounds_since_check >= self.check_every {
             self.rounds_since_check = 0;
@@ -279,10 +418,9 @@ impl Coordinator {
                 // Drop the evicted tenant's device-resident weights and fail
                 // everything it still has queued.
                 self.fusion_cache.invalidate_tenant(ev.tenant);
-                if let Some(q) = self.queues.tenant_mut(ev.tenant) {
-                    for req in q.drain() {
-                        outcome.rejections.push((req.id, Reject::TenantEvicted));
-                    }
+                let device = self.placer.device_of(ev.tenant);
+                for req in self.shards[device].queues.drain_tenant(ev.tenant) {
+                    outcome.rejections.push((req.id, Reject::TenantEvicted));
                 }
             }
             outcome.evictions = evictions;
@@ -293,7 +431,7 @@ impl Coordinator {
     /// Run rounds until all queues drain; returns every response.
     pub fn run_until_drained(&mut self) -> Result<Vec<InferenceResponse>> {
         let mut all = Vec::new();
-        while !self.queues.is_empty() {
+        while self.pending() > 0 {
             let out = self.run_round()?;
             all.extend(out.responses);
         }
@@ -331,9 +469,12 @@ impl Coordinator {
         self.fusion_cache = FusionCache::new(capacity);
     }
 
-    /// Metrics snapshot over the coordinator's lifetime.
+    /// Metrics snapshot over the coordinator's lifetime, including the
+    /// per-device section.
     pub fn snapshot(&self) -> crate::metrics::Snapshot {
-        self.metrics.snapshot(self.started.elapsed().as_secs_f64())
+        let mut snap = self.metrics.snapshot(self.started.elapsed().as_secs_f64());
+        snap.devices = self.device_snapshots();
+        snap
     }
 }
 

@@ -11,18 +11,24 @@
 //!   fusion key.
 //! * [`tenant`] — registry of deployed models (same architecture,
 //!   per-tenant weights — paper §2).
-//! * [`queue`] — bounded per-tenant admission queues (backpressure).
+//! * [`queue`] — bounded admission front: per-tenant depth caps plus a
+//!   global cap that sheds with an explicit `Rejected` outcome.
+//! * [`placement`] — which device of the pool each shape-class/tenant
+//!   lands on (least-loaded with class affinity).
 //! * [`batcher`] — shape-class bucketing + R-bucket round-up with padding
 //!   accounting (MAGMA vbatch emulation).
 //! * [`scheduler`] — Exclusive / TimeMux / SpaceMux / SpaceTime policies.
 //! * [`superkernel`] — gather → one PJRT execution → scatter.
-//! * [`monitor`] — per-tenant latency EWMA + straggler eviction.
-//! * [`driver`] — the serve loop gluing it all together.
+//! * [`monitor`] — per-tenant latency EWMA + straggler eviction, judged
+//!   against same-device peers.
+//! * [`driver`] — the sharded serve loop gluing it all together (one
+//!   `RoundPlan` per device per round).
 
 pub mod batcher;
 pub mod driver;
 pub mod fusion_cache;
 pub mod monitor;
+pub mod placement;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
@@ -33,6 +39,7 @@ pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
 pub use driver::{Coordinator, RoundOutcome};
 pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey};
 pub use monitor::{Eviction, MonitorConfig, SloMonitor};
+pub use placement::{place, DevicePlacer, Placement};
 pub use queue::{QueueSet, TenantQueue};
 pub use request::{InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass};
 pub use scheduler::{make_scheduler, RoundPlan, Scheduler};

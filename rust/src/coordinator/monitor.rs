@@ -56,6 +56,11 @@ impl Default for MonitorConfig {
 pub struct SloMonitor {
     cfg: MonitorConfig,
     tracks: Vec<TenantTrack>,
+    /// Device each tenant executes on (sharded coordinator). Straggling is
+    /// judged against same-device peers: a tenant on a busy shard must not
+    /// look like a straggler merely because another shard is idle. Empty
+    /// map == everyone on device 0 (the single-device special case).
+    device_of: Vec<usize>,
     pub evictions: Vec<Eviction>,
 }
 
@@ -71,7 +76,19 @@ impl SloMonitor {
                 slo_violations: 0,
             })
             .collect();
-        Self { cfg, tracks, evictions: Vec::new() }
+        Self { cfg, tracks, device_of: Vec::new(), evictions: Vec::new() }
+    }
+
+    /// Group tenants by device for the straggler median (the sharded
+    /// coordinator sets this from the placement layer).
+    pub fn with_device_map(mut self, device_of: Vec<usize>) -> Self {
+        debug_assert!(device_of.is_empty() || device_of.len() == self.tracks.len());
+        self.device_of = device_of;
+        self
+    }
+
+    fn device(&self, tenant: usize) -> usize {
+        self.device_of.get(tenant).copied().unwrap_or(0)
     }
 
     /// Record one completed request's service latency.
@@ -98,34 +115,54 @@ impl SloMonitor {
 
     /// End-of-window check: update strike counts, evict offenders.
     /// Mutates `tenants` (marks Degraded/Evicted) and returns new evictions.
+    ///
+    /// The straggler median is computed **per device group**: each tenant
+    /// is compared against the healthy tenants sharing its device. With no
+    /// device map (single-device coordinator) every tenant is in one group
+    /// and behaviour is identical to the classic monitor.
     pub fn check(&mut self, tenants: &mut TenantRegistry) -> Vec<Eviction> {
         if !self.cfg.enabled {
             return Vec::new();
         }
-        // Median over healthy, sampled tenants.
-        let healthy: Vec<f64> = self
-            .tracks
+        // Median over healthy, sampled tenants, per device group.
+        let n_devices = 1 + self.device_of.iter().copied().max().unwrap_or(0);
+        let mut healthy_per_device: Vec<Vec<f64>> = vec![Vec::new(); n_devices];
+        for (i, t) in self.tracks.iter().enumerate() {
+            if t.samples >= self.cfg.min_samples
+                && tenants.get(i).map_or(false, |x| x.is_servable())
+            {
+                healthy_per_device[self.device(i)].push(t.ewma_s);
+            }
+        }
+        let medians: Vec<Option<f64>> = healthy_per_device
             .iter()
-            .enumerate()
-            .filter(|(i, t)| {
-                t.samples >= self.cfg.min_samples
-                    && tenants.get(*i).map_or(false, |x| x.is_servable())
+            .map(|h| {
+                // A group needs at least two healthy tenants to define a
+                // meaningful "peer" median.
+                if h.len() < 2 {
+                    return None;
+                }
+                let m = stats::percentile(h, 50.0);
+                if m <= 0.0 {
+                    None
+                } else {
+                    Some(m)
+                }
             })
-            .map(|(_, t)| t.ewma_s)
             .collect();
-        if healthy.len() < 2 {
+        if medians.iter().all(Option::is_none) {
             return Vec::new(); // nothing to compare against
         }
-        let median = stats::percentile(&healthy, 50.0);
-        if median <= 0.0 {
-            return Vec::new();
-        }
+        let device_of: Vec<usize> = (0..self.tracks.len()).map(|i| self.device(i)).collect();
         let mut out = Vec::new();
         for (i, t) in self.tracks.iter_mut().enumerate() {
             let servable = tenants.get(i).map_or(false, |x| x.is_servable());
             if !servable || t.samples < self.cfg.min_samples {
                 continue;
             }
+            let Some(median) = medians[device_of[i]] else {
+                continue;
+            };
             let ratio = t.ewma_s / median;
             if ratio > self.cfg.threshold {
                 t.strikes += 1;
@@ -237,6 +274,53 @@ mod tests {
         let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
         feed(&mut mon, 0, 100e-3, 50);
         assert!(mon.check(&mut reg).is_empty());
+    }
+
+    #[test]
+    fn device_groups_judge_stragglers_against_their_own_shard() {
+        // Device 0 runs fast tenants, device 1 runs uniformly slow ones
+        // (bigger shapes, say). With per-device medians nobody straggles;
+        // a global median would wrongly evict all of device 1.
+        let mut reg = registry(4);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg)
+            .with_device_map(vec![0, 0, 1, 1]);
+        for _ in 0..10 {
+            mon.observe(0, 1e-3);
+            mon.observe(1, 1e-3);
+            mon.observe(2, 5e-3);
+            mon.observe(3, 5e-3);
+        }
+        for _ in 0..5 {
+            assert!(mon.check(&mut reg).is_empty(), "no straggler in-shard");
+        }
+        assert_eq!(reg.evicted_count(), 0);
+
+        // A genuine straggler WITHIN device 1 is still caught.
+        for _ in 0..40 {
+            mon.observe(2, 5e-3);
+            mon.observe(3, 12e-3);
+        }
+        for _ in 0..4 {
+            mon.check(&mut reg);
+        }
+        assert_eq!(reg.get(3).unwrap().health, Health::Evicted);
+        assert_eq!(reg.evicted_count(), 1);
+    }
+
+    #[test]
+    fn single_member_device_group_never_self_evicts() {
+        let mut reg = registry(3);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg)
+            .with_device_map(vec![0, 0, 1]);
+        for _ in 0..20 {
+            mon.observe(0, 1e-3);
+            mon.observe(1, 1e-3);
+            mon.observe(2, 50e-3); // alone on device 1: no peers to compare
+        }
+        for _ in 0..5 {
+            assert!(mon.check(&mut reg).is_empty());
+        }
+        assert_eq!(reg.evicted_count(), 0);
     }
 
     #[test]

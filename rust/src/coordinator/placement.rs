@@ -1,0 +1,269 @@
+//! Device placement: which device of the pool each shape-class/tenant
+//! lands on.
+//!
+//! The sharded coordinator (and the simulator's device pool) partition
+//! tenants across N devices. Two forces pull against each other:
+//!
+//! * **Class affinity** — same-shape-class tenants fuse into one
+//!   super-kernel only if they share a device; splitting a class across
+//!   shards forfeits exactly the batching opportunity the space-time
+//!   scheduler exists to exploit (D-STACK, arXiv:2304.13541, makes the
+//!   same observation for spatio-temporal partitions).
+//! * **Load balance** — a device pool only multiplies throughput if every
+//!   shard stays busy; parking everything on one device serializes.
+//!
+//! The placer resolves them with *least-loaded with class-affinity*: each
+//! class is kept whole on the least-loaded device unless the class alone
+//! exceeds a fair per-device share, in which case (and only then) its
+//! members spread member-by-member — a single dominant class still scales
+//! to the full pool, while small classes never fragment.
+//!
+//! The placer is generic over the class key (`ShapeClass` in the
+//! coordinator, GEMM `class_key()` tuples in the simulator pool) and fully
+//! deterministic: identical inputs always produce identical assignments.
+
+use std::collections::BTreeMap;
+use std::hash::Hash;
+
+/// How much a class may exceed the fair per-device share before it is
+/// split across devices (1.25 = one quarter of slack).
+const AFFINITY_SLACK: f64 = 1.25;
+
+/// A computed assignment: `device_of[i]` is the device of item `i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub device_of: Vec<usize>,
+    pub load: Vec<f64>,
+    pub n_devices: usize,
+}
+
+impl Placement {
+    pub fn device_of(&self, item: usize) -> usize {
+        self.device_of[item]
+    }
+
+    /// Items assigned to `device`, ascending.
+    pub fn members(&self, device: usize) -> Vec<usize> {
+        (0..self.device_of.len())
+            .filter(|&i| self.device_of[i] == device)
+            .collect()
+    }
+
+    /// Max/min device load ratio (1.0 = perfectly balanced). Devices with
+    /// zero load count as empty; returns infinity when some device is idle
+    /// while another is loaded.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.load.iter().cloned().fold(0.0f64, f64::max);
+        let min = self.load.iter().cloned().fold(f64::INFINITY, f64::min);
+        if max <= 0.0 {
+            1.0
+        } else if min <= 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+}
+
+/// Assign `items` — `(class, load)` pairs, e.g. one per tenant — to
+/// `n_devices` devices, least-loaded with class affinity.
+pub fn place<K: Ord + Eq + Hash + Clone>(
+    items: &[(K, f64)],
+    n_devices: usize,
+) -> Placement {
+    assert!(n_devices >= 1, "need at least one device");
+    let mut device_of = vec![0usize; items.len()];
+    let mut load = vec![0.0f64; n_devices];
+    if n_devices == 1 {
+        load[0] = items.iter().map(|(_, l)| l.max(0.0)).sum();
+        return Placement { device_of, load, n_devices };
+    }
+
+    // Group by class, deterministically (BTreeMap orders by class key).
+    let mut by_class: BTreeMap<&K, Vec<usize>> = BTreeMap::new();
+    for (i, (k, _)) in items.iter().enumerate() {
+        by_class.entry(k).or_default().push(i);
+    }
+    // All-zero loads would make every argmin return device 0 and collapse
+    // the pool onto one shard; fall back to unit weights (pure count
+    // balancing) so zero-load items still spread.
+    let raw_total: f64 = items.iter().map(|(_, l)| l.max(0.0)).sum();
+    let unit_weights = raw_total <= 0.0;
+    let weight = |i: usize| {
+        if unit_weights {
+            1.0
+        } else {
+            items[i].1.max(0.0)
+        }
+    };
+    let total = if unit_weights { items.len() as f64 } else { raw_total };
+    let fair = total / n_devices as f64;
+
+    // Place big classes first so small ones backfill the gaps.
+    let mut classes: Vec<(&K, Vec<usize>, f64)> = by_class
+        .into_iter()
+        .map(|(k, members)| {
+            let class_load: f64 = members.iter().map(|&i| weight(i)).sum();
+            (k, members, class_load)
+        })
+        .collect();
+    classes.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(b.0)));
+
+    let argmin = |load: &[f64]| -> usize {
+        let mut best = 0;
+        for (d, &l) in load.iter().enumerate() {
+            if l < load[best] {
+                best = d;
+            }
+        }
+        best
+    };
+
+    for (_, members, class_load) in classes {
+        if class_load <= fair * AFFINITY_SLACK {
+            // Whole class to the least-loaded device: fusion stays intact.
+            let d = argmin(&load);
+            for &i in &members {
+                device_of[i] = d;
+                load[d] += weight(i);
+            }
+        } else {
+            // Dominant class: spread member-by-member so the pool actually
+            // multiplies throughput (members fuse within each shard).
+            for &i in &members {
+                let d = argmin(&load);
+                device_of[i] = d;
+                load[d] += weight(i);
+            }
+        }
+    }
+    Placement { device_of, load, n_devices }
+}
+
+/// The placer the coordinator keeps: an assignment fixed at registration
+/// time (tenants' shape classes are static, so their device never moves;
+/// live admission decisions are made by the driver's pool-wide pending
+/// count, not here).
+#[derive(Debug)]
+pub struct DevicePlacer {
+    placement: Placement,
+}
+
+impl DevicePlacer {
+    /// Place `tenants` — `(class, expected per-request load)` — on
+    /// `n_devices`.
+    pub fn new<K: Ord + Eq + Hash + Clone>(tenants: &[(K, f64)], n_devices: usize) -> Self {
+        Self { placement: place(tenants, n_devices) }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.placement.n_devices
+    }
+
+    pub fn device_of(&self, tenant: usize) -> usize {
+        self.placement.device_of(tenant)
+    }
+
+    pub fn members(&self, device: usize) -> Vec<usize> {
+        self.placement.members(device)
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_takes_everything() {
+        let p = place(&[("a", 1.0), ("b", 2.0), ("a", 3.0)], 1);
+        assert_eq!(p.device_of, vec![0, 0, 0]);
+        assert_eq!(p.load, vec![6.0]);
+        assert_eq!(p.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn small_classes_keep_affinity() {
+        // 4 classes x 2 tenants, equal loads, 4 devices: each class lands
+        // whole on its own device.
+        let items: Vec<(u32, f64)> =
+            (0..8).map(|i| (i % 4, 1.0)).collect();
+        let p = place(&items, 4);
+        for c in 0..4u32 {
+            let devices: std::collections::BTreeSet<usize> = items
+                .iter()
+                .enumerate()
+                .filter(|(_, (k, _))| *k == c)
+                .map(|(i, _)| p.device_of(i))
+                .collect();
+            assert_eq!(devices.len(), 1, "class {c} split across {devices:?}");
+        }
+        assert!(p.imbalance() < 1.01, "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn dominant_class_spreads_across_the_pool() {
+        // One class with all the load must not collapse the pool to a
+        // single device.
+        let items: Vec<(u32, f64)> = (0..16).map(|_| (7u32, 1.0)).collect();
+        let p = place(&items, 4);
+        for d in 0..4 {
+            assert_eq!(p.members(d).len(), 4, "device {d} share");
+        }
+        assert!(p.imbalance() < 1.01);
+    }
+
+    #[test]
+    fn mixed_big_and_small_classes_balance() {
+        // Class 0 dominates (spread); classes 1..4 are small (whole).
+        let mut items: Vec<(u32, f64)> = (0..12).map(|_| (0u32, 2.0)).collect();
+        for c in 1..4u32 {
+            items.push((c, 1.0));
+        }
+        let p = place(&items, 3);
+        // Small classes stay whole.
+        for c in 1..4u32 {
+            let devices: std::collections::BTreeSet<usize> = items
+                .iter()
+                .enumerate()
+                .filter(|(_, (k, _))| *k == c)
+                .map(|(i, _)| p.device_of(i))
+                .collect();
+            assert_eq!(devices.len(), 1);
+        }
+        assert!(p.imbalance() < 1.5, "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn deterministic() {
+        let items: Vec<(u32, f64)> = (0..20).map(|i| (i % 5, 1.0 + i as f64)).collect();
+        assert_eq!(place(&items, 4), place(&items, 4));
+    }
+
+    #[test]
+    fn zero_load_items_still_spread() {
+        // Degenerate all-zero loads fall back to count balancing — the
+        // pool must not collapse onto device 0.
+        let p = place(&[("a", 0.0), ("b", 0.0)], 2);
+        let used: std::collections::BTreeSet<usize> =
+            p.device_of.iter().copied().collect();
+        assert_eq!(used.len(), 2, "both devices used: {:?}", p.device_of);
+        assert_eq!(p.imbalance(), 1.0);
+
+        // A single dominant zero-load class spreads too.
+        let items: Vec<(u32, f64)> = (0..8).map(|_| (1u32, 0.0)).collect();
+        let p2 = place(&items, 4);
+        for d in 0..4 {
+            assert_eq!(p2.members(d).len(), 2, "device {d}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn zero_devices_rejected() {
+        let _ = place(&[("a", 1.0)], 0);
+    }
+}

@@ -1,8 +1,12 @@
-//! Per-tenant admission queues with bounded depth (backpressure).
+//! Bounded admission front: per-tenant FIFO queues with a per-tenant depth
+//! cap and a global cap across the whole set.
 //!
-//! The paper's §2 model saturates queues; the bound keeps an overloaded or
-//! evicted tenant from consuming unbounded memory and gives the frontend a
-//! crisp rejection signal.
+//! The paper's §2 model saturates queues; the per-tenant bound keeps an
+//! overloaded or evicted tenant from consuming unbounded memory, and the
+//! global cap (DARIS-style admission control, arXiv:2504.08795) makes the
+//! coordinator shed load with an explicit [`Reject`] outcome — a 429-style
+//! signal the frontend surfaces — instead of letting latency grow without
+//! bound under oversubscription. A saturated front rejects; it never grows.
 
 use std::collections::VecDeque;
 
@@ -62,19 +66,57 @@ impl TenantQueue {
     }
 }
 
-/// All tenants' queues; index == tenant id.
+/// All tenants' queues; index == tenant id. Admission enforces the
+/// per-tenant depth AND a global cap across the set.
+///
+/// NB: in the sharded coordinator the pool-wide cap spans several
+/// `QueueSet`s, so the driver performs the cap check itself and records
+/// sheds here via [`QueueSet::record_shed`] — per-shard sets are built
+/// effectively unbounded. A standalone single-front deployment uses
+/// [`QueueSet::with_global_cap`] directly and gets the same behaviour
+/// from `push`.
 #[derive(Debug)]
 pub struct QueueSet {
     queues: Vec<TenantQueue>,
     depth: usize,
+    /// Global cap on total pending requests across all tenants.
+    global_cap: usize,
+    /// Total pending across all tenant queues, maintained incrementally so
+    /// the admission check is O(1) (every dequeue goes through
+    /// `pop_tenant`/`drain_tenant`).
+    pending: usize,
+    /// Requests shed because the global cap was hit (load-shed counter,
+    /// distinct from per-tenant `rejected`).
+    pub shed: u64,
 }
 
 impl QueueSet {
     pub fn new(n_tenants: usize, depth: usize) -> Self {
+        Self::with_global_cap(n_tenants, depth, usize::MAX)
+    }
+
+    /// A bounded admission front: per-tenant `depth` plus `global_cap`
+    /// total pending across all tenants.
+    pub fn with_global_cap(n_tenants: usize, depth: usize, global_cap: usize) -> Self {
+        assert!(global_cap >= 1);
         Self {
             queues: (0..n_tenants).map(|_| TenantQueue::new(depth)).collect(),
             depth,
+            global_cap,
+            pending: 0,
+            shed: 0,
         }
+    }
+
+    pub fn global_cap(&self) -> usize {
+        self.global_cap
+    }
+
+    /// Count one request shed by an external admission check (the sharded
+    /// coordinator's pool-wide cap) so `shed` stays truthful regardless of
+    /// which layer enforced the bound.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
     }
 
     /// Add a queue for a late-registered tenant; returns its index.
@@ -85,18 +127,44 @@ impl QueueSet {
 
     pub fn push(&mut self, req: InferenceRequest) -> Result<(), Reject> {
         let t = req.tenant;
-        self.queues
-            .get_mut(t)
-            .ok_or_else(|| Reject::BadRequest(format!("unknown tenant {t}")))?
-            .push(req)
+        if t >= self.queues.len() {
+            return Err(Reject::BadRequest(format!("unknown tenant {t}")));
+        }
+        if self.pending >= self.global_cap {
+            self.shed += 1;
+            return Err(Reject::Overloaded);
+        }
+        let res = self.queues[t].push(req);
+        if res.is_ok() {
+            self.pending += 1;
+        }
+        res
     }
 
     pub fn tenant(&self, id: usize) -> Option<&TenantQueue> {
         self.queues.get(id)
     }
 
-    pub fn tenant_mut(&mut self, id: usize) -> Option<&mut TenantQueue> {
-        self.queues.get_mut(id)
+    /// Pop the head of one tenant's queue (None when empty/unknown).
+    /// All dequeueing goes through here so `pending` stays exact.
+    pub fn pop_tenant(&mut self, id: usize) -> Option<InferenceRequest> {
+        let r = self.queues.get_mut(id)?.pop();
+        if r.is_some() {
+            self.pending -= 1;
+        }
+        r
+    }
+
+    /// Drop everything a tenant has queued (eviction); returns the drained
+    /// requests so the caller can fail them crisply.
+    pub fn drain_tenant(&mut self, id: usize) -> Vec<InferenceRequest> {
+        let drained = self
+            .queues
+            .get_mut(id)
+            .map(TenantQueue::drain)
+            .unwrap_or_default();
+        self.pending -= drained.len();
+        drained
     }
 
     pub fn n_tenants(&self) -> usize {
@@ -104,11 +172,15 @@ impl QueueSet {
     }
 
     pub fn total_pending(&self) -> usize {
-        self.queues.iter().map(TenantQueue::len).sum()
+        debug_assert_eq!(
+            self.pending,
+            self.queues.iter().map(TenantQueue::len).sum::<usize>()
+        );
+        self.pending
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queues.iter().all(TenantQueue::is_empty)
+        self.pending == 0
     }
 
     /// Tenants with at least one pending request, ascending id.
@@ -184,11 +256,73 @@ mod tests {
     }
 
     #[test]
+    fn global_cap_sheds_with_explicit_outcome() {
+        // 4 tenants x depth 8 would admit 32, but the global cap is 5:
+        // request #6 onward is shed with `Overloaded`, and pending never
+        // exceeds the cap (bounded admission, not unbounded growth).
+        let mut qs = QueueSet::with_global_cap(4, 8, 5);
+        let mut admitted = 0;
+        let mut shed = 0;
+        for i in 0..20u64 {
+            match qs.push(req(i, (i % 4) as usize)) {
+                Ok(()) => admitted += 1,
+                Err(Reject::Overloaded) => shed += 1,
+                Err(e) => panic!("unexpected rejection {e:?}"),
+            }
+            assert!(qs.total_pending() <= 5, "cap violated");
+        }
+        assert_eq!(admitted, 5);
+        assert_eq!(shed, 15);
+        assert_eq!(qs.shed, 15);
+        // Draining restores admission capacity.
+        assert!(qs.pop_tenant(0).is_some());
+        assert!(qs.push(req(99, 1)).is_ok());
+    }
+
+    #[test]
+    fn per_tenant_depth_still_applies_under_global_cap() {
+        let mut qs = QueueSet::with_global_cap(2, 1, 100);
+        qs.push(req(0, 0)).unwrap();
+        assert_eq!(qs.push(req(1, 0)), Err(Reject::QueueFull));
+        assert!(qs.push(req(2, 1)).is_ok());
+        assert_eq!(qs.shed, 0, "depth rejections are not shed");
+    }
+
+    #[test]
     fn add_tenant_grows() {
         let mut qs = QueueSet::new(1, 4);
         let id = qs.add_tenant();
         assert_eq!(id, 1);
         qs.push(req(1, 1)).unwrap();
         assert_eq!(qs.tenant(1).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn pending_counter_tracks_push_pop_drain() {
+        let mut qs = QueueSet::new(3, 8);
+        for i in 0..7u64 {
+            qs.push(req(i, (i % 3) as usize)).unwrap();
+        }
+        assert_eq!(qs.total_pending(), 7);
+        assert!(qs.pop_tenant(0).is_some());
+        assert_eq!(qs.total_pending(), 6);
+        assert!(qs.pop_tenant(9).is_none(), "unknown tenant pops nothing");
+        let drained = qs.drain_tenant(1);
+        assert_eq!(qs.total_pending(), 6 - drained.len());
+        qs.drain_tenant(0);
+        qs.drain_tenant(2);
+        assert_eq!(qs.total_pending(), 0);
+        assert!(qs.is_empty());
+        // Popping an empty queue leaves the counter alone.
+        assert!(qs.pop_tenant(0).is_none());
+        assert_eq!(qs.total_pending(), 0);
+    }
+
+    #[test]
+    fn record_shed_counts_external_sheds() {
+        let mut qs = QueueSet::new(1, 4);
+        qs.record_shed();
+        qs.record_shed();
+        assert_eq!(qs.shed, 2);
     }
 }

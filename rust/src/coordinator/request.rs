@@ -97,18 +97,34 @@ pub struct InferenceResponse {
 /// Terminal failure for a request.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Reject {
-    /// Admission queue full (backpressure).
+    /// This tenant's admission queue is full (per-tenant backpressure).
     QueueFull,
+    /// The coordinator's global admission cap is hit: load shed across the
+    /// board (the 429-style outcome an oversubscribed bounded front emits
+    /// instead of growing without bound).
+    Overloaded,
     /// Tenant was evicted by the straggler monitor.
     TenantEvicted,
     /// Tenant unknown / shape not servable.
     BadRequest(String),
 }
 
+impl Reject {
+    /// HTTP-style status code the serving frontend surfaces.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            Reject::QueueFull | Reject::Overloaded => 429,
+            Reject::TenantEvicted => 503,
+            Reject::BadRequest(_) => 400,
+        }
+    }
+}
+
 impl std::fmt::Display for Reject {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Reject::QueueFull => write!(f, "queue full"),
+            Reject::Overloaded => write!(f, "overloaded: global admission cap reached"),
             Reject::TenantEvicted => write!(f, "tenant evicted"),
             Reject::BadRequest(m) => write!(f, "bad request: {m}"),
         }
@@ -143,5 +159,14 @@ mod tests {
     fn display_is_compact() {
         let s = ShapeClass::batched_gemm(256, 128, 1152).to_string();
         assert_eq!(s, "batched_gemm:256x128x1152");
+    }
+
+    #[test]
+    fn reject_http_status_codes() {
+        assert_eq!(Reject::QueueFull.http_status(), 429);
+        assert_eq!(Reject::Overloaded.http_status(), 429);
+        assert_eq!(Reject::TenantEvicted.http_status(), 503);
+        assert_eq!(Reject::BadRequest("x".into()).http_status(), 400);
+        assert!(Reject::Overloaded.to_string().contains("overloaded"));
     }
 }

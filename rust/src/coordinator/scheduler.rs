@@ -19,6 +19,20 @@
 //! On CPU-PJRT the measured difference between TimeMux/SpaceMux and
 //! SpaceTime is launch-count amortization — exactly the mechanism the paper
 //! exploits; V100-scaled shapes come from `gpusim` (DESIGN.md §1).
+//!
+//! ## The placement layer above
+//!
+//! Schedulers are deliberately **device-blind**: each instance plans
+//! rounds over the one [`QueueSet`] it is handed. The multi-device
+//! coordinator ([`crate::coordinator::driver`]) instantiates one scheduler
+//! per device shard and routes requests to shards via
+//! [`crate::coordinator::placement`] — least-loaded assignment with
+//! shape-class affinity, so every request a scheduler could profitably
+//! fuse is already in its queues. That layering keeps the §3/§4 policies
+//! exactly as the paper describes them while the pool scales out: a
+//! per-shard `plan_round` on an N-device pool is the same computation as
+//! the paper's single-GPU round, N times in parallel. Per-device stats
+//! (launches, drained, shed) are accounted in the driver, not here.
 
 use crate::config::SchedulerKind;
 use crate::coordinator::batcher::{DynamicBatcher, Launch, PaddingPolicy};
@@ -80,10 +94,9 @@ pub fn make_scheduler_with_policy(
 
 /// Drain up to `cap` requests from one tenant's queue.
 fn drain_tenant(queues: &mut QueueSet, tenant: usize, cap: usize) -> Vec<InferenceRequest> {
-    let q = queues.tenant_mut(tenant).expect("valid tenant");
     let mut out = Vec::new();
     while out.len() < cap {
-        match q.pop() {
+        match queues.pop_tenant(tenant) {
             Some(r) => out.push(r),
             None => break,
         }
@@ -271,7 +284,7 @@ impl Scheduler for SpaceTimeSched {
                         queues.tenant(t).and_then(|q| q.peek()).map(|r| r.deadline)
                     });
                 let Some(t) = next else { break };
-                if let Some(r) = queues.tenant_mut(t).unwrap().pop() {
+                if let Some(r) = queues.pop_tenant(t) {
                     reqs.push(r);
                 }
             }
@@ -288,7 +301,7 @@ impl Scheduler for SpaceTimeSched {
                     if reqs.len() >= cap {
                         break 'outer;
                     }
-                    if let Some(r) = queues.tenant_mut(t).unwrap().pop() {
+                    if let Some(r) = queues.pop_tenant(t) {
                         reqs.push(r);
                         took = true;
                     }

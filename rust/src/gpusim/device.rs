@@ -175,4 +175,5 @@ mod tests {
         assert!(d.bw_fraction(5.0) < 1.0);
         assert_eq!(d.bw_fraction(40.0), 1.0);
     }
+
 }

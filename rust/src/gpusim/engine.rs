@@ -28,6 +28,19 @@ pub struct TenantWorkload {
     pub iterations: u32,
 }
 
+/// Placement class of a workload: workloads sharing a class can fuse, so
+/// the device pool keeps them on one shard when load allows (see
+/// [`crate::gpusim::pool`]).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WorkloadClass {
+    /// Head kernel is a batchable GEMM of this (M, N, K).
+    Gemm(u32, u32, u32),
+    /// Head kernel is a non-GEMM kernel, keyed by name.
+    Other(String),
+    /// No kernels.
+    Empty,
+}
+
 impl TenantWorkload {
     pub fn new(kernels: Vec<KernelDesc>, iterations: u32) -> Self {
         Self { kernels, iterations }
@@ -35,6 +48,18 @@ impl TenantWorkload {
 
     pub fn total_flops(&self) -> f64 {
         self.kernels.iter().map(|k| k.flops).sum::<f64>() * self.iterations as f64
+    }
+
+    /// Fusion/placement class (head-kernel shape — paper §2: same
+    /// architecture tenants have aligned kernel streams).
+    pub fn class_key(&self) -> WorkloadClass {
+        match self.kernels.first() {
+            Some(k) => match k.shape {
+                Some(s) => WorkloadClass::Gemm(s.m, s.n, s.k),
+                None => WorkloadClass::Other(k.name.clone()),
+            },
+            None => WorkloadClass::Empty,
+        }
     }
 }
 

@@ -108,15 +108,27 @@ pub struct DeviceAllocator {
     peak: u64,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AllocError {
-    #[error("out of device memory: requested {requested} bytes, {free} free of {capacity}")]
     OutOfMemory {
         requested: u64,
         free: u64,
         capacity: u64,
     },
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::OutOfMemory { requested, free, capacity } => write!(
+                f,
+                "out of device memory: requested {requested} bytes, {free} free of {capacity}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 impl DeviceAllocator {
     pub fn new(capacity: u64) -> Self {

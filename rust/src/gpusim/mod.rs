@@ -9,6 +9,8 @@
 //! * [`mps`] — the MPS straggler-anomaly model (paper Figure 4).
 //! * [`memory`] — device memory accounting (paper Figure 5) + allocator.
 //! * [`trace`] — schedule trace capture and Gantt rendering (Figure 6).
+//! * [`pool`] — multi-device pools: shard tenants across N devices
+//!   (least-loaded, class-affine) and aggregate throughput.
 
 pub mod cost;
 pub mod device;
@@ -16,9 +18,11 @@ pub mod engine;
 pub mod kernel;
 pub mod memory;
 pub mod mps;
+pub mod pool;
 pub mod trace;
 
 pub use device::DeviceSpec;
-pub use engine::{run, Policy, SimConfig, SimReport, TenantWorkload};
+pub use engine::{run, Policy, SimConfig, SimReport, TenantWorkload, WorkloadClass};
 pub use kernel::{GemmShape, KernelDesc, TenantId};
+pub use pool::{run_pool, PoolReport};
 pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,158 @@
+//! Device-pool simulation: shard a multi-tenant workload across N
+//! simulated devices and run each shard under the configured policy.
+//!
+//! This is the simulator-side mirror of the sharded coordinator
+//! ([`crate::coordinator::driver`]): tenants are assigned to devices by the
+//! same placement rule (least-loaded with class affinity, via
+//! [`crate::coordinator::placement::place`]), each device runs its shard
+//! independently (devices do not contend — they are separate GPUs), and the
+//! pool's makespan is the slowest device's makespan. D-STACK
+//! (arXiv:2304.13541) demonstrates the throughput-multiplying effect this
+//! models; `benches/fig8_multidevice_scaling.rs` reproduces the scaling
+//! curve for the paper's conv2_2 workload.
+
+use crate::coordinator::placement::place;
+use crate::gpusim::engine::{run, SimConfig, SimReport, TenantWorkload};
+
+/// Result of a device-pool run: per-device reports plus the tenant→device
+/// assignment (global tenant index → device id).
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    pub assignment: Vec<usize>,
+    pub per_device: Vec<SimReport>,
+}
+
+impl PoolReport {
+    pub fn n_devices(&self) -> usize {
+        self.per_device.len()
+    }
+
+    /// Pool makespan: devices run concurrently, so the pool finishes when
+    /// the slowest device does.
+    pub fn makespan(&self) -> f64 {
+        self.per_device
+            .iter()
+            .map(|r| r.makespan)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.per_device.iter().map(SimReport::total_flops).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.per_device.iter().map(SimReport::total_completed).sum()
+    }
+
+    pub fn kernel_launches(&self) -> u64 {
+        self.per_device.iter().map(|r| r.kernel_launches).sum()
+    }
+
+    pub fn superkernel_launches(&self) -> u64 {
+        self.per_device.iter().map(|r| r.superkernel_launches).sum()
+    }
+
+    /// Aggregate FLOP throughput of the whole pool.
+    pub fn throughput_flops(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.total_flops() / span
+        }
+    }
+
+    /// Throughput of one device over its own makespan.
+    pub fn device_throughput(&self, device: usize) -> f64 {
+        self.per_device[device].throughput_flops()
+    }
+
+    /// Mean inference latency across every completed inference in the pool.
+    pub fn mean_latency(&self) -> f64 {
+        let all: Vec<f64> = self
+            .per_device
+            .iter()
+            .flat_map(|r| r.tenants.iter())
+            .flat_map(|t| t.latencies.iter().copied())
+            .collect();
+        crate::util::stats::mean(&all)
+    }
+}
+
+/// Run `workloads` across a pool of `n_devices` copies of `cfg.spec`,
+/// sharding tenants least-loaded with class affinity.
+pub fn run_pool(cfg: &SimConfig, workloads: &[TenantWorkload], n_devices: usize) -> PoolReport {
+    assert!(n_devices >= 1, "need at least one device");
+    let items: Vec<_> = workloads
+        .iter()
+        .map(|w| (w.class_key(), w.total_flops()))
+        .collect();
+    let assignment = place(&items, n_devices).device_of;
+    let per_device = (0..n_devices)
+        .map(|d| {
+            let shard: Vec<TenantWorkload> = workloads
+                .iter()
+                .zip(&assignment)
+                .filter(|(_, &dev)| dev == d)
+                .map(|(w, _)| w.clone())
+                .collect();
+            run(cfg, &shard)
+        })
+        .collect();
+    PoolReport { assignment, per_device }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::DeviceSpec;
+    use crate::gpusim::engine::Policy;
+    use crate::gpusim::kernel::GemmShape;
+    use crate::workload::sgemm_tenants;
+
+    fn cfg(policy: Policy) -> SimConfig {
+        SimConfig::new(DeviceSpec::v100(), policy)
+    }
+
+    #[test]
+    fn pool_conserves_inferences_and_flops() {
+        let w = sgemm_tenants(12, 5, GemmShape::SQUARE_256);
+        let expected_flops: f64 = w.iter().map(|x| x.total_flops()).sum();
+        for n in [1usize, 2, 3, 4] {
+            let r = run_pool(&cfg(Policy::SpaceTime { max_batch: 8 }), &w, n);
+            assert_eq!(r.total_completed(), 60, "devices={n}");
+            assert!((r.total_flops() - expected_flops).abs() < 1e-3);
+            assert_eq!(r.assignment.len(), 12);
+            assert!(r.assignment.iter().all(|&d| d < n));
+        }
+    }
+
+    #[test]
+    fn one_device_pool_matches_plain_run() {
+        let w = sgemm_tenants(6, 4, GemmShape::RESNET18_CONV2_2);
+        let pool = run_pool(&cfg(Policy::SpaceTime { max_batch: 32 }), &w, 1);
+        let plain = run(&cfg(Policy::SpaceTime { max_batch: 32 }), &w);
+        assert_eq!(pool.makespan(), plain.makespan);
+        assert_eq!(pool.total_completed(), plain.total_completed());
+        assert_eq!(pool.kernel_launches(), plain.kernel_launches);
+    }
+
+    #[test]
+    fn uniform_class_spreads_evenly() {
+        let w = sgemm_tenants(16, 2, GemmShape::SQUARE_256);
+        let r = run_pool(&cfg(Policy::SpaceTime { max_batch: 8 }), &w, 4);
+        for d in 0..4 {
+            let members = r.assignment.iter().filter(|&&x| x == d).count();
+            assert_eq!(members, 4, "device {d} should host 4 of 16 tenants");
+        }
+    }
+
+    #[test]
+    fn pool_makespan_is_max_of_devices() {
+        let w = sgemm_tenants(8, 3, GemmShape::SQUARE_256);
+        let r = run_pool(&cfg(Policy::TimeMux), &w, 2);
+        let per: Vec<f64> = r.per_device.iter().map(|x| x.makespan).collect();
+        assert_eq!(r.makespan(), per.iter().cloned().fold(0.0, f64::max));
+        assert!(r.throughput_flops() > 0.0);
+    }
+}

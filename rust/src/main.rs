@@ -2,10 +2,14 @@
 //!
 //! Subcommands:
 //! * `serve    --config <toml> [--duration-s N] [--status ADDR]`
-//!   Start the coordinator + threaded frontend, drive closed-loop synthetic
-//!   clients (paper §2: saturated queues), print the metrics snapshot.
-//! * `simulate --policy <p> --tenants N [--shape MxNxK] [--iters N]`
-//!   Run the V100 discrete-event simulator under a multiplexing policy.
+//!   Start the coordinator + threaded frontend over a device pool
+//!   (`devices` in the config), drive closed-loop synthetic clients
+//!   (paper §2: saturated queues), print per-tenant and per-device
+//!   metrics. Overload sheds with a 429-style `Overloaded` rejection.
+//! * `simulate --policy <p> --tenants N [--shape MxNxK] [--iters N]
+//!   [--devices N]`
+//!   Run the V100 discrete-event simulator under a multiplexing policy;
+//!   `--devices > 1` shards tenants across a device pool.
 //! * `artifacts [--dir artifacts]`
 //!   List the AOT artifact manifest the runtime would load.
 //! * `trace    [--tenants N] [--policy <p>]`
@@ -131,9 +135,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     };
     let warmed = coord.warmup().unwrap_or(0);
     eprintln!(
-        "serve: scheduler={} tenants={} warmed={} executables, platform={}",
+        "serve: scheduler={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
         coord.scheduler_label(),
         n_tenants,
+        coord.devices(),
+        coord.queue_cap(),
         warmed,
         coord.engine().platform()
     );
@@ -199,14 +205,33 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         ]);
     }
     println!("{}", table.render());
+    if snap.devices.len() > 1 || snap.devices.iter().any(|d| d.shed > 0) {
+        let mut dev_table = Table::new(&[
+            "device", "tenants", "launches", "superkernels", "drained", "shed", "flops",
+        ]);
+        for d in &snap.devices {
+            dev_table.row(&[
+                d.device.to_string(),
+                d.tenants.to_string(),
+                d.launches.to_string(),
+                d.superkernel_launches.to_string(),
+                d.drained.to_string(),
+                d.shed.to_string(),
+                format!("{:.3e}", d.flops),
+            ]);
+        }
+        println!("{}", dev_table.render());
+    }
+    let shed_total = coord.shed_total();
     println!(
-        "total: {} completed in {:.2}s ({:.1} req/s, {} throughput), {} superkernels, {} singleton kernels",
+        "total: {} completed in {:.2}s ({:.1} req/s, {} throughput), {} superkernels, {} singleton kernels, {} shed (429)",
         snap.total_completed(),
         snap.wall_seconds,
         snap.throughput_rps(),
         fmt_flops(snap.throughput_flops()),
         snap.superkernel_launches,
         snap.kernel_launches,
+        shed_total,
     );
     if let Some(bs) = coord.batcher_stats() {
         println!(
@@ -225,6 +250,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
     let tenants: usize = flag(flags, "tenants", "8").parse().unwrap_or(8);
     let iters: u32 = flag(flags, "iters", "50").parse().unwrap_or(50);
     let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
+    let devices: usize = flag(flags, "devices", "1").parse().unwrap_or(1).max(1);
     let shape = match parse_shape(flag(flags, "shape", "256x128x1152")) {
         Ok(s) => s,
         Err(e) => {
@@ -241,16 +267,38 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
     };
     let cfg = SimConfig::new(DeviceSpec::v100(), policy);
     let workloads = sgemm_tenants(tenants, iters, shape);
-    let report = gpusim::run(&cfg, &workloads);
     println!(
-        "policy={} tenants={} shape={}x{}x{} iters={}",
+        "policy={} tenants={} shape={}x{}x{} iters={} devices={}",
         cfg.policy.label(),
         tenants,
         shape.m,
         shape.n,
         shape.k,
-        iters
+        iters,
+        devices,
     );
+    if devices > 1 {
+        let pool = gpusim::run_pool(&cfg, &workloads, devices);
+        println!(
+            "pool: makespan={} aggregate_throughput={} mean_latency={} launches={} (super={})",
+            fmt_secs(pool.makespan()),
+            fmt_flops(pool.throughput_flops()),
+            fmt_secs(pool.mean_latency()),
+            pool.kernel_launches(),
+            pool.superkernel_launches(),
+        );
+        for (d, r) in pool.per_device.iter().enumerate() {
+            let members = pool.assignment.iter().filter(|&&x| x == d).count();
+            println!(
+                "  device {d}: tenants={members} makespan={} throughput={} launches={}",
+                fmt_secs(r.makespan),
+                fmt_flops(r.throughput_flops()),
+                r.kernel_launches,
+            );
+        }
+        return 0;
+    }
+    let report = gpusim::run(&cfg, &workloads);
     println!(
         "makespan={} throughput={} mean_latency={} straggler_gap={:.1}% launches={} (super={}, fused_problems={})",
         fmt_secs(report.makespan),

@@ -88,6 +88,25 @@ pub struct TenantSnapshot {
     pub flops: f64,
 }
 
+/// Per-device counters in a snapshot (sharded coordinator; one entry per
+/// pool device, filled by `Coordinator::snapshot`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceSnapshot {
+    pub device: usize,
+    /// Tenants placed on this device.
+    pub tenants: u64,
+    /// Requests currently queued on this shard.
+    pub pending: u64,
+    pub launches: u64,
+    pub superkernel_launches: u64,
+    /// Requests drained into launches over the lifetime.
+    pub drained: u64,
+    /// Requests shed at admission (global cap) attributed to this shard.
+    pub shed: u64,
+    /// FLOPs executed on this device.
+    pub flops: f64,
+}
+
 /// Whole-system snapshot: per-tenant plus aggregates.
 #[derive(Debug, Clone, Default)]
 pub struct Snapshot {
@@ -100,6 +119,8 @@ pub struct Snapshot {
     /// Super-kernel cache hits (compiled-executable reuse).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Per-device section (empty when snapshotted outside a coordinator).
+    pub devices: Vec<DeviceSnapshot>,
 }
 
 impl Snapshot {
@@ -168,8 +189,29 @@ impl Snapshot {
                 })
                 .collect(),
         );
+        let devices = Json::Arr(
+            self.devices
+                .iter()
+                .map(|d| {
+                    Json::obj(vec![
+                        ("device", Json::num(d.device as f64)),
+                        ("tenants", Json::num(d.tenants as f64)),
+                        ("pending", Json::num(d.pending as f64)),
+                        ("launches", Json::num(d.launches as f64)),
+                        (
+                            "superkernel_launches",
+                            Json::num(d.superkernel_launches as f64),
+                        ),
+                        ("drained", Json::num(d.drained as f64)),
+                        ("shed", Json::num(d.shed as f64)),
+                        ("flops", Json::num(d.flops)),
+                    ])
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("tenants", tenants),
+            ("devices", devices),
             ("wall_seconds", Json::num(self.wall_seconds)),
             ("throughput_rps", Json::num(self.throughput_rps())),
             ("throughput_flops", Json::num(self.throughput_flops())),
@@ -236,6 +278,7 @@ impl MetricsRegistry {
             kernel_launches: self.kernel_launches.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            devices: Vec::new(),
         }
     }
 }
@@ -310,5 +353,26 @@ mod tests {
         let back = crate::util::json::Json::parse(&text).unwrap();
         assert!(back.get("tenants").is_some());
         assert_eq!(back.get("throughput_rps").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn device_section_serializes() {
+        let r = MetricsRegistry::new();
+        let mut snap = r.snapshot(1.0);
+        snap.devices = vec![DeviceSnapshot {
+            device: 0,
+            tenants: 2,
+            pending: 1,
+            launches: 7,
+            superkernel_launches: 3,
+            drained: 9,
+            shed: 4,
+            flops: 1e9,
+        }];
+        let back = crate::util::json::Json::parse(&snap.to_json().to_string()).unwrap();
+        let devices = back.get("devices").unwrap();
+        let d0 = &devices.as_arr().unwrap()[0];
+        assert_eq!(d0.get("launches").unwrap().as_f64(), Some(7.0));
+        assert_eq!(d0.get("shed").unwrap().as_f64(), Some(4.0));
     }
 }

@@ -5,6 +5,14 @@
 //! The design mirrors a vLLM-style router: submission is non-blocking with
 //! admission control; batching happens inside the coordinator; the leader
 //! thread is the only mutator, so no lock is held across a PJRT execution.
+//!
+//! Admission outcomes surface verbatim to submitters: a saturated bounded
+//! front replies `Err(Reject::Overloaded)` / `Err(Reject::QueueFull)`
+//! rather than letting queues grow without bound. An embedder exposing
+//! this frontend over HTTP maps those rejects to status codes with
+//! `Reject::http_status` (429 for shed/backpressure). Per-device metrics
+//! ride the snapshot (`Snapshot::devices`), so the status endpoint
+//! reports the whole pool.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;

@@ -1,0 +1,160 @@
+//! Integration: the multi-device device pool and the bounded admission
+//! front — the two halves of the sharded-coordinator change.
+//!
+//! * Aggregate SpaceTime throughput must increase monotonically as the
+//!   pool grows 1 → 4 devices (the fig8 bench's headline curve), and beat
+//!   TimeMux at every pool size.
+//! * A saturated bounded queue must produce explicit `Rejected` outcomes
+//!   (shed) instead of unbounded queue growth.
+//!
+//! Pure logic + simulator — no PJRT artifacts required.
+
+use std::time::Instant;
+
+use stgpu::coordinator::placement::place;
+use stgpu::coordinator::request::{InferenceRequest, Reject, ShapeClass};
+use stgpu::coordinator::QueueSet;
+use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::workload::sgemm_tenants;
+
+fn pool_throughput(policy: Policy, devices: usize) -> f64 {
+    // 96 conv2_2 tenants: enough backlog that every pool size stays
+    // saturated (96/d tenants per device, fused in chunks of max_batch).
+    let w = sgemm_tenants(96, 4, GemmShape::RESNET18_CONV2_2);
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy);
+    gpusim::run_pool(&cfg, &w, devices).throughput_flops()
+}
+
+#[test]
+fn spacetime_throughput_scales_monotonically_1_to_4_devices() {
+    let mut last = 0.0;
+    for d in 1..=4usize {
+        let t = pool_throughput(Policy::SpaceTime { max_batch: 32 }, d);
+        assert!(
+            t > last,
+            "aggregate SpaceTime throughput must increase with pool size: \
+             {d} devices gave {t:.3e} <= {last:.3e}"
+        );
+        last = t;
+    }
+    // And the pool multiplies meaningfully: 4 devices >= 2x one device.
+    let t1 = pool_throughput(Policy::SpaceTime { max_batch: 32 }, 1);
+    let t4 = pool_throughput(Policy::SpaceTime { max_batch: 32 }, 4);
+    assert!(t4 >= 2.0 * t1, "4-device pool {t4:.3e} vs 1-device {t1:.3e}");
+}
+
+#[test]
+fn spacetime_beats_timemux_at_every_pool_size() {
+    for d in 1..=4usize {
+        let st = pool_throughput(Policy::SpaceTime { max_batch: 32 }, d);
+        let tm = pool_throughput(Policy::TimeMux, d);
+        assert!(
+            st > tm,
+            "devices={d}: space-time {st:.3e} must beat time-mux {tm:.3e}"
+        );
+    }
+}
+
+#[test]
+fn pool_never_exceeds_aggregate_peak() {
+    let spec = DeviceSpec::v100();
+    for d in 1..=4usize {
+        let t = pool_throughput(Policy::SpaceTime { max_batch: 64 }, d);
+        assert!(
+            t <= spec.peak_flops() * d as f64 * 1.001,
+            "devices={d}: {t:.3e} exceeds aggregate peak"
+        );
+    }
+}
+
+#[test]
+fn placement_keeps_small_classes_whole_and_spreads_dominant_ones() {
+    // Mirror of the coordinator's tenant placement: four distinct shape
+    // classes stay whole (fusion preserved); one dominant class spreads.
+    let classes = [
+        ShapeClass::batched_gemm(512, 1, 512),
+        ShapeClass::batched_gemm(256, 128, 1152),
+        ShapeClass::batched_gemm(256, 256, 256),
+        ShapeClass::batched_gemm(64, 32, 48),
+    ];
+    // Equal per-tenant load: each class is exactly a fair device share, so
+    // affinity keeps every class whole.
+    let items: Vec<(ShapeClass, f64)> = (0..16).map(|i| (classes[i % 4], 1.0)).collect();
+    let p = place(&items, 4);
+    for c in classes {
+        let devices: std::collections::BTreeSet<usize> = items
+            .iter()
+            .enumerate()
+            .filter(|(_, (k, _))| *k == c)
+            .map(|(i, _)| p.device_of(i))
+            .collect();
+        assert_eq!(devices.len(), 1, "class {c} split across shards");
+    }
+    // One dominant class on its own must still use the whole pool.
+    let dominant: Vec<(ShapeClass, f64)> =
+        (0..32).map(|_| (classes[1], classes[1].flops())).collect();
+    let p2 = place(&dominant, 4);
+    for d in 0..4 {
+        assert_eq!(p2.members(d).len(), 8, "device {d} share of dominant class");
+    }
+}
+
+fn req(id: u64, tenant: usize) -> InferenceRequest {
+    InferenceRequest {
+        id,
+        tenant,
+        class: ShapeClass::batched_gemm(64, 64, 64),
+        payload: vec![],
+        arrived: Instant::now(),
+        deadline: Instant::now(),
+    }
+}
+
+#[test]
+fn saturated_bounded_queue_sheds_instead_of_growing() {
+    // The acceptance-criterion test: drive 50x the global cap into the
+    // admission front. Pending must stay bounded by the cap at every step,
+    // the overflow must surface as explicit Rejected outcomes, and the
+    // counters must tie out exactly — nothing silently dropped or queued.
+    const CAP: usize = 32;
+    let mut qs = QueueSet::with_global_cap(8, 16, CAP);
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    let mut tenant_full = 0u64;
+    for i in 0..(50 * CAP as u64) {
+        match qs.push(req(i, (i % 8) as usize)) {
+            Ok(()) => admitted += 1,
+            Err(Reject::Overloaded) => shed += 1,
+            Err(Reject::QueueFull) => tenant_full += 1,
+            Err(e) => panic!("unexpected outcome {e:?}"),
+        }
+        assert!(
+            qs.total_pending() <= CAP,
+            "queue grew past the cap at step {i}"
+        );
+    }
+    assert_eq!(admitted, CAP as u64, "admission stops exactly at the cap");
+    assert_eq!(admitted + shed + tenant_full, 50 * CAP as u64);
+    assert!(shed > 0, "saturation must surface as explicit shed outcomes");
+    assert_eq!(qs.shed, shed, "shed counter matches observed outcomes");
+
+    // Draining restores exactly the freed capacity — the front recovers.
+    for _ in 0..10 {
+        let t = qs.backlogged()[0];
+        assert!(qs.pop_tenant(t).is_some());
+    }
+    let mut readmitted = 0;
+    for i in 0..20u64 {
+        if qs.push(req(10_000 + i, (i % 8) as usize)).is_ok() {
+            readmitted += 1;
+        }
+    }
+    assert_eq!(readmitted, 10);
+    assert_eq!(qs.total_pending(), CAP);
+}
+
+#[test]
+fn shed_outcome_is_429_style() {
+    assert_eq!(Reject::Overloaded.http_status(), 429);
+    assert_eq!(Reject::QueueFull.http_status(), 429);
+}

@@ -4,7 +4,7 @@
 
 use std::time::Instant;
 
-use stgpu::coordinator::batcher::DynamicBatcher;
+use stgpu::coordinator::batcher::{DynamicBatcher, PaddingPolicy};
 use stgpu::coordinator::monitor::{MonitorConfig, SloMonitor};
 use stgpu::coordinator::queue::QueueSet;
 use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
@@ -114,6 +114,120 @@ fn prop_batcher_padding_bounded_by_2x() {
             "waste {}",
             b.stats.padding_waste()
         );
+    });
+}
+
+#[test]
+fn prop_split_exact_with_non_power_of_two_buckets() {
+    // SplitExact is documented for arbitrary bucket sets, not just the
+    // default powers of two: greedy largest-first decomposition, where only
+    // the FINAL fragment of a chunk may carry padding. Check request
+    // conservation, per-tenant FIFO, legal launch sizes, and padding
+    // accounting against randomized non-power-of-two bucket sets.
+    check("split-exact / non-po2 buckets", 0xB4, |rng| {
+        // 2-5 distinct buckets drawn from [1, 24]; ensure none is a power
+        // of two by preferring odd values (1 allowed — it is the floor the
+        // greedy loop falls back to).
+        let n_buckets = 2 + rng.gen_range(4) as usize;
+        let mut buckets: Vec<usize> = (0..n_buckets)
+            .map(|_| 1 + 2 * rng.gen_range(12) as usize) // odd in [1, 23]
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let max_batch = 1 + sized(rng, 64) as usize;
+        let mut b = DynamicBatcher::with_policy(
+            buckets.clone(),
+            max_batch,
+            PaddingPolicy::SplitExact,
+        );
+        let reqs = rand_requests(rng, 6, 200);
+        let submitted: Vec<(ShapeClass, u64)> =
+            reqs.iter().map(|r| (r.class, r.id)).collect();
+        let mut want_ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let launches = b.plan(reqs);
+
+        // Conservation: every request appears exactly once.
+        let mut got_ids: Vec<u64> = launches
+            .iter()
+            .flat_map(|l| l.entries.iter().map(|e| e.id))
+            .collect();
+        got_ids.sort_unstable();
+        want_ids.sort_unstable();
+        assert_eq!(got_ids, want_ids, "buckets {buckets:?}");
+
+        // Per-(tenant, class) FIFO across the whole plan.
+        let mut last: std::collections::HashMap<(usize, ShapeClass), u64> =
+            std::collections::HashMap::new();
+        for l in &launches {
+            for e in &l.entries {
+                if let Some(&prev) = last.get(&(e.tenant, e.class)) {
+                    assert!(
+                        e.id > prev,
+                        "tenant {} ids out of order with buckets {buckets:?}",
+                        e.tenant
+                    );
+                }
+                last.insert((e.tenant, e.class), e.id);
+            }
+        }
+
+        // Launch sizes legal: non-empty, within cap, within the chosen
+        // bucket, and the bucket is a real one.
+        for l in &launches {
+            assert!(!l.entries.is_empty());
+            assert!(l.entries.len() <= max_batch);
+            assert!(l.entries.len() <= l.r_bucket);
+            assert!(buckets.contains(&l.r_bucket), "bucket {}", l.r_bucket);
+        }
+
+        // Padding accounting: stats tie out with per-launch padded lanes.
+        let lanes: u64 = launches.iter().map(|l| l.r_bucket as u64).sum();
+        let problems: u64 = launches.iter().map(|l| l.entries.len() as u64).sum();
+        assert_eq!(b.stats.problems, problems);
+        assert_eq!(b.stats.padded_lanes, lanes - problems);
+        assert_eq!(b.stats.launches, launches.len() as u64);
+
+        // Structural oracle: re-run the documented greedy decomposition
+        // (classes in sorted order, chunks of min(max_batch, largest),
+        // largest-bucket-first fragments) and require the exact same
+        // (class, size, bucket) launch sequence. This pins the "padding
+        // only on a chunk's final fragment" guarantee: every non-final
+        // fragment the oracle emits is exactly bucket-sized.
+        let chunk_cap = max_batch.min(*buckets.last().unwrap());
+        let bucket_for =
+            |n: usize| buckets.iter().copied().find(|&b| b >= n).unwrap();
+        let mut classes: Vec<ShapeClass> = submitted.iter().map(|(c, _)| *c).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        let mut expected: Vec<(ShapeClass, usize, usize)> = Vec::new();
+        for class in classes {
+            let n_class = submitted.iter().filter(|(c, _)| *c == class).count();
+            let mut remaining = n_class;
+            while remaining > 0 {
+                let mut rest = remaining.min(chunk_cap);
+                remaining -= rest;
+                while rest > 0 {
+                    let take = buckets
+                        .iter()
+                        .rev()
+                        .copied()
+                        .find(|&b| b <= rest)
+                        .unwrap_or(buckets[0])
+                        .min(rest);
+                    expected.push((class, take, bucket_for(take)));
+                    if take < rest {
+                        // Non-final fragment: must be an exact bucket.
+                        assert!(buckets.contains(&take));
+                    }
+                    rest -= take;
+                }
+            }
+        }
+        let actual: Vec<(ShapeClass, usize, usize)> = launches
+            .iter()
+            .map(|l| (l.class, l.entries.len(), l.r_bucket))
+            .collect();
+        assert_eq!(actual, expected, "buckets {buckets:?} max_batch {max_batch}");
     });
 }
 

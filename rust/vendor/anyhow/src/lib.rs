@@ -1,0 +1,163 @@
+//! Minimal, offline-vendored subset of the `anyhow` API.
+//!
+//! This workspace builds with no network access, so instead of the crates.io
+//! `anyhow` we vendor the thin slice the codebase uses: [`Error`],
+//! [`Result`], the [`anyhow!`] macro, and the [`Context`] extension trait.
+//! Error values carry a message plus an optional chained cause; `{:#}`
+//! formatting prints the whole chain like upstream anyhow does.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed, context-chainable error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain().skip(1) {
+                write!(f, ": {}", cause.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&Error> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {}", c.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NB: like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps the blanket `From` below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Collect the std source chain outermost-first, then rebuild it as
+        // nested `Error`s innermost-first.
+        let mut chain: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(c) = cur {
+            chain.push(c.to_string());
+            cur = c.source();
+        }
+        let mut source: Option<Box<Error>> = None;
+        for msg in chain.into_iter().rev() {
+            source = Some(Box::new(Error { msg, source }));
+        }
+        Error { msg: e.to_string(), source }
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Attach context to errors, mirroring anyhow's `Context` trait.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a: Error = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let s = String::from("from-a-string");
+        let b: Error = anyhow!(s);
+        assert_eq!(b.to_string(), "from-a-string");
+        let c: Error = anyhow!("x={} y={}", 1, 2);
+        assert_eq!(c.to_string(), "x=1 y=2");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let base: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let err = base.with_context(|| "opening config").unwrap_err();
+        assert_eq!(format!("{err}"), "opening config");
+        assert!(format!("{err:#}").contains("missing"));
+        assert!(format!("{err:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+}

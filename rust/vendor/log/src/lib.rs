@@ -1,0 +1,28 @@
+//! Minimal offline-vendored `log` facade: the five level macros, writing
+//! straight to stderr. No logger registry — the binary is a CLI whose only
+//! consumer of these macros is the serving leader loop.
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { eprintln!("[ERROR] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { eprintln!("[WARN] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { eprintln!("[INFO] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { if cfg!(debug_assertions) { eprintln!("[DEBUG] {}", format!($($arg)*)) } };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { if false { let _ = format!($($arg)*); } };
+}

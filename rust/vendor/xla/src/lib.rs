@@ -1,0 +1,290 @@
+//! API-compatible stub of the `xla` (PJRT) bindings used by the runtime.
+//!
+//! The offline build environment does not ship the real `xla_extension`
+//! native library, so this crate provides the exact API surface
+//! `stgpu::runtime` compiles against — `Literal`, `PjRtClient`,
+//! `PjRtBuffer`, `PjRtLoadedExecutable`, `HloModuleProto`,
+//! `XlaComputation` — with real host-side tensor plumbing (literals,
+//! buffers, tuple packing) but **no HLO compiler**: `PjRtClient::compile`
+//! returns a descriptive error. Every artifact-dependent test in
+//! `rust/tests/` already skips when `artifacts/manifest.json` is absent, so
+//! the serving stack, scheduler, simulator and all tier-1 tests run
+//! unaffected. To serve real AOT artifacts, replace this path dependency
+//! with the real `xla` bindings (same API) in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// Stub error type, mirroring `xla::Error`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the stub can move across the host boundary (f32 only —
+/// everything in this repo is fp32).
+pub trait NativeType: Copy {
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Shape of a dense array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side literal: a dense f32 array or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: Vec<f32> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array {
+            dims: vec![data.len() as i64],
+            data: data.iter().map(|v| v.to_f32()).collect(),
+        }
+    }
+
+    /// Reshape, preserving element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want as usize != data.len() {
+                    return Err(Error::new(format!(
+                        "reshape {:?} incompatible with {} elements",
+                        dims,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => {
+                Ok(data.iter().map(|&v| T::from_f32(v)).collect())
+            }
+            Literal::Tuple(_) => Err(Error::new("tuple literal has no flat data")),
+        }
+    }
+
+    /// Unpack a tuple literal (identity wrap for an array, matching the
+    /// lenient behaviour the runtime relies on for single-output tuples).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            arr @ Literal::Array { .. } => Ok(vec![arr.clone()]),
+        }
+    }
+}
+
+/// A parsed HLO module (stub: retains the source path for error messages).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file. Parsing succeeds if the file is readable; the
+    /// stub defers "cannot execute" to compile time.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+
+    pub fn source_path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// A computation handle (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// A device-resident buffer (stub: host memory standing in for the device).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable. The stub never produces one (compile errors), but
+/// the type must exist for the runtime to compile against.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _module: HloModuleProto,
+}
+
+/// Argument kinds accepted by `execute`/`execute_b`.
+pub trait ExecuteArg {
+    fn as_literal(&self) -> Result<Literal>;
+}
+
+impl ExecuteArg for Literal {
+    fn as_literal(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+}
+
+impl ExecuteArg for &PjRtBuffer {
+    fn as_literal(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A: ExecuteArg>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(
+            "stub backend cannot execute HLO (link the real xla bindings)",
+        ))
+    }
+
+    pub fn execute_b<A: ExecuteArg>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(
+            "stub backend cannot execute HLO (link the real xla bindings)",
+        ))
+    }
+}
+
+/// The PJRT client (stub CPU platform).
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(format!(
+            "stub backend cannot compile {} (link the real xla bindings; \
+             artifact-dependent tests skip without artifacts/)",
+            comp.module.path
+        )))
+    }
+
+    /// Upload a host buffer (stub: wraps it as a literal-backed buffer).
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let want: usize = dims.iter().product();
+        if want != data.len() {
+            return Err(Error::new(format!(
+                "buffer dims {dims:?} incompatible with {} elements",
+                data.len()
+            )));
+        }
+        let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(PjRtBuffer {
+            literal: Literal::Array {
+                dims: dims_i,
+                data: data.iter().map(|v| v.to_f32()).collect(),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn tuple_unpacks_and_array_self_wraps() {
+        let a = Literal::vec1(&[1.0f32]);
+        let t = Literal::Tuple(vec![a.clone(), a.clone()]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        assert_eq!(a.to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn client_uploads_but_never_compiles() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        let buf = c
+            .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[2, 1], None)
+            .unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0], &[3], None).is_err());
+        let proto = HloModuleProto { path: "x.hlo.txt".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(c.compile(&comp).is_err());
+    }
+}
