@@ -55,7 +55,7 @@ fn bucket_granularity() {
                         class,
                         payload: vec![],
                         arrived: Instant::now(),
-            deadline: Instant::now(),
+                        deadline: Instant::now(),
                     }
                 })
                 .collect();

@@ -1,0 +1,289 @@
+//! Figure 9 (extension) — SLO-attainment ratio under a bursty arrival
+//! trace: deadline-aware (EDF) SpaceTime vs FIFO SpaceTime vs TimeMux.
+//!
+//! The paper's headline is not just utilization but **predictability**;
+//! related work makes the deadline the scheduling primitive (predictable-
+//! latency planning, arXiv:2512.18725; DARIS deadline-ordered admission,
+//! arXiv:2504.08795). This bench replays one bursty multi-tenant trace
+//! (`workload::arrivals`, tight- and loose-SLO tenants mixed on one shape
+//! class) through the three policies on a simulated clock, with launch
+//! durations taken from the same roofline cost model the EDF planner
+//! plans against:
+//!
+//! * **EDF SpaceTime** — earliest-deadline drain + cost-model-planned
+//!   launches (splitting when a fused launch would blow a deadline).
+//! * **FIFO SpaceTime** — the classic fair round-robin drain.
+//! * **TimeMux** — one problem per launch, no fusion.
+//!
+//! Expected shape: when bursts push the backlog past one round's fusion
+//! cap, FIFO hands the tight-SLO tenants only a fair share of the launch
+//! lanes and their requests miss; EDF gives urgent requests every lane
+//! they need at the same aggregate throughput (same work, same fused
+//! launches, different order). Asserted at the bottom: EDF attainment
+//! strictly above FIFO at >= 97% of FIFO throughput.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use stgpu::config::SchedulerKind;
+use stgpu::coordinator::batcher::PaddingPolicy;
+use stgpu::coordinator::scheduler::{
+    make_scheduler, make_scheduler_deadline_aware, Scheduler,
+};
+use stgpu::coordinator::{CostModel, InferenceRequest, QueueSet, ShapeClass};
+use stgpu::util::bench::{banner, Table};
+use stgpu::workload::arrivals::{ArrivalProcess, RequestTrace};
+
+const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 1024, n: 1024, k: 1024 };
+const N_TENANTS: usize = 8;
+/// Tenants 0..4 are latency-critical, 4..8 are throughput-oriented.
+const TIGHT_SLO_S: f64 = 0.008;
+const LOOSE_SLO_S: f64 = 0.200;
+const MAX_BATCH: usize = 16;
+const HORIZON_S: f64 = 2.0;
+const SEED: u64 = 42;
+
+fn slo_of(tenant: usize) -> f64 {
+    if tenant < N_TENANTS / 2 {
+        TIGHT_SLO_S
+    } else {
+        LOOSE_SLO_S
+    }
+}
+
+fn buckets() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32, 64]
+}
+
+fn trace() -> RequestTrace {
+    // Bursty arrivals slightly above the fused-service capacity on
+    // average: backlog episodes build during high phases and drain in the
+    // low ones — exactly the regime where drain ORDER decides attainment.
+    let processes: Vec<(usize, ArrivalProcess)> = (0..N_TENANTS)
+        .map(|t| {
+            (t, ArrivalProcess::Bursty { low: 150.0, high: 1200.0, dwell: 0.1 })
+        })
+        .collect();
+    RequestTrace::generate(&processes, SEED, HORIZON_S)
+}
+
+struct PolicyResult {
+    completed: u64,
+    hits: u64,
+    misses: u64,
+    tight_hits: u64,
+    tight_total: u64,
+    makespan_s: f64,
+    launches: u64,
+    splits: u64,
+}
+
+impl PolicyResult {
+    fn attainment(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    fn tight_attainment(&self) -> f64 {
+        if self.tight_total == 0 {
+            1.0
+        } else {
+            self.tight_hits as f64 / self.tight_total as f64
+        }
+    }
+
+    fn throughput_rps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.makespan_s
+        }
+    }
+}
+
+/// Replay the trace through one scheduler on a simulated clock. Launch
+/// durations are the cost model's analytic roofline times — the same
+/// ground truth the EDF planner predicts against (and is fed back as
+/// measurements, closing its calibration loop with zero error).
+fn run_policy(mut sched: Box<dyn Scheduler>, cost: &Arc<Mutex<CostModel>>) -> PolicyResult {
+    let tr = trace();
+    let base = Instant::now();
+    let mut q = QueueSet::new(N_TENANTS, 1 << 16);
+    let mut idx = 0usize;
+    let mut t = 0.0f64; // simulated seconds since base
+    let mut res = PolicyResult {
+        completed: 0,
+        hits: 0,
+        misses: 0,
+        tight_hits: 0,
+        tight_total: 0,
+        makespan_s: 0.0,
+        launches: 0,
+        splits: 0,
+    };
+    loop {
+        // Admit everything that has arrived by the simulated clock.
+        while idx < tr.requests.len() && tr.requests[idx].t_arrival <= t {
+            let r = tr.requests[idx];
+            let arrived = base + Duration::from_secs_f64(r.t_arrival);
+            q.push(InferenceRequest {
+                id: idx as u64,
+                tenant: r.tenant,
+                class: CLASS,
+                payload: vec![],
+                arrived,
+                deadline: arrived + Duration::from_secs_f64(slo_of(r.tenant)),
+            })
+            .expect("bench queues are effectively unbounded");
+            idx += 1;
+        }
+        if q.is_empty() {
+            match tr.requests.get(idx) {
+                Some(next) => {
+                    t = next.t_arrival; // idle-skip to the next arrival
+                    continue;
+                }
+                None => break, // trace exhausted and drained
+            }
+        }
+        let now = base + Duration::from_secs_f64(t);
+        let plan = sched.plan_round_at(&mut q, now);
+        res.splits += plan.deadline_splits as u64;
+        for launch in &plan.launches {
+            let dur = {
+                let mut cm = cost.lock().unwrap();
+                let d = cm.analytic_seed(launch.class, launch.r_bucket);
+                cm.observe(launch.class, launch.r_bucket, d);
+                d
+            };
+            t += dur;
+            res.launches += 1;
+            let done = base + Duration::from_secs_f64(t);
+            for e in &launch.entries {
+                let met = done <= e.deadline;
+                res.completed += 1;
+                if met {
+                    res.hits += 1;
+                } else {
+                    res.misses += 1;
+                }
+                if slo_of(e.tenant) == TIGHT_SLO_S {
+                    res.tight_total += 1;
+                    if met {
+                        res.tight_hits += 1;
+                    }
+                }
+            }
+        }
+    }
+    res.makespan_s = t;
+    res
+}
+
+fn main() {
+    banner(
+        "Figure 9: SLO attainment under bursty load (EDF vs FIFO vs TimeMux)",
+        "deadline-aware space-time strictly improves attainment at equal throughput",
+    );
+    let shared = || Arc::new(Mutex::new(CostModel::new()));
+
+    let edf_cost = shared();
+    let edf = run_policy(
+        make_scheduler_deadline_aware(
+            SchedulerKind::SpaceTime,
+            buckets(),
+            MAX_BATCH,
+            PaddingPolicy::PadToBucket,
+            edf_cost.clone(),
+            0.0,
+        ),
+        &edf_cost,
+    );
+    let fifo_cost = shared();
+    let fifo = run_policy(
+        make_scheduler(SchedulerKind::SpaceTime, buckets(), MAX_BATCH),
+        &fifo_cost,
+    );
+    let tm_cost = shared();
+    let timemux = run_policy(
+        make_scheduler(SchedulerKind::TimeMux, buckets(), MAX_BATCH),
+        &tm_cost,
+    );
+
+    let mut table = Table::new(&[
+        "policy",
+        "completed",
+        "slo_attainment",
+        "tight_attainment",
+        "throughput_rps",
+        "makespan_s",
+        "launches",
+        "splits",
+    ]);
+    for (name, r) in [
+        ("edf-space-time", &edf),
+        ("fifo-space-time", &fifo),
+        ("time-mux", &timemux),
+    ] {
+        table.row(&[
+            name.to_string(),
+            r.completed.to_string(),
+            format!("{:.4}", r.attainment()),
+            format!("{:.4}", r.tight_attainment()),
+            format!("{:.1}", r.throughput_rps()),
+            format!("{:.3}", r.makespan_s),
+            r.launches.to_string(),
+            r.splits.to_string(),
+        ]);
+    }
+    table.emit("fig9_deadline_attainment");
+    println!(
+        "calibration: EDF predictor relative error {:.4} after {} observed launches",
+        edf_cost.lock().unwrap().calibration_error(),
+        edf_cost.lock().unwrap().observations(),
+    );
+
+    // The acceptance claims, asserted so regressions fail loudly.
+    assert_eq!(
+        edf.completed, fifo.completed,
+        "both space-time variants must complete the whole trace"
+    );
+    assert!(
+        edf.attainment() > fifo.attainment(),
+        "EDF must strictly improve SLO attainment: {:.4} vs {:.4}",
+        edf.attainment(),
+        fifo.attainment()
+    );
+    assert!(
+        edf.tight_attainment() > fifo.tight_attainment(),
+        "the win must come from the latency-critical tenants: {:.4} vs {:.4}",
+        edf.tight_attainment(),
+        fifo.tight_attainment()
+    );
+    assert!(
+        edf.throughput_rps() >= 0.97 * fifo.throughput_rps(),
+        "EDF must not trade meaningful throughput: {:.1} vs {:.1} req/s",
+        edf.throughput_rps(),
+        fifo.throughput_rps()
+    );
+    assert!(
+        edf.attainment() > timemux.attainment(),
+        "fusion + EDF must dominate unfused time multiplexing"
+    );
+    println!(
+        "shape check: EDF attainment {:.4} > FIFO {:.4} > feasible-throughput \
+         floor; EDF throughput {:.1} req/s vs FIFO {:.1} (ratio {:.3}); \
+         time-mux collapses to {:.4} attainment at {:.1} req/s.",
+        edf.attainment(),
+        fifo.attainment(),
+        edf.throughput_rps(),
+        fifo.throughput_rps(),
+        edf.throughput_rps() / fifo.throughput_rps().max(1e-9),
+        timemux.attainment(),
+        timemux.throughput_rps(),
+    );
+}

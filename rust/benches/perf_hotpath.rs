@@ -47,7 +47,7 @@ fn scheduling_decision() {
                     class,
                     payload: vec![],
                     arrived: Instant::now(),
-            deadline: Instant::now(),
+                    deadline: Instant::now(),
                 })
                 .unwrap();
             }

@@ -101,6 +101,15 @@ pub struct ServerConfig {
     /// head-of-queue deadline order instead of round-robin (paper §4.1:
     /// "determine when to execute workloads based on per-model SLOs").
     pub slo_aware: bool,
+    /// Deadline-aware (EDF) planning (space-time only): drain earliest-
+    /// deadline-first, plan launches against the per-shard cost model,
+    /// split fused launches that would blow an urgent deadline, and shed
+    /// predicted-infeasible requests at admission with
+    /// `Reject::DeadlineInfeasible` (504-style). Implies `slo_aware`.
+    pub edf: bool,
+    /// Safety margin (seconds, >= 0) subtracted from every deadline budget
+    /// by the EDF planner and the admission feasibility check.
+    pub deadline_slack: f64,
     /// How long the batcher waits to accumulate a batch, microseconds.
     pub batch_timeout_us: u64,
     /// Devices in the pool. Tenants are sharded across devices by the
@@ -133,6 +142,8 @@ impl Default for ServerConfig {
             max_batch: 64,
             split_exact: false,
             slo_aware: false,
+            edf: false,
+            deadline_slack: 0.0,
             batch_timeout_us: 200,
             devices: 1,
             queue_depth: 256,
@@ -167,6 +178,15 @@ impl ServerConfig {
         }
         if let Some(v) = server.get("slo_aware").and_then(|v| v.as_bool()) {
             cfg.slo_aware = v;
+        }
+        if let Some(v) = server.get("edf").and_then(|v| v.as_bool()) {
+            cfg.edf = v;
+        }
+        if let Some(v) = server.get("deadline_slack").and_then(|v| v.as_float()) {
+            if !v.is_finite() || v < 0.0 {
+                return Err("deadline_slack must be a finite number >= 0 (seconds)".into());
+            }
+            cfg.deadline_slack = v;
         }
         if let Some(v) = server.get("batch_timeout_us").and_then(|v| v.as_int()) {
             cfg.batch_timeout_us = v as u64;
@@ -280,6 +300,21 @@ mod tests {
         let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
         assert!(bad("[server]\ndevices = 0").is_err());
         assert!(bad("[server]\nqueue_cap = 0").is_err());
+    }
+
+    #[test]
+    fn edf_and_deadline_slack_parse_and_validate() {
+        let doc =
+            TomlDoc::parse("[server]\nedf = true\ndeadline_slack = 0.002").unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert!(cfg.edf);
+        assert!((cfg.deadline_slack - 0.002).abs() < 1e-12);
+        // Defaults: off, zero slack.
+        let d = ServerConfig::default();
+        assert!(!d.edf);
+        assert_eq!(d.deadline_slack, 0.0);
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[server]\ndeadline_slack = -0.001").is_err());
     }
 
     #[test]

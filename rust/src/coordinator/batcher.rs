@@ -119,6 +119,10 @@ impl DynamicBatcher {
         self.max_batch
     }
 
+    pub fn policy(&self) -> PaddingPolicy {
+        self.policy
+    }
+
     pub fn largest_bucket(&self) -> usize {
         *self.buckets.last().unwrap()
     }
@@ -148,6 +152,46 @@ impl DynamicBatcher {
             }
         }
         launches
+    }
+
+    /// Split an already-planned launch after its first `k` entries **in
+    /// the order given** (the deadline-aware planner pre-sorts entries by
+    /// deadline so the prefix is the urgent subset). The head becomes ONE
+    /// launch (rounded up to its covering bucket — the deadline-protected
+    /// piece must stay a single launch); the remainder re-dispatches
+    /// through the batcher's [`PaddingPolicy`], so under `SplitExact` it
+    /// decomposes into exact-bucket launches instead of padding. All
+    /// pieces are re-canonicalized to the (tenant, id) lane order the
+    /// fusion cache keys on, and the lifetime stats are corrected (the
+    /// original launch's accounting is replaced by the new pieces').
+    ///
+    /// Panics if `k` is not strictly inside `(0, entries.len())` or the
+    /// launch is over-full (the batcher never emits one).
+    pub fn split_launch(&mut self, launch: Launch, k: usize) -> (Launch, Vec<Launch>) {
+        let Launch { class, mut entries, r_bucket } = launch;
+        assert!(k > 0 && k < entries.len(), "split point must be interior");
+        assert!(entries.len() <= r_bucket, "over-full launch");
+        let n = entries.len();
+        let tail = entries.split_off(k);
+        let mut head = entries;
+        head.sort_by_key(|r| (r.tenant, r.id));
+        let head_bucket = self
+            .bucket_for(head.len())
+            .expect("head smaller than original bucket");
+        // Replace the original launch's accounting with the new pieces':
+        // uncount it, count the head, let dispatch_chunk count the tail.
+        self.stats.launches = self.stats.launches.saturating_sub(1);
+        self.stats.problems = self.stats.problems.saturating_sub(n as u64);
+        self.stats.padded_lanes = self
+            .stats
+            .padded_lanes
+            .saturating_sub((r_bucket - n) as u64);
+        self.stats.launches += 1;
+        self.stats.problems += head.len() as u64;
+        self.stats.padded_lanes += (head_bucket - head.len()) as u64;
+        let mut tails = Vec::new();
+        self.dispatch_chunk(class, tail, &mut tails);
+        (Launch { class, entries: head, r_bucket: head_bucket }, tails)
     }
 
     fn dispatch_chunk(
@@ -320,6 +364,55 @@ mod tests {
         let mut b = DynamicBatcher::new(vec![1, 2], 2);
         assert!(b.plan(vec![]).is_empty());
         assert_eq!(b.stats, BatcherStats::default());
+    }
+
+    #[test]
+    fn split_launch_rebuckets_and_fixes_stats() {
+        let mut b = DynamicBatcher::new(DynamicBatcher::default_buckets(), 64);
+        let launches = b.plan((0..6).map(|i| req(i, i as usize, gemm(64))).collect());
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].r_bucket, 8); // 6 -> bucket 8, 2 padded
+        assert_eq!(b.stats.padded_lanes, 2);
+        let launch = launches.into_iter().next().unwrap();
+        let (head, tails) = b.split_launch(launch, 2);
+        assert_eq!(head.entries.len(), 2);
+        assert_eq!(head.r_bucket, 2);
+        assert_eq!(tails.len(), 1, "PadToBucket tail is one rounded-up launch");
+        assert_eq!(tails[0].entries.len(), 4);
+        assert_eq!(tails[0].r_bucket, 4);
+        // Lane order stays canonical (tenant, id) in both pieces.
+        assert!(head.entries.windows(2).all(|w| (w[0].tenant, w[0].id)
+            <= (w[1].tenant, w[1].id)));
+        assert!(tails[0].entries.windows(2).all(|w| (w[0].tenant, w[0].id)
+            <= (w[1].tenant, w[1].id)));
+        // Stats: one extra launch, padding now exact (2+4 fill buckets 2+4).
+        assert_eq!(b.stats.launches, 2);
+        assert_eq!(b.stats.problems, 6);
+        assert_eq!(b.stats.padded_lanes, 0);
+    }
+
+    #[test]
+    fn split_launch_preserves_split_exact_zero_padding() {
+        // An exact 8-wide SplitExact launch split at an exact bucket (2)
+        // must stay zero-padding: head 2, tail decomposed 4+2.
+        let mut b = DynamicBatcher::with_policy(
+            DynamicBatcher::default_buckets(),
+            64,
+            PaddingPolicy::SplitExact,
+        );
+        let launches = b.plan((0..8).map(|i| req(i, 0, gemm(64))).collect());
+        assert_eq!(launches.len(), 1);
+        assert_eq!(b.stats.padded_lanes, 0);
+        let launch = launches.into_iter().next().unwrap();
+        let (head, tails) = b.split_launch(launch, 2);
+        assert_eq!(head.entries.len(), 2);
+        assert_eq!(head.r_bucket, 2);
+        let tail_sizes: Vec<usize> = tails.iter().map(|l| l.entries.len()).collect();
+        assert_eq!(tail_sizes, vec![4, 2], "tail re-decomposes exactly");
+        assert!(tails.iter().all(|l| l.entries.len() == l.r_bucket));
+        assert_eq!(b.stats.padded_lanes, 0, "SplitExact invariant survives");
+        assert_eq!(b.stats.problems, 8);
+        assert_eq!(b.stats.launches, 3);
     }
 
     #[test]

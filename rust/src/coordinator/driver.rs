@@ -5,12 +5,20 @@
 //! This is the leader's request path. It is deliberately synchronous and
 //! deterministic per round (the threaded frontend in `server/` pumps it);
 //! every round, for **each device shard**:
-//!   1. the shard's scheduler drains its queued problems into a launch plan,
+//!   1. the shard's scheduler drains its queued problems into a launch plan
+//!      (with `edf` on, planned against the shard's cost model: launches
+//!      ordered by urgency and split to protect deadlines),
 //!   2. each launch gathers operands, executes ONE PJRT executable, and
 //!      scatters outputs,
-//!   3. completions feed the SLO monitor and metrics,
+//!   3. completions feed the SLO monitor (latency EWMA + deadline
+//!      hit/miss), the metrics, and — with `edf` on — the shard's
+//!      launch-latency predictor (measured marshal+execute duration),
 //!   4. periodically the monitor evicts stragglers (relative to their
 //!      device peers) and their queues drain.
+//!
+//! With `edf` on, admission additionally sheds requests whose minimal
+//! immediate launch is already predicted past their deadline
+//! ([`Reject::DeadlineInfeasible`], 504-style).
 //!
 //! Sharding (the multi-device generalization): tenants are assigned to
 //! devices at registration time by the [`placement`] layer — least-loaded
@@ -28,12 +36,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::ServerConfig;
+use crate::coordinator::costmodel::{CostModel, SharedCostModel};
 use crate::coordinator::fusion_cache::{FusionCache, FusionCacheStats};
 use crate::coordinator::monitor::{Eviction, MonitorConfig, SloMonitor};
 use crate::coordinator::placement::DevicePlacer;
 use crate::coordinator::queue::QueueSet;
 use crate::coordinator::request::{
-    InferenceRequest, InferenceResponse, Reject, RequestId,
+    InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass,
 };
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
@@ -59,9 +68,15 @@ pub struct RoundOutcome {
 struct DeviceShard {
     queues: QueueSet,
     scheduler: Box<dyn Scheduler>,
+    /// Launch-latency predictor for this device (Some iff EDF planning is
+    /// on): shared with the shard's scheduler, fed by measured launch
+    /// durations after every execution.
+    cost_model: Option<SharedCostModel>,
     launches: u64,
     superkernel_launches: u64,
     drained: u64,
+    /// Fused launches the EDF planner split to protect a deadline.
+    deadline_splits: u64,
     flops: f64,
 }
 
@@ -70,9 +85,19 @@ pub struct Coordinator {
     engine: Arc<PjrtEngine>,
     pub tenants: TenantRegistry,
     shards: Vec<DeviceShard>,
-    placer: DevicePlacer,
+    placer: DevicePlacer<ShapeClass>,
     /// Global admission cap across all shards.
     queue_cap: usize,
+    /// Deadline-aware (EDF) planning on (space-time only).
+    edf: bool,
+    /// Safety margin (seconds) for deadline budgets and admission checks.
+    deadline_slack: f64,
+    /// Requests judged deadline-infeasible at admission. Every
+    /// `PROBE_EVERY`-th one is admitted anyway as a *probe*: its launch
+    /// feeds a fresh measurement back to the cost model, so a predictor
+    /// inflated by one anomalously slow launch cannot lock a class out
+    /// forever (no launches → no observations → no recovery).
+    infeasible_seen: u64,
     flavor: Flavor,
     fusion_cache: FusionCache,
     monitor: SloMonitor,
@@ -150,20 +175,46 @@ impl Coordinator {
         // launch entries — at the cost of per-round backlogged() scans over
         // empty queues; compact per-shard id maps are a follow-up if tenant
         // counts grow past the low hundreds.
+        // Deadline-aware (EDF) planning only applies to the space-time
+        // scheduler; each shard gets its own cost model so calibration
+        // follows the device the launches actually ran on.
+        let edf = cfg.edf && cfg.scheduler == crate::config::SchedulerKind::SpaceTime;
         let shards = (0..devices)
-            .map(|_| DeviceShard {
-                queues: QueueSet::new(tenants.len(), cfg.queue_depth),
-                scheduler: crate::coordinator::scheduler::make_scheduler_with_policy(
-                    cfg.scheduler,
-                    buckets.clone(),
-                    cfg.max_batch as usize,
-                    policy,
-                    cfg.slo_aware,
-                ),
-                launches: 0,
-                superkernel_launches: 0,
-                drained: 0,
-                flops: 0.0,
+            .map(|_| {
+                let cost_model: Option<SharedCostModel> = if edf {
+                    Some(Arc::new(std::sync::Mutex::new(CostModel::new())))
+                } else {
+                    None
+                };
+                let scheduler = match &cost_model {
+                    Some(cm) => {
+                        crate::coordinator::scheduler::make_scheduler_deadline_aware(
+                            cfg.scheduler,
+                            buckets.clone(),
+                            cfg.max_batch as usize,
+                            policy,
+                            cm.clone(),
+                            cfg.deadline_slack,
+                        )
+                    }
+                    None => crate::coordinator::scheduler::make_scheduler_with_policy(
+                        cfg.scheduler,
+                        buckets.clone(),
+                        cfg.max_batch as usize,
+                        policy,
+                        cfg.slo_aware,
+                    ),
+                };
+                DeviceShard {
+                    queues: QueueSet::new(tenants.len(), cfg.queue_depth),
+                    scheduler,
+                    cost_model,
+                    launches: 0,
+                    superkernel_launches: 0,
+                    drained: 0,
+                    deadline_splits: 0,
+                    flops: 0.0,
+                }
             })
             .collect();
         let device_map: Vec<usize> =
@@ -184,6 +235,9 @@ impl Coordinator {
             shards,
             placer,
             queue_cap: cfg.queue_cap,
+            edf,
+            deadline_slack: cfg.deadline_slack.max(0.0),
+            infeasible_seen: 0,
             flavor,
             fusion_cache: FusionCache::new(256),
             monitor,
@@ -215,6 +269,17 @@ impl Coordinator {
 
     pub fn queue_cap(&self) -> usize {
         self.queue_cap
+    }
+
+    /// Whether deadline-aware (EDF) planning is active.
+    pub fn deadline_aware(&self) -> bool {
+        self.edf
+    }
+
+    /// The launch-latency predictor of one device shard (None when EDF
+    /// planning is off or the device is unknown).
+    pub fn cost_model(&self, device: usize) -> Option<&SharedCostModel> {
+        self.shards.get(device).and_then(|s| s.cost_model.as_ref())
     }
 
     /// Requests shed by the global admission cap over the lifetime.
@@ -254,6 +319,11 @@ impl Coordinator {
                 superkernel_launches: s.superkernel_launches,
                 drained: s.drained,
                 shed: s.queues.shed,
+                deadline_splits: s.deadline_splits,
+                cost_calibration_error: s
+                    .cost_model
+                    .as_ref()
+                    .map_or(0.0, |cm| cm.lock().unwrap().calibration_error()),
                 flops: s.flops,
             })
             .collect()
@@ -311,6 +381,30 @@ impl Coordinator {
         let slo_ms = t.slo_ms;
         let class = t.spec.shape_class();
         let device = self.placer.device_of(tenant);
+        // Deadline-aware admission: a request whose *minimal immediate*
+        // launch is already predicted past its deadline is lost no matter
+        // what the planner does — shed it now (504-style) instead of
+        // queueing doomed work (DARIS, arXiv:2504.08795).
+        if self.edf {
+            if let Some(cm) = &self.shards[device].cost_model {
+                let infeasible = cm
+                    .lock()
+                    .unwrap()
+                    .deadline_infeasible(class, slo_ms / 1e3, self.deadline_slack);
+                if infeasible {
+                    self.infeasible_seen += 1;
+                    // Recovery valve: admit every PROBE_EVERY-th infeasible
+                    // request so its measured launch can deflate a predictor
+                    // stuck high (see `infeasible_seen`). The probe at worst
+                    // misses its deadline — which is counted, not hidden.
+                    const PROBE_EVERY: u64 = 16;
+                    if self.infeasible_seen % PROBE_EVERY != 0 {
+                        self.metrics.tenant(&name).record_rejection();
+                        return Err(Reject::DeadlineInfeasible);
+                    }
+                }
+            }
+        }
         // Global admission cap across every shard: shed, don't grow.
         if self.pending() >= self.queue_cap {
             self.shards[device].queues.record_shed();
@@ -363,11 +457,13 @@ impl Coordinator {
         };
         let exec = SuperKernelExec::new(&self.engine, self.flavor);
         for (device, shard) in self.shards.iter_mut().enumerate() {
-            let plan = shard.scheduler.plan_round(&mut shard.queues);
+            let now = Instant::now();
+            let plan = shard.scheduler.plan_round_at(&mut shard.queues, now);
             outcome.launches += plan.launches.len();
             outcome.launches_per_device[device] = plan.launches.len();
             shard.launches += plan.launches.len() as u64;
             shard.drained += plan.drained as u64;
+            shard.deadline_splits += plan.deadline_splits as u64;
             for launch in &plan.launches {
                 let fused = launch.entries.len();
                 if fused > 1 {
@@ -384,17 +480,36 @@ impl Coordinator {
                 } else if self.fusion_cache.stats.misses > misses_before {
                     self.metrics.record_cache(false);
                 }
+                // Calibrate this shard's launch-latency predictor with the
+                // measured end-to-end launch duration (marshal + execute —
+                // what a deadline actually waits on).
+                if let Some(cm) = &shard.cost_model {
+                    cm.lock().unwrap().observe(
+                        launch.class,
+                        launch.r_bucket,
+                        res.service_s + res.marshal_s,
+                    );
+                }
                 let done = Instant::now();
                 for (entry, output) in launch.entries.iter().zip(res.outputs) {
                     let latency_s = done.duration_since(entry.arrived).as_secs_f64();
+                    // One deadline verdict per response, fed to BOTH the
+                    // metrics registry (status JSON / serve table) and the
+                    // SLO monitor (eviction-adjacent reporting) from this
+                    // single point so the two attainment views can't
+                    // diverge.
+                    let met = done <= entry.deadline;
                     let tenant = self.tenants.get(entry.tenant).expect("tenant");
-                    self.metrics.tenant(&tenant.name).record_completion(
+                    let handle = self.metrics.tenant(&tenant.name);
+                    handle.record_completion(
                         (latency_s * 1e9) as u64,
                         (res.service_s * 1e9) as u64,
                         entry.class.flops(),
                     );
+                    handle.record_deadline(met);
                     shard.flops += entry.class.flops();
                     self.monitor.observe(entry.tenant, res.service_s);
+                    self.monitor.observe_deadline(entry.tenant, met);
                     outcome.responses.push(InferenceResponse {
                         id: entry.id,
                         tenant: entry.tenant,
@@ -415,13 +530,16 @@ impl Coordinator {
             for ev in &evictions {
                 let name = self.tenants.get(ev.tenant).expect("tenant").name.clone();
                 self.metrics.tenant(&name).record_eviction();
-                // Drop the evicted tenant's device-resident weights and fail
-                // everything it still has queued.
+                // Drop the evicted tenant's device-resident weights, fail
+                // everything it still has queued, and release its load
+                // from the placement accounting (a later re-registration
+                // re-joins its class via `DevicePlacer::readmit`).
                 self.fusion_cache.invalidate_tenant(ev.tenant);
                 let device = self.placer.device_of(ev.tenant);
                 for req in self.shards[device].queues.drain_tenant(ev.tenant) {
                     outcome.rejections.push((req.id, Reject::TenantEvicted));
                 }
+                self.placer.release(ev.tenant);
             }
             outcome.evictions = evictions;
         }
@@ -443,8 +561,30 @@ impl Coordinator {
         let evictions = self.monitor.check(&mut self.tenants);
         for ev in &evictions {
             self.fusion_cache.invalidate_tenant(ev.tenant);
+            self.placer.release(ev.tenant);
         }
         evictions
+    }
+
+    /// Re-admit a previously evicted tenant: health returns to `Healthy`,
+    /// the monitor's straggler state resets (a fresh EWMA — not the
+    /// history that got it evicted), and the placement layer re-joins the
+    /// tenant to its shape class's device (least-loaded fallback when the
+    /// whole class left). Returns the device it landed on. A tenant that
+    /// was never evicted keeps its current placement.
+    pub fn readmit_tenant(&mut self, tenant: usize) -> Result<usize, Reject> {
+        let t = self
+            .tenants
+            .get_mut(tenant)
+            .ok_or_else(|| Reject::BadRequest(format!("unknown tenant {tenant}")))?;
+        if t.health != crate::coordinator::tenant::Health::Evicted {
+            return Ok(self.placer.device_of(tenant));
+        }
+        t.health = crate::coordinator::tenant::Health::Healthy;
+        self.monitor.reset(tenant);
+        let device = self.placer.readmit(tenant);
+        self.monitor.set_device(tenant, device);
+        Ok(device)
     }
 
     /// Feed an out-of-band latency observation to the SLO monitor —

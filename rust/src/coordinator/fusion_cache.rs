@@ -166,7 +166,7 @@ mod tests {
                     class: ShapeClass::batched_gemm(8, 8, 8),
                     payload: vec![],
                     arrived: Instant::now(),
-            deadline: Instant::now(),
+                    deadline: Instant::now(),
                 })
                 .collect(),
             r_bucket: 4,

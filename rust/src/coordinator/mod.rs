@@ -11,10 +11,14 @@
 //!   fusion key.
 //! * [`tenant`] — registry of deployed models (same architecture,
 //!   per-tenant weights — paper §2).
-//! * [`queue`] — bounded admission front: per-tenant depth caps plus a
-//!   global cap that sheds with an explicit `Rejected` outcome.
+//! * [`queue`] — bounded admission front: per-tenant EDF heaps with depth
+//!   caps plus a global cap that sheds with an explicit `Rejected` outcome.
 //! * [`placement`] — which device of the pool each shape-class/tenant
-//!   lands on (least-loaded with class affinity).
+//!   lands on (least-loaded with class affinity; eviction releases load,
+//!   re-registration re-joins the class).
+//! * [`costmodel`] — per-shape-class launch-latency predictor (analytic
+//!   roofline seed + EWMA over measured durations) driving deadline-aware
+//!   planning and admission.
 //! * [`batcher`] — shape-class bucketing + R-bucket round-up with padding
 //!   accounting (MAGMA vbatch emulation).
 //! * [`scheduler`] — Exclusive / TimeMux / SpaceMux / SpaceTime policies.
@@ -25,6 +29,7 @@
 //!   `RoundPlan` per device per round).
 
 pub mod batcher;
+pub mod costmodel;
 pub mod driver;
 pub mod fusion_cache;
 pub mod monitor;
@@ -36,12 +41,15 @@ pub mod superkernel;
 pub mod tenant;
 
 pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
+pub use costmodel::{CostModel, SharedCostModel};
 pub use driver::{Coordinator, RoundOutcome};
 pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey};
 pub use monitor::{Eviction, MonitorConfig, SloMonitor};
 pub use placement::{place, DevicePlacer, Placement};
 pub use queue::{QueueSet, TenantQueue};
 pub use request::{InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass};
-pub use scheduler::{make_scheduler, RoundPlan, Scheduler};
+pub use scheduler::{
+    make_scheduler, make_scheduler_deadline_aware, RoundPlan, Scheduler,
+};
 pub use superkernel::{Flavor, LaunchResult, SuperKernelExec};
 pub use tenant::{Health, ModelSpec, Tenant, TenantRegistry};

@@ -8,7 +8,16 @@
 //!
 //! The monitor keeps an EWMA of per-tenant service latency; a tenant whose
 //! EWMA exceeds `threshold ×` the median of all healthy tenants for
-//! `strikes` consecutive observation windows is evicted.
+//! `strikes` consecutive observation windows is evicted. The EWMA is
+//! seeded from the first observed sample — decaying up from zero would
+//! under-report a tenant's latency for the first ~1/alpha samples and let
+//! early windows spuriously judge a straggler healthy (or, relative to
+//! correctly-seeded peers, a healthy tenant a straggler).
+//!
+//! Alongside eviction, the monitor counts per-tenant **deadline hits and
+//! misses** (did the request complete before `arrival + SLO`?) — the
+//! SLO-attainment ratio the deadline-aware planner optimizes and the
+//! status endpoint reports.
 
 use crate::coordinator::tenant::{Health, TenantRegistry};
 use crate::util::stats;
@@ -21,6 +30,10 @@ struct TenantTrack {
     strikes: u32,
     slo_ms: f64,
     slo_violations: u64,
+    /// Requests completed before their deadline.
+    deadline_hits: u64,
+    /// Requests completed after their deadline.
+    deadline_misses: u64,
 }
 
 /// Eviction decision emitted by a check.
@@ -74,6 +87,8 @@ impl SloMonitor {
                 strikes: 0,
                 slo_ms: t.slo_ms,
                 slo_violations: 0,
+                deadline_hits: 0,
+                deadline_misses: 0,
             })
             .collect();
         Self { cfg, tracks, device_of: Vec::new(), evictions: Vec::new() }
@@ -102,6 +117,56 @@ impl SloMonitor {
         t.samples += 1;
         if service_s * 1e3 > t.slo_ms {
             t.slo_violations += 1;
+        }
+    }
+
+    /// Forget a tenant's straggler state (re-admission path): the EWMA,
+    /// sample count and strikes restart from scratch so the history that
+    /// got the tenant evicted cannot immediately re-evict it. Lifetime
+    /// deadline hit/miss counters are kept.
+    pub fn reset(&mut self, tenant: usize) {
+        if let Some(t) = self.tracks.get_mut(tenant) {
+            t.ewma_s = 0.0;
+            t.samples = 0;
+            t.strikes = 0;
+        }
+    }
+
+    /// Re-home a tenant to a new device group (re-admission may place it
+    /// on a different shard than it was evicted from). No-op without a
+    /// device map.
+    pub fn set_device(&mut self, tenant: usize, device: usize) {
+        if let Some(d) = self.device_of.get_mut(tenant) {
+            *d = device;
+        }
+    }
+
+    /// Record whether a completed request met its deadline (SLO
+    /// attainment; the driver calls this once per response).
+    pub fn observe_deadline(&mut self, tenant: usize, met: bool) {
+        let Some(t) = self.tracks.get_mut(tenant) else { return };
+        if met {
+            t.deadline_hits += 1;
+        } else {
+            t.deadline_misses += 1;
+        }
+    }
+
+    /// Deadline hit/miss counters for one tenant.
+    pub fn deadline_counts(&self, tenant: usize) -> (u64, u64) {
+        self.tracks
+            .get(tenant)
+            .map_or((0, 0), |t| (t.deadline_hits, t.deadline_misses))
+    }
+
+    /// SLO-attainment ratio (hits / observed); None before any completion.
+    pub fn attainment(&self, tenant: usize) -> Option<f64> {
+        let (h, m) = self.deadline_counts(tenant);
+        let total = h + m;
+        if total == 0 {
+            None
+        } else {
+            Some(h as f64 / total as f64)
         }
     }
 
@@ -331,6 +396,79 @@ mod tests {
         mon.observe(0, 0.15); // 150 ms > SLO
         mon.observe(0, 0.2);
         assert_eq!(mon.slo_violations(0), 2);
+    }
+
+    #[test]
+    fn ewma_cold_start_seeds_from_first_sample() {
+        // Regression: an EWMA decayed up from zero under-reports a slow
+        // tenant for the first ~1/alpha samples — with min_samples = 8 and
+        // alpha = 0.2, a 10 ms straggler would show ewma ≈ 8.3 ms at the
+        // first check and could dodge the threshold. Seeding from the
+        // first sample makes the very first window see the true latency.
+        let mut reg = registry(4);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        // One sample must seed exactly (no decay from zero).
+        mon.observe(3, 10e-3);
+        assert_eq!(mon.ewma(3), Some(10e-3), "first sample seeds the EWMA");
+        // Exactly min_samples constant-latency samples keep the EWMA at
+        // the true value — no residual zero-bias.
+        for t in 0..3 {
+            feed(&mut mon, t, 1e-3, 8);
+        }
+        feed(&mut mon, 3, 10e-3, 7); // 8 total with the seed above
+        assert!((mon.ewma(3).unwrap() - 10e-3).abs() < 1e-12);
+        // And the straggler is struck on the FIRST window, not only after
+        // the bias has washed out.
+        mon.check(&mut reg);
+        assert_eq!(
+            reg.get(3).unwrap().health,
+            Health::Degraded { strikes: 1 },
+            "cold-start must not mask the straggler in early windows"
+        );
+    }
+
+    #[test]
+    fn reset_forgets_straggler_state_but_keeps_attainment() {
+        let mut reg = registry(3);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        feed(&mut mon, 0, 1e-3, 10);
+        feed(&mut mon, 1, 1e-3, 10);
+        feed(&mut mon, 2, 10e-3, 10);
+        mon.observe_deadline(2, false);
+        for _ in 0..3 {
+            mon.check(&mut reg);
+        }
+        assert_eq!(reg.get(2).unwrap().health, Health::Evicted);
+        // Re-admission: reset wipes EWMA/samples/strikes; deadline history
+        // stays (it is lifetime reporting, not eviction state).
+        mon.reset(2);
+        assert_eq!(mon.ewma(2), None, "no samples after reset");
+        assert_eq!(mon.deadline_counts(2), (0, 1));
+        // A reset tenant needs min_samples again before it can be judged;
+        // fresh healthy samples keep it clean.
+        reg.get_mut(2).unwrap().health = Health::Healthy;
+        feed(&mut mon, 2, 1e-3, 10);
+        for _ in 0..5 {
+            assert!(mon.check(&mut reg).is_empty());
+        }
+        assert_eq!(reg.get(2).unwrap().health, Health::Healthy);
+    }
+
+    #[test]
+    fn deadline_attainment_counts_hits_and_misses() {
+        let reg = registry(2);
+        let mut mon = SloMonitor::new(MonitorConfig::default(), &reg);
+        assert_eq!(mon.attainment(0), None, "no completions yet");
+        mon.observe_deadline(0, true);
+        mon.observe_deadline(0, true);
+        mon.observe_deadline(0, false);
+        mon.observe_deadline(1, true);
+        assert_eq!(mon.deadline_counts(0), (2, 1));
+        assert!((mon.attainment(0).unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mon.attainment(1), Some(1.0));
+        // Unknown tenants are inert.
+        mon.observe_deadline(99, true);
+        assert_eq!(mon.attainment(99), None);
     }
 
     #[test]

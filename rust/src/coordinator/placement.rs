@@ -140,20 +140,29 @@ pub fn place<K: Ord + Eq + Hash + Clone>(
     Placement { device_of, load, n_devices }
 }
 
-/// The placer the coordinator keeps: an assignment fixed at registration
-/// time (tenants' shape classes are static, so their device never moves;
-/// live admission decisions are made by the driver's pool-wide pending
-/// count, not here).
+/// The placer the coordinator keeps: the registration-time assignment plus
+/// live load accounting across the eviction/re-admission lifecycle. A
+/// tenant's device never moves while it is active; an evicted tenant's
+/// load is released ([`DevicePlacer::release`]) so later placement
+/// decisions see the true residual load, and a re-registered tenant
+/// re-joins its shape class's device when one is still active
+/// ([`DevicePlacer::readmit`]) so fusion affinity survives the round trip.
 #[derive(Debug)]
-pub struct DevicePlacer {
+pub struct DevicePlacer<K: Ord + Eq + Hash + Clone> {
+    items: Vec<(K, f64)>,
+    active: Vec<bool>,
     placement: Placement,
 }
 
-impl DevicePlacer {
+impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
     /// Place `tenants` — `(class, expected per-request load)` — on
     /// `n_devices`.
-    pub fn new<K: Ord + Eq + Hash + Clone>(tenants: &[(K, f64)], n_devices: usize) -> Self {
-        Self { placement: place(tenants, n_devices) }
+    pub fn new(tenants: &[(K, f64)], n_devices: usize) -> Self {
+        Self {
+            items: tenants.to_vec(),
+            active: vec![true; tenants.len()],
+            placement: place(tenants, n_devices),
+        }
     }
 
     pub fn n_devices(&self) -> usize {
@@ -170,6 +179,73 @@ impl DevicePlacer {
 
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    pub fn is_active(&self, tenant: usize) -> bool {
+        self.active.get(tenant).copied().unwrap_or(false)
+    }
+
+    fn weight(&self, tenant: usize) -> f64 {
+        self.items.get(tenant).map_or(0.0, |(_, l)| l.max(0.0))
+    }
+
+    /// Release an evicted tenant's load from its device. The tenant keeps
+    /// its historical `device_of` entry (callers still drain its queues
+    /// there) but stops counting toward the shard's load. Idempotent.
+    pub fn release(&mut self, tenant: usize) {
+        if tenant >= self.items.len() || !self.active[tenant] {
+            return;
+        }
+        self.active[tenant] = false;
+        let d = self.placement.device_of[tenant];
+        self.placement.load[d] = (self.placement.load[d] - self.weight(tenant)).max(0.0);
+    }
+
+    /// Re-admit a released tenant: it re-joins the least-loaded device
+    /// among those hosting *active* members of its shape class (fusion
+    /// affinity), falling back to the least-loaded device overall when the
+    /// class has no active member left. Returns the chosen device.
+    /// A still-active tenant is a no-op returning its current device.
+    pub fn readmit(&mut self, tenant: usize) -> usize {
+        assert!(tenant < self.items.len(), "unknown tenant {tenant}");
+        if self.active[tenant] {
+            return self.placement.device_of[tenant];
+        }
+        let class = &self.items[tenant].0;
+        let class_device = (0..self.items.len())
+            .filter(|&i| i != tenant && self.active[i] && &self.items[i].0 == class)
+            .map(|i| self.placement.device_of[i])
+            .min_by(|&a, &b| {
+                self.placement.load[a]
+                    .partial_cmp(&self.placement.load[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+        let d = class_device.unwrap_or_else(|| {
+            let mut best = 0;
+            for (i, &l) in self.placement.load.iter().enumerate() {
+                if l < self.placement.load[best] {
+                    best = i;
+                }
+            }
+            best
+        });
+        self.active[tenant] = true;
+        self.placement.device_of[tenant] = d;
+        self.placement.load[d] += self.weight(tenant);
+        d
+    }
+
+    /// Sum of active tenants' load weights. With real (positive) loads
+    /// this equals the sum of per-device loads up to floating-point error
+    /// — the accounting invariant the re-admission tests assert. (The
+    /// degenerate all-zero-load placement counts unit weights instead and
+    /// is excluded from the invariant.)
+    pub fn active_load(&self) -> f64 {
+        (0..self.items.len())
+            .filter(|&i| self.active[i])
+            .map(|i| self.weight(i))
+            .sum()
     }
 }
 
@@ -265,5 +341,48 @@ mod tests {
     #[should_panic(expected = "at least one device")]
     fn zero_devices_rejected() {
         let _ = place(&[("a", 1.0)], 0);
+    }
+
+    #[test]
+    fn release_then_readmit_restores_load_and_affinity() {
+        // Two classes x two tenants on two devices: each class whole.
+        let items = [("a", 2.0), ("a", 2.0), ("b", 2.0), ("b", 2.0)];
+        let mut p = DevicePlacer::new(&items, 2);
+        let total = p.active_load();
+        assert_eq!(total, 8.0);
+        let home = p.device_of(1);
+        let peer_home = p.device_of(0);
+        assert_eq!(home, peer_home, "class 'a' placed whole");
+
+        p.release(1);
+        assert!(!p.is_active(1));
+        assert_eq!(p.active_load(), 6.0);
+        let load_sum: f64 = p.placement().load.iter().sum();
+        assert!((load_sum - 6.0).abs() < 1e-9, "released load leaves the device");
+        // Idempotent.
+        p.release(1);
+        assert_eq!(p.active_load(), 6.0);
+
+        let d = p.readmit(1);
+        assert_eq!(d, peer_home, "re-admission re-joins the class's device");
+        assert!(p.is_active(1));
+        assert_eq!(p.active_load(), 8.0);
+        let load_sum: f64 = p.placement().load.iter().sum();
+        assert!((load_sum - 8.0).abs() < 1e-9, "load restored exactly");
+        // Re-admitting an active tenant is a no-op.
+        assert_eq!(p.readmit(1), d);
+        assert_eq!(p.active_load(), 8.0);
+    }
+
+    #[test]
+    fn readmit_without_class_peers_falls_back_to_least_loaded() {
+        let items = [("a", 4.0), ("b", 1.0)];
+        let mut p = DevicePlacer::new(&items, 2);
+        p.release(1);
+        // Tenant 1's class has no other member: it must land on the
+        // emptier device, not blindly on its old one.
+        let d = p.readmit(1);
+        let other = p.device_of(0);
+        assert_ne!(d, other, "least-loaded fallback avoids the busy shard");
     }
 }

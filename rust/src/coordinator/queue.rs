@@ -1,5 +1,12 @@
-//! Bounded admission front: per-tenant FIFO queues with a per-tenant depth
-//! cap and a global cap across the whole set.
+//! Bounded admission front: per-tenant earliest-deadline-first queues with
+//! a per-tenant depth cap and a global cap across the whole set.
+//!
+//! Each tenant's queue is ordered by absolute request deadline (a binary
+//! heap keyed by `(deadline, seq)`): `pop`/`peek` always surface the most
+//! urgent pending request. Because every request of one tenant carries the
+//! same SLO, deadlines within a tenant ascend with arrival order, so the
+//! EDF order degenerates to FIFO for the paper's §3 baselines — ties on
+//! deadline break by insertion sequence, preserving FIFO exactly.
 //!
 //! The paper's §2 model saturates queues; the per-tenant bound keeps an
 //! overloaded or evicted tenant from consuming unbounded memory, and the
@@ -8,14 +15,52 @@
 //! signal the frontend surfaces — instead of letting latency grow without
 //! bound under oversubscription. A saturated front rejects; it never grows.
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
 
 use crate::coordinator::request::{InferenceRequest, Reject};
 
-/// A bounded FIFO of pending requests for one tenant.
+/// Heap entry: min-heap by `(deadline, seq)` via reversed `Ord`. `seq` is a
+/// per-queue insertion counter, so equal deadlines pop in FIFO order.
+#[derive(Debug)]
+struct EdfEntry {
+    deadline: Instant,
+    seq: u64,
+    req: InferenceRequest,
+}
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+
+impl Eq for EdfEntry {}
+
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest deadline
+        // (then the lowest seq) on top.
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A bounded earliest-deadline-first queue of pending requests for one
+/// tenant (FIFO among equal deadlines — see the module docs).
 #[derive(Debug)]
 pub struct TenantQueue {
-    items: VecDeque<InferenceRequest>,
+    items: BinaryHeap<EdfEntry>,
+    next_seq: u64,
     depth: usize,
     /// Lifetime counters for metrics/backpressure analysis.
     pub enqueued: u64,
@@ -26,7 +71,8 @@ impl TenantQueue {
     pub fn new(depth: usize) -> Self {
         assert!(depth >= 1);
         Self {
-            items: VecDeque::with_capacity(depth.min(1024)),
+            items: BinaryHeap::with_capacity(depth.min(1024)),
+            next_seq: 0,
             depth,
             enqueued: 0,
             rejected: 0,
@@ -38,17 +84,21 @@ impl TenantQueue {
             self.rejected += 1;
             return Err(Reject::QueueFull);
         }
-        self.items.push_back(req);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.items.push(EdfEntry { deadline: req.deadline, seq, req });
         self.enqueued += 1;
         Ok(())
     }
 
+    /// Pop the earliest-deadline request (FIFO among equal deadlines).
     pub fn pop(&mut self) -> Option<InferenceRequest> {
-        self.items.pop_front()
+        self.items.pop().map(|e| e.req)
     }
 
+    /// The earliest-deadline request without removing it.
     pub fn peek(&self) -> Option<&InferenceRequest> {
-        self.items.front()
+        self.items.peek().map(|e| &e.req)
     }
 
     pub fn len(&self) -> usize {
@@ -59,10 +109,15 @@ impl TenantQueue {
         self.items.is_empty()
     }
 
-    /// Drop everything (tenant eviction); returns the drained requests so
-    /// the caller can complete them with `Reject::TenantEvicted`.
+    /// Drop everything (tenant eviction); returns the drained requests in
+    /// deadline order so the caller can complete them with
+    /// `Reject::TenantEvicted`.
     pub fn drain(&mut self) -> Vec<InferenceRequest> {
-        self.items.drain(..).collect()
+        let mut out = Vec::with_capacity(self.items.len());
+        while let Some(e) = self.items.pop() {
+            out.push(e.req);
+        }
+        out
     }
 }
 
@@ -324,5 +379,56 @@ mod tests {
         qs.record_shed();
         qs.record_shed();
         assert_eq!(qs.shed, 2);
+    }
+
+    fn req_deadline(id: u64, deadline: Instant) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            tenant: 0,
+            class: ShapeClass::batched_gemm(8, 8, 8),
+            payload: vec![],
+            arrived: Instant::now(),
+            deadline,
+        }
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_first() {
+        use std::time::Duration;
+        let now = Instant::now();
+        let mut q = TenantQueue::new(8);
+        // Pushed loose-first: the tighter deadline must still pop first.
+        q.push(req_deadline(1, now + Duration::from_millis(300))).unwrap();
+        q.push(req_deadline(2, now + Duration::from_millis(10))).unwrap();
+        q.push(req_deadline(3, now + Duration::from_millis(100))).unwrap();
+        assert_eq!(q.peek().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn edf_ties_break_fifo() {
+        let now = Instant::now();
+        let deadline = now + std::time::Duration::from_millis(50);
+        let mut q = TenantQueue::new(8);
+        for id in 0..5u64 {
+            q.push(req_deadline(id, deadline)).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "equal deadlines pop FIFO");
+    }
+
+    #[test]
+    fn edf_drain_is_deadline_ordered() {
+        use std::time::Duration;
+        let now = Instant::now();
+        let mut q = TenantQueue::new(8);
+        q.push(req_deadline(1, now + Duration::from_millis(30))).unwrap();
+        q.push(req_deadline(2, now + Duration::from_millis(10))).unwrap();
+        q.push(req_deadline(3, now + Duration::from_millis(20))).unwrap();
+        let ids: Vec<u64> = q.drain().into_iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+        assert!(q.is_empty());
     }
 }

@@ -105,6 +105,13 @@ pub enum Reject {
     Overloaded,
     /// Tenant was evicted by the straggler monitor.
     TenantEvicted,
+    /// Admission-time deadline check failed: even an immediate, minimal
+    /// launch of this request's shape class is predicted (by the
+    /// [`crate::coordinator::costmodel::CostModel`]) to complete after the
+    /// request's SLO deadline. Shedding at admission is strictly better
+    /// than queueing work that is already lost (DARIS-style deadline-aware
+    /// admission, arXiv:2504.08795).
+    DeadlineInfeasible,
     /// Tenant unknown / shape not servable.
     BadRequest(String),
 }
@@ -115,6 +122,7 @@ impl Reject {
         match self {
             Reject::QueueFull | Reject::Overloaded => 429,
             Reject::TenantEvicted => 503,
+            Reject::DeadlineInfeasible => 504,
             Reject::BadRequest(_) => 400,
         }
     }
@@ -126,6 +134,9 @@ impl std::fmt::Display for Reject {
             Reject::QueueFull => write!(f, "queue full"),
             Reject::Overloaded => write!(f, "overloaded: global admission cap reached"),
             Reject::TenantEvicted => write!(f, "tenant evicted"),
+            Reject::DeadlineInfeasible => {
+                write!(f, "deadline infeasible: predicted completion exceeds SLO deadline")
+            }
             Reject::BadRequest(m) => write!(f, "bad request: {m}"),
         }
     }
@@ -166,7 +177,9 @@ mod tests {
         assert_eq!(Reject::QueueFull.http_status(), 429);
         assert_eq!(Reject::Overloaded.http_status(), 429);
         assert_eq!(Reject::TenantEvicted.http_status(), 503);
+        assert_eq!(Reject::DeadlineInfeasible.http_status(), 504);
         assert_eq!(Reject::BadRequest("x".into()).http_status(), 400);
         assert!(Reject::Overloaded.to_string().contains("overloaded"));
+        assert!(Reject::DeadlineInfeasible.to_string().contains("deadline"));
     }
 }

@@ -20,6 +20,33 @@
 //! SpaceTime is launch-count amortization — exactly the mechanism the paper
 //! exploits; V100-scaled shapes come from `gpusim` (DESIGN.md §1).
 //!
+//! ## Deadline-aware planning (EDF)
+//!
+//! With [`SpaceTimeSched::deadline_aware`], SpaceTime stops being a pure
+//! throughput maximizer and plans launches against request deadlines:
+//!
+//! 1. The round drains requests in global earliest-deadline-first order
+//!    (the per-tenant queues are already EDF heaps).
+//! 2. Planned launches are ordered by their most urgent member's deadline.
+//! 3. Each launch's duration is predicted by the per-shard
+//!    [`CostModel`]; a launch whose predicted completion (cumulative round
+//!    time + own duration) would overrun its most urgent member's deadline
+//!    is **split**: the *largest* re-bucketed prefix of deadline-sorted
+//!    entries that is still predicted to make the deadline launches first
+//!    (maximal prefix = minimal fusion loss; with power-of-two buckets
+//!    splits land on bucket boundaries and cost only one extra launch
+//!    overhead), and the remainder re-enters the plan against its own
+//!    (later) deadline. A launch that cannot make its deadline even at
+//!    r = 1 stays fused — splitting would only add overhead — and is
+//!    **demoted to the end of the round**, so a known-lost launch never
+//!    inflates the completion time of feasible launches behind it.
+//!
+//! Splitting trades a little fusion (extra launches, re-bucketed padding)
+//! for the most urgent request's deadline — the space-time trade the paper
+//! makes round-by-round, now steered by an explicit latency predictor
+//! (arXiv:2512.18725) instead of FIFO luck. `Exclusive`/`TimeMux`/
+//! `SpaceMux` stay strictly FIFO so the §3 baselines remain faithful.
+//!
 //! ## The placement layer above
 //!
 //! Schedulers are deliberately **device-blind**: each instance plans
@@ -34,8 +61,12 @@
 //! the paper's single-GPU round, N times in parallel. Per-device stats
 //! (launches, drained, shed) are accounted in the driver, not here.
 
+use std::collections::VecDeque;
+use std::time::Instant;
+
 use crate::config::SchedulerKind;
 use crate::coordinator::batcher::{DynamicBatcher, Launch, PaddingPolicy};
+use crate::coordinator::costmodel::SharedCostModel;
 use crate::coordinator::queue::QueueSet;
 use crate::coordinator::request::InferenceRequest;
 
@@ -45,12 +76,24 @@ pub struct RoundPlan {
     pub launches: Vec<Launch>,
     /// Requests drained this round (== sum of launch entries).
     pub drained: usize,
+    /// Fused launches the deadline-aware planner split to protect an
+    /// urgent member's deadline (0 for every non-EDF policy).
+    pub deadline_splits: usize,
 }
 
 /// A scheduling policy over the admission queues.
 pub trait Scheduler: Send {
     /// Drain work for one round and plan launches.
     fn plan_round(&mut self, queues: &mut QueueSet) -> RoundPlan;
+
+    /// Like [`Scheduler::plan_round`], but planning against an explicit
+    /// `now` (deadline budgets are `deadline - now`). The driver passes
+    /// wall-clock time; simulations and benches pass a simulated clock.
+    /// Policies without deadline logic ignore `now`.
+    fn plan_round_at(&mut self, queues: &mut QueueSet, now: Instant) -> RoundPlan {
+        let _ = now;
+        self.plan_round(queues)
+    }
 
     fn label(&self) -> &'static str;
 
@@ -89,6 +132,27 @@ pub fn make_scheduler_with_policy(
         SchedulerKind::SpaceTime => Box::new(
             SpaceTimeSched::with_policy(buckets, max_batch, policy).slo_aware(slo_aware),
         ),
+    }
+}
+
+/// Build the configured scheduler with deadline-aware (EDF) planning.
+/// Only `SpaceTime` consults the cost model; the §3 baselines stay FIFO so
+/// they remain faithful to the paper — for them this falls back to
+/// [`make_scheduler_with_policy`] with the plain drain order.
+pub fn make_scheduler_deadline_aware(
+    kind: SchedulerKind,
+    buckets: Vec<usize>,
+    max_batch: usize,
+    policy: PaddingPolicy,
+    cost: SharedCostModel,
+    slack_s: f64,
+) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::SpaceTime => Box::new(
+            SpaceTimeSched::with_policy(buckets, max_batch, policy)
+                .deadline_aware(cost, slack_s),
+        ),
+        other => make_scheduler_with_policy(other, buckets, max_batch, policy, false),
     }
 }
 
@@ -146,7 +210,11 @@ impl Scheduler for ExclusiveSched {
                 self.next_tenant = (t + 1) % n;
                 let reqs = drain_tenant(queues, t, self.batcher.max_batch());
                 let drained = reqs.len();
-                return RoundPlan { launches: self.batcher.plan(reqs), drained };
+                return RoundPlan {
+                    launches: self.batcher.plan(reqs),
+                    drained,
+                    deadline_splits: 0,
+                };
             }
         }
         RoundPlan::default()
@@ -191,6 +259,7 @@ impl Scheduler for TimeMuxSched {
                 return RoundPlan {
                     launches: singleton_launches(reqs, self.bucket1),
                     drained,
+                    deadline_splits: 0,
                 };
             }
         }
@@ -224,7 +293,11 @@ impl Scheduler for SpaceMuxSched {
             reqs.extend(drain_tenant(queues, t, 1));
         }
         let drained = reqs.len();
-        RoundPlan { launches: singleton_launches(reqs, self.bucket1), drained }
+        RoundPlan {
+            launches: singleton_launches(reqs, self.bucket1),
+            drained,
+            deadline_splits: 0,
+        }
     }
 
     fn label(&self) -> &'static str {
@@ -248,6 +321,14 @@ impl Scheduler for SpaceMuxSched {
 pub struct SpaceTimeSched {
     batcher: DynamicBatcher,
     slo_aware: bool,
+    edf: Option<EdfPlanner>,
+}
+
+/// Deadline-aware planning state: the shared per-shard cost model plus the
+/// safety margin subtracted from every deadline budget.
+struct EdfPlanner {
+    cost: SharedCostModel,
+    slack_s: f64,
 }
 
 impl SpaceTimeSched {
@@ -259,6 +340,7 @@ impl SpaceTimeSched {
         Self {
             batcher: DynamicBatcher::with_policy(buckets, max_batch, policy),
             slo_aware: false,
+            edf: None,
         }
     }
 
@@ -266,16 +348,24 @@ impl SpaceTimeSched {
         self.slo_aware = on;
         self
     }
-}
 
-impl Scheduler for SpaceTimeSched {
-    fn plan_round(&mut self, queues: &mut QueueSet) -> RoundPlan {
+    /// Enable deadline-aware (EDF) planning: drain earliest-deadline-first,
+    /// order launches by urgency, and split any fused launch whose
+    /// predicted completion would overrun its most urgent member's
+    /// deadline (see the module docs). Implies the EDF drain order.
+    pub fn deadline_aware(mut self, cost: SharedCostModel, slack_s: f64) -> Self {
+        self.edf = Some(EdfPlanner { cost, slack_s: slack_s.max(0.0) });
+        self.slo_aware = true;
+        self
+    }
+
+    fn plan_at(&mut self, queues: &mut QueueSet, now: Instant) -> RoundPlan {
         let cap = self.batcher.max_batch();
         let mut reqs = Vec::new();
         if self.slo_aware {
             // Request-level EDF: repeatedly pop the globally earliest
-            // head-of-queue deadline (queues are FIFO per tenant, so the
-            // head is each tenant's most urgent request).
+            // head-of-queue deadline (each tenant queue is an EDF heap, so
+            // the head is that tenant's most urgent request).
             while reqs.len() < cap {
                 let next = queues
                     .backlogged()
@@ -312,7 +402,107 @@ impl Scheduler for SpaceTimeSched {
             }
         }
         let drained = reqs.len();
-        RoundPlan { launches: self.batcher.plan(reqs), drained }
+        let launches = self.batcher.plan(reqs);
+        let Some(edf) = &self.edf else {
+            return RoundPlan { launches, drained, deadline_splits: 0 };
+        };
+
+        // Deadline-protection pass: launches run sequentially within the
+        // round, so order them most-urgent-first, then walk the plan with a
+        // predicted-time cursor, splitting any fused launch that would blow
+        // its most urgent member's deadline (module docs, step 3).
+        let cost = edf.cost.lock().unwrap();
+        let slack = edf.slack_s;
+        let mut ordered = launches;
+        ordered.sort_by_key(|l| l.entries.iter().map(|e| e.deadline).min());
+        let mut queue: VecDeque<Launch> = ordered.into();
+        let mut out = Vec::new();
+        // Launches whose most urgent deadline is unmakeable at any split:
+        // executed LAST so they never delay feasible launches (their own
+        // predicted time is excluded from the feasibility cursor).
+        let mut doomed: Vec<Launch> = Vec::new();
+        let mut splits = 0usize;
+        let mut cursor = 0.0f64;
+        while let Some(launch) = queue.pop_front() {
+            let dur = cost.predict(launch.class, launch.r_bucket);
+            let earliest = launch
+                .entries
+                .iter()
+                .map(|e| e.deadline)
+                .min()
+                .expect("batcher never emits empty launches");
+            let budget = earliest.saturating_duration_since(now).as_secs_f64() - slack;
+            if cursor + dur <= budget {
+                cursor += dur;
+                out.push(launch);
+                continue;
+            }
+            if launch.entries.len() <= 1 {
+                doomed.push(launch);
+                continue;
+            }
+            // Find the largest urgent prefix whose re-bucketed launch is
+            // still predicted to make the earliest deadline. Under
+            // SplitExact only exact-bucket prefixes qualify, preserving
+            // the policy's zero-padding invariant across the split.
+            let Launch { class, mut entries, r_bucket } = launch;
+            entries.sort_by_key(|r| (r.deadline, r.tenant, r.id));
+            let exact_only =
+                self.batcher.policy() == crate::coordinator::batcher::PaddingPolicy::SplitExact;
+            let mut split_k = None;
+            for k in (1..entries.len()).rev() {
+                let Some(bucket) = self.batcher.bucket_for(k) else { continue };
+                if exact_only && bucket != k {
+                    continue;
+                }
+                if cursor + cost.predict(class, bucket) <= budget {
+                    split_k = Some(k);
+                    break;
+                }
+            }
+            match split_k {
+                Some(k) => {
+                    let (head, tails) = self
+                        .batcher
+                        .split_launch(Launch { class, entries, r_bucket }, k);
+                    splits += 1;
+                    cursor += cost.predict(head.class, head.r_bucket);
+                    out.push(head);
+                    // Each tail piece re-enters the plan at its own (later)
+                    // urgency; it may be split again against that deadline.
+                    for tail in tails {
+                        let tail_key = tail.entries.iter().map(|e| e.deadline).min();
+                        let pos = queue
+                            .iter()
+                            .position(|l| {
+                                l.entries.iter().map(|e| e.deadline).min() > tail_key
+                            })
+                            .unwrap_or(queue.len());
+                        queue.insert(pos, tail);
+                    }
+                }
+                None => {
+                    // Even the smallest feasible prefix misses: keep the
+                    // fused launch whole (a split would add overhead
+                    // without saving the deadline) and run it after the
+                    // feasible launches.
+                    entries.sort_by_key(|r| (r.tenant, r.id));
+                    doomed.push(Launch { class, entries, r_bucket });
+                }
+            }
+        }
+        out.extend(doomed);
+        RoundPlan { launches: out, drained, deadline_splits: splits }
+    }
+}
+
+impl Scheduler for SpaceTimeSched {
+    fn plan_round(&mut self, queues: &mut QueueSet) -> RoundPlan {
+        self.plan_at(queues, Instant::now())
+    }
+
+    fn plan_round_at(&mut self, queues: &mut QueueSet, now: Instant) -> RoundPlan {
+        self.plan_at(queues, now)
     }
 
     fn label(&self) -> &'static str {
@@ -339,7 +529,7 @@ mod tests {
                     class,
                     payload: vec![],
                     arrived: Instant::now(),
-            deadline: Instant::now(),
+                    deadline: Instant::now(),
                 })
                 .unwrap();
         }
@@ -486,6 +676,155 @@ mod tests {
         let tenants: Vec<usize> =
             plan2.launches[0].entries.iter().map(|e| e.tenant).collect();
         assert_eq!(tenants, vec![0, 1], "fair drain visits ascending ids");
+    }
+
+    #[test]
+    fn deadline_aware_splits_overfull_launch_to_protect_urgent_deadline() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::sync::{Arc, Mutex};
+        use std::time::Duration;
+
+        let now = Instant::now();
+        // Calibrate the model by hand: r=8 fused launches take 100 ms,
+        // r=4 take 10 ms.
+        let mut cm = CostModel::new();
+        cm.observe(CLASS, 8, 0.100);
+        cm.observe(CLASS, 4, 0.010);
+        let cost = Arc::new(Mutex::new(cm));
+
+        let mut q = QueueSet::new(8, 16);
+        // 4 urgent requests (20 ms out) + 4 loose ones (10 s out).
+        for t in 0..8usize {
+            let slo = if t < 4 {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_secs(10)
+            };
+            q.push(InferenceRequest {
+                id: t as u64,
+                tenant: t,
+                class: CLASS,
+                payload: vec![],
+                arrived: now,
+                deadline: now + slo,
+            })
+            .unwrap();
+        }
+
+        let mut s =
+            SpaceTimeSched::new(buckets(), 8).deadline_aware(cost, 0.0);
+        let plan = s.plan_round_at(&mut q, now);
+        assert_eq!(plan.drained, 8);
+        assert_eq!(
+            plan.deadline_splits, 1,
+            "the 8-wide fused launch (predicted 100 ms) must split to \
+             protect the 20 ms deadlines"
+        );
+        assert_eq!(plan.launches.len(), 2);
+        let first = &plan.launches[0];
+        assert_eq!(first.r_bucket, 4);
+        assert!(
+            first.entries.iter().all(|e| e.tenant < 4),
+            "urgent requests fill the protected launch, got {:?}",
+            first.entries.iter().map(|e| e.tenant).collect::<Vec<_>>()
+        );
+        // Conservation: every drained request is in exactly one launch.
+        let total: usize = plan.launches.iter().map(|l| l.entries.len()).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn deadline_aware_keeps_hopeless_launch_fused() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::sync::{Arc, Mutex};
+
+        let now = Instant::now();
+        let mut cm = CostModel::new();
+        for r in [1usize, 2, 4, 8] {
+            cm.observe(CLASS, r, 0.050); // every bucket takes 50 ms
+        }
+        let cost = Arc::new(Mutex::new(cm));
+        let mut q = QueueSet::new(4, 16);
+        for t in 0..4usize {
+            q.push(InferenceRequest {
+                id: t as u64,
+                tenant: t,
+                class: CLASS,
+                payload: vec![],
+                arrived: now,
+                // Deadline already effectively now: no bucket can make it.
+                deadline: now,
+            })
+            .unwrap();
+        }
+        let mut s =
+            SpaceTimeSched::new(buckets(), 8).deadline_aware(cost, 0.0);
+        let plan = s.plan_round_at(&mut q, now);
+        assert_eq!(plan.deadline_splits, 0, "splitting cannot save anyone");
+        assert_eq!(plan.launches.len(), 1, "stays fused");
+        assert_eq!(plan.launches[0].entries.len(), 4);
+    }
+
+    #[test]
+    fn deadline_aware_demotes_lost_launch_behind_feasible_ones() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::sync::{Arc, Mutex};
+        use std::time::Duration;
+
+        const CLASS_B: ShapeClass =
+            ShapeClass { kind: "batched_gemm", m: 32, n: 32, k: 32 };
+        let now = Instant::now();
+        let mut cm = CostModel::new();
+        cm.observe(CLASS, 1, 0.050);
+        cm.observe(CLASS, 2, 0.050); // class A: 50 ms whatever the bucket
+        cm.observe(CLASS_B, 2, 0.010); // class B: 10 ms
+        let cost = Arc::new(Mutex::new(cm));
+        let mut q = QueueSet::new(4, 16);
+        // Class A requests are already past their deadline (lost); class B
+        // has 30 ms of slack — feasible only if A doesn't run first.
+        for t in 0..2usize {
+            q.push(InferenceRequest {
+                id: t as u64,
+                tenant: t,
+                class: CLASS,
+                payload: vec![],
+                arrived: now,
+                deadline: now,
+            })
+            .unwrap();
+        }
+        for t in 2..4usize {
+            q.push(InferenceRequest {
+                id: t as u64,
+                tenant: t,
+                class: CLASS_B,
+                payload: vec![],
+                arrived: now,
+                deadline: now + Duration::from_millis(30),
+            })
+            .unwrap();
+        }
+        let mut s = SpaceTimeSched::new(buckets(), 8).deadline_aware(cost, 0.0);
+        let plan = s.plan_round_at(&mut q, now);
+        assert_eq!(plan.launches.len(), 2);
+        assert_eq!(
+            plan.launches[0].class, CLASS_B,
+            "feasible launch runs first; the lost one is demoted"
+        );
+        assert_eq!(plan.launches[1].class, CLASS);
+        assert_eq!(plan.deadline_splits, 0);
+    }
+
+    #[test]
+    fn plain_spacetime_never_splits() {
+        let mut q = QueueSet::new(4, 16);
+        for t in 0..4 {
+            fill(&mut q, t, 2, CLASS);
+        }
+        let mut s = SpaceTimeSched::new(buckets(), 64);
+        let plan = s.plan_round_at(&mut q, Instant::now());
+        assert_eq!(plan.deadline_splits, 0);
+        assert_eq!(plan.launches.len(), 1);
     }
 
     #[test]

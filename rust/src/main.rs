@@ -135,8 +135,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     };
     let warmed = coord.warmup().unwrap_or(0);
     eprintln!(
-        "serve: scheduler={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
+        "serve: scheduler={} edf={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
         coord.scheduler_label(),
+        coord.deadline_aware(),
         n_tenants,
         coord.devices(),
         coord.queue_cap(),
@@ -193,7 +194,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let coord = server.shutdown();
     let snap = coord.snapshot();
 
-    let mut table = Table::new(&["tenant", "completed", "p50", "p99", "mean", "rps"]);
+    let mut table =
+        Table::new(&["tenant", "completed", "p50", "p99", "mean", "rps", "slo_att"]);
     for (name, t) in &snap.tenants {
         table.row(&[
             name.clone(),
@@ -202,12 +204,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             fmt_secs(t.latency_p99_ns as f64 / 1e9),
             fmt_secs(t.latency_mean_ns / 1e9),
             format!("{:.1}", t.completed as f64 / snap.wall_seconds),
+            t.slo_attainment()
+                .map_or_else(|| "-".to_string(), |a| format!("{:.1}%", a * 100.0)),
         ]);
     }
     println!("{}", table.render());
     if snap.devices.len() > 1 || snap.devices.iter().any(|d| d.shed > 0) {
         let mut dev_table = Table::new(&[
-            "device", "tenants", "launches", "superkernels", "drained", "shed", "flops",
+            "device",
+            "tenants",
+            "launches",
+            "superkernels",
+            "drained",
+            "shed",
+            "dl_splits",
+            "calib_err",
+            "flops",
         ]);
         for d in &snap.devices {
             dev_table.row(&[
@@ -217,6 +229,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 d.superkernel_launches.to_string(),
                 d.drained.to_string(),
                 d.shed.to_string(),
+                d.deadline_splits.to_string(),
+                format!("{:.3}", d.cost_calibration_error),
                 format!("{:.3e}", d.flops),
             ]);
         }

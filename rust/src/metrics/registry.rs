@@ -22,6 +22,10 @@ pub struct TenantMetrics {
     pub rejected: AtomicU64,
     /// Times this tenant was evicted for straggling.
     pub evictions: AtomicU64,
+    /// Requests completed before their SLO deadline.
+    pub deadline_hits: AtomicU64,
+    /// Requests completed after their SLO deadline.
+    pub deadline_misses: AtomicU64,
 }
 
 #[derive(Debug, Default)]
@@ -56,12 +60,23 @@ impl TenantMetrics {
         self.evictions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record whether a completed request met its SLO deadline.
+    pub fn record_deadline(&self, met: bool) {
+        if met {
+            self.deadline_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> TenantSnapshot {
         let inner = self.inner.lock().unwrap();
         TenantSnapshot {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            deadline_hits: self.deadline_hits.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             latency_p50_ns: inner.latency.percentile_ns(50.0),
             latency_p99_ns: inner.latency.percentile_ns(99.0),
             latency_mean_ns: inner.latency.mean_ns(),
@@ -79,6 +94,8 @@ pub struct TenantSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub evictions: u64,
+    pub deadline_hits: u64,
+    pub deadline_misses: u64,
     pub latency_p50_ns: u64,
     pub latency_p99_ns: u64,
     pub latency_mean_ns: f64,
@@ -86,6 +103,19 @@ pub struct TenantSnapshot {
     pub service_p50_ns: u64,
     pub service_mean_ns: f64,
     pub flops: f64,
+}
+
+impl TenantSnapshot {
+    /// SLO-attainment ratio (deadline hits / completions with a verdict);
+    /// None before any completion.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        let total = self.deadline_hits + self.deadline_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.deadline_hits as f64 / total as f64)
+        }
+    }
 }
 
 /// Per-device counters in a snapshot (sharded coordinator; one entry per
@@ -103,6 +133,11 @@ pub struct DeviceSnapshot {
     pub drained: u64,
     /// Requests shed at admission (global cap) attributed to this shard.
     pub shed: u64,
+    /// Fused launches the deadline-aware planner split on this shard.
+    pub deadline_splits: u64,
+    /// EWMA relative error of the shard's launch-latency predictor
+    /// (0.0 when EDF planning is off or nothing has been observed).
+    pub cost_calibration_error: f64,
     /// FLOPs executed on this device.
     pub flops: f64,
 }
@@ -180,6 +215,12 @@ impl Snapshot {
                             ("completed", Json::num(t.completed as f64)),
                             ("rejected", Json::num(t.rejected as f64)),
                             ("evictions", Json::num(t.evictions as f64)),
+                            ("deadline_hits", Json::num(t.deadline_hits as f64)),
+                            ("deadline_misses", Json::num(t.deadline_misses as f64)),
+                            (
+                                "slo_attainment",
+                                t.slo_attainment().map_or(Json::Null, |a| Json::num(a)),
+                            ),
                             ("latency_p50_ns", Json::num(t.latency_p50_ns as f64)),
                             ("latency_p99_ns", Json::num(t.latency_p99_ns as f64)),
                             ("latency_mean_ns", Json::num(t.latency_mean_ns)),
@@ -204,6 +245,11 @@ impl Snapshot {
                         ),
                         ("drained", Json::num(d.drained as f64)),
                         ("shed", Json::num(d.shed as f64)),
+                        ("deadline_splits", Json::num(d.deadline_splits as f64)),
+                        (
+                            "cost_calibration_error",
+                            Json::num(d.cost_calibration_error),
+                        ),
                         ("flops", Json::num(d.flops)),
                     ])
                 })
@@ -367,6 +413,8 @@ mod tests {
             superkernel_launches: 3,
             drained: 9,
             shed: 4,
+            deadline_splits: 2,
+            cost_calibration_error: 0.125,
             flops: 1e9,
         }];
         let back = crate::util::json::Json::parse(&snap.to_json().to_string()).unwrap();
@@ -374,5 +422,46 @@ mod tests {
         let d0 = &devices.as_arr().unwrap()[0];
         assert_eq!(d0.get("launches").unwrap().as_f64(), Some(7.0));
         assert_eq!(d0.get("shed").unwrap().as_f64(), Some(4.0));
+        assert_eq!(d0.get("deadline_splits").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            d0.get("cost_calibration_error").unwrap().as_f64(),
+            Some(0.125)
+        );
+    }
+
+    #[test]
+    fn deadline_metrics_and_attainment() {
+        let m = TenantMetrics::new();
+        assert_eq!(m.snapshot().slo_attainment(), None);
+        m.record_deadline(true);
+        m.record_deadline(true);
+        m.record_deadline(true);
+        m.record_deadline(false);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_hits, 3);
+        assert_eq!(s.deadline_misses, 1);
+        assert!((s.slo_attainment().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attainment_serializes_to_json() {
+        let r = MetricsRegistry::new();
+        let t = r.tenant("a");
+        t.record_completion(1_000, 500, 100.0);
+        t.record_deadline(true);
+        r.tenant("b").record_completion(1_000, 500, 100.0);
+        let back =
+            crate::util::json::Json::parse(&r.snapshot(1.0).to_json().to_string())
+                .unwrap();
+        let tenants = back.get("tenants").unwrap();
+        let a = tenants.get("a").unwrap();
+        assert_eq!(a.get("slo_attainment").unwrap().as_f64(), Some(1.0));
+        assert_eq!(a.get("deadline_hits").unwrap().as_f64(), Some(1.0));
+        // A tenant with no deadline verdicts serializes attainment as null.
+        let b = tenants.get("b").unwrap();
+        assert!(matches!(
+            b.get("slo_attainment"),
+            Some(crate::util::json::Json::Null)
+        ));
     }
 }

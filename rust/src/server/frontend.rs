@@ -7,12 +7,15 @@
 //! thread is the only mutator, so no lock is held across a PJRT execution.
 //!
 //! Admission outcomes surface verbatim to submitters: a saturated bounded
-//! front replies `Err(Reject::Overloaded)` / `Err(Reject::QueueFull)`
-//! rather than letting queues grow without bound. An embedder exposing
-//! this frontend over HTTP maps those rejects to status codes with
-//! `Reject::http_status` (429 for shed/backpressure). Per-device metrics
-//! ride the snapshot (`Snapshot::devices`), so the status endpoint
-//! reports the whole pool.
+//! front replies `Err(Reject::Overloaded)` / `Err(Reject::QueueFull)`, and
+//! a deadline-aware coordinator replies `Err(Reject::DeadlineInfeasible)`
+//! for requests predicted past their SLO, rather than letting queues grow
+//! without bound. An embedder exposing this frontend over HTTP maps those
+//! rejects to status codes with `Reject::http_status` (429 for
+//! shed/backpressure, 504 for infeasible deadlines). Per-device metrics
+//! and per-tenant SLO attainment ride the snapshot (`Snapshot::devices`,
+//! `TenantSnapshot::slo_attainment`), so the status endpoint reports the
+//! whole pool.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;

@@ -1,0 +1,169 @@
+//! Integration: the deadline-aware (EDF) scheduling path — cost-model
+//! predictions, EDF drain order, launch splitting to protect urgent
+//! deadlines, and admission-time infeasibility shedding
+//! (`Reject::DeadlineInfeasible`, 504-style).
+//!
+//! Pure logic (no PJRT artifacts) except the final end-to-end test, which
+//! skips without `artifacts/`.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::{
+    make_scheduler_deadline_aware, Coordinator, CostModel, InferenceRequest,
+    PaddingPolicy, QueueSet, Reject, Scheduler, ShapeClass,
+};
+use stgpu::util::prng::Rng;
+
+const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1152 };
+
+fn req(id: u64, tenant: usize, now: Instant, slo_ms: u64) -> InferenceRequest {
+    InferenceRequest {
+        id,
+        tenant,
+        class: CLASS,
+        payload: vec![],
+        arrived: now,
+        deadline: now + Duration::from_millis(slo_ms),
+    }
+}
+
+#[test]
+fn edf_planner_protects_urgent_deadlines_by_splitting() {
+    // Hand-calibrated predictor: an 8-wide fused launch takes 100 ms, a
+    // 4-wide 10 ms — so an 8-wide launch with a 20 ms deadline member MUST
+    // split, and the urgent half must go first.
+    let mut cm = CostModel::new();
+    cm.observe(CLASS, 8, 0.100);
+    cm.observe(CLASS, 4, 0.010);
+    let cost = Arc::new(Mutex::new(cm));
+    let mut sched = make_scheduler_deadline_aware(
+        SchedulerKind::SpaceTime,
+        vec![1, 2, 4, 8, 16, 32, 64],
+        8,
+        PaddingPolicy::PadToBucket,
+        cost,
+        0.0,
+    );
+    let now = Instant::now();
+    let mut q = QueueSet::new(8, 16);
+    for t in 0..8usize {
+        let slo_ms = if t < 4 { 20 } else { 10_000 };
+        q.push(req(t as u64, t, now, slo_ms)).unwrap();
+    }
+    let plan = sched.plan_round_at(&mut q, now);
+    assert_eq!(plan.drained, 8);
+    assert_eq!(plan.deadline_splits, 1, "100 ms fused launch vs 20 ms deadline");
+    assert_eq!(plan.launches.len(), 2);
+    let first = &plan.launches[0];
+    assert_eq!(first.r_bucket, 4, "re-bucketed to the feasible prefix");
+    assert!(
+        first.entries.iter().all(|e| e.tenant < 4),
+        "urgent tenants launch first: {:?}",
+        first.entries.iter().map(|e| e.tenant).collect::<Vec<_>>()
+    );
+    let total: usize = plan.launches.iter().map(|l| l.entries.len()).sum();
+    assert_eq!(total, 8, "splitting conserves requests");
+    assert!(q.is_empty());
+}
+
+#[test]
+fn baselines_ignore_deadlines_and_never_split() {
+    // The §3 baselines stay FIFO even when built through the deadline-aware
+    // factory (they fall back to the plain constructor).
+    let cost = Arc::new(Mutex::new(CostModel::new()));
+    for kind in [SchedulerKind::Exclusive, SchedulerKind::TimeMux, SchedulerKind::SpaceMux]
+    {
+        let mut sched = make_scheduler_deadline_aware(
+            kind,
+            vec![1, 2, 4, 8],
+            8,
+            PaddingPolicy::PadToBucket,
+            cost.clone(),
+            0.0,
+        );
+        let now = Instant::now();
+        let mut q = QueueSet::new(2, 16);
+        // Tenant 1 is far more urgent, but FIFO rotation starts at tenant 0.
+        q.push(req(0, 0, now, 10_000)).unwrap();
+        q.push(req(1, 1, now, 1)).unwrap();
+        let plan = sched.plan_round_at(&mut q, now);
+        assert_eq!(plan.deadline_splits, 0, "{kind:?} must not split");
+        assert!(!plan.launches.is_empty());
+        assert_eq!(
+            plan.launches[0].entries[0].tenant, 0,
+            "{kind:?} drains FIFO, not EDF"
+        );
+    }
+}
+
+#[test]
+fn admission_feasibility_check_and_status_code() {
+    let cm = CostModel::new();
+    let min = cm.predict(CLASS, 1);
+    assert!(min > 0.0);
+    // An SLO below the minimal-launch prediction is lost before it queues.
+    assert!(cm.deadline_infeasible(CLASS, min * 0.5, 0.0));
+    assert!(!cm.deadline_infeasible(CLASS, min * 100.0, 0.0));
+    // Slack is honored: a barely-feasible SLO flips once slack eats it.
+    assert!(cm.deadline_infeasible(CLASS, min * 1.1, min));
+    assert_eq!(Reject::DeadlineInfeasible.http_status(), 504);
+}
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn coordinator_sheds_deadline_infeasible_at_admission() {
+    // End-to-end (needs artifacts): a tenant whose SLO is below any
+    // conceivable launch duration is shed at `submit` with
+    // `Reject::DeadlineInfeasible`; a same-class tenant with a sane SLO is
+    // admitted, served, and gets an attainment verdict.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        edf: true,
+        artifacts_dir: dir,
+        tenants: vec![
+            TenantConfig {
+                name: "hopeless".into(),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 1e-6, // 1 ns: below any launch prediction
+                weight_seed: 0,
+            },
+            TenantConfig {
+                name: "fine".into(),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: 1,
+            },
+        ],
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    assert!(coord.deadline_aware());
+    let mut rng = Rng::new(7);
+    let payload = coord.random_payload(0, &mut rng);
+    assert_eq!(coord.submit(0, payload), Err(Reject::DeadlineInfeasible));
+    let payload = coord.random_payload(1, &mut rng);
+    assert!(coord.submit(1, payload).is_ok());
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert!(
+        coord.monitor().attainment(1).is_some(),
+        "served tenant gets a deadline verdict"
+    );
+    // The shard's predictor was fed the measured launch.
+    let cm = coord.cost_model(0).expect("EDF coordinator has a cost model");
+    assert!(cm.lock().unwrap().observations() >= 1);
+}

@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use stgpu::coordinator::placement::place;
+use stgpu::coordinator::placement::{place, DevicePlacer};
 use stgpu::coordinator::request::{InferenceRequest, Reject, ShapeClass};
 use stgpu::coordinator::QueueSet;
 use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
@@ -157,4 +157,65 @@ fn saturated_bounded_queue_sheds_instead_of_growing() {
 fn shed_outcome_is_429_style() {
     assert_eq!(Reject::Overloaded.http_status(), 429);
     assert_eq!(Reject::QueueFull.http_status(), 429);
+}
+
+#[test]
+fn eviction_and_readmission_keep_placer_accounting_and_affinity_consistent() {
+    // Mirror of the coordinator's tenant placement across 2 devices: two
+    // shape classes, two tenants each, per-tenant load = per-request FLOPs.
+    // Equal-FLOP classes (2·128·128·1024 == 2·256³) so each class is
+    // exactly a fair device share and placement keeps both whole.
+    let classes = [
+        ShapeClass::batched_gemm(128, 128, 1024),
+        ShapeClass::batched_gemm(256, 256, 256),
+    ];
+    let items: Vec<(ShapeClass, f64)> = (0..4)
+        .map(|i| {
+            let c = classes[i / 2];
+            (c, c.flops())
+        })
+        .collect();
+    let mut placer = DevicePlacer::new(&items, 2);
+    let total: f64 = items.iter().map(|(_, l)| l).sum();
+    let load_sum = |p: &DevicePlacer<ShapeClass>| -> f64 {
+        p.placement().load.iter().sum()
+    };
+    assert!((load_sum(&placer) - total).abs() < 1e-6);
+    // Classes placed whole: each tenant shares a device with its peer.
+    assert_eq!(placer.device_of(0), placer.device_of(1));
+    assert_eq!(placer.device_of(2), placer.device_of(3));
+    let home = placer.device_of(1);
+
+    // Evict tenant 1: its load leaves the shard, everyone else's stays.
+    placer.release(1);
+    assert!(!placer.is_active(1));
+    assert!((load_sum(&placer) - placer.active_load()).abs() < 1e-6);
+    assert!((load_sum(&placer) - (total - items[1].1)).abs() < 1e-6);
+    // Double-release is a no-op (the monitor can only evict once, but the
+    // accounting must not depend on that).
+    placer.release(1);
+    assert!((load_sum(&placer) - (total - items[1].1)).abs() < 1e-6);
+
+    // Re-register the tenant: it must re-join its shape class's device
+    // (fusion affinity survives the eviction round trip) and the load
+    // books must balance exactly again.
+    let d = placer.readmit(1);
+    assert_eq!(d, home, "re-admitted tenant re-joins its class's shard");
+    assert_eq!(d, placer.device_of(0), "co-located with its class peer");
+    assert!(placer.is_active(1));
+    assert!((load_sum(&placer) - total).abs() < 1e-6);
+    assert!((load_sum(&placer) - placer.active_load()).abs() < 1e-6);
+
+    // If the WHOLE class was evicted, re-admission falls back to the
+    // least-loaded shard instead of chasing ghosts.
+    placer.release(0);
+    placer.release(1);
+    let d0 = placer.readmit(0);
+    assert_eq!(
+        d0, home,
+        "first member back lands on the now-emptiest shard (its old home)"
+    );
+    let d1 = placer.readmit(1);
+    assert_eq!(d1, d0, "second member re-joins the first: affinity restored");
+    assert!((load_sum(&placer) - total).abs() < 1e-6);
 }

@@ -248,7 +248,7 @@ fn fill_queues(rng: &mut Rng, n_tenants: usize, max_per: usize) -> (QueueSet, us
                 class: rand_class(rng),
                 payload: vec![],
                 arrived: Instant::now(),
-            deadline: Instant::now(),
+                deadline: Instant::now(),
             })
             .unwrap();
             id += 1;
@@ -366,7 +366,7 @@ fn prop_spacetime_single_class_fills_before_splitting() {
                 class,
                 payload: vec![],
                 arrived: Instant::now(),
-            deadline: Instant::now(),
+                deadline: Instant::now(),
             })
             .unwrap();
         }
@@ -395,7 +395,7 @@ fn prop_queue_depth_is_hard_bound() {
                 class: rand_class(rng),
                 payload: vec![],
                 arrived: Instant::now(),
-            deadline: Instant::now(),
+                deadline: Instant::now(),
             };
             if q.push(r).is_ok() {
                 accepted += 1;
