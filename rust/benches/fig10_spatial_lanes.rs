@@ -1,0 +1,277 @@
+//! Figure 10 (extension) — concurrent spatial lanes: aggregate throughput
+//! and SLO attainment of the lane-balanced SpaceTime scheduler at
+//! lanes = 1 / 2 / 4 under a bursty multi-class trace.
+//!
+//! The paper's headline (3.23x over space-only, 7.73x over time-only)
+//! comes from *combining* temporal fusion with spatial co-execution; until
+//! now our rounds executed every fused launch back-to-back on one implicit
+//! stream. This bench replays one trace through the same scheduler at
+//! different lane counts on a simulated clock. Launch durations are gpusim
+//! ground truth: a launch sharing the device with `active - 1` other lanes
+//! runs on a static `sms / active` SM fraction with the deterministic
+//! interference derate — the concave occupancy curve is what makes planned
+//! spatial sharing profitable for super-kernels too small to fill the
+//! device alone (D-STACK, arXiv:2304.13541). Every measured duration feeds
+//! the cost model's co-location interference term
+//! (`CostModel::observe_concurrent`), closing the calibration loop the
+//! driver runs in production (DARIS, arXiv:2504.08795).
+//!
+//! Asserted at the bottom (the ISSUE acceptance claims): lanes = 2 and
+//! lanes = 4 aggregate throughput strictly above lanes = 1 at >= equal SLO
+//! attainment, with the interference-model calibration error reported.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use stgpu::coordinator::scheduler::SpaceTimeSched;
+use stgpu::coordinator::{CostModel, InferenceRequest, QueueSet, Scheduler, ShapeClass};
+use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
+use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
+use stgpu::util::bench::{banner, Table};
+use stgpu::workload::arrivals::{ArrivalProcess, RequestTrace};
+
+/// Four distinct shape classes (two tenants each): every saturated round
+/// plans ~4 super-kernels of ~128 CTAs — each too small to fill 80 SMs.
+const CLASSES: [ShapeClass; 4] = [
+    ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1152 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 1152 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1024 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 1024 },
+];
+const N_TENANTS: usize = 8; // tenant t serves CLASSES[t / 2]
+const SLO_S: f64 = 0.010;
+const MAX_BATCH: usize = 16;
+const HORIZON_S: f64 = 1.0;
+const SEED: u64 = 1042;
+
+fn class_of(tenant: usize) -> ShapeClass {
+    CLASSES[(tenant / 2).min(CLASSES.len() - 1)]
+}
+
+fn trace() -> RequestTrace {
+    // Bursty arrivals strictly above the single-lane fused-service
+    // capacity (~37k req/s) even in the low phase, and around the 2-lane
+    // capacity in the high one: the serial scheduler is saturated for the
+    // whole horizon (its backlog never drains, so the comparison never
+    // degenerates into identical idle-skipping), while multi-lane runs
+    // drain the same trace with bounded backlog — exactly the regime where
+    // planned spatial co-execution pays.
+    let processes: Vec<(usize, ArrivalProcess)> = (0..N_TENANTS)
+        .map(|t| {
+            (t, ArrivalProcess::Bursty { low: 5000.0, high: 10_000.0, dwell: 0.1 })
+        })
+        .collect();
+    RequestTrace::generate(&processes, SEED, HORIZON_S)
+}
+
+/// gpusim ground truth for a fused launch of `r` problems of `class` with
+/// `active` lanes concurrently resident.
+fn ground_truth(spec: &DeviceSpec, class: ShapeClass, r: usize, active: usize) -> f64 {
+    let shape =
+        GemmShape::new(class.m.max(1) as u32, class.n.max(1) as u32, class.k.max(1) as u32);
+    let mut merged = KernelDesc::sgemm(0, shape);
+    let r = r.max(1);
+    merged.flops *= r as f64;
+    merged.bytes *= r as f64;
+    merged.ctas = merged.ctas.saturating_mul(r as u32);
+    merged.fused = r as u32;
+    let active = active.max(1);
+    spec.launch_overhead_s
+        + kernel_service_time(
+            spec,
+            &merged,
+            &CostCtx {
+                sms: spec.sms as f64 / active as f64,
+                concurrency: active as u32,
+                static_bw_partition: false,
+            },
+        )
+}
+
+struct LaneResult {
+    lanes: usize,
+    completed: u64,
+    hits: u64,
+    misses: u64,
+    makespan_s: f64,
+    launches: u64,
+    multi_lane_rounds: u64,
+    calibration_2: f64,
+}
+
+impl LaneResult {
+    fn attainment(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    fn throughput_rps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.makespan_s
+        }
+    }
+}
+
+/// Replay the trace at one lane count on a simulated clock. Within a
+/// round, each lane executes its launches serially while lanes overlap;
+/// the round ends when the slowest lane drains (the driver's barrier).
+fn run_lanes(lanes: usize) -> LaneResult {
+    let spec = DeviceSpec::v100();
+    let tr = trace();
+    let base = Instant::now();
+    let cost = Arc::new(Mutex::new(CostModel::new()));
+    let mut sched = SpaceTimeSched::new(vec![1, 2, 4, 8, 16, 32, 64], MAX_BATCH)
+        .spatial_lanes(lanes, Some(cost.clone()));
+    let mut q = QueueSet::new(N_TENANTS, 1 << 16);
+    let mut idx = 0usize;
+    let mut t = 0.0f64;
+    let mut res = LaneResult {
+        lanes,
+        completed: 0,
+        hits: 0,
+        misses: 0,
+        makespan_s: 0.0,
+        launches: 0,
+        multi_lane_rounds: 0,
+        calibration_2: 0.0,
+    };
+    loop {
+        while idx < tr.requests.len() && tr.requests[idx].t_arrival <= t {
+            let r = tr.requests[idx];
+            let arrived = base + Duration::from_secs_f64(r.t_arrival);
+            q.push(InferenceRequest {
+                id: idx as u64,
+                tenant: r.tenant,
+                class: class_of(r.tenant),
+                payload: vec![],
+                arrived,
+                deadline: arrived + Duration::from_secs_f64(SLO_S),
+            })
+            .expect("bench queues are effectively unbounded");
+            idx += 1;
+        }
+        if q.is_empty() {
+            match tr.requests.get(idx) {
+                Some(next) => {
+                    t = next.t_arrival; // idle-skip to the next arrival
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let now = base + Duration::from_secs_f64(t);
+        let plan = sched.plan_round_at(&mut q, now);
+        let active = plan.lanes_used().max(1);
+        if active > 1 {
+            res.multi_lane_rounds += 1;
+        }
+        let mut lane_time = vec![0.0f64; plan.n_lanes.max(1)];
+        for (i, launch) in plan.launches.iter().enumerate() {
+            let dur = ground_truth(&spec, launch.class, launch.r_bucket, active);
+            let lane = plan.lane(i);
+            lane_time[lane] += dur;
+            cost.lock().unwrap().observe_concurrent(
+                launch.class,
+                launch.r_bucket,
+                active,
+                dur,
+            );
+            res.launches += 1;
+            // Every member completes when its launch's lane cursor does.
+            let done = base + Duration::from_secs_f64(t + lane_time[lane]);
+            for e in &launch.entries {
+                res.completed += 1;
+                if done <= e.deadline {
+                    res.hits += 1;
+                } else {
+                    res.misses += 1;
+                }
+            }
+        }
+        t += lane_time.iter().cloned().fold(0.0, f64::max);
+    }
+    res.makespan_s = t;
+    res.calibration_2 = cost.lock().unwrap().lane_calibration_error(2);
+    res
+}
+
+fn main() {
+    banner(
+        "Figure 10: concurrent spatial lanes (SpaceTime, bursty multi-class load)",
+        "lane-balanced rounds strictly raise aggregate throughput at >= equal SLO attainment",
+    );
+    let results: Vec<LaneResult> = [1usize, 2, 4].iter().map(|&l| run_lanes(l)).collect();
+
+    let mut table = Table::new(&[
+        "lanes",
+        "completed",
+        "slo_attainment",
+        "throughput_rps",
+        "makespan_s",
+        "launches",
+        "multi_lane_rounds",
+        "calib_err_2lanes",
+    ]);
+    for r in &results {
+        table.row(&[
+            r.lanes.to_string(),
+            r.completed.to_string(),
+            format!("{:.4}", r.attainment()),
+            format!("{:.1}", r.throughput_rps()),
+            format!("{:.3}", r.makespan_s),
+            r.launches.to_string(),
+            r.multi_lane_rounds.to_string(),
+            format!("{:.4}", r.calibration_2),
+        ]);
+    }
+    table.emit("fig10_spatial_lanes");
+
+    let serial = &results[0];
+    for r in &results[1..] {
+        assert_eq!(
+            r.completed, serial.completed,
+            "every lane count must complete the whole trace"
+        );
+        assert!(
+            r.throughput_rps() > serial.throughput_rps(),
+            "lanes={} throughput {:.1} must strictly beat lanes=1 {:.1}",
+            r.lanes,
+            r.throughput_rps(),
+            serial.throughput_rps()
+        );
+        assert!(
+            r.attainment() >= serial.attainment(),
+            "lanes={} attainment {:.4} must not fall below lanes=1 {:.4}",
+            r.lanes,
+            r.attainment(),
+            serial.attainment()
+        );
+        assert!(r.multi_lane_rounds > 0, "lanes={} never overlapped", r.lanes);
+        assert!(
+            r.calibration_2 < 0.25,
+            "interference calibration error {:.4} should be bounded",
+            r.calibration_2
+        );
+    }
+    println!(
+        "shape check: lanes=2 throughput {:.1} rps ({:.2}x over serial {:.1}), \
+         lanes=4 {:.1} rps ({:.2}x); attainment {:.4} / {:.4} / {:.4}; \
+         2-lane interference calibration error {:.4} after {} overlapped rounds.",
+        results[1].throughput_rps(),
+        results[1].throughput_rps() / serial.throughput_rps().max(1e-9),
+        serial.throughput_rps(),
+        results[2].throughput_rps(),
+        results[2].throughput_rps() / serial.throughput_rps().max(1e-9),
+        serial.attainment(),
+        results[1].attainment(),
+        results[2].attainment(),
+        results[1].calibration_2,
+        results[1].multi_lane_rounds,
+    );
+}

@@ -110,6 +110,12 @@ pub struct ServerConfig {
     /// Safety margin (seconds, >= 0) subtracted from every deadline budget
     /// by the EDF planner and the admission feasibility check.
     pub deadline_slack: f64,
+    /// Spatial execution lanes per device (space-time only): the scheduler
+    /// balances each round's fused launches across `lanes` concurrent
+    /// streams and the driver executes them overlapped, with the cost
+    /// model's co-location interference term keeping predictions honest.
+    /// 1 (default) is the classic serial round. Validated to [1, 16].
+    pub lanes: usize,
     /// How long the batcher waits to accumulate a batch, microseconds.
     pub batch_timeout_us: u64,
     /// Devices in the pool. Tenants are sharded across devices by the
@@ -144,6 +150,7 @@ impl Default for ServerConfig {
             slo_aware: false,
             edf: false,
             deadline_slack: 0.0,
+            lanes: 1,
             batch_timeout_us: 200,
             devices: 1,
             queue_depth: 256,
@@ -187,6 +194,12 @@ impl ServerConfig {
                 return Err("deadline_slack must be a finite number >= 0 (seconds)".into());
             }
             cfg.deadline_slack = v;
+        }
+        if let Some(v) = server.get("lanes").and_then(|v| v.as_int()) {
+            if !(1..=16).contains(&v) {
+                return Err("lanes must be in [1, 16]".into());
+            }
+            cfg.lanes = v as usize;
         }
         if let Some(v) = server.get("batch_timeout_us").and_then(|v| v.as_int()) {
             cfg.batch_timeout_us = v as u64;
@@ -315,6 +328,16 @@ mod tests {
         assert_eq!(d.deadline_slack, 0.0);
         let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
         assert!(bad("[server]\ndeadline_slack = -0.001").is_err());
+    }
+
+    #[test]
+    fn lanes_parse_and_validate() {
+        let doc = TomlDoc::parse("[server]\nlanes = 4").unwrap();
+        assert_eq!(ServerConfig::from_doc(&doc).unwrap().lanes, 4);
+        assert_eq!(ServerConfig::default().lanes, 1, "serial rounds by default");
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[server]\nlanes = 0").is_err());
+        assert!(bad("[server]\nlanes = 17").is_err());
     }
 
     #[test]

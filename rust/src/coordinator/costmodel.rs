@@ -20,6 +20,20 @@
 //! error and exported as a metric (`DeviceSnapshot::cost_calibration_error`),
 //! the same predictor-quality signal arXiv:2512.18725 plans launches
 //! against.
+//!
+//! ## Co-location interference
+//!
+//! With spatial lanes (`lanes > 1`) several launches are concurrently
+//! resident, and each one stretches: the model carries a per-lane-count
+//! **interference stretch** — seeded analytically from the device spec
+//! (`1 + interference_coeff * (lanes - 1)`, the reciprocal of the gpusim
+//! derate) and EWMA-corrected from measured overlapped launches
+//! ([`CostModel::observe_concurrent`] factors every overlapped measurement
+//! into solo duration x stretch, so the solo tracks stay clean). D-STACK
+//! (arXiv:2304.13541) shows per-model GPU-share knees make this term the
+//! difference between profitable and pathological co-location; the per-lane
+//! calibration error is exported so an operator can see when the model has
+//! actually learned it ([`CostModel::lane_calibration`]).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -41,6 +55,18 @@ struct ClassTrack {
     samples: u64,
 }
 
+/// Per-lane-count co-location calibration: the measured latency *stretch*
+/// of a launch that executed with `lanes - 1` other spatial lanes
+/// concurrently resident, plus the prediction-error EWMA at that lane
+/// count.
+#[derive(Debug, Clone, Copy)]
+struct LaneTrack {
+    stretch_ewma: f64,
+    samples: u64,
+    err_ewma: f64,
+    observations: u64,
+}
+
 /// The launch-latency predictor.
 #[derive(Debug)]
 pub struct CostModel {
@@ -55,6 +81,10 @@ pub struct CostModel {
     /// EWMA of |predicted - measured| / measured (seeded from first sample).
     err_ewma: f64,
     observations: u64,
+    /// Co-location interference: lane count -> measured-stretch EWMA.
+    /// Seeded analytically from [`DeviceSpec::lane_stretch`], corrected by
+    /// measured overlapped launches (see [`CostModel::observe_concurrent`]).
+    lane_tracks: HashMap<usize, LaneTrack>,
 }
 
 impl Default for CostModel {
@@ -77,6 +107,7 @@ impl CostModel {
             ratio_samples: 0,
             err_ewma: 0.0,
             observations: 0,
+            lane_tracks: HashMap::new(),
         }
     }
 
@@ -162,6 +193,105 @@ impl CostModel {
             self.err_ewma = self.alpha * err + (1.0 - self.alpha) * self.err_ewma;
         }
         self.observations += 1;
+    }
+
+    /// Predicted latency stretch of a launch co-resident with `lanes - 1`
+    /// other spatial lanes: the measured-stretch EWMA once overlapped
+    /// launches have been observed at that lane count, else the analytic
+    /// seed `1 + interference_coeff * (lanes - 1)` from the device spec.
+    /// Always >= 1 (co-location never speeds a single launch up).
+    pub fn lane_stretch(&self, lanes: usize) -> f64 {
+        if lanes <= 1 {
+            return 1.0;
+        }
+        match self.lane_tracks.get(&lanes) {
+            Some(t) if t.samples > 0 => t.stretch_ewma.max(1.0),
+            _ => self.spec.lane_stretch(lanes as u32),
+        }
+    }
+
+    /// Predicted duration of a fused launch of `r` problems of `class`
+    /// executing with `lanes` spatial lanes concurrently resident: the solo
+    /// prediction stretched by the co-location interference term.
+    pub fn predict_concurrent(&self, class: ShapeClass, r: usize, lanes: usize) -> f64 {
+        self.predict(class, r) * self.lane_stretch(lanes)
+    }
+
+    /// Feed one measured launch duration back, recorded while `lanes`
+    /// spatial lanes were concurrently resident. The measurement is
+    /// factored into (solo duration) x (co-location stretch): the stretch
+    /// EWMA for this lane count absorbs the interference component and the
+    /// deflated remainder calibrates the solo (class, R) track — so the
+    /// base model keeps predicting un-overlapped launches correctly even
+    /// when the driver runs every round multi-lane.
+    pub fn observe_concurrent(
+        &mut self,
+        class: ShapeClass,
+        r: usize,
+        lanes: usize,
+        measured_s: f64,
+    ) {
+        if lanes <= 1 {
+            self.observe(class, r, measured_s);
+            return;
+        }
+        if !measured_s.is_finite() || measured_s <= 0.0 {
+            return;
+        }
+        let r = r.max(1);
+        let predicted = self.predict_concurrent(class, r, lanes);
+        let base = self.predict(class, r).max(1e-12);
+        let stretch_obs = (measured_s / base).max(1.0);
+        let alpha = self.alpha;
+        let track = self.lane_tracks.entry(lanes).or_insert(LaneTrack {
+            stretch_ewma: 0.0,
+            samples: 0,
+            err_ewma: 0.0,
+            observations: 0,
+        });
+        if track.samples == 0 {
+            track.stretch_ewma = stretch_obs;
+        } else {
+            track.stretch_ewma = alpha * stretch_obs + (1.0 - alpha) * track.stretch_ewma;
+        }
+        track.samples += 1;
+        let err = (predicted - measured_s).abs() / measured_s;
+        if track.observations == 0 {
+            track.err_ewma = err;
+        } else {
+            track.err_ewma = alpha * err + (1.0 - alpha) * track.err_ewma;
+        }
+        track.observations += 1;
+        // Calibrate the solo track with the interference factored out.
+        let deflated = measured_s / self.lane_stretch(lanes);
+        self.observe(class, r, deflated);
+    }
+
+    /// EWMA relative prediction error at one concurrent lane count (0.0
+    /// before any overlapped observation at that count; `lanes <= 1` is
+    /// the solo [`CostModel::calibration_error`]).
+    pub fn lane_calibration_error(&self, lanes: usize) -> f64 {
+        if lanes <= 1 {
+            return self.calibration_error();
+        }
+        self.lane_tracks
+            .get(&lanes)
+            .filter(|t| t.observations > 0)
+            .map_or(0.0, |t| t.err_ewma)
+    }
+
+    /// Lane counts with at least one overlapped observation, ascending —
+    /// with the per-count calibration error (the metric exported per
+    /// device in [`crate::metrics::DeviceSnapshot::lane_calibration`]).
+    pub fn lane_calibration(&self) -> Vec<(usize, f64)> {
+        let mut out: Vec<(usize, f64)> = self
+            .lane_tracks
+            .iter()
+            .filter(|(_, t)| t.observations > 0)
+            .map(|(&l, t)| (l, t.err_ewma))
+            .collect();
+        out.sort_unstable_by_key(|&(l, _)| l);
+        out
     }
 
     /// EWMA of the relative prediction error (0.0 before any observation).
@@ -278,5 +408,60 @@ mod tests {
         let rnn = ShapeClass::rnn_cell(512);
         assert!(m.analytic_seed(mlp, 4) > 0.0);
         assert!(m.analytic_seed(rnn, 4) > 0.0);
+    }
+
+    #[test]
+    fn lane_stretch_seeds_analytically_and_orders() {
+        let m = CostModel::new();
+        assert_eq!(m.lane_stretch(1), 1.0);
+        // Unobserved: analytic seed from the V100 interference coefficient.
+        assert!((m.lane_stretch(2) - 1.08).abs() < 1e-12);
+        assert!(m.lane_stretch(4) > m.lane_stretch(2));
+        let solo = m.predict(CLASS, 8);
+        let dual = m.predict_concurrent(CLASS, 8, 2);
+        assert!(dual > solo, "co-location must stretch: {dual} vs {solo}");
+        assert_eq!(m.predict_concurrent(CLASS, 8, 1), solo);
+    }
+
+    #[test]
+    fn observe_concurrent_learns_measured_stretch() {
+        let mut m = CostModel::new();
+        // Calibrate the solo track first.
+        m.observe(CLASS, 8, 10e-3);
+        // Overlapped launches at 2 lanes consistently run 1.5x the solo
+        // EWMA: the learned stretch must converge to ~1.5 (far from the
+        // 1.08 analytic seed).
+        for _ in 0..60 {
+            m.observe_concurrent(CLASS, 8, 2, 15e-3);
+        }
+        let s = m.lane_stretch(2);
+        assert!((s - 1.5).abs() < 0.05, "learned stretch {s}");
+        // Prediction error at 2 lanes converges near zero on a stationary
+        // signal, and is exported per lane count.
+        assert!(m.lane_calibration_error(2) < 0.05);
+        let calib = m.lane_calibration();
+        assert_eq!(calib.len(), 1);
+        assert_eq!(calib[0].0, 2);
+        // The solo track stays near the un-stretched duration: overlapped
+        // measurements are deflated before they reach it.
+        let solo = m.predict(CLASS, 8);
+        assert!(
+            (solo - 10e-3).abs() / 10e-3 < 0.1,
+            "solo prediction polluted by overlapped samples: {solo}"
+        );
+    }
+
+    #[test]
+    fn lane_calibration_isolated_per_count() {
+        let mut m = CostModel::new();
+        m.observe(CLASS, 4, 1e-3);
+        m.observe_concurrent(CLASS, 4, 2, 1.2e-3);
+        m.observe_concurrent(CLASS, 4, 3, 1.5e-3);
+        assert_eq!(m.lane_calibration().len(), 2);
+        assert_eq!(m.lane_calibration_error(4), 0.0, "unobserved count");
+        // Garbage overlapped observations are ignored.
+        m.observe_concurrent(CLASS, 4, 2, f64::NAN);
+        m.observe_concurrent(CLASS, 4, 2, -1.0);
+        assert_eq!(m.lane_calibration().len(), 2);
     }
 }

@@ -20,6 +20,15 @@
 //! immediate launch is already predicted past their deadline
 //! ([`Reject::DeadlineInfeasible`], 504-style).
 //!
+//! With `lanes > 1` (space-time only), a round's launches are balanced
+//! across **spatial execution lanes** by the scheduler and executed
+//! *concurrently* here — one worker thread per lane over the shared PJRT
+//! engine, all feeding one measurement channel. Every measured duration is
+//! tagged with the round's resident lane count so the cost model's
+//! co-location interference stretch calibrates from real overlapped
+//! launches; per-lane launch counts and busy time ride the device
+//! snapshot.
+//!
 //! Sharding (the multi-device generalization): tenants are assigned to
 //! devices at registration time by the [`placement`] layer — least-loaded
 //! with shape-class affinity, so fusion opportunities are never split
@@ -30,7 +39,7 @@
 //!
 //! [`placement`]: crate::coordinator::placement
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -45,7 +54,7 @@ use crate::coordinator::request::{
     InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass,
 };
 use crate::coordinator::scheduler::Scheduler;
-use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
+use crate::coordinator::superkernel::{Flavor, LaunchResult, SuperKernelExec};
 use crate::coordinator::tenant::TenantRegistry;
 use crate::metrics::{DeviceSnapshot, MetricsRegistry};
 use crate::runtime::{HostTensor, PjrtEngine};
@@ -68,15 +77,19 @@ pub struct RoundOutcome {
 struct DeviceShard {
     queues: QueueSet,
     scheduler: Box<dyn Scheduler>,
-    /// Launch-latency predictor for this device (Some iff EDF planning is
-    /// on): shared with the shard's scheduler, fed by measured launch
-    /// durations after every execution.
+    /// Launch-latency predictor for this device (Some iff EDF planning or
+    /// multi-lane execution is on): shared with the shard's scheduler, fed
+    /// by measured launch durations after every execution.
     cost_model: Option<SharedCostModel>,
     launches: u64,
     superkernel_launches: u64,
     drained: u64,
     /// Fused launches the EDF planner split to protect a deadline.
     deadline_splits: u64,
+    /// Launches executed per spatial lane (index == lane id).
+    lane_launches: Vec<u64>,
+    /// Busy seconds (marshal + execute) accumulated per spatial lane.
+    lane_busy_s: Vec<f64>,
     flops: f64,
 }
 
@@ -90,6 +103,9 @@ pub struct Coordinator {
     queue_cap: usize,
     /// Deadline-aware (EDF) planning on (space-time only).
     edf: bool,
+    /// Spatial execution lanes per device (space-time only; 1 == serial
+    /// rounds, the pre-lane driver).
+    lanes: usize,
     /// Safety margin (seconds) for deadline budgets and admission checks.
     deadline_slack: f64,
     /// Requests judged deadline-infeasible at admission. Every
@@ -99,15 +115,27 @@ pub struct Coordinator {
     /// forever (no launches → no observations → no recovery).
     infeasible_seen: u64,
     flavor: Flavor,
-    fusion_cache: FusionCache,
+    /// Behind a mutex because spatial lanes execute concurrently; the lock
+    /// is held only for lookups/builds, never across a PJRT execution.
+    fusion_cache: Mutex<FusionCache>,
     monitor: SloMonitor,
     pub metrics: Arc<MetricsRegistry>,
     next_id: RequestId,
     rounds_since_check: u32,
     /// Monitor window length, in scheduling rounds.
     check_every: u32,
+    /// Lifetime round counter (drives the solo-calibration probe cadence).
+    rounds_total: u64,
     started: Instant,
 }
+
+/// With `lanes > 1`, every `SOLO_PROBE_EVERY`-th round executes serially
+/// even when the plan spans several lanes: overlapped measurements alone
+/// cannot disentangle solo latency from the interference stretch (the
+/// stretch EWMA would absorb any solo-track bias forever), so the solo
+/// track needs periodic un-overlapped ground truth — the same recovery
+/// valve pattern as the admission probe (`PROBE_EVERY`).
+const SOLO_PROBE_EVERY: u64 = 32;
 
 impl Coordinator {
     /// Build from config: loads the manifest, registers tenants, places
@@ -175,36 +203,32 @@ impl Coordinator {
         // launch entries — at the cost of per-round backlogged() scans over
         // empty queues; compact per-shard id maps are a follow-up if tenant
         // counts grow past the low hundreds.
-        // Deadline-aware (EDF) planning only applies to the space-time
-        // scheduler; each shard gets its own cost model so calibration
-        // follows the device the launches actually ran on.
-        let edf = cfg.edf && cfg.scheduler == crate::config::SchedulerKind::SpaceTime;
+        // Deadline-aware (EDF) planning and spatial lanes only apply to the
+        // space-time scheduler; each shard gets its own cost model so
+        // calibration follows the device the launches actually ran on. The
+        // cost model exists whenever lanes > 1 too — multi-lane rounds need
+        // it for makespan balancing and the co-location interference term
+        // even without EDF.
+        let spacetime = cfg.scheduler == crate::config::SchedulerKind::SpaceTime;
+        let edf = cfg.edf && spacetime;
+        let lanes = if spacetime { cfg.lanes.max(1) } else { 1 };
         let shards = (0..devices)
             .map(|_| {
-                let cost_model: Option<SharedCostModel> = if edf {
-                    Some(Arc::new(std::sync::Mutex::new(CostModel::new())))
+                let cost_model: Option<SharedCostModel> = if edf || lanes > 1 {
+                    Some(Arc::new(Mutex::new(CostModel::new())))
                 } else {
                     None
                 };
-                let scheduler = match &cost_model {
-                    Some(cm) => {
-                        crate::coordinator::scheduler::make_scheduler_deadline_aware(
-                            cfg.scheduler,
-                            buckets.clone(),
-                            cfg.max_batch as usize,
-                            policy,
-                            cm.clone(),
-                            cfg.deadline_slack,
-                        )
-                    }
-                    None => crate::coordinator::scheduler::make_scheduler_with_policy(
-                        cfg.scheduler,
-                        buckets.clone(),
-                        cfg.max_batch as usize,
-                        policy,
-                        cfg.slo_aware,
-                    ),
-                };
+                let scheduler = crate::coordinator::scheduler::make_scheduler_spatial(
+                    cfg.scheduler,
+                    buckets.clone(),
+                    cfg.max_batch as usize,
+                    policy,
+                    cfg.slo_aware,
+                    lanes,
+                    cost_model.clone(),
+                    if edf { Some(cfg.deadline_slack) } else { None },
+                );
                 DeviceShard {
                     queues: QueueSet::new(tenants.len(), cfg.queue_depth),
                     scheduler,
@@ -213,6 +237,8 @@ impl Coordinator {
                     superkernel_launches: 0,
                     drained: 0,
                     deadline_splits: 0,
+                    lane_launches: vec![0; lanes],
+                    lane_busy_s: vec![0.0; lanes],
                     flops: 0.0,
                 }
             })
@@ -236,15 +262,17 @@ impl Coordinator {
             placer,
             queue_cap: cfg.queue_cap,
             edf,
+            lanes,
             deadline_slack: cfg.deadline_slack.max(0.0),
             infeasible_seen: 0,
             flavor,
-            fusion_cache: FusionCache::new(256),
+            fusion_cache: Mutex::new(FusionCache::new(256)),
             monitor,
             metrics: Arc::new(MetricsRegistry::new()),
             next_id: 0,
             rounds_since_check: 0,
             check_every: 16,
+            rounds_total: 0,
             started: Instant::now(),
         })
     }
@@ -274,6 +302,11 @@ impl Coordinator {
     /// Whether deadline-aware (EDF) planning is active.
     pub fn deadline_aware(&self) -> bool {
         self.edf
+    }
+
+    /// Spatial execution lanes per device (1 == serial rounds).
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// The launch-latency predictor of one device shard (None when EDF
@@ -324,6 +357,12 @@ impl Coordinator {
                     .cost_model
                     .as_ref()
                     .map_or(0.0, |cm| cm.lock().unwrap().calibration_error()),
+                lane_launches: s.lane_launches.clone(),
+                lane_busy_s: s.lane_busy_s.clone(),
+                lane_calibration: s
+                    .cost_model
+                    .as_ref()
+                    .map_or_else(Vec::new, |cm| cm.lock().unwrap().lane_calibration()),
                 flops: s.flops,
             })
             .collect()
@@ -449,13 +488,19 @@ impl Coordinator {
     /// shard by shard (the pool's devices are independent; on real
     /// multi-GPU hardware these launches run concurrently — the CPU-PJRT
     /// substrate executes them back-to-back, which preserves scheduling
-    /// semantics and per-device accounting).
+    /// semantics and per-device accounting). Within a shard, a plan that
+    /// spans several spatial lanes executes them **concurrently**: one
+    /// worker thread per lane, all feeding one measurement channel whose
+    /// results calibrate the shard's cost model (solo latency AND the
+    /// co-location interference stretch at the observed lane count).
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         let mut outcome = RoundOutcome {
             launches_per_device: vec![0; self.shards.len()],
             ..Default::default()
         };
         let exec = SuperKernelExec::new(&self.engine, self.flavor);
+        self.rounds_total += 1;
+        let probe_solo = self.lanes > 1 && self.rounds_total % SOLO_PROBE_EVERY == 0;
         for (device, shard) in self.shards.iter_mut().enumerate() {
             let now = Instant::now();
             let plan = shard.scheduler.plan_round_at(&mut shard.queues, now);
@@ -464,7 +509,70 @@ impl Coordinator {
             shard.launches += plan.launches.len() as u64;
             shard.drained += plan.drained as u64;
             shard.deadline_splits += plan.deadline_splits as u64;
-            for launch in &plan.launches {
+            if plan.launches.is_empty() {
+                continue;
+            }
+            let (hits_before, misses_before) = {
+                let c = self.fusion_cache.lock().unwrap();
+                (c.stats.hits, c.stats.misses)
+            };
+            // Execute the plan: serial when everything shares one lane (or
+            // on a solo-calibration probe round), overlapped lane workers
+            // otherwise. Either way `results[i]` holds launch i's outcome
+            // and completion instant.
+            let lanes_used = if probe_solo { 1 } else { plan.lanes_used() };
+            let mut results: Vec<Option<(LaunchResult, Instant)>> = Vec::new();
+            results.resize_with(plan.launches.len(), || None);
+            if lanes_used <= 1 {
+                for (i, launch) in plan.launches.iter().enumerate() {
+                    let res = exec.execute(launch, &self.tenants, &self.fusion_cache)?;
+                    results[i] = Some((res, Instant::now()));
+                }
+            } else {
+                let mut groups: Vec<Vec<usize>> = vec![Vec::new(); plan.n_lanes];
+                for i in 0..plan.launches.len() {
+                    groups[plan.lane(i).min(plan.n_lanes - 1)].push(i);
+                }
+                let (tx, rx) = std::sync::mpsc::channel();
+                let launches = &plan.launches;
+                let tenants = &self.tenants;
+                let cache = &self.fusion_cache;
+                let exec_ref = &exec;
+                std::thread::scope(|scope| {
+                    for group in groups.iter().filter(|g| !g.is_empty()) {
+                        let tx = tx.clone();
+                        scope.spawn(move || {
+                            for &i in group {
+                                let res = exec_ref.execute(&launches[i], tenants, cache);
+                                let done = Instant::now();
+                                if tx.send((i, res, done)).is_err() {
+                                    return;
+                                }
+                            }
+                        });
+                    }
+                });
+                drop(tx);
+                // The scope joined every worker: the channel holds one
+                // message per launch. The first execution error aborts the
+                // round, mirroring the serial path.
+                for (i, res, done) in rx {
+                    results[i] = Some((res?, done));
+                }
+            }
+            // Aggregate cache accounting (per-launch attribution is
+            // meaningless once launches overlap).
+            {
+                let c = self.fusion_cache.lock().unwrap();
+                for _ in hits_before..c.stats.hits {
+                    self.metrics.record_cache(true);
+                }
+                for _ in misses_before..c.stats.misses {
+                    self.metrics.record_cache(false);
+                }
+            }
+            for (i, launch) in plan.launches.iter().enumerate() {
+                let (res, done) = results[i].take().expect("every launch executed");
                 let fused = launch.entries.len();
                 if fused > 1 {
                     self.metrics.record_superkernel_launch();
@@ -472,25 +580,22 @@ impl Coordinator {
                 } else {
                     self.metrics.record_kernel_launch();
                 }
-                let hits_before = self.fusion_cache.stats.hits;
-                let misses_before = self.fusion_cache.stats.misses;
-                let res = exec.execute(launch, &self.tenants, &mut self.fusion_cache)?;
-                if self.fusion_cache.stats.hits > hits_before {
-                    self.metrics.record_cache(true);
-                } else if self.fusion_cache.stats.misses > misses_before {
-                    self.metrics.record_cache(false);
-                }
                 // Calibrate this shard's launch-latency predictor with the
                 // measured end-to-end launch duration (marshal + execute —
-                // what a deadline actually waits on).
+                // what a deadline actually waits on), tagged with how many
+                // lanes were concurrently resident so the interference
+                // stretch learns from overlapped rounds.
                 if let Some(cm) = &shard.cost_model {
-                    cm.lock().unwrap().observe(
+                    cm.lock().unwrap().observe_concurrent(
                         launch.class,
                         launch.r_bucket,
+                        lanes_used,
                         res.service_s + res.marshal_s,
                     );
                 }
-                let done = Instant::now();
+                let lane = plan.lane(i).min(shard.lane_launches.len().saturating_sub(1));
+                shard.lane_launches[lane] += 1;
+                shard.lane_busy_s[lane] += res.service_s + res.marshal_s;
                 for (entry, output) in launch.entries.iter().zip(res.outputs) {
                     let latency_s = done.duration_since(entry.arrived).as_secs_f64();
                     // One deadline verdict per response, fed to BOTH the
@@ -534,7 +639,7 @@ impl Coordinator {
                 // everything it still has queued, and release its load
                 // from the placement accounting (a later re-registration
                 // re-joins its class via `DevicePlacer::readmit`).
-                self.fusion_cache.invalidate_tenant(ev.tenant);
+                self.fusion_cache.lock().unwrap().invalidate_tenant(ev.tenant);
                 let device = self.placer.device_of(ev.tenant);
                 for req in self.shards[device].queues.drain_tenant(ev.tenant) {
                     outcome.rejections.push((req.id, Reject::TenantEvicted));
@@ -560,7 +665,7 @@ impl Coordinator {
     pub fn force_check(&mut self) -> Vec<Eviction> {
         let evictions = self.monitor.check(&mut self.tenants);
         for ev in &evictions {
-            self.fusion_cache.invalidate_tenant(ev.tenant);
+            self.fusion_cache.lock().unwrap().invalidate_tenant(ev.tenant);
             self.placer.release(ev.tenant);
         }
         evictions
@@ -600,13 +705,13 @@ impl Coordinator {
 
     /// Fusion-cache accounting (weight-operand reuse across launches).
     pub fn fusion_cache_stats(&self) -> FusionCacheStats {
-        self.fusion_cache.stats
+        self.fusion_cache.lock().unwrap().stats
     }
 
     /// Replace the fusion cache (benches/ablations: e.g. capacity 1 to
     /// force the cold path). Serving uses the default capacity-256 cache.
     pub fn set_fusion_cache_capacity(&mut self, capacity: usize) {
-        self.fusion_cache = FusionCache::new(capacity);
+        *self.fusion_cache.lock().unwrap() = FusionCache::new(capacity);
     }
 
     /// Metrics snapshot over the coordinator's lifetime, including the

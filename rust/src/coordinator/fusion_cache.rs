@@ -12,6 +12,7 @@
 //! block that is a ~128× reduction in bytes marshaled per launch.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -56,13 +57,37 @@ impl FusionCacheStats {
     }
 }
 
-/// Device-resident stacked weight operands for one fusion key.
-struct Entry {
+/// Device-resident stacked weight operands for one fusion key, handed to
+/// launch executions as a shared `Arc` so concurrently-executing spatial
+/// lanes can use them without holding the cache lock through a launch.
+pub struct WeightSet {
     buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl WeightSet {
+    pub fn new(buffers: Vec<xla::PjRtBuffer>) -> Self {
+        Self { buffers }
+    }
+
+    pub fn buffers(&self) -> &[xla::PjRtBuffer] {
+        &self.buffers
+    }
+}
+
+// PJRT buffers are plain device handles that the PJRT runtime allows
+// concurrent executions over (same argument as `PjrtEngine`'s Send/Sync);
+// a `WeightSet` is immutable after construction.
+unsafe impl Send for WeightSet {}
+unsafe impl Sync for WeightSet {}
+
+/// Cached entry plus its LRU stamp.
+struct Entry {
+    weights: Arc<WeightSet>,
     last_used: u64,
 }
 
-/// The cache. Single-owner (the coordinator's leader thread).
+/// The cache. Owned by the coordinator behind a mutex; lane workers lock
+/// only for the lookup/build, never across an execution.
 pub struct FusionCache {
     map: HashMap<FusionKey, Entry>,
     capacity: usize,
@@ -70,9 +95,8 @@ pub struct FusionCache {
     pub stats: FusionCacheStats,
 }
 
-// PJRT buffers are plain device handles; all mutation happens under the
-// single leader thread that owns the coordinator (same argument as
-// `PjrtEngine`'s Send/Sync).
+// PJRT buffers are plain device handles; all cache mutation happens under
+// the coordinator's lock (same argument as `PjrtEngine`'s Send/Sync).
 unsafe impl Send for FusionCache {}
 
 impl FusionCache {
@@ -94,24 +118,37 @@ impl FusionCache {
         self.map.is_empty()
     }
 
-    /// Fetch the device-resident weight operands for `key`, building them
-    /// with `build` (host gather + upload) on a miss. LRU eviction at
-    /// capacity.
-    pub fn get_or_build(
-        &mut self,
-        engine: &PjrtEngine,
-        key: FusionKey,
-        build: impl FnOnce() -> Vec<HostTensor>,
-    ) -> Result<&[xla::PjRtBuffer]> {
+    /// Lookup only (LRU touch + hit/miss accounting). On a miss the caller
+    /// builds the weight set OUTSIDE the cache lock — a host gather plus a
+    /// device upload is far too slow to serialize concurrent spatial lanes
+    /// on — then races to [`FusionCache::insert`].
+    pub fn get(&mut self, key: &FusionKey) -> Option<Arc<WeightSet>> {
         self.clock += 1;
         let clock = self.clock;
-        if self.map.contains_key(&key) {
-            self.stats.hits += 1;
-            let e = self.map.get_mut(&key).unwrap();
-            e.last_used = clock;
-            return Ok(&e.buffers);
+        match self.map.get_mut(key) {
+            Some(e) => {
+                self.stats.hits += 1;
+                e.last_used = clock;
+                Some(e.weights.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
         }
-        self.stats.misses += 1;
+    }
+
+    /// Insert a weight set built outside the lock. If a racing lane
+    /// already inserted this key, the existing entry wins (one canonical
+    /// device copy) and the duplicate build is dropped. LRU eviction at
+    /// capacity.
+    pub fn insert(&mut self, key: FusionKey, weights: Arc<WeightSet>) -> Arc<WeightSet> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.last_used = clock;
+            return e.weights.clone();
+        }
         if self.map.len() >= self.capacity {
             // Evict the least-recently-used entry.
             if let Some(victim) = self
@@ -124,14 +161,33 @@ impl FusionCache {
                 self.stats.evictions += 1;
             }
         }
+        self.stats.entries += 1;
+        self.map.insert(key, Entry { weights: weights.clone(), last_used: clock });
+        weights
+    }
+
+    /// Fetch the device-resident weight operands for `key`, building them
+    /// with `build` (host gather + upload) on a miss. Returns a shared
+    /// handle that stays valid after the cache lock is released (and
+    /// across a later eviction of the entry). Single-owner convenience
+    /// over [`FusionCache::get`]/[`FusionCache::insert`]; concurrent
+    /// callers should use those directly so the build happens outside
+    /// their lock.
+    pub fn get_or_build(
+        &mut self,
+        engine: &PjrtEngine,
+        key: FusionKey,
+        build: impl FnOnce() -> Vec<HostTensor>,
+    ) -> Result<Arc<WeightSet>> {
+        if let Some(w) = self.get(&key) {
+            return Ok(w);
+        }
         let host = build();
         let buffers = host
             .iter()
             .map(|t| engine.to_device(t))
             .collect::<Result<Vec<_>>>()?;
-        self.stats.entries += 1;
-        let e = self.map.entry(key).or_insert(Entry { buffers, last_used: clock });
-        Ok(&e.buffers)
+        Ok(self.insert(key, Arc::new(WeightSet::new(buffers))))
     }
 
     /// Drop every entry touching `tenant` (called on eviction: its weights
@@ -174,6 +230,24 @@ mod tests {
         assert_eq!(FusionKey::of(&mk(&[0, 1, 2])), FusionKey::of(&mk(&[0, 1, 2])));
         assert_ne!(FusionKey::of(&mk(&[0, 1, 2])), FusionKey::of(&mk(&[0, 2, 1])));
         assert_ne!(FusionKey::of(&mk(&[0, 1])), FusionKey::of(&mk(&[0, 1, 2])));
+    }
+
+    #[test]
+    fn insert_race_keeps_first_entry_and_get_counts() {
+        let key = FusionKey { kind: "mlp_block", r_bucket: 4, tenants: vec![0, 1] };
+        let mut cache = FusionCache::new(4);
+        assert!(cache.get(&key).is_none());
+        assert_eq!(cache.stats.misses, 1);
+        let first = Arc::new(WeightSet::new(vec![]));
+        let kept = cache.insert(key.clone(), first.clone());
+        assert!(Arc::ptr_eq(&kept, &first));
+        // A racing lane that also built must get the FIRST entry back.
+        let dup = Arc::new(WeightSet::new(vec![]));
+        let kept2 = cache.insert(key.clone(), dup);
+        assert!(Arc::ptr_eq(&kept2, &first), "first insert wins the race");
+        assert_eq!(cache.stats.entries, 1, "duplicate build not stored");
+        assert!(cache.get(&key).is_some());
+        assert_eq!(cache.stats.hits, 1);
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //!   re-registration re-joins the class).
 //! * [`costmodel`] — per-shape-class launch-latency predictor (analytic
 //!   roofline seed + EWMA over measured durations) driving deadline-aware
-//!   planning and admission.
+//!   planning, admission, and the spatial-lane co-location interference
+//!   term (per-lane-count stretch, EWMA over overlapped launches).
 //! * [`batcher`] — shape-class bucketing + R-bucket round-up with padding
 //!   accounting (MAGMA vbatch emulation).
 //! * [`scheduler`] — Exclusive / TimeMux / SpaceMux / SpaceTime policies.
@@ -26,7 +27,8 @@
 //! * [`monitor`] — per-tenant latency EWMA + straggler eviction, judged
 //!   against same-device peers.
 //! * [`driver`] — the sharded serve loop gluing it all together (one
-//!   `RoundPlan` per device per round).
+//!   `RoundPlan` per device per round; multi-lane plans execute their
+//!   lanes on concurrent worker threads).
 
 pub mod batcher;
 pub mod costmodel;
@@ -43,13 +45,14 @@ pub mod tenant;
 pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
 pub use costmodel::{CostModel, SharedCostModel};
 pub use driver::{Coordinator, RoundOutcome};
-pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey};
+pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey, WeightSet};
 pub use monitor::{Eviction, MonitorConfig, SloMonitor};
 pub use placement::{place, DevicePlacer, Placement};
 pub use queue::{QueueSet, TenantQueue};
 pub use request::{InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass};
 pub use scheduler::{
-    make_scheduler, make_scheduler_deadline_aware, RoundPlan, Scheduler,
+    launch_weight, make_scheduler, make_scheduler_deadline_aware, make_scheduler_spatial,
+    RoundPlan, Scheduler,
 };
 pub use superkernel::{Flavor, LaunchResult, SuperKernelExec};
 pub use tenant::{Health, ModelSpec, Tenant, TenantRegistry};

@@ -393,6 +393,62 @@ mod tests {
     }
 
     #[test]
+    fn prop_pending_always_equals_sum_of_tenant_lengths() {
+        // Interleave every mutation path — push (admitted, depth-rejected,
+        // cap-shed), pop_tenant (known, unknown, empty), drain_tenant,
+        // record_shed, add_tenant — and assert after each step that the
+        // incremental `pending` counter matches the ground truth (the sum
+        // of per-tenant queue lengths) and never exceeds the global cap.
+        use crate::util::prop::run_prop;
+        run_prop("queue pending counter exact", 0xD2, 128, |rng| {
+            let n0 = 1 + rng.gen_range(4) as usize;
+            let depth = 1 + rng.gen_range(6) as usize;
+            let cap = 1 + rng.gen_range(24) as usize;
+            let mut qs = QueueSet::with_global_cap(n0, depth, cap);
+            let mut id = 0u64;
+            let mut external_sheds = 0u64;
+            for _ in 0..300 {
+                match rng.gen_range(8) {
+                    0..=3 => {
+                        // Bias to pushes so queues actually fill; target an
+                        // unknown tenant occasionally (BadRequest path).
+                        let t = rng.gen_range(qs.n_tenants() as u64 + 1) as usize;
+                        let _ = qs.push(req(id, t));
+                        id += 1;
+                    }
+                    4 | 5 => {
+                        let t = rng.gen_range(qs.n_tenants() as u64 + 1) as usize;
+                        let _ = qs.pop_tenant(t);
+                    }
+                    6 => {
+                        let t = rng.gen_range(qs.n_tenants() as u64 + 1) as usize;
+                        let _ = qs.drain_tenant(t);
+                    }
+                    _ => {
+                        if rng.gen_bool(0.3) {
+                            // A late-registered (readmitted) tenant joins.
+                            qs.add_tenant();
+                        } else {
+                            qs.record_shed();
+                            external_sheds += 1;
+                        }
+                    }
+                }
+                let truth: usize = (0..qs.n_tenants())
+                    .map(|t| qs.tenant(t).unwrap().len())
+                    .sum();
+                assert_eq!(
+                    qs.total_pending(),
+                    truth,
+                    "pending counter drifted from per-tenant lengths"
+                );
+                assert!(qs.total_pending() <= cap, "global cap violated");
+            }
+            assert!(qs.shed >= external_sheds, "external sheds lost");
+        });
+    }
+
+    #[test]
     fn edf_pops_earliest_deadline_first() {
         use std::time::Duration;
         let now = Instant::now();

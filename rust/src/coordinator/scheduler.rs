@@ -47,6 +47,28 @@
 //! (arXiv:2512.18725) instead of FIFO luck. `Exclusive`/`TimeMux`/
 //! `SpaceMux` stay strictly FIFO so the §3 baselines remain faithful.
 //!
+//! ## Spatial execution lanes
+//!
+//! With [`SpaceTimeSched::spatial_lanes`], "space" stops being a residual
+//! of fusion and becomes a planned resource: each round's launches are
+//! assigned to `lanes` concurrent streams that the driver executes
+//! overlapped. Assignment is greedy **makespan balancing** — walk the
+//! launches in their planned (urgency) order and append each to the lane
+//! with the least predicted load (priced by the cost model when attached,
+//! else by the FLOP-proportional [`launch_weight`] proxy). List scheduling
+//! keeps the worst lane within `total/L + max single duration` of optimal
+//! while preserving urgency order within every lane. Profit comes from
+//! the concave occupancy curve: a super-kernel too small to fill the
+//! device leaves SMs idle that another lane can use, at the price of a
+//! co-location **interference stretch** the cost model calibrates from
+//! measured overlapped launches (`CostModel::lane_stretch`; D-STACK's
+//! GPU-share knees, arXiv:2304.13541, and DARIS's scheduler-owned
+//! interference model, arXiv:2504.08795). The §3 baselines always plan a
+//! single lane, and a one-launch round never overlaps with itself —
+//! `lanes = 1` is exactly the pre-lane scheduler. Exported per device:
+//! per-lane launch counts, busy time, and per-lane-count calibration
+//! error (fig10: `benches/fig10_spatial_lanes.rs`; config knob `lanes`).
+//!
 //! ## The placement layer above
 //!
 //! Schedulers are deliberately **device-blind**: each instance plans
@@ -74,11 +96,48 @@ use crate::coordinator::request::InferenceRequest;
 #[derive(Debug, Default)]
 pub struct RoundPlan {
     pub launches: Vec<Launch>,
+    /// Spatial execution lane of each launch, parallel to `launches`
+    /// (empty == everything on lane 0). Lanes execute *concurrently* in
+    /// the driver; launches sharing a lane run in plan order. The §3
+    /// baselines always stay single-lane.
+    pub lane_of: Vec<usize>,
+    /// Concurrent lanes this plan spans (0 or 1 == serial round).
+    pub n_lanes: usize,
     /// Requests drained this round (== sum of launch entries).
     pub drained: usize,
     /// Fused launches the deadline-aware planner split to protect an
     /// urgent member's deadline (0 for every non-EDF policy).
     pub deadline_splits: usize,
+}
+
+impl RoundPlan {
+    /// Lane of launch `i` (lane 0 for single-lane plans).
+    pub fn lane(&self, i: usize) -> usize {
+        self.lane_of.get(i).copied().unwrap_or(0)
+    }
+
+    /// Distinct lanes that actually carry a launch this round.
+    pub fn lanes_used(&self) -> usize {
+        if self.launches.is_empty() {
+            return 0;
+        }
+        if self.lane_of.is_empty() || self.n_lanes <= 1 {
+            return 1;
+        }
+        let mut seen = vec![false; self.n_lanes];
+        for i in 0..self.launches.len() {
+            let l = self.lane(i).min(self.n_lanes - 1);
+            seen[l] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+}
+
+/// Relative duration proxy for lane balancing when no cost model is
+/// attached: the launch's total lane work. Proportional weights are all the
+/// greedy balancer needs.
+pub fn launch_weight(launch: &Launch) -> f64 {
+    launch.class.flops() * launch.r_bucket.max(1) as f64
 }
 
 /// A scheduling policy over the admission queues.
@@ -156,6 +215,36 @@ pub fn make_scheduler_deadline_aware(
     }
 }
 
+/// Build the configured scheduler with the full knob set: padding policy,
+/// SLO-aware drain, spatial `lanes`, and — when `edf_slack` is set along
+/// with a cost model — deadline-aware planning. The §3 baselines ignore
+/// every space-time knob (single lane, FIFO); SpaceTime prices its lane
+/// balancing with `cost` when given, falling back to the FLOP-proportional
+/// [`launch_weight`] proxy.
+#[allow(clippy::too_many_arguments)]
+pub fn make_scheduler_spatial(
+    kind: SchedulerKind,
+    buckets: Vec<usize>,
+    max_batch: usize,
+    policy: PaddingPolicy,
+    slo_aware: bool,
+    lanes: usize,
+    cost: Option<SharedCostModel>,
+    edf_slack: Option<f64>,
+) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::SpaceTime => {
+            let mut s = SpaceTimeSched::with_policy(buckets, max_batch, policy)
+                .slo_aware(slo_aware);
+            if let (Some(cm), Some(slack)) = (&cost, edf_slack) {
+                s = s.deadline_aware(cm.clone(), slack);
+            }
+            Box::new(s.spatial_lanes(lanes, cost))
+        }
+        other => make_scheduler_with_policy(other, buckets, max_batch, policy, false),
+    }
+}
+
 /// Drain up to `cap` requests from one tenant's queue.
 fn drain_tenant(queues: &mut QueueSet, tenant: usize, cap: usize) -> Vec<InferenceRequest> {
     let mut out = Vec::new();
@@ -213,7 +302,7 @@ impl Scheduler for ExclusiveSched {
                 return RoundPlan {
                     launches: self.batcher.plan(reqs),
                     drained,
-                    deadline_splits: 0,
+                    ..Default::default()
                 };
             }
         }
@@ -259,7 +348,7 @@ impl Scheduler for TimeMuxSched {
                 return RoundPlan {
                     launches: singleton_launches(reqs, self.bucket1),
                     drained,
-                    deadline_splits: 0,
+                    ..Default::default()
                 };
             }
         }
@@ -296,7 +385,7 @@ impl Scheduler for SpaceMuxSched {
         RoundPlan {
             launches: singleton_launches(reqs, self.bucket1),
             drained,
-            deadline_splits: 0,
+            ..Default::default()
         }
     }
 
@@ -322,6 +411,13 @@ pub struct SpaceTimeSched {
     batcher: DynamicBatcher,
     slo_aware: bool,
     edf: Option<EdfPlanner>,
+    /// Spatial execution lanes the driver runs concurrently (>= 1). The
+    /// planner balances each round's launches across lanes greedily by
+    /// predicted duration, preserving urgency order within a lane.
+    lanes: usize,
+    /// Duration source for lane balancing when not in EDF mode (EDF reuses
+    /// its own cost model). None falls back to the [`launch_weight`] proxy.
+    lane_cost: Option<SharedCostModel>,
 }
 
 /// Deadline-aware planning state: the shared per-shard cost model plus the
@@ -341,11 +437,23 @@ impl SpaceTimeSched {
             batcher: DynamicBatcher::with_policy(buckets, max_batch, policy),
             slo_aware: false,
             edf: None,
+            lanes: 1,
+            lane_cost: None,
         }
     }
 
     pub fn slo_aware(mut self, on: bool) -> Self {
         self.slo_aware = on;
+        self
+    }
+
+    /// Plan rounds over `lanes` concurrent spatial lanes. `cost` (when
+    /// given) prices launches for the greedy makespan balancing; without
+    /// it — and outside EDF mode — the FLOP-proportional [`launch_weight`]
+    /// proxy is used, which balances identically for homogeneous rounds.
+    pub fn spatial_lanes(mut self, lanes: usize, cost: Option<SharedCostModel>) -> Self {
+        self.lanes = lanes.max(1);
+        self.lane_cost = cost;
         self
     }
 
@@ -404,15 +512,26 @@ impl SpaceTimeSched {
         let drained = reqs.len();
         let launches = self.batcher.plan(reqs);
         let Some(edf) = &self.edf else {
-            return RoundPlan { launches, drained, deadline_splits: 0 };
+            let (lane_of, n_lanes) = self.assign_lanes(&launches);
+            return RoundPlan { launches, lane_of, n_lanes, drained, deadline_splits: 0 };
         };
 
-        // Deadline-protection pass: launches run sequentially within the
-        // round, so order them most-urgent-first, then walk the plan with a
-        // predicted-time cursor, splitting any fused launch that would blow
-        // its most urgent member's deadline (module docs, step 3).
+        // Deadline-protection pass: order launches most-urgent-first, then
+        // walk the plan with a predicted-time cursor, splitting any fused
+        // launch that would blow its most urgent member's deadline (module
+        // docs, step 3). With spatial lanes a multi-launch round executes
+        // overlapped and every launch stretches by the co-location
+        // interference term, so price the pass at the configured lane
+        // count's stretch: the serial stretched cursor upper-bounds any
+        // single lane's stretched makespan, keeping every feasibility
+        // verdict conservative (never optimistic about a deadline).
         let cost = edf.cost.lock().unwrap();
         let slack = edf.slack_s;
+        let stretch = if self.lanes > 1 && launches.len() > 1 {
+            cost.lane_stretch(self.lanes.min(launches.len()))
+        } else {
+            1.0
+        };
         let mut ordered = launches;
         ordered.sort_by_key(|l| l.entries.iter().map(|e| e.deadline).min());
         let mut queue: VecDeque<Launch> = ordered.into();
@@ -424,7 +543,7 @@ impl SpaceTimeSched {
         let mut splits = 0usize;
         let mut cursor = 0.0f64;
         while let Some(launch) = queue.pop_front() {
-            let dur = cost.predict(launch.class, launch.r_bucket);
+            let dur = cost.predict(launch.class, launch.r_bucket) * stretch;
             let earliest = launch
                 .entries
                 .iter()
@@ -455,7 +574,7 @@ impl SpaceTimeSched {
                 if exact_only && bucket != k {
                     continue;
                 }
-                if cursor + cost.predict(class, bucket) <= budget {
+                if cursor + cost.predict(class, bucket) * stretch <= budget {
                     split_k = Some(k);
                     break;
                 }
@@ -466,7 +585,7 @@ impl SpaceTimeSched {
                         .batcher
                         .split_launch(Launch { class, entries, r_bucket }, k);
                     splits += 1;
-                    cursor += cost.predict(head.class, head.r_bucket);
+                    cursor += cost.predict(head.class, head.r_bucket) * stretch;
                     out.push(head);
                     // Each tail piece re-enters the plan at its own (later)
                     // urgency; it may be split again against that deadline.
@@ -492,7 +611,43 @@ impl SpaceTimeSched {
             }
         }
         out.extend(doomed);
-        RoundPlan { launches: out, drained, deadline_splits: splits }
+        // The EDF cost-model guard must drop before `assign_lanes` re-locks
+        // the same mutex for balancing weights.
+        drop(cost);
+        let (lane_of, n_lanes) = self.assign_lanes(&out);
+        RoundPlan { launches: out, lane_of, n_lanes, drained, deadline_splits: splits }
+    }
+
+    /// Greedy lane assignment: walk launches in plan (urgency) order and
+    /// put each on the least-loaded lane by predicted duration — classic
+    /// list scheduling, whose worst lane stays within
+    /// `total/L + max single duration` of the optimum, while appending in
+    /// order keeps each lane's launches urgency-sorted.
+    fn assign_lanes(&self, launches: &[Launch]) -> (Vec<usize>, usize) {
+        let n_lanes = self.lanes.min(launches.len()).max(1);
+        if n_lanes <= 1 {
+            return (Vec::new(), launches.len().min(1));
+        }
+        let cost = self
+            .edf
+            .as_ref()
+            .map(|e| &e.cost)
+            .or_else(|| self.lane_cost.as_ref())
+            .map(|c| c.lock().unwrap());
+        let weight = |l: &Launch| match &cost {
+            Some(cm) => cm.predict(l.class, l.r_bucket),
+            None => launch_weight(l),
+        };
+        let mut lane_of = Vec::with_capacity(launches.len());
+        let mut load = vec![0.0f64; n_lanes];
+        for l in launches {
+            let lane = (0..n_lanes)
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .unwrap();
+            lane_of.push(lane);
+            load[lane] += weight(l);
+        }
+        (lane_of, n_lanes)
     }
 }
 
@@ -825,6 +980,232 @@ mod tests {
         let plan = s.plan_round_at(&mut q, Instant::now());
         assert_eq!(plan.deadline_splits, 0);
         assert_eq!(plan.launches.len(), 1);
+    }
+
+    const CLASS_SMALL: ShapeClass = ShapeClass { kind: "batched_gemm", m: 32, n: 32, k: 32 };
+    const CLASS_BIG: ShapeClass =
+        ShapeClass { kind: "batched_gemm", m: 128, n: 128, k: 128 };
+
+    #[test]
+    fn spatial_lanes_assign_every_launch_to_exactly_one_lane() {
+        let mut q = QueueSet::new(6, 16);
+        fill(&mut q, 0, 2, CLASS_SMALL);
+        fill(&mut q, 1, 2, CLASS);
+        fill(&mut q, 2, 2, CLASS_BIG);
+        let mut s = SpaceTimeSched::new(buckets(), 64).spatial_lanes(2, None);
+        let plan = s.plan_round(&mut q);
+        assert_eq!(plan.launches.len(), 3, "one launch per class");
+        assert_eq!(plan.lane_of.len(), plan.launches.len());
+        assert_eq!(plan.n_lanes, 2);
+        assert!(plan.lane_of.iter().all(|&l| l < plan.n_lanes));
+        assert_eq!(plan.lanes_used(), 2, "both lanes carry work");
+    }
+
+    #[test]
+    fn lane_assignment_within_greedy_makespan_bound() {
+        let mut q = QueueSet::new(8, 32);
+        for t in 0..2 {
+            fill(&mut q, t, 3, CLASS_SMALL);
+        }
+        for t in 2..4 {
+            fill(&mut q, t, 3, CLASS);
+        }
+        for t in 4..6 {
+            fill(&mut q, t, 3, CLASS_BIG);
+        }
+        let mut s = SpaceTimeSched::new(buckets(), 64).spatial_lanes(3, None);
+        let plan = s.plan_round(&mut q);
+        assert!(plan.launches.len() >= 3);
+        let weights: Vec<f64> = plan.launches.iter().map(launch_weight).collect();
+        let mut loads = vec![0.0f64; plan.n_lanes];
+        for (i, &w) in weights.iter().enumerate() {
+            loads[plan.lane(i)] += w;
+        }
+        let total: f64 = weights.iter().sum();
+        let max_single = weights.iter().cloned().fold(0.0, f64::max);
+        let worst = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            worst <= total / plan.n_lanes as f64 + max_single + 1e-9,
+            "greedy bound violated: worst {worst}, total {total}, max {max_single}"
+        );
+    }
+
+    #[test]
+    fn single_launch_round_stays_single_lane() {
+        let mut q = QueueSet::new(4, 16);
+        for t in 0..4 {
+            fill(&mut q, t, 2, CLASS);
+        }
+        let mut s = SpaceTimeSched::new(buckets(), 64).spatial_lanes(4, None);
+        let plan = s.plan_round(&mut q);
+        assert_eq!(plan.launches.len(), 1);
+        assert_eq!(plan.n_lanes, 1, "a lone launch cannot overlap itself");
+        assert!(plan.lane_of.is_empty());
+        assert_eq!(plan.lanes_used(), 1);
+    }
+
+    #[test]
+    fn baselines_never_plan_multiple_lanes() {
+        use crate::config::SchedulerKind::*;
+        for kind in [Exclusive, TimeMux, SpaceMux] {
+            let mut q = QueueSet::new(4, 16);
+            fill(&mut q, 0, 2, CLASS_SMALL);
+            fill(&mut q, 1, 2, CLASS_BIG);
+            let mut s = make_scheduler(kind, buckets(), 8);
+            while !q.is_empty() {
+                let plan = s.plan_round(&mut q);
+                assert!(plan.n_lanes <= 1, "{} multi-lane", s.label());
+                assert!(plan.lane_of.is_empty());
+                assert!(plan.lanes_used() <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn edf_lane_assignment_keeps_urgency_order_within_lane() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::sync::{Arc, Mutex};
+        use std::time::Duration;
+
+        let now = Instant::now();
+        let mut cm = CostModel::new();
+        for r in [1usize, 2, 4] {
+            cm.observe(CLASS_SMALL, r, 0.010);
+            cm.observe(CLASS_BIG, r, 0.010);
+        }
+        let cost = Arc::new(Mutex::new(cm));
+        let mut q = QueueSet::new(8, 16);
+        for t in 0..4usize {
+            let class = if t % 2 == 0 { CLASS_SMALL } else { CLASS_BIG };
+            q.push(InferenceRequest {
+                id: t as u64,
+                tenant: t,
+                class,
+                payload: vec![],
+                arrived: now,
+                deadline: now + Duration::from_millis(100 + 50 * t as u64),
+            })
+            .unwrap();
+        }
+        let mut s = SpaceTimeSched::new(buckets(), 8)
+            .deadline_aware(cost, 0.0)
+            .spatial_lanes(2, None);
+        let plan = s.plan_round_at(&mut q, now);
+        assert_eq!(plan.lane_of.len(), plan.launches.len());
+        // Within each lane, launches keep the plan's urgency order.
+        for lane in 0..plan.n_lanes {
+            let deadlines: Vec<_> = plan
+                .launches
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| plan.lane(i) == lane)
+                .map(|(_, l)| l.entries.iter().map(|e| e.deadline).min().unwrap())
+                .collect();
+            assert!(
+                deadlines.windows(2).all(|w| w[0] <= w[1]),
+                "lane {lane} out of urgency order"
+            );
+        }
+    }
+
+    #[test]
+    fn edf_prices_deadlines_at_the_lane_interference_stretch() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::sync::{Arc, Mutex};
+        use std::time::Duration;
+
+        // Solo, the urgent fused launch fits its deadline (30 ms <= 40 ms);
+        // at a learned 2-lane stretch of 2.0 it does not (60 ms > 40 ms),
+        // so the lane-aware planner must split where the solo planner
+        // would not.
+        let calibrated = || {
+            let mut cm = CostModel::new();
+            cm.observe(CLASS, 2, 0.030);
+            cm.observe(CLASS, 1, 0.015);
+            cm.observe(CLASS_B, 2, 0.001);
+            cm.observe_concurrent(CLASS, 2, 2, 0.060); // stretch(2) == 2.0
+            Arc::new(Mutex::new(cm))
+        };
+        const CLASS_B: ShapeClass =
+            ShapeClass { kind: "batched_gemm", m: 48, n: 48, k: 48 };
+        let fill_round = |q: &mut QueueSet, now: Instant| {
+            for t in 0..2usize {
+                q.push(InferenceRequest {
+                    id: t as u64,
+                    tenant: t,
+                    class: CLASS,
+                    payload: vec![],
+                    arrived: now,
+                    deadline: now + Duration::from_millis(40),
+                })
+                .unwrap();
+            }
+            for t in 2..4usize {
+                q.push(InferenceRequest {
+                    id: t as u64,
+                    tenant: t,
+                    class: CLASS_B,
+                    payload: vec![],
+                    arrived: now,
+                    deadline: now + Duration::from_secs(10),
+                })
+                .unwrap();
+            }
+        };
+        let now = Instant::now();
+        let mut q = QueueSet::new(4, 16);
+        fill_round(&mut q, now);
+        let mut solo = SpaceTimeSched::new(buckets(), 4).deadline_aware(calibrated(), 0.0);
+        let plan = solo.plan_round_at(&mut q, now);
+        assert_eq!(plan.deadline_splits, 0, "solo: 30 ms fits the 40 ms budget");
+
+        let mut q = QueueSet::new(4, 16);
+        fill_round(&mut q, now);
+        let mut laned = SpaceTimeSched::new(buckets(), 4)
+            .deadline_aware(calibrated(), 0.0)
+            .spatial_lanes(2, None);
+        let plan = laned.plan_round_at(&mut q, now);
+        assert_eq!(
+            plan.deadline_splits, 1,
+            "2-lane stretch 2.0 blows the 40 ms budget: must split"
+        );
+        assert_eq!(plan.launches[0].class, CLASS);
+        assert_eq!(plan.launches[0].r_bucket, 1, "protected prefix at r=1");
+    }
+
+    #[test]
+    fn make_scheduler_spatial_wires_lanes_and_edf() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::sync::{Arc, Mutex};
+        let cost = Arc::new(Mutex::new(CostModel::new()));
+        let mut s = make_scheduler_spatial(
+            SchedulerKind::SpaceTime,
+            buckets(),
+            64,
+            PaddingPolicy::PadToBucket,
+            false,
+            2,
+            Some(cost),
+            Some(0.0),
+        );
+        assert_eq!(s.label(), "space-time");
+        let mut q = QueueSet::new(4, 16);
+        fill(&mut q, 0, 2, CLASS_SMALL);
+        fill(&mut q, 1, 2, CLASS_BIG);
+        let plan = s.plan_round(&mut q);
+        assert_eq!(plan.n_lanes, 2);
+        // Baselines pass through untouched.
+        let t = make_scheduler_spatial(
+            SchedulerKind::TimeMux,
+            buckets(),
+            64,
+            PaddingPolicy::PadToBucket,
+            false,
+            4,
+            None,
+            None,
+        );
+        assert_eq!(t.label(), "time-mux");
     }
 
     #[test]

@@ -10,12 +10,13 @@
 //!   we cache super-kernels as workloads stabilize"), so a hot launch
 //!   uploads only activations.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::Launch;
-use crate::coordinator::fusion_cache::{FusionCache, FusionKey};
+use crate::coordinator::fusion_cache::{FusionCache, FusionKey, WeightSet};
 use crate::coordinator::tenant::{ModelSpec, TenantRegistry};
 use crate::runtime::{HostTensor, PjrtEngine};
 
@@ -179,12 +180,15 @@ impl<'e> SuperKernelExec<'e> {
     ///
     /// With a [`FusionCache`], weight operands ride device-resident buffers
     /// (uploaded once per recurring lane assignment); only activations are
-    /// marshaled per launch.
+    /// marshaled per launch. The cache sits behind a mutex because spatial
+    /// lanes execute concurrently; the lock is held only for the
+    /// lookup/build — the returned [`WeightSet`] handle outlives it — so
+    /// overlapped launches never serialize on each other's executions.
     pub fn execute(
         &self,
         launch: &Launch,
         tenants: &TenantRegistry,
-        cache: &mut FusionCache,
+        cache: &Mutex<FusionCache>,
     ) -> Result<LaunchResult> {
         let name = self.artifact_name(launch)?;
         let exe = self.engine.load(&name)?;
@@ -209,20 +213,37 @@ impl<'e> SuperKernelExec<'e> {
             .map(|(pos, t)| Ok((*pos, self.engine.to_device(t)?)))
             .collect::<Result<_>>()?;
         // Weight operands from the fusion cache (device-resident on hit).
-        let weight_buffers: &[xla::PjRtBuffer] = if w_pos.is_empty() {
-            &[]
+        // The lock covers only the map lookup/insert; a cold build (host
+        // gather + device upload) runs outside it so concurrent lanes
+        // never serialize on each other's uploads — a racing duplicate
+        // build is dropped at `insert` (the first entry wins).
+        let weights: Option<Arc<WeightSet>> = if w_pos.is_empty() {
+            None
         } else {
-            cache.get_or_build(self.engine, FusionKey::of(launch), || {
-                Self::stack_weights(launch, tenants, w_pos)
-            })?
+            let key = FusionKey::of(launch);
+            let cached = cache.lock().unwrap().get(&key);
+            match cached {
+                Some(w) => Some(w),
+                None => {
+                    let host = Self::stack_weights(launch, tenants, w_pos);
+                    let buffers = host
+                        .iter()
+                        .map(|t| self.engine.to_device(t))
+                        .collect::<Result<Vec<_>>>()?;
+                    let built = Arc::new(WeightSet::new(buffers));
+                    Some(cache.lock().unwrap().insert(key, built))
+                }
+            }
         };
         // Assemble positional operand list.
         let mut slots: Vec<Option<&xla::PjRtBuffer>> = vec![None; n_operands];
         for (pos, buf) in &act_buffers {
             slots[*pos] = Some(buf);
         }
-        for (wi, pos) in w_pos.iter().enumerate() {
-            slots[*pos] = Some(&weight_buffers[wi]);
+        if let Some(ws) = &weights {
+            for (wi, pos) in w_pos.iter().enumerate() {
+                slots[*pos] = Some(&ws.buffers()[wi]);
+            }
         }
         let operands: Vec<&xla::PjRtBuffer> = slots
             .into_iter()

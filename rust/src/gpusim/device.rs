@@ -127,6 +127,16 @@ impl DeviceSpec {
         1.0 / (1.0 + self.interference_coeff * (n.saturating_sub(1)) as f64)
     }
 
+    /// Latency *stretch* of a kernel co-resident with `lanes - 1` other
+    /// spatial lanes: the reciprocal of [`DeviceSpec::interference`], i.e.
+    /// `1 + coeff * (lanes - 1)`. This is the analytic seed of the
+    /// coordinator cost model's co-location interference term (the
+    /// measured-EWMA correction lives in
+    /// [`crate::coordinator::costmodel::CostModel`]).
+    pub fn lane_stretch(&self, lanes: u32) -> f64 {
+        1.0 + self.interference_coeff * (lanes.saturating_sub(1)) as f64
+    }
+
     /// Fraction of HBM bandwidth reachable from `sms` SMs.
     pub fn bw_fraction(&self, sms: f64) -> f64 {
         (sms / self.bw_saturation_sms).min(1.0)
@@ -176,4 +186,14 @@ mod tests {
         assert_eq!(d.bw_fraction(40.0), 1.0);
     }
 
+    #[test]
+    fn lane_stretch_is_inverse_interference() {
+        let d = DeviceSpec::v100();
+        assert_eq!(d.lane_stretch(1), 1.0);
+        for n in 1..8u32 {
+            let prod = d.lane_stretch(n) * d.interference(n);
+            assert!((prod - 1.0).abs() < 1e-12, "lanes {n}: {prod}");
+        }
+        assert!(d.lane_stretch(4) > d.lane_stretch(2));
+    }
 }

@@ -40,10 +40,21 @@ impl MpsAnomaly {
             *m = 1.0 + rng.gen_f64_range(-0.02, 0.02);
         }
         // Straggler(s): one always; a second one sometimes when odd.
+        // Victims are sampled WITHOUT replacement: drawing the same tenant
+        // twice would make the second stretch a no-op `max` and silently
+        // produce one straggler where two were intended (regression test
+        // `two_stragglers_hit_distinct_victims`).
         let n_stragglers = if odd && rng.gen_bool(0.6) { 2 } else { 1 };
         let severity_hi = if odd { 0.23 } else { 0.15 };
+        let mut victims: Vec<usize> = Vec::with_capacity(2);
         for _ in 0..n_stragglers.min(n_tenants) {
-            let victim = rng.gen_range(n_tenants as u64) as usize;
+            let victim = loop {
+                let v = rng.gen_range(n_tenants as u64) as usize;
+                if !victims.contains(&v) {
+                    break v;
+                }
+            };
+            victims.push(victim);
             let stretch = 1.0 + rng.gen_f64_range(severity_hi * 0.6, severity_hi);
             multipliers[victim] = multipliers[victim].max(stretch);
         }
@@ -153,5 +164,48 @@ mod tests {
         let a = MpsAnomaly::new(7, 9);
         let w = a.worst().unwrap();
         assert!(a.multiplier(w) >= 1.05);
+    }
+
+    #[test]
+    fn two_stragglers_hit_distinct_victims() {
+        // Regression: victims were drawn WITH replacement, so a two-
+        // straggler draw could pick the same tenant twice — the second
+        // stretch was a no-op `max` and the table showed one straggler
+        // where two were intended. Post-fix, a two-straggler draw always
+        // yields two distinct stretched tenants, so across many seeds the
+        // observed two-straggler fraction matches the 60% draw probability
+        // for odd counts instead of being deflated by collisions
+        // (for n = 5, collisions deflated it to ~48%).
+        let stragglers = |seed: u64, n: usize| -> usize {
+            // Base jitter tops out at 1.02; the smallest straggler stretch
+            // is 1 + 0.6 * severity_hi >= 1.09, so 1.05 separates them.
+            MpsAnomaly::new(seed, n)
+                .multipliers
+                .iter()
+                .filter(|&&m| m > 1.05)
+                .count()
+        };
+        let seeds = 1000u64;
+        let mut twos = 0usize;
+        for seed in 0..seeds {
+            let k = stragglers(seed, 5);
+            assert!(
+                (1..=2).contains(&k),
+                "odd count must produce 1 or 2 stragglers, got {k} (seed {seed})"
+            );
+            if k == 2 {
+                twos += 1;
+            }
+        }
+        let frac = twos as f64 / seeds as f64;
+        assert!(
+            (0.55..=0.65).contains(&frac),
+            "two-straggler fraction {frac} should match the 0.6 draw \
+             probability (collisions would deflate it to ~0.48)"
+        );
+        // Even counts never draw a second straggler.
+        for seed in 0..200 {
+            assert_eq!(stragglers(seed, 6), 1, "seed {seed}");
+        }
     }
 }

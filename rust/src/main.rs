@@ -73,11 +73,14 @@ fn flag<'a>(flags: &'a HashMap<String, String>, name: &str, default: &'a str) ->
     flags.get(name).map(String::as_str).unwrap_or(default)
 }
 
-fn parse_policy(s: &str, max_batch: u32) -> Result<Policy, String> {
+fn parse_policy(s: &str, max_batch: u32, lanes: u32) -> Result<Policy, String> {
     Ok(match SchedulerKind::parse(s)? {
         SchedulerKind::Exclusive => Policy::Exclusive,
         SchedulerKind::TimeMux => Policy::TimeMux,
         SchedulerKind::SpaceMux => Policy::SpaceMuxMps { anomaly_seed: 42 },
+        SchedulerKind::SpaceTime if lanes > 1 => {
+            Policy::SpaceTimeLanes { max_batch, lanes }
+        }
         SchedulerKind::SpaceTime => Policy::SpaceTime { max_batch },
     })
 }
@@ -135,9 +138,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     };
     let warmed = coord.warmup().unwrap_or(0);
     eprintln!(
-        "serve: scheduler={} edf={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
+        "serve: scheduler={} edf={} lanes={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
         coord.scheduler_label(),
         coord.deadline_aware(),
+        coord.lanes(),
         n_tenants,
         coord.devices(),
         coord.queue_cap(),
@@ -209,7 +213,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         ]);
     }
     println!("{}", table.render());
-    if snap.devices.len() > 1 || snap.devices.iter().any(|d| d.shed > 0) {
+    if snap.devices.len() > 1
+        || coord.lanes() > 1
+        || snap.devices.iter().any(|d| d.shed > 0)
+    {
         let mut dev_table = Table::new(&[
             "device",
             "tenants",
@@ -219,9 +226,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             "shed",
             "dl_splits",
             "calib_err",
+            "lane_util",
+            "lane_calib",
             "flops",
         ]);
         for d in &snap.devices {
+            // Per-lane utilization as "u0/u1/..."; interference calibration
+            // as "lanes:err" pairs (empty until overlapped rounds ran).
+            let lane_util = d
+                .lane_utilization(snap.wall_seconds)
+                .iter()
+                .map(|u| format!("{:.0}%", u * 100.0))
+                .collect::<Vec<_>>()
+                .join("/");
+            let lane_calib = if d.lane_calibration.is_empty() {
+                "-".to_string()
+            } else {
+                d.lane_calibration
+                    .iter()
+                    .map(|(l, e)| format!("{l}:{e:.3}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
             dev_table.row(&[
                 d.device.to_string(),
                 d.tenants.to_string(),
@@ -231,6 +257,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 d.shed.to_string(),
                 d.deadline_splits.to_string(),
                 format!("{:.3}", d.cost_calibration_error),
+                lane_util,
+                lane_calib,
                 format!("{:.3e}", d.flops),
             ]);
         }
@@ -265,6 +293,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
     let iters: u32 = flag(flags, "iters", "50").parse().unwrap_or(50);
     let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
     let devices: usize = flag(flags, "devices", "1").parse().unwrap_or(1).max(1);
+    let lanes: u32 = flag(flags, "lanes", "1").parse().unwrap_or(1).max(1);
     let shape = match parse_shape(flag(flags, "shape", "256x128x1152")) {
         Ok(s) => s,
         Err(e) => {
@@ -272,7 +301,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch) {
+    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch, lanes) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("simulate: {e}");
@@ -361,7 +390,8 @@ fn cmd_artifacts(flags: &HashMap<String, String>) -> i32 {
 fn cmd_trace(flags: &HashMap<String, String>) -> i32 {
     let tenants: usize = flag(flags, "tenants", "4").parse().unwrap_or(4);
     let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
-    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch) {
+    let lanes: u32 = flag(flags, "lanes", "1").parse().unwrap_or(1).max(1);
+    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch, lanes) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("trace: {e}");

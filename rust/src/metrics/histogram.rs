@@ -7,7 +7,12 @@
 
 /// Linear sub-buckets per power-of-two octave. 32 → ≤3.2 % relative error.
 const SUB_BUCKETS: u64 = 32;
-/// Number of octaves covered: 2^40 ns ≈ 18 minutes, far above any latency.
+/// Octave rows allocated (the first row is the exact linear region
+/// [0, SUB_BUCKETS)). Values up to `(2*SUB_BUCKETS - 1) << (OCTAVES - 2)`
+/// (≈ 2^44 ns ≈ 4.8 h) bucket with full resolution; anything beyond
+/// clamps into the top bucket — far above any latency this system records.
+/// The round-trip contract (`bucket_value(bucket_index(v)) <= v`, relative
+/// error < 1/SUB_BUCKETS below the clamp) is property-tested below.
 const OCTAVES: usize = 40;
 const NBUCKETS: usize = OCTAVES * SUB_BUCKETS as usize;
 
@@ -190,6 +195,49 @@ mod tests {
             let lo = Histogram::bucket_value(idx);
             let hi = Histogram::bucket_value(idx + 1);
             assert!(lo <= v && v < hi.max(lo + 1), "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn prop_bucket_round_trip_is_lower_edge_with_bounded_error() {
+        // The octave-boundary contract: for every value below the clamp,
+        // bucket_value(bucket_index(v)) is a LOWER edge (never exceeds v),
+        // within 1/SUB_BUCKETS relative error, and the edge maps back to
+        // the same bucket (no off-by-one drift at 2^k boundaries).
+        let check = |v: u64| {
+            let idx = Histogram::bucket_index(v);
+            let lo = Histogram::bucket_value(idx);
+            assert!(lo <= v, "v={v} idx={idx} lo={lo}: edge above the value");
+            let err = (v - lo) as f64 / v.max(1) as f64;
+            assert!(
+                err < 1.0 / SUB_BUCKETS as f64 + 1e-12,
+                "v={v} lo={lo} rel err {err} exceeds 1/{SUB_BUCKETS}"
+            );
+            assert_eq!(
+                Histogram::bucket_index(lo),
+                idx,
+                "v={v}: lower edge {lo} drifts to another bucket"
+            );
+        };
+        // Octave boundaries across the whole documented range [0, 2^40):
+        // every power of two, one below, one above.
+        check(0);
+        for exp in 0..40u32 {
+            let p = 1u64 << exp;
+            check(p - 1);
+            check(p);
+            check(p + 1);
+        }
+        // Randomized sweep over the same range.
+        let mut rng = Rng::new(0xB0C4);
+        for _ in 0..20_000 {
+            check(rng.gen_range(1u64 << 40));
+        }
+        // Above the clamp the lower-edge property still holds (relative
+        // error is unbounded there by design — it is out of range).
+        for v in [u64::MAX, 1 << 50, (63u64 << 38) + 1] {
+            let lo = Histogram::bucket_value(Histogram::bucket_index(v));
+            assert!(lo <= v);
         }
     }
 

@@ -138,8 +138,29 @@ pub struct DeviceSnapshot {
     /// EWMA relative error of the shard's launch-latency predictor
     /// (0.0 when EDF planning is off or nothing has been observed).
     pub cost_calibration_error: f64,
+    /// Launches executed per spatial lane (index == lane id; one entry
+    /// when the shard runs serial rounds).
+    pub lane_launches: Vec<u64>,
+    /// Busy seconds (marshal + execute) accumulated per spatial lane —
+    /// `lane_busy_s[i] / wall` is lane i's utilization.
+    pub lane_busy_s: Vec<f64>,
+    /// Interference-model calibration: (concurrent lane count, EWMA
+    /// relative prediction error) for every lane count with at least one
+    /// overlapped observation.
+    pub lane_calibration: Vec<(usize, f64)>,
     /// FLOPs executed on this device.
     pub flops: f64,
+}
+
+impl DeviceSnapshot {
+    /// Per-lane utilization over `wall` seconds (empty when no lane has
+    /// executed anything).
+    pub fn lane_utilization(&self, wall: f64) -> Vec<f64> {
+        if wall <= 0.0 {
+            return vec![0.0; self.lane_busy_s.len()];
+        }
+        self.lane_busy_s.iter().map(|&b| b / wall).collect()
+    }
 }
 
 /// Whole-system snapshot: per-tenant plus aggregates.
@@ -249,6 +270,30 @@ impl Snapshot {
                         (
                             "cost_calibration_error",
                             Json::num(d.cost_calibration_error),
+                        ),
+                        (
+                            "lane_launches",
+                            Json::Arr(
+                                d.lane_launches
+                                    .iter()
+                                    .map(|&l| Json::num(l as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "lane_busy_s",
+                            Json::Arr(
+                                d.lane_busy_s.iter().map(|&b| Json::num(b)).collect(),
+                            ),
+                        ),
+                        (
+                            "lane_calibration",
+                            Json::Obj(
+                                d.lane_calibration
+                                    .iter()
+                                    .map(|&(l, e)| (l.to_string(), Json::num(e)))
+                                    .collect(),
+                            ),
                         ),
                         ("flops", Json::num(d.flops)),
                     ])
@@ -415,6 +460,9 @@ mod tests {
             shed: 4,
             deadline_splits: 2,
             cost_calibration_error: 0.125,
+            lane_launches: vec![4, 3],
+            lane_busy_s: vec![0.5, 0.25],
+            lane_calibration: vec![(2, 0.0625)],
             flops: 1e9,
         }];
         let back = crate::util::json::Json::parse(&snap.to_json().to_string()).unwrap();
@@ -427,6 +475,24 @@ mod tests {
             d0.get("cost_calibration_error").unwrap().as_f64(),
             Some(0.125)
         );
+        let lanes = d0.get("lane_launches").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[1].as_f64(), Some(3.0));
+        let busy = d0.get("lane_busy_s").unwrap().as_arr().unwrap();
+        assert_eq!(busy[0].as_f64(), Some(0.5));
+        let calib = d0.get("lane_calibration").unwrap();
+        assert_eq!(calib.get("2").unwrap().as_f64(), Some(0.0625));
+    }
+
+    #[test]
+    fn lane_utilization_divides_by_wall() {
+        let d = DeviceSnapshot {
+            lane_busy_s: vec![1.0, 0.5],
+            ..Default::default()
+        };
+        let u = d.lane_utilization(2.0);
+        assert_eq!(u, vec![0.5, 0.25]);
+        assert_eq!(d.lane_utilization(0.0), vec![0.0, 0.0]);
     }
 
     #[test]

@@ -8,7 +8,9 @@ use stgpu::coordinator::batcher::{DynamicBatcher, PaddingPolicy};
 use stgpu::coordinator::monitor::{MonitorConfig, SloMonitor};
 use stgpu::coordinator::queue::QueueSet;
 use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
-use stgpu::coordinator::scheduler::{make_scheduler, Scheduler};
+use stgpu::coordinator::scheduler::{
+    launch_weight, make_scheduler, Scheduler, SpaceTimeSched,
+};
 use stgpu::coordinator::tenant::TenantRegistry;
 use stgpu::config::SchedulerKind;
 use stgpu::util::prng::Rng;
@@ -375,6 +377,76 @@ fn prop_spacetime_single_class_fills_before_splitting() {
         assert_eq!(plan.launches.len(), 1, "total={total}");
         assert_eq!(plan.launches[0].entries.len(), total.min(64));
     });
+}
+
+// ---------------------------------------------------------------------------
+// Spatial-lane invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_spacetime_lane_assignment_invariants() {
+    // Across random workloads and lane counts: every planned launch lands
+    // on exactly one lane; lane ids are in range; the greedy balancer's
+    // worst lane stays within the list-scheduling bound
+    // (total/L + max single weight); requests are conserved.
+    check("space-time lane assignment", 0xC5, |rng| {
+        let lanes = 1 + rng.gen_range(4) as usize; // 1..=4
+        let n_tenants = 1 + rng.gen_range(6) as usize;
+        let (mut q, total) = fill_queues(rng, n_tenants, 30);
+        let mut s = SpaceTimeSched::new(buckets(), 16).spatial_lanes(lanes, None);
+        let mut served = 0usize;
+        while !q.is_empty() {
+            let plan = s.plan_round(&mut q);
+            served += plan.drained;
+            if plan.n_lanes > 1 {
+                assert_eq!(
+                    plan.lane_of.len(),
+                    plan.launches.len(),
+                    "every launch needs exactly one lane"
+                );
+            }
+            assert!(plan.n_lanes <= lanes, "planned more lanes than configured");
+            assert!(plan.n_lanes <= plan.launches.len().max(1));
+            let n_lanes = plan.n_lanes.max(1);
+            for i in 0..plan.launches.len() {
+                assert!(plan.lane(i) < n_lanes, "lane id out of range");
+            }
+            let weights: Vec<f64> = plan.launches.iter().map(launch_weight).collect();
+            let mut loads = vec![0.0f64; n_lanes];
+            for (i, &w) in weights.iter().enumerate() {
+                loads[plan.lane(i)] += w;
+            }
+            let total_w: f64 = weights.iter().sum();
+            let max_w = weights.iter().cloned().fold(0.0, f64::max);
+            let worst = loads.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                worst <= total_w / n_lanes as f64 + max_w + 1e-9,
+                "greedy makespan bound violated: worst {worst} total {total_w} \
+                 max {max_w} lanes {n_lanes}"
+            );
+        }
+        assert_eq!(served, total);
+    });
+}
+
+#[test]
+fn prop_baseline_plans_are_always_single_lane() {
+    for kind in [
+        SchedulerKind::Exclusive,
+        SchedulerKind::TimeMux,
+        SchedulerKind::SpaceMux,
+    ] {
+        run_prop(&format!("{kind:?} single-lane"), 0xC6, 64, |rng| {
+            let (mut q, _) = fill_queues(rng, 5, 20);
+            let mut s = make_scheduler(kind, buckets(), 16);
+            while !q.is_empty() {
+                let plan = s.plan_round(&mut q);
+                assert!(plan.n_lanes <= 1, "{} planned {} lanes", s.label(), plan.n_lanes);
+                assert!(plan.lane_of.is_empty(), "{} assigned lanes", s.label());
+                assert!(plan.lanes_used() <= 1);
+            }
+        });
+    }
 }
 
 // ---------------------------------------------------------------------------
