@@ -27,7 +27,7 @@ use stgpu::coordinator::scheduler::SpaceTimeSched;
 use stgpu::coordinator::{CostModel, InferenceRequest, QueueSet, Scheduler, ShapeClass};
 use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
 use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
-use stgpu::util::bench::{banner, Table};
+use stgpu::util::bench::{banner, BenchJson, Table};
 use stgpu::workload::arrivals::{ArrivalProcess, RequestTrace};
 
 /// Four distinct shape classes (two tenants each): every saturated round
@@ -274,4 +274,8 @@ fn main() {
         results[1].calibration_2,
         results[1].multi_lane_rounds,
     );
+    BenchJson::new("fig10_spatial_lanes")
+        .throughput(results[1].throughput_rps())
+        .slo_attainment(results[1].attainment())
+        .write();
 }

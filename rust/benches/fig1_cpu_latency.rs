@@ -8,7 +8,8 @@
 
 use stgpu::gpusim::{self, DeviceSpec, Policy, SimConfig};
 use stgpu::models::zoo;
-use stgpu::util::bench::{banner, fmt_secs, Table};
+use stgpu::util::bench::{banner, fmt_secs, BenchJson, Table};
+use stgpu::util::stats;
 use stgpu::workload::model_tenants;
 
 fn main() {
@@ -19,10 +20,12 @@ fn main() {
     let cpu = DeviceSpec::cpu_xeon();
     let slo_ms = 100.0;
     let mut table = Table::new(&["model", "year", "GFLOPs", "cpu_latency", "over_slo_x"]);
+    let mut lats = Vec::new();
     for model in zoo::figure1_lineup() {
         let cfg = SimConfig::new(cpu.clone(), Policy::Exclusive);
         let report = gpusim::run(&cfg, &model_tenants(1, 1, &model, 1));
         let lat = report.mean_latency();
+        lats.push(lat);
         table.row(&[
             model.name.clone(),
             model.year.to_string(),
@@ -32,6 +35,10 @@ fn main() {
         ]);
     }
     table.emit("fig1_cpu_latency");
+    BenchJson::new("fig1_cpu_latency")
+        .p50_s(stats::percentile(&lats, 50.0))
+        .p99_s(stats::percentile(&lats, 99.0))
+        .write();
     println!(
         "shape check: latency grows monotonically-ish with generation; the\n\
          2018 endpoint sits ~4 s — orders of magnitude beyond a {slo_ms} ms SLO,\n\

@@ -9,7 +9,8 @@
 
 use stgpu::gpusim::{self, DeviceSpec, Policy, SimConfig};
 use stgpu::models::zoo;
-use stgpu::util::bench::{banner, fmt_secs, Table};
+use stgpu::util::bench::{banner, fmt_secs, BenchJson, Table};
+use stgpu::util::stats;
 use stgpu::workload::model_tenants;
 
 fn main() {
@@ -34,10 +35,12 @@ fn main() {
     let mut batches = batches;
     batches.sort_unstable();
     batches.dedup();
+    let mut lats = Vec::new();
     for batch in batches {
         let cfg = SimConfig::new(spec.clone(), Policy::Exclusive);
         let report = gpusim::run(&cfg, &model_tenants(1, 3, &model, batch));
         let lat = report.mean_latency();
+        lats.push(lat);
         let frac = report.throughput_flops() / peak;
         let within = lat <= slo_s;
         if within && batch > max_within {
@@ -52,6 +55,11 @@ fn main() {
         ]);
     }
     table.emit("fig2_batch_slo");
+    BenchJson::new("fig2_batch_slo")
+        .throughput(frac_at_max * peak)
+        .p50_s(stats::percentile(&lats, 50.0))
+        .p99_s(stats::percentile(&lats, 99.0))
+        .write();
     println!(
         "largest batch within the {:.1} ms (scaled) SLO: {} at {:.1}% of peak \
          (paper: 26 at ~28%)",

@@ -10,8 +10,8 @@
 
 use stgpu::gpusim::{self, DeviceSpec, Policy, SimConfig};
 use stgpu::models::zoo;
-use stgpu::util::bench::{banner, fmt_secs, Table};
-use stgpu::util::stats::geomean;
+use stgpu::util::bench::{banner, fmt_secs, BenchJson, Table};
+use stgpu::util::stats::{geomean, percentile};
 use stgpu::workload::model_tenants;
 
 fn main() {
@@ -26,6 +26,7 @@ fn main() {
 
     let mut ratios_time = Vec::new();
     let mut ratios_space = Vec::new();
+    let mut all_lats = Vec::new();
 
     for model in [zoo::mobilenet_v2(), zoo::resnet50()] {
         let mut table = Table::new(&["tenants", "exclusive", "time-mux", "space-mux(MPS)", "time/excl", "space/excl"]);
@@ -37,6 +38,7 @@ fn main() {
             let excl = lat(Policy::Exclusive);
             let time = lat(Policy::TimeMux);
             let space = lat(Policy::SpaceMuxMps { anomaly_seed: 42 });
+            all_lats.extend([excl, time, space]);
             if n > 1 {
                 ratios_time.push(time / excl);
                 ratios_space.push(space / excl);
@@ -61,4 +63,8 @@ fn main() {
         geomean(&ratios_space)
     );
     println!("shape check: time-mux grows ~linearly; space-mux sits between.");
+    BenchJson::new("fig3_multiplexing")
+        .p50_s(percentile(&all_lats, 50.0))
+        .p99_s(percentile(&all_lats, 99.0))
+        .write();
 }

@@ -9,7 +9,7 @@
 //! run with the space-time scheduler + eviction showing the gap closing.
 
 use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
-use stgpu::util::bench::{banner, Table};
+use stgpu::util::bench::{banner, BenchJson, Table};
 use stgpu::workload::sgemm_tenants;
 
 fn main() {
@@ -46,6 +46,11 @@ fn main() {
         ]);
     }
     table.emit("fig4_predictability");
+    // Schema note (README "Performance"): fig4 has no latency axis —
+    // p99 carries the worst MPS straggler gap as a fraction.
+    BenchJson::new("fig4_predictability")
+        .p99_s(worst_even.max(worst_odd) / 100.0)
+        .write();
     println!(
         "worst MPS gap — even tenants: {worst_even:.1}% | odd tenants: {worst_odd:.1}% \
          (paper: up to 25%, odd worse)"

@@ -10,7 +10,7 @@
 use stgpu::gpusim::memory::{max_replicas, plan, DeploymentShape};
 use stgpu::gpusim::DeviceSpec;
 use stgpu::models::zoo;
-use stgpu::util::bench::{banner, Table};
+use stgpu::util::bench::{banner, BenchJson, Table};
 
 fn main() {
     banner(
@@ -42,6 +42,11 @@ fn main() {
         "max ResNet-50 replicas — process-per-replica: {wall_proc} (paper: 18), \
          explicit streams: {wall_streams} (paper: >= 60)"
     );
+    // Schema note: throughput carries the explicit-streams replica wall
+    // (replicas, not req/s) — the figure's headline scalar.
+    BenchJson::new("fig5_memory_wall")
+        .throughput(wall_streams as f64)
+        .write();
     println!(
         "shape check: contexts+workspaces dominate per-process deployments;\n\
          sharing one context leaves only weights+activations per replica."

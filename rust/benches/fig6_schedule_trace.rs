@@ -10,7 +10,7 @@
 //! from the simulator's trace capture.
 
 use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
-use stgpu::util::bench::{banner, fmt_secs, Table};
+use stgpu::util::bench::{banner, fmt_secs, BenchJson, Table};
 use stgpu::workload::sgemm_tenants;
 
 fn main() {
@@ -23,6 +23,7 @@ fn main() {
     let r = 4; // the figure draws R=4 problems
 
     let mut table = Table::new(&["policy", "launches", "makespan", "occupancy_%"]);
+    let mut makespans = Vec::new();
     for policy in [
         Policy::TimeMux,
         Policy::SpaceMuxStreams,
@@ -33,6 +34,7 @@ fn main() {
         let report = gpusim::run(&cfg, &sgemm_tenants(r, 1, shape));
         println!("--- {label} ---");
         println!("{}", report.trace.render_gantt(72));
+        makespans.push(report.trace.makespan());
         table.row(&[
             label.to_string(),
             report.trace.launches().to_string(),
@@ -41,6 +43,11 @@ fn main() {
         ]);
     }
     table.emit("fig6_schedule_trace");
+    // p50/p99 over the three policy makespans (best vs worst policy).
+    BenchJson::new("fig6_schedule_trace")
+        .p50_s(stgpu::util::stats::percentile(&makespans, 50.0))
+        .p99_s(stgpu::util::stats::percentile(&makespans, 99.0))
+        .write();
     println!(
         "shape check: time-mux = {r} serialized launches; streams = {r} \
          overlapped launches on partitioned SMs; space-time = ONE launch \

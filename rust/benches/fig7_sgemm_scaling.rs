@@ -13,7 +13,7 @@
 
 use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
 use stgpu::runtime::{HostTensor, PjrtEngine};
-use stgpu::util::bench::{banner, fmt_flops, Bencher, Table};
+use stgpu::util::bench::{banner, fmt_flops, BenchJson, Bencher, Table};
 use stgpu::util::prng::Rng;
 use stgpu::util::stats::geomean;
 use stgpu::workload::sgemm_tenants;
@@ -61,6 +61,11 @@ fn simulated_sweep() {
         geomean(&r_time),
         geomean(&r_space)
     );
+    // Schema note: throughput carries the geomean space-time/time-only
+    // speedup (the figure's headline ratio, not req/s).
+    BenchJson::new("fig7_sgemm_scaling")
+        .throughput(geomean(&r_time))
+        .write();
 }
 
 fn real_pjrt_merge() {

@@ -15,7 +15,7 @@
 //! placement keeps classes whole until they outgrow a fair share).
 
 use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
-use stgpu::util::bench::{banner, fmt_flops, Table};
+use stgpu::util::bench::{banner, fmt_flops, BenchJson, Table};
 use stgpu::workload::sgemm_tenants;
 
 fn main() {
@@ -72,6 +72,10 @@ fn main() {
         ]);
     }
     table.emit("fig8_multidevice_scaling");
+    // throughput = SpaceTime aggregate FLOP/s at the 4-device point.
+    BenchJson::new("fig8_multidevice_scaling")
+        .throughput(st_prev)
+        .write();
     println!(
         "shape check: SpaceTime aggregate throughput {} monotonically 1 -> 4 \
          devices\n(asserted in rust/tests/integration_multidevice.rs); \

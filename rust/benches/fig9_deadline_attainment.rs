@@ -31,7 +31,7 @@ use stgpu::coordinator::scheduler::{
     make_scheduler, make_scheduler_deadline_aware, Scheduler,
 };
 use stgpu::coordinator::{CostModel, InferenceRequest, QueueSet, ShapeClass};
-use stgpu::util::bench::{banner, Table};
+use stgpu::util::bench::{banner, BenchJson, Table};
 use stgpu::workload::arrivals::{ArrivalProcess, RequestTrace};
 
 const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 1024, n: 1024, k: 1024 };
@@ -286,4 +286,8 @@ fn main() {
         timemux.attainment(),
         timemux.throughput_rps(),
     );
+    BenchJson::new("fig9_deadline_attainment")
+        .throughput(edf.throughput_rps())
+        .slo_attainment(edf.attainment())
+        .write();
 }

@@ -116,6 +116,13 @@ pub struct ServerConfig {
     /// model's co-location interference term keeping predictions honest.
     /// 1 (default) is the classic serial round. Validated to [1, 16].
     pub lanes: usize,
+    /// Scheduling rounds allowed in flight per device shard: while round
+    /// N executes on the persistent lane workers, the driver drains
+    /// admission, plans, and marshals weights for round N+1. `1` is the
+    /// old serial round loop (plan → execute → collect, nothing
+    /// overlapped); `2` (default) overlaps one round of planning with
+    /// execution. Validated to [1, 8].
+    pub pipeline_depth: usize,
     /// How long the batcher waits to accumulate a batch, microseconds.
     pub batch_timeout_us: u64,
     /// Devices in the pool. Tenants are sharded across devices by the
@@ -151,6 +158,7 @@ impl Default for ServerConfig {
             edf: false,
             deadline_slack: 0.0,
             lanes: 1,
+            pipeline_depth: 2,
             batch_timeout_us: 200,
             devices: 1,
             queue_depth: 256,
@@ -200,6 +208,12 @@ impl ServerConfig {
                 return Err("lanes must be in [1, 16]".into());
             }
             cfg.lanes = v as usize;
+        }
+        if let Some(v) = server.get("pipeline_depth").and_then(|v| v.as_int()) {
+            if !(1..=8).contains(&v) {
+                return Err("pipeline_depth must be in [1, 8]".into());
+            }
+            cfg.pipeline_depth = v as usize;
         }
         if let Some(v) = server.get("batch_timeout_us").and_then(|v| v.as_int()) {
             cfg.batch_timeout_us = v as u64;
@@ -338,6 +352,26 @@ mod tests {
         let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
         assert!(bad("[server]\nlanes = 0").is_err());
         assert!(bad("[server]\nlanes = 17").is_err());
+    }
+
+    #[test]
+    fn pipeline_depth_parses_and_validates() {
+        let doc = TomlDoc::parse("[server]\npipeline_depth = 3").unwrap();
+        assert_eq!(ServerConfig::from_doc(&doc).unwrap().pipeline_depth, 3);
+        assert_eq!(
+            ServerConfig::default().pipeline_depth,
+            2,
+            "pipelined round loop by default"
+        );
+        let one = TomlDoc::parse("[server]\npipeline_depth = 1").unwrap();
+        assert_eq!(
+            ServerConfig::from_doc(&one).unwrap().pipeline_depth,
+            1,
+            "1 = the old serial round loop"
+        );
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[server]\npipeline_depth = 0").is_err());
+        assert!(bad("[server]\npipeline_depth = 9").is_err());
     }
 
     #[test]

@@ -91,6 +91,13 @@ pub struct DynamicBatcher {
     max_batch: usize,
     policy: PaddingPolicy,
     pub stats: BatcherStats,
+    /// Per-class staging buffers recycled across rounds ([`plan_into`]):
+    /// keys persist (the class set is small and stable under steady
+    /// load), values are drained each round but keep their capacity — so
+    /// grouping allocates nothing after warmup.
+    ///
+    /// [`plan_into`]: DynamicBatcher::plan_into
+    by_class: BTreeMap<ShapeClass, Vec<InferenceRequest>>,
 }
 
 impl DynamicBatcher {
@@ -107,7 +114,13 @@ impl DynamicBatcher {
         assert!(max_batch >= 1);
         buckets.sort_unstable();
         buckets.dedup();
-        Self { buckets, max_batch, policy, stats: BatcherStats::default() }
+        Self {
+            buckets,
+            max_batch,
+            policy,
+            stats: BatcherStats::default(),
+            by_class: BTreeMap::new(),
+        }
     }
 
     /// Powers-of-two buckets matching `python/compile/aot.py::R_BUCKETS`.
@@ -137,21 +150,32 @@ impl DynamicBatcher {
     /// sorted order, requests in the order given (schedulers drain
     /// round-robin for fairness).
     pub fn plan(&mut self, pending: Vec<InferenceRequest>) -> Vec<Launch> {
-        let mut by_class: BTreeMap<ShapeClass, Vec<InferenceRequest>> = BTreeMap::new();
-        for r in pending {
+        let mut pending = pending;
+        let mut launches = Vec::new();
+        self.plan_into(&mut pending, &mut launches);
+        launches
+    }
+
+    /// [`DynamicBatcher::plan`] over recycled buffers — the driver's
+    /// allocation-free round path: `pending` is drained (keeping its
+    /// capacity for the next round's staging) and launches are appended
+    /// to `out` (the arena's recycled vector). Only each launch's owned
+    /// entry vector is freshly allocated, because launches carry their
+    /// requests away with them.
+    pub fn plan_into(&mut self, pending: &mut Vec<InferenceRequest>, out: &mut Vec<Launch>) {
+        let mut by_class = std::mem::take(&mut self.by_class);
+        for r in pending.drain(..) {
             by_class.entry(r.class).or_default().push(r);
         }
-        let mut launches = Vec::new();
-        for (class, reqs) in by_class {
-            let chunk_cap = self.max_batch.min(self.largest_bucket());
-            let mut reqs = reqs.into_iter().peekable();
-            while reqs.peek().is_some() {
-                let chunk: Vec<InferenceRequest> =
-                    reqs.by_ref().take(chunk_cap).collect();
-                self.dispatch_chunk(class, chunk, &mut launches);
+        let chunk_cap = self.max_batch.min(self.largest_bucket());
+        for (class, reqs) in by_class.iter_mut() {
+            while !reqs.is_empty() {
+                let take = chunk_cap.min(reqs.len());
+                let chunk: Vec<InferenceRequest> = reqs.drain(..take).collect();
+                self.dispatch_chunk(*class, chunk, out);
             }
         }
-        launches
+        self.by_class = by_class;
     }
 
     /// Split an already-planned launch after its first `k` entries **in
@@ -357,6 +381,40 @@ mod tests {
         let zero = Launch { class: gemm(64), entries: vec![], r_bucket: 0 };
         assert_eq!(zero.padded_lanes(), 0);
         assert_eq!(zero.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn plan_into_matches_plan_and_recycles_staging() {
+        let mk = |n: usize| -> Vec<InferenceRequest> {
+            (0..n).map(|i| req(i as u64, i % 3, gemm(64))).collect()
+        };
+        let mut a = DynamicBatcher::new(DynamicBatcher::default_buckets(), 4);
+        let mut b = DynamicBatcher::new(DynamicBatcher::default_buckets(), 4);
+        let mut pending = mk(10);
+        let mut out = Vec::new();
+        a.plan_into(&mut pending, &mut out);
+        let reference = b.plan(mk(10));
+        assert!(pending.is_empty(), "plan_into drains the staging vector");
+        assert_eq!(out.len(), reference.len());
+        for (x, y) in out.iter().zip(&reference) {
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.r_bucket, y.r_bucket);
+            let ids = |l: &Launch| l.entries.iter().map(|e| e.id).collect::<Vec<_>>();
+            assert_eq!(ids(x), ids(y));
+        }
+        assert_eq!(a.stats, b.stats);
+        // Steady rounds reuse the per-class staging buffers: capacity of
+        // the recycled vectors is flat after the first round.
+        pending.extend(mk(10));
+        out.clear();
+        a.plan_into(&mut pending, &mut out);
+        let cap = pending.capacity();
+        for _ in 0..8 {
+            pending.extend(mk(10));
+            out.clear();
+            a.plan_into(&mut pending, &mut out);
+        }
+        assert_eq!(pending.capacity(), cap, "staging capacity must be stable");
     }
 
     #[test]

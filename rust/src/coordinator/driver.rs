@@ -2,43 +2,83 @@
 //! super-kernel execution → SLO monitoring → metrics, across a pool of
 //! one or more devices.
 //!
-//! This is the leader's request path. It is deliberately synchronous and
-//! deterministic per round (the threaded frontend in `server/` pumps it);
-//! every round, for **each device shard**:
-//!   1. the shard's scheduler drains its queued problems into a launch plan
-//!      (with `edf` on, planned against the shard's cost model: launches
-//!      ordered by urgency and split to protect deadlines),
-//!   2. each launch gathers operands, executes ONE PJRT executable, and
-//!      scatters outputs,
-//!   3. completions feed the SLO monitor (latency EWMA + deadline
-//!      hit/miss), the metrics, and — with `edf` on — the shard's
-//!      launch-latency predictor (measured marshal+execute duration),
-//!   4. periodically the monitor evicts stragglers (relative to their
-//!      device peers) and their queues drain.
+//! ## Pipelined persistent-lane execution
 //!
-//! With `edf` on, admission additionally sheds requests whose minimal
-//! immediate launch is already predicted past their deadline
-//! ([`Reject::DeadlineInfeasible`], 504-style).
+//! Execution runs on a **persistent per-lane worker pool** per device
+//! shard ([`LanePool`]): one worker thread per spatial lane, spawned once
+//! at construction, fed through per-lane FIFO work queues, joined on
+//! shutdown. The old driver re-spawned a `thread::scope` per round and
+//! ran plan → execute strictly serially; now the round loop is a
+//! **software pipeline** of depth `pipeline_depth`:
 //!
-//! With `lanes > 1` (space-time only), a round's launches are balanced
-//! across **spatial execution lanes** by the scheduler and executed
-//! *concurrently* here — one worker thread per lane over the shared PJRT
-//! engine, all feeding one measurement channel. Every measured duration is
-//! tagged with the round's resident lane count so the cost model's
-//! co-location interference stretch calibrates from real overlapped
-//! launches; per-lane launch counts and busy time ride the device
-//! snapshot.
+//! * each [`Coordinator::run_round`] call plans round N+1 (drains
+//!   admission, runs the EDF/spatial-lane planner, **marshals weights**
+//!   through the fusion cache) and dispatches it to the lane workers,
+//! * then collects completed launches until at most `pipeline_depth - 1`
+//!   rounds remain in flight — so while round N executes on the workers,
+//!   the driver is already planning and marshaling round N+1.
 //!
-//! Sharding (the multi-device generalization): tenants are assigned to
-//! devices at registration time by the [`placement`] layer — least-loaded
-//! with shape-class affinity, so fusion opportunities are never split
-//! across shards. Each shard owns an independent scheduler instance and a
-//! bounded [`QueueSet`]; admission additionally enforces a **global** cap
-//! (`queue_cap`) across the whole pool, shedding with
-//! [`Reject::Overloaded`] instead of growing without bound.
+//! Every dispatched launch is **round-tagged** (round id + the lane count
+//! its round planned to keep resident); the tag rides the completion
+//! back, so measurements, deadline accounting, and cost-model feedback
+//! are attributed to the correct round even while rounds overlap. The
+//! tag is the round's *planned intra-round* concurrency: at depth > 1 a
+//! launch may additionally overlap the tail of the previous round on
+//! other lanes — that residue is part of the pipelined substrate the
+//! model calibrates against. The exception is the periodic
+//! solo-calibration probe ([`SOLO_PROBE_EVERY`]), whose measurements
+//! exist precisely to keep the solo track clean: probe rounds drain the
+//! shard first and are collected before the next plan, so they execute
+//! genuinely un-overlapped (a deliberate 1-in-32 pipeline bubble).
+//! `pipeline_depth = 1` collects each round before the next plan — the
+//! old serial driver's behavior (same launch plans, same completion
+//! processing order on a single lane).
+//!
+//! The round hot path is **allocation-free after warmup**: each shard's
+//! [`RoundArena`] recycles the plan's launch and lane vectors across
+//! rounds (the scheduler fills them in place via
+//! [`Scheduler::plan_round_into`]; dispatching drains them, keeping
+//! capacity), the scheduler and batcher keep their own drain/bucketing
+//! scratch, tenant metric handles are interned by id (no per-event name
+//! lookup or `String` clone), and completions stream straight into
+//! responses — no per-round result buffers or lane-group vectors. The
+//! documented exception is per-launch *owned* data: each launch's entry
+//! vector (launches carry their requests away with them) and, for
+//! weighted kinds, the fusion-cache lookup key. The arena counts buffer
+//! growths; after warmup that counter stays flat (asserted in tests).
+//!
+//! Snapshots read **atomic mirrors** (per-lane launch/busy counters and
+//! cost-model calibration, updated at completion processing) instead of
+//! locking each shard's cost model — `snapshot()`/status JSON never
+//! contends with planning or execution.
+//!
+//! ## Scheduling semantics (unchanged)
+//!
+//! Every round, for each device shard: the shard's scheduler drains its
+//! queued problems into a launch plan (with `edf` on, planned against the
+//! shard's cost model: launches ordered by urgency and split to protect
+//! deadlines); each launch gathers operands, executes ONE PJRT
+//! executable, and scatters outputs; completions feed the SLO monitor,
+//! the metrics, and — with `edf` on — the shard's launch-latency
+//! predictor; periodically the monitor evicts stragglers. With `edf` on,
+//! admission sheds requests whose minimal immediate launch is already
+//! predicted past their deadline ([`Reject::DeadlineInfeasible`]). With
+//! `lanes > 1` (space-time only), a round's launches are balanced across
+//! spatial lanes and executed concurrently, each measurement tagged with
+//! the round's resident lane count so the cost model's interference
+//! stretch calibrates from real overlapped launches.
+//!
+//! Sharding: tenants are assigned to devices at registration time by the
+//! [`placement`] layer — least-loaded with shape-class affinity. Each
+//! shard owns an independent scheduler instance, a bounded [`QueueSet`],
+//! and its own fusion cache (placement keeps tenants device-disjoint, so
+//! weight-cache keys never span shards). Admission additionally enforces
+//! a **global** cap (`queue_cap`), shedding with [`Reject::Overloaded`].
 //!
 //! [`placement`]: crate::coordinator::placement
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -47,49 +87,196 @@ use anyhow::Result;
 use crate::config::ServerConfig;
 use crate::coordinator::costmodel::{CostModel, SharedCostModel};
 use crate::coordinator::fusion_cache::{FusionCache, FusionCacheStats};
+use crate::coordinator::lanepool::{Completion, LanePool, LaunchExecutor, PjrtExecutor, WorkItem};
 use crate::coordinator::monitor::{Eviction, MonitorConfig, SloMonitor};
 use crate::coordinator::placement::DevicePlacer;
 use crate::coordinator::queue::QueueSet;
 use crate::coordinator::request::{
     InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass,
 };
-use crate::coordinator::scheduler::Scheduler;
-use crate::coordinator::superkernel::{Flavor, LaunchResult, SuperKernelExec};
+use crate::coordinator::scheduler::{RoundPlan, Scheduler};
+use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
 use crate::coordinator::tenant::TenantRegistry;
-use crate::metrics::{DeviceSnapshot, MetricsRegistry};
+use crate::metrics::{DeviceSnapshot, MetricsRegistry, TenantMetrics};
 use crate::runtime::{HostTensor, PjrtEngine};
 use crate::util::prng::Rng;
 
 /// Outcome of one scheduling round (all devices).
+///
+/// With `pipeline_depth > 1`, `responses` belong to the round(s) whose
+/// completions were collected this call — typically the round *dispatched
+/// by the previous call* — while `launches` counts the round planned and
+/// dispatched now. Callers that need every response drained use
+/// [`Coordinator::run_until_drained`] (or loop while
+/// [`Coordinator::in_flight_rounds`] is non-zero).
 #[derive(Debug, Default)]
 pub struct RoundOutcome {
     pub responses: Vec<InferenceResponse>,
     pub rejections: Vec<(RequestId, Reject)>,
     pub evictions: Vec<Eviction>,
-    /// Total launches across the pool this round.
+    /// Launches planned and dispatched across the pool this round.
     pub launches: usize,
     /// Launches per device this round (index == device id).
     pub launches_per_device: Vec<usize>,
 }
 
-/// One device shard: its own admission queues, scheduler instance, and
-/// lifetime counters.
+/// Reusable per-shard round-plan storage: the scheduler fills the plan in
+/// place, dispatch drains the launch vector (keeping its capacity), and
+/// the next round reuses both vectors. `grows` counts capacity growths
+/// *after warmup* — the allocation counter the hot-path tests pin to
+/// zero under steady load.
+#[derive(Debug, Default)]
+pub struct RoundArena {
+    plan: RoundPlan,
+    launches_cap: usize,
+    lane_of_cap: usize,
+    warmed: bool,
+    grows: u64,
+}
+
+impl RoundArena {
+    /// Reset the recycled plan for a new round and hand it out.
+    pub fn begin(&mut self) -> &mut RoundPlan {
+        self.plan.launches.clear();
+        self.plan.lane_of.clear();
+        self.plan.n_lanes = 0;
+        self.plan.drained = 0;
+        self.plan.deadline_splits = 0;
+        &mut self.plan
+    }
+
+    /// Account this round's buffer capacities. The first round warms the
+    /// arena; any later growth increments the counter.
+    pub fn finish(&mut self) {
+        let lc = self.plan.launches.capacity();
+        let oc = self.plan.lane_of.capacity();
+        if self.warmed && (lc > self.launches_cap || oc > self.lane_of_cap) {
+            self.grows += 1;
+        }
+        self.launches_cap = self.launches_cap.max(lc);
+        self.lane_of_cap = self.lane_of_cap.max(oc);
+        self.warmed = true;
+    }
+
+    /// Buffer growths after warmup (0 == the round hot path reused its
+    /// arena without heap growth).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+}
+
+/// Lock-free mirror of the counters `snapshot()` reads: per-lane
+/// launch/busy totals and the cost model's calibration errors, updated by
+/// the driver at completion processing. Status polling reads these
+/// atomics instead of locking the shard's cost model or walking its lane
+/// tracks — a snapshot can never stall planning or execution, whichever
+/// thread it runs on.
+#[derive(Debug)]
+struct SnapshotMirror {
+    /// EWMA relative prediction error, as f64 bits.
+    calib_err: AtomicU64,
+    lane_launches: Vec<AtomicU64>,
+    /// Busy time per lane in nanoseconds.
+    lane_busy_ns: Vec<AtomicU64>,
+    /// Per-lane-count calibration error, f64 bits, indexed by concurrent
+    /// lane count; [`UNOBSERVED`] until that count has been measured.
+    lane_calib: Vec<AtomicU64>,
+}
+
+const UNOBSERVED: u64 = u64::MAX;
+
+impl SnapshotMirror {
+    fn new(lanes: usize) -> Self {
+        Self {
+            calib_err: AtomicU64::new(0.0f64.to_bits()),
+            lane_launches: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            lane_busy_ns: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            lane_calib: (0..=lanes).map(|_| AtomicU64::new(UNOBSERVED)).collect(),
+        }
+    }
+
+    fn record_launch(&self, lane: usize, busy_s: f64) {
+        let lane = lane.min(self.lane_launches.len().saturating_sub(1));
+        self.lane_launches[lane].fetch_add(1, Ordering::Relaxed);
+        self.lane_busy_ns[lane]
+            .fetch_add((busy_s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    fn record_calibration(&self, err: f64) {
+        self.calib_err.store(err.to_bits(), Ordering::Relaxed);
+    }
+
+    fn record_lane_calibration(&self, lanes: usize, err: f64) {
+        // Only overlapped counts (>= 2) appear in the per-lane table; the
+        // solo error is `calib_err`.
+        if lanes >= 2 && lanes < self.lane_calib.len() {
+            self.lane_calib[lanes].store(err.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    fn calibration_error(&self) -> f64 {
+        f64::from_bits(self.calib_err.load(Ordering::Relaxed))
+    }
+
+    fn lane_launches(&self) -> Vec<u64> {
+        self.lane_launches.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    fn lane_busy_s(&self) -> Vec<f64> {
+        self.lane_busy_ns
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
+            .collect()
+    }
+
+    fn lane_calibration(&self) -> Vec<(usize, f64)> {
+        self.lane_calib
+            .iter()
+            .enumerate()
+            .filter_map(|(l, a)| {
+                let bits = a.load(Ordering::Relaxed);
+                if bits == UNOBSERVED {
+                    None
+                } else {
+                    Some((l, f64::from_bits(bits)))
+                }
+            })
+            .collect()
+    }
+}
+
+/// A dispatched round a shard has not fully collected yet.
+#[derive(Debug)]
+struct RoundTicket {
+    round: u64,
+    outstanding: usize,
+}
+
+/// One device shard: its own admission queues, scheduler instance,
+/// persistent lane workers, fusion cache, and lifetime counters.
 struct DeviceShard {
     queues: QueueSet,
     scheduler: Box<dyn Scheduler>,
     /// Launch-latency predictor for this device (Some iff EDF planning or
     /// multi-lane execution is on): shared with the shard's scheduler, fed
-    /// by measured launch durations after every execution.
+    /// by measured launch durations as completions are collected.
     cost_model: Option<SharedCostModel>,
+    /// Persistent per-lane workers (spawned once, joined on drop).
+    pool: LanePool,
+    /// Rounds dispatched to the pool but not yet fully collected, oldest
+    /// first.
+    tickets: VecDeque<RoundTicket>,
+    /// Device-resident stacked weight operands. Per shard: placement
+    /// keeps tenants device-disjoint, so cache keys never span shards and
+    /// shards never contend on each other's weight marshaling.
+    fusion_cache: Mutex<FusionCache>,
+    arena: RoundArena,
+    mirror: SnapshotMirror,
     launches: u64,
     superkernel_launches: u64,
     drained: u64,
     /// Fused launches the EDF planner split to protect a deadline.
     deadline_splits: u64,
-    /// Launches executed per spatial lane (index == lane id).
-    lane_launches: Vec<u64>,
-    /// Busy seconds (marshal + execute) accumulated per spatial lane.
-    lane_busy_s: Vec<f64>,
     flops: f64,
 }
 
@@ -97,15 +284,22 @@ struct DeviceShard {
 pub struct Coordinator {
     engine: Arc<PjrtEngine>,
     pub tenants: TenantRegistry,
+    /// Metric handles interned by tenant id at construction — the hot
+    /// path never does a name lookup or clones a `String` per event.
+    tenant_metrics: Vec<Arc<TenantMetrics>>,
     shards: Vec<DeviceShard>,
     placer: DevicePlacer<ShapeClass>,
     /// Global admission cap across all shards.
     queue_cap: usize,
     /// Deadline-aware (EDF) planning on (space-time only).
     edf: bool,
-    /// Spatial execution lanes per device (space-time only; 1 == serial
-    /// rounds, the pre-lane driver).
+    /// Spatial execution lanes per device (space-time only; 1 == one
+    /// worker per shard, launches execute serially in plan order).
     lanes: usize,
+    /// Rounds allowed in flight per shard: 1 == serial (collect each
+    /// round before the next plan), 2 == plan/marshal round N+1 while
+    /// round N executes.
+    pipeline_depth: usize,
     /// Safety margin (seconds) for deadline budgets and admission checks.
     deadline_slack: f64,
     /// Requests judged deadline-infeasible at admission. Every
@@ -115,16 +309,14 @@ pub struct Coordinator {
     /// forever (no launches → no observations → no recovery).
     infeasible_seen: u64,
     flavor: Flavor,
-    /// Behind a mutex because spatial lanes execute concurrently; the lock
-    /// is held only for lookups/builds, never across a PJRT execution.
-    fusion_cache: Mutex<FusionCache>,
     monitor: SloMonitor,
     pub metrics: Arc<MetricsRegistry>,
     next_id: RequestId,
     rounds_since_check: u32,
     /// Monitor window length, in scheduling rounds.
     check_every: u32,
-    /// Lifetime round counter (drives the solo-calibration probe cadence).
+    /// Lifetime round counter (drives round tags and the solo-calibration
+    /// probe cadence).
     rounds_total: u64,
     started: Instant,
 }
@@ -139,8 +331,8 @@ const SOLO_PROBE_EVERY: u64 = 32;
 
 impl Coordinator {
     /// Build from config: loads the manifest, registers tenants, places
-    /// them on the device pool, picks the scheduler, and pre-warms the
-    /// executables the workload will need.
+    /// them on the device pool, picks the scheduler, spawns the per-shard
+    /// lane workers, and pre-warms the executables the workload will need.
     pub fn new(cfg: &ServerConfig) -> Result<Self> {
         Self::with_flavor(cfg, Flavor::Xla)
     }
@@ -212,6 +404,8 @@ impl Coordinator {
         let spacetime = cfg.scheduler == crate::config::SchedulerKind::SpaceTime;
         let edf = cfg.edf && spacetime;
         let lanes = if spacetime { cfg.lanes.max(1) } else { 1 };
+        let executor: Arc<dyn LaunchExecutor> =
+            Arc::new(PjrtExecutor::new(engine.clone(), flavor));
         let shards = (0..devices)
             .map(|_| {
                 let cost_model: Option<SharedCostModel> = if edf || lanes > 1 {
@@ -233,12 +427,15 @@ impl Coordinator {
                     queues: QueueSet::new(tenants.len(), cfg.queue_depth),
                     scheduler,
                     cost_model,
+                    pool: LanePool::new(lanes, executor.clone()),
+                    tickets: VecDeque::new(),
+                    fusion_cache: Mutex::new(FusionCache::new(256)),
+                    arena: RoundArena::default(),
+                    mirror: SnapshotMirror::new(lanes),
                     launches: 0,
                     superkernel_launches: 0,
                     drained: 0,
                     deadline_splits: 0,
-                    lane_launches: vec![0; lanes],
-                    lane_busy_s: vec![0.0; lanes],
                     flops: 0.0,
                 }
             })
@@ -255,20 +452,24 @@ impl Coordinator {
             &tenants,
         )
         .with_device_map(device_map);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let tenant_metrics: Vec<Arc<TenantMetrics>> =
+            tenants.iter().map(|t| metrics.tenant(&t.name)).collect();
         Ok(Self {
             engine,
             tenants,
+            tenant_metrics,
             shards,
             placer,
             queue_cap: cfg.queue_cap,
             edf,
             lanes,
+            pipeline_depth: cfg.pipeline_depth.max(1),
             deadline_slack: cfg.deadline_slack.max(0.0),
             infeasible_seen: 0,
             flavor,
-            fusion_cache: Mutex::new(FusionCache::new(256)),
             monitor,
-            metrics: Arc::new(MetricsRegistry::new()),
+            metrics,
             next_id: 0,
             rounds_since_check: 0,
             check_every: 16,
@@ -309,6 +510,24 @@ impl Coordinator {
         self.lanes
     }
 
+    /// Rounds allowed in flight per shard (1 == serial round loop).
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    /// Rounds dispatched to lane workers but not yet fully collected,
+    /// summed across shards. Drain loops run until this AND `pending()`
+    /// are both zero.
+    pub fn in_flight_rounds(&self) -> usize {
+        self.shards.iter().map(|s| s.tickets.len()).sum()
+    }
+
+    /// Round-arena buffer growths after warmup, summed across shards
+    /// (0 == the hot path recycled its buffers without heap growth).
+    pub fn arena_grows(&self) -> u64 {
+        self.shards.iter().map(|s| s.arena.grows()).sum()
+    }
+
     /// The launch-latency predictor of one device shard (None when EDF
     /// planning is off or the device is unknown).
     pub fn cost_model(&self, device: usize) -> Option<&SharedCostModel> {
@@ -339,31 +558,34 @@ impl Coordinator {
         self.shards.iter().map(|s| s.queues.total_pending()).sum()
     }
 
-    /// Per-device counters (index == device id).
+    /// Per-device counters (index == device id). Reads the atomic
+    /// snapshot mirrors — never locks a cost model, so status polling
+    /// cannot stall planning or lane workers mid-round.
     pub fn device_snapshots(&self) -> Vec<DeviceSnapshot> {
         self.shards
             .iter()
             .enumerate()
-            .map(|(d, s)| DeviceSnapshot {
-                device: d,
-                tenants: self.placer.members(d).len() as u64,
-                pending: s.queues.total_pending() as u64,
-                launches: s.launches,
-                superkernel_launches: s.superkernel_launches,
-                drained: s.drained,
-                shed: s.queues.shed,
-                deadline_splits: s.deadline_splits,
-                cost_calibration_error: s
-                    .cost_model
-                    .as_ref()
-                    .map_or(0.0, |cm| cm.lock().unwrap().calibration_error()),
-                lane_launches: s.lane_launches.clone(),
-                lane_busy_s: s.lane_busy_s.clone(),
-                lane_calibration: s
-                    .cost_model
-                    .as_ref()
-                    .map_or_else(Vec::new, |cm| cm.lock().unwrap().lane_calibration()),
-                flops: s.flops,
+            .map(|(d, s)| {
+                let cache = s.fusion_cache.lock().unwrap();
+                DeviceSnapshot {
+                    device: d,
+                    tenants: self.placer.members(d).len() as u64,
+                    pending: s.queues.total_pending() as u64,
+                    launches: s.launches,
+                    superkernel_launches: s.superkernel_launches,
+                    drained: s.drained,
+                    shed: s.queues.shed,
+                    deadline_splits: s.deadline_splits,
+                    cost_calibration_error: s.mirror.calibration_error(),
+                    lane_launches: s.mirror.lane_launches(),
+                    lane_busy_s: s.mirror.lane_busy_s(),
+                    lane_calibration: s.mirror.lane_calibration(),
+                    cache_hits: cache.stats.hits,
+                    cache_misses: cache.stats.misses,
+                    cache_evictions: cache.stats.evictions,
+                    cache_resident: cache.len() as u64,
+                    flops: s.flops,
+                }
             })
             .collect()
     }
@@ -382,6 +604,20 @@ impl Coordinator {
         })?)
     }
 
+    /// Intern metric handles for tenants registered after construction
+    /// (`tenants` is public and `TenantRegistry::register` is callable):
+    /// the hot path indexes `tenant_metrics` by id, so the vector must
+    /// cover the whole registry. One length comparison when nothing
+    /// changed.
+    fn intern_tenant_metrics(&mut self) {
+        for t in self.tenant_metrics.len()..self.tenants.len() {
+            let handle = self
+                .metrics
+                .tenant(&self.tenants.get(t).expect("registry is index-dense").name);
+            self.tenant_metrics.push(handle);
+        }
+    }
+
     /// Submit a request for `tenant` with the given payload tensors.
     ///
     /// Admission is bounded twice: a global cap across the pool
@@ -392,12 +628,13 @@ impl Coordinator {
         tenant: usize,
         payload: Vec<HostTensor>,
     ) -> Result<RequestId, Reject> {
+        self.intern_tenant_metrics();
         let t = self
             .tenants
             .get(tenant)
             .ok_or_else(|| Reject::BadRequest(format!("unknown tenant {tenant}")))?;
         if !t.is_servable() {
-            self.metrics.tenant(&t.name).record_rejection();
+            self.tenant_metrics[tenant].record_rejection();
             return Err(Reject::TenantEvicted);
         }
         let shapes = t.spec.payload_shapes();
@@ -416,7 +653,6 @@ impl Coordinator {
                 )));
             }
         }
-        let name = t.name.clone();
         let slo_ms = t.slo_ms;
         let class = t.spec.shape_class();
         let device = self.placer.device_of(tenant);
@@ -438,7 +674,7 @@ impl Coordinator {
                     // misses its deadline — which is counted, not hidden.
                     const PROBE_EVERY: u64 = 16;
                     if self.infeasible_seen % PROBE_EVERY != 0 {
-                        self.metrics.tenant(&name).record_rejection();
+                        self.tenant_metrics[tenant].record_rejection();
                         return Err(Reject::DeadlineInfeasible);
                     }
                 }
@@ -447,7 +683,7 @@ impl Coordinator {
         // Global admission cap across every shard: shed, don't grow.
         if self.pending() >= self.queue_cap {
             self.shards[device].queues.record_shed();
-            self.metrics.tenant(&name).record_rejection();
+            self.tenant_metrics[tenant].record_rejection();
             return Err(Reject::Overloaded);
         }
         let id = self.next_id;
@@ -464,7 +700,7 @@ impl Coordinator {
         match self.shards[device].queues.push(req) {
             Ok(()) => Ok(id),
             Err(rej) => {
-                self.metrics.tenant(&name).record_rejection();
+                self.tenant_metrics[tenant].record_rejection();
                 Err(rej)
             }
         }
@@ -484,147 +720,43 @@ impl Coordinator {
             .unwrap_or_default()
     }
 
-    /// Run one scheduling round: one `RoundPlan` per device, executed
-    /// shard by shard (the pool's devices are independent; on real
-    /// multi-GPU hardware these launches run concurrently — the CPU-PJRT
-    /// substrate executes them back-to-back, which preserves scheduling
-    /// semantics and per-device accounting). Within a shard, a plan that
-    /// spans several spatial lanes executes them **concurrently**: one
-    /// worker thread per lane, all feeding one measurement channel whose
-    /// results calibrate the shard's cost model (solo latency AND the
-    /// co-location interference stretch at the observed lane count).
+    /// Run one pipelined scheduling round: per device shard, plan round
+    /// N+1 and dispatch it to the persistent lane workers (pre-marshaling
+    /// weights through the shard's fusion cache — the expensive upload
+    /// overlaps round N's execution), then collect completions until at
+    /// most `pipeline_depth - 1` rounds remain in flight. Responses in
+    /// the outcome come from the collected round(s); see [`RoundOutcome`].
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         let mut outcome = RoundOutcome {
             launches_per_device: vec![0; self.shards.len()],
             ..Default::default()
         };
-        let exec = SuperKernelExec::new(&self.engine, self.flavor);
         self.rounds_total += 1;
+        let round = self.rounds_total;
         let probe_solo = self.lanes > 1 && self.rounds_total % SOLO_PROBE_EVERY == 0;
-        for (device, shard) in self.shards.iter_mut().enumerate() {
-            let now = Instant::now();
-            let plan = shard.scheduler.plan_round_at(&mut shard.queues, now);
-            outcome.launches += plan.launches.len();
-            outcome.launches_per_device[device] = plan.launches.len();
-            shard.launches += plan.launches.len() as u64;
-            shard.drained += plan.drained as u64;
-            shard.deadline_splits += plan.deadline_splits as u64;
-            if plan.launches.is_empty() {
-                continue;
+        if probe_solo {
+            // A solo probe's measurements must be genuinely un-overlapped
+            // or they would pollute the solo track with interference from
+            // rounds still executing: drain EVERY shard first (they share
+            // one underlying engine, so even another shard's in-flight
+            // round would contend), and below each shard's probe is
+            // collected before the next dispatches — a deliberate
+            // pipeline bubble once every SOLO_PROBE_EVERY rounds.
+            for device in 0..self.shards.len() {
+                self.collect_rounds(device, 0, &mut outcome)?;
             }
-            let (hits_before, misses_before) = {
-                let c = self.fusion_cache.lock().unwrap();
-                (c.stats.hits, c.stats.misses)
-            };
-            // Execute the plan: serial when everything shares one lane (or
-            // on a solo-calibration probe round), overlapped lane workers
-            // otherwise. Either way `results[i]` holds launch i's outcome
-            // and completion instant.
-            let lanes_used = if probe_solo { 1 } else { plan.lanes_used() };
-            let mut results: Vec<Option<(LaunchResult, Instant)>> = Vec::new();
-            results.resize_with(plan.launches.len(), || None);
-            if lanes_used <= 1 {
-                for (i, launch) in plan.launches.iter().enumerate() {
-                    let res = exec.execute(launch, &self.tenants, &self.fusion_cache)?;
-                    results[i] = Some((res, Instant::now()));
-                }
+        }
+        for device in 0..self.shards.len() {
+            let dispatched = self.dispatch_round(device, round, probe_solo, &mut outcome)?;
+            // With nothing new dispatched (idle shard) there is nothing to
+            // overlap with: collect every outstanding round so responses
+            // are never held hostage to a lull in arrivals.
+            let allowed = if dispatched && !probe_solo {
+                self.pipeline_depth - 1
             } else {
-                let mut groups: Vec<Vec<usize>> = vec![Vec::new(); plan.n_lanes];
-                for i in 0..plan.launches.len() {
-                    groups[plan.lane(i).min(plan.n_lanes - 1)].push(i);
-                }
-                let (tx, rx) = std::sync::mpsc::channel();
-                let launches = &plan.launches;
-                let tenants = &self.tenants;
-                let cache = &self.fusion_cache;
-                let exec_ref = &exec;
-                std::thread::scope(|scope| {
-                    for group in groups.iter().filter(|g| !g.is_empty()) {
-                        let tx = tx.clone();
-                        scope.spawn(move || {
-                            for &i in group {
-                                let res = exec_ref.execute(&launches[i], tenants, cache);
-                                let done = Instant::now();
-                                if tx.send((i, res, done)).is_err() {
-                                    return;
-                                }
-                            }
-                        });
-                    }
-                });
-                drop(tx);
-                // The scope joined every worker: the channel holds one
-                // message per launch. The first execution error aborts the
-                // round, mirroring the serial path.
-                for (i, res, done) in rx {
-                    results[i] = Some((res?, done));
-                }
-            }
-            // Aggregate cache accounting (per-launch attribution is
-            // meaningless once launches overlap).
-            {
-                let c = self.fusion_cache.lock().unwrap();
-                for _ in hits_before..c.stats.hits {
-                    self.metrics.record_cache(true);
-                }
-                for _ in misses_before..c.stats.misses {
-                    self.metrics.record_cache(false);
-                }
-            }
-            for (i, launch) in plan.launches.iter().enumerate() {
-                let (res, done) = results[i].take().expect("every launch executed");
-                let fused = launch.entries.len();
-                if fused > 1 {
-                    self.metrics.record_superkernel_launch();
-                    shard.superkernel_launches += 1;
-                } else {
-                    self.metrics.record_kernel_launch();
-                }
-                // Calibrate this shard's launch-latency predictor with the
-                // measured end-to-end launch duration (marshal + execute —
-                // what a deadline actually waits on), tagged with how many
-                // lanes were concurrently resident so the interference
-                // stretch learns from overlapped rounds.
-                if let Some(cm) = &shard.cost_model {
-                    cm.lock().unwrap().observe_concurrent(
-                        launch.class,
-                        launch.r_bucket,
-                        lanes_used,
-                        res.service_s + res.marshal_s,
-                    );
-                }
-                let lane = plan.lane(i).min(shard.lane_launches.len().saturating_sub(1));
-                shard.lane_launches[lane] += 1;
-                shard.lane_busy_s[lane] += res.service_s + res.marshal_s;
-                for (entry, output) in launch.entries.iter().zip(res.outputs) {
-                    let latency_s = done.duration_since(entry.arrived).as_secs_f64();
-                    // One deadline verdict per response, fed to BOTH the
-                    // metrics registry (status JSON / serve table) and the
-                    // SLO monitor (eviction-adjacent reporting) from this
-                    // single point so the two attainment views can't
-                    // diverge.
-                    let met = done <= entry.deadline;
-                    let tenant = self.tenants.get(entry.tenant).expect("tenant");
-                    let handle = self.metrics.tenant(&tenant.name);
-                    handle.record_completion(
-                        (latency_s * 1e9) as u64,
-                        (res.service_s * 1e9) as u64,
-                        entry.class.flops(),
-                    );
-                    handle.record_deadline(met);
-                    shard.flops += entry.class.flops();
-                    self.monitor.observe(entry.tenant, res.service_s);
-                    self.monitor.observe_deadline(entry.tenant, met);
-                    outcome.responses.push(InferenceResponse {
-                        id: entry.id,
-                        tenant: entry.tenant,
-                        output,
-                        latency_s,
-                        service_s: res.service_s,
-                        fused_r: fused,
-                    });
-                }
-            }
+                0
+            };
+            self.collect_rounds(device, allowed, &mut outcome)?;
         }
         // Periodic straggler check (stragglers judged against same-device
         // peers — see SloMonitor::with_device_map).
@@ -633,14 +765,17 @@ impl Coordinator {
             self.rounds_since_check = 0;
             let evictions = self.monitor.check(&mut self.tenants);
             for ev in &evictions {
-                let name = self.tenants.get(ev.tenant).expect("tenant").name.clone();
-                self.metrics.tenant(&name).record_eviction();
+                self.tenant_metrics[ev.tenant].record_eviction();
                 // Drop the evicted tenant's device-resident weights, fail
                 // everything it still has queued, and release its load
                 // from the placement accounting (a later re-registration
                 // re-joins its class via `DevicePlacer::readmit`).
-                self.fusion_cache.lock().unwrap().invalidate_tenant(ev.tenant);
                 let device = self.placer.device_of(ev.tenant);
+                self.shards[device]
+                    .fusion_cache
+                    .lock()
+                    .unwrap()
+                    .invalidate_tenant(ev.tenant);
                 for req in self.shards[device].queues.drain_tenant(ev.tenant) {
                     outcome.rejections.push((req.id, Reject::TenantEvicted));
                 }
@@ -651,10 +786,225 @@ impl Coordinator {
         Ok(outcome)
     }
 
-    /// Run rounds until all queues drain; returns every response.
+    /// Plan one shard's round in its recycled arena and dispatch every
+    /// launch to the lane workers, resolving weight operands through the
+    /// shard's fusion cache at dispatch time. Returns whether anything
+    /// was dispatched.
+    fn dispatch_round(
+        &mut self,
+        device: usize,
+        round: u64,
+        probe_solo: bool,
+        outcome: &mut RoundOutcome,
+    ) -> Result<bool> {
+        let now = Instant::now();
+        let shard = &mut self.shards[device];
+        let plan = shard.arena.begin();
+        shard.scheduler.plan_round_into(&mut shard.queues, now, plan);
+        let planned = plan.launches.len();
+        outcome.launches += planned;
+        outcome.launches_per_device[device] = planned;
+        shard.launches += planned as u64;
+        shard.drained += plan.drained as u64;
+        shard.deadline_splits += plan.deadline_splits as u64;
+        if planned == 0 {
+            shard.arena.finish();
+            return Ok(false);
+        }
+        // The round tag: how many lanes this round keeps concurrently
+        // resident (1 on a solo-calibration probe round, which routes the
+        // whole plan through lane 0 so launches execute un-overlapped).
+        let lanes_used = if probe_solo { 1 } else { plan.lanes_used() };
+        let n_lanes = plan.n_lanes;
+        let (hits_before, misses_before) = {
+            let c = shard.fusion_cache.lock().unwrap();
+            (c.stats.hits, c.stats.misses)
+        };
+        let lane_of = std::mem::take(&mut plan.lane_of);
+        let mut sent = 0usize;
+        let mut dispatch_err = None;
+        for (index, launch) in plan.launches.drain(..).enumerate() {
+            let Some(first) = launch.entries.first() else { continue };
+            let spec = self
+                .tenants
+                .get(first.tenant)
+                .expect("launch entries reference registered tenants")
+                .spec
+                .clone();
+            let lane = if probe_solo || n_lanes <= 1 {
+                0
+            } else {
+                lane_of.get(index).copied().unwrap_or(0).min(self.lanes - 1)
+            };
+            // Marshal the weight operands NOW, on the driver thread: on a
+            // cache hit this is a map lookup; on a miss the host gather +
+            // device upload overlaps the previous round still executing on
+            // the lane workers. The time spent rides the WorkItem so the
+            // measurement fed back to the cost model still covers it.
+            let marshal_t0 = Instant::now();
+            match SuperKernelExec::resolve_weights(
+                &self.engine,
+                &launch,
+                &self.tenants,
+                &shard.fusion_cache,
+            ) {
+                Ok(weights) => {
+                    shard.pool.dispatch(WorkItem {
+                        round,
+                        index,
+                        lane,
+                        lanes_resident: lanes_used,
+                        launch,
+                        spec,
+                        weights,
+                        weights_marshal_s: marshal_t0.elapsed().as_secs_f64(),
+                    });
+                    sent += 1;
+                }
+                Err(e) => {
+                    // Marshal failure aborts the rest of the plan (the
+                    // engine is broken); launches already dispatched still
+                    // complete and are collected normally.
+                    dispatch_err = Some(e);
+                    break;
+                }
+            }
+        }
+        plan.lane_of = lane_of;
+        shard.arena.finish();
+        if sent > 0 {
+            shard.tickets.push_back(RoundTicket { round, outstanding: sent });
+        }
+        // Forward fusion-cache hit/miss deltas from this dispatch to the
+        // global metrics (weight marshaling happens only here, so the
+        // delta window is exact per round).
+        {
+            let c = shard.fusion_cache.lock().unwrap();
+            for _ in hits_before..c.stats.hits {
+                self.metrics.record_cache(true);
+            }
+            for _ in misses_before..c.stats.misses {
+                self.metrics.record_cache(false);
+            }
+        }
+        if let Some(e) = dispatch_err {
+            return Err(e);
+        }
+        Ok(sent > 0)
+    }
+
+    /// Collect completions for one shard until at most `allowed` rounds
+    /// remain in flight, streaming each completion straight into the
+    /// outcome (responses, metrics, monitor, cost-model feedback — all
+    /// attributed via the completion's round tag).
+    fn collect_rounds(
+        &mut self,
+        device: usize,
+        allowed: usize,
+        outcome: &mut RoundOutcome,
+    ) -> Result<()> {
+        while self.shards[device].tickets.len() > allowed {
+            let completion = self.shards[device].pool.collect()?;
+            self.process_completion(device, completion, outcome)?;
+        }
+        Ok(())
+    }
+
+    fn process_completion(
+        &mut self,
+        device: usize,
+        c: Completion,
+        outcome: &mut RoundOutcome,
+    ) -> Result<()> {
+        let shard = &mut self.shards[device];
+        // Ticket bookkeeping first so an execution error cannot wedge the
+        // in-flight accounting.
+        if let Some(pos) = shard.tickets.iter().position(|t| t.round == c.round) {
+            shard.tickets[pos].outstanding -= 1;
+            if shard.tickets[pos].outstanding == 0 {
+                let _ = shard.tickets.remove(pos);
+            }
+        }
+        let res = match c.result {
+            Ok(res) => res,
+            Err(e) => {
+                // A failed launch must not discard the outcome: responses
+                // from OTHER rounds collected in this same call are
+                // already recorded in the metrics/monitor, and dropping
+                // them would leave submitters hanging on work that
+                // completed. Log, drop this launch's entries (their
+                // submitters are rejected at shutdown, as before), and
+                // keep serving.
+                log::error!(
+                    "launch {} of round {} failed: {e:#} ({} requests dropped)",
+                    c.index,
+                    c.round,
+                    c.launch.entries.len()
+                );
+                return Ok(());
+            }
+        };
+        let fused = c.launch.entries.len();
+        if fused > 1 {
+            self.metrics.record_superkernel_launch();
+            shard.superkernel_launches += 1;
+        } else {
+            self.metrics.record_kernel_launch();
+        }
+        // Calibrate this shard's launch-latency predictor with the
+        // measured end-to-end launch duration (marshal + execute — what a
+        // deadline actually waits on), tagged with how many lanes ITS
+        // round kept resident — pipelined rounds in flight never
+        // cross-attribute — then refresh the lock-free snapshot mirror.
+        if let Some(cm) = &shard.cost_model {
+            let mut cm = cm.lock().unwrap();
+            cm.observe_concurrent(
+                c.launch.class,
+                c.launch.r_bucket,
+                c.lanes_resident,
+                res.service_s + res.marshal_s,
+            );
+            shard.mirror.record_calibration(cm.calibration_error());
+            let lane_err = cm.lane_calibration_error(c.lanes_resident);
+            shard.mirror.record_lane_calibration(c.lanes_resident, lane_err);
+        }
+        shard.mirror.record_launch(c.lane, res.service_s + res.marshal_s);
+        let mut outputs = res.outputs.into_iter();
+        for entry in &c.launch.entries {
+            let output = outputs.next().expect("one output per launch entry");
+            let latency_s = c.done.duration_since(entry.arrived).as_secs_f64();
+            // One deadline verdict per response, fed to BOTH the metrics
+            // registry (status JSON / serve table) and the SLO monitor
+            // (eviction-adjacent reporting) from this single point so the
+            // two attainment views can't diverge.
+            let met = c.done <= entry.deadline;
+            let handle = &self.tenant_metrics[entry.tenant];
+            handle.record_completion(
+                (latency_s * 1e9) as u64,
+                (res.service_s * 1e9) as u64,
+                entry.class.flops(),
+            );
+            handle.record_deadline(met);
+            shard.flops += entry.class.flops();
+            self.monitor.observe(entry.tenant, res.service_s);
+            self.monitor.observe_deadline(entry.tenant, met);
+            outcome.responses.push(InferenceResponse {
+                id: entry.id,
+                tenant: entry.tenant,
+                output,
+                latency_s,
+                service_s: res.service_s,
+                fused_r: fused,
+            });
+        }
+        Ok(())
+    }
+
+    /// Run rounds until all queues drain AND every in-flight pipelined
+    /// round is collected; returns every response.
     pub fn run_until_drained(&mut self) -> Result<Vec<InferenceResponse>> {
         let mut all = Vec::new();
-        while self.pending() > 0 {
+        while self.pending() > 0 || self.in_flight_rounds() > 0 {
             let out = self.run_round()?;
             all.extend(out.responses);
         }
@@ -665,7 +1015,12 @@ impl Coordinator {
     pub fn force_check(&mut self) -> Vec<Eviction> {
         let evictions = self.monitor.check(&mut self.tenants);
         for ev in &evictions {
-            self.fusion_cache.lock().unwrap().invalidate_tenant(ev.tenant);
+            let device = self.placer.device_of(ev.tenant);
+            self.shards[device]
+                .fusion_cache
+                .lock()
+                .unwrap()
+                .invalidate_tenant(ev.tenant);
             self.placer.release(ev.tenant);
         }
         evictions
@@ -703,15 +1058,27 @@ impl Coordinator {
         &self.monitor
     }
 
-    /// Fusion-cache accounting (weight-operand reuse across launches).
+    /// Fusion-cache accounting (weight-operand reuse across launches),
+    /// summed across the per-shard caches.
     pub fn fusion_cache_stats(&self) -> FusionCacheStats {
-        self.fusion_cache.lock().unwrap().stats
+        let mut total = FusionCacheStats::default();
+        for shard in &self.shards {
+            let st = shard.fusion_cache.lock().unwrap().stats;
+            total.hits += st.hits;
+            total.misses += st.misses;
+            total.entries += st.entries;
+            total.evictions += st.evictions;
+        }
+        total
     }
 
-    /// Replace the fusion cache (benches/ablations: e.g. capacity 1 to
-    /// force the cold path). Serving uses the default capacity-256 cache.
+    /// Replace every shard's fusion cache (benches/ablations: e.g.
+    /// capacity 1 to force the cold path). Serving uses the default
+    /// capacity-256 caches.
     pub fn set_fusion_cache_capacity(&mut self, capacity: usize) {
-        *self.fusion_cache.lock().unwrap() = FusionCache::new(capacity);
+        for shard in &mut self.shards {
+            *shard.fusion_cache.lock().unwrap() = FusionCache::new(capacity);
+        }
     }
 
     /// Metrics snapshot over the coordinator's lifetime, including the
@@ -726,7 +1093,8 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     // Coordinator tests require artifacts; see
-    // rust/tests/integration_coordinator.rs. Pure plumbing tests here.
+    // rust/tests/integration_coordinator.rs and
+    // rust/tests/integration_pipeline.rs. Pure plumbing tests here.
     use super::*;
     use crate::config::ServerConfig;
 
@@ -737,5 +1105,95 @@ mod tests {
             ..Default::default()
         };
         assert!(Coordinator::new(&cfg).is_err());
+    }
+
+    #[test]
+    fn round_arena_counts_growth_only_after_warmup() {
+        let mut arena = RoundArena::default();
+        use crate::coordinator::batcher::Launch;
+        use crate::coordinator::request::{InferenceRequest, ShapeClass};
+        const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 8, n: 8, k: 8 };
+        let mk = |n: usize, plan: &mut RoundPlan| {
+            for i in 0..n {
+                let now = Instant::now();
+                plan.launches.push(Launch {
+                    class: CLASS,
+                    entries: vec![InferenceRequest {
+                        id: i as u64,
+                        tenant: 0,
+                        class: CLASS,
+                        payload: vec![],
+                        arrived: now,
+                        deadline: now,
+                    }],
+                    r_bucket: 1,
+                });
+                plan.lane_of.push(i % 2);
+            }
+        };
+        // Warmup round: grows the buffers, not the counter.
+        let plan = arena.begin();
+        mk(8, plan);
+        plan.launches.drain(..);
+        arena.finish();
+        assert_eq!(arena.grows(), 0, "warmup growth is free");
+        // Steady state at the warm size: no growth counted.
+        for _ in 0..10 {
+            let plan = arena.begin();
+            mk(8, plan);
+            plan.launches.drain(..);
+            arena.finish();
+        }
+        assert_eq!(arena.grows(), 0, "steady rounds must reuse the arena");
+        // A bigger round grows the buffers — and is counted.
+        let plan = arena.begin();
+        mk(64, plan);
+        plan.launches.drain(..);
+        arena.finish();
+        assert!(arena.grows() >= 1, "post-warmup growth must be counted");
+    }
+
+    #[test]
+    fn snapshot_mirror_reads_do_not_touch_the_cost_model_lock() {
+        // Regression for the snapshot-path contention bug: the old
+        // `device_snapshots` locked each shard's cost model and walked its
+        // lane tracks per status call. The mirror is updated at completion
+        // processing and read lock-free — here the cost-model mutex is
+        // HELD while the mirror is read, which would deadlock if the
+        // snapshot path still took the lock.
+        use crate::coordinator::request::ShapeClass;
+        const CLASS: ShapeClass =
+            ShapeClass { kind: "batched_gemm", m: 64, n: 64, k: 64 };
+        let mirror = SnapshotMirror::new(2);
+        let cm: SharedCostModel = Arc::new(Mutex::new(CostModel::new()));
+        {
+            let mut guard = cm.lock().unwrap();
+            guard.observe(CLASS, 4, 1e-3);
+            guard.observe_concurrent(CLASS, 4, 2, 1.5e-3);
+            mirror.record_calibration(guard.calibration_error());
+            mirror.record_lane_calibration(2, guard.lane_calibration_error(2));
+            mirror.record_launch(1, 2.5e-3);
+            // Lock still held: mirror reads must not block on it.
+            assert!(mirror.calibration_error() >= 0.0);
+            assert_eq!(mirror.lane_launches(), vec![0, 1]);
+            assert!((mirror.lane_busy_s()[1] - 2.5e-3).abs() < 1e-9);
+            let calib = mirror.lane_calibration();
+            assert_eq!(calib.len(), 1);
+            assert_eq!(calib[0].0, 2);
+        }
+    }
+
+    #[test]
+    fn snapshot_mirror_clamps_and_hides_unobserved_counts() {
+        let mirror = SnapshotMirror::new(1);
+        assert!(mirror.lane_calibration().is_empty(), "nothing observed yet");
+        // Lane counts beyond the configured width clamp / drop safely.
+        mirror.record_launch(7, 1.0);
+        assert_eq!(mirror.lane_launches(), vec![1]);
+        mirror.record_lane_calibration(9, 0.5);
+        assert!(mirror.lane_calibration().is_empty());
+        // Solo calibration never enters the per-lane table.
+        mirror.record_lane_calibration(1, 0.25);
+        assert!(mirror.lane_calibration().is_empty());
     }
 }

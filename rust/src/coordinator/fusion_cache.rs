@@ -251,6 +251,33 @@ mod tests {
     }
 
     #[test]
+    fn lru_eviction_picks_the_cold_entry_and_held_arcs_survive() {
+        // Regression for the exported eviction counters: capacity 2, three
+        // weight sets. Key A is touched after B's insert, so B is the LRU
+        // victim when C arrives — and an Arc taken on A before the
+        // eviction cycle stays valid throughout (device-resident handles
+        // outlive their cache entry).
+        let key = |t: usize| FusionKey { kind: "mlp_block", r_bucket: 4, tenants: vec![t] };
+        let mut cache = FusionCache::new(2);
+        assert!(cache.get(&key(0)).is_none());
+        let a = cache.insert(key(0), Arc::new(WeightSet::new(vec![])));
+        cache.insert(key(1), Arc::new(WeightSet::new(vec![])));
+        let held = a.clone();
+        // Touch A so B becomes least-recently-used.
+        assert!(cache.get(&key(0)).is_some());
+        cache.insert(key(2), Arc::new(WeightSet::new(vec![])));
+        assert_eq!(cache.stats.evictions, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key(1)).is_none(), "B was the LRU victim");
+        assert!(cache.get(&key(0)).is_some(), "A survived");
+        assert!(cache.get(&key(2)).is_some(), "C resident");
+        // The held handle is still usable after the eviction cycle.
+        assert_eq!(held.buffers().len(), 0);
+        assert!(Arc::strong_count(&held) >= 2, "cache + held handle");
+        assert_eq!(cache.stats.entries, 3, "three distinct builds inserted");
+    }
+
+    #[test]
     fn stats_hit_rate() {
         let s = FusionCacheStats { hits: 3, misses: 1, ..Default::default() };
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);

@@ -1,0 +1,471 @@
+//! Persistent per-lane execution workers — the pipelined driver's data
+//! plane.
+//!
+//! The pre-pipeline driver re-spawned a `thread::scope` of lane workers
+//! every round: a thread spawn + join per device per round of pure
+//! control-plane overhead, and the driver sat idle while launches
+//! executed. This module replaces that with a **persistent worker pool**:
+//! one worker thread per spatial lane, spawned once per device shard and
+//! joined on shutdown, fed through per-lane SPSC work queues and drained
+//! through one shared completion channel.
+//!
+//! Every [`WorkItem`] is **round-tagged** at dispatch: it carries the
+//! round id it was planned in and the lane count that round planned to
+//! keep concurrently resident. The tag rides the [`Completion`] back, so
+//! when rounds overlap in flight (pipeline depth > 1) every measurement
+//! is still fed to the cost model with *its own round's* lane count —
+//! never the lane count of whatever round happens to be dispatching when
+//! the completion is processed.
+//!
+//! Ordering guarantees: each lane's queue is FIFO, so launches sharing a
+//! lane execute in dispatch (urgency) order; across lanes completions
+//! interleave by actual finish time. The pool is execution-only — it
+//! never touches queues, the fusion cache, or the cost model, so the
+//! driver thread can plan round N+1 (drain admission, run the planner,
+//! marshal weights) while the pool executes round N.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::Launch;
+use crate::coordinator::fusion_cache::WeightSet;
+use crate::coordinator::superkernel::{Flavor, LaunchResult, SuperKernelExec};
+use crate::coordinator::tenant::ModelSpec;
+use crate::runtime::PjrtEngine;
+
+/// One launch handed to a lane worker, round-tagged and fully resolved:
+/// the worker needs no registry, queue, or cache access to execute it
+/// (weights were marshaled by the driver at dispatch time).
+pub struct WorkItem {
+    /// Round id this launch was planned in.
+    pub round: u64,
+    /// Launch index within its round's plan.
+    pub index: usize,
+    /// Spatial lane the launch executes on.
+    pub lane: usize,
+    /// Lanes the round planned to keep concurrently resident — the tag
+    /// the cost model's interference term calibrates against.
+    pub lanes_resident: usize,
+    pub launch: Launch,
+    /// Model spec of the launch's tenants (they share one shape class).
+    pub spec: ModelSpec,
+    /// Device-resident weight operands resolved by the driver (None for
+    /// weight-less kinds, e.g. raw batched GEMM).
+    pub weights: Option<Arc<WeightSet>>,
+    /// Seconds the driver spent marshaling this launch's weights at
+    /// dispatch time (cache miss: host gather + device upload). The
+    /// worker folds it into the result's `marshal_s` so the cost model
+    /// still observes the FULL launch cost even though the upload ran on
+    /// the driver thread.
+    pub weights_marshal_s: f64,
+}
+
+/// A finished launch, echoing its round tag so the driver attributes the
+/// measurement, deadline verdicts, and lane accounting to the round that
+/// planned it.
+pub struct Completion {
+    pub round: u64,
+    pub index: usize,
+    pub lane: usize,
+    pub lanes_resident: usize,
+    /// The launch rides back so entries can be scattered to responses
+    /// without the driver holding the (already recycled) plan.
+    pub launch: Launch,
+    pub result: Result<LaunchResult>,
+    /// Instant the launch finished on its worker.
+    pub done: Instant,
+}
+
+/// What a lane worker runs per item. Production uses [`PjrtExecutor`];
+/// tests and `benches/fig11_round_overhead.rs` substitute deterministic
+/// synthetic executors so the pool/pipeline machinery is measurable and
+/// testable without AOT artifacts.
+pub trait LaunchExecutor: Send + Sync {
+    fn execute(&self, item: &WorkItem) -> Result<LaunchResult>;
+}
+
+/// The production executor: one PJRT execution per item over the shared
+/// engine (gather activations → execute → scatter; weights pre-resolved).
+pub struct PjrtExecutor {
+    engine: Arc<PjrtEngine>,
+    flavor: Flavor,
+}
+
+impl PjrtExecutor {
+    pub fn new(engine: Arc<PjrtEngine>, flavor: Flavor) -> Self {
+        Self { engine, flavor }
+    }
+}
+
+impl LaunchExecutor for PjrtExecutor {
+    fn execute(&self, item: &WorkItem) -> Result<LaunchResult> {
+        SuperKernelExec::new(&self.engine, self.flavor).execute_prepared(
+            &item.launch,
+            &item.spec,
+            item.weights.as_deref(),
+        )
+    }
+}
+
+/// The persistent pool: `lanes` worker threads, one SPSC queue each, one
+/// shared completion channel. Spawned once; joined when dropped (or
+/// explicitly via [`LanePool::shutdown`], which also hands back any
+/// finished-but-uncollected completions so none are lost).
+pub struct LanePool {
+    senders: Vec<Sender<WorkItem>>,
+    completions: Receiver<Completion>,
+    workers: Vec<JoinHandle<()>>,
+    dispatched: u64,
+    collected: u64,
+}
+
+impl LanePool {
+    pub fn new(lanes: usize, exec: Arc<dyn LaunchExecutor>) -> Self {
+        let lanes = lanes.max(1);
+        let (done_tx, done_rx) = channel::<Completion>();
+        let mut senders = Vec::with_capacity(lanes);
+        let mut workers = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let (tx, rx) = channel::<WorkItem>();
+            senders.push(tx);
+            let done_tx = done_tx.clone();
+            let exec = exec.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("stgpu-lane-{lane}"))
+                .spawn(move || {
+                    // FIFO over this lane's queue; exits when the driver
+                    // drops the sender (shutdown).
+                    for item in rx {
+                        // A panicking executor must not kill the worker:
+                        // with the lane dead but its siblings alive, the
+                        // completion channel would stay open and the
+                        // driver would block forever on a round that can
+                        // no longer drain. Convert panics into per-item
+                        // errors; the worker lives on.
+                        let mut result = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| exec.execute(&item)),
+                        )
+                        .unwrap_or_else(|p| {
+                            let msg = p
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| {
+                                    p.downcast_ref::<&str>().map(|s| s.to_string())
+                                })
+                                .unwrap_or_else(|| "<non-string panic>".into());
+                            Err(anyhow!("lane executor panicked: {msg}"))
+                        });
+                        if let Ok(res) = &mut result {
+                            // Account the driver-side weight marshal so
+                            // measurements cover the whole launch cost.
+                            res.marshal_s += item.weights_marshal_s;
+                        }
+                        let done = Instant::now();
+                        let WorkItem { round, index, lane, lanes_resident, launch, .. } =
+                            item;
+                        if done_tx
+                            .send(Completion {
+                                round,
+                                index,
+                                lane,
+                                lanes_resident,
+                                launch,
+                                result,
+                                done,
+                            })
+                            .is_err()
+                        {
+                            return; // driver gone: nobody to report to
+                        }
+                    }
+                })
+                .expect("spawn lane worker");
+            workers.push(worker);
+        }
+        drop(done_tx);
+        Self { senders, completions: done_rx, workers, dispatched: 0, collected: 0 }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Queue one launch on its lane (clamped to the pool width). Returns
+    /// immediately; the item executes when the lane worker reaches it.
+    pub fn dispatch(&mut self, item: WorkItem) {
+        let lane = item.lane.min(self.senders.len() - 1);
+        self.dispatched += 1;
+        // Send fails only if the worker died; the error then surfaces at
+        // the next `collect` as a closed completion channel.
+        let _ = self.senders[lane].send(item);
+    }
+
+    /// Block for the next completion (any lane, any in-flight round).
+    pub fn collect(&mut self) -> Result<Completion> {
+        let c = self
+            .completions
+            .recv()
+            .map_err(|_| anyhow!("lane workers terminated unexpectedly"))?;
+        self.collected += 1;
+        Ok(c)
+    }
+
+    /// Items dispatched but not yet collected.
+    pub fn in_flight(&self) -> u64 {
+        self.dispatched - self.collected
+    }
+
+    /// Close the queues, join every worker, and return the completions
+    /// that finished but were never collected — the zero-lost-completions
+    /// drain contract: `collected + shutdown().len() == dispatched` as
+    /// long as every dispatched item executed.
+    pub fn shutdown(mut self) -> Vec<Completion> {
+        self.senders.clear(); // workers' receive loops end
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut leftover = Vec::new();
+        while let Ok(c) = self.completions.try_recv() {
+            self.collected += 1;
+            leftover.push(c);
+        }
+        leftover
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        self.senders.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{InferenceRequest, ShapeClass};
+    use std::collections::HashMap;
+    use std::time::Duration;
+
+    const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 8, n: 8, k: 8 };
+
+    fn item(round: u64, index: usize, lane: usize, lanes_resident: usize) -> WorkItem {
+        let now = Instant::now();
+        WorkItem {
+            round,
+            index,
+            lane,
+            lanes_resident,
+            launch: Launch {
+                class: CLASS,
+                entries: vec![InferenceRequest {
+                    id: round * 1000 + index as u64,
+                    tenant: 0,
+                    class: CLASS,
+                    payload: vec![],
+                    arrived: now,
+                    deadline: now,
+                }],
+                r_bucket: 1,
+            },
+            spec: ModelSpec::Sgemm { m: 8, n: 8, k: 8 },
+            weights: None,
+            weights_marshal_s: 0.0,
+        }
+    }
+
+    /// Instant synthetic executor: echoes the item's bucket.
+    struct EchoExec;
+    impl LaunchExecutor for EchoExec {
+        fn execute(&self, item: &WorkItem) -> Result<LaunchResult> {
+            Ok(LaunchResult {
+                outputs: Vec::new(),
+                service_s: 1e-6,
+                marshal_s: 0.0,
+                r_bucket: item.launch.r_bucket,
+            })
+        }
+    }
+
+    /// Slow executor: forces items to still be queued at shutdown time.
+    struct SlowExec(Duration);
+    impl LaunchExecutor for SlowExec {
+        fn execute(&self, item: &WorkItem) -> Result<LaunchResult> {
+            std::thread::sleep(self.0);
+            EchoExec.execute(item)
+        }
+    }
+
+    struct FailExec;
+    impl LaunchExecutor for FailExec {
+        fn execute(&self, item: &WorkItem) -> Result<LaunchResult> {
+            if item.index == 1 {
+                Err(anyhow!("injected"))
+            } else {
+                EchoExec.execute(item)
+            }
+        }
+    }
+
+    #[test]
+    fn per_lane_fifo_and_round_tags_echoed() {
+        let mut pool = LanePool::new(2, Arc::new(EchoExec));
+        for round in 0..4u64 {
+            for lane in 0..2usize {
+                pool.dispatch(item(round, lane, lane, 2));
+            }
+        }
+        let mut per_lane: HashMap<usize, Vec<u64>> = HashMap::new();
+        for _ in 0..8 {
+            let c = pool.collect().unwrap();
+            assert_eq!(c.lanes_resident, 2, "tag must ride the completion");
+            assert_eq!(c.launch.entries[0].id, c.round * 1000 + c.index as u64);
+            per_lane.entry(c.lane).or_default().push(c.round);
+        }
+        assert_eq!(pool.in_flight(), 0);
+        for (lane, rounds) in per_lane {
+            assert!(
+                rounds.windows(2).all(|w| w[0] <= w[1]),
+                "lane {lane} executed out of dispatch order: {rounds:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn shutdown_joins_with_zero_lost_completions() {
+        let mut pool = LanePool::new(2, Arc::new(SlowExec(Duration::from_millis(1))));
+        for i in 0..20usize {
+            pool.dispatch(item(1, i, i % 2, 2));
+        }
+        // Collect a few live, then shut down with work still in flight.
+        let mut collected = 0u64;
+        for _ in 0..5 {
+            pool.collect().unwrap();
+            collected += 1;
+        }
+        let leftover = pool.shutdown();
+        assert_eq!(
+            collected + leftover.len() as u64,
+            20,
+            "every dispatched item must surface exactly once"
+        );
+    }
+
+    struct PanicExec;
+    impl LaunchExecutor for PanicExec {
+        fn execute(&self, item: &WorkItem) -> Result<LaunchResult> {
+            if item.index == 1 {
+                panic!("boom");
+            }
+            EchoExec.execute(item)
+        }
+    }
+
+    #[test]
+    fn executor_panic_becomes_an_err_completion_and_worker_survives() {
+        // Regression: a panicking executor used to kill the lane worker;
+        // with sibling lanes alive the completion channel stayed open and
+        // the driver hung forever on the wedged round. Now the panic is
+        // caught per item and the SAME worker keeps serving later items.
+        let mut pool = LanePool::new(1, Arc::new(PanicExec));
+        for i in 0..4usize {
+            pool.dispatch(item(1, i, 0, 1));
+        }
+        let mut errs = 0;
+        let mut oks = 0;
+        for _ in 0..4 {
+            let c = pool.collect().unwrap();
+            match c.result {
+                Ok(_) => oks += 1,
+                Err(e) => {
+                    errs += 1;
+                    assert!(format!("{e}").contains("panicked"), "got: {e}");
+                }
+            }
+        }
+        assert_eq!((oks, errs), (3, 1));
+        assert_eq!(pool.in_flight(), 0, "nothing lost to the panic");
+    }
+
+    #[test]
+    fn executor_errors_surface_per_item_and_pool_survives() {
+        let mut pool = LanePool::new(1, Arc::new(FailExec));
+        pool.dispatch(item(1, 0, 0, 1));
+        pool.dispatch(item(1, 1, 0, 1));
+        pool.dispatch(item(1, 2, 0, 1));
+        let mut errs = 0;
+        let mut oks = 0;
+        for _ in 0..3 {
+            let c = pool.collect().unwrap();
+            match c.result {
+                Ok(_) => oks += 1,
+                Err(_) => errs += 1,
+            }
+        }
+        assert_eq!((oks, errs), (2, 1), "one injected failure, pool stays up");
+    }
+
+    #[test]
+    fn prop_pipelined_rounds_keep_their_own_lane_tags() {
+        // The cost-model-attribution property: run a depth-2 pipeline over
+        // random rounds with random lane counts; while two rounds are in
+        // flight, every completion must still carry the lane count ITS
+        // round was planned with, and each round must complete exactly its
+        // dispatched launch count.
+        use crate::util::prop::run_prop;
+        run_prop("pipelined round tags", 0xF16, 24, |rng| {
+            let lanes = 1 + rng.gen_range(4) as usize;
+            let mut pool = LanePool::new(lanes, Arc::new(EchoExec));
+            let n_rounds = 3 + rng.gen_range(6) as u64;
+            // round -> (lanes_resident, launches)
+            let mut planned: HashMap<u64, (usize, usize)> = HashMap::new();
+            let mut seen: HashMap<u64, usize> = HashMap::new();
+            let mut in_flight: Vec<u64> = Vec::new();
+            let mut outstanding: HashMap<u64, usize> = HashMap::new();
+            let depth = 2usize;
+            for round in 1..=n_rounds {
+                let resident = 1 + rng.gen_range(lanes as u64) as usize;
+                let launches = 1 + rng.gen_range(5) as usize;
+                planned.insert(round, (resident, launches));
+                for i in 0..launches {
+                    pool.dispatch(item(round, i, i % lanes, resident));
+                }
+                in_flight.push(round);
+                outstanding.insert(round, launches);
+                while in_flight.len() > depth - 1 {
+                    let c = pool.collect().unwrap();
+                    let (resident, _) = planned[&c.round];
+                    assert_eq!(
+                        c.lanes_resident, resident,
+                        "round {} completion mis-tagged while rounds {:?} in flight",
+                        c.round, in_flight
+                    );
+                    *seen.entry(c.round).or_default() += 1;
+                    let left = outstanding.get_mut(&c.round).unwrap();
+                    *left -= 1;
+                    if *left == 0 {
+                        in_flight.retain(|&r| r != c.round);
+                    }
+                }
+            }
+            while pool.in_flight() > 0 {
+                let c = pool.collect().unwrap();
+                assert_eq!(c.lanes_resident, planned[&c.round].0);
+                *seen.entry(c.round).or_default() += 1;
+            }
+            for (round, (_, launches)) in planned {
+                assert_eq!(
+                    seen.get(&round).copied().unwrap_or(0),
+                    launches,
+                    "round {round} lost or duplicated completions"
+                );
+            }
+        });
+    }
+}

@@ -26,14 +26,17 @@
 //! * [`superkernel`] — gather → one PJRT execution → scatter.
 //! * [`monitor`] — per-tenant latency EWMA + straggler eviction, judged
 //!   against same-device peers.
-//! * [`driver`] — the sharded serve loop gluing it all together (one
-//!   `RoundPlan` per device per round; multi-lane plans execute their
-//!   lanes on concurrent worker threads).
+//! * [`lanepool`] — persistent per-lane worker threads fed by SPSC work
+//!   queues; round-tagged completions over one shared channel.
+//! * [`driver`] — the sharded serve loop gluing it all together: a
+//!   pipelined round loop (plan/marshal round N+1 while round N executes
+//!   on the lane pool) over a recycled per-shard `RoundArena`.
 
 pub mod batcher;
 pub mod costmodel;
 pub mod driver;
 pub mod fusion_cache;
+pub mod lanepool;
 pub mod monitor;
 pub mod placement;
 pub mod queue;
@@ -44,8 +47,9 @@ pub mod tenant;
 
 pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
 pub use costmodel::{CostModel, SharedCostModel};
-pub use driver::{Coordinator, RoundOutcome};
+pub use driver::{Coordinator, RoundArena, RoundOutcome};
 pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey, WeightSet};
+pub use lanepool::{Completion, LanePool, LaunchExecutor, PjrtExecutor, WorkItem};
 pub use monitor::{Eviction, MonitorConfig, SloMonitor};
 pub use placement::{place, DevicePlacer, Placement};
 pub use queue::{QueueSet, TenantQueue};

@@ -240,9 +240,17 @@ impl QueueSet {
 
     /// Tenants with at least one pending request, ascending id.
     pub fn backlogged(&self) -> Vec<usize> {
-        (0..self.queues.len())
-            .filter(|&i| !self.queues[i].is_empty())
-            .collect()
+        let mut out = Vec::new();
+        self.backlogged_into(&mut out);
+        out
+    }
+
+    /// [`QueueSet::backlogged`] into a recycled buffer — the schedulers
+    /// call this once per drain pass, so reusing the caller's scratch
+    /// keeps the round hot path allocation-free.
+    pub fn backlogged_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.queues.len()).filter(|&i| !self.queues[i].is_empty()));
     }
 }
 

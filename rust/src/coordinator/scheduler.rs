@@ -69,6 +69,21 @@
 //! per-lane launch counts, busy time, and per-lane-count calibration
 //! error (fig10: `benches/fig10_spatial_lanes.rs`; config knob `lanes`).
 //!
+//! ## Pipelined rounds and round tagging
+//!
+//! The driver overlaps planning with execution (`pipeline_depth` rounds
+//! in flight on a persistent lane-worker pool), so a plan's verdicts must
+//! survive being *executed later than they were made*: every launch the
+//! driver dispatches is tagged with its round id and the lane count this
+//! plan decided to keep resident (`RoundPlan::lanes_used`). Completions
+//! echo the tag, and the cost model is fed at **that round's** lane
+//! count — a plan's interference pricing and its measured feedback always
+//! agree, no matter how many newer rounds were planned in between.
+//! Schedulers that support the allocation-free hot path implement
+//! [`Scheduler::plan_round_into`], filling the driver's recycled
+//! per-shard `RoundPlan` (launch + lane vectors reused across rounds)
+//! instead of allocating a fresh plan.
+//!
 //! ## The placement layer above
 //!
 //! Schedulers are deliberately **device-blind**: each instance plans
@@ -152,6 +167,15 @@ pub trait Scheduler: Send {
     fn plan_round_at(&mut self, queues: &mut QueueSet, now: Instant) -> RoundPlan {
         let _ = now;
         self.plan_round(queues)
+    }
+
+    /// Plan a round **into** a recycled [`RoundPlan`] (the driver's
+    /// per-shard arena): implementations that support the allocation-free
+    /// hot path fill `out`'s vectors in place, reusing their capacity
+    /// across rounds. The default overwrites `out` with a fresh plan —
+    /// correct for the §3 baselines, which are not the perf path.
+    fn plan_round_into(&mut self, queues: &mut QueueSet, now: Instant, out: &mut RoundPlan) {
+        *out = self.plan_round_at(queues, now);
     }
 
     fn label(&self) -> &'static str;
@@ -418,6 +442,16 @@ pub struct SpaceTimeSched {
     /// Duration source for lane balancing when not in EDF mode (EDF reuses
     /// its own cost model). None falls back to the [`launch_weight`] proxy.
     lane_cost: Option<SharedCostModel>,
+    /// Round-scratch buffers recycled across `plan_round_into` calls so a
+    /// steady-state round plans without heap growth: backlogged tenant
+    /// ids, the drained request staging vector, the EDF pass's working
+    /// queue / output / demoted buffers, and the lane-balancer loads.
+    scratch_ids: Vec<usize>,
+    scratch_reqs: Vec<InferenceRequest>,
+    scratch_queue: VecDeque<Launch>,
+    scratch_kept: Vec<Launch>,
+    scratch_doomed: Vec<Launch>,
+    scratch_load: Vec<f64>,
 }
 
 /// Deadline-aware planning state: the shared per-shard cost model plus the
@@ -439,6 +473,12 @@ impl SpaceTimeSched {
             edf: None,
             lanes: 1,
             lane_cost: None,
+            scratch_ids: Vec::new(),
+            scratch_reqs: Vec::new(),
+            scratch_queue: VecDeque::new(),
+            scratch_kept: Vec::new(),
+            scratch_doomed: Vec::new(),
+            scratch_load: Vec::new(),
         }
     }
 
@@ -467,20 +507,31 @@ impl SpaceTimeSched {
         self
     }
 
-    fn plan_at(&mut self, queues: &mut QueueSet, now: Instant) -> RoundPlan {
+    /// Plan one round into a recycled [`RoundPlan`] — the allocation-free
+    /// hot path: the drained-request staging vector, the backlogged-id
+    /// scratch, the EDF pass's working buffers, and the plan's own launch
+    /// and lane vectors are all reused across rounds (only the per-launch
+    /// entry vectors are freshly owned, because launches carry their
+    /// requests away).
+    fn plan_into(&mut self, queues: &mut QueueSet, now: Instant, out: &mut RoundPlan) {
+        out.launches.clear();
+        out.lane_of.clear();
+        out.n_lanes = 0;
+        out.drained = 0;
+        out.deadline_splits = 0;
         let cap = self.batcher.max_batch();
-        let mut reqs = Vec::new();
+        let mut reqs = std::mem::take(&mut self.scratch_reqs);
+        let mut ids = std::mem::take(&mut self.scratch_ids);
+        reqs.clear();
         if self.slo_aware {
             // Request-level EDF: repeatedly pop the globally earliest
             // head-of-queue deadline (each tenant queue is an EDF heap, so
             // the head is that tenant's most urgent request).
             while reqs.len() < cap {
-                let next = queues
-                    .backlogged()
-                    .into_iter()
-                    .min_by_key(|&t| {
-                        queues.tenant(t).and_then(|q| q.peek()).map(|r| r.deadline)
-                    });
+                queues.backlogged_into(&mut ids);
+                let next = ids.iter().copied().min_by_key(|&t| {
+                    queues.tenant(t).and_then(|q| q.peek()).map(|r| r.deadline)
+                });
                 let Some(t) = next else { break };
                 if let Some(r) = queues.pop_tenant(t) {
                     reqs.push(r);
@@ -490,12 +541,12 @@ impl SpaceTimeSched {
             // Fair drain: rotate across backlogged tenants taking one
             // request each until the cap or empty queues.
             'outer: loop {
-                let backlogged = queues.backlogged();
-                if backlogged.is_empty() {
+                queues.backlogged_into(&mut ids);
+                if ids.is_empty() {
                     break;
                 }
                 let mut took = false;
-                for t in backlogged {
+                for &t in &ids {
                     if reqs.len() >= cap {
                         break 'outer;
                     }
@@ -509,12 +560,20 @@ impl SpaceTimeSched {
                 }
             }
         }
-        let drained = reqs.len();
-        let launches = self.batcher.plan(reqs);
-        let Some(edf) = &self.edf else {
-            let (lane_of, n_lanes) = self.assign_lanes(&launches);
-            return RoundPlan { launches, lane_of, n_lanes, drained, deadline_splits: 0 };
-        };
+        out.drained = reqs.len();
+        self.batcher.plan_into(&mut reqs, &mut out.launches);
+        self.scratch_reqs = reqs;
+        self.scratch_ids = ids;
+        if self.edf.is_some() {
+            self.edf_pass(now, out);
+        }
+        out.n_lanes = self.assign_lanes_into(&out.launches, &mut out.lane_of);
+    }
+
+    /// Deadline-protection pass over a planned round (module docs, EDF
+    /// step 3), rewriting `out.launches` in place via recycled scratch.
+    fn edf_pass(&mut self, now: Instant, out: &mut RoundPlan) {
+        let Some(edf) = &self.edf else { return };
 
         // Deadline-protection pass: order launches most-urgent-first, then
         // walk the plan with a predicted-time cursor, splitting any fused
@@ -527,19 +586,22 @@ impl SpaceTimeSched {
         // verdict conservative (never optimistic about a deadline).
         let cost = edf.cost.lock().unwrap();
         let slack = edf.slack_s;
-        let stretch = if self.lanes > 1 && launches.len() > 1 {
-            cost.lane_stretch(self.lanes.min(launches.len()))
+        let stretch = if self.lanes > 1 && out.launches.len() > 1 {
+            cost.lane_stretch(self.lanes.min(out.launches.len()))
         } else {
             1.0
         };
-        let mut ordered = launches;
-        ordered.sort_by_key(|l| l.entries.iter().map(|e| e.deadline).min());
-        let mut queue: VecDeque<Launch> = ordered.into();
-        let mut out = Vec::new();
+        out.launches.sort_by_key(|l| l.entries.iter().map(|e| e.deadline).min());
+        let mut queue = std::mem::take(&mut self.scratch_queue);
+        let mut kept = std::mem::take(&mut self.scratch_kept);
         // Launches whose most urgent deadline is unmakeable at any split:
         // executed LAST so they never delay feasible launches (their own
         // predicted time is excluded from the feasibility cursor).
-        let mut doomed: Vec<Launch> = Vec::new();
+        let mut doomed = std::mem::take(&mut self.scratch_doomed);
+        queue.clear();
+        kept.clear();
+        doomed.clear();
+        queue.extend(out.launches.drain(..));
         let mut splits = 0usize;
         let mut cursor = 0.0f64;
         while let Some(launch) = queue.pop_front() {
@@ -553,7 +615,7 @@ impl SpaceTimeSched {
             let budget = earliest.saturating_duration_since(now).as_secs_f64() - slack;
             if cursor + dur <= budget {
                 cursor += dur;
-                out.push(launch);
+                kept.push(launch);
                 continue;
             }
             if launch.entries.len() <= 1 {
@@ -586,7 +648,7 @@ impl SpaceTimeSched {
                         .split_launch(Launch { class, entries, r_bucket }, k);
                     splits += 1;
                     cursor += cost.predict(head.class, head.r_bucket) * stretch;
-                    out.push(head);
+                    kept.push(head);
                     // Each tail piece re-enters the plan at its own (later)
                     // urgency; it may be split again against that deadline.
                     for tail in tails {
@@ -610,54 +672,69 @@ impl SpaceTimeSched {
                 }
             }
         }
-        out.extend(doomed);
-        // The EDF cost-model guard must drop before `assign_lanes` re-locks
-        // the same mutex for balancing weights.
+        out.launches.extend(kept.drain(..));
+        out.launches.extend(doomed.drain(..));
+        out.deadline_splits = splits;
+        // The EDF cost-model guard must drop before `assign_lanes_into`
+        // re-locks the same mutex for balancing weights.
         drop(cost);
-        let (lane_of, n_lanes) = self.assign_lanes(&out);
-        RoundPlan { launches: out, lane_of, n_lanes, drained, deadline_splits: splits }
+        self.scratch_queue = queue;
+        self.scratch_kept = kept;
+        self.scratch_doomed = doomed;
     }
 
     /// Greedy lane assignment: walk launches in plan (urgency) order and
     /// put each on the least-loaded lane by predicted duration — classic
     /// list scheduling, whose worst lane stays within
     /// `total/L + max single duration` of the optimum, while appending in
-    /// order keeps each lane's launches urgency-sorted.
-    fn assign_lanes(&self, launches: &[Launch]) -> (Vec<usize>, usize) {
+    /// order keeps each lane's launches urgency-sorted. Fills the
+    /// recycled `lane_of` vector and returns the plan's lane count.
+    fn assign_lanes_into(&mut self, launches: &[Launch], lane_of: &mut Vec<usize>) -> usize {
+        lane_of.clear();
         let n_lanes = self.lanes.min(launches.len()).max(1);
         if n_lanes <= 1 {
-            return (Vec::new(), launches.len().min(1));
+            return launches.len().min(1);
         }
-        let cost = self
-            .edf
-            .as_ref()
-            .map(|e| &e.cost)
-            .or_else(|| self.lane_cost.as_ref())
-            .map(|c| c.lock().unwrap());
-        let weight = |l: &Launch| match &cost {
-            Some(cm) => cm.predict(l.class, l.r_bucket),
-            None => launch_weight(l),
-        };
-        let mut lane_of = Vec::with_capacity(launches.len());
-        let mut load = vec![0.0f64; n_lanes];
-        for l in launches {
-            let lane = (0..n_lanes)
-                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
-                .unwrap();
-            lane_of.push(lane);
-            load[lane] += weight(l);
+        let mut load = std::mem::take(&mut self.scratch_load);
+        load.clear();
+        load.resize(n_lanes, 0.0);
+        {
+            let cost = self
+                .edf
+                .as_ref()
+                .map(|e| &e.cost)
+                .or_else(|| self.lane_cost.as_ref())
+                .map(|c| c.lock().unwrap());
+            let weight = |l: &Launch| match &cost {
+                Some(cm) => cm.predict(l.class, l.r_bucket),
+                None => launch_weight(l),
+            };
+            for l in launches {
+                let lane = (0..n_lanes)
+                    .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                    .unwrap();
+                lane_of.push(lane);
+                load[lane] += weight(l);
+            }
         }
-        (lane_of, n_lanes)
+        self.scratch_load = load;
+        n_lanes
     }
 }
 
 impl Scheduler for SpaceTimeSched {
     fn plan_round(&mut self, queues: &mut QueueSet) -> RoundPlan {
-        self.plan_at(queues, Instant::now())
+        self.plan_round_at(queues, Instant::now())
     }
 
     fn plan_round_at(&mut self, queues: &mut QueueSet, now: Instant) -> RoundPlan {
-        self.plan_at(queues, now)
+        let mut plan = RoundPlan::default();
+        self.plan_into(queues, now, &mut plan);
+        plan
+    }
+
+    fn plan_round_into(&mut self, queues: &mut QueueSet, now: Instant, out: &mut RoundPlan) {
+        self.plan_into(queues, now, out);
     }
 
     fn label(&self) -> &'static str {
@@ -1219,6 +1296,54 @@ mod tests {
         ] {
             assert_eq!(make_scheduler(k, buckets(), 8).label(), l);
         }
+    }
+
+    #[test]
+    fn plan_round_into_reuses_the_recycled_plan() {
+        // The driver's arena hands the same RoundPlan back every round:
+        // stale state must be cleared, results must match a fresh plan,
+        // and steady-state rounds must not regrow the vectors.
+        let mut s = SpaceTimeSched::new(buckets(), 8).spatial_lanes(2, None);
+        let mut recycled = RoundPlan::default();
+        // Poison the recycled plan with stale junk.
+        recycled.n_lanes = 9;
+        recycled.drained = 99;
+        recycled.deadline_splits = 7;
+        for round in 0..12 {
+            let mut q = QueueSet::new(4, 16);
+            fill(&mut q, 0, 2, CLASS_SMALL);
+            fill(&mut q, 1, 2, CLASS_BIG);
+            let mut q2 = QueueSet::new(4, 16);
+            fill(&mut q2, 0, 2, CLASS_SMALL);
+            fill(&mut q2, 1, 2, CLASS_BIG);
+            s.plan_round_into(&mut q, Instant::now(), &mut recycled);
+            let mut fresh_sched = SpaceTimeSched::new(buckets(), 8).spatial_lanes(2, None);
+            let fresh = fresh_sched.plan_round_at(&mut q2, Instant::now());
+            assert_eq!(recycled.launches.len(), fresh.launches.len(), "round {round}");
+            assert_eq!(recycled.lane_of, fresh.lane_of);
+            assert_eq!(recycled.n_lanes, fresh.n_lanes);
+            assert_eq!(recycled.drained, fresh.drained);
+            assert_eq!(recycled.deadline_splits, 0);
+            let ids =
+                |p: &RoundPlan| -> Vec<u64> {
+                    p.launches.iter().flat_map(|l| l.entries.iter().map(|e| e.id)).collect()
+                };
+            assert_eq!(ids(&recycled), ids(&fresh), "same drain order and lanes");
+        }
+        // Steady state: planning the same shape of round must not have
+        // grown the recycled vectors past their warm capacity.
+        let caps = (recycled.launches.capacity(), recycled.lane_of.capacity());
+        for _ in 0..8 {
+            let mut q = QueueSet::new(4, 16);
+            fill(&mut q, 0, 2, CLASS_SMALL);
+            fill(&mut q, 1, 2, CLASS_BIG);
+            s.plan_round_into(&mut q, Instant::now(), &mut recycled);
+        }
+        assert_eq!(
+            (recycled.launches.capacity(), recycled.lane_of.capacity()),
+            caps,
+            "steady-state planning must reuse the recycled plan's buffers"
+        );
     }
 
     #[test]

@@ -176,22 +176,52 @@ impl<'e> SuperKernelExec<'e> {
         })
     }
 
+    /// Resolve a launch's device-resident weight operands through the
+    /// fusion cache, building them (host gather + device upload) on a
+    /// miss. `None` for weight-less kinds (raw batched GEMM).
+    ///
+    /// This is the **marshal half** of a launch, split out so the
+    /// pipelined driver can run it at dispatch time — overlapping round
+    /// N+1's weight uploads with round N's execution on the lane workers —
+    /// while the workers execute via [`SuperKernelExec::execute_prepared`]
+    /// without ever touching the cache or the registry. The lock covers
+    /// only the map lookup/insert; a cold build runs outside it, and a
+    /// racing duplicate build is dropped at `insert` (first entry wins).
+    pub fn resolve_weights(
+        engine: &PjrtEngine,
+        launch: &Launch,
+        tenants: &TenantRegistry,
+        cache: &Mutex<FusionCache>,
+    ) -> Result<Option<Arc<WeightSet>>> {
+        let w_pos = weight_positions(launch.class.kind);
+        if w_pos.is_empty() {
+            return Ok(None);
+        }
+        let key = FusionKey::of(launch);
+        if let Some(w) = cache.lock().unwrap().get(&key) {
+            return Ok(Some(w));
+        }
+        let host = Self::stack_weights(launch, tenants, w_pos);
+        let buffers = host
+            .iter()
+            .map(|t| engine.to_device(t))
+            .collect::<Result<Vec<_>>>()?;
+        let built = Arc::new(WeightSet::new(buffers));
+        Ok(Some(cache.lock().unwrap().insert(key, built)))
+    }
+
     /// Execute a launch: gather → ONE PJRT execution → scatter.
     ///
-    /// With a [`FusionCache`], weight operands ride device-resident buffers
-    /// (uploaded once per recurring lane assignment); only activations are
-    /// marshaled per launch. The cache sits behind a mutex because spatial
-    /// lanes execute concurrently; the lock is held only for the
-    /// lookup/build — the returned [`WeightSet`] handle outlives it — so
-    /// overlapped launches never serialize on each other's executions.
+    /// Single-owner convenience over [`SuperKernelExec::resolve_weights`]
+    /// plus [`SuperKernelExec::execute_prepared`]; the pipelined driver
+    /// calls the halves separately so weight marshaling overlaps the
+    /// previous round's execution.
     pub fn execute(
         &self,
         launch: &Launch,
         tenants: &TenantRegistry,
         cache: &Mutex<FusionCache>,
     ) -> Result<LaunchResult> {
-        let name = self.artifact_name(launch)?;
-        let exe = self.engine.load(&name)?;
         let first = launch
             .entries
             .first()
@@ -201,46 +231,46 @@ impl<'e> SuperKernelExec<'e> {
             .ok_or_else(|| anyhow!("unknown tenant {}", first.tenant))?
             .spec
             .clone();
+        let weights = Self::resolve_weights(self.engine, launch, tenants, cache)?;
+        self.execute_prepared(launch, &spec, weights.as_deref())
+    }
+
+    /// The **execution half**: run a launch whose weight operands are
+    /// already device-resident. Needs no registry or cache access — this
+    /// is what a persistent lane worker runs. `marshal_s` here covers the
+    /// activation gather/upload and output scatter; the weight upload
+    /// happens on the driver thread at dispatch, which times it and ships
+    /// it along (`lanepool::WorkItem::weights_marshal_s`) so the
+    /// completion's total marshal time still covers the whole launch
+    /// cost.
+    pub fn execute_prepared(
+        &self,
+        launch: &Launch,
+        spec: &ModelSpec,
+        weights: Option<&WeightSet>,
+    ) -> Result<LaunchResult> {
+        let name = self.artifact_name(launch)?;
+        let exe = self.engine.load(&name)?;
+        if launch.entries.is_empty() {
+            return Err(anyhow!("empty launch"));
+        }
         let kind = launch.class.kind;
         let w_pos = weight_positions(kind);
         let n_operands = exe.info.inputs.len();
 
         let t0 = Instant::now();
         // Host gather + upload of activations.
-        let acts = self.gather_activations(launch, &spec)?;
+        let acts = self.gather_activations(launch, spec)?;
         let act_buffers: Vec<(usize, xla::PjRtBuffer)> = acts
             .iter()
             .map(|(pos, t)| Ok((*pos, self.engine.to_device(t)?)))
             .collect::<Result<_>>()?;
-        // Weight operands from the fusion cache (device-resident on hit).
-        // The lock covers only the map lookup/insert; a cold build (host
-        // gather + device upload) runs outside it so concurrent lanes
-        // never serialize on each other's uploads — a racing duplicate
-        // build is dropped at `insert` (the first entry wins).
-        let weights: Option<Arc<WeightSet>> = if w_pos.is_empty() {
-            None
-        } else {
-            let key = FusionKey::of(launch);
-            let cached = cache.lock().unwrap().get(&key);
-            match cached {
-                Some(w) => Some(w),
-                None => {
-                    let host = Self::stack_weights(launch, tenants, w_pos);
-                    let buffers = host
-                        .iter()
-                        .map(|t| self.engine.to_device(t))
-                        .collect::<Result<Vec<_>>>()?;
-                    let built = Arc::new(WeightSet::new(buffers));
-                    Some(cache.lock().unwrap().insert(key, built))
-                }
-            }
-        };
         // Assemble positional operand list.
         let mut slots: Vec<Option<&xla::PjRtBuffer>> = vec![None; n_operands];
         for (pos, buf) in &act_buffers {
             slots[*pos] = Some(buf);
         }
-        if let Some(ws) = &weights {
+        if let Some(ws) = weights {
             for (wi, pos) in w_pos.iter().enumerate() {
                 slots[*pos] = Some(&ws.buffers()[wi]);
             }

@@ -140,6 +140,11 @@ pub struct SimReport {
     pub superkernel_launches: u64,
     /// Total problems executed inside super-kernels.
     pub fused_problems: u64,
+    /// Scheduling rounds executed: planning rounds for the space-time
+    /// policies, context quanta for time-mux, 0 for the round-less
+    /// policies. Completion events carry their round in
+    /// [`TraceEvent::round`].
+    pub rounds: u64,
     pub trace: Trace,
 }
 
@@ -235,7 +240,7 @@ fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
             report.tenants.push(tr);
             continue;
         }
-        for _ in 0..w.iterations {
+        for iter in 0..w.iterations {
             let start = t;
             for k in &w.kernels {
                 let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
@@ -247,6 +252,7 @@ fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
                     label: k.name.clone(),
                     sms: (k.ctas as f64).min(spec.sms as f64),
                     fused: k.fused,
+                    round: iter as u64,
                 });
                 t += dur;
                 report.kernel_launches += 1;
@@ -256,6 +262,11 @@ fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
             tr.completed += 1;
         }
         makespan = makespan.max(t);
+        // Exclusive "rounds" are inference iterations (events are tagged
+        // with theirs); the run spans the longest tenant's count.
+        if !w.kernels.is_empty() {
+            report.rounds = report.rounds.max(w.iterations as u64);
+        }
         report.tenants.push(tr);
     }
     report.makespan = makespan;
@@ -304,6 +315,7 @@ fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
         .filter(|(w, c)| pending(c, w))
         .count();
     let multi = live > 1;
+    let mut quantum: u64 = 0;
     while live > 0 {
         // Find next tenant with pending work.
         let mut hops = 0;
@@ -332,6 +344,7 @@ fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
                 label: k.name.clone(),
                 sms: (k.ctas as f64).min(spec.sms as f64),
                 fused: k.fused,
+                round: quantum,
             });
             clock += dur;
             quantum_left -= dur;
@@ -349,8 +362,10 @@ fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
                 }
             }
         }
+        quantum += 1;
         current = (current + 1) % n;
     }
+    report.rounds = quantum;
     report.makespan = clock;
     report
 }
@@ -531,6 +546,8 @@ fn run_space_mux(
                 label: k.name.clone(),
                 sms: (k.ctas as f64).min(spec.sms as f64 / (conc as f64)),
                 fused: k.fused,
+                // Event-driven path: no round structure to tag.
+                round: 0,
             });
             c.kidx += 1;
             if c.kidx == workloads[t].kernels.len() {
@@ -596,6 +613,7 @@ fn run_space_time(
         })
         .collect();
     let mut clock = 0.0f64;
+    let mut round: u64 = 0;
 
     loop {
         // Heads of all live tenants this round.
@@ -690,6 +708,10 @@ fn run_space_time(
                 label: merged.name.clone(),
                 sms: (merged.ctas as f64).min(ctx.sms),
                 fused: merged.fused,
+                // Round-tagged completion: every member of this round's
+                // plan carries the planning round it belongs to, matching
+                // the coordinator driver's pipelined attribution.
+                round,
             });
             report.kernel_launches += 1;
             if merged.fused > 1 {
@@ -718,7 +740,9 @@ fn run_space_time(
         }
         // The round barrier: the next round plans once every lane drains.
         clock += lane_cursor.iter().cloned().fold(0.0, f64::max);
+        round += 1;
     }
+    report.rounds = round;
     report.makespan = clock;
     report
 }
@@ -892,6 +916,35 @@ mod tests {
             })
         });
         assert!(overlapped, "concurrent lanes must overlap in the trace");
+    }
+
+    #[test]
+    fn space_time_completions_are_round_tagged() {
+        // Every completion event carries the planning round it belongs
+        // to: tags ascend with time, every round in [0, rounds) appears,
+        // and a saturated 10-tenant/4-iteration run spans several rounds.
+        let w = sgemm_workloads(10, 4, GemmShape::SQUARE_256);
+        let r = run(&cfg(Policy::SpaceTime { max_batch: 64 }).with_trace(), &w);
+        assert!(r.rounds >= 4, "expected one planning round per iteration");
+        assert_eq!(r.trace.rounds(), r.rounds);
+        let mut last_start = 0.0f64;
+        let mut seen = vec![false; r.rounds as usize];
+        let mut events = r.trace.events.clone();
+        events.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+        let mut last_round = 0u64;
+        for e in &events {
+            assert!(e.round < r.rounds);
+            assert!(e.round >= last_round, "round tags must ascend with time");
+            assert!(e.t_start >= last_start);
+            seen[e.round as usize] = true;
+            last_round = e.round;
+            last_start = e.t_start;
+        }
+        assert!(seen.iter().all(|&s| s), "every round must carry a launch");
+        // The quantum-structured baseline is tagged too.
+        let tm = run(&cfg(Policy::TimeMux).with_trace(), &w);
+        assert_eq!(tm.trace.rounds(), tm.rounds);
+        assert!(tm.rounds > 0);
     }
 
     #[test]

@@ -18,6 +18,13 @@ pub struct TraceEvent {
     pub sms: f64,
     /// Problems fused into this launch (R for a super-kernel).
     pub fused: u32,
+    /// Scheduling round this completion belongs to: the planning round
+    /// for space-time policies, the quantum index for time-mux, the
+    /// inference iteration for exclusive devices, 0 for the event-driven
+    /// space-mux path (which has no round structure). Mirrors the
+    /// coordinator driver's round-tagged completions, so pipelined-round
+    /// attribution can be checked against simulator ground truth.
+    pub round: u64,
 }
 
 /// An append-only trace. Capture can be disabled for long simulations.
@@ -91,22 +98,32 @@ impl Trace {
         out
     }
 
-    /// CSV dump (t_start, t_end, lane, tenant, label, sms, fused).
+    /// CSV dump (t_start, t_end, lane, tenant, label, sms, fused, round).
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("t_start,t_end,lane,tenant,label,sms,fused\n");
+        let mut out = String::from("t_start,t_end,lane,tenant,label,sms,fused,round\n");
         for e in &self.events {
             out.push_str(&format!(
-                "{:.9},{:.9},{},{},{},{:.1},{}\n",
+                "{:.9},{:.9},{},{},{},{:.1},{},{}\n",
                 e.t_start,
                 e.t_end,
                 e.lane,
                 e.tenant,
                 e.label.replace(',', ";"),
                 e.sms,
-                e.fused
+                e.fused,
+                e.round
             ));
         }
         out
+    }
+
+    /// Highest round tag recorded plus one (0 for an empty trace). NB: a
+    /// non-empty trace from a round-less policy (space-mux tags every
+    /// event 0) reports 1 here while `SimReport::rounds` stays 0 — use
+    /// the report for "how many rounds ran", this for "how far the tags
+    /// span".
+    pub fn rounds(&self) -> u64 {
+        self.events.iter().map(|e| e.round + 1).max().unwrap_or(0)
     }
 
     /// Device occupancy integral: Σ (duration · sms) / (makespan · total_sms).
@@ -137,6 +154,7 @@ mod tests {
             label: "k".into(),
             sms: 80.0,
             fused,
+            round: 0,
         }
     }
 
@@ -185,6 +203,7 @@ mod tests {
             label: "k".into(),
             sms: 40.0,
             fused: 1,
+            round: 0,
         });
         assert!((t.occupancy(80.0) - 0.5).abs() < 1e-12);
     }
@@ -203,5 +222,21 @@ mod tests {
         let t = Trace::new(true);
         assert!(t.render_gantt(10).contains("empty"));
         assert_eq!(t.occupancy(80.0), 0.0);
+        assert_eq!(t.rounds(), 0);
+    }
+
+    #[test]
+    fn round_tags_ride_events_and_csv() {
+        let mut t = Trace::new(true);
+        let mut e0 = ev(0.0, 1.0, 0, 0, 1);
+        e0.round = 0;
+        let mut e1 = ev(1.0, 2.0, 1, 1, 2);
+        e1.round = 3;
+        t.record(e0);
+        t.record(e1);
+        assert_eq!(t.rounds(), 4, "max tag + 1");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("t_start,") && csv.contains(",round"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",3"));
     }
 }

@@ -138,10 +138,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     };
     let warmed = coord.warmup().unwrap_or(0);
     eprintln!(
-        "serve: scheduler={} edf={} lanes={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
+        "serve: scheduler={} edf={} lanes={} pipeline_depth={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
         coord.scheduler_label(),
         coord.deadline_aware(),
         coord.lanes(),
+        coord.pipeline_depth(),
         n_tenants,
         coord.devices(),
         coord.queue_cap(),

@@ -148,6 +148,14 @@ pub struct DeviceSnapshot {
     /// relative prediction error) for every lane count with at least one
     /// overlapped observation.
     pub lane_calibration: Vec<(usize, f64)>,
+    /// Fusion-cache (device-resident weight set) lookups that hit.
+    pub cache_hits: u64,
+    /// Fusion-cache lookups that missed (a host gather + upload).
+    pub cache_misses: u64,
+    /// Fusion-cache entries evicted (LRU capacity + tenant invalidation).
+    pub cache_evictions: u64,
+    /// Weight sets currently resident on this device.
+    pub cache_resident: u64,
     /// FLOPs executed on this device.
     pub flops: f64,
 }
@@ -295,6 +303,10 @@ impl Snapshot {
                                     .collect(),
                             ),
                         ),
+                        ("cache_hits", Json::num(d.cache_hits as f64)),
+                        ("cache_misses", Json::num(d.cache_misses as f64)),
+                        ("cache_evictions", Json::num(d.cache_evictions as f64)),
+                        ("cache_resident", Json::num(d.cache_resident as f64)),
                         ("flops", Json::num(d.flops)),
                     ])
                 })
@@ -463,6 +475,10 @@ mod tests {
             lane_launches: vec![4, 3],
             lane_busy_s: vec![0.5, 0.25],
             lane_calibration: vec![(2, 0.0625)],
+            cache_hits: 6,
+            cache_misses: 2,
+            cache_evictions: 1,
+            cache_resident: 1,
             flops: 1e9,
         }];
         let back = crate::util::json::Json::parse(&snap.to_json().to_string()).unwrap();
@@ -482,6 +498,10 @@ mod tests {
         assert_eq!(busy[0].as_f64(), Some(0.5));
         let calib = d0.get("lane_calibration").unwrap();
         assert_eq!(calib.get("2").unwrap().as_f64(), Some(0.0625));
+        assert_eq!(d0.get("cache_hits").unwrap().as_f64(), Some(6.0));
+        assert_eq!(d0.get("cache_misses").unwrap().as_f64(), Some(2.0));
+        assert_eq!(d0.get("cache_evictions").unwrap().as_f64(), Some(1.0));
+        assert_eq!(d0.get("cache_resident").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

@@ -149,9 +149,14 @@ fn leader_loop(mut coord: Coordinator, rx: Receiver<Msg>, opts: ServeOpts) -> Co
         // Phase 1: accumulate submissions for the batching window. The
         // window clock starts at the FIRST enqueue of the round (not at
         // phase entry), so an idle server never charges waiting time
-        // against the batching budget.
+        // against the batching budget. With pipelined rounds in flight
+        // and nothing queued, skip straight to collection (after one
+        // non-blocking poll for messages) so responses of the round still
+        // executing are never held hostage to a lull in arrivals.
         let mut window_end: Option<Instant> = if coord.pending() > 0 {
             Some(Instant::now() + opts.batch_timeout)
+        } else if coord.in_flight_rounds() > 0 {
+            Some(Instant::now())
         } else {
             None
         };
@@ -187,15 +192,16 @@ fn leader_loop(mut coord: Coordinator, rx: Receiver<Msg>, opts: ServeOpts) -> Co
                 }
                 Some(Msg::Shutdown) => break 'serve,
                 None => {
-                    if coord.pending() > 0 {
-                        break; // window elapsed with work queued
+                    if coord.pending() > 0 || coord.in_flight_rounds() > 0 {
+                        break; // window elapsed with work queued/in flight
                     }
                     // Idle: keep waiting.
                 }
             }
         }
-        // Phase 2: one scheduling round.
-        if coord.pending() > 0 {
+        // Phase 2: one scheduling round (also collects rounds still in
+        // flight on the lane workers when the pipeline is deeper than 1).
+        if coord.pending() > 0 || coord.in_flight_rounds() > 0 {
             match coord.run_round() {
                 Ok(outcome) => {
                     for resp in outcome.responses {
@@ -211,8 +217,9 @@ fn leader_loop(mut coord: Coordinator, rx: Receiver<Msg>, opts: ServeOpts) -> Co
             }
         }
     }
-    // Drain what's left so no submitter hangs.
-    while coord.pending() > 0 {
+    // Drain what's left — queued AND in-flight pipelined rounds — so no
+    // submitter hangs and no completion is lost at shutdown.
+    while coord.pending() > 0 || coord.in_flight_rounds() > 0 {
         match coord.run_round() {
             Ok(outcome) => {
                 for resp in outcome.responses {

@@ -174,6 +174,84 @@ impl Table {
     }
 }
 
+/// Machine-readable bench result — one `results/BENCH_<name>.json` per
+/// figure bench, all sharing one schema (`name`, `throughput`, `p50`,
+/// `p99`, `slo_attainment`) so the perf trajectory is trackable across
+/// PRs and CI can upload the files as artifacts. Fields a bench has no
+/// natural value for stay at 0 (`slo_attainment`: null); each bench's
+/// field semantics are listed in the README's Performance section.
+pub struct BenchJson {
+    name: String,
+    /// Headline rate: requests-, rounds-, or FLOP-per-second — whatever
+    /// the figure's y-axis is.
+    throughput: f64,
+    /// Median of the bench's latency-like distribution, seconds.
+    p50_s: f64,
+    /// Tail of the same distribution, seconds.
+    p99_s: f64,
+    /// Fraction of deadline-carrying requests that met their SLO.
+    slo_attainment: Option<f64>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            throughput: 0.0,
+            p50_s: 0.0,
+            p99_s: 0.0,
+            slo_attainment: None,
+        }
+    }
+
+    pub fn throughput(mut self, v: f64) -> Self {
+        self.throughput = v;
+        self
+    }
+
+    pub fn p50_s(mut self, v: f64) -> Self {
+        self.p50_s = v;
+        self
+    }
+
+    pub fn p99_s(mut self, v: f64) -> Self {
+        self.p99_s = v;
+        self
+    }
+
+    pub fn slo_attainment(mut self, v: f64) -> Self {
+        self.slo_attainment = Some(v);
+        self
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("throughput", Json::num(self.throughput)),
+            ("p50", Json::num(self.p50_s)),
+            ("p99", Json::num(self.p99_s)),
+            (
+                "slo_attainment",
+                self.slo_attainment.map_or(Json::Null, Json::num),
+            ),
+        ])
+    }
+
+    /// Write `results/BENCH_<name>.json` (best-effort, like the CSVs).
+    pub fn write(&self) {
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        match std::fs::write(&path, self.to_json().to_string()) {
+            Ok(()) => println!("[bench json written to {}]", path.display()),
+            Err(e) => eprintln!("warn: could not write {path:?}: {e}"),
+        }
+    }
+}
+
 /// Banner printed at the top of each figure/table bench binary.
 pub fn banner(id: &str, claim: &str) {
     println!("==============================================================");
@@ -218,6 +296,29 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_json_schema_round_trips() {
+        let j = BenchJson::new("fig0_test")
+            .throughput(1234.5)
+            .p50_s(0.001)
+            .p99_s(0.005)
+            .slo_attainment(0.99)
+            .to_json();
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("fig0_test"));
+        assert_eq!(back.get("throughput").unwrap().as_f64(), Some(1234.5));
+        assert_eq!(back.get("p50").unwrap().as_f64(), Some(0.001));
+        assert_eq!(back.get("p99").unwrap().as_f64(), Some(0.005));
+        assert_eq!(back.get("slo_attainment").unwrap().as_f64(), Some(0.99));
+        // Unset attainment serializes as null.
+        let j2 = BenchJson::new("fig0_na").to_json();
+        let back2 = crate::util::json::Json::parse(&j2.to_string()).unwrap();
+        assert!(matches!(
+            back2.get("slo_attainment"),
+            Some(crate::util::json::Json::Null)
+        ));
     }
 
     #[test]

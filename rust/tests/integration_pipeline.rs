@@ -1,0 +1,214 @@
+//! Integration: the pipelined persistent-lane driver over real PJRT
+//! artifacts — `pipeline_depth = 1` reproduces the serial driver's
+//! results bit-for-bit, `pipeline_depth = 2` loses no completions across
+//! drain/shutdown, the round hot path stops allocating after warmup
+//! (arena growth counter), and snapshots never touch the cost-model lock.
+//!
+//! Requires `make artifacts` (skips with a message otherwise). The
+//! artifact-free halves of these properties are unit-tested in
+//! `coordinator::lanepool` (round tagging, zero-lost-completions
+//! shutdown) and `coordinator::driver` (arena counter, snapshot mirror).
+
+use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::Coordinator;
+use stgpu::runtime::HostTensor;
+use stgpu::util::prng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn config(pipeline_depth: usize, lanes: usize, n_tenants: usize) -> Option<ServerConfig> {
+    let dir = artifacts_dir()?;
+    Some(ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        pipeline_depth,
+        lanes,
+        artifacts_dir: dir,
+        tenants: (0..n_tenants)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    })
+}
+
+/// Run `waves` submit/drain waves with a fixed payload seed; returns
+/// responses sorted by request id as (id, tenant, fused_r, output).
+fn run_waves(
+    coord: &mut Coordinator,
+    waves: usize,
+    per_tenant: usize,
+) -> Vec<(u64, usize, usize, HostTensor)> {
+    let n = coord.tenants.len();
+    let mut rng = Rng::new(0x9A9A);
+    let mut out = Vec::new();
+    for _ in 0..waves {
+        for t in 0..n {
+            for _ in 0..per_tenant {
+                let payload = coord.random_payload(t, &mut rng);
+                coord.submit(t, payload).unwrap();
+            }
+        }
+        for r in coord.run_until_drained().unwrap() {
+            out.push((r.id, r.tenant, r.fused_r, r.output));
+        }
+    }
+    out.sort_by_key(|(id, ..)| *id);
+    out
+}
+
+#[test]
+fn depth1_reproduces_serial_results_bit_for_bit() {
+    let Some(cfg1) = config(1, 1, 4) else { return };
+    let cfg2 = ServerConfig { pipeline_depth: 2, ..cfg1.clone() };
+    let mut serial = Coordinator::new(&cfg1).unwrap();
+    let mut pipelined = Coordinator::new(&cfg2).unwrap();
+    assert_eq!(serial.pipeline_depth(), 1);
+    assert_eq!(pipelined.pipeline_depth(), 2);
+    let rs = run_waves(&mut serial, 3, 2);
+    let rp = run_waves(&mut pipelined, 3, 2);
+    assert_eq!(rs.len(), rp.len(), "same request set must fully complete");
+    for ((id_s, t_s, f_s, out_s), (id_p, t_p, f_p, out_p)) in rs.iter().zip(&rp) {
+        assert_eq!(id_s, id_p);
+        assert_eq!(t_s, t_p);
+        assert_eq!(f_s, f_p, "request {id_s}: same fused launch width");
+        assert_eq!(out_s, out_p, "request {id_s}: outputs must be bit-identical");
+    }
+    // Same plans on both sides: launch/drain accounting matches exactly.
+    let (ds, dp) = (serial.device_snapshots(), pipelined.device_snapshots());
+    assert_eq!(ds[0].launches, dp[0].launches);
+    assert_eq!(ds[0].drained, dp[0].drained);
+    assert_eq!(ds[0].superkernel_launches, dp[0].superkernel_launches);
+}
+
+#[test]
+fn pipelined_multilane_drain_loses_no_completions() {
+    // Two shape classes across 4 tenants, 2 lanes, depth 2: rounds
+    // overlap on the persistent workers, yet every submission completes
+    // exactly once and the per-lane accounting ties out.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        pipeline_depth: 2,
+        lanes: 2,
+        artifacts_dir: dir,
+        tenants: (0..4)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                model: if i % 2 == 0 {
+                    "sgemm:256x128x1152".into()
+                } else {
+                    "sgemm:256x256x256".into()
+                },
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(7);
+    let mut submitted = 0u64;
+    for _ in 0..6 {
+        for t in 0..4usize {
+            for _ in 0..2 {
+                let payload = coord.random_payload(t, &mut rng);
+                coord.submit(t, payload).unwrap();
+                submitted += 1;
+            }
+        }
+        let responses = coord.run_until_drained().unwrap();
+        assert!(!responses.is_empty());
+    }
+    assert_eq!(coord.in_flight_rounds(), 0, "drain must collect every round");
+    let snap = coord.device_snapshots();
+    let completed: u64 = coord
+        .snapshot()
+        .tenants
+        .values()
+        .map(|t| t.completed)
+        .sum();
+    assert_eq!(completed, submitted, "zero lost completions");
+    let lane_total: u64 = snap[0].lane_launches.iter().sum();
+    assert_eq!(lane_total, snap[0].launches, "per-lane accounting ties out");
+}
+
+#[test]
+fn round_hot_path_stops_allocating_after_warmup() {
+    // The acceptance claim: after warmup, steady identical rounds must
+    // not grow the arena (launch/lane vectors recycled across rounds).
+    let Some(cfg) = config(2, 1, 4) else { return };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(3);
+    let wave = |coord: &mut Coordinator, rng: &mut Rng| {
+        for t in 0..4usize {
+            let payload = coord.random_payload(t, rng);
+            coord.submit(t, payload).unwrap();
+        }
+        coord.run_until_drained().unwrap();
+    };
+    for _ in 0..4 {
+        wave(&mut coord, &mut rng); // warmup
+    }
+    let warmed = coord.arena_grows();
+    for _ in 0..16 {
+        wave(&mut coord, &mut rng);
+    }
+    assert_eq!(
+        coord.arena_grows(),
+        warmed,
+        "steady-state rounds must perform zero arena growths"
+    );
+}
+
+#[test]
+fn snapshot_never_blocks_on_the_cost_model() {
+    // Regression for the snapshot-path contention bug: hold the shard's
+    // cost-model lock (as an in-flight planning/feedback step would) and
+    // take a snapshot — the mirror-backed path must complete. Before the
+    // fix, device_snapshots() locked the cost model and this deadlocked.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        edf: true,
+        pipeline_depth: 2,
+        artifacts_dir: dir,
+        tenants: (0..2)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(11);
+    for t in 0..2usize {
+        let payload = coord.random_payload(t, &mut rng);
+        coord.submit(t, payload).unwrap();
+    }
+    coord.run_until_drained().unwrap();
+    let cm = coord.cost_model(0).expect("EDF shard has a cost model").clone();
+    let guard = cm.lock().unwrap();
+    let snaps = coord.device_snapshots();
+    assert_eq!(snaps.len(), 1);
+    assert!(snaps[0].launches > 0);
+    assert!(snaps[0].cost_calibration_error >= 0.0);
+    drop(guard);
+}
