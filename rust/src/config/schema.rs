@@ -85,6 +85,105 @@ impl TenantConfig {
     }
 }
 
+/// The validated `[controller]` section: the adaptive space-time
+/// controller's knobs ([`crate::coordinator::controller`]). With
+/// `adaptive = false` (the default) the coordinator never constructs a
+/// controller and the static `lanes` / `pipeline_depth` paths run
+/// unchanged — bit-for-bit the pre-controller behavior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// Close the loop: re-decide (lanes, depth) online per device shard.
+    pub adaptive: bool,
+    /// Rounds per decision window — both the evaluation cadence and the
+    /// minimum dwell between reconfigurations. Validated to [1, 65536].
+    pub dwell_rounds: u32,
+    /// Relative predicted-throughput gain a model-driven switch must show
+    /// (hysteresis; 0.05 == 5%). Validated finite, >= 0.
+    pub improvement: f64,
+    /// Windowed deadline-attainment target that arms the controller's SLO
+    /// pressure valve. Validated to (0, 1].
+    pub slo_target: f64,
+    /// Cap on the resident lane count the controller may choose
+    /// (candidates are 1..=max_lanes). 0 (default) inherits `lanes` from
+    /// `[server]`; explicit values validate to [1, 16] like `lanes`.
+    pub max_lanes: usize,
+    /// Cap on the effective pipeline depth. 0 (default) inherits
+    /// `pipeline_depth`; explicit values validate to [1, 8].
+    pub max_depth: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            adaptive: false,
+            dwell_rounds: 32,
+            improvement: 0.05,
+            slo_target: 0.99,
+            max_lanes: 0,
+            max_depth: 0,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// The lane cap with the `0 == inherit` default resolved against the
+    /// `[server]` section.
+    pub fn max_lanes_or(&self, lanes: usize) -> usize {
+        if self.max_lanes == 0 {
+            lanes.max(1)
+        } else {
+            self.max_lanes
+        }
+    }
+
+    /// The depth cap with the `0 == inherit` default resolved.
+    pub fn max_depth_or(&self, pipeline_depth: usize) -> usize {
+        if self.max_depth == 0 {
+            pipeline_depth.max(1)
+        } else {
+            self.max_depth
+        }
+    }
+
+    fn from_table(t: &TomlTable) -> Result<Self, String> {
+        let mut c = ControllerConfig::default();
+        if let Some(v) = t.get("adaptive").and_then(|v| v.as_bool()) {
+            c.adaptive = v;
+        }
+        if let Some(v) = t.get("dwell_rounds").and_then(|v| v.as_int()) {
+            if !(1..=65536).contains(&v) {
+                return Err("controller.dwell_rounds must be in [1, 65536]".into());
+            }
+            c.dwell_rounds = v as u32;
+        }
+        if let Some(v) = t.get("improvement").and_then(|v| v.as_float()) {
+            if !v.is_finite() || v < 0.0 {
+                return Err("controller.improvement must be finite and >= 0".into());
+            }
+            c.improvement = v;
+        }
+        if let Some(v) = t.get("slo_target").and_then(|v| v.as_float()) {
+            if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                return Err("controller.slo_target must be in (0, 1]".into());
+            }
+            c.slo_target = v;
+        }
+        if let Some(v) = t.get("max_lanes").and_then(|v| v.as_int()) {
+            if !(1..=16).contains(&v) {
+                return Err("controller.max_lanes must be in [1, 16]".into());
+            }
+            c.max_lanes = v as usize;
+        }
+        if let Some(v) = t.get("max_depth").and_then(|v| v.as_int()) {
+            if !(1..=8).contains(&v) {
+                return Err("controller.max_depth must be in [1, 8]".into());
+            }
+            c.max_depth = v as usize;
+        }
+        Ok(c)
+    }
+}
+
 /// Server configuration (the `stgpu serve` entrypoint and the examples).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -140,6 +239,9 @@ pub struct ServerConfig {
     pub eviction_enabled: bool,
     pub eviction_threshold: f64,
     pub eviction_strikes: u32,
+    /// Adaptive space-time controller (`[controller]` section): online
+    /// (lanes, depth) reconfiguration per device shard. Off by default.
+    pub controller: ControllerConfig,
     /// Directory holding the AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
     /// Worker threads executing batches.
@@ -166,6 +268,7 @@ impl Default for ServerConfig {
             eviction_enabled: true,
             eviction_threshold: 1.15,
             eviction_strikes: 3,
+            controller: ControllerConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             workers: 1,
             seed: 0,
@@ -256,6 +359,9 @@ impl ServerConfig {
         }
         if let Some(v) = server.get("seed").and_then(|v| v.as_int()) {
             cfg.seed = v as u64;
+        }
+        if let Some(section) = doc.sections.get("controller") {
+            cfg.controller = ControllerConfig::from_table(section)?;
         }
         if let Some(tenants) = doc.lists.get("tenant") {
             cfg.tenants = tenants
@@ -372,6 +478,53 @@ mod tests {
         let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
         assert!(bad("[server]\npipeline_depth = 0").is_err());
         assert!(bad("[server]\npipeline_depth = 9").is_err());
+    }
+
+    #[test]
+    fn controller_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[server]\nlanes = 4\npipeline_depth = 2\n\
+             [controller]\nadaptive = true\ndwell_rounds = 16\n\
+             improvement = 0.1\nslo_target = 0.95\nmax_lanes = 8\nmax_depth = 3",
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert!(cfg.controller.adaptive);
+        assert_eq!(cfg.controller.dwell_rounds, 16);
+        assert!((cfg.controller.improvement - 0.1).abs() < 1e-12);
+        assert!((cfg.controller.slo_target - 0.95).abs() < 1e-12);
+        assert_eq!(cfg.controller.max_lanes, 8);
+        assert_eq!(cfg.controller.max_depth, 3);
+        assert_eq!(cfg.controller.max_lanes_or(cfg.lanes), 8);
+        assert_eq!(cfg.controller.max_depth_or(cfg.pipeline_depth), 3);
+
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[controller]\ndwell_rounds = 0").is_err());
+        assert!(bad("[controller]\nimprovement = -0.1").is_err());
+        assert!(bad("[controller]\nslo_target = 0.0").is_err());
+        assert!(bad("[controller]\nslo_target = 1.5").is_err());
+        assert!(bad("[controller]\nmax_lanes = 17").is_err());
+        assert!(bad("[controller]\nmax_lanes = 0").is_err());
+        assert!(bad("[controller]\nmax_depth = 9").is_err());
+    }
+
+    #[test]
+    fn controller_defaults_off_and_inherit_server_caps() {
+        // No [controller] section: adaptive is OFF (the static lanes/depth
+        // paths run unchanged) and the caps inherit the [server] knobs.
+        let doc =
+            TomlDoc::parse("[server]\nlanes = 4\npipeline_depth = 3").unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert!(!cfg.controller.adaptive);
+        assert_eq!(cfg.controller.max_lanes, 0, "0 == inherit");
+        assert_eq!(cfg.controller.max_lanes_or(cfg.lanes), 4);
+        assert_eq!(cfg.controller.max_depth_or(cfg.pipeline_depth), 3);
+        assert_eq!(cfg.controller, ControllerConfig::default());
+        // An [controller] section with adaptive omitted stays off too.
+        let doc2 = TomlDoc::parse("[controller]\ndwell_rounds = 8").unwrap();
+        let cfg2 = ServerConfig::from_doc(&doc2).unwrap();
+        assert!(!cfg2.controller.adaptive);
+        assert_eq!(cfg2.controller.dwell_rounds, 8);
     }
 
     #[test]

@@ -1,0 +1,820 @@
+//! Adaptive space-time controller: online (lanes, pipeline depth)
+//! reconfiguration from observed load.
+//!
+//! The paper's core claim is a *dynamic* space-time scheduler — its wins
+//! come from adapting the space/time split to the offered load — yet after
+//! the spatial-lane and pipelining PRs our `lanes` and `pipeline_depth`
+//! were frozen at config-load time: a diurnal or bursty tenant mix ran the
+//! whole day at whatever split the operator guessed. D-STACK
+//! (arXiv:2304.13541) and DARIS (arXiv:2504.08795) both show the GPU
+//! partition must be chosen per-workload from a demand model to reach the
+//! knee of the throughput curve. This module closes that loop with a
+//! per-device-shard feedback controller that every `dwell_rounds`
+//! scheduling rounds re-decides the resident lane count and effective
+//! pipeline depth.
+//!
+//! ## Signals → decision
+//!
+//! ```text
+//!   QueueSet ──────── backlog, arrival-rate EWMA ────────┐
+//!   CostModel ─────── per-lane-count interference        │
+//!                     stretch (lane_stretch /            ├─► utility
+//!                     lane_calibration)                  │   argmax over
+//!   driver/replay ─── launches+requests per round,       │   (lanes, depth)
+//!                     mean launch duration, plan time    │   + hysteresis
+//!   SloMonitor ────── windowed deadline attainment ──────┘   + pressure
+//! ```
+//!
+//! The utility model prices a candidate `(n, d)` (lanes, depth) round:
+//!
+//! * effective lanes `e = min(n, launches_per_round)` — a plan never spans
+//!   more lanes than it has launches (`RoundPlan::lanes_used`),
+//! * round makespan `M(n) = ceil(L / e) * mean_launch_s * stretch(e)` —
+//!   launches execute in `ceil(L/e)` waves, each stretched by the
+//!   calibrated co-location interference term at `e` resident lanes,
+//! * round cadence `C(n, d) = plan_s + M(n)` serially (`d = 1`), or
+//!   `max(plan_s, M(n))` pipelined (`d >= 2`, planning hidden behind
+//!   execution — the fig11 mechanism),
+//! * predicted throughput `T = requests_per_round / C`,
+//! * predicted worst-case request latency `(d - 1) * C + M(n)` (pipeline
+//!   residency plus own round) — a candidate is **feasible** iff that fits
+//!   the tightest SLO among the shard's tenants.
+//!
+//! The controller picks the max-throughput feasible candidate (ties prefer
+//! fewer lanes, then shallower depth: less interference and less pipeline
+//! residency at equal predicted throughput); if nothing is feasible it
+//! picks the minimum-latency candidate — the least-bad degradation.
+//!
+//! ## Hysteresis and pressure valves
+//!
+//! Decisions are made at most once per `dwell_rounds` window, and a
+//! model-driven switch additionally requires a relative predicted-utility
+//! gain of at least `improvement` — together these stop the controller
+//! from flapping on EWMA noise (the property tests pin both bounds). Two
+//! pressure valves override the pure model, because the model can be
+//! *stale*: the stretch EWMA is only re-learned at lane counts that
+//! actually run (no launches → no observations → no recovery, the same
+//! trap as the admission-probe and solo-probe valves elsewhere):
+//!
+//! * **backlog pressure** — the backlog exceeds two rounds' worth of
+//!   drain and is not relieving (still growing, or the offered-load EWMA
+//!   exceeds the current point's predicted throughput — a sawtooth
+//!   backlog must not hide genuine overload), yet the model sees no
+//!   better candidate:
+//!   escalate anyway, straight to the wave-optimal lane count
+//!   `ceil(launches_per_round)` (the best case if interference were mild —
+//!   one wave per round). If the model was stale-pessimistic (the stretch
+//!   was learned on a different class mix), the overlapped measurements at
+//!   the explored count re-calibrate it within a few rounds and the model
+//!   keeps it; if the model was right, the next window walks back, and an
+//!   exploration backoff (one probe per two decision points) keeps the
+//!   controller at the model's choice most of the time.
+//! * **SLO pressure** — windowed deadline attainment fell below
+//!   `slo_target` while the backlog is NOT growing (so the misses come
+//!   from co-location stretch or pipeline residency, not under-capacity):
+//!   step one lane down (or, already serial, one depth down).
+//!
+//! With `adaptive = false` the driver never constructs a controller and
+//! the static `lanes` / `pipeline_depth` paths are executed unchanged.
+
+use std::collections::HashMap;
+
+/// Bounds and hysteresis knobs (the validated `[controller]` config
+/// section resolves into this — see [`crate::config::ControllerConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerParams {
+    /// Candidate lane counts are `1..=max_lanes`.
+    pub max_lanes: usize,
+    /// Candidate pipeline depths are `1..=max_depth`.
+    pub max_depth: usize,
+    /// Rounds between decision points; also the minimum dwell between two
+    /// reconfigurations (the controller changes at most once per window).
+    pub dwell_rounds: u32,
+    /// Relative predicted-throughput gain a model-driven switch must show
+    /// (0.05 == 5%); pressure-valve moves are exempt.
+    pub improvement: f64,
+    /// Windowed deadline-attainment target that arms the SLO pressure
+    /// valve when undershot.
+    pub slo_target: f64,
+}
+
+impl ControllerParams {
+    fn clamp_lanes(&self, lanes: usize) -> usize {
+        lanes.clamp(1, self.max_lanes.max(1))
+    }
+
+    fn clamp_depth(&self, depth: usize) -> usize {
+        depth.clamp(1, self.max_depth.max(1))
+    }
+}
+
+/// A (resident lanes, pipeline depth) operating point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub lanes: usize,
+    pub depth: usize,
+}
+
+/// One decision window's observed inputs. All durations in seconds; a
+/// signal a caller cannot provide stays at its neutral value (`0.0` /
+/// `None`), and a window without launch data (`mean_launch_s == 0`) keeps
+/// the current decision — there is nothing to model.
+#[derive(Debug, Clone, Default)]
+pub struct ControlSignals {
+    /// Requests pending admission on this shard right now.
+    pub backlog: usize,
+    /// Offered-load EWMA from the admission front
+    /// ([`crate::coordinator::queue::QueueSet::arrival_rate`]), req/s.
+    /// Second trigger of the backlog valve: a deep backlog counts as
+    /// pressure while it keeps growing OR while the offered rate exceeds
+    /// the current operating point's predicted throughput (a sawtooth
+    /// backlog that momentarily shrinks must not hide a genuine
+    /// overload). `0.0` (hosts without an estimator) degrades to the
+    /// growth-only trigger.
+    pub arrival_rate: f64,
+    /// EWMA launches per non-empty round.
+    pub launches_per_round: f64,
+    /// EWMA requests drained per non-empty round.
+    pub requests_per_round: f64,
+    /// EWMA *solo-equivalent* launch duration (overlapped measurements
+    /// deflated by their round's stretch before feeding this).
+    pub mean_launch_s: f64,
+    /// EWMA driver-side plan + marshal time per round.
+    pub plan_s: f64,
+    /// Interference stretch by resident lane count: `stretch[n]` prices a
+    /// launch co-resident with `n - 1` others. Index 0 unused; missing
+    /// counts are priced at the last known entry.
+    pub stretch: Vec<f64>,
+    /// Windowed deadline attainment since the previous decision (None
+    /// before any verdict this window).
+    pub slo_attainment: Option<f64>,
+    /// Tightest SLO among the shard's servable tenants, seconds
+    /// (`<= 0` == no deadline constraint; every candidate is feasible).
+    pub min_slo_s: f64,
+}
+
+impl ControlSignals {
+    fn stretch_at(&self, lanes: usize) -> f64 {
+        if lanes <= 1 {
+            return 1.0;
+        }
+        self.stretch
+            .get(lanes)
+            .or_else(|| self.stretch.last())
+            .copied()
+            .unwrap_or(1.0)
+            .max(1.0)
+    }
+}
+
+/// A scored candidate operating point.
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    decision: Decision,
+    throughput: f64,
+    latency_s: f64,
+    feasible: bool,
+}
+
+/// The per-shard feedback controller. Pure over its inputs: every decision
+/// is a function of the [`ControlSignals`] handed to `observe_round` at a
+/// dwell boundary plus the controller's own prior decision — no clocks, no
+/// randomness — so the same logic drives the real driver, the gpusim
+/// policy ([`crate::gpusim::Policy::SpaceTimeAdaptive`]), and the fig12
+/// trace replay, and property tests can replay arbitrary signal sequences.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    params: ControllerParams,
+    current: Decision,
+    rounds_since_eval: u32,
+    prev_backlog: usize,
+    /// Decision points evaluated (dwell boundaries with usable signals).
+    evals: u64,
+    /// Eval index of the last backlog-pressure exploration (0 == never);
+    /// probes are rate-limited to one per two decision points.
+    last_explore_eval: u64,
+    /// Times the decision actually changed.
+    reconfigs: u64,
+    /// Predicted throughput of the chosen decision at the last eval.
+    last_utility: f64,
+    /// Best predicted throughput per candidate lane count at the last
+    /// eval, ascending lane count (status JSON / serve table export).
+    last_utilities: Vec<(usize, f64)>,
+}
+
+impl AdaptiveController {
+    pub fn new(params: ControllerParams, initial: Decision) -> Self {
+        let current = Decision {
+            lanes: params.clamp_lanes(initial.lanes),
+            depth: params.clamp_depth(initial.depth),
+        };
+        Self {
+            params,
+            current,
+            rounds_since_eval: 0,
+            prev_backlog: 0,
+            evals: 0,
+            last_explore_eval: 0,
+            reconfigs: 0,
+            last_utility: 0.0,
+            last_utilities: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &ControllerParams {
+        &self.params
+    }
+
+    pub fn decision(&self) -> Decision {
+        self.current
+    }
+
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+
+    pub fn reconfigs(&self) -> u64 {
+        self.reconfigs
+    }
+
+    pub fn last_utility(&self) -> f64 {
+        self.last_utility
+    }
+
+    pub fn last_utilities(&self) -> &[(usize, f64)] {
+        &self.last_utilities
+    }
+
+    /// Score one candidate under the signals (see the module docs for the
+    /// model). `requests_per_round` and `mean_launch_s` are pre-floored by
+    /// the caller.
+    fn score(&self, s: &ControlSignals, lanes: usize, depth: usize) -> Candidate {
+        let launches = s.launches_per_round.max(1.0);
+        // A plan never spans more lanes than it has launches: price the
+        // candidate at its EFFECTIVE lane count so n > L ties with n == L
+        // instead of borrowing an unobserved (usually optimistic) stretch.
+        let eff = lanes.min(launches.ceil() as usize).max(1);
+        // Fractional waves (floored at one): the launches-per-round EWMA
+        // is an average, and rounding 1.1 launches up to a 2-wave serial
+        // round would make 2 lanes look like a 2x win on a workload that
+        // almost never has anything to overlap.
+        let waves = (launches / eff as f64).max(1.0);
+        let makespan = waves * s.mean_launch_s * s.stretch_at(eff);
+        let cadence = if depth <= 1 {
+            s.plan_s + makespan
+        } else {
+            s.plan_s.max(makespan)
+        };
+        let throughput = s.requests_per_round.max(1.0) / cadence.max(1e-12);
+        let latency_s = (depth as f64 - 1.0) * cadence + makespan;
+        let feasible = s.min_slo_s <= 0.0 || latency_s <= s.min_slo_s;
+        Candidate { decision: Decision { lanes, depth }, throughput, latency_s, feasible }
+    }
+
+    /// Account one scheduling round; returns true when a dwell window just
+    /// elapsed and the caller should gather [`ControlSignals`] and call
+    /// [`AdaptiveController::decide`]. Splitting the cadence from the
+    /// evaluation keeps signal gathering (which may lock a cost model) off
+    /// the per-round path.
+    pub fn tick(&mut self) -> bool {
+        self.rounds_since_eval += 1;
+        if self.rounds_since_eval < self.params.dwell_rounds.max(1) {
+            return false;
+        }
+        self.rounds_since_eval = 0;
+        true
+    }
+
+    /// Account one scheduling round; at each `dwell_rounds` boundary,
+    /// re-evaluate and possibly (at most once per window) change the
+    /// decision. Returns the current decision either way.
+    pub fn observe_round(&mut self, signals: &ControlSignals) -> Decision {
+        if self.tick() {
+            self.decide(signals)
+        } else {
+            self.current
+        }
+    }
+
+    /// One decision point: re-evaluate the candidate grid under `signals`
+    /// and possibly change the decision. Hosts must call this only when
+    /// [`AdaptiveController::tick`] returns true (or use
+    /// [`AdaptiveController::observe_round`], which enforces the cadence)
+    /// — the dwell/hysteresis guarantees are per decision point.
+    pub fn decide(&mut self, signals: &ControlSignals) -> Decision {
+        if signals.mean_launch_s <= 0.0 || signals.requests_per_round <= 0.0 {
+            // No launch data this window: nothing to model, hold steady.
+            return self.current;
+        }
+        self.evals += 1;
+
+        // Score the whole candidate grid; remember the per-lane-count best
+        // for the status export.
+        let mut best: Option<Candidate> = None;
+        let mut current_score = self.score(signals, self.current.lanes, self.current.depth);
+        self.last_utilities.clear();
+        for lanes in 1..=self.params.max_lanes.max(1) {
+            let mut lane_best = f64::NEG_INFINITY;
+            for depth in 1..=self.params.max_depth.max(1) {
+                let c = self.score(signals, lanes, depth);
+                lane_best = lane_best.max(c.throughput);
+                if c.decision == self.current {
+                    current_score = c;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        // Feasible beats infeasible; then max throughput;
+                        // ties prefer fewer lanes, then shallower depth
+                        // (strict inequality keeps the earlier — smaller —
+                        // candidate on ties). Among infeasible candidates,
+                        // min latency.
+                        if c.feasible != b.feasible {
+                            c.feasible
+                        } else if c.feasible {
+                            c.throughput > b.throughput * (1.0 + 1e-9)
+                        } else {
+                            c.latency_s < b.latency_s * (1.0 - 1e-9)
+                        }
+                    }
+                };
+                if better {
+                    best = Some(c);
+                }
+            }
+            self.last_utilities.push((lanes, lane_best));
+        }
+        let best = best.expect("candidate grid is non-empty");
+
+        let pressure_floor = 2.0 * signals.requests_per_round.max(1.0);
+        let backlog_pressure = signals.backlog as f64 > pressure_floor
+            && (signals.backlog >= self.prev_backlog
+                || signals.arrival_rate > current_score.throughput);
+        let slo_pressure = signals
+            .slo_attainment
+            .is_some_and(|a| a < self.params.slo_target);
+        self.prev_backlog = signals.backlog;
+
+        let mut next = self.current;
+        if slo_pressure && !backlog_pressure {
+            // Misses without a growing backlog: co-location stretch or
+            // pipeline residency is blowing deadlines the model thought
+            // feasible. Shed interference first, then pipeline residency.
+            if self.current.lanes > 1 {
+                next.lanes = self.current.lanes - 1;
+            } else if self.current.depth > 1 {
+                next.depth = self.current.depth - 1;
+            }
+        } else if best.decision != self.current
+            && (best.throughput > current_score.throughput * (1.0 + self.params.improvement)
+                || (!current_score.feasible && best.feasible)
+                || (backlog_pressure && best.throughput > current_score.throughput))
+        {
+            next = best.decision;
+        } else if backlog_pressure
+            && self.current.lanes < self.params.max_lanes
+            && (self.last_explore_eval == 0 || self.evals >= self.last_explore_eval + 2)
+        {
+            // Sustained backlog but the model sees nothing better: the
+            // stretch may be stale (learned on another class mix). Probe
+            // the wave-optimal lane count — the best candidate if
+            // interference were mild — so the measurements at that count
+            // either justify it or the next window walks back. Stepping
+            // one lane at a time would strand the probe at local dips
+            // (e.g. 3 lanes needs the same waves as 2 but stretches more).
+            let wave_optimal = (signals.launches_per_round.max(1.0).ceil() as usize)
+                .max(self.current.lanes + 1);
+            next.lanes = wave_optimal;
+            self.last_explore_eval = self.evals;
+        }
+        next.lanes = self.params.clamp_lanes(next.lanes);
+        next.depth = self.params.clamp_depth(next.depth);
+
+        self.last_utility = self.score(signals, next.lanes, next.depth).throughput;
+        if next != self.current {
+            self.current = next;
+            self.reconfigs += 1;
+        }
+        self.current
+    }
+}
+
+/// Rolling round-level signal estimators shared by every controller host
+/// (driver, gpusim policy, fig12 replay): EWMAs of launches/requests per
+/// non-empty round, solo-equivalent launch duration, driver-side plan
+/// time, and — for hosts without a
+/// [`CostModel`](crate::coordinator::costmodel::CostModel) — a measured
+/// per-lane-count stretch table seeded by the caller.
+#[derive(Debug)]
+pub struct SignalTracker {
+    alpha: f64,
+    launches_pr: f64,
+    requests_pr: f64,
+    mean_launch_s: f64,
+    plan_s: f64,
+    rounds: u64,
+    launch_obs: u64,
+    plan_obs: u64,
+    /// lane count -> measured stretch EWMA (hosts that feed
+    /// [`SignalTracker::observe_stretch`]; the driver reads its cost
+    /// model's calibrated table instead).
+    stretch: HashMap<usize, (f64, u64)>,
+}
+
+impl Default for SignalTracker {
+    fn default() -> Self {
+        Self::new(0.2)
+    }
+}
+
+impl SignalTracker {
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            alpha,
+            launches_pr: 0.0,
+            requests_pr: 0.0,
+            mean_launch_s: 0.0,
+            plan_s: 0.0,
+            rounds: 0,
+            launch_obs: 0,
+            plan_obs: 0,
+            stretch: HashMap::new(),
+        }
+    }
+
+    fn blend(alpha: f64, seeded: bool, ewma: f64, sample: f64) -> f64 {
+        if seeded {
+            alpha * sample + (1.0 - alpha) * ewma
+        } else {
+            sample
+        }
+    }
+
+    /// Account one non-empty round: how many launches it planned, how many
+    /// requests it drained, and the driver-side plan/marshal seconds.
+    pub fn observe_round(&mut self, launches: usize, drained: usize, plan_s: f64) {
+        if launches == 0 {
+            return;
+        }
+        let seeded = self.rounds > 0;
+        self.launches_pr = Self::blend(self.alpha, seeded, self.launches_pr, launches as f64);
+        self.requests_pr = Self::blend(self.alpha, seeded, self.requests_pr, drained as f64);
+        self.rounds += 1;
+        if plan_s.is_finite() && plan_s >= 0.0 {
+            let seeded = self.plan_obs > 0;
+            self.plan_s = Self::blend(self.alpha, seeded, self.plan_s, plan_s);
+            self.plan_obs += 1;
+        }
+    }
+
+    /// Account one measured launch duration, already deflated to its
+    /// solo-equivalent (divide an overlapped measurement by its round's
+    /// stretch before calling).
+    pub fn observe_launch(&mut self, solo_s: f64) {
+        if !solo_s.is_finite() || solo_s <= 0.0 {
+            return;
+        }
+        let seeded = self.launch_obs > 0;
+        self.mean_launch_s = Self::blend(self.alpha, seeded, self.mean_launch_s, solo_s);
+        self.launch_obs += 1;
+    }
+
+    /// Account one measured co-location stretch (`measured / solo`) at
+    /// `lanes` concurrently-resident lanes.
+    pub fn observe_stretch(&mut self, lanes: usize, ratio: f64) {
+        if lanes <= 1 || !ratio.is_finite() || ratio <= 0.0 {
+            return;
+        }
+        let entry = self.stretch.entry(lanes).or_insert((0.0, 0));
+        entry.0 = Self::blend(self.alpha, entry.1 > 0, entry.0, ratio.max(1.0));
+        entry.1 += 1;
+    }
+
+    pub fn launches_per_round(&self) -> f64 {
+        self.launches_pr
+    }
+
+    pub fn requests_per_round(&self) -> f64 {
+        self.requests_pr
+    }
+
+    pub fn mean_launch_s(&self) -> f64 {
+        self.mean_launch_s
+    }
+
+    pub fn plan_s(&self) -> f64 {
+        self.plan_s
+    }
+
+    /// Stretch table `[_, 1.0, s2, .., s_max]` for [`ControlSignals`]:
+    /// measured EWMAs where observed, else `seed(n)` (callers pass the
+    /// device spec's analytic `lane_stretch`).
+    pub fn stretch_table(&self, max_lanes: usize, seed: impl Fn(usize) -> f64) -> Vec<f64> {
+        (0..=max_lanes.max(1))
+            .map(|n| {
+                if n <= 1 {
+                    1.0
+                } else {
+                    match self.stretch.get(&n) {
+                        Some(&(s, obs)) if obs > 0 => s.max(1.0),
+                        _ => seed(n).max(1.0),
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(max_lanes: usize, max_depth: usize, dwell: u32) -> ControllerParams {
+        ControllerParams {
+            max_lanes,
+            max_depth,
+            dwell_rounds: dwell,
+            improvement: 0.05,
+            slo_target: 0.99,
+        }
+    }
+
+    fn signals(
+        launches: f64,
+        requests: f64,
+        dur: f64,
+        stretch: Vec<f64>,
+        slo: f64,
+    ) -> ControlSignals {
+        ControlSignals {
+            backlog: 0,
+            arrival_rate: 0.0,
+            launches_per_round: launches,
+            requests_per_round: requests,
+            mean_launch_s: dur,
+            plan_s: 0.0,
+            stretch,
+            slo_attainment: None,
+            min_slo_s: slo,
+        }
+    }
+
+    /// Drive one decision (dwell boundary) out of the controller.
+    fn decide(ctl: &mut AdaptiveController, s: &ControlSignals) -> Decision {
+        let dwell = ctl.params().dwell_rounds;
+        let mut d = ctl.decision();
+        for _ in 0..dwell {
+            d = ctl.observe_round(s);
+        }
+        d
+    }
+
+    #[test]
+    fn single_launch_rounds_stay_serial() {
+        // L == 1: nothing to overlap, more lanes only add stretch.
+        let mut ctl =
+            AdaptiveController::new(params(4, 1, 8), Decision { lanes: 1, depth: 1 });
+        let s = signals(1.0, 1.0, 1e-3, vec![1.0, 1.0, 1.3, 1.6, 2.0], 0.0);
+        for _ in 0..5 {
+            assert_eq!(decide(&mut ctl, &s), Decision { lanes: 1, depth: 1 });
+        }
+        assert_eq!(ctl.reconfigs(), 0);
+    }
+
+    #[test]
+    fn wide_rounds_with_mild_interference_scale_out() {
+        // 4 launches per round at stretch(4) = 1.3: T(4) = 4/1.3 = 3.1x
+        // the serial candidate — the controller must take it.
+        let mut ctl =
+            AdaptiveController::new(params(4, 1, 4), Decision { lanes: 1, depth: 1 });
+        let s = signals(4.0, 16.0, 1e-3, vec![1.0, 1.0, 1.1, 1.2, 1.3], 0.0);
+        assert_eq!(decide(&mut ctl, &s), Decision { lanes: 4, depth: 1 });
+        assert_eq!(ctl.reconfigs(), 1);
+        // Stationary signals: no further flapping.
+        for _ in 0..5 {
+            assert_eq!(decide(&mut ctl, &s), Decision { lanes: 4, depth: 1 });
+        }
+        assert_eq!(ctl.reconfigs(), 1);
+        assert!(ctl.last_utility() > 0.0);
+        assert_eq!(ctl.last_utilities().len(), 4);
+    }
+
+    #[test]
+    fn brutal_interference_pulls_back_to_serial() {
+        // stretch(n) >= n: overlap never pays; from a 4-lane start the
+        // controller must walk back to 1.
+        let mut ctl =
+            AdaptiveController::new(params(4, 1, 4), Decision { lanes: 4, depth: 1 });
+        let s = signals(4.0, 16.0, 1e-3, vec![1.0, 1.0, 2.2, 3.4, 4.8], 0.0);
+        let mut last = ctl.decision();
+        for _ in 0..6 {
+            last = decide(&mut ctl, &s);
+        }
+        assert_eq!(last, Decision { lanes: 1, depth: 1 });
+    }
+
+    #[test]
+    fn tight_slo_forbids_pipeline_residency() {
+        // Loose SLO: depth 2 hides the plan time -> higher throughput.
+        let loose = signals(2.0, 8.0, 1e-3, vec![1.0, 1.0, 1.1], 1.0);
+        let mut s = ControlSignals { plan_s: 1e-3, ..loose };
+        let mut ctl =
+            AdaptiveController::new(params(2, 2, 4), Decision { lanes: 1, depth: 1 });
+        assert_eq!(decide(&mut ctl, &s), Decision { lanes: 2, depth: 2 });
+        // Tight SLO: (d-1)*cadence + M no longer fits -> depth 1.
+        s.min_slo_s = 2.0e-3;
+        let mut ctl =
+            AdaptiveController::new(params(2, 2, 4), Decision { lanes: 1, depth: 1 });
+        let d = decide(&mut ctl, &s);
+        assert_eq!(d.depth, 1, "pipeline residency must respect the SLO");
+    }
+
+    #[test]
+    fn backlog_pressure_explores_past_a_stale_model() {
+        // The stretch table claims overlap never pays (learned on another
+        // class mix), but the backlog keeps growing: the valve must probe
+        // the wave-optimal lane count anyway; fresh (mild) measurements at
+        // that count then let the model keep it.
+        let mut ctl =
+            AdaptiveController::new(params(4, 1, 4), Decision { lanes: 1, depth: 1 });
+        let mut s = signals(4.0, 16.0, 1e-3, vec![1.0, 1.0, 2.2, 3.4, 4.8], 0.0);
+        s.backlog = 1000;
+        assert_eq!(decide(&mut ctl, &s).lanes, 4, "probe ceil(L) = 4 lanes");
+        // Running at 4 lanes re-measured the stretch as mild: the model
+        // now justifies the probe on its own and holds the point even
+        // after the backlog clears.
+        s.stretch = vec![1.0, 1.0, 1.1, 1.2, 1.3];
+        s.backlog = 1200;
+        assert_eq!(decide(&mut ctl, &s).lanes, 4);
+        s.backlog = 0;
+        assert_eq!(decide(&mut ctl, &s).lanes, 4);
+        assert_eq!(ctl.reconfigs(), 1, "one probe, no flapping");
+    }
+
+    #[test]
+    fn offered_load_above_capacity_pressures_even_a_shrinking_backlog() {
+        // A sawtooth backlog momentarily shrinks while the offered-load
+        // EWMA still exceeds the current point's predicted throughput:
+        // the arrival-rate disjunct must keep the valve armed. The
+        // improvement threshold is set high so only the valve can move.
+        let mut ctl = AdaptiveController::new(
+            ControllerParams {
+                max_lanes: 4,
+                max_depth: 1,
+                dwell_rounds: 4,
+                improvement: 0.5,
+                slo_target: 0.99,
+            },
+            Decision { lanes: 4, depth: 1 },
+        );
+        let mut s = signals(4.0, 16.0, 1e-3, vec![1.0, 1.0, 2.2, 3.4, 4.8], 0.0);
+        // Window 1: deep growing backlog -> pressure switches to the
+        // model's better candidate (serial, under this brutal stretch).
+        s.backlog = 5000;
+        assert_eq!(decide(&mut ctl, &s).lanes, 1);
+        // Window 2: backlog shrinking, no offered-load signal: no
+        // pressure, the model holds.
+        s.backlog = 4000;
+        assert_eq!(decide(&mut ctl, &s).lanes, 1);
+        // Window 3: still shrinking, but the offered rate exceeds the
+        // serial candidate's predicted throughput (~4000 req/s): the
+        // valve re-arms and probes the wave-optimal count.
+        s.backlog = 3000;
+        s.arrival_rate = 50_000.0;
+        assert_eq!(decide(&mut ctl, &s).lanes, 4, "rate trigger must probe");
+    }
+
+    #[test]
+    fn slo_pressure_sheds_interference_first_then_depth() {
+        let mut ctl =
+            AdaptiveController::new(params(4, 2, 4), Decision { lanes: 3, depth: 2 });
+        let mut s = signals(4.0, 16.0, 1e-3, vec![1.0, 1.0, 1.1, 1.2, 1.3], 0.0);
+        s.slo_attainment = Some(0.5);
+        assert_eq!(decide(&mut ctl, &s), Decision { lanes: 2, depth: 2 });
+        assert_eq!(decide(&mut ctl, &s), Decision { lanes: 1, depth: 2 });
+        assert_eq!(decide(&mut ctl, &s), Decision { lanes: 1, depth: 1 });
+        // Fully shed: nothing left to step down; holds.
+        assert_eq!(decide(&mut ctl, &s), Decision { lanes: 1, depth: 1 });
+    }
+
+    #[test]
+    fn no_signal_window_holds_the_decision() {
+        let mut ctl =
+            AdaptiveController::new(params(4, 2, 4), Decision { lanes: 2, depth: 2 });
+        let s = ControlSignals::default();
+        for _ in 0..4 {
+            assert_eq!(decide(&mut ctl, &s), Decision { lanes: 2, depth: 2 });
+        }
+        assert_eq!(ctl.evals(), 0, "empty windows are not decision points");
+    }
+
+    #[test]
+    fn initial_decision_clamped_to_bounds() {
+        let ctl =
+            AdaptiveController::new(params(2, 1, 4), Decision { lanes: 9, depth: 7 });
+        assert_eq!(ctl.decision(), Decision { lanes: 2, depth: 1 });
+    }
+
+    #[test]
+    fn prop_dwell_and_bounds_hold_under_arbitrary_signals() {
+        // The ISSUE's controller property: over random signal sequences,
+        // (a) the decision never changes more than once per dwell window,
+        // (b) it always stays within [1, max_lanes] x [1, max_depth].
+        use crate::util::prop::run_prop;
+        run_prop("controller dwell + bounds", 0xAD17, 64, |rng| {
+            let max_lanes = 1 + rng.gen_range(8) as usize;
+            let max_depth = 1 + rng.gen_range(4) as usize;
+            let dwell = 1 + rng.gen_range(6) as u32;
+            let mut ctl = AdaptiveController::new(
+                ControllerParams {
+                    max_lanes,
+                    max_depth,
+                    dwell_rounds: dwell,
+                    improvement: rng.gen_range(20) as f64 / 100.0,
+                    slo_target: 0.9,
+                },
+                Decision {
+                    lanes: 1 + rng.gen_range(12) as usize,
+                    depth: 1 + rng.gen_range(6) as usize,
+                },
+            );
+            let mut last = ctl.decision();
+            let mut changes_this_window = 0u32;
+            let mut round_in_window = 0u32;
+            for _ in 0..200 {
+                let stretch: Vec<f64> = (0..=max_lanes)
+                    .map(|n| 1.0 + n as f64 * rng.gen_range(200) as f64 / 100.0)
+                    .collect();
+                let s = ControlSignals {
+                    backlog: rng.gen_range(2000) as usize,
+                    arrival_rate: rng.gen_range(10_000) as f64,
+                    launches_per_round: rng.gen_range(12) as f64,
+                    requests_per_round: rng.gen_range(64) as f64,
+                    mean_launch_s: rng.gen_range(1000) as f64 * 1e-5,
+                    plan_s: rng.gen_range(100) as f64 * 1e-5,
+                    stretch,
+                    slo_attainment: if rng.gen_bool(0.5) {
+                        Some(rng.gen_range(100) as f64 / 100.0)
+                    } else {
+                        None
+                    },
+                    min_slo_s: rng.gen_range(100) as f64 * 1e-3,
+                };
+                let d = ctl.observe_round(&s);
+                assert!((1..=max_lanes).contains(&d.lanes), "lanes {d:?}");
+                assert!((1..=max_depth).contains(&d.depth), "depth {d:?}");
+                round_in_window += 1;
+                if d != last {
+                    changes_this_window += 1;
+                    last = d;
+                }
+                if round_in_window == dwell {
+                    assert!(
+                        changes_this_window <= 1,
+                        "{changes_this_window} changes within one dwell window"
+                    );
+                    round_in_window = 0;
+                    changes_this_window = 0;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tracker_ewmas_seed_from_first_sample() {
+        let mut t = SignalTracker::default();
+        t.observe_round(4, 16, 2e-4);
+        assert_eq!(t.launches_per_round(), 4.0);
+        assert_eq!(t.requests_per_round(), 16.0);
+        assert_eq!(t.plan_s(), 2e-4);
+        t.observe_launch(1e-3);
+        assert_eq!(t.mean_launch_s(), 1e-3);
+        // Empty rounds and garbage are inert.
+        t.observe_round(0, 0, 1.0);
+        t.observe_launch(f64::NAN);
+        t.observe_launch(-1.0);
+        assert_eq!(t.launches_per_round(), 4.0);
+        assert_eq!(t.mean_launch_s(), 1e-3);
+        // Blending moves toward new samples.
+        t.observe_round(8, 32, 2e-4);
+        assert!(t.launches_per_round() > 4.0 && t.launches_per_round() < 8.0);
+    }
+
+    #[test]
+    fn tracker_stretch_table_blends_measured_over_seed() {
+        let mut t = SignalTracker::default();
+        let seed = |n: usize| 1.0 + 0.08 * (n as f64 - 1.0);
+        let table = t.stretch_table(4, seed);
+        assert_eq!(table.len(), 5);
+        assert_eq!(table[1], 1.0);
+        assert!((table[4] - 1.24).abs() < 1e-12, "unobserved counts seed");
+        for _ in 0..50 {
+            t.observe_stretch(2, 1.9);
+        }
+        t.observe_stretch(1, 9.0); // solo "stretch" is meaningless: ignored
+        t.observe_stretch(3, f64::NAN);
+        let table = t.stretch_table(4, seed);
+        assert!((table[2] - 1.9).abs() < 0.05, "measured wins: {}", table[2]);
+        assert!((table[3] - 1.16).abs() < 1e-12, "3 still seeded");
+    }
+}

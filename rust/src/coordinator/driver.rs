@@ -52,6 +52,22 @@
 //! locking each shard's cost model — `snapshot()`/status JSON never
 //! contends with planning or execution.
 //!
+//! ## Adaptive space-time control
+//!
+//! With `[controller] adaptive = true`, each shard carries an
+//! [`AdaptiveController`] that every `dwell_rounds` rounds re-decides the
+//! resident lane count and effective pipeline depth from observed
+//! signals: backlog and offered-load EWMA from the shard's `QueueSet`,
+//! launches/requests-per-round and mean launch duration from its
+//! [`SignalTracker`], the calibrated per-lane-count interference stretch
+//! from its cost model, and windowed deadline attainment. A lane change
+//! resizes the persistent pool in place ([`LanePool::resize`] — retiring
+//! workers drain their queues, so no round-tagged completion is ever
+//! lost) and re-targets the scheduler (`Scheduler::set_lanes`); the
+//! recycled arena and scheduler scratch survive, keeping the hot path
+//! allocation-free across reconfigurations. `adaptive = false` (default)
+//! constructs no controller and runs the static paths bit-for-bit.
+//!
 //! ## Scheduling semantics (unchanged)
 //!
 //! Every round, for each device shard: the shard's scheduler drains its
@@ -85,6 +101,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::ServerConfig;
+use crate::coordinator::controller::{
+    AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
+};
 use crate::coordinator::costmodel::{CostModel, SharedCostModel};
 use crate::coordinator::fusion_cache::{FusionCache, FusionCacheStats};
 use crate::coordinator::lanepool::{Completion, LanePool, LaunchExecutor, PjrtExecutor, WorkItem};
@@ -278,6 +297,23 @@ struct DeviceShard {
     /// Fused launches the EDF planner split to protect a deadline.
     deadline_splits: u64,
     flops: f64,
+    /// Adaptive space-time controller (Some iff `[controller] adaptive`
+    /// and the space-time scheduler): re-decides (lanes, depth) every
+    /// dwell window from this shard's observed signals.
+    controller: Option<AdaptiveController>,
+    /// Round-level signal EWMAs feeding the controller (only updated when
+    /// a controller is attached, so `adaptive = false` runs the exact
+    /// static code path).
+    tracker: SignalTracker,
+    /// Lanes currently resident (== pool width; static `lanes` when the
+    /// controller is off).
+    resident_lanes: usize,
+    /// Effective pipeline depth (static `pipeline_depth` when off).
+    resident_depth: usize,
+    /// Deadline verdicts since the controller's last decision point (the
+    /// windowed attainment signal; reset at each evaluation).
+    win_hits: u64,
+    win_misses: u64,
 }
 
 /// The coordinator.
@@ -404,39 +440,79 @@ impl Coordinator {
         let spacetime = cfg.scheduler == crate::config::SchedulerKind::SpaceTime;
         let edf = cfg.edf && spacetime;
         let lanes = if spacetime { cfg.lanes.max(1) } else { 1 };
+        let pipeline_depth = cfg.pipeline_depth.max(1);
+        // Adaptive space-time control only applies to the space-time
+        // scheduler (the §3 baselines stay exactly the paper's policies).
+        // The controller's caps resolve against the static knobs; the pool
+        // starts at the static lane count and the controller reconfigures
+        // from there. With `adaptive = false` nothing below changes:
+        // resident == static, no controller, no tracker feeding.
+        let adaptive = cfg.controller.adaptive && spacetime;
+        let ctrl_max_lanes = cfg.controller.max_lanes_or(lanes);
+        let ctrl_max_depth = cfg.controller.max_depth_or(pipeline_depth);
+        let (init_lanes, init_depth, lanes_cap) = if adaptive {
+            (
+                lanes.clamp(1, ctrl_max_lanes),
+                pipeline_depth.clamp(1, ctrl_max_depth),
+                lanes.max(ctrl_max_lanes),
+            )
+        } else {
+            (lanes, pipeline_depth, lanes)
+        };
         let executor: Arc<dyn LaunchExecutor> =
             Arc::new(PjrtExecutor::new(engine.clone(), flavor));
         let shards = (0..devices)
             .map(|_| {
-                let cost_model: Option<SharedCostModel> = if edf || lanes > 1 {
-                    Some(Arc::new(Mutex::new(CostModel::new())))
-                } else {
-                    None
-                };
+                let cost_model: Option<SharedCostModel> =
+                    if edf || lanes > 1 || adaptive {
+                        Some(Arc::new(Mutex::new(CostModel::new())))
+                    } else {
+                        None
+                    };
                 let scheduler = crate::coordinator::scheduler::make_scheduler_spatial(
                     cfg.scheduler,
                     buckets.clone(),
                     cfg.max_batch as usize,
                     policy,
                     cfg.slo_aware,
-                    lanes,
+                    init_lanes,
                     cost_model.clone(),
                     if edf { Some(cfg.deadline_slack) } else { None },
                 );
+                let controller = if adaptive {
+                    Some(AdaptiveController::new(
+                        ControllerParams {
+                            max_lanes: ctrl_max_lanes,
+                            max_depth: ctrl_max_depth,
+                            dwell_rounds: cfg.controller.dwell_rounds,
+                            improvement: cfg.controller.improvement,
+                            slo_target: cfg.controller.slo_target,
+                        },
+                        Decision { lanes: init_lanes, depth: init_depth },
+                    ))
+                } else {
+                    None
+                };
                 DeviceShard {
                     queues: QueueSet::new(tenants.len(), cfg.queue_depth),
                     scheduler,
                     cost_model,
-                    pool: LanePool::new(lanes, executor.clone()),
+                    pool: LanePool::new(init_lanes, executor.clone()),
                     tickets: VecDeque::new(),
                     fusion_cache: Mutex::new(FusionCache::new(256)),
                     arena: RoundArena::default(),
-                    mirror: SnapshotMirror::new(lanes),
+                    mirror: SnapshotMirror::new(lanes_cap),
                     launches: 0,
                     superkernel_launches: 0,
                     drained: 0,
                     deadline_splits: 0,
                     flops: 0.0,
+                    controller,
+                    tracker: SignalTracker::default(),
+                    resident_lanes: init_lanes,
+                    resident_depth: init_depth,
+                    win_hits: 0,
+                    win_misses: 0,
                 }
             })
             .collect();
@@ -510,9 +586,26 @@ impl Coordinator {
         self.lanes
     }
 
-    /// Rounds allowed in flight per shard (1 == serial round loop).
+    /// Rounds allowed in flight per shard (1 == serial round loop). The
+    /// configured static value; with the adaptive controller on, the
+    /// effective per-shard depth is [`Coordinator::resident`].
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
+    }
+
+    /// Whether the adaptive space-time controller is driving (lanes,
+    /// depth) online.
+    pub fn adaptive(&self) -> bool {
+        self.shards.iter().any(|s| s.controller.is_some())
+    }
+
+    /// The (resident lanes, effective depth) operating point of one shard
+    /// right now — the adaptive controller's current decision, or the
+    /// static knobs when it is off. None for an unknown device.
+    pub fn resident(&self, device: usize) -> Option<(usize, usize)> {
+        self.shards
+            .get(device)
+            .map(|s| (s.resident_lanes, s.resident_depth))
     }
 
     /// Rounds dispatched to lane workers but not yet fully collected,
@@ -580,6 +673,16 @@ impl Coordinator {
                     lane_launches: s.mirror.lane_launches(),
                     lane_busy_s: s.mirror.lane_busy_s(),
                     lane_calibration: s.mirror.lane_calibration(),
+                    ctrl_adaptive: s.controller.is_some(),
+                    ctrl_lanes: s.resident_lanes as u64,
+                    ctrl_depth: s.resident_depth as u64,
+                    ctrl_reconfigs: s.controller.as_ref().map_or(0, |c| c.reconfigs()),
+                    ctrl_evals: s.controller.as_ref().map_or(0, |c| c.evals()),
+                    ctrl_utility: s.controller.as_ref().map_or(0.0, |c| c.last_utility()),
+                    ctrl_utilities: s
+                        .controller
+                        .as_ref()
+                        .map_or_else(Vec::new, |c| c.last_utilities().to_vec()),
                     cache_hits: cache.stats.hits,
                     cache_misses: cache.stats.misses,
                     cache_evictions: cache.stats.evictions,
@@ -674,15 +777,19 @@ impl Coordinator {
                     // misses its deadline — which is counted, not hidden.
                     const PROBE_EVERY: u64 = 16;
                     if self.infeasible_seen % PROBE_EVERY != 0 {
+                        // The shed request is still offered load: keep the
+                        // shard's arrival-rate estimate truthful.
+                        self.shards[device].queues.note_arrival(Instant::now());
                         self.tenant_metrics[tenant].record_rejection();
                         return Err(Reject::DeadlineInfeasible);
                     }
                 }
             }
         }
-        // Global admission cap across every shard: shed, don't grow.
+        // Global admission cap across every shard: shed, don't grow (the
+        // shed still counts toward the shard's offered-load estimate).
         if self.pending() >= self.queue_cap {
-            self.shards[device].queues.record_shed();
+            self.shards[device].queues.record_shed_at(Instant::now());
             self.tenant_metrics[tenant].record_rejection();
             return Err(Reject::Overloaded);
         }
@@ -733,7 +840,8 @@ impl Coordinator {
         };
         self.rounds_total += 1;
         let round = self.rounds_total;
-        let probe_solo = self.lanes > 1 && self.rounds_total % SOLO_PROBE_EVERY == 0;
+        let probe_solo = self.rounds_total % SOLO_PROBE_EVERY == 0
+            && self.shards.iter().any(|s| s.resident_lanes > 1);
         if probe_solo {
             // A solo probe's measurements must be genuinely un-overlapped
             // or they would pollute the solo track with interference from
@@ -752,7 +860,9 @@ impl Coordinator {
             // overlap with: collect every outstanding round so responses
             // are never held hostage to a lull in arrivals.
             let allowed = if dispatched && !probe_solo {
-                self.pipeline_depth - 1
+                // Effective depth is per shard: the adaptive controller
+                // may have chosen a shallower pipeline than configured.
+                self.shards[device].resident_depth - 1
             } else {
                 0
             };
@@ -798,10 +908,13 @@ impl Coordinator {
         outcome: &mut RoundOutcome,
     ) -> Result<bool> {
         let now = Instant::now();
+        self.control_round(device, now);
         let shard = &mut self.shards[device];
+        let plan_t0 = Instant::now();
         let plan = shard.arena.begin();
         shard.scheduler.plan_round_into(&mut shard.queues, now, plan);
         let planned = plan.launches.len();
+        let drained = plan.drained;
         outcome.launches += planned;
         outcome.launches_per_device[device] = planned;
         shard.launches += planned as u64;
@@ -834,7 +947,11 @@ impl Coordinator {
             let lane = if probe_solo || n_lanes <= 1 {
                 0
             } else {
-                lane_of.get(index).copied().unwrap_or(0).min(self.lanes - 1)
+                lane_of
+                    .get(index)
+                    .copied()
+                    .unwrap_or(0)
+                    .min(shard.pool.lanes().saturating_sub(1))
             };
             // Marshal the weight operands NOW, on the driver thread: on a
             // cache hit this is a map lookup; on a miss the host gather +
@@ -872,6 +989,12 @@ impl Coordinator {
         }
         plan.lane_of = lane_of;
         shard.arena.finish();
+        if shard.controller.is_some() {
+            // Plan + marshal time is what a deeper pipeline hides; the
+            // controller prices the depth choice against this EWMA.
+            let plan_s = plan_t0.elapsed().as_secs_f64();
+            shard.tracker.observe_round(planned, drained, plan_s);
+        }
         if sent > 0 {
             shard.tickets.push_back(RoundTicket { round, outstanding: sent });
         }
@@ -891,6 +1014,79 @@ impl Coordinator {
             return Err(e);
         }
         Ok(sent > 0)
+    }
+
+    /// Adaptive-controller hook, run before each round is planned: count
+    /// the round and, at each dwell boundary, gather this shard's signals
+    /// (backlog + offered-load EWMA from its `QueueSet`, round/launch
+    /// EWMAs from its tracker, calibrated interference stretch from its
+    /// cost model, windowed deadline attainment, tightest tenant SLO) and
+    /// let the controller re-decide (lanes, depth). A lane change resizes
+    /// the persistent pool and re-targets the scheduler in place — the
+    /// arena and scheduler scratch survive, so reconfiguration does not
+    /// reintroduce hot-path allocation. No-op when `adaptive = false`.
+    fn control_round(&mut self, device: usize, now: Instant) {
+        let due = match &mut self.shards[device].controller {
+            Some(ctl) => ctl.tick(),
+            None => return,
+        };
+        if !due {
+            return;
+        }
+        // Tightest SLO among servable tenants placed on this shard — the
+        // deadline budget candidate latencies must fit.
+        let mut min_slo_s = f64::INFINITY;
+        for t in self.placer.members(device) {
+            if let Some(tn) = self.tenants.get(t) {
+                if tn.is_servable() {
+                    min_slo_s = min_slo_s.min(tn.slo_ms / 1e3);
+                }
+            }
+        }
+        if !min_slo_s.is_finite() {
+            min_slo_s = 0.0; // no servable tenants: unconstrained
+        }
+        let shard = &mut self.shards[device];
+        let ctl = shard.controller.as_mut().expect("due implies controller");
+        let max_lanes = ctl.params().max_lanes;
+        let stretch: Vec<f64> = match &shard.cost_model {
+            Some(cm) => {
+                let cm = cm.lock().unwrap();
+                (0..=max_lanes).map(|n| cm.lane_stretch(n)).collect()
+            }
+            None => vec![1.0; max_lanes + 1],
+        };
+        // Windowed deadline attainment since the previous decision point
+        // (None when no verdict landed this window).
+        let win_total = shard.win_hits + shard.win_misses;
+        let slo_attainment = if win_total == 0 {
+            None
+        } else {
+            Some(shard.win_hits as f64 / win_total as f64)
+        };
+        let signals = ControlSignals {
+            backlog: shard.queues.total_pending(),
+            arrival_rate: shard.queues.arrival_rate(now),
+            launches_per_round: shard.tracker.launches_per_round(),
+            requests_per_round: shard.tracker.requests_per_round(),
+            mean_launch_s: shard.tracker.mean_launch_s(),
+            plan_s: shard.tracker.plan_s(),
+            stretch,
+            slo_attainment,
+            min_slo_s,
+        };
+        let decision = ctl.decide(&signals);
+        // The window's verdicts are consumed at every dwell boundary: a
+        // boundary with verdicts always evaluates (verdicts imply
+        // completions, which imply the tracker signals decide() needs).
+        shard.win_hits = 0;
+        shard.win_misses = 0;
+        if decision.lanes != shard.resident_lanes {
+            shard.pool.resize(decision.lanes);
+            shard.scheduler.set_lanes(decision.lanes);
+            shard.resident_lanes = decision.lanes;
+        }
+        shard.resident_depth = decision.depth;
     }
 
     /// Collect completions for one shard until at most `allowed` rounds
@@ -967,6 +1163,15 @@ impl Coordinator {
             shard.mirror.record_calibration(cm.calibration_error());
             let lane_err = cm.lane_calibration_error(c.lanes_resident);
             shard.mirror.record_lane_calibration(c.lanes_resident, lane_err);
+            if shard.controller.is_some() {
+                // Feed the controller's mean-launch-duration signal the
+                // SOLO-equivalent cost: deflate overlapped measurements by
+                // their own round's calibrated stretch so the utility
+                // model prices every candidate from one clean base.
+                let deflated =
+                    (res.service_s + res.marshal_s) / cm.lane_stretch(c.lanes_resident);
+                shard.tracker.observe_launch(deflated);
+            }
         }
         shard.mirror.record_launch(c.lane, res.service_s + res.marshal_s);
         let mut outputs = res.outputs.into_iter();
@@ -978,6 +1183,14 @@ impl Coordinator {
             // (eviction-adjacent reporting) from this single point so the
             // two attainment views can't diverge.
             let met = c.done <= entry.deadline;
+            if shard.controller.is_some() {
+                // Windowed attainment for the controller's SLO valve.
+                if met {
+                    shard.win_hits += 1;
+                } else {
+                    shard.win_misses += 1;
+                }
+            }
             let handle = &self.tenant_metrics[entry.tenant];
             handle.record_completion(
                 (latency_s * 1e9) as u64,

@@ -115,92 +115,148 @@ impl LaunchExecutor for PjrtExecutor {
 /// shared completion channel. Spawned once; joined when dropped (or
 /// explicitly via [`LanePool::shutdown`], which also hands back any
 /// finished-but-uncollected completions so none are lost).
+///
+/// The pool is **resizable** ([`LanePool::resize`]) for the adaptive
+/// space-time controller: growing spawns fresh workers onto the same
+/// completion channel; shrinking drops the retired lanes' senders, so each
+/// retired worker finishes every item already queued on its lane (their
+/// completions still flow through the shared channel — a resize can never
+/// lose an in-flight round-tagged completion) and then exits on its own.
+/// Retired handles are joined lazily at shutdown/drop.
 pub struct LanePool {
     senders: Vec<Sender<WorkItem>>,
     completions: Receiver<Completion>,
+    /// Kept so `resize` can hand fresh workers the shared channel.
+    done_tx: Sender<Completion>,
+    exec: Arc<dyn LaunchExecutor>,
+    /// Every worker ever spawned (active and retired); joined on drop.
     workers: Vec<JoinHandle<()>>,
+    /// Lifetime lane-worker spawns (names stay unique across resizes).
+    spawned: u64,
     dispatched: u64,
     collected: u64,
 }
 
+fn spawn_worker(
+    name: String,
+    rx: Receiver<WorkItem>,
+    done_tx: Sender<Completion>,
+    exec: Arc<dyn LaunchExecutor>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            // FIFO over this lane's queue; exits when the driver drops the
+            // sender (shutdown, or this lane retiring in a resize).
+            for item in rx {
+                // A panicking executor must not kill the worker: with the
+                // lane dead but its siblings alive, the completion channel
+                // would stay open and the driver would block forever on a
+                // round that can no longer drain. Convert panics into
+                // per-item errors; the worker lives on.
+                let mut result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| exec.execute(&item)),
+                )
+                .unwrap_or_else(|p| {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".into());
+                    Err(anyhow!("lane executor panicked: {msg}"))
+                });
+                if let Ok(res) = &mut result {
+                    // Account the driver-side weight marshal so
+                    // measurements cover the whole launch cost.
+                    res.marshal_s += item.weights_marshal_s;
+                }
+                let done = Instant::now();
+                let WorkItem { round, index, lane, lanes_resident, launch, .. } = item;
+                if done_tx
+                    .send(Completion {
+                        round,
+                        index,
+                        lane,
+                        lanes_resident,
+                        launch,
+                        result,
+                        done,
+                    })
+                    .is_err()
+                {
+                    return; // driver gone: nobody to report to
+                }
+            }
+        })
+        .expect("spawn lane worker")
+}
+
 impl LanePool {
     pub fn new(lanes: usize, exec: Arc<dyn LaunchExecutor>) -> Self {
-        let lanes = lanes.max(1);
         let (done_tx, done_rx) = channel::<Completion>();
-        let mut senders = Vec::with_capacity(lanes);
-        let mut workers = Vec::with_capacity(lanes);
-        for lane in 0..lanes {
+        let mut pool = Self {
+            senders: Vec::new(),
+            completions: done_rx,
+            done_tx,
+            exec,
+            workers: Vec::new(),
+            spawned: 0,
+            dispatched: 0,
+            collected: 0,
+        };
+        pool.resize(lanes);
+        pool
+    }
+
+    /// Change the resident lane count (clamped to >= 1) without losing any
+    /// in-flight completion — the adaptive controller's reconfiguration
+    /// primitive. Growing spawns fresh workers; shrinking retires the top
+    /// lanes by dropping their senders: a retired worker drains everything
+    /// already queued on its lane (completions arrive on the shared
+    /// channel as usual, still carrying their original round tags) and
+    /// exits. Returns immediately; retired workers are joined at
+    /// shutdown/drop so a resize never blocks the round loop on a lane's
+    /// backlog.
+    pub fn resize(&mut self, lanes: usize) {
+        let lanes = lanes.max(1);
+        // Shrink: dropping a sender ends that worker's receive loop after
+        // its queued items (never mid-item).
+        self.senders.truncate(lanes);
+        // Grow: fresh workers on the shared completion channel.
+        while self.senders.len() < lanes {
+            let lane = self.senders.len();
             let (tx, rx) = channel::<WorkItem>();
-            senders.push(tx);
-            let done_tx = done_tx.clone();
-            let exec = exec.clone();
-            let worker = std::thread::Builder::new()
-                .name(format!("stgpu-lane-{lane}"))
-                .spawn(move || {
-                    // FIFO over this lane's queue; exits when the driver
-                    // drops the sender (shutdown).
-                    for item in rx {
-                        // A panicking executor must not kill the worker:
-                        // with the lane dead but its siblings alive, the
-                        // completion channel would stay open and the
-                        // driver would block forever on a round that can
-                        // no longer drain. Convert panics into per-item
-                        // errors; the worker lives on.
-                        let mut result = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| exec.execute(&item)),
-                        )
-                        .unwrap_or_else(|p| {
-                            let msg = p
-                                .downcast_ref::<String>()
-                                .cloned()
-                                .or_else(|| {
-                                    p.downcast_ref::<&str>().map(|s| s.to_string())
-                                })
-                                .unwrap_or_else(|| "<non-string panic>".into());
-                            Err(anyhow!("lane executor panicked: {msg}"))
-                        });
-                        if let Ok(res) = &mut result {
-                            // Account the driver-side weight marshal so
-                            // measurements cover the whole launch cost.
-                            res.marshal_s += item.weights_marshal_s;
-                        }
-                        let done = Instant::now();
-                        let WorkItem { round, index, lane, lanes_resident, launch, .. } =
-                            item;
-                        if done_tx
-                            .send(Completion {
-                                round,
-                                index,
-                                lane,
-                                lanes_resident,
-                                launch,
-                                result,
-                                done,
-                            })
-                            .is_err()
-                        {
-                            return; // driver gone: nobody to report to
-                        }
-                    }
-                })
-                .expect("spawn lane worker");
-            workers.push(worker);
+            self.senders.push(tx);
+            let name = format!("stgpu-lane-{lane}.{}", self.spawned);
+            self.spawned += 1;
+            self.workers.push(spawn_worker(
+                name,
+                rx,
+                self.done_tx.clone(),
+                self.exec.clone(),
+            ));
         }
-        drop(done_tx);
-        Self { senders, completions: done_rx, workers, dispatched: 0, collected: 0 }
     }
 
     pub fn lanes(&self) -> usize {
         self.senders.len()
     }
 
-    /// Queue one launch on its lane (clamped to the pool width). Returns
+    /// Queue one launch on its lane (clamped to the pool width — after a
+    /// shrinking [`LanePool::resize`], plans targeting retired lanes fold
+    /// onto the surviving ones, and the item's `lane` is rewritten so its
+    /// completion reports the lane it actually executed on). Returns
     /// immediately; the item executes when the lane worker reaches it.
-    pub fn dispatch(&mut self, item: WorkItem) {
+    pub fn dispatch(&mut self, mut item: WorkItem) {
         let lane = item.lane.min(self.senders.len() - 1);
+        item.lane = lane;
         self.dispatched += 1;
-        // Send fails only if the worker died; the error then surfaces at
-        // the next `collect` as a closed completion channel.
+        // Send fails only if the worker's receive loop ended early (it
+        // never does outside shutdown: executor panics are caught per
+        // item). NB: since the pool holds `done_tx` for resize, the
+        // completion channel stays open for the pool's lifetime — a
+        // hypothetically dead worker surfaces as items that never
+        // complete, not as a closed-channel error at `collect`.
         let _ = self.senders[lane].send(item);
     }
 
@@ -409,6 +465,58 @@ mod tests {
             }
         }
         assert_eq!((oks, errs), (2, 1), "one injected failure, pool stays up");
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks_without_losing_completions() {
+        // The adaptive controller's reconfiguration primitive: dispatch a
+        // burst, shrink mid-stream (retired lanes still owe completions),
+        // grow again, keep dispatching — every item must surface exactly
+        // once with its original round tag.
+        let mut pool = LanePool::new(4, Arc::new(SlowExec(Duration::from_millis(1))));
+        assert_eq!(pool.lanes(), 4);
+        for i in 0..16usize {
+            pool.dispatch(item(1, i, i % 4, 4));
+        }
+        pool.resize(2);
+        assert_eq!(pool.lanes(), 2);
+        // Items queued on retired lanes 2/3 still complete; new dispatches
+        // clamp onto the surviving lanes.
+        for i in 0..8usize {
+            pool.dispatch(item(2, i, i % 4, 2));
+        }
+        pool.resize(3);
+        assert_eq!(pool.lanes(), 3);
+        for i in 0..6usize {
+            pool.dispatch(item(3, i, i % 3, 3));
+        }
+        let mut per_round: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..30 {
+            let c = pool.collect().unwrap();
+            let expect_resident = c.round as usize + (c.round == 1) as usize * 3;
+            assert_eq!(
+                c.lanes_resident, expect_resident,
+                "round {} must keep the tag it was dispatched with",
+                c.round
+            );
+            *per_round.entry(c.round).or_default() += 1;
+        }
+        assert_eq!(pool.in_flight(), 0);
+        assert_eq!(per_round[&1], 16);
+        assert_eq!(per_round[&2], 8);
+        assert_eq!(per_round[&3], 6);
+        let leftover = pool.shutdown();
+        assert!(leftover.is_empty());
+    }
+
+    #[test]
+    fn resize_clamps_to_one_lane() {
+        let mut pool = LanePool::new(2, Arc::new(EchoExec));
+        pool.resize(0);
+        assert_eq!(pool.lanes(), 1, "a pool never goes below one lane");
+        pool.dispatch(item(1, 0, 5, 1)); // lane id beyond width clamps
+        let c = pool.collect().unwrap();
+        assert_eq!(c.lane, 0);
     }
 
     #[test]

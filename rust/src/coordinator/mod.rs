@@ -20,6 +20,9 @@
 //!   roofline seed + EWMA over measured durations) driving deadline-aware
 //!   planning, admission, and the spatial-lane co-location interference
 //!   term (per-lane-count stretch, EWMA over overlapped launches).
+//! * [`controller`] — adaptive space-time controller: per-shard online
+//!   (lanes, pipeline depth) reconfiguration from backlog, arrival-rate,
+//!   cost-model and SLO-attainment signals, with dwell/hysteresis.
 //! * [`batcher`] — shape-class bucketing + R-bucket round-up with padding
 //!   accounting (MAGMA vbatch emulation).
 //! * [`scheduler`] — Exclusive / TimeMux / SpaceMux / SpaceTime policies.
@@ -33,6 +36,7 @@
 //!   on the lane pool) over a recycled per-shard `RoundArena`.
 
 pub mod batcher;
+pub mod controller;
 pub mod costmodel;
 pub mod driver;
 pub mod fusion_cache;
@@ -46,6 +50,9 @@ pub mod superkernel;
 pub mod tenant;
 
 pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
+pub use controller::{
+    AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
+};
 pub use costmodel::{CostModel, SharedCostModel};
 pub use driver::{Coordinator, RoundArena, RoundOutcome};
 pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey, WeightSet};

@@ -21,6 +21,59 @@ use std::time::Instant;
 
 use crate::coordinator::request::{InferenceRequest, Reject};
 
+/// Exponentially-decaying arrival-rate estimator over the *offered* load
+/// (admitted, depth-rejected AND cap-shed requests all count — shedding is
+/// precisely when a controller most needs to know the demand it is not
+/// serving). Each observation blends the instantaneous rate `1/dt` with
+/// weight `1 - exp(-dt/tau)`; reading the rate applies the idle decay
+/// since the last event, so a burst-then-silence workload reports a rate
+/// that dies off instead of freezing at the burst's peak — the latent gap
+/// this estimator closes (previously shed events updated no estimate at
+/// all, so a fully-shedding front looked idle).
+#[derive(Debug)]
+pub struct ArrivalRate {
+    rate: f64,
+    last: Option<Instant>,
+    tau_s: f64,
+}
+
+impl ArrivalRate {
+    /// `tau_s` is the decay time constant (seconds): the horizon over
+    /// which old arrivals stop mattering.
+    pub fn new(tau_s: f64) -> Self {
+        assert!(tau_s > 0.0);
+        Self { rate: 0.0, last: None, tau_s }
+    }
+
+    /// Account one arrival at `now`. Out-of-order timestamps are treated
+    /// as simultaneous (saturating), contributing negligible weight.
+    pub fn observe(&mut self, now: Instant) {
+        match self.last {
+            None => self.last = Some(now),
+            Some(prev) => {
+                let dt = now.saturating_duration_since(prev).as_secs_f64().max(1e-9);
+                let alpha = 1.0 - (-dt / self.tau_s).exp();
+                self.rate = alpha * (1.0 / dt) + (1.0 - alpha) * self.rate;
+                if now > prev {
+                    self.last = Some(now);
+                }
+            }
+        }
+    }
+
+    /// The rate estimate at `now`, req/s — decayed for the idle time since
+    /// the last arrival (0.0 before any arrival interval).
+    pub fn rate_at(&self, now: Instant) -> f64 {
+        match self.last {
+            None => 0.0,
+            Some(prev) => {
+                let idle = now.saturating_duration_since(prev).as_secs_f64();
+                self.rate * (-idle / self.tau_s).exp()
+            }
+        }
+    }
+}
+
 /// Heap entry: min-heap by `(deadline, seq)` via reversed `Ord`. `seq` is a
 /// per-queue insertion counter, so equal deadlines pop in FIFO order.
 #[derive(Debug)]
@@ -143,7 +196,15 @@ pub struct QueueSet {
     /// Requests shed because the global cap was hit (load-shed counter,
     /// distinct from per-tenant `rejected`).
     pub shed: u64,
+    /// Offered-load estimator (admitted + rejected + shed) feeding the
+    /// adaptive controller's demand signal.
+    arrivals: ArrivalRate,
 }
+
+/// Arrival-rate decay horizon: long enough to smooth round-to-round
+/// jitter, short enough that the controller sees a phase shift within a
+/// couple of dwell windows.
+const ARRIVAL_TAU_S: f64 = 0.1;
 
 impl QueueSet {
     pub fn new(n_tenants: usize, depth: usize) -> Self {
@@ -160,6 +221,7 @@ impl QueueSet {
             global_cap,
             pending: 0,
             shed: 0,
+            arrivals: ArrivalRate::new(ARRIVAL_TAU_S),
         }
     }
 
@@ -171,7 +233,28 @@ impl QueueSet {
     /// coordinator's pool-wide cap) so `shed` stays truthful regardless of
     /// which layer enforced the bound.
     pub fn record_shed(&mut self) {
+        self.record_shed_at(Instant::now());
+    }
+
+    /// [`QueueSet::record_shed`] with an explicit timestamp: the shed
+    /// request still counts toward the offered-load rate estimate — a
+    /// front shedding 100% of its arrivals is overloaded, not idle.
+    pub fn record_shed_at(&mut self, now: Instant) {
         self.shed += 1;
+        self.arrivals.observe(now);
+    }
+
+    /// Feed the offered-load estimator one arrival that never reached
+    /// `push` (e.g. requests rejected upstream at admission, like the
+    /// EDF feasibility shed).
+    pub fn note_arrival(&mut self, now: Instant) {
+        self.arrivals.observe(now);
+    }
+
+    /// Offered-load EWMA at `now`, req/s (decays while idle). Covers every
+    /// arrival seen by `push`, `record_shed_at`, and `note_arrival`.
+    pub fn arrival_rate(&self, now: Instant) -> f64 {
+        self.arrivals.rate_at(now)
     }
 
     /// Add a queue for a late-registered tenant; returns its index.
@@ -185,6 +268,10 @@ impl QueueSet {
         if t >= self.queues.len() {
             return Err(Reject::BadRequest(format!("unknown tenant {t}")));
         }
+        // Offered load counts whatever the admission outcome is (the
+        // request's own arrival stamp keeps simulated-clock replays and
+        // tests deterministic).
+        self.arrivals.observe(req.arrived);
         if self.pending >= self.global_cap {
             self.shed += 1;
             return Err(Reject::Overloaded);
@@ -387,6 +474,84 @@ mod tests {
         qs.record_shed();
         qs.record_shed();
         assert_eq!(qs.shed, 2);
+    }
+
+    fn req_at(id: u64, tenant: usize, arrived: Instant) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            tenant,
+            class: ShapeClass::batched_gemm(8, 8, 8),
+            payload: vec![],
+            arrived,
+            deadline: arrived,
+        }
+    }
+
+    #[test]
+    fn arrival_rate_tracks_burst_then_decays_when_idle() {
+        use std::time::Duration;
+        // Deterministic clock: 1 ms spacing == 1000 req/s offered.
+        let base = Instant::now();
+        let mut est = ArrivalRate::new(0.1);
+        assert_eq!(est.rate_at(base), 0.0, "no arrivals yet");
+        let mut t = base;
+        for _ in 0..600 {
+            t += Duration::from_millis(1);
+            est.observe(t);
+        }
+        let burst = est.rate_at(t);
+        assert!(
+            (800.0..1200.0).contains(&burst),
+            "burst rate {burst} should approach 1000 req/s"
+        );
+        // Idle: the estimate must DECAY when read, not freeze at the peak
+        // (the latent gap: an estimator updated only on events reports the
+        // burst rate forever once arrivals stop).
+        let later = t + Duration::from_secs(1);
+        let idled = est.rate_at(later);
+        assert!(idled < 1.0, "after 1 s idle (10 tau) rate {idled} ~ 0");
+        assert!(est.rate_at(t + Duration::from_millis(100)) < burst * 0.5);
+        // Out-of-order stamps are inert, not a panic or a spike.
+        est.observe(t - Duration::from_secs(5));
+        assert!(est.rate_at(later) <= burst);
+    }
+
+    #[test]
+    fn shed_events_keep_the_offered_load_estimate_alive() {
+        use std::time::Duration;
+        let base = Instant::now();
+        // Cap 2: the front admits two requests and sheds the rest of a
+        // 1 ms-spaced burst. The offered-load estimate must reflect the
+        // full burst — a 100%-shedding front is overloaded, not idle.
+        let mut qs = QueueSet::with_global_cap(1, 8, 2);
+        let mut t = base;
+        for i in 0..600u64 {
+            t += Duration::from_millis(1);
+            let _ = qs.push(req_at(i, 0, t));
+        }
+        assert_eq!(qs.total_pending(), 2);
+        assert!(qs.shed > 0);
+        let rate = qs.arrival_rate(t);
+        assert!(
+            (800.0..1200.0).contains(&rate),
+            "shed arrivals must count toward offered load, got {rate}"
+        );
+        // Driver-level (external cap) sheds and upstream rejects feed the
+        // same estimator.
+        let mut qs2 = QueueSet::new(1, 8);
+        let mut t2 = base;
+        for _ in 0..600 {
+            t2 += Duration::from_millis(1);
+            if t2.duration_since(base).as_millis() % 2 == 0 {
+                qs2.record_shed_at(t2);
+            } else {
+                qs2.note_arrival(t2);
+            }
+        }
+        let r2 = qs2.arrival_rate(t2);
+        assert!((800.0..1200.0).contains(&r2), "external sheds count: {r2}");
+        // And the burst decays once the sheds stop.
+        assert!(qs2.arrival_rate(t2 + Duration::from_secs(1)) < 1.0);
     }
 
     fn req_deadline(id: u64, deadline: Instant) -> InferenceRequest {

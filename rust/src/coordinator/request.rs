@@ -70,7 +70,7 @@ pub struct InferenceRequest {
     pub class: ShapeClass,
     /// Request payload (activations). Weights live in the tenant registry.
     /// For `batched_gemm`: [a, b] each `[m,k]` / `[k,n]`.
-    /// For `mlp_block`/`fused_linear`: [x] `[m,k]`;
+    /// For `mlp_block`/`fused_linear`: `[x]` `[m,k]`;
     /// for `rnn_cell`: [x, h] `[hidden,1]`.
     pub payload: Vec<HostTensor>,
     pub arrived: Instant,

@@ -184,6 +184,14 @@ pub trait Scheduler: Send {
     fn batcher_stats(&self) -> Option<crate::coordinator::batcher::BatcherStats> {
         None
     }
+
+    /// Re-target the spatial lane count mid-stream (the adaptive
+    /// controller's reconfiguration hook): subsequent rounds plan across
+    /// `lanes` concurrent lanes. The §3 baselines are single-lane by
+    /// definition and ignore this (default no-op).
+    fn set_lanes(&mut self, lanes: usize) {
+        let _ = lanes;
+    }
 }
 
 /// Build the configured scheduler (paper-faithful `PadToBucket` batching,
@@ -743,6 +751,14 @@ impl Scheduler for SpaceTimeSched {
 
     fn batcher_stats(&self) -> Option<crate::coordinator::batcher::BatcherStats> {
         Some(self.batcher.stats)
+    }
+
+    /// Adaptive reconfiguration: later rounds balance across `lanes`
+    /// lanes (>= 1) and the EDF pass re-prices deadlines at the new
+    /// count's interference stretch. Scratch buffers are kept, so a
+    /// resize does not reintroduce hot-path allocation.
+    fn set_lanes(&mut self, lanes: usize) {
+        self.lanes = lanes.max(1);
     }
 }
 
@@ -1344,6 +1360,33 @@ mod tests {
             caps,
             "steady-state planning must reuse the recycled plan's buffers"
         );
+    }
+
+    #[test]
+    fn set_lanes_retargets_later_rounds() {
+        let mut s = SpaceTimeSched::new(buckets(), 64).spatial_lanes(1, None);
+        let fill2 = |q: &mut QueueSet| {
+            fill(q, 0, 2, CLASS_SMALL);
+            fill(q, 1, 2, CLASS_BIG);
+        };
+        let mut q = QueueSet::new(4, 16);
+        fill2(&mut q);
+        assert_eq!(s.plan_round(&mut q).n_lanes, 1);
+        s.set_lanes(3);
+        let mut q = QueueSet::new(4, 16);
+        fill2(&mut q);
+        let plan = s.plan_round(&mut q);
+        assert_eq!(plan.n_lanes, 2, "2 launches span min(3, 2) lanes");
+        s.set_lanes(0);
+        let mut q = QueueSet::new(4, 16);
+        fill2(&mut q);
+        assert_eq!(s.plan_round(&mut q).n_lanes, 1, "clamped to >= 1");
+        // Baselines ignore the hook.
+        let mut t = make_scheduler(SchedulerKind::TimeMux, buckets(), 8);
+        t.set_lanes(4);
+        let mut q = QueueSet::new(4, 16);
+        fill(&mut q, 0, 2, CLASS);
+        assert!(t.plan_round(&mut q).n_lanes <= 1);
     }
 
     #[test]

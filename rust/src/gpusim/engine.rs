@@ -79,6 +79,15 @@ pub enum Policy {
     /// (the scheduler owns the interference model; DARIS, arXiv:2504.08795).
     /// `lanes = 1` degenerates to [`Policy::SpaceTime`].
     SpaceTimeLanes { max_batch: u32, lanes: u32 },
+    /// Space-time with the **adaptive controller** choosing the resident
+    /// lane count online — the same
+    /// [`crate::coordinator::controller::AdaptiveController`] the serving
+    /// driver runs, fed simulated signals (round width, exclusive-time
+    /// launch durations, measured `dur_overlapped / dur_solo` stretch),
+    /// so the control loop can be validated against the simulator's
+    /// ground-truth cost model (`stgpu simulate/trace --adaptive`).
+    /// `max_lanes = 1` degenerates to [`Policy::SpaceTime`].
+    SpaceTimeAdaptive { max_batch: u32, max_lanes: u32 },
 }
 
 impl Policy {
@@ -90,6 +99,7 @@ impl Policy {
             Policy::SpaceMuxStreams => "space-mux (streams)",
             Policy::SpaceTime { .. } => "space-time",
             Policy::SpaceTimeLanes { .. } => "space-time (lanes)",
+            Policy::SpaceTimeAdaptive { .. } => "space-time (adaptive)",
         }
     }
 }
@@ -214,10 +224,18 @@ pub fn run(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
                 cfg.spec.dispatch_serialization_s,
             )
         }
-        Policy::SpaceTime { max_batch } => run_space_time(cfg, workloads, *max_batch, 1),
-        Policy::SpaceTimeLanes { max_batch, lanes } => {
-            run_space_time(cfg, workloads, *max_batch, (*lanes).max(1))
+        Policy::SpaceTime { max_batch } => {
+            run_space_time(cfg, workloads, *max_batch, LaneMode::Static(1))
         }
+        Policy::SpaceTimeLanes { max_batch, lanes } => {
+            run_space_time(cfg, workloads, *max_batch, LaneMode::Static((*lanes).max(1)))
+        }
+        Policy::SpaceTimeAdaptive { max_batch, max_lanes } => run_space_time(
+            cfg,
+            workloads,
+            *max_batch,
+            LaneMode::Adaptive { max_lanes: (*max_lanes).max(1) },
+        ),
     }
 }
 
@@ -579,18 +597,55 @@ fn run_space_mux(
 
 // ---------------------------------------------------------------------------
 // Space-time: per-round inter-model super-kernel batching (the contribution),
-// optionally spread over concurrent spatial lanes.
+// optionally spread over concurrent spatial lanes — statically or under the
+// adaptive controller.
 // ---------------------------------------------------------------------------
+
+/// How the space-time round loop picks its lane count.
+enum LaneMode {
+    /// Fixed lane count for the whole run.
+    Static(u32),
+    /// The coordinator's
+    /// [`crate::coordinator::controller::AdaptiveController`] re-decides
+    /// the lane count every [`ADAPTIVE_DWELL_ROUNDS`] rounds from
+    /// simulated signals.
+    Adaptive { max_lanes: u32 },
+}
+
+/// Decision cadence of the simulated controller. Short on purpose:
+/// simulated workloads run tens of rounds, and the point of the policy is
+/// validating the control loop against ground truth, not modeling dwell
+/// economics (the serving default is 32).
+const ADAPTIVE_DWELL_ROUNDS: u32 = 2;
 
 fn run_space_time(
     cfg: &SimConfig,
     workloads: &[TenantWorkload],
     max_batch: u32,
-    lanes: u32,
+    mode: LaneMode,
 ) -> SimReport {
+    use crate::coordinator::controller::{
+        AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
+    };
     assert!(max_batch >= 1);
-    assert!(lanes >= 1);
     let spec = &cfg.spec;
+    let (static_lanes, mut controller) = match mode {
+        LaneMode::Static(l) => (l.max(1), None),
+        LaneMode::Adaptive { max_lanes } => (
+            1,
+            Some(AdaptiveController::new(
+                ControllerParams {
+                    max_lanes: max_lanes as usize,
+                    max_depth: 1, // the simulator has no pipeline to deepen
+                    dwell_rounds: ADAPTIVE_DWELL_ROUNDS,
+                    improvement: 0.05,
+                    slo_target: 0.99,
+                },
+                Decision { lanes: 1, depth: 1 },
+            )),
+        ),
+    };
+    let mut tracker = SignalTracker::default();
     let n = workloads.len();
     let mut report = SimReport {
         tenants: vec![TenantReport::default(); n],
@@ -668,11 +723,39 @@ fn run_space_time(
             }
         }
 
+        // Adaptive mode: at each dwell boundary hand the controller the
+        // tracker's signals — round width, exclusive-time launch duration
+        // EWMA, and the measured overlapped/solo stretch (seeded from the
+        // device spec before any overlapped round ran) — and take its
+        // decision for this round. Static mode uses the configured count.
+        let lanes_now = match &mut controller {
+            Some(ctl) => {
+                if ctl.tick() {
+                    let max_lanes = ctl.params().max_lanes;
+                    let stretch =
+                        tracker.stretch_table(max_lanes, |n| spec.lane_stretch(n as u32));
+                    let signals = ControlSignals {
+                        backlog: 0, // closed loop: the heads ARE the demand
+                        arrival_rate: 0.0,
+                        launches_per_round: tracker.launches_per_round(),
+                        requests_per_round: tracker.requests_per_round(),
+                        mean_launch_s: tracker.mean_launch_s(),
+                        plan_s: 0.0,
+                        stretch,
+                        slo_attainment: None,
+                        min_slo_s: 0.0,
+                    };
+                    ctl.decide(&signals);
+                }
+                ctl.decision().lanes as u32
+            }
+            None => static_lanes,
+        };
         // Assign launches to spatial lanes: greedy makespan balancing by
         // exclusive-time weight, in plan order (mirrors the coordinator's
         // lane assignment). With one lane (or one launch) this degenerates
         // to the classic serial round.
-        let active = (lanes as usize).min(launches.len()).max(1);
+        let active = (lanes_now as usize).min(launches.len()).max(1);
         let mut lane_of: Vec<usize> = Vec::with_capacity(launches.len());
         let mut lane_load = vec![0.0f64; active];
         let excl = CostCtx::exclusive(spec);
@@ -694,9 +777,21 @@ fn run_space_time(
             static_bw_partition: false,
         };
         let mut lane_cursor = vec![0.0f64; active];
+        let mut problems_this_round = 0usize;
         for (i, (merged, chunk)) in launches.iter().enumerate() {
             let lane = lane_of[i];
             let dur = spec.launch_overhead_s + kernel_service_time(spec, merged, &ctx);
+            if controller.is_some() {
+                // Simulated measurement feedback: solo-equivalent launch
+                // duration, and (overlapped rounds only) the ground-truth
+                // stretch the controller's utility model calibrates from.
+                let solo = spec.launch_overhead_s + kernel_service_time(spec, merged, &excl);
+                tracker.observe_launch(solo);
+                if active > 1 {
+                    tracker.observe_stretch(active, dur / solo.max(1e-12));
+                }
+                problems_this_round += chunk.len();
+            }
             let t_start = clock + lane_cursor[lane];
             let t_end = t_start + dur;
             lane_cursor[lane] += dur;
@@ -737,6 +832,9 @@ fn run_space_time(
                     }
                 }
             }
+        }
+        if controller.is_some() {
+            tracker.observe_round(launches.len(), problems_this_round, 0.0);
         }
         // The round barrier: the next round plans once every lane drains.
         clock += lane_cursor.iter().cloned().fold(0.0, f64::max);
@@ -916,6 +1014,68 @@ mod tests {
             })
         });
         assert!(overlapped, "concurrent lanes must overlap in the trace");
+    }
+
+    #[test]
+    fn adaptive_policy_converges_to_profitable_lanes() {
+        // Two shape classes -> every saturated round plans two launches
+        // that underfill the device: static 2-lane rounds beat serial by
+        // >20% (`concurrent_lanes_beat_serial_...` above). The adaptive
+        // controller, fed only simulated signals, must discover that on
+        // its own: strictly beat plain space-time and land within reach of
+        // the best static setting despite its 1-lane warmup rounds.
+        let w = two_class_workloads(4, 30);
+        let serial = run(&cfg(Policy::SpaceTime { max_batch: 64 }), &w);
+        let static2 = run(&cfg(Policy::SpaceTimeLanes { max_batch: 64, lanes: 2 }), &w);
+        let adaptive = run(
+            &cfg(Policy::SpaceTimeAdaptive { max_batch: 64, max_lanes: 4 }).with_trace(),
+            &w,
+        );
+        assert_eq!(adaptive.total_completed(), serial.total_completed());
+        assert!(
+            (adaptive.total_flops() - serial.total_flops()).abs() < 1e-3,
+            "adaptive control must not lose work"
+        );
+        assert!(
+            adaptive.throughput_flops() > serial.throughput_flops() * 1.05,
+            "adaptive {} must beat serial {} (controller never engaged?)",
+            adaptive.throughput_flops(),
+            serial.throughput_flops()
+        );
+        assert!(
+            adaptive.throughput_flops() > static2.throughput_flops() * 0.8,
+            "adaptive {} should approach the best static {}",
+            adaptive.throughput_flops(),
+            static2.throughput_flops()
+        );
+        // Ground truth in the trace: later rounds actually overlap lanes,
+        // and the lane cap is respected.
+        let max_lane = adaptive.trace.events.iter().map(|e| e.lane).max().unwrap();
+        assert!(max_lane >= 1, "controller never left serial rounds");
+        assert!(max_lane < 4, "lane cap violated");
+    }
+
+    #[test]
+    fn adaptive_with_max_lanes_one_matches_plain_space_time() {
+        let w = two_class_workloads(3, 8);
+        let plain = run(&cfg(Policy::SpaceTime { max_batch: 64 }), &w);
+        let capped =
+            run(&cfg(Policy::SpaceTimeAdaptive { max_batch: 64, max_lanes: 1 }), &w);
+        assert!((plain.makespan - capped.makespan).abs() < 1e-12 * plain.makespan);
+        assert_eq!(plain.kernel_launches, capped.kernel_launches);
+        assert_eq!(plain.total_completed(), capped.total_completed());
+        assert_eq!(plain.rounds, capped.rounds);
+    }
+
+    #[test]
+    fn adaptive_stays_serial_for_single_class_rounds() {
+        // One shape class -> one launch per round: nothing to overlap, so
+        // the controller must keep serial rounds (identical makespan).
+        let w = sgemm_workloads(8, 10, GemmShape::RESNET18_CONV2_2);
+        let plain = run(&cfg(Policy::SpaceTime { max_batch: 64 }), &w);
+        let adaptive =
+            run(&cfg(Policy::SpaceTimeAdaptive { max_batch: 64, max_lanes: 4 }), &w);
+        assert!((plain.makespan - adaptive.makespan).abs() < 1e-9 * plain.makespan);
     }
 
     #[test]

@@ -73,11 +73,23 @@ fn flag<'a>(flags: &'a HashMap<String, String>, name: &str, default: &'a str) ->
     flags.get(name).map(String::as_str).unwrap_or(default)
 }
 
-fn parse_policy(s: &str, max_batch: u32, lanes: u32) -> Result<Policy, String> {
+fn parse_policy(
+    s: &str,
+    max_batch: u32,
+    lanes: u32,
+    adaptive: bool,
+) -> Result<Policy, String> {
     Ok(match SchedulerKind::parse(s)? {
         SchedulerKind::Exclusive => Policy::Exclusive,
         SchedulerKind::TimeMux => Policy::TimeMux,
         SchedulerKind::SpaceMux => Policy::SpaceMuxMps { anomaly_seed: 42 },
+        // --adaptive: the coordinator's controller picks the lane count
+        // online; --lanes acts as its cap (defaulting to 4 when left at 1,
+        // so a bare --adaptive has headroom to adapt within).
+        SchedulerKind::SpaceTime if adaptive => Policy::SpaceTimeAdaptive {
+            max_batch,
+            max_lanes: if lanes > 1 { lanes } else { 4 },
+        },
         SchedulerKind::SpaceTime if lanes > 1 => {
             Policy::SpaceTimeLanes { max_batch, lanes }
         }
@@ -138,11 +150,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     };
     let warmed = coord.warmup().unwrap_or(0);
     eprintln!(
-        "serve: scheduler={} edf={} lanes={} pipeline_depth={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
+        "serve: scheduler={} edf={} lanes={} pipeline_depth={} adaptive={} tenants={} devices={} queue_cap={} warmed={} executables, platform={}",
         coord.scheduler_label(),
         coord.deadline_aware(),
         coord.lanes(),
         coord.pipeline_depth(),
+        coord.adaptive(),
         n_tenants,
         coord.devices(),
         coord.queue_cap(),
@@ -216,6 +229,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     println!("{}", table.render());
     if snap.devices.len() > 1
         || coord.lanes() > 1
+        || coord.adaptive()
         || snap.devices.iter().any(|d| d.shed > 0)
     {
         let mut dev_table = Table::new(&[
@@ -229,6 +243,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             "calib_err",
             "lane_util",
             "lane_calib",
+            "ctrl",
             "flops",
         ]);
         for d in &snap.devices {
@@ -249,6 +264,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                     .collect::<Vec<_>>()
                     .join(" ")
             };
+            // Controller decision as "<lanes>L@<depth>D/<reconfigs>r"
+            // ("-" with the adaptive controller off).
+            let ctrl = if d.ctrl_adaptive {
+                format!("{}L@{}D/{}r", d.ctrl_lanes, d.ctrl_depth, d.ctrl_reconfigs)
+            } else {
+                "-".to_string()
+            };
             dev_table.row(&[
                 d.device.to_string(),
                 d.tenants.to_string(),
@@ -260,6 +282,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 format!("{:.3}", d.cost_calibration_error),
                 lane_util,
                 lane_calib,
+                ctrl,
                 format!("{:.3e}", d.flops),
             ]);
         }
@@ -295,6 +318,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
     let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
     let devices: usize = flag(flags, "devices", "1").parse().unwrap_or(1).max(1);
     let lanes: u32 = flag(flags, "lanes", "1").parse().unwrap_or(1).max(1);
+    let adaptive = flag(flags, "adaptive", "false") == "true";
     let shape = match parse_shape(flag(flags, "shape", "256x128x1152")) {
         Ok(s) => s,
         Err(e) => {
@@ -302,7 +326,12 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch, lanes) {
+    let policy = match parse_policy(
+        flag(flags, "policy", "space-time"),
+        max_batch,
+        lanes,
+        adaptive,
+    ) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("simulate: {e}");
@@ -392,7 +421,13 @@ fn cmd_trace(flags: &HashMap<String, String>) -> i32 {
     let tenants: usize = flag(flags, "tenants", "4").parse().unwrap_or(4);
     let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
     let lanes: u32 = flag(flags, "lanes", "1").parse().unwrap_or(1).max(1);
-    let policy = match parse_policy(flag(flags, "policy", "space-time"), max_batch, lanes) {
+    let adaptive = flag(flags, "adaptive", "false") == "true";
+    let policy = match parse_policy(
+        flag(flags, "policy", "space-time"),
+        max_batch,
+        lanes,
+        adaptive,
+    ) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("trace: {e}");

@@ -148,6 +148,25 @@ pub struct DeviceSnapshot {
     /// relative prediction error) for every lane count with at least one
     /// overlapped observation.
     pub lane_calibration: Vec<(usize, f64)>,
+    /// Whether the adaptive space-time controller drives this shard.
+    pub ctrl_adaptive: bool,
+    /// Resident spatial lanes right now (the controller's current choice;
+    /// the static `lanes` knob when the controller is off).
+    pub ctrl_lanes: u64,
+    /// Effective pipeline depth right now.
+    pub ctrl_depth: u64,
+    /// Times the controller changed (lanes, depth) over the lifetime.
+    pub ctrl_reconfigs: u64,
+    /// Decision points the controller evaluated (dwell boundaries with
+    /// usable signals).
+    pub ctrl_evals: u64,
+    /// Predicted utility (req/s) of the chosen decision at the last
+    /// evaluation.
+    pub ctrl_utility: f64,
+    /// Best predicted utility per candidate lane count at the last
+    /// evaluation, ascending lane count (empty before the first decision
+    /// point, or with the controller off).
+    pub ctrl_utilities: Vec<(usize, f64)>,
     /// Fusion-cache (device-resident weight set) lookups that hit.
     pub cache_hits: u64,
     /// Fusion-cache lookups that missed (a host gather + upload).
@@ -300,6 +319,21 @@ impl Snapshot {
                                 d.lane_calibration
                                     .iter()
                                     .map(|&(l, e)| (l.to_string(), Json::num(e)))
+                                    .collect(),
+                            ),
+                        ),
+                        ("ctrl_adaptive", Json::Bool(d.ctrl_adaptive)),
+                        ("ctrl_lanes", Json::num(d.ctrl_lanes as f64)),
+                        ("ctrl_depth", Json::num(d.ctrl_depth as f64)),
+                        ("ctrl_reconfigs", Json::num(d.ctrl_reconfigs as f64)),
+                        ("ctrl_evals", Json::num(d.ctrl_evals as f64)),
+                        ("ctrl_utility", Json::num(d.ctrl_utility)),
+                        (
+                            "ctrl_utilities",
+                            Json::Obj(
+                                d.ctrl_utilities
+                                    .iter()
+                                    .map(|&(l, u)| (l.to_string(), Json::num(u)))
                                     .collect(),
                             ),
                         ),
@@ -475,6 +509,13 @@ mod tests {
             lane_launches: vec![4, 3],
             lane_busy_s: vec![0.5, 0.25],
             lane_calibration: vec![(2, 0.0625)],
+            ctrl_adaptive: true,
+            ctrl_lanes: 2,
+            ctrl_depth: 1,
+            ctrl_reconfigs: 3,
+            ctrl_evals: 11,
+            ctrl_utility: 1500.0,
+            ctrl_utilities: vec![(1, 1000.0), (2, 1500.0)],
             cache_hits: 6,
             cache_misses: 2,
             cache_evictions: 1,
@@ -485,6 +526,18 @@ mod tests {
         let devices = back.get("devices").unwrap();
         let d0 = &devices.as_arr().unwrap()[0];
         assert_eq!(d0.get("launches").unwrap().as_f64(), Some(7.0));
+        assert!(matches!(
+            d0.get("ctrl_adaptive"),
+            Some(crate::util::json::Json::Bool(true))
+        ));
+        assert_eq!(d0.get("ctrl_lanes").unwrap().as_f64(), Some(2.0));
+        assert_eq!(d0.get("ctrl_depth").unwrap().as_f64(), Some(1.0));
+        assert_eq!(d0.get("ctrl_reconfigs").unwrap().as_f64(), Some(3.0));
+        assert_eq!(d0.get("ctrl_evals").unwrap().as_f64(), Some(11.0));
+        assert_eq!(d0.get("ctrl_utility").unwrap().as_f64(), Some(1500.0));
+        let utils = d0.get("ctrl_utilities").unwrap();
+        assert_eq!(utils.get("1").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(utils.get("2").unwrap().as_f64(), Some(1500.0));
         assert_eq!(d0.get("shed").unwrap().as_f64(), Some(4.0));
         assert_eq!(d0.get("deadline_splits").unwrap().as_f64(), Some(2.0));
         assert_eq!(

@@ -1,0 +1,276 @@
+//! Integration: the adaptive space-time controller.
+//!
+//! Artifact-free halves: round-tag conservation through
+//! [`LanePool::resize`] under randomized mid-stream reconfigurations
+//! (the controller's primitive must never lose a completion), and the
+//! controller's dwell/bounds properties (unit-tested in
+//! `coordinator::controller`, re-exercised here through the public API).
+//!
+//! Artifact-gated halves (skip without `make artifacts`): a config with
+//! `[controller] adaptive = false` reproduces the pre-controller
+//! coordinator bit-for-bit (same responses, same counters as a config
+//! with no `[controller]` section at all), and an `adaptive = true`
+//! coordinator serves losslessly while exporting its decision in the
+//! device snapshot.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use stgpu::config::{ControllerConfig, SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::lanepool::{LanePool, LaunchExecutor, WorkItem};
+use stgpu::coordinator::{
+    Coordinator, InferenceRequest, Launch, LaunchResult, ModelSpec, ShapeClass,
+};
+use stgpu::runtime::HostTensor;
+use stgpu::util::prng::Rng;
+use stgpu::util::prop::run_prop;
+
+const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 8, n: 8, k: 8 };
+
+fn item(round: u64, index: usize, lane: usize, lanes_resident: usize) -> WorkItem {
+    let now = Instant::now();
+    WorkItem {
+        round,
+        index,
+        lane,
+        lanes_resident,
+        launch: Launch {
+            class: CLASS,
+            entries: vec![InferenceRequest {
+                id: round * 1000 + index as u64,
+                tenant: 0,
+                class: CLASS,
+                payload: vec![],
+                arrived: now,
+                deadline: now,
+            }],
+            r_bucket: 1,
+        },
+        spec: ModelSpec::Sgemm { m: 8, n: 8, k: 8 },
+        weights: None,
+        weights_marshal_s: 0.0,
+    }
+}
+
+/// Executor with a small deterministic delay so resizes race in-flight
+/// items (instant executors would drain before the resize lands).
+struct SpinExec;
+impl LaunchExecutor for SpinExec {
+    fn execute(&self, item: &WorkItem) -> anyhow::Result<LaunchResult> {
+        let t0 = Instant::now();
+        while t0.elapsed() < std::time::Duration::from_micros(200) {
+            std::hint::spin_loop();
+        }
+        Ok(LaunchResult {
+            outputs: Vec::new(),
+            service_s: 1e-6,
+            marshal_s: 0.0,
+            r_bucket: item.launch.r_bucket,
+        })
+    }
+}
+
+#[test]
+fn prop_resize_mid_stream_conserves_round_tagged_completions() {
+    // The ISSUE's resize property: random interleavings of dispatch
+    // bursts and pool resizes lose no completion, and every completion
+    // still carries the lane count ITS round was dispatched with — even
+    // when that round's lanes have since been retired.
+    run_prop("lanepool resize conservation", 0xAD2E, 12, |rng| {
+        let mut pool = LanePool::new(1 + rng.gen_range(4) as usize, Arc::new(SpinExec));
+        let mut planned: HashMap<u64, (usize, usize)> = HashMap::new();
+        let mut dispatched_total = 0usize;
+        for round in 1..=(4 + rng.gen_range(6)) {
+            // Resize to a random width between bursts (grow and shrink).
+            let width = 1 + rng.gen_range(5) as usize;
+            pool.resize(width);
+            assert_eq!(pool.lanes(), width);
+            let launches = 1 + rng.gen_range(6) as usize;
+            for i in 0..launches {
+                pool.dispatch(item(round, i, i % width, width));
+            }
+            planned.insert(round, (width, launches));
+            dispatched_total += launches;
+            // Sometimes collect a few mid-stream, sometimes let them pile
+            // across the next resize.
+            if rng.gen_bool(0.5) {
+                for _ in 0..rng.gen_range(launches as u64 + 1) {
+                    let c = pool.collect().unwrap();
+                    assert_eq!(c.lanes_resident, planned[&c.round].0);
+                    dispatched_total -= 1;
+                }
+            }
+        }
+        while dispatched_total > 0 {
+            let c = pool.collect().unwrap();
+            assert_eq!(
+                c.lanes_resident, planned[&c.round].0,
+                "round {} lost its tag across resizes",
+                c.round
+            );
+            assert!(c.result.is_ok());
+            dispatched_total -= 1;
+        }
+        assert_eq!(pool.in_flight(), 0, "zero lost completions");
+        let leftover = pool.shutdown();
+        assert!(leftover.is_empty());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated: full-coordinator behavior.
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn config(controller: Option<ControllerConfig>) -> Option<ServerConfig> {
+    let dir = artifacts_dir()?;
+    Some(ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        // Serial, single-lane, single-device: the deterministic baseline
+        // the bit-for-bit comparison needs (mirrors integration_pipeline).
+        lanes: 1,
+        pipeline_depth: 1,
+        artifacts_dir: dir,
+        controller: controller.unwrap_or_default(),
+        tenants: (0..4)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    })
+}
+
+/// Run seeded submit/drain waves; returns responses sorted by id plus the
+/// counters the comparison pins.
+#[allow(clippy::type_complexity)]
+fn run_waves(
+    coord: &mut Coordinator,
+    waves: usize,
+) -> (Vec<(u64, usize, usize, HostTensor)>, Vec<(u64, u64, u64)>) {
+    let n = coord.tenants.len();
+    let mut rng = Rng::new(0xADA);
+    let mut out = Vec::new();
+    for _ in 0..waves {
+        for t in 0..n {
+            for _ in 0..2 {
+                let payload = coord.random_payload(t, &mut rng);
+                coord.submit(t, payload).unwrap();
+            }
+        }
+        for r in coord.run_until_drained().unwrap() {
+            out.push((r.id, r.tenant, r.fused_r, r.output));
+        }
+    }
+    out.sort_by_key(|(id, ..)| *id);
+    let counters = coord
+        .device_snapshots()
+        .iter()
+        .map(|d| (d.launches, d.superkernel_launches, d.drained))
+        .collect();
+    (out, counters)
+}
+
+#[test]
+fn adaptive_false_reproduces_the_static_coordinator_bit_for_bit() {
+    let Some(cfg_plain) = config(None) else { return };
+    let Some(cfg_off) = config(Some(ControllerConfig {
+        adaptive: false,
+        // Non-default knobs must be inert while adaptive is off.
+        dwell_rounds: 2,
+        max_lanes: 4,
+        max_depth: 2,
+        ..Default::default()
+    })) else {
+        return;
+    };
+    let mut plain = Coordinator::new(&cfg_plain).unwrap();
+    let mut off = Coordinator::new(&cfg_off).unwrap();
+    assert!(!plain.adaptive());
+    assert!(!off.adaptive(), "adaptive=false must construct no controller");
+    let (rp, cp) = run_waves(&mut plain, 3);
+    let (ro, co) = run_waves(&mut off, 3);
+    assert_eq!(cp, co, "per-device counters must match bit-for-bit");
+    assert_eq!(rp.len(), ro.len());
+    for ((id_p, t_p, f_p, out_p), (id_o, t_o, f_o, out_o)) in rp.iter().zip(&ro) {
+        assert_eq!((id_p, t_p, f_p), (id_o, t_o, f_o));
+        assert_eq!(out_p.shape, out_o.shape);
+        assert_eq!(out_p.data, out_o.data, "outputs must be bit-identical");
+    }
+    // Snapshot export: controller fields read as static/off.
+    let snap = off.device_snapshots();
+    assert!(!snap[0].ctrl_adaptive);
+    assert_eq!(snap[0].ctrl_lanes, 1);
+    assert_eq!(snap[0].ctrl_depth, 1);
+    assert_eq!(snap[0].ctrl_reconfigs, 0);
+    assert!(snap[0].ctrl_utilities.is_empty());
+}
+
+#[test]
+fn adaptive_coordinator_serves_losslessly_and_exports_decisions() {
+    let Some(cfg) = config(Some(ControllerConfig {
+        adaptive: true,
+        dwell_rounds: 2,
+        max_lanes: 2,
+        max_depth: 2,
+        ..Default::default()
+    })) else {
+        return;
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    assert!(coord.adaptive());
+    let (lanes0, depth0) = coord.resident(0).unwrap();
+    assert_eq!((lanes0, depth0), (1, 1), "starts at the static knobs");
+    let n = coord.tenants.len();
+    let mut rng = Rng::new(0xADB);
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    for _ in 0..8 {
+        for t in 0..n {
+            for _ in 0..3 {
+                let payload = coord.random_payload(t, &mut rng);
+                coord.submit(t, payload).unwrap();
+                submitted += 1;
+            }
+        }
+        completed += coord.run_until_drained().unwrap().len() as u64;
+    }
+    assert_eq!(completed, submitted, "reconfigurations must lose nothing");
+    let (lanes, depth) = coord.resident(0).unwrap();
+    assert!((1..=2).contains(&lanes), "decision within [1, max_lanes]");
+    assert!((1..=2).contains(&depth), "decision within [1, max_depth]");
+    let snap = coord.snapshot();
+    let d0 = &snap.devices[0];
+    assert!(d0.ctrl_adaptive);
+    assert_eq!(d0.ctrl_lanes as usize, lanes);
+    assert_eq!(d0.ctrl_depth as usize, depth);
+    assert!(d0.ctrl_evals > 0, "dwell windows with traffic must evaluate");
+    assert_eq!(
+        d0.ctrl_utilities.len(),
+        2,
+        "one utility per candidate lane count"
+    );
+    // Status JSON carries the controller section.
+    let json = snap.to_json().to_string();
+    let back = stgpu::util::json::Json::parse(&json).unwrap();
+    let dev = &back.get("devices").unwrap().as_arr().unwrap()[0];
+    assert!(matches!(
+        dev.get("ctrl_adaptive"),
+        Some(stgpu::util::json::Json::Bool(true))
+    ));
+    assert!(dev.get("ctrl_utility").is_some());
+}

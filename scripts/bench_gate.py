@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the figure benches' BENCH_*.json output.
+
+Every figure bench emits `results/BENCH_<name>.json` on one schema
+(name, throughput, p50, p99, slo_attainment). This gate compares the
+fresh results of the smoke benches against committed baselines and FAILS
+(exit 1) when the perf trajectory regresses:
+
+  * throughput drops more than --max-tput-drop (default 10%) below the
+    baseline, or
+  * slo_attainment drops below the baseline (any drop fails — baselines
+    carry their own safety margin, see below), or
+  * a baselined bench produced no fresh result at all.
+
+p50/p99 deltas are reported informationally (latency distributions are
+runner-dependent; throughput + attainment are the gated trajectory).
+
+A delta table is printed to stdout and, when running in GitHub Actions,
+appended to the job summary ($GITHUB_STEP_SUMMARY).
+
+Refreshing baselines
+--------------------
+Baselines live in rust/bench_baselines/ as verbatim BENCH_*.json files.
+The committed values are deliberately conservative floors (they must not
+flake across runner generations), with slo_attainment baselines set well
+below the typically-observed value. The INITIAL baselines were authored
+before any CI runner had executed the benches, so they are loose
+catastrophic-regression floors; tighten them from real runner numbers
+once a few green runs exist. To refresh after an intentional perf
+change:
+
+    cd rust
+    cargo bench --bench fig11_round_overhead
+    cargo bench --bench fig12_adaptive_lanes
+    cp results/BENCH_fig11_round_overhead.json bench_baselines/
+    cp results/BENCH_fig12_adaptive_lanes.json bench_baselines/
+    # then hand-edit the new baselines DOWN by ~10-20% (throughput) and
+    # ~0.02 (slo_attainment) so runner variance cannot trip the gate.
+
+Usage:
+    python3 scripts/bench_gate.py \
+        [--baseline-dir rust/bench_baselines] [--results-dir rust/results] \
+        [--max-tput-drop 0.10]
+"""
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("name", "throughput", "p50", "p99"):
+        if key not in doc:
+            raise ValueError(f"{path}: missing {key!r} (BENCH schema drift?)")
+    return doc
+
+
+def fmt_delta(fresh, base):
+    if base in (None, 0):
+        return "n/a"
+    return f"{(fresh - base) / base * 100:+.1f}%"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default="rust/bench_baselines")
+    ap.add_argument("--results-dir", default="rust/results")
+    ap.add_argument("--max-tput-drop", type=float, default=0.10,
+                    help="max allowed fractional throughput drop (default 0.10)")
+    args = ap.parse_args()
+
+    baseline_dir = Path(args.baseline_dir)
+    results_dir = Path(args.results_dir)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"bench-gate: no baselines in {baseline_dir} — nothing to gate",
+              file=sys.stderr)
+        return 1
+
+    rows = []
+    failures = []
+    for bpath in baselines:
+        base = load(bpath)
+        fpath = results_dir / bpath.name
+        if not fpath.exists():
+            failures.append(f"{base['name']}: no fresh result at {fpath} "
+                            "(bench did not run or did not emit JSON)")
+            rows.append((base["name"], base["throughput"], None, "missing",
+                         base.get("slo_attainment"), None, "missing", "FAIL"))
+            continue
+        fresh = load(fpath)
+        verdicts = []
+        tput_b, tput_f = base["throughput"], fresh["throughput"]
+        if tput_b > 0 and tput_f < tput_b * (1.0 - args.max_tput_drop):
+            verdicts.append(
+                f"throughput {tput_f:.1f} dropped >{args.max_tput_drop:.0%} "
+                f"below baseline {tput_b:.1f}")
+        att_b, att_f = base.get("slo_attainment"), fresh.get("slo_attainment")
+        if att_b is not None and (att_f is None or att_f < att_b):
+            verdicts.append(
+                f"slo_attainment {att_f} dropped below baseline {att_b}")
+        if verdicts:
+            failures.append(f"{base['name']}: " + "; ".join(verdicts))
+        rows.append((base["name"], tput_b, tput_f, fmt_delta(tput_f, tput_b),
+                     att_b, att_f,
+                     "-" if att_b is None else f"{att_f} vs {att_b}",
+                     "FAIL" if verdicts else "ok"))
+        # Informational latency deltas.
+        print(f"[info] {base['name']}: p50 {fresh['p50']:.6f}s "
+              f"({fmt_delta(fresh['p50'], base['p50'])} vs baseline), "
+              f"p99 {fresh['p99']:.6f}s "
+              f"({fmt_delta(fresh['p99'], base['p99'])})")
+
+    header = ("| bench | baseline tput | fresh tput | Δ | baseline att "
+              "| fresh att | verdict |")
+    sep = "|---|---|---|---|---|---|---|"
+    lines = [header, sep]
+    for name, tb, tf, d, ab, af, _attcmp, verdict in rows:
+        lines.append(
+            f"| {name} | {tb:.1f} | "
+            f"{'-' if tf is None else f'{tf:.1f}'} | {d} | "
+            f"{'-' if ab is None else ab} | {'-' if af is None else af} | "
+            f"{verdict} |")
+    table = "\n".join(lines)
+    print("\n## bench-gate\n" + table + "\n")
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("\n## bench-gate\n" + table + "\n")
+
+    if failures:
+        for f in failures:
+            print(f"bench-gate FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"bench-gate: {len(rows)} bench(es) within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

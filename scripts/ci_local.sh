@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Reproduce the full CI matrix locally (.github/workflows/ci.yml) so a
+# builder without GitHub runners can pre-flight tier-1 before pushing.
+#
+# Usage:  scripts/ci_local.sh [--skip-bench]
+#
+# Steps (in CI-job order):
+#   build-test:  cargo build --release && cargo test -q
+#                && cargo build --benches --examples
+#   bench-gate:  cargo bench --no-run, the fig11/fig12 smokes, then
+#                scripts/bench_gate.py against rust/bench_baselines
+#   lint:        cargo fmt --check && cargo clippy --all-targets -D warnings
+#   doc:         cargo doc --no-deps with -D warnings
+#
+# --skip-bench skips the timed smoke benches + gate (the slowest step);
+# everything else is identical to CI.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SKIP_BENCH=0
+for arg in "$@"; do
+    case "$arg" in
+        --skip-bench) SKIP_BENCH=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+step() { printf '\n=== %s ===\n' "$*"; }
+
+step "build-test: cargo build --release"
+cargo build --release
+
+step "build-test: cargo test -q"
+cargo test -q
+
+step "build-test: cargo build --benches --examples"
+cargo build --benches --examples
+
+step "bench-gate: cargo bench --no-run"
+cargo bench --no-run
+
+if [ "$SKIP_BENCH" -eq 0 ]; then
+    step "bench-gate: fig11 round-overhead smoke"
+    cargo bench --bench fig11_round_overhead
+    step "bench-gate: fig12 adaptive-lanes smoke"
+    cargo bench --bench fig12_adaptive_lanes
+    step "bench-gate: scripts/bench_gate.py"
+    python3 scripts/bench_gate.py
+else
+    step "bench-gate: SKIPPED (--skip-bench)"
+fi
+
+step "lint: cargo fmt --check"
+cargo fmt --check
+
+step "lint: cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+step "doc: cargo doc --no-deps (deny warnings)"
+RUSTDOCFLAGS="-D warnings -A rustdoc::private-intra-doc-links" cargo doc --no-deps
+
+printf '\nci_local: all steps green\n'
