@@ -162,6 +162,8 @@ impl DynamicBatcher {
     /// to `out` (the arena's recycled vector). Only each launch's owned
     /// entry vector is freshly allocated, because launches carry their
     /// requests away with them.
+    // lint: hot-path
+    // lint: pure
     pub fn plan_into(&mut self, pending: &mut Vec<InferenceRequest>, out: &mut Vec<Launch>) {
         let mut by_class = std::mem::take(&mut self.by_class);
         for r in pending.drain(..) {
@@ -171,6 +173,10 @@ impl DynamicBatcher {
         for (class, reqs) in by_class.iter_mut() {
             while !reqs.is_empty() {
                 let take = chunk_cap.min(reqs.len());
+                // lint: allow(hot-path-alloc) — each launch carries its
+                // entries away by value, so this owned vector is the one
+                // deliberate per-launch allocation the round path keeps
+                // (see the doc comment above).
                 let chunk: Vec<InferenceRequest> = reqs.drain(..take).collect();
                 self.dispatch_chunk(*class, chunk, out);
             }

@@ -117,6 +117,7 @@ use crate::coordinator::scheduler::{RoundPlan, Scheduler};
 use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
 use crate::coordinator::tenant::TenantRegistry;
 use crate::metrics::{DeviceSnapshot, MetricsRegistry, TenantMetrics};
+use crate::util::sync::lock_recover;
 use crate::runtime::{HostTensor, PjrtEngine};
 use crate::util::prng::Rng;
 
@@ -190,8 +191,29 @@ impl RoundArena {
 /// atomics instead of locking the shard's cost model or walking its lane
 /// tracks — a snapshot can never stall planning or execution, whichever
 /// thread it runs on.
+///
+/// **Consistency (seqlock).** The pre-seqlock mirror published each word
+/// as an independent relaxed atomic, so a poller could observe a torn
+/// multi-word pair — e.g. a lane's `launches` incremented by a completion
+/// whose `busy_ns` it hadn't seen yet. Every `record_*` now runs inside a
+/// version window ([`SnapshotMirror::begin_write`] /
+/// [`SnapshotMirror::end_write`]: `seq` odd while writing, even once
+/// published) and [`SnapshotMirror::read`] retries until it sees one even
+/// version across the whole multi-word read — the classic single-writer
+/// seqlock (Boehm, "Can seqlocks get along with programming language
+/// memory models?"). The word stores/loads themselves stay `Relaxed`; the
+/// fences on the version counter carry all required ordering, and each
+/// non-`Relaxed` site documents its ordering inline (enforced by
+/// `cargo run -p xtask -- lint`).
+///
+/// **Single writer by construction:** only the shard's driver thread
+/// calls `record_*` (from `process_completion`); the unsynchronized
+/// read-modify-write of `seq` in the write path relies on that.
 #[derive(Debug)]
 struct SnapshotMirror {
+    /// Seqlock version: odd while a write window is open, even when the
+    /// mirror is consistent.
+    seq: AtomicU64,
     /// EWMA relative prediction error, as f64 bits.
     calib_err: AtomicU64,
     lane_launches: Vec<AtomicU64>,
@@ -204,9 +226,19 @@ struct SnapshotMirror {
 
 const UNOBSERVED: u64 = u64::MAX;
 
+/// One consistent cut of a [`SnapshotMirror`].
+#[derive(Debug, Clone)]
+struct MirrorView {
+    calib_err: f64,
+    lane_launches: Vec<u64>,
+    lane_busy_s: Vec<f64>,
+    lane_calibration: Vec<(usize, f64)>,
+}
+
 impl SnapshotMirror {
     fn new(lanes: usize) -> Self {
         Self {
+            seq: AtomicU64::new(0),
             calib_err: AtomicU64::new(0.0f64.to_bits()),
             lane_launches: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
             lane_busy_ns: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
@@ -214,53 +246,122 @@ impl SnapshotMirror {
         }
     }
 
+    /// Open a write window (version goes odd). Driver thread only.
+    fn begin_write(&self) {
+        let s = self.seq.load(Ordering::Relaxed);
+        self.seq.store(s.wrapping_add(1), Ordering::Relaxed);
+        // ordering: Release fence — pairs with the reader's Acquire fence:
+        // any reader that observes a data store from this window will also
+        // observe the odd version when it re-checks `seq`, and retry.
+        std::sync::atomic::fence(Ordering::Release);
+    }
+
+    /// Close the write window (version returns to even).
+    fn end_write(&self) {
+        let s = self.seq.load(Ordering::Relaxed);
+        // ordering: Release store — publishes the even version only after
+        // every data store in the window is visible (pairs with the
+        // reader's Acquire load of `seq`).
+        self.seq.store(s.wrapping_add(1), Ordering::Release);
+    }
+
     fn record_launch(&self, lane: usize, busy_s: f64) {
         let lane = lane.min(self.lane_launches.len().saturating_sub(1));
+        self.begin_write();
         self.lane_launches[lane].fetch_add(1, Ordering::Relaxed);
         self.lane_busy_ns[lane]
             .fetch_add((busy_s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.end_write();
     }
 
     fn record_calibration(&self, err: f64) {
+        self.begin_write();
         self.calib_err.store(err.to_bits(), Ordering::Relaxed);
+        self.end_write();
     }
 
     fn record_lane_calibration(&self, lanes: usize, err: f64) {
         // Only overlapped counts (>= 2) appear in the per-lane table; the
         // solo error is `calib_err`.
         if lanes >= 2 && lanes < self.lane_calib.len() {
+            self.begin_write();
             self.lane_calib[lanes].store(err.to_bits(), Ordering::Relaxed);
+            self.end_write();
+        }
+    }
+
+    /// One consistent multi-word snapshot. Retries while a write window
+    /// is open or raced the read; bounded so a wedged writer can never
+    /// spin a status poller forever (after the cap the last — possibly
+    /// inconsistent — view is returned, which polling tolerates).
+    fn read(&self) -> MirrorView {
+        for _ in 0..1024 {
+            // ordering: Acquire load — the data reads below must not be
+            // hoisted above this version check (pairs with end_write's
+            // Release store).
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let view = self.read_unchecked();
+            // ordering: Acquire fence — the data reads above complete
+            // before the version re-check below (pairs with begin_write's
+            // Release fence).
+            std::sync::atomic::fence(Ordering::Acquire);
+            let s2 = self.seq.load(Ordering::Relaxed);
+            if s1 == s2 {
+                return view;
+            }
+        }
+        self.read_unchecked()
+    }
+
+    /// Raw multi-word read with no version discipline — only meaningful
+    /// under [`SnapshotMirror::read`]'s retry loop.
+    fn read_unchecked(&self) -> MirrorView {
+        MirrorView {
+            calib_err: f64::from_bits(self.calib_err.load(Ordering::Relaxed)),
+            lane_launches: self
+                .lane_launches
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+            lane_busy_s: self
+                .lane_busy_ns
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
+                .collect(),
+            lane_calibration: self
+                .lane_calib
+                .iter()
+                .enumerate()
+                .filter_map(|(l, a)| {
+                    let bits = a.load(Ordering::Relaxed);
+                    if bits == UNOBSERVED {
+                        None
+                    } else {
+                        Some((l, f64::from_bits(bits)))
+                    }
+                })
+                .collect(),
         }
     }
 
     fn calibration_error(&self) -> f64 {
-        f64::from_bits(self.calib_err.load(Ordering::Relaxed))
+        self.read().calib_err
     }
 
     fn lane_launches(&self) -> Vec<u64> {
-        self.lane_launches.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+        self.read().lane_launches
     }
 
     fn lane_busy_s(&self) -> Vec<f64> {
-        self.lane_busy_ns
-            .iter()
-            .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
-            .collect()
+        self.read().lane_busy_s
     }
 
     fn lane_calibration(&self) -> Vec<(usize, f64)> {
-        self.lane_calib
-            .iter()
-            .enumerate()
-            .filter_map(|(l, a)| {
-                let bits = a.load(Ordering::Relaxed);
-                if bits == UNOBSERVED {
-                    None
-                } else {
-                    Some((l, f64::from_bits(bits)))
-                }
-            })
-            .collect()
+        self.read().lane_calibration
     }
 }
 
@@ -659,7 +760,10 @@ impl Coordinator {
             .iter()
             .enumerate()
             .map(|(d, s)| {
-                let cache = s.fusion_cache.lock().unwrap();
+                let cache = lock_recover(&s.fusion_cache);
+                // One seqlock-consistent cut across every mirror word —
+                // per-lane busy/launch pairs can't tear across fields.
+                let mirror = s.mirror.read();
                 DeviceSnapshot {
                     device: d,
                     tenants: self.placer.members(d).len() as u64,
@@ -669,10 +773,10 @@ impl Coordinator {
                     drained: s.drained,
                     shed: s.queues.shed,
                     deadline_splits: s.deadline_splits,
-                    cost_calibration_error: s.mirror.calibration_error(),
-                    lane_launches: s.mirror.lane_launches(),
-                    lane_busy_s: s.mirror.lane_busy_s(),
-                    lane_calibration: s.mirror.lane_calibration(),
+                    cost_calibration_error: mirror.calib_err,
+                    lane_launches: mirror.lane_launches,
+                    lane_busy_s: mirror.lane_busy_s,
+                    lane_calibration: mirror.lane_calibration,
                     ctrl_adaptive: s.controller.is_some(),
                     ctrl_lanes: s.resident_lanes as u64,
                     ctrl_depth: s.resident_depth as u64,
@@ -765,9 +869,7 @@ impl Coordinator {
         // queueing doomed work (DARIS, arXiv:2504.08795).
         if self.edf {
             if let Some(cm) = &self.shards[device].cost_model {
-                let infeasible = cm
-                    .lock()
-                    .unwrap()
+                let infeasible = lock_recover(cm)
                     .deadline_infeasible(class, slo_ms / 1e3, self.deadline_slack);
                 if infeasible {
                     self.infeasible_seen += 1;
@@ -881,10 +983,7 @@ impl Coordinator {
                 // from the placement accounting (a later re-registration
                 // re-joins its class via `DevicePlacer::readmit`).
                 let device = self.placer.device_of(ev.tenant);
-                self.shards[device]
-                    .fusion_cache
-                    .lock()
-                    .unwrap()
+                lock_recover(&self.shards[device].fusion_cache)
                     .invalidate_tenant(ev.tenant);
                 for req in self.shards[device].queues.drain_tenant(ev.tenant) {
                     outcome.rejections.push((req.id, Reject::TenantEvicted));
@@ -900,6 +999,7 @@ impl Coordinator {
     /// launch to the lane workers, resolving weight operands through the
     /// shard's fusion cache at dispatch time. Returns whether anything
     /// was dispatched.
+    // lint: hot-path
     fn dispatch_round(
         &mut self,
         device: usize,
@@ -930,7 +1030,7 @@ impl Coordinator {
         let lanes_used = if probe_solo { 1 } else { plan.lanes_used() };
         let n_lanes = plan.n_lanes;
         let (hits_before, misses_before) = {
-            let c = shard.fusion_cache.lock().unwrap();
+            let c = lock_recover(&shard.fusion_cache);
             (c.stats.hits, c.stats.misses)
         };
         let lane_of = std::mem::take(&mut plan.lane_of);
@@ -938,6 +1038,10 @@ impl Coordinator {
         let mut dispatch_err = None;
         for (index, launch) in plan.launches.drain(..).enumerate() {
             let Some(first) = launch.entries.first() else { continue };
+            // lint: allow(hot-path-alloc) — `ModelSpec` is a plain-data
+            // enum, so this clone is a few-word copy with no heap
+            // allocation; it rides the WorkItem so the lane worker never
+            // touches the tenant registry.
             let spec = self
                 .tenants
                 .get(first.tenant)
@@ -1002,7 +1106,7 @@ impl Coordinator {
         // global metrics (weight marshaling happens only here, so the
         // delta window is exact per round).
         {
-            let c = shard.fusion_cache.lock().unwrap();
+            let c = lock_recover(&shard.fusion_cache);
             for _ in hits_before..c.stats.hits {
                 self.metrics.record_cache(true);
             }
@@ -1051,7 +1155,7 @@ impl Coordinator {
         let max_lanes = ctl.params().max_lanes;
         let stretch: Vec<f64> = match &shard.cost_model {
             Some(cm) => {
-                let cm = cm.lock().unwrap();
+                let cm = lock_recover(cm);
                 (0..=max_lanes).map(|n| cm.lane_stretch(n)).collect()
             }
             None => vec![1.0; max_lanes + 1],
@@ -1093,6 +1197,7 @@ impl Coordinator {
     /// remain in flight, streaming each completion straight into the
     /// outcome (responses, metrics, monitor, cost-model feedback — all
     /// attributed via the completion's round tag).
+    // lint: hot-path
     fn collect_rounds(
         &mut self,
         device: usize,
@@ -1100,12 +1205,16 @@ impl Coordinator {
         outcome: &mut RoundOutcome,
     ) -> Result<()> {
         while self.shards[device].tickets.len() > allowed {
+            // lint: allow(hot-path-alloc) — `LanePool::collect` receives
+            // one round-tagged completion from the channel; a name
+            // collision with `Iterator::collect`, not an allocation.
             let completion = self.shards[device].pool.collect()?;
             self.process_completion(device, completion, outcome)?;
         }
         Ok(())
     }
 
+    // lint: hot-path
     fn process_completion(
         &mut self,
         device: usize,
@@ -1153,7 +1262,7 @@ impl Coordinator {
         // round kept resident — pipelined rounds in flight never
         // cross-attribute — then refresh the lock-free snapshot mirror.
         if let Some(cm) = &shard.cost_model {
-            let mut cm = cm.lock().unwrap();
+            let mut cm = lock_recover(cm);
             cm.observe_concurrent(
                 c.launch.class,
                 c.launch.r_bucket,
@@ -1229,10 +1338,7 @@ impl Coordinator {
         let evictions = self.monitor.check(&mut self.tenants);
         for ev in &evictions {
             let device = self.placer.device_of(ev.tenant);
-            self.shards[device]
-                .fusion_cache
-                .lock()
-                .unwrap()
+            lock_recover(&self.shards[device].fusion_cache)
                 .invalidate_tenant(ev.tenant);
             self.placer.release(ev.tenant);
         }
@@ -1276,7 +1382,7 @@ impl Coordinator {
     pub fn fusion_cache_stats(&self) -> FusionCacheStats {
         let mut total = FusionCacheStats::default();
         for shard in &self.shards {
-            let st = shard.fusion_cache.lock().unwrap().stats;
+            let st = lock_recover(&shard.fusion_cache).stats;
             total.hits += st.hits;
             total.misses += st.misses;
             total.entries += st.entries;
@@ -1290,7 +1396,7 @@ impl Coordinator {
     /// capacity-256 caches.
     pub fn set_fusion_cache_capacity(&mut self, capacity: usize) {
         for shard in &mut self.shards {
-            *shard.fusion_cache.lock().unwrap() = FusionCache::new(capacity);
+            *lock_recover(&shard.fusion_cache) = FusionCache::new(capacity);
         }
     }
 

@@ -74,10 +74,13 @@ impl WeightSet {
     }
 }
 
-// PJRT buffers are plain device handles that the PJRT runtime allows
-// concurrent executions over (same argument as `PjrtEngine`'s Send/Sync);
-// a `WeightSet` is immutable after construction.
+// SAFETY: PJRT buffers are plain device handles that the PJRT runtime
+// allows concurrent executions over (same argument as `PjrtEngine`'s
+// Send/Sync); a `WeightSet` is immutable after construction.
+#[allow(unsafe_code)]
 unsafe impl Send for WeightSet {}
+// SAFETY: see the Send impl above — immutable after construction.
+#[allow(unsafe_code)]
 unsafe impl Sync for WeightSet {}
 
 /// Cached entry plus its LRU stamp.
@@ -95,8 +98,9 @@ pub struct FusionCache {
     pub stats: FusionCacheStats,
 }
 
-// PJRT buffers are plain device handles; all cache mutation happens under
-// the coordinator's lock (same argument as `PjrtEngine`'s Send/Sync).
+// SAFETY: PJRT buffers are plain device handles; all cache mutation happens
+// under the coordinator's lock (same argument as `PjrtEngine`'s Send/Sync).
+#[allow(unsafe_code)]
 unsafe impl Send for FusionCache {}
 
 impl FusionCache {

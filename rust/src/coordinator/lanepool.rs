@@ -9,6 +9,16 @@
 //! joined on shutdown, fed through per-lane SPSC work queues and drained
 //! through one shared completion channel.
 //!
+//! The synchronization protocol itself (SPSC dispatch, the shared
+//! completion channel, resize grow/retire/drain, shutdown) lives in
+//! [`crate::coordinator::protocol`] as [`LaneProtocol`], generic over a
+//! [`crate::coordinator::protocol::SyncEnv`]; this module instantiates it
+//! with real threads ([`StdEnv`]) and the production executor glue. The
+//! same protocol code runs under the deterministic model checker
+//! (`tests/modelcheck_protocol.rs`), which explores *every* interleaving
+//! of dispatch/collect/resize/shutdown — the tests below sample real-time
+//! schedules on top of that.
+//!
 //! Every [`WorkItem`] is **round-tagged** at dispatch: it carries the
 //! round id it was planned in and the lane count that round planned to
 //! keep concurrently resident. The tag rides the [`Completion`] back, so
@@ -24,15 +34,16 @@
 //! driver thread can plan round N+1 (drain admission, run the planner,
 //! marshal weights) while the pool executes round N.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::Launch;
 use crate::coordinator::fusion_cache::WeightSet;
+use crate::coordinator::protocol::{
+    ItemRunner, LaneProtocol, LaneTagged, ProtoPayload, StdEnv,
+};
 use crate::coordinator::superkernel::{Flavor, LaunchResult, SuperKernelExec};
 use crate::coordinator::tenant::ModelSpec;
 use crate::runtime::PjrtEngine;
@@ -64,6 +75,17 @@ pub struct WorkItem {
     pub weights_marshal_s: f64,
 }
 
+impl ProtoPayload for WorkItem {}
+
+impl LaneTagged for WorkItem {
+    fn lane(&self) -> usize {
+        self.lane
+    }
+    fn set_lane(&mut self, lane: usize) {
+        self.lane = lane;
+    }
+}
+
 /// A finished launch, echoing its round tag so the driver attributes the
 /// measurement, deadline verdicts, and lane accounting to the round that
 /// planned it.
@@ -79,6 +101,8 @@ pub struct Completion {
     /// Instant the launch finished on its worker.
     pub done: Instant,
 }
+
+impl ProtoPayload for Completion {}
 
 /// What a lane worker runs per item. Production uses [`PjrtExecutor`];
 /// tests and `benches/fig11_round_overhead.rs` substitute deterministic
@@ -111,6 +135,39 @@ impl LaunchExecutor for PjrtExecutor {
     }
 }
 
+/// The protocol's per-item runner: execute with panic containment. A
+/// panicking executor must not kill the worker — with the lane dead but
+/// its siblings alive, the completion channel would stay open and the
+/// driver would block forever on a round that can no longer drain. So
+/// panics become per-item `Err` completions; the worker lives on.
+struct ExecRunner {
+    exec: Arc<dyn LaunchExecutor>,
+}
+
+impl ItemRunner<WorkItem, Completion> for ExecRunner {
+    fn run(&self, item: WorkItem) -> Completion {
+        let mut result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.exec.execute(&item)
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            Err(anyhow!("lane executor panicked: {msg}"))
+        });
+        if let Ok(res) = &mut result {
+            // Account the driver-side weight marshal so measurements
+            // cover the whole launch cost.
+            res.marshal_s += item.weights_marshal_s;
+        }
+        let done = Instant::now();
+        let WorkItem { round, index, lane, lanes_resident, launch, .. } = item;
+        Completion { round, index, lane, lanes_resident, launch, result, done }
+    }
+}
+
 /// The persistent pool: `lanes` worker threads, one SPSC queue each, one
 /// shared completion channel. Spawned once; joined when dropped (or
 /// explicitly via [`LanePool::shutdown`], which also hands back any
@@ -124,88 +181,12 @@ impl LaunchExecutor for PjrtExecutor {
 /// lose an in-flight round-tagged completion) and then exits on its own.
 /// Retired handles are joined lazily at shutdown/drop.
 pub struct LanePool {
-    senders: Vec<Sender<WorkItem>>,
-    completions: Receiver<Completion>,
-    /// Kept so `resize` can hand fresh workers the shared channel.
-    done_tx: Sender<Completion>,
-    exec: Arc<dyn LaunchExecutor>,
-    /// Every worker ever spawned (active and retired); joined on drop.
-    workers: Vec<JoinHandle<()>>,
-    /// Lifetime lane-worker spawns (names stay unique across resizes).
-    spawned: u64,
-    dispatched: u64,
-    collected: u64,
-}
-
-fn spawn_worker(
-    name: String,
-    rx: Receiver<WorkItem>,
-    done_tx: Sender<Completion>,
-    exec: Arc<dyn LaunchExecutor>,
-) -> JoinHandle<()> {
-    std::thread::Builder::new()
-        .name(name)
-        .spawn(move || {
-            // FIFO over this lane's queue; exits when the driver drops the
-            // sender (shutdown, or this lane retiring in a resize).
-            for item in rx {
-                // A panicking executor must not kill the worker: with the
-                // lane dead but its siblings alive, the completion channel
-                // would stay open and the driver would block forever on a
-                // round that can no longer drain. Convert panics into
-                // per-item errors; the worker lives on.
-                let mut result = std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(|| exec.execute(&item)),
-                )
-                .unwrap_or_else(|p| {
-                    let msg = p
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "<non-string panic>".into());
-                    Err(anyhow!("lane executor panicked: {msg}"))
-                });
-                if let Ok(res) = &mut result {
-                    // Account the driver-side weight marshal so
-                    // measurements cover the whole launch cost.
-                    res.marshal_s += item.weights_marshal_s;
-                }
-                let done = Instant::now();
-                let WorkItem { round, index, lane, lanes_resident, launch, .. } = item;
-                if done_tx
-                    .send(Completion {
-                        round,
-                        index,
-                        lane,
-                        lanes_resident,
-                        launch,
-                        result,
-                        done,
-                    })
-                    .is_err()
-                {
-                    return; // driver gone: nobody to report to
-                }
-            }
-        })
-        .expect("spawn lane worker")
+    proto: LaneProtocol<StdEnv, WorkItem, Completion>,
 }
 
 impl LanePool {
     pub fn new(lanes: usize, exec: Arc<dyn LaunchExecutor>) -> Self {
-        let (done_tx, done_rx) = channel::<Completion>();
-        let mut pool = Self {
-            senders: Vec::new(),
-            completions: done_rx,
-            done_tx,
-            exec,
-            workers: Vec::new(),
-            spawned: 0,
-            dispatched: 0,
-            collected: 0,
-        };
-        pool.resize(lanes);
-        pool
+        Self { proto: LaneProtocol::new(lanes, Arc::new(ExecRunner { exec })) }
     }
 
     /// Change the resident lane count (clamped to >= 1) without losing any
@@ -218,28 +199,11 @@ impl LanePool {
     /// shutdown/drop so a resize never blocks the round loop on a lane's
     /// backlog.
     pub fn resize(&mut self, lanes: usize) {
-        let lanes = lanes.max(1);
-        // Shrink: dropping a sender ends that worker's receive loop after
-        // its queued items (never mid-item).
-        self.senders.truncate(lanes);
-        // Grow: fresh workers on the shared completion channel.
-        while self.senders.len() < lanes {
-            let lane = self.senders.len();
-            let (tx, rx) = channel::<WorkItem>();
-            self.senders.push(tx);
-            let name = format!("stgpu-lane-{lane}.{}", self.spawned);
-            self.spawned += 1;
-            self.workers.push(spawn_worker(
-                name,
-                rx,
-                self.done_tx.clone(),
-                self.exec.clone(),
-            ));
-        }
+        self.proto.resize(lanes);
     }
 
     pub fn lanes(&self) -> usize {
-        self.senders.len()
+        self.proto.lanes()
     }
 
     /// Queue one launch on its lane (clamped to the pool width — after a
@@ -247,32 +211,25 @@ impl LanePool {
     /// onto the surviving ones, and the item's `lane` is rewritten so its
     /// completion reports the lane it actually executed on). Returns
     /// immediately; the item executes when the lane worker reaches it.
-    pub fn dispatch(&mut self, mut item: WorkItem) {
-        let lane = item.lane.min(self.senders.len() - 1);
-        item.lane = lane;
-        self.dispatched += 1;
-        // Send fails only if the worker's receive loop ended early (it
-        // never does outside shutdown: executor panics are caught per
-        // item). NB: since the pool holds `done_tx` for resize, the
-        // completion channel stays open for the pool's lifetime — a
-        // hypothetically dead worker surfaces as items that never
-        // complete, not as a closed-channel error at `collect`.
-        let _ = self.senders[lane].send(item);
+    // lint: hot-path
+    pub fn dispatch(&mut self, item: WorkItem) {
+        self.proto.dispatch(item);
     }
 
     /// Block for the next completion (any lane, any in-flight round).
+    // lint: hot-path
     pub fn collect(&mut self) -> Result<Completion> {
-        let c = self
-            .completions
-            .recv()
-            .map_err(|_| anyhow!("lane workers terminated unexpectedly"))?;
-        self.collected += 1;
-        Ok(c)
+        // lint: allow(hot-path-alloc) — `LaneProtocol::collect` is a
+        // channel receive; a name collision with `Iterator::collect`,
+        // not an allocation.
+        self.proto
+            .collect()
+            .ok_or_else(|| anyhow!("lane workers terminated unexpectedly"))
     }
 
     /// Items dispatched but not yet collected.
     pub fn in_flight(&self) -> u64 {
-        self.dispatched - self.collected
+        self.proto.in_flight()
     }
 
     /// Close the queues, join every worker, and return the completions
@@ -280,25 +237,7 @@ impl LanePool {
     /// drain contract: `collected + shutdown().len() == dispatched` as
     /// long as every dispatched item executed.
     pub fn shutdown(mut self) -> Vec<Completion> {
-        self.senders.clear(); // workers' receive loops end
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-        let mut leftover = Vec::new();
-        while let Ok(c) = self.completions.try_recv() {
-            self.collected += 1;
-            leftover.push(c);
-        }
-        leftover
-    }
-}
-
-impl Drop for LanePool {
-    fn drop(&mut self) {
-        self.senders.clear();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.proto.shutdown_drain()
     }
 }
 
@@ -411,6 +350,45 @@ mod tests {
             20,
             "every dispatched item must surface exactly once"
         );
+    }
+
+    #[test]
+    fn prop_shutdown_under_load_never_loses_completions() {
+        // Satellite of the model-check work: the real-time randomized
+        // companion to the checker's exhaustive shutdown-drain proof.
+        // Random lane widths, item counts, per-item delays, live-collect
+        // counts, and mid-stream resizes; at a random depth the pool is
+        // shut down with work still queued/in flight. Every dispatched
+        // item must surface exactly once (live or in the drain), with its
+        // round tag intact. Failures reproduce via the printed seed.
+        use crate::util::prop::run_prop;
+        run_prop("shutdown under load", 0x51D0, 24, |rng| {
+            let lanes = 1 + rng.gen_range(4) as usize;
+            let delay = Duration::from_micros(rng.gen_range(300));
+            let mut pool = LanePool::new(lanes, Arc::new(SlowExec(delay)));
+            let n_items = 1 + rng.gen_range(24) as usize;
+            for i in 0..n_items {
+                pool.dispatch(item(1 + (i / 7) as u64, i, i % lanes, lanes));
+            }
+            if rng.gen_bool(0.3) {
+                pool.resize(1 + rng.gen_range(4) as usize);
+            }
+            let live = rng.gen_range(n_items as u64 + 1) as usize;
+            let mut seen: Vec<bool> = vec![false; n_items];
+            for _ in 0..live {
+                let c = pool.collect().unwrap();
+                assert!(!seen[c.index], "duplicated completion {}", c.index);
+                seen[c.index] = true;
+                assert_eq!(c.round, 1 + (c.index / 7) as u64, "round tag lost");
+            }
+            for c in pool.shutdown() {
+                assert!(!seen[c.index], "duplicated completion {}", c.index);
+                seen[c.index] = true;
+                assert_eq!(c.round, 1 + (c.index / 7) as u64, "round tag lost");
+            }
+            let missing = seen.iter().filter(|&&s| !s).count();
+            assert_eq!(missing, 0, "{missing} of {n_items} completions lost");
+        });
     }
 
     struct PanicExec;

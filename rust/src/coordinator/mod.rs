@@ -29,8 +29,13 @@
 //! * [`superkernel`] — gather → one PJRT execution → scatter.
 //! * [`monitor`] — per-tenant latency EWMA + straggler eviction, judged
 //!   against same-device peers.
+//! * [`protocol`] — the lane pipeline's synchronization protocol, generic
+//!   over a [`protocol::SyncEnv`] so the same code runs under `std`
+//!   primitives in production and under the deterministic model checker
+//!   ([`crate::util::modelcheck`]) in tests.
 //! * [`lanepool`] — persistent per-lane worker threads fed by SPSC work
-//!   queues; round-tagged completions over one shared channel.
+//!   queues; round-tagged completions over one shared channel (the
+//!   production [`protocol::StdEnv`] instantiation).
 //! * [`driver`] — the sharded serve loop gluing it all together: a
 //!   pipelined round loop (plan/marshal round N+1 while round N executes
 //!   on the lane pool) over a recycled per-shard `RoundArena`.
@@ -43,6 +48,7 @@ pub mod fusion_cache;
 pub mod lanepool;
 pub mod monitor;
 pub mod placement;
+pub mod protocol;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
@@ -59,6 +65,10 @@ pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey, WeightSet};
 pub use lanepool::{Completion, LanePool, LaunchExecutor, PjrtExecutor, WorkItem};
 pub use monitor::{Eviction, MonitorConfig, SloMonitor};
 pub use placement::{place, DevicePlacer, Placement};
+pub use protocol::{
+    ItemRunner, LaneProtocol, LaneTagged, ProtoJoin, ProtoPayload, ProtoReceiver, ProtoSender,
+    StdEnv, SyncEnv,
+};
 pub use queue::{QueueSet, TenantQueue};
 pub use request::{InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass};
 pub use scheduler::{

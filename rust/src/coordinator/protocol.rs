@@ -1,0 +1,352 @@
+//! The LanePool's synchronization protocol, extracted behind a small
+//! `Sync`-abstraction so the SAME generic code runs under two environments:
+//!
+//! * [`StdEnv`] — `std::sync::mpsc` channels + `std::thread` workers. This
+//!   is what production uses; [`crate::coordinator::lanepool::LanePool`] is
+//!   a thin wrapper over `LaneProtocol<StdEnv, WorkItem, Completion>`.
+//! * `ModelEnv` (in [`crate::util::modelcheck`]) — cooperative virtual
+//!   threads whose every channel operation is a *decision point* for a
+//!   DFS schedule explorer. The model-check tests in
+//!   `tests/modelcheck_protocol.rs` run the protocol below under **every**
+//!   interleaving (up to a bounded-preemption cap) and assert the
+//!   conservation invariants the example-based tests can only sample.
+//!
+//! What the protocol owns (and what the checker therefore proves):
+//!
+//! * **SPSC dispatch** — one FIFO queue per lane; the driver is the only
+//!   sender, the lane worker the only receiver.
+//! * **Shared completion channel** — every worker reports into one MPSC
+//!   channel the driver collects from; the protocol keeps its own clone of
+//!   the sender so the channel never closes while the pool lives.
+//! * **Round tags** — items carry their round id through dispatch and back
+//!   on the completion; conservation (`collected + drained == dispatched`,
+//!   per round) is the checker's core assertion.
+//! * **Resize grow/retire/drain** — growing spawns fresh workers onto the
+//!   shared completion channel; retiring drops a lane's sender so the
+//!   worker drains its queue and exits on its own, never abandoning a
+//!   queued item.
+//! * **Panic containment** — converting executor panics to `Err` payloads
+//!   is the [`ItemRunner`]'s job, so a worker thread never dies mid-round.
+
+/// Payload that can flow through a protocol channel. `fingerprint` is the
+/// model checker's state-hash hook: two payloads with equal fingerprints
+/// are treated as equivalent when pruning visited states. Production types
+/// keep the default (state hashing is only used under the checker).
+pub trait ProtoPayload: Send + 'static {
+    fn fingerprint(&self) -> u64 {
+        0
+    }
+}
+
+/// Sending half of a protocol channel. Cloned by the environment when a
+/// worker needs its own handle (the completion channel is MPSC).
+pub trait ProtoSender<T>: Clone + Send + 'static {
+    /// Queue `value`; returns it back if the receiving side is gone.
+    fn send(&self, value: T) -> Result<(), T>;
+}
+
+/// Receiving half of a protocol channel.
+pub trait ProtoReceiver<T>: Send + 'static {
+    /// Block until a value arrives; `None` once every sender is dropped
+    /// and the queue is empty.
+    fn recv(&self) -> Option<T>;
+    /// Non-blocking variant used by the shutdown drain.
+    fn try_recv(&self) -> Option<T>;
+}
+
+/// Join handle for a spawned protocol worker.
+pub trait ProtoJoin {
+    fn join(self);
+}
+
+/// The synchronization environment the protocol is generic over. GATs let
+/// `StdEnv` hand out real `mpsc` endpoints while the model environment
+/// hands out checker-instrumented ones, with the protocol code unchanged.
+pub trait SyncEnv: 'static {
+    type Sender<T: ProtoPayload>: ProtoSender<T>;
+    type Receiver<T: ProtoPayload>: ProtoReceiver<T>;
+    type Join: ProtoJoin;
+
+    fn channel<T: ProtoPayload>() -> (Self::Sender<T>, Self::Receiver<T>);
+    fn spawn(name: String, f: impl FnOnce() + Send + 'static) -> Self::Join;
+    /// Cooperative scheduling point. A no-op under [`StdEnv`]; under the
+    /// model environment it is an extra decision point, letting runner
+    /// bodies expose intermediate states to the explorer.
+    fn yield_now() {}
+}
+
+/// Work items carry their target lane; the protocol clamps and rewrites it
+/// at dispatch (plans targeting retired lanes fold onto survivors).
+pub trait LaneTagged {
+    fn lane(&self) -> usize;
+    fn set_lane(&mut self, lane: usize);
+}
+
+/// What a lane worker runs per item. Implementations MUST NOT panic —
+/// panic containment (catch_unwind → `Err` completion) is the runner's
+/// responsibility, because a dead worker with live siblings leaves the
+/// completion channel open and the driver blocked forever on a round that
+/// can no longer drain.
+pub trait ItemRunner<W, C>: Send + Sync + 'static {
+    fn run(&self, item: W) -> C;
+}
+
+/// The generic persistent lane pool: `lanes` workers, one SPSC queue each,
+/// one shared completion channel. See the module docs for the protocol
+/// invariants; see [`crate::coordinator::lanepool::LanePool`] for the
+/// production instantiation and user-facing docs.
+pub struct LaneProtocol<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> {
+    senders: Vec<E::Sender<W>>,
+    completions: E::Receiver<C>,
+    /// Kept so `resize` can hand fresh workers the shared channel — and so
+    /// the channel stays open for the protocol's lifetime (a dead worker
+    /// surfaces as items that never complete, not a closed-channel error).
+    done_tx: E::Sender<C>,
+    runner: std::sync::Arc<dyn ItemRunner<W, C>>,
+    /// Every worker ever spawned (active and retired); joined on drop.
+    workers: Vec<E::Join>,
+    /// Lifetime worker spawns (names stay unique across resizes).
+    spawned: u64,
+    dispatched: u64,
+    collected: u64,
+}
+
+/// One worker's receive loop: FIFO over its lane queue; exits when the
+/// protocol drops the lane's sender (shutdown, or the lane retiring in a
+/// resize) **after** draining everything already queued — the resize
+/// conservation guarantee lives in this `while let`.
+fn worker_loop<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload>(
+    rx: E::Receiver<W>,
+    done_tx: E::Sender<C>,
+    runner: std::sync::Arc<dyn ItemRunner<W, C>>,
+) {
+    while let Some(item) = rx.recv() {
+        let done = runner.run(item);
+        if done_tx.send(done).is_err() {
+            return; // driver gone: nobody to report to
+        }
+    }
+}
+
+impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> LaneProtocol<E, W, C> {
+    pub fn new(lanes: usize, runner: std::sync::Arc<dyn ItemRunner<W, C>>) -> Self {
+        let (done_tx, done_rx) = E::channel::<C>();
+        let mut proto = Self {
+            senders: Vec::new(),
+            completions: done_rx,
+            done_tx,
+            runner,
+            workers: Vec::new(),
+            spawned: 0,
+            dispatched: 0,
+            collected: 0,
+        };
+        proto.resize(lanes);
+        proto
+    }
+
+    /// Change the resident lane count (clamped to >= 1) without losing any
+    /// in-flight completion. Growing spawns fresh workers; shrinking
+    /// retires the top lanes by dropping their senders: a retired worker
+    /// drains everything already queued on its lane and exits. Retired
+    /// handles are joined lazily at shutdown/drop so a resize never blocks
+    /// the round loop on a lane's backlog.
+    pub fn resize(&mut self, lanes: usize) {
+        let lanes = lanes.max(1);
+        // Shrink: dropping a sender ends that worker's receive loop after
+        // its queued items (never mid-item).
+        self.senders.truncate(lanes);
+        // Grow: fresh workers on the shared completion channel.
+        while self.senders.len() < lanes {
+            let lane = self.senders.len();
+            let (tx, rx) = E::channel::<W>();
+            self.senders.push(tx);
+            let name = format!("stgpu-lane-{lane}.{}", self.spawned);
+            self.spawned += 1;
+            let done_tx = self.done_tx.clone();
+            let runner = self.runner.clone();
+            self.workers
+                .push(E::spawn(name, move || worker_loop::<E, W, C>(rx, done_tx, runner)));
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Queue one item on its lane (clamped to the pool width; the item's
+    /// lane tag is rewritten so its completion reports the lane it actually
+    /// executed on). Returns immediately.
+    // lint: hot-path
+    pub fn dispatch(&mut self, mut item: W) {
+        let lane = item.lane().min(self.senders.len() - 1);
+        item.set_lane(lane);
+        self.dispatched += 1;
+        // Send fails only if the worker's receive loop ended early, which
+        // it never does outside shutdown: runners contain panics per item.
+        let _ = self.senders[lane].send(item);
+    }
+
+    /// Block for the next completion (any lane, any in-flight round);
+    /// `None` only if every worker terminated unexpectedly.
+    // lint: hot-path
+    pub fn collect(&mut self) -> Option<C> {
+        let c = self.completions.recv()?;
+        self.collected += 1;
+        Some(c)
+    }
+
+    /// Items dispatched but not yet collected.
+    pub fn in_flight(&self) -> u64 {
+        self.dispatched - self.collected
+    }
+
+    /// Close the queues, join every worker, and return the completions
+    /// that finished but were never collected — the zero-lost-completions
+    /// drain contract: `collected + leftover.len() == dispatched` as long
+    /// as every dispatched item executed.
+    pub fn shutdown_drain(&mut self) -> Vec<C> {
+        self.senders.clear(); // workers' receive loops end
+        for w in self.workers.drain(..) {
+            w.join();
+        }
+        let mut leftover = Vec::new();
+        while let Some(c) = self.completions.try_recv() {
+            self.collected += 1;
+            leftover.push(c);
+        }
+        leftover
+    }
+}
+
+impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> Drop
+    for LaneProtocol<E, W, C>
+{
+    fn drop(&mut self) {
+        self.senders.clear();
+        for w in self.workers.drain(..) {
+            w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StdEnv: the production environment over std::sync::mpsc + std::thread.
+// ---------------------------------------------------------------------------
+
+/// Production environment: real OS threads and `std::sync::mpsc` channels.
+pub struct StdEnv;
+
+/// Newtype senders/receivers so the GAT impls stay coherent.
+pub struct StdSender<T>(std::sync::mpsc::Sender<T>);
+
+impl<T> Clone for StdSender<T> {
+    fn clone(&self) -> Self {
+        StdSender(self.0.clone())
+    }
+}
+
+pub struct StdReceiver<T>(std::sync::mpsc::Receiver<T>);
+
+impl<T: ProtoPayload> ProtoSender<T> for StdSender<T> {
+    fn send(&self, value: T) -> Result<(), T> {
+        self.0.send(value).map_err(|e| e.0)
+    }
+}
+
+impl<T: ProtoPayload> ProtoReceiver<T> for StdReceiver<T> {
+    fn recv(&self) -> Option<T> {
+        self.0.recv().ok()
+    }
+
+    fn try_recv(&self) -> Option<T> {
+        self.0.try_recv().ok()
+    }
+}
+
+pub struct StdJoin(std::thread::JoinHandle<()>);
+
+impl ProtoJoin for StdJoin {
+    fn join(self) {
+        let _ = self.0.join();
+    }
+}
+
+impl SyncEnv for StdEnv {
+    type Sender<T: ProtoPayload> = StdSender<T>;
+    type Receiver<T: ProtoPayload> = StdReceiver<T>;
+    type Join = StdJoin;
+
+    fn channel<T: ProtoPayload>() -> (StdSender<T>, StdReceiver<T>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (StdSender(tx), StdReceiver(rx))
+    }
+
+    fn spawn(name: String, f: impl FnOnce() + Send + 'static) -> StdJoin {
+        StdJoin(
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(f)
+                .expect("spawn lane worker"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    struct Item {
+        round: u64,
+        lane: usize,
+    }
+    impl ProtoPayload for Item {}
+    impl LaneTagged for Item {
+        fn lane(&self) -> usize {
+            self.lane
+        }
+        fn set_lane(&mut self, lane: usize) {
+            self.lane = lane;
+        }
+    }
+
+    struct Done {
+        round: u64,
+        lane: usize,
+    }
+    impl ProtoPayload for Done {}
+
+    struct Echo;
+    impl ItemRunner<Item, Done> for Echo {
+        fn run(&self, item: Item) -> Done {
+            Done { round: item.round, lane: item.lane }
+        }
+    }
+
+    #[test]
+    fn std_env_round_trip_conserves_items() {
+        let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(2, Arc::new(Echo));
+        for round in 0..6u64 {
+            p.dispatch(Item { round, lane: round as usize % 2 });
+        }
+        let mut seen = 0u64;
+        for _ in 0..4 {
+            let d = p.collect().expect("workers alive");
+            assert!(d.round < 6 && d.lane < 2);
+            seen += 1;
+        }
+        let leftover = p.shutdown_drain();
+        assert_eq!(seen + leftover.len() as u64, 6);
+        assert_eq!(p.in_flight(), 0);
+    }
+
+    #[test]
+    fn std_env_dispatch_clamps_lane() {
+        let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(1, Arc::new(Echo));
+        p.dispatch(Item { round: 1, lane: 7 });
+        let d = p.collect().unwrap();
+        assert_eq!(d.lane, 0, "lane beyond width clamps to the last lane");
+        assert!(p.shutdown_drain().is_empty());
+    }
+}

@@ -335,6 +335,8 @@ impl QueueSet {
     /// [`QueueSet::backlogged`] into a recycled buffer — the schedulers
     /// call this once per drain pass, so reusing the caller's scratch
     /// keeps the round hot path allocation-free.
+    // lint: hot-path
+    // lint: pure
     pub fn backlogged_into(&self, out: &mut Vec<usize>) {
         out.clear();
         out.extend((0..self.queues.len()).filter(|&i| !self.queues[i].is_empty()));
@@ -552,6 +554,69 @@ mod tests {
         assert!((800.0..1200.0).contains(&r2), "external sheds count: {r2}");
         // And the burst decays once the sheds stop.
         assert!(qs2.arrival_rate(t2 + Duration::from_secs(1)) < 1.0);
+    }
+
+    #[test]
+    fn prop_arrival_rate_estimator_invariants() {
+        // Randomized schedules of arrivals and idle reads against the EWMA
+        // estimator's core invariants:
+        //   1. the estimate is always finite and non-negative;
+        //   2. it never exceeds the fastest instantaneous rate observed
+        //      (each update is a convex blend of 1/dt samples, seeded at 0);
+        //   3. idle decay is monotone non-increasing in the idle time;
+        //   4. a long silence (>= 20 tau) drives the estimate to ~0 — the
+        //      burst must never freeze at its peak;
+        //   5. out-of-order timestamps never produce a spike or NaN.
+        use crate::util::prop::run_prop;
+        use std::time::Duration;
+        run_prop("arrival-rate EWMA invariants", 0xA22, 96, |rng| {
+            let base = Instant::now();
+            let tau_ms = 20 + rng.gen_range(200); // 20..220 ms horizon
+            let tau_s = tau_ms as f64 / 1e3;
+            let mut est = ArrivalRate::new(tau_s);
+            assert_eq!(est.rate_at(base), 0.0);
+            // Run the virtual clock well ahead of `base` so the
+            // out-of-order branch can step backwards without ever
+            // underflowing the platform's monotonic-clock epoch.
+            let mut t = base + Duration::from_secs(10);
+            let mut fastest = 0.0f64; // max over observed 1/dt samples
+            let n = 2 + rng.gen_range(120);
+            for _ in 0..n {
+                if rng.gen_bool(0.1) {
+                    // Out-of-order stamp (invariant 5): saturates to a
+                    // simultaneous arrival, never a spike.
+                    est.observe(t - Duration::from_millis(1 + rng.gen_range(500)));
+                    fastest = fastest.max(1e9); // dt clamps at 1e-9 s
+                } else {
+                    let gap_us = 200 + rng.gen_range(30_000); // 0.2..30.2 ms
+                    t += Duration::from_micros(gap_us);
+                    est.observe(t);
+                    fastest = fastest.max(1e6 / gap_us as f64);
+                }
+                let r = est.rate_at(t);
+                assert!(r.is_finite() && r >= 0.0, "rate {r} out of range");
+                assert!(
+                    r <= fastest * (1.0 + 1e-9),
+                    "estimate {r} exceeds fastest instantaneous rate {fastest}"
+                );
+            }
+            // Invariant 3: decay is monotone in the idle time.
+            let mut prev = est.rate_at(t);
+            for step in 1..=10u64 {
+                let idled = est.rate_at(t + Duration::from_millis(step * tau_ms / 2));
+                assert!(
+                    idled <= prev * (1.0 + 1e-9),
+                    "idle decay not monotone: {idled} after {prev}"
+                );
+                prev = idled;
+            }
+            // Invariant 4: 20 tau of silence ~ e^-20 of the peak.
+            let silent = est.rate_at(t + Duration::from_millis(20 * tau_ms));
+            assert!(
+                silent <= fastest * 3e-9 + 1e-9,
+                "estimate {silent} survived 20 tau of silence (peak {fastest})"
+            );
+        });
     }
 
     fn req_deadline(id: u64, deadline: Instant) -> InferenceRequest {

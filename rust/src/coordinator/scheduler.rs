@@ -106,6 +106,7 @@ use crate::coordinator::batcher::{DynamicBatcher, Launch, PaddingPolicy};
 use crate::coordinator::costmodel::SharedCostModel;
 use crate::coordinator::queue::QueueSet;
 use crate::coordinator::request::InferenceRequest;
+use crate::util::sync::lock_recover;
 
 /// One scheduling round's launch plan.
 #[derive(Debug, Default)]
@@ -521,6 +522,8 @@ impl SpaceTimeSched {
     /// and lane vectors are all reused across rounds (only the per-launch
     /// entry vectors are freshly owned, because launches carry their
     /// requests away).
+    // lint: hot-path
+    // lint: pure
     fn plan_into(&mut self, queues: &mut QueueSet, now: Instant, out: &mut RoundPlan) {
         out.launches.clear();
         out.lane_of.clear();
@@ -580,6 +583,8 @@ impl SpaceTimeSched {
 
     /// Deadline-protection pass over a planned round (module docs, EDF
     /// step 3), rewriting `out.launches` in place via recycled scratch.
+    // lint: hot-path
+    // lint: pure
     fn edf_pass(&mut self, now: Instant, out: &mut RoundPlan) {
         let Some(edf) = &self.edf else { return };
 
@@ -592,7 +597,7 @@ impl SpaceTimeSched {
         // count's stretch: the serial stretched cursor upper-bounds any
         // single lane's stretched makespan, keeping every feasibility
         // verdict conservative (never optimistic about a deadline).
-        let cost = edf.cost.lock().unwrap();
+        let cost = lock_recover(&edf.cost);
         let slack = edf.slack_s;
         let stretch = if self.lanes > 1 && out.launches.len() > 1 {
             cost.lane_stretch(self.lanes.min(out.launches.len()))
@@ -697,6 +702,8 @@ impl SpaceTimeSched {
     /// `total/L + max single duration` of the optimum, while appending in
     /// order keeps each lane's launches urgency-sorted. Fills the
     /// recycled `lane_of` vector and returns the plan's lane count.
+    // lint: hot-path
+    // lint: pure
     fn assign_lanes_into(&mut self, launches: &[Launch], lane_of: &mut Vec<usize>) -> usize {
         lane_of.clear();
         let n_lanes = self.lanes.min(launches.len()).max(1);
@@ -712,7 +719,7 @@ impl SpaceTimeSched {
                 .as_ref()
                 .map(|e| &e.cost)
                 .or_else(|| self.lane_cost.as_ref())
-                .map(|c| c.lock().unwrap());
+                .map(|c| lock_recover(c));
             let weight = |l: &Launch| match &cost {
                 Some(cm) => cm.predict(l.class, l.r_bucket),
                 None => launch_weight(l),
@@ -1402,5 +1409,63 @@ mod tests {
             assert_eq!(plan.drained, 0);
             assert!(plan.launches.is_empty());
         }
+    }
+
+    /// Regression for the poisoned-mutex recovery path: a panic while the
+    /// shared cost model's guard is held poisons the mutex, and before
+    /// `lock_recover` every later round's EDF pass (and the driver's
+    /// admission/calibration paths) would panic on `lock().unwrap()` —
+    /// one contained failure became a shard-wide crash. Planning must
+    /// keep working against the recovered (still-consistent) model.
+    #[test]
+    fn planning_survives_a_poisoned_cost_model() {
+        use crate::coordinator::costmodel::CostModel;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::{Arc, Mutex};
+        use std::time::Duration;
+
+        let now = Instant::now();
+        let mut cm = CostModel::new();
+        cm.observe(CLASS, 8, 0.100);
+        cm.observe(CLASS, 4, 0.010);
+        let cost = Arc::new(Mutex::new(cm));
+
+        // Poison it: panic with the guard held, as a panicking caller
+        // anywhere in the serve loop would.
+        let poisoner = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = cost.lock().unwrap();
+            panic!("simulated panic while holding the cost-model lock");
+        }));
+        assert!(poisoner.is_err());
+        assert!(cost.is_poisoned(), "the mutex must actually be poisoned");
+
+        let mut q = QueueSet::new(8, 16);
+        for t in 0..8usize {
+            let slo = if t < 4 {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_secs(10)
+            };
+            q.push(InferenceRequest {
+                id: t as u64,
+                tenant: t,
+                class: CLASS,
+                payload: vec![],
+                arrived: now,
+                deadline: now + slo,
+            })
+            .unwrap();
+        }
+        let mut s = SpaceTimeSched::new(buckets(), 8)
+            .deadline_aware(cost, 0.0)
+            .spatial_lanes(2, None);
+        // Both cost-model lock sites run here: the EDF pass and the lane
+        // balancer. The plan must come out exactly as with a healthy
+        // mutex — the model's data is untouched by the panic.
+        let plan = s.plan_round_at(&mut q, now);
+        assert_eq!(plan.drained, 8);
+        assert_eq!(plan.deadline_splits, 1, "EDF still splits for the urgent four");
+        let total: usize = plan.launches.iter().map(|l| l.entries.len()).sum();
+        assert_eq!(total, 8, "conservation across the recovered lock");
     }
 }

@@ -19,6 +19,7 @@ use crate::coordinator::batcher::Launch;
 use crate::coordinator::fusion_cache::{FusionCache, FusionKey, WeightSet};
 use crate::coordinator::tenant::{ModelSpec, TenantRegistry};
 use crate::runtime::{HostTensor, PjrtEngine};
+use crate::util::sync::lock_recover;
 
 /// Which artifact flavor the dispatcher executes. `Xla` is the fast
 /// CPU-PJRT lowering used by the serving benches; `Pallas` routes through
@@ -198,7 +199,7 @@ impl<'e> SuperKernelExec<'e> {
             return Ok(None);
         }
         let key = FusionKey::of(launch);
-        if let Some(w) = cache.lock().unwrap().get(&key) {
+        if let Some(w) = lock_recover(cache).get(&key) {
             return Ok(Some(w));
         }
         let host = Self::stack_weights(launch, tenants, w_pos);
@@ -207,7 +208,7 @@ impl<'e> SuperKernelExec<'e> {
             .map(|t| engine.to_device(t))
             .collect::<Result<Vec<_>>>()?;
         let built = Arc::new(WeightSet::new(buffers));
-        Ok(Some(cache.lock().unwrap().insert(key, built)))
+        Ok(Some(lock_recover(cache).insert(key, built)))
     }
 
     /// Execute a launch: gather → ONE PJRT execution → scatter.

@@ -15,6 +15,13 @@
 //!    monitoring), the PJRT runtime that executes the AOT artifacts, and the
 //!    V100 simulator substrate that stands in for the paper's testbed.
 
+// Unsafe code is denied crate-wide; the only exceptions are the documented
+// Send/Sync impls over PJRT handles in `coordinator::fusion_cache` and
+// `runtime::engine`, each carrying a `// SAFETY:` justification and a
+// per-site `#[allow(unsafe_code)]` (the allowlist is enforced by
+// `cargo run -p xtask -- lint`).
+#![deny(unsafe_code)]
+
 pub mod config;
 pub mod coordinator;
 pub mod gpusim;

@@ -18,6 +18,10 @@
 //! The arg parser is hand-rolled: `clap` is not vendored offline
 //! (DESIGN.md §7).
 
+// The binary needs no escape hatch at all (the library's allowlisted
+// Send/Sync impls are behind `#![deny(unsafe_code)]` there).
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 

@@ -218,11 +218,14 @@ impl PjrtEngine {
     }
 }
 
-// The xla crate's raw pointers are not Sync-annotated, but the PJRT CPU
-// client is thread-safe for compile/execute (it is exactly how the C API is
-// used from multi-threaded serving frameworks). The engine wraps all
+// SAFETY: the xla crate's raw pointers are not Sync-annotated, but the PJRT
+// CPU client is thread-safe for compile/execute (it is exactly how the C API
+// is used from multi-threaded serving frameworks). The engine wraps all
 // mutable state in locks.
+#[allow(unsafe_code)]
 unsafe impl Send for PjrtEngine {}
+// SAFETY: see the Send impl above — thread-safe client, locked mutable state.
+#[allow(unsafe_code)]
 unsafe impl Sync for PjrtEngine {}
 
 #[cfg(test)]

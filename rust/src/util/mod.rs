@@ -5,6 +5,8 @@
 
 pub mod bench;
 pub mod json;
+pub mod modelcheck;
 pub mod prng;
 pub mod prop;
 pub mod stats;
+pub mod sync;

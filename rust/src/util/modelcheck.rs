@@ -1,0 +1,922 @@
+//! A hand-rolled loom-style deterministic model checker for the
+//! coordinator's synchronization protocol (no new vendored deps — the
+//! offline environment has no `loom`/`shuttle`).
+//!
+//! ## How it works
+//!
+//! Code under test is written against the
+//! [`crate::coordinator::protocol::SyncEnv`] abstraction. Under
+//! [`ModelEnv`], every channel operation (send / recv / try_recv), spawn
+//! start, join, and explicit [`SyncEnv::yield_now`] becomes a **decision
+//! point**: the virtual thread parks and a scheduler — running on the
+//! thread that called [`explore`] — picks which parked thread performs its
+//! pending operation next. Virtual threads are real OS threads driven
+//! cooperatively: exactly one is between decision points at any moment, so
+//! every execution is a deterministic function of the schedule (the
+//! sequence of choices).
+//!
+//! [`explore`] enumerates schedules by DFS over the decision tree with
+//! schedule-prefix replay: run a schedule to completion recording, at each
+//! step, the canonical list of enabled threads and the index chosen; then
+//! backtrack to the deepest step with an untried alternative and re-execute
+//! with that prefix. Two standard soundness/state-space controls:
+//!
+//! * **Bounded preemption** ([`CheckOpts::max_preemptions`]): choosing a
+//!   thread other than the previously-running one *while the previous one
+//!   is still enabled* counts as a preemption; schedules exceeding the cap
+//!   are not explored. With the cap at `usize::MAX` exploration is fully
+//!   exhaustive; small caps (2–3) catch the overwhelming majority of
+//!   concurrency bugs (CHESS) at a fraction of the schedule count.
+//! * **State hashing** ([`CheckOpts::hash_states`], off by default): prune
+//!   a schedule when the scheduler-visible state (thread statuses +
+//!   pending ops + channel mirrors of [`ProtoPayload::fingerprint`]s)
+//!   repeats. This is a *heuristic*: thread-local data (loop counters,
+//!   accumulators) is not part of the hash, so pruning can in principle
+//!   skip states that differ only thread-locally. Leave it off for
+//!   soundness-critical runs; turn it on to tame symmetric workloads.
+//!
+//! **Deadlock detection**: if every live thread is parked and none is
+//! enabled (e.g. the driver blocked on a `collect` that can never arrive —
+//! the "stuck submitter"), the run fails with the parked-op listing.
+//!
+//! ## Determinism requirements
+//!
+//! Bodies must be deterministic: no wall-clock reads, no RNG, no
+//! iteration over `HashMap`s whose order feeds scheduling-visible
+//! behavior. Bodies must also join every virtual thread they spawn
+//! (dropping a [`ModelJoin`] unjoined detaches the OS thread; the
+//! [`crate::coordinator::protocol::LaneProtocol`] joins its workers on
+//! drop, so protocol-based tests get this for free).
+//!
+//! All [`explore`] calls are serialized process-wide (one global gate), so
+//! model-check `#[test]`s can run under the default parallel test harness.
+
+use std::cell::Cell;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashSet, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+use crate::coordinator::protocol::{
+    ProtoJoin, ProtoPayload, ProtoReceiver, ProtoSender, SyncEnv,
+};
+
+// ---------------------------------------------------------------------------
+// Options / results
+// ---------------------------------------------------------------------------
+
+/// Exploration limits. Defaults suit small protocol models (a driver plus
+/// a handful of lane workers, tens of operations).
+#[derive(Clone, Copy, Debug)]
+pub struct CheckOpts {
+    /// Hard cap on explored schedules; exceeding it sets
+    /// [`CheckStats::truncated`] instead of looping forever.
+    pub max_schedules: usize,
+    /// Bounded-preemption cap (see module docs). `usize::MAX` = fully
+    /// exhaustive.
+    pub max_preemptions: usize,
+    /// Per-schedule step cap — a livelock backstop.
+    pub max_steps: usize,
+    /// Visited-state pruning (heuristic; see module docs).
+    pub hash_states: bool,
+}
+
+impl Default for CheckOpts {
+    fn default() -> Self {
+        Self {
+            max_schedules: 50_000,
+            max_preemptions: 3,
+            max_steps: 10_000,
+            hash_states: false,
+        }
+    }
+}
+
+/// Summary of a completed exploration (no invariant violated).
+#[derive(Clone, Copy, Debug)]
+pub struct CheckStats {
+    /// Schedules executed to completion (including pruned ones).
+    pub schedules: usize,
+    /// Schedules cut short by state-hash pruning.
+    pub pruned: usize,
+    /// True if `max_schedules` stopped exploration before the DFS
+    /// frontier was exhausted — the run was NOT exhaustive.
+    pub truncated: bool,
+    /// Deepest decision-point count observed in any schedule.
+    pub max_depth: usize,
+}
+
+impl std::fmt::Display for CheckStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} schedules explored ({} pruned, max depth {}{})",
+            self.schedules,
+            self.pruned,
+            self.max_depth,
+            if self.truncated { ", TRUNCATED" } else { "" }
+        )
+    }
+}
+
+/// A schedule that violated an invariant: the panic message (or deadlock
+/// report) plus the decision trace that reached it.
+#[derive(Clone, Debug)]
+pub struct CheckFailure {
+    /// Schedules executed up to and including the failing one.
+    pub schedules: usize,
+    pub message: String,
+    /// Human-readable decision trace of the failing schedule.
+    pub trace: Vec<String>,
+}
+
+impl std::fmt::Display for CheckFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "schedule {} failed: {}", self.schedules, self.message)?;
+        writeln!(f, "decision trace:")?;
+        for line in &self.trace {
+            writeln!(f, "  {line}")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run state
+// ---------------------------------------------------------------------------
+
+/// Teardown signal: parked threads woken after an abort unwind with this
+/// token; the vthread wrapper swallows it (it is not a failure by itself).
+struct AbortToken;
+
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq)]
+enum Op {
+    /// First decision point of every vthread, before its body runs —
+    /// scheduling the spawn itself.
+    Start,
+    Yield,
+    Send { chan: usize },
+    Recv { chan: usize },
+    TryRecv { chan: usize },
+    Join { target: usize },
+}
+
+impl Op {
+    fn label(&self) -> String {
+        match self {
+            Op::Start => "start".into(),
+            Op::Yield => "yield".into(),
+            Op::Send { chan } => format!("send(ch{chan})"),
+            Op::Recv { chan } => format!("recv(ch{chan})"),
+            Op::TryRecv { chan } => format!("try_recv(ch{chan})"),
+            Op::Join { target } => format!("join(t{target})"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Status {
+    /// Registered; its OS thread has not reached the Start decision yet.
+    Starting,
+    /// Granted — between decision points.
+    Running,
+    Parked(Op),
+    Finished,
+}
+
+struct VThread {
+    name: String,
+    status: Status,
+}
+
+/// Scheduler-visible mirror of one typed channel: endpoint counts plus
+/// the queued payloads' fingerprints (order-sensitive, for hashing and
+/// `recv` enabledness; the typed values live in [`ModelChannel::queue`]).
+struct ChanMirror {
+    senders: usize,
+    receiver_alive: bool,
+    fingerprints: VecDeque<u64>,
+}
+
+struct RunState {
+    threads: Vec<VThread>,
+    chans: Vec<ChanMirror>,
+    /// Tid currently granted but not yet running (decision handshake).
+    grant: Option<usize>,
+    aborted: bool,
+    failure: Option<String>,
+    trace: Vec<String>,
+}
+
+struct Run {
+    state: Mutex<RunState>,
+    cv: Condvar,
+}
+
+/// Poison-recovering lock: a vthread that panics while parked (impossible
+/// today, but belt-and-braces) must not wedge the whole exploration.
+fn lock_run(run: &Run) -> MutexGuard<'_, RunState> {
+    run.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Run {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(RunState {
+                threads: Vec::new(),
+                chans: Vec::new(),
+                grant: None,
+                aborted: false,
+                failure: None,
+                trace: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn register_thread(&self, name: &str) -> usize {
+        let mut st = lock_run(self);
+        st.threads.push(VThread { name: name.to_string(), status: Status::Starting });
+        st.threads.len() - 1
+    }
+
+    fn register_chan(&self) -> usize {
+        let mut st = lock_run(self);
+        st.chans.push(ChanMirror {
+            senders: 1,
+            receiver_alive: true,
+            fingerprints: VecDeque::new(),
+        });
+        st.chans.len() - 1
+    }
+
+    /// Park at `op` and wait for the scheduler's grant. On abort: panic
+    /// with [`AbortToken`] to unwind the vthread — unless the thread is
+    /// already unwinding (a `Drop`-path operation), in which case return
+    /// silently and let the caller free-run its (non-blocking) effect.
+    fn decide(&self, op: Op) {
+        let tid = current_tid().expect("model operation outside a model vthread");
+        let mut st = lock_run(self);
+        loop {
+            if st.aborted {
+                drop(st);
+                if std::thread::panicking() {
+                    return;
+                }
+                std::panic::panic_any(AbortToken);
+            }
+            match st.grant {
+                Some(g) if g == tid => {
+                    st.grant = None;
+                    st.threads[tid].status = Status::Running;
+                    return;
+                }
+                _ => {
+                    if !matches!(st.threads[tid].status, Status::Parked(_)) {
+                        st.threads[tid].status = Status::Parked(op);
+                        self.cv.notify_all();
+                    }
+                    st = self
+                        .cv
+                        .wait(st)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    fn finish(&self, tid: usize) {
+        let mut st = lock_run(self);
+        st.threads[tid].status = Status::Finished;
+        self.cv.notify_all();
+    }
+
+    /// Record the first failure and abort the run (wakes every parked
+    /// thread for teardown).
+    fn fail(&self, message: String) {
+        let mut st = lock_run(self);
+        if st.failure.is_none() {
+            st.failure = Some(message);
+        }
+        st.aborted = true;
+        self.cv.notify_all();
+    }
+
+    fn is_aborted(&self) -> bool {
+        lock_run(self).aborted
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global current-run plumbing
+// ---------------------------------------------------------------------------
+
+/// Serializes [`explore`] calls process-wide so model tests can run under
+/// the parallel test harness.
+static EXPLORE_GATE: Mutex<()> = Mutex::new(());
+/// The run the current exploration executes under; read by vthreads when
+/// they create channels / spawn workers.
+static CURRENT: Mutex<Option<Arc<Run>>> = Mutex::new(None);
+
+thread_local! {
+    static TID: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn current_run() -> Arc<Run> {
+    CURRENT
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone()
+        .expect("ModelEnv operation outside modelcheck::explore()")
+}
+
+fn current_tid() -> Option<usize> {
+    TID.with(|c| c.get())
+}
+
+fn vthread_wrapper(run: Arc<Run>, tid: usize, body: impl FnOnce()) {
+    TID.with(|c| c.set(Some(tid)));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        run.decide(Op::Start);
+        body();
+    }));
+    if let Err(payload) = result {
+        if !payload.is::<AbortToken>() {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            run.fail(format!("thread '{}' panicked: {msg}", thread_name(&run, tid)));
+        }
+    }
+    run.finish(tid);
+}
+
+fn thread_name(run: &Run, tid: usize) -> String {
+    lock_run(run).threads[tid].name.clone()
+}
+
+// ---------------------------------------------------------------------------
+// ModelEnv: the checker-instrumented SyncEnv
+// ---------------------------------------------------------------------------
+
+/// The model-checking environment: instantiate protocol code with this in
+/// place of [`crate::coordinator::protocol::StdEnv`] inside an [`explore`]
+/// body.
+pub struct ModelEnv;
+
+struct ModelChannel<T> {
+    id: usize,
+    run: Arc<Run>,
+    queue: Mutex<VecDeque<T>>,
+}
+
+pub struct ModelSender<T>(Arc<ModelChannel<T>>);
+pub struct ModelReceiver<T>(Arc<ModelChannel<T>>);
+
+impl<T> Clone for ModelSender<T> {
+    fn clone(&self) -> Self {
+        let mut st = lock_run(&self.0.run);
+        st.chans[self.0.id].senders += 1;
+        drop(st);
+        ModelSender(self.0.clone())
+    }
+}
+
+impl<T> Drop for ModelSender<T> {
+    fn drop(&mut self) {
+        // Not a decision point: a drop executes atomically with the
+        // running thread's current step (loom-style reduction). It can
+        // only *enable* a parked recv (channel closure), and the scheduler
+        // recomputes enabledness at every step.
+        let mut st = lock_run(&self.0.run);
+        st.chans[self.0.id].senders -= 1;
+        self.0.run.cv.notify_all();
+    }
+}
+
+impl<T> Drop for ModelReceiver<T> {
+    fn drop(&mut self) {
+        let mut st = lock_run(&self.0.run);
+        st.chans[self.0.id].receiver_alive = false;
+        self.0.run.cv.notify_all();
+    }
+}
+
+impl<T: ProtoPayload> ProtoSender<T> for ModelSender<T> {
+    fn send(&self, value: T) -> Result<(), T> {
+        self.0.run.decide(Op::Send { chan: self.0.id });
+        let mut st = lock_run(&self.0.run);
+        if !st.chans[self.0.id].receiver_alive {
+            return Err(value);
+        }
+        st.chans[self.0.id].fingerprints.push_back(value.fingerprint());
+        drop(st);
+        self.0
+            .queue
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push_back(value);
+        Ok(())
+    }
+}
+
+impl<T: ProtoPayload> ProtoReceiver<T> for ModelReceiver<T> {
+    fn recv(&self) -> Option<T> {
+        // Enabled only when an item is queued or every sender is gone, so
+        // a granted recv never busy-waits: it pops or observes closure.
+        self.0.run.decide(Op::Recv { chan: self.0.id });
+        self.pop()
+    }
+
+    fn try_recv(&self) -> Option<T> {
+        self.0.run.decide(Op::TryRecv { chan: self.0.id });
+        self.pop()
+    }
+}
+
+impl<T> ModelReceiver<T> {
+    fn pop(&self) -> Option<T> {
+        let mut st = lock_run(&self.0.run);
+        if st.chans[self.0.id].fingerprints.is_empty() {
+            return None;
+        }
+        st.chans[self.0.id].fingerprints.pop_front();
+        drop(st);
+        self.0
+            .queue
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .pop_front()
+    }
+}
+
+pub struct ModelJoin {
+    target: usize,
+    run: Arc<Run>,
+    os: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProtoJoin for ModelJoin {
+    fn join(mut self) {
+        // After an abort the vthreads are already unwinding; go straight
+        // to the OS join (a scheduled Join decision would just re-panic).
+        if !self.run.is_aborted() {
+            self.run.decide(Op::Join { target: self.target });
+        }
+        if let Some(h) = self.os.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl SyncEnv for ModelEnv {
+    type Sender<T: ProtoPayload> = ModelSender<T>;
+    type Receiver<T: ProtoPayload> = ModelReceiver<T>;
+    type Join = ModelJoin;
+
+    fn channel<T: ProtoPayload>() -> (ModelSender<T>, ModelReceiver<T>) {
+        let run = current_run();
+        let id = run.register_chan();
+        let ch = Arc::new(ModelChannel { id, run, queue: Mutex::new(VecDeque::new()) });
+        (ModelSender(ch.clone()), ModelReceiver(ch))
+    }
+
+    fn spawn(name: String, f: impl FnOnce() + Send + 'static) -> ModelJoin {
+        let run = current_run();
+        let tid = run.register_thread(&name);
+        let r2 = run.clone();
+        let os = std::thread::Builder::new()
+            .name(format!("mc-{name}"))
+            .spawn(move || vthread_wrapper(r2, tid, f))
+            .expect("spawn model vthread");
+        ModelJoin { target: tid, run, os: Some(os) }
+    }
+
+    fn yield_now() {
+        if current_tid().is_some() {
+            current_run().decide(Op::Yield);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The scheduler + DFS explorer
+// ---------------------------------------------------------------------------
+
+/// One decision point's record: how many threads were enabled (canonical
+/// order), which index was chosen, and the preemption bookkeeping needed
+/// to bound the backtrack.
+#[derive(Clone, Copy)]
+struct StepRec {
+    enabled: usize,
+    idx: usize,
+    prev_enabled: bool,
+    preempts_before: usize,
+}
+
+enum Outcome {
+    Done(Vec<StepRec>),
+    Pruned(Vec<StepRec>),
+    Failed,
+}
+
+fn op_enabled(st: &RunState, op: &Op) -> bool {
+    match op {
+        Op::Start | Op::Yield | Op::Send { .. } | Op::TryRecv { .. } => true,
+        Op::Recv { chan } => {
+            let c = &st.chans[*chan];
+            !c.fingerprints.is_empty() || c.senders == 0
+        }
+        Op::Join { target } => matches!(st.threads[*target].status, Status::Finished),
+    }
+}
+
+fn hash_state(st: &RunState) -> u64 {
+    let mut h = DefaultHasher::new();
+    for t in &st.threads {
+        match &t.status {
+            Status::Starting => 0u8.hash(&mut h),
+            Status::Running => 1u8.hash(&mut h),
+            Status::Parked(op) => {
+                2u8.hash(&mut h);
+                op.hash(&mut h);
+            }
+            Status::Finished => 3u8.hash(&mut h),
+        }
+    }
+    for c in &st.chans {
+        c.senders.hash(&mut h);
+        c.receiver_alive.hash(&mut h);
+        c.fingerprints.hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Drive one schedule to completion, replaying `prefix` then extending
+/// with the canonical default (index 0 = the previously-running thread
+/// when still enabled — the non-preempting continuation).
+fn run_schedule(
+    run: &Run,
+    prefix: &[usize],
+    opts: &CheckOpts,
+    seen: &mut HashSet<u64>,
+) -> Outcome {
+    let mut records: Vec<StepRec> = Vec::new();
+    let mut prev: Option<usize> = None;
+    let mut preempts = 0usize;
+    let mut st = lock_run(run);
+    loop {
+        // Quiesce: wait until nothing is starting/running and no grant is
+        // outstanding — every live thread parked at its next operation.
+        while !st.aborted
+            && (st.grant.is_some()
+                || st
+                    .threads
+                    .iter()
+                    .any(|t| matches!(t.status, Status::Starting | Status::Running)))
+        {
+            st = run.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        if st.aborted {
+            // A vthread recorded a failure (assert / panic) and aborted.
+            return Outcome::Failed;
+        }
+        if st.threads.iter().all(|t| matches!(t.status, Status::Finished)) {
+            return Outcome::Done(records);
+        }
+
+        // Canonical enabled list: previously-running thread first (the
+        // non-preempting choice), then the rest by ascending tid.
+        let parked: Vec<usize> = (0..st.threads.len())
+            .filter(|&i| matches!(st.threads[i].status, Status::Parked(_)))
+            .collect();
+        let mut enabled: Vec<usize> = parked
+            .iter()
+            .copied()
+            .filter(|&i| match &st.threads[i].status {
+                Status::Parked(op) => op_enabled(&st, op),
+                _ => false,
+            })
+            .collect();
+        let prev_enabled = match prev {
+            Some(p) => enabled.contains(&p),
+            None => false,
+        };
+        if prev_enabled {
+            let p = prev.unwrap();
+            enabled.retain(|&t| t != p);
+            enabled.insert(0, p);
+        }
+
+        if enabled.is_empty() {
+            // Deadlock: live threads exist but none can make progress —
+            // e.g. the submitter stuck on a completion that cannot arrive.
+            let stuck: Vec<String> = parked
+                .iter()
+                .map(|&i| match &st.threads[i].status {
+                    Status::Parked(op) => {
+                        format!("'{}' blocked at {}", st.threads[i].name, op.label())
+                    }
+                    _ => unreachable!(),
+                })
+                .collect();
+            st.failure = Some(format!("deadlock: {}", stuck.join(", ")));
+            st.aborted = true;
+            run.cv.notify_all();
+            return Outcome::Failed;
+        }
+        if records.len() >= opts.max_steps {
+            st.failure = Some(format!(
+                "schedule exceeded {} steps (livelock?)",
+                opts.max_steps
+            ));
+            st.aborted = true;
+            run.cv.notify_all();
+            return Outcome::Failed;
+        }
+        if opts.hash_states && records.len() >= prefix.len() {
+            let h = hash_state(&st);
+            if !seen.insert(h) {
+                st.aborted = true;
+                run.cv.notify_all();
+                return Outcome::Pruned(records);
+            }
+        }
+
+        let idx = if records.len() < prefix.len() {
+            let want = prefix[records.len()];
+            if want >= enabled.len() {
+                st.failure = Some(format!(
+                    "non-deterministic body: replay step {} wants choice {want} \
+                     but only {} threads are enabled",
+                    records.len(),
+                    enabled.len()
+                ));
+                st.aborted = true;
+                run.cv.notify_all();
+                return Outcome::Failed;
+            }
+            want
+        } else {
+            0
+        };
+        let chosen = enabled[idx];
+        records.push(StepRec {
+            enabled: enabled.len(),
+            idx,
+            prev_enabled,
+            preempts_before: preempts,
+        });
+        if prev_enabled && idx > 0 {
+            preempts += 1;
+        }
+        if let Status::Parked(op) = &st.threads[chosen].status {
+            let op = *op;
+            let line = format!(
+                "{:3}: {} {}",
+                records.len() - 1,
+                st.threads[chosen].name,
+                op.label()
+            );
+            st.trace.push(line);
+        }
+        prev = Some(chosen);
+        st.grant = Some(chosen);
+        run.cv.notify_all();
+    }
+}
+
+/// Deepest step with an untried alternative that respects the preemption
+/// cap; `None` when the DFS frontier is exhausted.
+fn next_prefix(records: &[StepRec], cap: usize) -> Option<Vec<usize>> {
+    for s in (0..records.len()).rev() {
+        let r = records[s];
+        if r.idx + 1 >= r.enabled {
+            continue;
+        }
+        let cost = usize::from(r.prev_enabled); // any index > 0 preempts
+        if r.preempts_before + cost > cap {
+            continue;
+        }
+        let mut prefix: Vec<usize> = records[..s].iter().map(|x| x.idx).collect();
+        prefix.push(r.idx + 1);
+        return Some(prefix);
+    }
+    None
+}
+
+/// Exhaustively explore every schedule of `body` (up to the
+/// bounded-preemption cap). `body` runs once per schedule on a fresh
+/// virtual-thread universe; it should build its world from [`ModelEnv`]
+/// primitives and assert its invariants inline. Returns the exploration
+/// stats, or the first failing schedule.
+pub fn explore<F>(name: &str, opts: CheckOpts, body: F) -> Result<CheckStats, CheckFailure>
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _gate = EXPLORE_GATE.lock().unwrap_or_else(PoisonError::into_inner);
+    let body = Arc::new(body);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stats = CheckStats { schedules: 0, pruned: 0, truncated: false, max_depth: 0 };
+    loop {
+        let run = Arc::new(Run::new());
+        *CURRENT.lock().unwrap_or_else(PoisonError::into_inner) = Some(run.clone());
+        let root_tid = run.register_thread("main");
+        let b = body.clone();
+        let r2 = run.clone();
+        let root = std::thread::Builder::new()
+            .name(format!("mc-{name}"))
+            .spawn(move || vthread_wrapper(r2, root_tid, move || (*b)()))
+            .expect("spawn model root");
+        let outcome = run_schedule(&run, &prefix, &opts, &mut seen);
+        // Root unwinds (abort) or completes; its drops join the workers,
+        // so after this join the whole virtual universe is quiesced.
+        let _ = root.join();
+        *CURRENT.lock().unwrap_or_else(PoisonError::into_inner) = None;
+        stats.schedules += 1;
+        match outcome {
+            Outcome::Failed => {
+                let st = lock_run(&run);
+                let n = st.trace.len();
+                return Err(CheckFailure {
+                    schedules: stats.schedules,
+                    message: st
+                        .failure
+                        .clone()
+                        .unwrap_or_else(|| "<no failure message>".into()),
+                    trace: st.trace[n.saturating_sub(60)..].to_vec(),
+                });
+            }
+            Outcome::Done(records) | Outcome::Pruned(records) => {
+                if matches!(outcome_kind(&run), OutcomeKind::Pruned) {
+                    stats.pruned += 1;
+                }
+                stats.max_depth = stats.max_depth.max(records.len());
+                match next_prefix(&records, opts.max_preemptions) {
+                    Some(p) => prefix = p,
+                    None => return Ok(stats),
+                }
+            }
+        }
+        if stats.schedules >= opts.max_schedules {
+            stats.truncated = true;
+            return Ok(stats);
+        }
+    }
+}
+
+/// Distinguish Done from Pruned post-match (a pruned run aborted without
+/// recording a failure).
+enum OutcomeKind {
+    Done,
+    Pruned,
+}
+
+fn outcome_kind(run: &Run) -> OutcomeKind {
+    let st = lock_run(run);
+    if st.aborted && st.failure.is_none() {
+        OutcomeKind::Pruned
+    } else {
+        OutcomeKind::Done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{ProtoReceiver as _, ProtoSender as _};
+
+    struct Msg(u64);
+    impl ProtoPayload for Msg {
+        fn fingerprint(&self) -> u64 {
+            self.0
+        }
+    }
+
+    #[test]
+    fn explores_multiple_schedules_of_a_two_producer_race() {
+        let stats = explore("two-producers", CheckOpts::default(), || {
+            let (tx, rx) = ModelEnv::channel::<Msg>();
+            let tx2 = tx.clone();
+            let a = ModelEnv::spawn("p1".into(), move || {
+                tx.send(Msg(1)).ok();
+            });
+            let b = ModelEnv::spawn("p2".into(), move || {
+                tx2.send(Msg(2)).ok();
+            });
+            let x = rx.recv().expect("first value");
+            let y = rx.recv().expect("second value");
+            assert_eq!(x.0 + y.0, 3, "both producers deliver exactly once");
+            a.join();
+            b.join();
+        })
+        .expect("no schedule violates the invariant");
+        println!("two-producer race: {stats}");
+        assert!(stats.schedules > 1, "the race must fork the schedule tree");
+        assert!(!stats.truncated);
+    }
+
+    #[test]
+    fn detects_a_deadlocked_receiver_as_a_stuck_submitter() {
+        let err = explore("stuck-recv", CheckOpts::default(), || {
+            let (tx, rx) = ModelEnv::channel::<Msg>();
+            // The sender half stays alive but nothing is ever sent: recv
+            // can neither pop nor observe closure.
+            let _tx = tx;
+            let _ = rx.recv();
+        })
+        .expect_err("must detect the deadlock");
+        assert!(err.message.contains("deadlock"), "got: {}", err.message);
+        assert!(err.message.contains("recv"), "got: {}", err.message);
+    }
+
+    #[test]
+    fn surfaces_an_interleaving_dependent_assertion_failure() {
+        // The bug only fires when the consumer runs between the two sends
+        // — a schedule an example-based test would almost never hit.
+        let err = explore("torn-pair", CheckOpts::default(), || {
+            let (tx, rx) = ModelEnv::channel::<Msg>();
+            let w = ModelEnv::spawn("producer".into(), move || {
+                tx.send(Msg(1)).ok();
+                tx.send(Msg(2)).ok();
+            });
+            let first = rx.recv().expect("one value arrives");
+            // Bogus invariant: "pairs arrive atomically".
+            let second = rx.try_recv();
+            assert!(
+                second.is_some(),
+                "pair torn: saw {} alone",
+                first.0
+            );
+            let _ = second;
+            w.join();
+        })
+        .expect_err("the checker must find the torn interleaving");
+        assert!(err.message.contains("pair torn"), "got: {}", err.message);
+        assert!(!err.trace.is_empty(), "failure must carry its schedule");
+    }
+
+    #[test]
+    fn state_hashing_prunes_symmetric_schedules() {
+        let opts = CheckOpts { hash_states: true, ..CheckOpts::default() };
+        let stats = explore("symmetric", opts, || {
+            let (tx, rx) = ModelEnv::channel::<Msg>();
+            let tx2 = tx.clone();
+            // Identical payloads → identical fingerprints → symmetric
+            // interleavings collapse to one state.
+            let a = ModelEnv::spawn("s1".into(), move || {
+                tx.send(Msg(7)).ok();
+            });
+            let b = ModelEnv::spawn("s2".into(), move || {
+                tx2.send(Msg(7)).ok();
+            });
+            assert_eq!(rx.recv().map(|m| m.0), Some(7));
+            assert_eq!(rx.recv().map(|m| m.0), Some(7));
+            a.join();
+            b.join();
+        })
+        .expect("symmetric workload is invariant-clean");
+        println!("symmetric pruning: {stats}");
+        assert!(stats.pruned > 0, "hashing must prune symmetric states");
+    }
+
+    #[test]
+    fn preemption_cap_zero_explores_fewer_schedules() {
+        let body = || {
+            let (tx, rx) = ModelEnv::channel::<Msg>();
+            let tx2 = tx.clone();
+            let a = ModelEnv::spawn("p1".into(), move || {
+                tx.send(Msg(1)).ok();
+                ModelEnv::yield_now();
+                tx.send(Msg(2)).ok();
+            });
+            let b = ModelEnv::spawn("p2".into(), move || {
+                tx2.send(Msg(3)).ok();
+            });
+            for _ in 0..3 {
+                let _ = rx.recv();
+            }
+            a.join();
+            b.join();
+        };
+        let full = explore(
+            "cap-full",
+            CheckOpts { max_preemptions: usize::MAX, ..CheckOpts::default() },
+            body,
+        )
+        .unwrap();
+        let capped = explore(
+            "cap-zero",
+            CheckOpts { max_preemptions: 0, ..CheckOpts::default() },
+            body,
+        )
+        .unwrap();
+        println!("full: {full}; capped: {capped}");
+        assert!(capped.schedules < full.schedules);
+        assert!(capped.schedules >= 1);
+    }
+}

@@ -1,0 +1,44 @@
+//! Small synchronization helpers shared across the coordinator.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering from poisoning.
+///
+/// A poisoned mutex only means *some* thread panicked while holding the
+/// guard — the coordinator's shared structures (fusion cache, cost model)
+/// are counters/caches that remain internally consistent after any panic
+/// the lane workers contain (`catch_unwind` converts executor panics into
+/// `Err` completions before the guard scope is re-entered). Propagating
+/// the poison would turn one contained launch panic into a shard-wide
+/// crash on the *next* unrelated `lock()`; recovering keeps the shard
+/// serving. See `coordinator::scheduler` tests for the regression this
+/// guards against.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Mutex::new(41u64);
+        // Poison: panic with the guard held.
+        let poisoner = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("poison");
+        }));
+        assert!(poisoner.is_err());
+        assert!(m.is_poisoned(), "the mutex must actually be poisoned");
+        // A plain lock().unwrap() would now panic; recovery keeps going
+        // and the data is intact.
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 41);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 42);
+    }
+}

@@ -1,0 +1,355 @@
+//! Schedule-exhaustive model checking of the lane pipeline's
+//! synchronization protocol.
+//!
+//! These tests instantiate the SAME generic [`LaneProtocol`] the
+//! production [`stgpu::coordinator::LanePool`] wraps — but under
+//! [`ModelEnv`], where every channel operation is a decision point for
+//! the DFS schedule explorer in [`stgpu::util::modelcheck`]. Each test
+//! asserts its invariant inline; [`explore`] runs the body under every
+//! interleaving (up to the stated preemption bound) and reports the
+//! explored-schedule count (run with `--nocapture` to see it — the CI
+//! model-check job does).
+//!
+//! The `mutation_*` tests re-introduce known-bad protocol variants and
+//! assert the checker CATCHES them — the tooling's own regression suite:
+//! * a resize that abandons a retired lane's queued items (vs. the trunk
+//!   retire-by-sender-drop, which drains),
+//! * a snapshot mirror published as independent words with no version
+//!   counter (vs. the trunk seqlock publish in
+//!   `coordinator::driver::SnapshotMirror`),
+//! * a driver that over-collects — the stuck-submitter deadlock.
+
+use std::sync::{Arc, Mutex, PoisonError};
+
+use stgpu::coordinator::protocol::{
+    ItemRunner, LaneProtocol, LaneTagged, ProtoPayload, ProtoReceiver, ProtoSender, SyncEnv,
+};
+use stgpu::util::modelcheck::{explore, CheckOpts, ModelEnv};
+
+// ---------------------------------------------------------------------------
+// Model payloads: round-tagged items small enough to fingerprint exactly.
+// ---------------------------------------------------------------------------
+
+struct MItem {
+    id: u64,
+    lane: usize,
+}
+
+impl ProtoPayload for MItem {
+    fn fingerprint(&self) -> u64 {
+        self.id
+    }
+}
+
+impl LaneTagged for MItem {
+    fn lane(&self) -> usize {
+        self.lane
+    }
+    fn set_lane(&mut self, lane: usize) {
+        self.lane = lane;
+    }
+}
+
+struct MDone {
+    id: u64,
+}
+
+impl ProtoPayload for MDone {
+    fn fingerprint(&self) -> u64 {
+        self.id
+    }
+}
+
+/// The model runner: yields once mid-execution so the explorer can park a
+/// worker *between* taking an item and reporting it — the window where
+/// real executors spend their time and where lost-completion bugs hide.
+struct MRunner;
+
+impl ItemRunner<MItem, MDone> for MRunner {
+    fn run(&self, item: MItem) -> MDone {
+        ModelEnv::yield_now();
+        MDone { id: item.id }
+    }
+}
+
+fn model_pool(lanes: usize) -> LaneProtocol<ModelEnv, MItem, MDone> {
+    LaneProtocol::new(lanes, Arc::new(MRunner))
+}
+
+/// Mark `id` collected exactly once in `seen`.
+fn mark(seen: &mut [bool], id: u64) {
+    let slot = &mut seen[id as usize];
+    assert!(!*slot, "completion {id} surfaced twice");
+    *slot = true;
+}
+
+// ---------------------------------------------------------------------------
+// Trunk protocol checks (must pass on every schedule)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_single_lane_dispatch_collect_fully_exhaustive() {
+    // Two threads (driver + one worker), NO preemption bound: every
+    // interleaving of dispatch/execute/collect/shutdown, period.
+    let opts = CheckOpts { max_preemptions: usize::MAX, ..CheckOpts::default() };
+    let stats = explore("single-lane", opts, || {
+        let mut pool = model_pool(1);
+        pool.dispatch(MItem { id: 0, lane: 0 });
+        pool.dispatch(MItem { id: 1, lane: 0 });
+        let mut seen = [false; 2];
+        for _ in 0..2 {
+            let d = pool.collect().expect("worker alive");
+            mark(&mut seen, d.id);
+        }
+        assert!(seen.iter().all(|&s| s), "a completion was lost");
+        assert_eq!(pool.in_flight(), 0);
+        let leftover = pool.shutdown_drain();
+        assert!(leftover.is_empty(), "drain after full collect must be empty");
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("single-lane dispatch/collect: {stats}");
+    assert!(!stats.truncated, "exploration must be exhaustive");
+    assert!(stats.schedules > 1);
+}
+
+#[test]
+fn model_two_lanes_conserve_round_tagged_items() {
+    // Three threads; preemption-bounded (CHESS-style: almost all real
+    // concurrency bugs surface within two preemptions).
+    let opts = CheckOpts { max_preemptions: 1, ..CheckOpts::default() };
+    let stats = explore("two-lanes", opts, || {
+        let mut pool = model_pool(2);
+        pool.dispatch(MItem { id: 0, lane: 0 });
+        pool.dispatch(MItem { id: 1, lane: 1 });
+        let mut seen = [false; 2];
+        for _ in 0..2 {
+            let d = pool.collect().expect("workers alive");
+            mark(&mut seen, d.id);
+        }
+        assert!(seen.iter().all(|&s| s), "a lane lost its item");
+        assert_eq!(pool.in_flight(), 0);
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("two-lane conservation: {stats}");
+    assert!(!stats.truncated);
+    assert!(stats.schedules > 1);
+}
+
+#[test]
+fn model_resize_retire_drains_queued_items() {
+    // The resize protocol: shrink while the retired lane still owes a
+    // queued item. Trunk retires by dropping the lane's sender, so the
+    // worker drains its queue before exiting — no schedule may lose the
+    // item (contrast `mutation_retire_abandoning_queue_is_caught`).
+    let opts = CheckOpts { max_preemptions: 1, ..CheckOpts::default() };
+    let stats = explore("resize-retire", opts, || {
+        let mut pool = model_pool(2);
+        pool.dispatch(MItem { id: 0, lane: 1 });
+        pool.dispatch(MItem { id: 1, lane: 1 });
+        pool.resize(1); // retire lane 1 with items possibly still queued
+        pool.dispatch(MItem { id: 2, lane: 1 }); // clamps onto lane 0
+        let mut seen = [false; 3];
+        for _ in 0..3 {
+            let d = pool.collect().expect("workers alive");
+            mark(&mut seen, d.id);
+        }
+        assert!(
+            seen.iter().all(|&s| s),
+            "resize dropped a retired lane's queued item"
+        );
+        assert_eq!(pool.lanes(), 1);
+        assert_eq!(pool.in_flight(), 0);
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("resize retire/drain: {stats}");
+    assert!(!stats.truncated);
+}
+
+#[test]
+fn model_shutdown_drain_conserves_uncollected_completions() {
+    // Shut down with work still queued/executing at every possible point:
+    // collected + drained must equal dispatched on EVERY schedule.
+    let opts = CheckOpts { max_preemptions: 2, ..CheckOpts::default() };
+    let stats = explore("shutdown-drain", opts, || {
+        let mut pool = model_pool(1);
+        pool.dispatch(MItem { id: 0, lane: 0 });
+        pool.dispatch(MItem { id: 1, lane: 0 });
+        let mut seen = [false; 2];
+        let d = pool.collect().expect("worker alive");
+        mark(&mut seen, d.id);
+        // Shutdown races the second item: it may be queued, executing, or
+        // already completed — it must surface in the drain regardless.
+        for d in pool.shutdown_drain() {
+            mark(&mut seen, d.id);
+        }
+        assert!(
+            seen.iter().all(|&s| s),
+            "shutdown lost an in-flight completion"
+        );
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("shutdown drain: {stats}");
+    assert!(!stats.truncated);
+}
+
+// ---------------------------------------------------------------------------
+// Mutation checks: known-bad variants the checker must catch
+// ---------------------------------------------------------------------------
+
+/// Control-plane message for the hand-rolled buggy pool below.
+enum Msg {
+    Item(u64),
+    /// The mutation: an in-band "retire now" sentinel.
+    Retire,
+}
+
+impl ProtoPayload for Msg {
+    fn fingerprint(&self) -> u64 {
+        match self {
+            Msg::Item(id) => *id,
+            Msg::Retire => u64::MAX,
+        }
+    }
+}
+
+#[test]
+fn mutation_retire_abandoning_queue_is_caught() {
+    // Re-introduce the known-bad resize variant: retiring a lane via an
+    // in-band sentinel that makes the worker exit IMMEDIATELY, abandoning
+    // items queued behind it (trunk drops the sender instead, so the
+    // worker drains first — see `model_resize_retire_drains_queued_items`
+    // for the trunk twin passing this exact workload). The driver then
+    // waits for a completion that can never arrive; the checker must
+    // report the stuck submitter.
+    let err = explore("buggy-retire", CheckOpts::default(), || {
+        let (work_tx, work_rx) = ModelEnv::channel::<Msg>();
+        let (done_tx, done_rx) = ModelEnv::channel::<Msg>();
+        let done_keep = done_tx.clone(); // driver keeps the channel open (as the pool does)
+        let w = ModelEnv::spawn("worker".into(), move || {
+            while let Some(m) = work_rx.recv() {
+                match m {
+                    Msg::Item(id) => {
+                        if done_tx.send(Msg::Item(id)).is_err() {
+                            return;
+                        }
+                    }
+                    // BUG: exit without draining the rest of the queue.
+                    Msg::Retire => return,
+                }
+            }
+        });
+        let _ = work_tx.send(Msg::Item(1));
+        let _ = work_tx.send(Msg::Retire);
+        let _ = work_tx.send(Msg::Item(2)); // queued behind the sentinel: lost
+        let _ = done_rx.recv().expect("first completion");
+        let _ = done_rx.recv().expect("second completion"); // never arrives
+        w.join();
+        drop(done_keep);
+    })
+    .expect_err("the checker must catch the abandoned queue");
+    assert!(err.message.contains("deadlock"), "got: {}", err.message);
+    println!("buggy retire caught after {} schedule(s)", err.schedules);
+}
+
+#[test]
+fn mutation_unversioned_mirror_publish_is_caught() {
+    // Re-introduce the pre-seqlock SnapshotMirror bug: per-lane busy and
+    // launch counts published as independent words. A reader landing
+    // between the two writes observes a torn pair. The invariant below
+    // (busy == launches * 10) mirrors the driver's "busy accrues with
+    // each launch" relation.
+    let err = explore("torn-mirror", CheckOpts::default(), || {
+        let busy = Arc::new(Mutex::new(0u64));
+        let launches = Arc::new(Mutex::new(0u64));
+        let (b2, l2) = (busy.clone(), launches.clone());
+        let writer = ModelEnv::spawn("writer".into(), move || {
+            // BUG: two independent publishes with a schedulable window
+            // between them (the yield models the instruction boundary).
+            *b2.lock().unwrap_or_else(PoisonError::into_inner) += 10;
+            ModelEnv::yield_now();
+            *l2.lock().unwrap_or_else(PoisonError::into_inner) += 1;
+        });
+        let (b3, l3) = (busy.clone(), launches.clone());
+        let reader = ModelEnv::spawn("reader".into(), move || {
+            let l = *l3.lock().unwrap_or_else(PoisonError::into_inner);
+            ModelEnv::yield_now();
+            let b = *b3.lock().unwrap_or_else(PoisonError::into_inner);
+            assert!(
+                b == l * 10,
+                "torn read: busy={b} launches={l} (unversioned publish)"
+            );
+        });
+        writer.join();
+        reader.join();
+    })
+    .expect_err("the checker must find the torn interleaving");
+    assert!(err.message.contains("torn read"), "got: {}", err.message);
+    println!("torn mirror caught after {} schedule(s)", err.schedules);
+}
+
+#[test]
+fn model_seqlocked_mirror_publish_is_untearable() {
+    // The trunk fix for the mutation above: publish under a version
+    // counter (odd while writing, bumped even after), reader retries on a
+    // version mismatch. On every schedule, any snapshot the reader
+    // accepts is consistent. Bounded retries keep the model finite; a
+    // reader that exhausts them simply skips (as a real sampler would).
+    let opts = CheckOpts { max_preemptions: 2, ..CheckOpts::default() };
+    let stats = explore("seqlock-mirror", opts, || {
+        let seq = Arc::new(Mutex::new(0u64));
+        let busy = Arc::new(Mutex::new(0u64));
+        let launches = Arc::new(Mutex::new(0u64));
+        let (s2, b2, l2) = (seq.clone(), busy.clone(), launches.clone());
+        let writer = ModelEnv::spawn("writer".into(), move || {
+            *s2.lock().unwrap_or_else(PoisonError::into_inner) = 1; // odd: write open
+            ModelEnv::yield_now();
+            *b2.lock().unwrap_or_else(PoisonError::into_inner) += 10;
+            ModelEnv::yield_now();
+            *l2.lock().unwrap_or_else(PoisonError::into_inner) += 1;
+            ModelEnv::yield_now();
+            *s2.lock().unwrap_or_else(PoisonError::into_inner) = 2; // even: publish
+        });
+        let (s3, b3, l3) = (seq.clone(), busy.clone(), launches.clone());
+        let reader = ModelEnv::spawn("reader".into(), move || {
+            for _ in 0..4 {
+                let s1 = *s3.lock().unwrap_or_else(PoisonError::into_inner);
+                ModelEnv::yield_now();
+                if s1 % 2 == 1 {
+                    continue; // write in progress
+                }
+                let l = *l3.lock().unwrap_or_else(PoisonError::into_inner);
+                ModelEnv::yield_now();
+                let b = *b3.lock().unwrap_or_else(PoisonError::into_inner);
+                let s2 = *s3.lock().unwrap_or_else(PoisonError::into_inner);
+                if s1 != s2 {
+                    continue; // raced a writer: retry
+                }
+                assert!(b == l * 10, "seqlock let a torn pair through: {b} vs {l}");
+                return;
+            }
+        });
+        writer.join();
+        reader.join();
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("seqlock mirror: {stats}");
+    assert!(!stats.truncated);
+}
+
+#[test]
+fn mutation_overcollect_is_caught_as_stuck_submitter() {
+    // Re-introduce a driver bookkeeping bug: collecting more completions
+    // than were dispatched. The completion channel stays open (the pool
+    // keeps a sender for resize), so the extra collect blocks forever —
+    // exactly the "stuck submitter" the deadlock detector exists for.
+    let err = explore("overcollect", CheckOpts::default(), || {
+        let mut pool = model_pool(1);
+        pool.dispatch(MItem { id: 0, lane: 0 });
+        let _ = pool.collect().expect("the real completion");
+        let _ = pool.collect(); // BUG: nothing is in flight
+    })
+    .expect_err("the checker must catch the stuck submitter");
+    assert!(err.message.contains("deadlock"), "got: {}", err.message);
+    assert!(err.message.contains("recv"), "got: {}", err.message);
+    println!("overcollect caught after {} schedule(s)", err.schedules);
+}

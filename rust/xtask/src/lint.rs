@@ -1,0 +1,759 @@
+//! The repo-specific lint pass: a line-oriented lexical scan encoding the
+//! concurrency and hot-path conventions the serving crate relies on but
+//! rustc/clippy cannot see.
+//!
+//! Rules:
+//!
+//! * `hot-path-alloc` — functions annotated `// lint: hot-path` are part of
+//!   the allocation-free round loop; allocation-prone calls (`Vec::new`,
+//!   `vec![`, `format!`, `.clone()`, `.collect()`, `.to_string()`, ...)
+//!   are flagged inside them.
+//! * `pure-clock` — functions annotated `// lint: pure` plan from an
+//!   explicit `now: Instant` parameter; calling `Instant::now()` /
+//!   `SystemTime::now()` / seeding an RNG inside them re-introduces the
+//!   hidden-clock nondeterminism the planners were refactored to avoid.
+//! * `lock-across-exec` — a `let`-bound mutex guard (`.lock()` /
+//!   `lock_recover(`) must not be live across a launch execution or weight
+//!   marshal (`.execute(`, `execute_prepared(`, `resolve_weights(`):
+//!   holding the fusion-cache or cost-model lock through device work is
+//!   the serialization bug the lane pipeline exists to avoid. The guard
+//!   dies at its scope's closing brace or an explicit `drop(guard)`.
+//! * `ordering-comment` — every non-`Relaxed` atomic operation
+//!   (`Ordering::Acquire/Release/AcqRel/SeqCst`) must carry an
+//!   `// ordering:` comment on the same line or within the 3 lines above
+//!   it, naming what it pairs with (see `SnapshotMirror`'s seqlock).
+//! * `unsafe-safety` — every `unsafe` item needs a `// SAFETY:` comment
+//!   within the 5 lines above it (the crate is `#![deny(unsafe_code)]`;
+//!   the per-site `#[allow]`s form the documented allowlist).
+//!
+//! Escape hatch: `// lint: allow(<rule>)` on the offending line or in the
+//! comment block directly above it suppresses that one rule through the
+//! end of the next statement (so a multi-line method chain stays covered —
+//! see the batcher's per-launch entry vector for the idiom).
+//!
+//! `#[cfg(test)]` items are skipped entirely — tests poison mutexes and
+//! allocate on purpose.
+//!
+//! This is a lexical scan, not a semantic analysis: it sees tokens, not
+//! types. The conventions it enforces are annotation-driven precisely so
+//! that a match is meaningful without type information.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    HotPathAlloc,
+    PureClock,
+    LockAcrossExec,
+    OrderingComment,
+    UnsafeSafety,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::PureClock => "pure-clock",
+            Rule::LockAcrossExec => "lock-across-exec",
+            Rule::OrderingComment => "ordering-comment",
+            Rule::UnsafeSafety => "unsafe-safety",
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.name(), self.message)
+    }
+}
+
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+/// Lint every `.rs` file under `root` (recursively), skipping `vendor/`
+/// and `target/` trees.
+pub fn run(root: &Path) -> Result<Report, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+    let mut violations = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f).map_err(|e| format!("{}: {e}", f.display()))?;
+        violations.extend(lint_source(&f.display().to_string(), &src));
+    }
+    Ok(Report { files: files.len(), violations })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "vendor" || name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Allocation-prone call tokens flagged inside `// lint: hot-path` bodies.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "vec![",
+    "String::new(",
+    "String::from(",
+    ".to_string(",
+    ".to_owned(",
+    "format!(",
+    "Box::new(",
+    ".collect(",
+    ".clone(",
+    "HashMap::new(",
+    "BTreeMap::new(",
+    "VecDeque::new(",
+];
+
+/// Hidden-clock / hidden-randomness tokens flagged inside `// lint: pure`
+/// bodies.
+const CLOCK_TOKENS: &[&str] = &["Instant::now(", "SystemTime::now(", "Rng::new(", "rand::"];
+
+/// Device-work calls a lock guard must not be live across.
+const EXEC_TOKENS: &[&str] = &[".execute(", "execute_prepared(", "resolve_weights("];
+
+/// Non-Relaxed atomic orderings that require an `// ordering:` comment.
+const ORDERING_TOKENS: &[&str] = &[
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+/// A function context opened by `// lint:` markers.
+struct FnCtx {
+    hot: bool,
+    pure: bool,
+    /// Depth of the function's body block once `{` is seen; the context
+    /// is armed (body_depth == None) between the `fn` keyword and the
+    /// opening brace, so multi-line signatures attach correctly.
+    body_depth: Option<i32>,
+}
+
+/// A `let`-bound mutex guard believed live.
+struct Guard {
+    name: String,
+    depth: i32,
+    line: usize,
+}
+
+/// Lint one file's source. `path` is used only for reporting.
+pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let lines: Vec<&str> = src.lines().collect();
+    let mut depth: i32 = 0;
+    let mut in_block_comment = false;
+    let mut fn_stack: Vec<FnCtx> = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    // `// lint:` markers and allows accumulated from the comment block
+    // directly above the current code line.
+    let mut pending_hot = false;
+    let mut pending_pure = false;
+    let mut pending_allows: Vec<Rule> = Vec::new();
+    // Depth below which we are inside a `#[cfg(test)]` item (skip checks).
+    let mut cfg_test_pending = false;
+    let mut test_skip_depth: Option<i32> = None;
+
+    for (idx, raw) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let (code, comment) = split_code_comment(raw, &mut in_block_comment);
+
+        // Markers live in comments; collect them whether or not the line
+        // also has code (a trailing `// lint: allow(..)` applies to its
+        // own line).
+        let mut line_allows = pending_allows.clone();
+        if let Some(rest) = comment_directive(&comment) {
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part == "hot-path" {
+                    pending_hot = true;
+                } else if part == "pure" {
+                    pending_pure = true;
+                } else if let Some(rule) = part
+                    .strip_prefix("allow(")
+                    .and_then(|r| r.strip_suffix(')'))
+                    .and_then(rule_by_name)
+                {
+                    pending_allows.push(rule);
+                    line_allows.push(rule);
+                }
+            }
+        }
+
+        let in_test = test_skip_depth.is_some();
+        let has_code = !code.trim().is_empty();
+
+        if has_code && !in_test {
+            if code.contains("#[cfg(test)]") {
+                cfg_test_pending = true;
+            }
+            run_checks(
+                path,
+                lineno,
+                &code,
+                raw,
+                &lines[..idx],
+                &fn_stack,
+                &guards,
+                &line_allows,
+                &mut out,
+            );
+            // Attach pending fn markers to this line's `fn`.
+            if (pending_hot || pending_pure) && has_fn_keyword(&code) {
+                fn_stack.push(FnCtx {
+                    hot: pending_hot,
+                    pure: pending_pure,
+                    body_depth: None,
+                });
+                pending_hot = false;
+                pending_pure = false;
+            }
+            // Track new lock guards (let-bound on this line).
+            if (code.contains(".lock(") || code.contains("lock_recover("))
+                && code.contains("let ")
+            {
+                if let Some(name) = let_binding_name(&code) {
+                    guards.push(Guard { name, depth, line: lineno });
+                }
+            }
+            // An explicit drop releases the guard early.
+            guards.retain(|g| !code.contains(&format!("drop({})", g.name)));
+        }
+
+        // Brace accounting (always, so test-module scopes close properly).
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if cfg_test_pending && test_skip_depth.is_none() {
+                        test_skip_depth = Some(depth);
+                        cfg_test_pending = false;
+                    }
+                    if let Some(ctx) = fn_stack.last_mut() {
+                        if ctx.body_depth.is_none() {
+                            ctx.body_depth = Some(depth);
+                        }
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_skip_depth.is_some_and(|d| depth < d) {
+                        test_skip_depth = None;
+                    }
+                    while fn_stack
+                        .last()
+                        .and_then(|c| c.body_depth)
+                        .is_some_and(|d| depth < d)
+                    {
+                        fn_stack.pop();
+                    }
+                    guards.retain(|g| g.depth <= depth);
+                }
+                _ => {}
+            }
+        }
+
+        if has_code {
+            // Allows persist through the end of the statement they cover,
+            // so a multi-line method chain under one escape stays covered.
+            if code.contains(';') || code.contains('{') {
+                pending_allows.clear();
+            }
+            if !has_fn_keyword(&code) {
+                // Markers separated from their `fn` by unrelated code are
+                // stale; drop them so they cannot leak onto a later item.
+                pending_hot = false;
+                pending_pure = false;
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_checks(
+    path: &str,
+    lineno: usize,
+    code: &str,
+    raw: &str,
+    above: &[&str],
+    fn_stack: &[FnCtx],
+    guards: &[Guard],
+    allows: &[Rule],
+    out: &mut Vec<Violation>,
+) {
+    let allowed = |r: Rule| allows.contains(&r);
+    let hot = fn_stack.iter().any(|c| c.hot && c.body_depth.is_some());
+    let pure = fn_stack.iter().any(|c| c.pure && c.body_depth.is_some());
+
+    if hot && !allowed(Rule::HotPathAlloc) {
+        for t in ALLOC_TOKENS {
+            if code.contains(t) {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: lineno,
+                    rule: Rule::HotPathAlloc,
+                    message: format!(
+                        "`{t}` in a `// lint: hot-path` function (the round \
+                         loop is allocation-free; recycle a buffer or add \
+                         `// lint: allow(hot-path-alloc)` with a reason)"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+
+    if pure && !allowed(Rule::PureClock) {
+        for t in CLOCK_TOKENS {
+            if code.contains(t) {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: lineno,
+                    rule: Rule::PureClock,
+                    message: format!(
+                        "`{t}` in a `// lint: pure` function (planners take \
+                         `now` as a parameter; a hidden clock or RNG breaks \
+                         replay determinism)"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+
+    if !guards.is_empty() && !allowed(Rule::LockAcrossExec) {
+        for t in EXEC_TOKENS {
+            if code.contains(t) {
+                let g = guards.last().expect("non-empty");
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: lineno,
+                    rule: Rule::LockAcrossExec,
+                    message: format!(
+                        "`{t}` while the guard `{}` (line {}) is live — \
+                         device work must not run under a mutex; drop the \
+                         guard first",
+                        g.name, g.line
+                    ),
+                });
+                break;
+            }
+        }
+    }
+
+    if !allowed(Rule::OrderingComment) && !code.trim_start().starts_with("use ") {
+        for t in ORDERING_TOKENS {
+            if code.contains(t) {
+                let documented = raw.contains("ordering:")
+                    || above.iter().rev().take(3).any(|l| l.contains("ordering:"));
+                if !documented {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: lineno,
+                        rule: Rule::OrderingComment,
+                        message: format!(
+                            "`{t}` without an `// ordering:` comment (same \
+                             line or the 3 above) saying what it pairs with"
+                        ),
+                    });
+                }
+                break;
+            }
+        }
+    }
+
+    if !allowed(Rule::UnsafeSafety) && code.contains("unsafe ") {
+        let documented = raw.contains("SAFETY:")
+            || above.iter().rev().take(5).any(|l| l.contains("SAFETY:"));
+        if !documented {
+            out.push(Violation {
+                file: path.to_string(),
+                line: lineno,
+                rule: Rule::UnsafeSafety,
+                message: "`unsafe` without a `// SAFETY:` comment within the \
+                          5 lines above it"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn rule_by_name(s: &str) -> Option<Rule> {
+    Some(match s {
+        "hot-path-alloc" => Rule::HotPathAlloc,
+        "pure-clock" => Rule::PureClock,
+        "lock-across-exec" => Rule::LockAcrossExec,
+        "ordering-comment" => Rule::OrderingComment,
+        "unsafe-safety" => Rule::UnsafeSafety,
+        _ => return None,
+    })
+}
+
+/// The `lint:` directive payload of a comment, if present.
+fn comment_directive(comment: &str) -> Option<&str> {
+    let at = comment.find("lint:")?;
+    Some(comment[at + "lint:".len()..].trim())
+}
+
+/// Does this code text contain the `fn` keyword (not as part of another
+/// identifier)?
+fn has_fn_keyword(code: &str) -> bool {
+    for (i, _) in code.match_indices("fn ") {
+        let before_ok = i == 0
+            || !code.as_bytes()[i - 1].is_ascii_alphanumeric()
+                && code.as_bytes()[i - 1] != b'_';
+        if before_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// The binding name of a `let` statement (`let mut name = ...`), if the
+/// pattern is a plain identifier.
+fn let_binding_name(code: &str) -> Option<String> {
+    let at = code.find("let ")?;
+    let rest = code[at + 4..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Split one line into (code, comment) with string/char literals blanked
+/// out of the code part, tracking `/* */` across lines. Blanking literals
+/// keeps brace counting and token matching honest (`"{"`, `'{'`, or a
+/// token inside a string must not count).
+fn split_code_comment(raw: &str, in_block_comment: &mut bool) -> (String, String) {
+    let bytes = raw.as_bytes();
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = String::new();
+    let mut i = 0;
+    // All lookahead is byte-wise (never slicing `raw` mid-character), so a
+    // multibyte character in a comment or identifier cannot panic the scan.
+    while i < bytes.len() {
+        if *in_block_comment {
+            if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                *in_block_comment = false;
+                i += 2;
+            } else {
+                comment.push(bytes[i] as char);
+                i += 1;
+            }
+            continue;
+        }
+        if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            comment.push_str(&raw[i..]);
+            break;
+        }
+        if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            *in_block_comment = true;
+            i += 2;
+            continue;
+        }
+        match bytes[i] {
+            b'"' => {
+                // Skip the string literal, honoring escapes.
+                code.push(' ');
+                i += 1;
+                while i < bytes.len() {
+                    if bytes[i] == b'\\' {
+                        i += 2;
+                    } else if bytes[i] == b'"' {
+                        i += 1;
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'\'' => {
+                // Char literal ('x', '\n', '\u{..}') vs lifetime ('a).
+                let lit_end = char_literal_end(raw, i);
+                match lit_end {
+                    Some(end) => {
+                        code.push(' ');
+                        i = end;
+                    }
+                    None => {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                code.push(b as char);
+                i += 1;
+            }
+        }
+    }
+    (code, comment)
+}
+
+/// If a char literal starts at byte `i` (which holds `'`), return the index
+/// one past its closing quote; `None` if this is a lifetime.
+fn char_literal_end(raw: &str, i: usize) -> Option<usize> {
+    let bytes = raw.as_bytes();
+    let mut j = i + 1;
+    if j >= bytes.len() {
+        return None;
+    }
+    if bytes[j] == b'\\' {
+        // Escape: scan to the next unescaped quote.
+        j += 2;
+        while j < bytes.len() && bytes[j] != b'\'' {
+            j += 1;
+        }
+        return (j < bytes.len()).then_some(j + 1);
+    }
+    // 'x' is a char literal only if the quote closes right after one char.
+    let ch_len = raw[j..].chars().next().map(char::len_utf8)?;
+    let close = j + ch_len;
+    (bytes.get(close) == Some(&b'\'')).then_some(close + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Violation> {
+        lint_source("fixture.rs", src)
+    }
+
+    fn rules(v: &[Violation]) -> Vec<Rule> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    /// The acceptance fixture: a seeded allocation in a hot-path function
+    /// must be flagged.
+    #[test]
+    fn seeded_hot_path_allocation_is_flagged() {
+        let src = r#"
+// lint: hot-path
+fn round_step(&mut self) {
+    let staging: Vec<u64> = Vec::new();
+    self.consume(staging);
+}
+"#;
+        let v = lint(src);
+        assert_eq!(rules(&v), vec![Rule::HotPathAlloc], "{v:?}");
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn unannotated_function_may_allocate() {
+        let src = "fn cold_setup() { let v: Vec<u64> = Vec::new(); drop(v); }";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn allow_escape_suppresses_one_site() {
+        let src = r#"
+// lint: hot-path
+fn round_step(&mut self) {
+    // lint: allow(hot-path-alloc) — entries are carried away by value.
+    let chunk: Vec<u64> = reqs.drain(..take).collect();
+    let second: Vec<u64> = Vec::new();
+}
+"#;
+        let v = lint(src);
+        assert_eq!(rules(&v), vec![Rule::HotPathAlloc]);
+        assert_eq!(v[0].line, 6, "only the unescaped site is flagged");
+    }
+
+    #[test]
+    fn allow_escape_covers_a_multiline_statement() {
+        let src = r#"
+// lint: hot-path
+fn round_step(&mut self) {
+    // lint: allow(hot-path-alloc) — POD enum, a few-word copy.
+    let spec = self
+        .tenants
+        .get(first.tenant)
+        .spec
+        .clone();
+    let second = spec.clone();
+}
+"#;
+        let v = lint(src);
+        assert_eq!(rules(&v), vec![Rule::HotPathAlloc]);
+        assert_eq!(v[0].line, 10, "the chain is covered; the next statement is not");
+    }
+
+    #[test]
+    fn hot_path_scope_ends_at_function_close() {
+        let src = r#"
+// lint: hot-path
+fn tight(&self) -> usize {
+    self.len
+}
+
+fn relaxed(&self) -> String {
+    format!("{}", self.len)
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn pure_function_must_not_read_the_clock() {
+        let src = r#"
+// lint: pure
+fn plan(&mut self, now: Instant) {
+    let t = Instant::now();
+}
+"#;
+        assert_eq!(rules(&lint(src)), vec![Rule::PureClock]);
+    }
+
+    #[test]
+    fn guard_live_across_execute_is_flagged() {
+        let src = r#"
+fn launch(&self) {
+    let cache = self.cache.lock().unwrap();
+    self.engine.execute(&cache.plan);
+}
+"#;
+        assert_eq!(rules(&lint(src)), vec![Rule::LockAcrossExec]);
+    }
+
+    #[test]
+    fn guard_scoped_out_before_execute_is_fine() {
+        let src = r#"
+fn launch(&self) {
+    let stats = {
+        let cache = lock_recover(&self.cache);
+        cache.stats
+    };
+    self.engine.execute(stats);
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn explicit_drop_releases_the_guard() {
+        let src = r#"
+fn launch(&self) {
+    let cost = lock_recover(&self.cost);
+    let dur = cost.predict();
+    drop(cost);
+    self.engine.execute(dur);
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn non_relaxed_ordering_needs_a_comment() {
+        let bad = "fn f(a: &AtomicU64) { a.store(1, Ordering::Release); }";
+        assert_eq!(rules(&lint(bad)), vec![Rule::OrderingComment]);
+        let good = r#"
+fn f(a: &AtomicU64) {
+    // ordering: Release store — pairs with the reader's Acquire load.
+    a.store(1, Ordering::Release);
+}
+"#;
+        assert!(lint(good).is_empty());
+        let relaxed = "fn f(a: &AtomicU64) { a.store(1, Ordering::Relaxed); }";
+        assert!(lint(relaxed).is_empty(), "Relaxed needs no comment");
+        let import = "use std::sync::atomic::Ordering::Release;";
+        assert!(lint(import).is_empty(), "imports are not operations");
+    }
+
+    #[test]
+    fn unsafe_needs_a_safety_comment() {
+        let bad = "unsafe impl Send for Thing {}";
+        assert_eq!(rules(&lint(bad)), vec![Rule::UnsafeSafety]);
+        let good = r#"
+// SAFETY: Thing's pointer is only dereferenced under the owner's lock.
+unsafe impl Send for Thing {}
+"#;
+        assert!(lint(good).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped() {
+        let src = r#"
+// lint: hot-path
+fn tight(&self) -> usize {
+    self.len
+}
+
+#[cfg(test)]
+mod tests {
+    fn helper() {
+        let g = m.lock().unwrap();
+        engine.execute(&g);
+        let v: Vec<u64> = Vec::new();
+    }
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_char_literals_do_not_confuse_the_scanner() {
+        let src = r#"
+// lint: hot-path
+fn tight(&self) {
+    let open = '{';
+    let close = '}';
+    let msg = "Vec::new( } { .clone(";
+    self.push(open, close, msg);
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn multiline_signature_attaches_to_the_marker() {
+        let src = r#"
+// lint: hot-path
+fn dispatch(
+    &mut self,
+    item: Item,
+) -> bool {
+    let tag = item.spec.clone();
+    self.send(tag)
+}
+"#;
+        assert_eq!(rules(&lint(src)), vec![Rule::HotPathAlloc]);
+    }
+}

@@ -1,0 +1,88 @@
+//! `cargo xtask` — repo automation for stgpu (cargo-xtask convention).
+//!
+//! Subcommands:
+//! * `lint [--root <dir>]` — run the repo-specific concurrency/perf lint
+//!   pass over `rust/src` (see [`lint`] for the rules). Exits non-zero on
+//!   any violation; CI runs this as a blocking job.
+//!
+//! Std-only by design: the offline environment vendors nothing for this
+//! crate, and the lint is a line-oriented lexical scan, not a type-aware
+//! analysis — cheap enough to run on every push.
+
+#![forbid(unsafe_code)]
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {
+            let mut root: Option<PathBuf> = None;
+            loop {
+                match args.next().as_deref() {
+                    Some("--root") => match args.next() {
+                        Some(dir) => root = Some(PathBuf::from(dir)),
+                        None => {
+                            eprintln!("xtask lint: --root needs a directory");
+                            return ExitCode::from(2);
+                        }
+                    },
+                    Some(other) => {
+                        eprintln!("xtask lint: unknown flag {other:?}");
+                        return ExitCode::from(2);
+                    }
+                    None => break,
+                }
+            }
+            let root = root.unwrap_or_else(default_src_root);
+            run_lint(&root)
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command {other:?}");
+            usage();
+            ExitCode::from(2)
+        }
+        None => {
+            usage();
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage() {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <dir>]");
+}
+
+/// The lint's default scope: the serving crate's sources (`rust/src`),
+/// resolved relative to this crate so it works from any working directory.
+/// Tests and benches are deliberately out of scope — they poison mutexes
+/// and allocate on purpose.
+fn default_src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src")
+}
+
+fn run_lint(root: &std::path::Path) -> ExitCode {
+    match lint::run(root) {
+        Ok(report) => {
+            for v in &report.violations {
+                println!("{v}");
+            }
+            println!(
+                "xtask lint: {} file(s) scanned, {} violation(s)",
+                report.files, report.violations.len()
+            );
+            if report.violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

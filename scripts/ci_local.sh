@@ -10,10 +10,14 @@
 #   bench-gate:  cargo bench --no-run, the fig11/fig12 smokes, then
 #                scripts/bench_gate.py against rust/bench_baselines
 #   lint:        cargo fmt --check && cargo clippy --all-targets -D warnings
+#                && cargo run -p xtask -- lint (repo-specific rules)
+#   model-check: the schedule-exhaustive lane-protocol suite with
+#                --nocapture so explored-schedule counts are printed
 #   doc:         cargo doc --no-deps with -D warnings
 #
 # --skip-bench skips the timed smoke benches + gate (the slowest step);
-# everything else is identical to CI.
+# everything else is identical to CI. The advisory Miri/TSan job is
+# CI-only (needs a nightly toolchain and is non-blocking there anyway).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -56,6 +60,15 @@ cargo fmt --check
 
 step "lint: cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
+
+step "lint: cargo run -p xtask -- lint"
+cargo run -p xtask -- lint
+
+step "model-check: lane-protocol exhaustive + mutation suite"
+cargo test --test modelcheck_protocol -- --nocapture
+
+step "model-check: checker unit tests"
+cargo test -p stgpu --lib util::modelcheck -- --nocapture
 
 step "doc: cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings -A rustdoc::private-intra-doc-links" cargo doc --no-deps
