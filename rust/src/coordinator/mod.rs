@@ -39,6 +39,10 @@
 //! * [`driver`] — the sharded serve loop gluing it all together: a
 //!   pipelined round loop (plan/marshal round N+1 while round N executes
 //!   on the lane pool) over a recycled per-shard `RoundArena`.
+//! * [`tuner`] — offline `(lanes, depth, EDF, controller)` autotuner
+//!   (`stgpu tune`): budgeted grid + local-refinement search against
+//!   gpusim ground truth, emitting a validated `[server]`/`[controller]`
+//!   TOML fragment and a JSON leaderboard.
 
 pub mod batcher;
 pub mod controller;
@@ -54,6 +58,7 @@ pub mod request;
 pub mod scheduler;
 pub mod superkernel;
 pub mod tenant;
+pub mod tuner;
 
 pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
 pub use controller::{
@@ -77,3 +82,4 @@ pub use scheduler::{
 };
 pub use superkernel::{Flavor, LaunchResult, SuperKernelExec};
 pub use tenant::{Health, ModelSpec, Tenant, TenantRegistry};
+pub use tuner::{tune, TuneOutcome, TunePoint, TuneReport};

@@ -1,0 +1,206 @@
+//! Interned workload/kernel classes for the vectorized engine.
+//!
+//! The legacy round loop re-derived every kernel's fusion-group key on
+//! every round — and the [`WorkloadClass::Other`] variant carries an owned
+//! `String`, so each derivation *cloned the kernel name* (one heap
+//! allocation per live tenant per round, plus another per `class_key()`
+//! call on the pool placement path). This module fixes both:
+//!
+//! * [`ClassTable`] interns every distinct group key once at simulation
+//!   setup and hands the hot loop a dense [`ClassId`] per kernel. Rank
+//!   order is **exactly** the legacy `BTreeMap` iteration order (GEMM
+//!   `(m, n, k)` tuples ascending, then non-GEMM names in byte order), so
+//!   the vectorized engine can bucket heads by integer rank and still
+//!   replay launches bit-for-bit in the legacy plan order.
+//! * [`WorkloadClassRef`] is the borrowed, `Copy` view of a workload's
+//!   placement class: what [`crate::gpusim::pool`] feeds the generic
+//!   [`crate::coordinator::placement::place`] without cloning names.
+
+use crate::gpusim::engine::{TenantWorkload, WorkloadClass};
+use crate::gpusim::kernel::KernelDesc;
+
+/// Borrowed placement class of a workload — the allocation-free twin of
+/// [`WorkloadClass`] (same variant order, so `Ord` agrees and placement
+/// groups identically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WorkloadClassRef<'a> {
+    /// Head kernel is a batchable GEMM of this (M, N, K).
+    Gemm(u32, u32, u32),
+    /// Head kernel is a non-GEMM kernel, keyed by (borrowed) name.
+    Other(&'a str),
+    /// No kernels.
+    Empty,
+}
+
+impl WorkloadClassRef<'_> {
+    /// Owned copy, for callers that need to store the class.
+    pub fn to_class(self) -> WorkloadClass {
+        match self {
+            WorkloadClassRef::Gemm(m, n, k) => WorkloadClass::Gemm(m, n, k),
+            WorkloadClassRef::Other(name) => WorkloadClass::Other(name.to_string()),
+            WorkloadClassRef::Empty => WorkloadClass::Empty,
+        }
+    }
+}
+
+/// Dense interned id of a kernel's fusion-group class. The numeric value
+/// is the class's *rank* in legacy group order: iterating ranks ascending
+/// visits groups exactly as the legacy `BTreeMap<GroupKey, _>` did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ClassId(pub u32);
+
+impl ClassId {
+    #[inline]
+    pub fn rank(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Owned interning key. Variant and field order mirror the legacy round
+/// loop's `GroupKey`, so the derived `Ord` reproduces its `BTreeMap`
+/// iteration order exactly.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum ClassKey {
+    Gemm(u32, u32, u32),
+    Other(String),
+}
+
+impl ClassKey {
+    pub(crate) fn of(k: &KernelDesc) -> Self {
+        match k.shape {
+            Some(s) => ClassKey::Gemm(s.m, s.n, s.k),
+            None => ClassKey::Other(k.name.clone()),
+        }
+    }
+}
+
+/// The interner: every distinct fusion-group class across a workload set,
+/// sorted so that `ClassId(i)` is the i-th class in legacy group order.
+/// Built once at simulation setup; the hot loop never touches a string.
+#[derive(Debug, Clone)]
+pub struct ClassTable {
+    keys: Vec<ClassKey>,
+}
+
+impl ClassTable {
+    /// Intern every kernel's group class across `workloads`. Returns the
+    /// table plus, per tenant, the `ClassId` of each of its kernels (the
+    /// class of kernel `i` of tenant `t` is `ids[t][i]`).
+    pub(crate) fn build(workloads: &[TenantWorkload]) -> (Self, Vec<Vec<ClassId>>) {
+        use std::collections::BTreeMap;
+        let mut ranks: BTreeMap<ClassKey, u32> = BTreeMap::new();
+        for w in workloads {
+            for k in &w.kernels {
+                ranks.entry(ClassKey::of(k)).or_insert(0);
+            }
+        }
+        // BTreeMap iteration is ascending, which IS the rank order.
+        for (rank, (_, slot)) in ranks.iter_mut().enumerate() {
+            *slot = rank as u32;
+        }
+        let ids = workloads
+            .iter()
+            .map(|w| {
+                w.kernels
+                    .iter()
+                    .map(|k| ClassId(ranks[&ClassKey::of(k)]))
+                    .collect()
+            })
+            .collect();
+        let keys = ranks.into_keys().collect();
+        (Self { keys }, ids)
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub(crate) fn key(&self, id: ClassId) -> &ClassKey {
+        &self.keys[id.rank()]
+    }
+
+    /// Whether this class is a batchable GEMM (super-kernel eligible).
+    pub fn is_gemm(&self, id: ClassId) -> bool {
+        matches!(self.keys[id.rank()], ClassKey::Gemm(..))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::GemmShape;
+
+    fn gemm(t: usize, m: u32, n: u32, k: u32) -> KernelDesc {
+        KernelDesc::sgemm(t, GemmShape::new(m, n, k))
+    }
+
+    #[test]
+    fn rank_order_matches_legacy_btreemap_group_order() {
+        // Deliberately interleaved insertion order; ranks must come out
+        // GEMM-tuples-ascending first, then names in byte order.
+        let w = vec![
+            TenantWorkload::new(vec![KernelDesc::other(0, "relu", 1e6, 1e3, 4)], 1),
+            TenantWorkload::new(vec![gemm(1, 256, 128, 64)], 1),
+            TenantWorkload::new(vec![KernelDesc::other(2, "attn", 1e6, 1e3, 4)], 1),
+            TenantWorkload::new(vec![gemm(3, 128, 256, 64)], 1),
+            TenantWorkload::new(vec![gemm(4, 128, 256, 32)], 1),
+        ];
+        let (table, ids) = ClassTable::build(&w);
+        assert_eq!(table.len(), 5);
+        let rank_of = |t: usize| ids[t][0].rank();
+        // Gemm(128,256,32) < Gemm(128,256,64) < Gemm(256,128,64)
+        //   < Other("attn") < Other("relu").
+        assert_eq!(rank_of(4), 0);
+        assert_eq!(rank_of(3), 1);
+        assert_eq!(rank_of(1), 2);
+        assert_eq!(rank_of(2), 3);
+        assert_eq!(rank_of(0), 4);
+        assert!(table.is_gemm(ids[1][0]));
+        assert!(!table.is_gemm(ids[0][0]));
+    }
+
+    #[test]
+    fn duplicate_classes_intern_to_one_id() {
+        let w = vec![
+            TenantWorkload::new(vec![gemm(0, 64, 64, 64)], 1),
+            TenantWorkload::new(vec![gemm(1, 64, 64, 64)], 1),
+            TenantWorkload::new(
+                vec![gemm(2, 64, 64, 64), KernelDesc::other(2, "ln", 1.0, 1.0, 1)],
+                1,
+            ),
+        ];
+        let (table, ids) = ClassTable::build(&w);
+        assert_eq!(table.len(), 2);
+        assert_eq!(ids[0][0], ids[1][0]);
+        assert_eq!(ids[0][0], ids[2][0]);
+        assert_ne!(ids[2][0], ids[2][1]);
+    }
+
+    #[test]
+    fn class_ref_borrows_the_kernel_name_without_cloning() {
+        let w = TenantWorkload::new(vec![KernelDesc::other(0, "fused_ln", 1.0, 1.0, 1)], 1);
+        match w.class_ref() {
+            WorkloadClassRef::Other(name) => {
+                // Same allocation as the kernel's own name — no clone.
+                assert_eq!(name.as_ptr(), w.kernels[0].name.as_ptr());
+            }
+            other => panic!("expected Other, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn class_ref_agrees_with_owned_class_key() {
+        let cases = vec![
+            TenantWorkload::new(vec![gemm(0, 8, 9, 10)], 1),
+            TenantWorkload::new(vec![KernelDesc::other(1, "k", 1.0, 1.0, 1)], 1),
+            TenantWorkload::new(vec![], 1),
+        ];
+        for w in &cases {
+            assert_eq!(w.class_ref().to_class(), w.class_key());
+        }
+    }
+}

@@ -13,10 +13,77 @@
 //!   concurrent kernels, demand-shared bandwidth, no MPS proxy overhead.
 //! * [`Policy::SpaceTime`] — the paper's contribution: per-round inter-model
 //!   batching of same-shape GEMMs into super-kernels that fill the device.
+//!
+//! # Engines
+//!
+//! [`run`] dispatches to one of two implementations that share this module's
+//! report format: the default **vectorized** engine below, and the original
+//! per-event reference engine (`engine_legacy`, selected with
+//! [`Engine::Legacy`] / `--engine legacy`). The reference engine is kept as
+//! the bit-for-bit oracle — the equivalence property test and
+//! `benches/fig13_sim_scale.rs` replay both on identical workloads and
+//! require bitwise-identical reports.
+//!
+//! # The vectorized hot path
+//!
+//! The reference engine pays three per-event costs that dominate cluster-
+//! scale runs: it re-derives each kernel's fusion-group key every round
+//! (cloning the name `String` for non-GEMM kernels), it chases
+//! `Vec<KernelDesc>` and re-runs the roofline model for costs that never
+//! change, and it *builds* a [`TraceEvent`] (label clone included) for every
+//! completion even when tracing is off. The vectorized engine removes all
+//! three:
+//!
+//! * **Struct-of-arrays state.** [`KernelSoA`] flattens every kernel's
+//!   `flops`/`bytes`/`ctas`/`fused`, its interned
+//!   [`ClassId`](crate::gpusim::classes::ClassId), and its precomputed
+//!   exclusive-context duration into parallel arrays indexed by
+//!   `offsets[tenant] + kidx`; [`CursorSoA`] does the same for per-tenant
+//!   progress. The round loops touch only these dense arrays.
+//! * **Interned classes.** [`ClassTable`](crate::gpusim::classes::ClassTable)
+//!   assigns every distinct fusion-group class a dense rank in the legacy
+//!   `BTreeMap` iteration order at setup, so per-round grouping is integer
+//!   bucketing with zero string traffic.
+//! * **Opt-in tracing.** Events are recorded through
+//!   [`Trace::record_with`], which takes a closure — with tracing disabled
+//!   the closure (and its label clone) never runs, so a no-trace simulation
+//!   performs no per-event allocation at all. [`SimReport::scratch_grows`]
+//!   counts post-warmup capacity growth of the reusable scratch buffers
+//!   (the `RoundArena` grows-counter idiom from `coordinator::driver`) and
+//!   must stay 0 in steady state.
+//!
+//! # The event wheel
+//!
+//! Each policy replaces the reference engine's ad-hoc scans with a
+//! pre-sorted structure:
+//!
+//! * **Time-mux** keeps a *ready ring* (`VecDeque` of pending tenants in
+//!   rotation order): the next quantum's tenant is popped from the front and
+//!   re-enqueued at the back while it has work, replacing the legacy
+//!   skip-scan over all tenants. Tenants only retire during their own
+//!   quantum, so the ring provably visits tenants in the legacy order.
+//! * **Space-time** plans each round through a *calendar of class buckets*:
+//!   an array indexed by interned class rank, plus a `touched` list sorted
+//!   ascending. Because ranks reproduce the legacy `BTreeMap` order, walking
+//!   touched ranks replays the reference plan exactly — without building a
+//!   map, keys, or member vectors per round.
+//! * **Space-mux** deliberately keeps the dense min-scan over resident
+//!   flights rather than a timer heap: processor sharing re-prices *every*
+//!   resident flight at each completion (SM allocations change with the
+//!   concurrency), so a heap's cached deadlines would be invalidated on
+//!   every event; with at most `max_concurrent_kernels` residents the O(k)
+//!   scan is both faster and allocation-free. The flight set itself is SoA
+//!   with mirrored `swap_remove` order.
 
+use std::collections::VecDeque;
+
+use crate::coordinator::controller::{
+    AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
+};
+use crate::gpusim::classes::{ClassId, ClassKey, ClassTable, WorkloadClassRef};
 use crate::gpusim::cost::{kernel_service_time, CostCtx};
 use crate::gpusim::device::DeviceSpec;
-use crate::gpusim::kernel::{KernelDesc, TenantId};
+use crate::gpusim::kernel::KernelDesc;
 use crate::gpusim::mps::MpsAnomaly;
 use crate::gpusim::trace::{Trace, TraceEvent};
 
@@ -51,7 +118,11 @@ impl TenantWorkload {
     }
 
     /// Fusion/placement class (head-kernel shape — paper §2: same
-    /// architecture tenants have aligned kernel streams).
+    /// architecture tenants have aligned kernel streams), as an owned value.
+    ///
+    /// Clones the head kernel's name for non-GEMM workloads; anything on a
+    /// hot or per-workload path should use [`TenantWorkload::class_ref`]
+    /// instead, which borrows.
     pub fn class_key(&self) -> WorkloadClass {
         match self.kernels.first() {
             Some(k) => match k.shape {
@@ -59,6 +130,18 @@ impl TenantWorkload {
                 None => WorkloadClass::Other(k.name.clone()),
             },
             None => WorkloadClass::Empty,
+        }
+    }
+
+    /// Borrowed, allocation-free view of [`TenantWorkload::class_key`]:
+    /// identical variant order (so `Ord` groups identically), no name clone.
+    pub fn class_ref(&self) -> WorkloadClassRef<'_> {
+        match self.kernels.first() {
+            Some(k) => match k.shape {
+                Some(s) => WorkloadClassRef::Gemm(s.m, s.n, s.k),
+                None => WorkloadClassRef::Other(&k.name),
+            },
+            None => WorkloadClassRef::Empty,
         }
     }
 }
@@ -104,11 +187,44 @@ impl Policy {
     }
 }
 
+/// Which engine implementation [`run`] executes. Both produce bitwise
+/// identical [`SimReport`]s; the legacy engine exists as the equivalence
+/// oracle and the fig13 speedup baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// The struct-of-arrays engine (default): interned classes, pre-sized
+    /// scratch, opt-in tracing.
+    #[default]
+    Vectorized,
+    /// The original per-event reference implementation
+    /// (`stgpu simulate --engine legacy`).
+    Legacy,
+}
+
+impl Engine {
+    /// Parse a CLI `--engine` value.
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "vectorized" | "soa" | "fast" => Some(Engine::Vectorized),
+            "legacy" | "reference" => Some(Engine::Legacy),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Engine::Vectorized => "vectorized",
+            Engine::Legacy => "legacy",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub spec: DeviceSpec,
     pub policy: Policy,
     pub capture_trace: bool,
+    pub engine: Engine,
 }
 
 impl SimConfig {
@@ -117,11 +233,17 @@ impl SimConfig {
             spec,
             policy,
             capture_trace: false,
+            engine: Engine::default(),
         }
     }
 
     pub fn with_trace(mut self) -> Self {
         self.capture_trace = true;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
         self
     }
 }
@@ -155,6 +277,12 @@ pub struct SimReport {
     /// policies. Completion events carry their round in
     /// [`TraceEvent::round`].
     pub rounds: u64,
+    /// Post-warmup capacity growths of the vectorized engine's reusable
+    /// scratch buffers (the `RoundArena` grows-counter idiom from
+    /// `coordinator::driver`): 0 in steady state — asserted by the
+    /// zero-alloc regression test and the fig13 bench. Always 0 on the
+    /// legacy engine, which allocates fresh buffers per event instead.
+    pub scratch_grows: u64,
     pub trace: Trace,
 }
 
@@ -207,6 +335,9 @@ impl SimReport {
 
 /// Run `workloads` under `cfg`.
 pub fn run(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    if cfg.engine == Engine::Legacy {
+        return crate::gpusim::engine_legacy::run_legacy(cfg, workloads);
+    }
     match &cfg.policy {
         Policy::Exclusive => run_exclusive(cfg, workloads),
         Policy::TimeMux => run_time_mux(cfg, workloads),
@@ -239,370 +370,10 @@ pub fn run(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Exclusive: each tenant on a private device.
-// ---------------------------------------------------------------------------
-
-fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
-    let spec = &cfg.spec;
-    let mut report = SimReport {
-        trace: Trace::new(cfg.capture_trace),
-        ..Default::default()
-    };
-    let ctx = CostCtx::exclusive(spec);
-    let mut makespan: f64 = 0.0;
-    for (tid, w) in workloads.iter().enumerate() {
-        let mut t = 0.0;
-        let mut tr = TenantReport::default();
-        if w.kernels.is_empty() {
-            report.tenants.push(tr);
-            continue;
-        }
-        for iter in 0..w.iterations {
-            let start = t;
-            for k in &w.kernels {
-                let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
-                report.trace.record(TraceEvent {
-                    t_start: t,
-                    t_end: t + dur,
-                    lane: tid,
-                    tenant: tid,
-                    label: k.name.clone(),
-                    sms: (k.ctas as f64).min(spec.sms as f64),
-                    fused: k.fused,
-                    round: iter as u64,
-                });
-                t += dur;
-                report.kernel_launches += 1;
-                tr.flops += k.flops;
-            }
-            tr.latencies.push(t - start);
-            tr.completed += 1;
-        }
-        makespan = makespan.max(t);
-        // Exclusive "rounds" are inference iterations (events are tagged
-        // with theirs); the run spans the longest tenant's count.
-        if !w.kernels.is_empty() {
-            report.rounds = report.rounds.max(w.iterations as u64);
-        }
-        report.tenants.push(tr);
-    }
-    report.makespan = makespan;
-    report
-}
-
-// ---------------------------------------------------------------------------
-// Time multiplexing: one resident context, round-robin quanta.
-// ---------------------------------------------------------------------------
-
-fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
-    let spec = &cfg.spec;
-    let n = workloads.len();
-    let mut report = SimReport {
-        tenants: vec![TenantReport::default(); n],
-        trace: Trace::new(cfg.capture_trace),
-        ..Default::default()
-    };
-    // Per-tenant cursor. `inf_start` is the *submission* time of the
-    // in-flight inference: in the saturated closed loop every tenant's
-    // first inference is submitted at t=0 and each completion immediately
-    // submits the next, so waiting for other tenants' quanta is part of the
-    // measured latency (this is what makes time-mux latency grow linearly
-    // with the tenant count — paper Fig 3).
-    struct Cursor {
-        iter: u32,
-        kidx: usize,
-        inf_start: f64,
-    }
-    let mut cursors: Vec<Cursor> = workloads
-        .iter()
-        .map(|_| Cursor {
-            iter: 0,
-            kidx: 0,
-            inf_start: 0.0,
-        })
-        .collect();
-    let ctx = CostCtx::exclusive(spec);
-    let mut clock = 0.0f64;
-    let pending = |c: &Cursor, w: &TenantWorkload| c.iter < w.iterations && !w.kernels.is_empty();
-    let mut current = 0usize;
-    // Number of tenants with work left.
-    let mut live: usize = workloads
-        .iter()
-        .zip(cursors.iter())
-        .filter(|(w, c)| pending(c, w))
-        .count();
-    let multi = live > 1;
-    let mut quantum: u64 = 0;
-    while live > 0 {
-        // Find next tenant with pending work.
-        let mut hops = 0;
-        while !pending(&cursors[current], &workloads[current]) {
-            current = (current + 1) % n;
-            hops += 1;
-            debug_assert!(hops <= n, "live>0 but no pending tenant");
-        }
-        // Context switch cost applies when more than one context exists.
-        if multi {
-            clock += spec.ctx_switch_s;
-        }
-        // Run this tenant's kernels until the quantum is spent (kernels are
-        // non-preemptible: always finish the one we started).
-        let mut quantum_left = spec.timeslice_quantum_s;
-        let w = &workloads[current];
-        while quantum_left > 0.0 && pending(&cursors[current], w) {
-            let c = &mut cursors[current];
-            let k = &w.kernels[c.kidx];
-            let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
-            report.trace.record(TraceEvent {
-                t_start: clock,
-                t_end: clock + dur,
-                lane: current,
-                tenant: current,
-                label: k.name.clone(),
-                sms: (k.ctas as f64).min(spec.sms as f64),
-                fused: k.fused,
-                round: quantum,
-            });
-            clock += dur;
-            quantum_left -= dur;
-            report.kernel_launches += 1;
-            report.tenants[current].flops += k.flops;
-            c.kidx += 1;
-            if c.kidx == w.kernels.len() {
-                c.kidx = 0;
-                c.iter += 1;
-                report.tenants[current].latencies.push(clock - c.inf_start);
-                report.tenants[current].completed += 1;
-                c.inf_start = clock; // next inference submitted immediately
-                if c.iter == w.iterations {
-                    live -= 1;
-                }
-            }
-        }
-        quantum += 1;
-        current = (current + 1) % n;
-    }
-    report.rounds = quantum;
-    report.makespan = clock;
-    report
-}
-
-// ---------------------------------------------------------------------------
-// Spatial multiplexing: event-driven processor sharing over SMs.
-// ---------------------------------------------------------------------------
-
-fn run_space_mux(
-    cfg: &SimConfig,
-    workloads: &[TenantWorkload],
-    anomaly: &MpsAnomaly,
-    static_bw: bool,
-    per_kernel_overhead: f64,
-) -> SimReport {
-    let spec = &cfg.spec;
-    let n = workloads.len();
-    let mut report = SimReport {
-        tenants: vec![TenantReport::default(); n],
-        trace: Trace::new(cfg.capture_trace),
-        ..Default::default()
-    };
-
-    /// In-flight kernel state: a dispatch phase of absolute duration followed
-    /// by an execution phase tracked as a remaining fraction (the service
-    /// time is re-evaluated whenever the resident set changes).
-    struct Flight {
-        tenant: TenantId,
-        dispatch_left: f64,
-        exec_frac_left: f64,
-        started_at: f64,
-    }
-    struct Cursor {
-        iter: u32,
-        kidx: usize,
-        /// Submission time of the in-flight inference (saturated closed
-        /// loop: t=0, then each completion submits the next).
-        inf_start: f64,
-        done: bool,
-    }
-
-    let mut cursors: Vec<Cursor> = workloads
-        .iter()
-        .map(|w| Cursor {
-            iter: 0,
-            kidx: 0,
-            inf_start: 0.0,
-            done: w.iterations == 0 || w.kernels.is_empty(),
-        })
-        .collect();
-
-    let max_resident = spec.max_concurrent_kernels as usize;
-    let mut resident: Vec<Flight> = Vec::with_capacity(max_resident);
-    // Tenants whose next kernel is ready but waiting for a hardware queue.
-    let mut waiting: std::collections::VecDeque<TenantId> = (0..n)
-        .filter(|&t| !cursors[t].done)
-        .collect();
-    let mut clock = 0.0f64;
-
-    // Admit from the waiting queue into the resident set.
-    fn admit(
-        resident: &mut Vec<Flight>,
-        waiting: &mut std::collections::VecDeque<TenantId>,
-        cursors: &mut [Cursor],
-        clock: f64,
-        max_resident: usize,
-        overhead: f64,
-    ) {
-        while resident.len() < max_resident {
-            let Some(t) = waiting.pop_front() else { break };
-            debug_assert!(!cursors[t].done);
-            resident.push(Flight {
-                tenant: t,
-                dispatch_left: overhead,
-                exec_frac_left: 1.0,
-                started_at: clock,
-            });
-        }
-    }
-
-    admit(
-        &mut resident,
-        &mut waiting,
-        &mut cursors,
-        clock,
-        max_resident,
-        per_kernel_overhead,
-    );
-
-    while !resident.is_empty() {
-        let conc = resident.len() as u32;
-        // SM allocation proportional to CTA demand, capped by each kernel's
-        // own CTA count; one redistribution round picks up the slack.
-        let total_ctas: f64 = resident
-            .iter()
-            .map(|f| workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64)
-            .sum();
-        let total_sms = spec.sms as f64;
-        let mut allocs: Vec<f64> = resident
-            .iter()
-            .map(|f| {
-                let ctas = workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64;
-                (total_sms * ctas / total_ctas.max(1.0)).min(ctas)
-            })
-            .collect();
-        let used: f64 = allocs.iter().sum();
-        let slack = (total_sms - used).max(0.0);
-        if slack > 0.0 {
-            // Give slack to kernels that can still use it (ctas > alloc).
-            let extra_demand: f64 = resident
-                .iter()
-                .zip(allocs.iter())
-                .map(|(f, &a)| {
-                    (workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64 - a).max(0.0)
-                })
-                .sum();
-            if extra_demand > 0.0 {
-                for (i, f) in resident.iter().enumerate() {
-                    let ctas = workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64;
-                    let want = (ctas - allocs[i]).max(0.0);
-                    allocs[i] += slack * want / extra_demand;
-                    allocs[i] = allocs[i].min(ctas);
-                }
-            }
-        }
-
-        // Time to next completion.
-        let mut dt = f64::INFINITY;
-        let mut times: Vec<f64> = Vec::with_capacity(resident.len());
-        for (i, f) in resident.iter().enumerate() {
-            let k = &workloads[f.tenant].kernels[cursors[f.tenant].kidx];
-            let t_exec = kernel_service_time(
-                spec,
-                k,
-                &CostCtx {
-                    sms: allocs[i].max(1e-9),
-                    concurrency: conc,
-                    static_bw_partition: static_bw,
-                },
-            ) * anomaly.multiplier(f.tenant);
-            times.push(t_exec);
-            let remaining = f.dispatch_left + f.exec_frac_left * t_exec;
-            dt = dt.min(remaining);
-        }
-        debug_assert!(dt.is_finite() && dt >= 0.0);
-
-        clock += dt;
-        // Advance all flights by dt; collect completions.
-        let mut completed_idx: Vec<usize> = Vec::new();
-        for (i, f) in resident.iter_mut().enumerate() {
-            let mut step = dt;
-            if f.dispatch_left > 0.0 {
-                let d = f.dispatch_left.min(step);
-                f.dispatch_left -= d;
-                step -= d;
-            }
-            if step > 0.0 && f.exec_frac_left > 0.0 {
-                f.exec_frac_left -= step / times[i];
-            }
-            if f.dispatch_left <= 1e-15 && f.exec_frac_left <= 1e-9 {
-                completed_idx.push(i);
-            }
-        }
-
-        // Process completions (highest index first so removals are stable).
-        for &i in completed_idx.iter().rev() {
-            let f = resident.swap_remove(i);
-            let t = f.tenant;
-            let c = &mut cursors[t];
-            let k = &workloads[t].kernels[c.kidx];
-            report.kernel_launches += 1;
-            report.tenants[t].flops += k.flops;
-            report.trace.record(TraceEvent {
-                t_start: f.started_at,
-                t_end: clock,
-                lane: t % max_resident.max(1),
-                tenant: t,
-                label: k.name.clone(),
-                sms: (k.ctas as f64).min(spec.sms as f64 / (conc as f64)),
-                fused: k.fused,
-                // Event-driven path: no round structure to tag.
-                round: 0,
-            });
-            c.kidx += 1;
-            if c.kidx == workloads[t].kernels.len() {
-                c.kidx = 0;
-                c.iter += 1;
-                report.tenants[t].latencies.push(clock - c.inf_start);
-                report.tenants[t].completed += 1;
-                c.inf_start = clock;
-                if c.iter == workloads[t].iterations {
-                    c.done = true;
-                }
-            }
-            if !c.done {
-                waiting.push_back(t);
-            }
-        }
-        admit(
-            &mut resident,
-            &mut waiting,
-            &mut cursors,
-            clock,
-            max_resident,
-            per_kernel_overhead,
-        );
-    }
-    report.makespan = clock;
-    report
-}
-
-// ---------------------------------------------------------------------------
-// Space-time: per-round inter-model super-kernel batching (the contribution),
-// optionally spread over concurrent spatial lanes — statically or under the
-// adaptive controller.
-// ---------------------------------------------------------------------------
-
-/// How the space-time round loop picks its lane count.
-enum LaneMode {
+/// How the space-time round loop picks its lane count. Shared with the
+/// legacy engine, which must replay the identical decision sequence.
+#[derive(Clone, Copy)]
+pub(crate) enum LaneMode {
     /// Fixed lane count for the whole run.
     Static(u32),
     /// The coordinator's
@@ -616,7 +387,683 @@ enum LaneMode {
 /// simulated workloads run tens of rounds, and the point of the policy is
 /// validating the control loop against ground truth, not modeling dwell
 /// economics (the serving default is 32).
-const ADAPTIVE_DWELL_ROUNDS: u32 = 2;
+pub(crate) const ADAPTIVE_DWELL_ROUNDS: u32 = 2;
+
+// ---------------------------------------------------------------------------
+// Shared vectorized state: flattened kernels, cursors, cost probe, watchdog.
+// ---------------------------------------------------------------------------
+
+/// Every kernel of every workload flattened into parallel arrays; tenant
+/// `t`'s kernels occupy `offsets[t]..offsets[t + 1]`. Built once per run
+/// (cold); the hot loops never touch a [`KernelDesc`] except to read a name
+/// when tracing is enabled.
+struct KernelSoA {
+    offsets: Vec<usize>,
+    flops: Vec<f64>,
+    bytes: Vec<f64>,
+    ctas: Vec<u32>,
+    fused: Vec<u32>,
+    class: Vec<ClassId>,
+    /// Precomputed `launch_overhead_s + kernel_service_time(k, exclusive)`:
+    /// the per-kernel duration on the exclusive and time-mux paths, and the
+    /// value is bit-identical to the legacy recomputation because
+    /// [`kernel_service_time`] is pure.
+    dur_excl: Vec<f64>,
+}
+
+impl KernelSoA {
+    fn build(spec: &DeviceSpec, workloads: &[TenantWorkload]) -> (Self, ClassTable) {
+        let (table, ids) = ClassTable::build(workloads);
+        let total: usize = workloads.iter().map(|w| w.kernels.len()).sum();
+        let mut soa = KernelSoA {
+            offsets: Vec::with_capacity(workloads.len() + 1),
+            flops: Vec::with_capacity(total),
+            bytes: Vec::with_capacity(total),
+            ctas: Vec::with_capacity(total),
+            fused: Vec::with_capacity(total),
+            class: Vec::with_capacity(total),
+            dur_excl: Vec::with_capacity(total),
+        };
+        let excl = CostCtx::exclusive(spec);
+        let mut off = 0usize;
+        for (t, w) in workloads.iter().enumerate() {
+            soa.offsets.push(off);
+            for (j, k) in w.kernels.iter().enumerate() {
+                soa.flops.push(k.flops);
+                soa.bytes.push(k.bytes);
+                soa.ctas.push(k.ctas);
+                soa.fused.push(k.fused);
+                soa.class.push(ids[t][j]);
+                soa.dur_excl
+                    .push(spec.launch_overhead_s + kernel_service_time(spec, k, &excl));
+            }
+            off += w.kernels.len();
+        }
+        soa.offsets.push(off);
+        (soa, table)
+    }
+}
+
+/// Per-tenant progress cursors in struct-of-arrays form.
+struct CursorSoA {
+    iter: Vec<u32>,
+    kidx: Vec<usize>,
+    /// Submission time of the in-flight inference (saturated closed loop:
+    /// t=0, then each completion submits the next).
+    inf_start: Vec<f64>,
+    done: Vec<bool>,
+}
+
+impl CursorSoA {
+    fn new(workloads: &[TenantWorkload]) -> Self {
+        Self {
+            iter: vec![0; workloads.len()],
+            kidx: vec![0; workloads.len()],
+            inf_start: vec![0.0; workloads.len()],
+            done: workloads
+                .iter()
+                .map(|w| w.iterations == 0 || w.kernels.is_empty())
+                .collect(),
+        }
+    }
+}
+
+/// Reusable cost-query kernel: [`kernel_service_time`] reads only the
+/// `flops`/`bytes`/`ctas` fields, so one heap-free descriptor (empty name,
+/// no shape) serves every query with bit-identical results to costing the
+/// real (or merged) kernel.
+struct CostProbe {
+    k: KernelDesc,
+}
+
+impl CostProbe {
+    fn new() -> Self {
+        Self {
+            k: KernelDesc {
+                name: String::new(),
+                tenant: 0,
+                flops: 0.0,
+                bytes: 0.0,
+                ctas: 1,
+                shape: None,
+                fused: 1,
+            },
+        }
+    }
+
+    fn time(&mut self, spec: &DeviceSpec, flops: f64, bytes: f64, ctas: u32, ctx: &CostCtx) -> f64 {
+        self.k.flops = flops;
+        self.k.bytes = bytes;
+        self.k.ctas = ctas;
+        kernel_service_time(spec, &self.k, ctx)
+    }
+}
+
+/// Capacity watchdog (the `RoundArena` grows-counter idiom): snapshot the
+/// scratch capacities after the first event/round (warmup sizes the
+/// buffers), then count every later capacity growth. A steady-state hot
+/// loop must report zero grows.
+fn watch_caps<const K: usize>(
+    warmed: &mut bool,
+    snap: &mut [usize; K],
+    grows: &mut u64,
+    now: [usize; K],
+) {
+    if !*warmed {
+        *snap = now;
+        *warmed = true;
+        return;
+    }
+    for i in 0..K {
+        if now[i] > snap[i] {
+            *grows += 1;
+            snap[i] = now[i];
+        }
+    }
+}
+
+/// Total kernel executions a workload set will perform: the exact event
+/// count for the per-kernel policies and an upper bound for space-time
+/// (which merges launches) — used to pre-size the trace buffer.
+fn est_events(workloads: &[TenantWorkload]) -> usize {
+    workloads
+        .iter()
+        .map(|w| w.iterations as usize * w.kernels.len())
+        .sum()
+}
+
+/// Tenant reports with latency buffers pre-sized to the known completion
+/// count, so steady-state completions never grow them.
+fn sized_tenant_reports(workloads: &[TenantWorkload]) -> Vec<TenantReport> {
+    workloads
+        .iter()
+        .map(|w| {
+            let mut tr = TenantReport::default();
+            if !w.kernels.is_empty() {
+                tr.latencies.reserve(w.iterations as usize);
+            }
+            tr
+        })
+        .collect()
+}
+
+/// Record a per-kernel completion event. The [`TraceEvent`] — and its label
+/// clone — is only built inside the closure, i.e. never when tracing is
+/// disabled. Kept out of the `// lint: hot-path` functions so the hot loops
+/// stay token-free.
+#[allow(clippy::too_many_arguments)]
+fn record_kernel(
+    trace: &mut Trace,
+    k: &KernelDesc,
+    t_start: f64,
+    t_end: f64,
+    lane: usize,
+    tenant: usize,
+    sms: f64,
+    round: u64,
+) {
+    trace.record_with(|| TraceEvent {
+        t_start,
+        t_end,
+        lane,
+        tenant,
+        label: k.name.clone(),
+        sms,
+        fused: k.fused,
+        round,
+    });
+}
+
+/// Record a space-time round launch. Label construction replays the legacy
+/// naming exactly: a multi-member GEMM chunk gets the super-kernel name,
+/// anything else the first member's head-kernel name — built only when
+/// tracing is enabled.
+#[allow(clippy::too_many_arguments)]
+fn record_merged(
+    trace: &mut Trace,
+    table: &ClassTable,
+    workloads: &[TenantWorkload],
+    cursors: &CursorSoA,
+    members: &[usize],
+    rank: usize,
+    fused: u32,
+    t_start: f64,
+    t_end: f64,
+    lane: usize,
+    sms: f64,
+    round: u64,
+) {
+    trace.record_with(|| {
+        let first = members[0];
+        let label = match table.key(ClassId(rank as u32)) {
+            ClassKey::Gemm(m, n, k) if members.len() > 1 => {
+                format!("sgemm_batched R={fused} {m}x{n}x{k}")
+            }
+            _ => workloads[first].kernels[cursors.kidx[first]].name.clone(),
+        };
+        TraceEvent {
+            t_start,
+            t_end,
+            lane,
+            tenant: if members.len() == 1 { members[0] } else { usize::MAX },
+            label,
+            sms,
+            fused,
+            round,
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Exclusive: each tenant on a private device.
+// ---------------------------------------------------------------------------
+
+fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    let spec = &cfg.spec;
+    let (soa, _table) = KernelSoA::build(spec, workloads);
+    let mut report = SimReport {
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    report.trace.reserve(est_events(workloads));
+    let mut makespan: f64 = 0.0;
+    for (tid, w) in workloads.iter().enumerate() {
+        let mut tr = TenantReport::default();
+        if w.kernels.is_empty() {
+            report.tenants.push(tr);
+            continue;
+        }
+        tr.latencies.reserve(w.iterations as usize);
+        let t_end = exclusive_tenant(spec, w, &soa, tid, &mut tr, &mut report);
+        makespan = makespan.max(t_end);
+        // Exclusive "rounds" are inference iterations (events are tagged
+        // with theirs); the run spans the longest tenant's count.
+        report.rounds = report.rounds.max(w.iterations as u64);
+        report.tenants.push(tr);
+    }
+    report.makespan = makespan;
+    report
+}
+
+// lint: hot-path
+fn exclusive_tenant(
+    spec: &DeviceSpec,
+    w: &TenantWorkload,
+    soa: &KernelSoA,
+    tid: usize,
+    tr: &mut TenantReport,
+    report: &mut SimReport,
+) -> f64 {
+    let base = soa.offsets[tid];
+    let mut t = 0.0f64;
+    for iter in 0..w.iterations {
+        let start = t;
+        for (j, k) in w.kernels.iter().enumerate() {
+            let dur = soa.dur_excl[base + j];
+            record_kernel(
+                &mut report.trace,
+                k,
+                t,
+                t + dur,
+                tid,
+                tid,
+                (k.ctas as f64).min(spec.sms as f64),
+                iter as u64,
+            );
+            t += dur;
+            report.kernel_launches += 1;
+            tr.flops += k.flops;
+        }
+        tr.latencies.push(t - start);
+        tr.completed += 1;
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Time multiplexing: one resident context, round-robin quanta over the
+// ready ring.
+// ---------------------------------------------------------------------------
+
+fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let (soa, _table) = KernelSoA::build(spec, workloads);
+    let mut cursors = CursorSoA::new(workloads);
+    let mut report = SimReport {
+        tenants: sized_tenant_reports(workloads),
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    report.trace.reserve(est_events(workloads));
+    // The ready ring: pending tenants in rotation order. Tenants retire
+    // only at the end of their own quantum, so pop-front / push-back visits
+    // exactly the legacy cyclic scan order.
+    let mut ring: VecDeque<usize> = VecDeque::with_capacity(n);
+    ring.extend((0..n).filter(|&t| !cursors.done[t]));
+    // Context-switch cost applies when more than one context exists
+    // (decided once up front, as in the reference engine).
+    let multi = ring.len() > 1;
+    time_mux_rounds(spec, workloads, &soa, &mut cursors, &mut ring, multi, &mut report);
+    report
+}
+
+// lint: hot-path
+fn time_mux_rounds(
+    spec: &DeviceSpec,
+    workloads: &[TenantWorkload],
+    soa: &KernelSoA,
+    cursors: &mut CursorSoA,
+    ring: &mut VecDeque<usize>,
+    multi: bool,
+    report: &mut SimReport,
+) {
+    let mut clock = 0.0f64;
+    let mut quantum: u64 = 0;
+    while let Some(t) = ring.pop_front() {
+        if multi {
+            clock += spec.ctx_switch_s;
+        }
+        // Run this tenant's kernels until the quantum is spent (kernels are
+        // non-preemptible: always finish the one we started).
+        let mut quantum_left = spec.timeslice_quantum_s;
+        let w = &workloads[t];
+        let base = soa.offsets[t];
+        while quantum_left > 0.0 && !cursors.done[t] {
+            let j = cursors.kidx[t];
+            let k = &w.kernels[j];
+            let dur = soa.dur_excl[base + j];
+            record_kernel(
+                &mut report.trace,
+                k,
+                clock,
+                clock + dur,
+                t,
+                t,
+                (k.ctas as f64).min(spec.sms as f64),
+                quantum,
+            );
+            clock += dur;
+            quantum_left -= dur;
+            report.kernel_launches += 1;
+            report.tenants[t].flops += k.flops;
+            cursors.kidx[t] += 1;
+            if cursors.kidx[t] == w.kernels.len() {
+                cursors.kidx[t] = 0;
+                cursors.iter[t] += 1;
+                report.tenants[t].latencies.push(clock - cursors.inf_start[t]);
+                report.tenants[t].completed += 1;
+                cursors.inf_start[t] = clock; // next inference submitted immediately
+                if cursors.iter[t] == w.iterations {
+                    cursors.done[t] = true;
+                }
+            }
+        }
+        quantum += 1;
+        if !cursors.done[t] {
+            ring.push_back(t);
+        }
+    }
+    report.rounds = quantum;
+    report.makespan = clock;
+}
+
+// ---------------------------------------------------------------------------
+// Spatial multiplexing: event-driven processor sharing over SMs.
+// ---------------------------------------------------------------------------
+
+/// In-flight kernels in struct-of-arrays form. Mirrors the legacy `Flight`
+/// vector — including `swap_remove` order — so completion processing is
+/// bit-identical.
+struct FlightSoA {
+    tenant: Vec<usize>,
+    /// Remaining dispatch-phase time (absolute seconds).
+    dispatch: Vec<f64>,
+    /// Remaining execution fraction (service time is re-evaluated whenever
+    /// the resident set changes).
+    frac: Vec<f64>,
+    started: Vec<f64>,
+}
+
+/// Reusable per-event scratch for the space-mux loop.
+struct MuxScratch {
+    allocs: Vec<f64>,
+    times: Vec<f64>,
+    completed: Vec<usize>,
+}
+
+/// Admit waiting tenants into the resident flight set (SoA mirror of the
+/// legacy `admit`).
+fn admit_flights(
+    flights: &mut FlightSoA,
+    waiting: &mut VecDeque<usize>,
+    done: &[bool],
+    clock: f64,
+    max_resident: usize,
+    overhead: f64,
+) {
+    while flights.tenant.len() < max_resident {
+        let Some(t) = waiting.pop_front() else { break };
+        debug_assert!(!done[t]);
+        flights.tenant.push(t);
+        flights.dispatch.push(overhead);
+        flights.frac.push(1.0);
+        flights.started.push(clock);
+    }
+}
+
+fn run_space_mux(
+    cfg: &SimConfig,
+    workloads: &[TenantWorkload],
+    anomaly: &MpsAnomaly,
+    static_bw: bool,
+    per_kernel_overhead: f64,
+) -> SimReport {
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let (soa, _table) = KernelSoA::build(spec, workloads);
+    let mut cursors = CursorSoA::new(workloads);
+    let mut report = SimReport {
+        tenants: sized_tenant_reports(workloads),
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    report.trace.reserve(est_events(workloads));
+    let max_resident = spec.max_concurrent_kernels as usize;
+    let mut flights = FlightSoA {
+        tenant: Vec::with_capacity(max_resident),
+        dispatch: Vec::with_capacity(max_resident),
+        frac: Vec::with_capacity(max_resident),
+        started: Vec::with_capacity(max_resident),
+    };
+    // Tenants whose next kernel is ready but waiting for a hardware queue.
+    let mut waiting: VecDeque<usize> = VecDeque::with_capacity(n);
+    waiting.extend((0..n).filter(|&t| !cursors.done[t]));
+    let mut scratch = MuxScratch {
+        allocs: Vec::with_capacity(max_resident),
+        times: Vec::with_capacity(max_resident),
+        completed: Vec::with_capacity(max_resident),
+    };
+    let mut probe = CostProbe::new();
+    space_mux_events(
+        spec,
+        workloads,
+        &soa,
+        &mut cursors,
+        anomaly,
+        static_bw,
+        per_kernel_overhead,
+        &mut flights,
+        &mut waiting,
+        &mut scratch,
+        &mut probe,
+        &mut report,
+    );
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+// lint: hot-path
+fn space_mux_events(
+    spec: &DeviceSpec,
+    workloads: &[TenantWorkload],
+    soa: &KernelSoA,
+    cursors: &mut CursorSoA,
+    anomaly: &MpsAnomaly,
+    static_bw: bool,
+    overhead: f64,
+    flights: &mut FlightSoA,
+    waiting: &mut VecDeque<usize>,
+    scratch: &mut MuxScratch,
+    probe: &mut CostProbe,
+    report: &mut SimReport,
+) {
+    let max_resident = spec.max_concurrent_kernels as usize;
+    let total_sms = spec.sms as f64;
+    let mut clock = 0.0f64;
+    let (mut warmed, mut snap, mut grows) = (false, [0usize; 5], 0u64);
+    admit_flights(flights, waiting, &cursors.done, clock, max_resident, overhead);
+    while !flights.tenant.is_empty() {
+        let conc = flights.tenant.len() as u32;
+        // SM allocation proportional to CTA demand, capped by each kernel's
+        // own CTA count; one redistribution round picks up the slack.
+        let mut total_ctas = 0.0f64;
+        for &t in &flights.tenant {
+            total_ctas += soa.ctas[soa.offsets[t] + cursors.kidx[t]] as f64;
+        }
+        scratch.allocs.clear();
+        for &t in &flights.tenant {
+            let ctas = soa.ctas[soa.offsets[t] + cursors.kidx[t]] as f64;
+            scratch.allocs.push((total_sms * ctas / total_ctas.max(1.0)).min(ctas));
+        }
+        let mut used = 0.0f64;
+        for &a in &scratch.allocs {
+            used += a;
+        }
+        let slack = (total_sms - used).max(0.0);
+        if slack > 0.0 {
+            // Give slack to kernels that can still use it (ctas > alloc).
+            let mut extra_demand = 0.0f64;
+            for (i, &t) in flights.tenant.iter().enumerate() {
+                let ctas = soa.ctas[soa.offsets[t] + cursors.kidx[t]] as f64;
+                extra_demand += (ctas - scratch.allocs[i]).max(0.0);
+            }
+            if extra_demand > 0.0 {
+                for (i, &t) in flights.tenant.iter().enumerate() {
+                    let ctas = soa.ctas[soa.offsets[t] + cursors.kidx[t]] as f64;
+                    let want = (ctas - scratch.allocs[i]).max(0.0);
+                    scratch.allocs[i] += slack * want / extra_demand;
+                    scratch.allocs[i] = scratch.allocs[i].min(ctas);
+                }
+            }
+        }
+
+        // Time to next completion: dense scan (see module docs for why a
+        // timer heap would lose here).
+        let mut dt = f64::INFINITY;
+        scratch.times.clear();
+        for (i, &t) in flights.tenant.iter().enumerate() {
+            let ki = soa.offsets[t] + cursors.kidx[t];
+            let t_exec = probe.time(
+                spec,
+                soa.flops[ki],
+                soa.bytes[ki],
+                soa.ctas[ki],
+                &CostCtx {
+                    sms: scratch.allocs[i].max(1e-9),
+                    concurrency: conc,
+                    static_bw_partition: static_bw,
+                },
+            ) * anomaly.multiplier(t);
+            scratch.times.push(t_exec);
+            let remaining = flights.dispatch[i] + flights.frac[i] * t_exec;
+            dt = dt.min(remaining);
+        }
+        debug_assert!(dt.is_finite() && dt >= 0.0);
+
+        clock += dt;
+        // Advance all flights by dt; collect completions.
+        scratch.completed.clear();
+        for i in 0..flights.tenant.len() {
+            let mut step = dt;
+            if flights.dispatch[i] > 0.0 {
+                let d = flights.dispatch[i].min(step);
+                flights.dispatch[i] -= d;
+                step -= d;
+            }
+            if step > 0.0 && flights.frac[i] > 0.0 {
+                flights.frac[i] -= step / scratch.times[i];
+            }
+            if flights.dispatch[i] <= 1e-15 && flights.frac[i] <= 1e-9 {
+                scratch.completed.push(i);
+            }
+        }
+
+        // Process completions (highest index first so removals are stable).
+        for &i in scratch.completed.iter().rev() {
+            let t = flights.tenant.swap_remove(i);
+            flights.dispatch.swap_remove(i);
+            flights.frac.swap_remove(i);
+            let started = flights.started.swap_remove(i);
+            let ki = soa.offsets[t] + cursors.kidx[t];
+            report.kernel_launches += 1;
+            report.tenants[t].flops += soa.flops[ki];
+            record_kernel(
+                &mut report.trace,
+                &workloads[t].kernels[cursors.kidx[t]],
+                started,
+                clock,
+                t % max_resident.max(1),
+                t,
+                (soa.ctas[ki] as f64).min(spec.sms as f64 / (conc as f64)),
+                // Event-driven path: no round structure to tag.
+                0,
+            );
+            cursors.kidx[t] += 1;
+            if cursors.kidx[t] == workloads[t].kernels.len() {
+                cursors.kidx[t] = 0;
+                cursors.iter[t] += 1;
+                report.tenants[t].latencies.push(clock - cursors.inf_start[t]);
+                report.tenants[t].completed += 1;
+                cursors.inf_start[t] = clock;
+                if cursors.iter[t] == workloads[t].iterations {
+                    cursors.done[t] = true;
+                }
+            }
+            if !cursors.done[t] {
+                waiting.push_back(t);
+            }
+        }
+        admit_flights(flights, waiting, &cursors.done, clock, max_resident, overhead);
+        watch_caps(
+            &mut warmed,
+            &mut snap,
+            &mut grows,
+            [
+                flights.tenant.capacity(),
+                scratch.allocs.capacity(),
+                scratch.times.capacity(),
+                scratch.completed.capacity(),
+                waiting.capacity(),
+            ],
+        );
+    }
+    report.scratch_grows = grows;
+    report.makespan = clock;
+}
+
+// ---------------------------------------------------------------------------
+// Space-time: per-round inter-model super-kernel batching (the contribution),
+// optionally spread over concurrent spatial lanes — statically or under the
+// adaptive controller.
+// ---------------------------------------------------------------------------
+
+/// Reusable per-round scratch for the space-time loop: the class-bucket
+/// calendar plus the planned launches in struct-of-arrays form
+/// (`l_*[i]` describe launch `i`; its members are
+/// `members[l_mstart[i] .. l_mstart[i] + l_mlen[i]]`).
+struct RoundScratch {
+    /// Per class rank: live tenants whose head kernel is in that class.
+    buckets: Vec<Vec<usize>>,
+    /// Ranks with members this round, sorted ascending before planning.
+    touched: Vec<usize>,
+    /// Flat member arena for all launches of the round.
+    members: Vec<usize>,
+    l_rank: Vec<usize>,
+    l_mstart: Vec<usize>,
+    l_mlen: Vec<usize>,
+    l_flops: Vec<f64>,
+    l_bytes: Vec<f64>,
+    l_ctas: Vec<u32>,
+    l_fused: Vec<u32>,
+    /// Exclusive-context duration of the merged launch: the lane-balancing
+    /// weight, and (adaptive mode) the controller's solo-duration signal.
+    l_solo: Vec<f64>,
+    l_lane: Vec<usize>,
+    lane_load: Vec<f64>,
+    lane_cursor: Vec<f64>,
+}
+
+impl RoundScratch {
+    fn new(n_tenants: usize, n_classes: usize, max_lanes: usize) -> Self {
+        Self {
+            buckets: (0..n_classes).map(|_| Vec::with_capacity(n_tenants)).collect(),
+            touched: Vec::with_capacity(n_classes),
+            members: Vec::with_capacity(n_tenants),
+            l_rank: Vec::with_capacity(n_tenants),
+            l_mstart: Vec::with_capacity(n_tenants),
+            l_mlen: Vec::with_capacity(n_tenants),
+            l_flops: Vec::with_capacity(n_tenants),
+            l_bytes: Vec::with_capacity(n_tenants),
+            l_ctas: Vec::with_capacity(n_tenants),
+            l_fused: Vec::with_capacity(n_tenants),
+            l_solo: Vec::with_capacity(n_tenants),
+            l_lane: Vec::with_capacity(n_tenants),
+            lane_load: Vec::with_capacity(max_lanes),
+            lane_cursor: Vec::with_capacity(max_lanes),
+        }
+    }
+}
 
 fn run_space_time(
     cfg: &SimConfig,
@@ -624,9 +1071,6 @@ fn run_space_time(
     max_batch: u32,
     mode: LaneMode,
 ) -> SimReport {
-    use crate::coordinator::controller::{
-        AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
-    };
     assert!(max_batch >= 1);
     let spec = &cfg.spec;
     let (static_lanes, mut controller) = match mode {
@@ -645,90 +1089,143 @@ fn run_space_time(
             )),
         ),
     };
+    let max_lanes_possible = match mode {
+        LaneMode::Static(l) => l.max(1) as usize,
+        LaneMode::Adaptive { max_lanes } => max_lanes.max(1) as usize,
+    };
     let mut tracker = SignalTracker::default();
     let n = workloads.len();
+    let (soa, table) = KernelSoA::build(spec, workloads);
+    let mut cursors = CursorSoA::new(workloads);
     let mut report = SimReport {
-        tenants: vec![TenantReport::default(); n],
+        tenants: sized_tenant_reports(workloads),
         trace: Trace::new(cfg.capture_trace),
         ..Default::default()
     };
-    struct Cursor {
-        iter: u32,
-        kidx: usize,
-        inf_start: f64,
-        done: bool,
-    }
-    let mut cursors: Vec<Cursor> = workloads
-        .iter()
-        .map(|w| Cursor {
-            iter: 0,
-            kidx: 0,
-            inf_start: 0.0,
-            done: w.iterations == 0 || w.kernels.is_empty(),
-        })
-        .collect();
+    report.trace.reserve(est_events(workloads));
+    let mut scratch = RoundScratch::new(n, table.len(), max_lanes_possible);
+    let mut probe = CostProbe::new();
+    space_time_rounds(
+        spec,
+        workloads,
+        &soa,
+        &table,
+        &mut cursors,
+        max_batch,
+        static_lanes,
+        &mut controller,
+        &mut tracker,
+        &mut scratch,
+        &mut probe,
+        &mut report,
+    );
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+// lint: hot-path
+fn space_time_rounds(
+    spec: &DeviceSpec,
+    workloads: &[TenantWorkload],
+    soa: &KernelSoA,
+    table: &ClassTable,
+    cursors: &mut CursorSoA,
+    max_batch: u32,
+    static_lanes: u32,
+    controller: &mut Option<AdaptiveController>,
+    tracker: &mut SignalTracker,
+    scratch: &mut RoundScratch,
+    probe: &mut CostProbe,
+    report: &mut SimReport,
+) {
+    let n = workloads.len();
+    let excl = CostCtx::exclusive(spec);
     let mut clock = 0.0f64;
     let mut round: u64 = 0;
+    let (mut warmed, mut snap, mut grows) = (false, [0usize; 5], 0u64);
 
     loop {
-        // Heads of all live tenants this round.
-        let live: Vec<TenantId> = (0..n).filter(|&t| !cursors[t].done).collect();
-        if live.is_empty() {
+        // Bucket the heads of all live tenants into the class calendar.
+        // Iterating tenants ascending keeps each bucket in ascending tenant
+        // order; sorting the touched ranks replays the legacy BTreeMap's
+        // key order (ClassTable ranks ARE that order).
+        for &r in &scratch.touched {
+            scratch.buckets[r].clear();
+        }
+        scratch.touched.clear();
+        let mut live = 0usize;
+        for t in 0..n {
+            if cursors.done[t] {
+                continue;
+            }
+            live += 1;
+            let rank = soa.class[soa.offsets[t] + cursors.kidx[t]].rank();
+            if scratch.buckets[rank].is_empty() {
+                scratch.touched.push(rank);
+            }
+            scratch.buckets[rank].push(t);
+        }
+        if live == 0 {
             break;
         }
-        // Group heads: GEMMs by shape class, others by kernel name (the
-        // same-architecture assumption of paper §2 makes names align).
-        use std::collections::BTreeMap;
-        #[derive(PartialEq, Eq, PartialOrd, Ord)]
-        enum GroupKey {
-            Gemm(u32, u32, u32),
-            Other(String),
-        }
-        let mut groups: BTreeMap<GroupKey, Vec<TenantId>> = BTreeMap::new();
-        for &t in &live {
-            let k = &workloads[t].kernels[cursors[t].kidx];
-            let key = match k.shape {
-                Some(s) => GroupKey::Gemm(s.m, s.n, s.k),
-                None => GroupKey::Other(k.name.clone()),
-            };
-            groups.entry(key).or_default().push(t);
-        }
+        scratch.touched.sort_unstable();
 
-        // Plan the round's launches: each group in chunks of max_batch.
-        let mut launches: Vec<(KernelDesc, Vec<TenantId>)> = Vec::new();
-        for (key, members) in groups {
-            for chunk in members.chunks(max_batch as usize) {
-                let kernels: Vec<KernelDesc> = chunk
-                    .iter()
-                    .map(|&t| workloads[t].kernels[cursors[t].kidx].clone())
-                    .collect();
-                let merged = match key {
-                    GroupKey::Gemm(..) if kernels.len() > 1 => {
-                        KernelDesc::superkernel(&kernels)
-                    }
-                    _ => {
-                        // Non-GEMM heads (or a singleton): pack grids by
-                        // concatenation — same cost structure, summed work.
-                        let mut k = kernels[0].clone();
-                        for extra in &kernels[1..] {
-                            k.flops += extra.flops;
-                            k.bytes += extra.bytes;
-                            k.ctas += extra.ctas;
-                            k.fused += extra.fused;
-                        }
-                        k
-                    }
-                };
-                launches.push((merged, chunk.to_vec()));
+        // Plan the round's launches: each class in chunks of max_batch.
+        // Merged work sums are seeded from the first member and accumulated
+        // in member order — bitwise identical to both legacy merge paths
+        // (KernelDesc::superkernel's `sum()` folds from 0.0, and
+        // `0.0 + x == x` for these positive magnitudes).
+        scratch.members.clear();
+        scratch.l_rank.clear();
+        scratch.l_mstart.clear();
+        scratch.l_mlen.clear();
+        scratch.l_flops.clear();
+        scratch.l_bytes.clear();
+        scratch.l_ctas.clear();
+        scratch.l_fused.clear();
+        scratch.l_solo.clear();
+        for &rank in &scratch.touched {
+            let bucket_len = scratch.buckets[rank].len();
+            let mut c0 = 0usize;
+            while c0 < bucket_len {
+                let clen = (bucket_len - c0).min(max_batch as usize);
+                let first = scratch.buckets[rank][c0];
+                let ki0 = soa.offsets[first] + cursors.kidx[first];
+                let mut flops = soa.flops[ki0];
+                let mut bytes = soa.bytes[ki0];
+                let mut ctas = soa.ctas[ki0];
+                let mut fused = soa.fused[ki0];
+                let mstart = scratch.members.len();
+                scratch.members.push(first);
+                for j in 1..clen {
+                    let t = scratch.buckets[rank][c0 + j];
+                    let ki = soa.offsets[t] + cursors.kidx[t];
+                    flops += soa.flops[ki];
+                    bytes += soa.bytes[ki];
+                    ctas += soa.ctas[ki];
+                    fused += soa.fused[ki];
+                    scratch.members.push(t);
+                }
+                let solo = spec.launch_overhead_s + probe.time(spec, flops, bytes, ctas, &excl);
+                scratch.l_rank.push(rank);
+                scratch.l_mstart.push(mstart);
+                scratch.l_mlen.push(clen);
+                scratch.l_flops.push(flops);
+                scratch.l_bytes.push(bytes);
+                scratch.l_ctas.push(ctas);
+                scratch.l_fused.push(fused);
+                scratch.l_solo.push(solo);
+                c0 += clen;
             }
         }
+        let n_launches = scratch.l_rank.len();
 
         // Adaptive mode: at each dwell boundary hand the controller the
         // tracker's signals — round width, exclusive-time launch duration
         // EWMA, and the measured overlapped/solo stretch (seeded from the
         // device spec before any overlapped round ran) — and take its
         // decision for this round. Static mode uses the configured count.
-        let lanes_now = match &mut controller {
+        let lanes_now = match controller.as_mut() {
             Some(ctl) => {
                 if ctl.tick() {
                     let max_lanes = ctl.params().max_lanes;
@@ -753,19 +1250,24 @@ fn run_space_time(
         };
         // Assign launches to spatial lanes: greedy makespan balancing by
         // exclusive-time weight, in plan order (mirrors the coordinator's
-        // lane assignment). With one lane (or one launch) this degenerates
-        // to the classic serial round.
-        let active = (lanes_now as usize).min(launches.len()).max(1);
-        let mut lane_of: Vec<usize> = Vec::with_capacity(launches.len());
-        let mut lane_load = vec![0.0f64; active];
-        let excl = CostCtx::exclusive(spec);
-        for (merged, _) in &launches {
-            let w = spec.launch_overhead_s + kernel_service_time(spec, merged, &excl);
-            let lane = (0..active)
-                .min_by(|&a, &b| lane_load[a].partial_cmp(&lane_load[b]).unwrap())
-                .unwrap();
-            lane_of.push(lane);
-            lane_load[lane] += w;
+        // lane assignment). The strict `<` scan picks the first minimum,
+        // like the legacy `Iterator::min_by`. With one lane (or one launch)
+        // this degenerates to the classic serial round.
+        let active = (lanes_now as usize).min(n_launches).max(1);
+        scratch.lane_load.clear();
+        scratch.lane_load.resize(active, 0.0);
+        scratch.l_lane.clear();
+        for i in 0..n_launches {
+            let mut best = 0usize;
+            let mut best_load = scratch.lane_load[0];
+            for (l, &load) in scratch.lane_load.iter().enumerate().skip(1) {
+                if load < best_load {
+                    best = l;
+                    best_load = load;
+                }
+            }
+            scratch.l_lane.push(best);
+            scratch.lane_load[best] += scratch.l_solo[i];
         }
         // Concurrently-resident lanes each execute on a static SM fraction
         // with the deterministic interference derate — planned spatial
@@ -776,73 +1278,94 @@ fn run_space_time(
             concurrency: active as u32,
             static_bw_partition: false,
         };
-        let mut lane_cursor = vec![0.0f64; active];
+        scratch.lane_cursor.clear();
+        scratch.lane_cursor.resize(active, 0.0);
         let mut problems_this_round = 0usize;
-        for (i, (merged, chunk)) in launches.iter().enumerate() {
-            let lane = lane_of[i];
-            let dur = spec.launch_overhead_s + kernel_service_time(spec, merged, &ctx);
+        for i in 0..n_launches {
+            let lane = scratch.l_lane[i];
+            let dur = spec.launch_overhead_s
+                + probe.time(spec, scratch.l_flops[i], scratch.l_bytes[i], scratch.l_ctas[i], &ctx);
             if controller.is_some() {
                 // Simulated measurement feedback: solo-equivalent launch
                 // duration, and (overlapped rounds only) the ground-truth
                 // stretch the controller's utility model calibrates from.
-                let solo = spec.launch_overhead_s + kernel_service_time(spec, merged, &excl);
+                let solo = scratch.l_solo[i];
                 tracker.observe_launch(solo);
                 if active > 1 {
                     tracker.observe_stretch(active, dur / solo.max(1e-12));
                 }
-                problems_this_round += chunk.len();
+                problems_this_round += scratch.l_mlen[i];
             }
-            let t_start = clock + lane_cursor[lane];
+            let t_start = clock + scratch.lane_cursor[lane];
             let t_end = t_start + dur;
-            lane_cursor[lane] += dur;
-            report.trace.record(TraceEvent {
+            scratch.lane_cursor[lane] += dur;
+            let mem = &scratch.members[scratch.l_mstart[i]..scratch.l_mstart[i] + scratch.l_mlen[i]];
+            // Round-tagged completion: every member of this round's plan
+            // carries the planning round it belongs to, matching the
+            // coordinator driver's pipelined attribution.
+            record_merged(
+                &mut report.trace,
+                table,
+                workloads,
+                cursors,
+                mem,
+                scratch.l_rank[i],
+                scratch.l_fused[i],
                 t_start,
                 t_end,
                 lane,
-                tenant: if chunk.len() == 1 { chunk[0] } else { usize::MAX },
-                label: merged.name.clone(),
-                sms: (merged.ctas as f64).min(ctx.sms),
-                fused: merged.fused,
-                // Round-tagged completion: every member of this round's
-                // plan carries the planning round it belongs to, matching
-                // the coordinator driver's pipelined attribution.
+                (scratch.l_ctas[i] as f64).min(ctx.sms),
                 round,
-            });
+            );
             report.kernel_launches += 1;
-            if merged.fused > 1 {
+            if scratch.l_fused[i] > 1 {
                 report.superkernel_launches += 1;
-                report.fused_problems += merged.fused as u64;
+                report.fused_problems += scratch.l_fused[i] as u64;
             }
-            for &t in chunk {
-                let k = &workloads[t].kernels[cursors[t].kidx];
-                report.tenants[t].flops += k.flops;
+            for &t in mem {
+                report.tenants[t].flops += soa.flops[soa.offsets[t] + cursors.kidx[t]];
             }
             // Members complete at their launch's end on its lane.
-            for &t in chunk {
-                let c = &mut cursors[t];
-                c.kidx += 1;
-                if c.kidx == workloads[t].kernels.len() {
-                    c.kidx = 0;
-                    c.iter += 1;
-                    report.tenants[t].latencies.push(t_end - c.inf_start);
+            for &t in mem {
+                cursors.kidx[t] += 1;
+                if cursors.kidx[t] == workloads[t].kernels.len() {
+                    cursors.kidx[t] = 0;
+                    cursors.iter[t] += 1;
+                    report.tenants[t].latencies.push(t_end - cursors.inf_start[t]);
                     report.tenants[t].completed += 1;
-                    c.inf_start = t_end;
-                    if c.iter == workloads[t].iterations {
-                        c.done = true;
+                    cursors.inf_start[t] = t_end;
+                    if cursors.iter[t] == workloads[t].iterations {
+                        cursors.done[t] = true;
                     }
                 }
             }
         }
         if controller.is_some() {
-            tracker.observe_round(launches.len(), problems_this_round, 0.0);
+            tracker.observe_round(n_launches, problems_this_round, 0.0);
         }
         // The round barrier: the next round plans once every lane drains.
-        clock += lane_cursor.iter().cloned().fold(0.0, f64::max);
+        clock += scratch.lane_cursor.iter().copied().fold(0.0, f64::max);
         round += 1;
+        let mut bucket_cap = 0usize;
+        for b in &scratch.buckets {
+            bucket_cap += b.capacity();
+        }
+        watch_caps(
+            &mut warmed,
+            &mut snap,
+            &mut grows,
+            [
+                scratch.members.capacity(),
+                scratch.l_rank.capacity(),
+                scratch.touched.capacity(),
+                scratch.lane_load.capacity(),
+                bucket_cap,
+            ],
+        );
     }
     report.rounds = round;
     report.makespan = clock;
-    report
+    report.scratch_grows = grows;
 }
 
 #[cfg(test)]
@@ -1188,5 +1711,183 @@ mod tests {
         for &l in &r.tenants[0].latencies {
             assert!(l >= per_kernel * 0.99, "latency {l} < service {per_kernel}");
         }
+    }
+
+    // -----------------------------------------------------------------------
+    // Vectorized == legacy oracle.
+    // -----------------------------------------------------------------------
+
+    fn all_policies() -> Vec<Policy> {
+        vec![
+            Policy::Exclusive,
+            Policy::TimeMux,
+            Policy::SpaceMuxMps { anomaly_seed: 7 },
+            Policy::SpaceMuxStreams,
+            Policy::SpaceTime { max_batch: 8 },
+            Policy::SpaceTimeLanes { max_batch: 8, lanes: 3 },
+            Policy::SpaceTimeAdaptive { max_batch: 8, max_lanes: 4 },
+        ]
+    }
+
+    /// Bitwise report equality: every float compared by bits, every trace
+    /// event by value (event-for-event). `scratch_grows` is intentionally
+    /// excluded — it is the one field the engines legitimately differ on.
+    fn assert_bitwise_equal(a: &SimReport, b: &SimReport, what: &str) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+        assert_eq!(a.kernel_launches, b.kernel_launches, "{what}: launches");
+        assert_eq!(
+            a.superkernel_launches, b.superkernel_launches,
+            "{what}: superkernels"
+        );
+        assert_eq!(a.fused_problems, b.fused_problems, "{what}: fused problems");
+        assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+        assert_eq!(a.tenants.len(), b.tenants.len(), "{what}: tenant count");
+        for (i, (x, y)) in a.tenants.iter().zip(&b.tenants).enumerate() {
+            assert_eq!(x.completed, y.completed, "{what}: tenant {i} completed");
+            assert_eq!(x.flops.to_bits(), y.flops.to_bits(), "{what}: tenant {i} flops");
+            assert_eq!(
+                x.latencies.len(),
+                y.latencies.len(),
+                "{what}: tenant {i} latency count"
+            );
+            for (j, (p, q)) in x.latencies.iter().zip(&y.latencies).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: tenant {i} latency {j}");
+            }
+        }
+        assert_eq!(a.trace.events, b.trace.events, "{what}: trace events");
+    }
+
+    fn fixtures() -> Vec<(&'static str, Vec<TenantWorkload>)> {
+        vec![
+            ("uniform conv", sgemm_workloads(6, 5, GemmShape::RESNET18_CONV2_2)),
+            ("two classes", two_class_workloads(4, 6)),
+            ("square", sgemm_workloads(10, 4, GemmShape::SQUARE_256)),
+            ("matvec", sgemm_workloads(5, 7, GemmShape::RNN_MATVEC)),
+            (
+                "ragged mixed",
+                vec![
+                    TenantWorkload::new(vec![KernelDesc::sgemm(0, GemmShape::SQUARE_256)], 0),
+                    TenantWorkload::new(vec![], 3),
+                    TenantWorkload::new(
+                        vec![
+                            KernelDesc::sgemm(2, GemmShape::SQUARE_256),
+                            KernelDesc::other(2, "relu", 1e7, 4e6, 8),
+                        ],
+                        2,
+                    ),
+                    TenantWorkload::new(vec![KernelDesc::other(3, "relu", 1e7, 4e6, 8)], 3),
+                    TenantWorkload::new(vec![KernelDesc::other(4, "layernorm", 2e7, 9e6, 12)], 4),
+                ],
+            ),
+        ]
+    }
+
+    #[test]
+    fn vectorized_matches_legacy_on_fixtures() {
+        // The acceptance fixture set: the existing fig3/fig10/adaptive sim
+        // shapes plus a ragged mixed-kernel workload, every policy, traces
+        // on — both engines must agree bit for bit, event for event.
+        for (name, w) in &fixtures() {
+            for policy in all_policies() {
+                let fast = run(&cfg(policy.clone()).with_trace(), w);
+                let oracle = run(
+                    &cfg(policy.clone()).with_trace().with_engine(Engine::Legacy),
+                    w,
+                );
+                assert_bitwise_equal(&fast, &oracle, &format!("{name} / {policy:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn vectorized_matches_legacy_property() {
+        use crate::util::prng::Rng;
+        let shapes = [
+            GemmShape::SQUARE_256,
+            GemmShape::RESNET18_CONV2_2,
+            GemmShape::RNN_MATVEC,
+            GemmShape::new(64, 64, 512),
+        ];
+        let names = ["relu", "layernorm", "softmax"];
+        crate::util::prop::run_prop("engine_equivalence", 0x00E1152, 48, |rng: &mut Rng| {
+            let n = rng.gen_range_inclusive(1, 9) as usize;
+            let w: Vec<TenantWorkload> = (0..n)
+                .map(|t| {
+                    let n_kernels = rng.gen_range(4) as usize;
+                    let kernels = (0..n_kernels)
+                        .map(|_| {
+                            if rng.gen_bool(0.7) {
+                                let s = shapes[rng.gen_range(shapes.len() as u64) as usize];
+                                KernelDesc::sgemm(t, s)
+                            } else {
+                                let name = names[rng.gen_range(names.len() as u64) as usize];
+                                KernelDesc::other(
+                                    t,
+                                    name,
+                                    1e6 + rng.gen_f64_range(0.0, 1e8),
+                                    1e5 + rng.gen_f64_range(0.0, 1e7),
+                                    1 + rng.gen_range(64) as u32,
+                                )
+                            }
+                        })
+                        .collect();
+                    TenantWorkload::new(kernels, rng.gen_range(5) as u32)
+                })
+                .collect();
+            let max_batch = 1 + rng.gen_range(8) as u32;
+            let lanes = 1 + rng.gen_range(4) as u32;
+            let policies = [
+                Policy::Exclusive,
+                Policy::TimeMux,
+                Policy::SpaceMuxMps { anomaly_seed: rng.next_u64() },
+                Policy::SpaceMuxStreams,
+                Policy::SpaceTime { max_batch },
+                Policy::SpaceTimeLanes { max_batch, lanes },
+                Policy::SpaceTimeAdaptive { max_batch, max_lanes: lanes },
+            ];
+            for policy in policies {
+                let fast = run(&cfg(policy.clone()).with_trace(), &w);
+                let oracle = run(
+                    &cfg(policy.clone()).with_trace().with_engine(Engine::Legacy),
+                    &w,
+                );
+                assert_bitwise_equal(&fast, &oracle, &format!("{policy:?}"));
+            }
+        });
+    }
+
+    #[test]
+    fn no_trace_run_allocates_nothing_per_event() {
+        // The zero-alloc regression (grows-counter idiom): the SoA engine's
+        // scratch buffers are sized at setup, so the capacity watchdog must
+        // see zero post-warmup growth, and a run without --trace must never
+        // materialize a TraceEvent (the label-cloning closure is never
+        // called, so the events vector never even allocates).
+        let mut w = two_class_workloads(4, 20);
+        w.push(TenantWorkload::new(
+            vec![KernelDesc::other(8, "fused_layernorm_gelu", 5e7, 2e7, 16)],
+            20,
+        ));
+        for policy in all_policies() {
+            let r = run(&cfg(policy.clone()), &w);
+            assert_eq!(r.scratch_grows, 0, "{policy:?}: steady-state scratch grew");
+            assert_eq!(
+                r.trace.events.capacity(),
+                0,
+                "{policy:?}: trace allocated while disabled"
+            );
+            assert!(r.total_completed() > 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn engine_parse_round_trips() {
+        assert_eq!(Engine::parse("vectorized"), Some(Engine::Vectorized));
+        assert_eq!(Engine::parse("soa"), Some(Engine::Vectorized));
+        assert_eq!(Engine::parse("legacy"), Some(Engine::Legacy));
+        assert_eq!(Engine::parse("reference"), Some(Engine::Legacy));
+        assert_eq!(Engine::parse("warp-drive"), None);
+        assert_eq!(Engine::default(), Engine::Vectorized);
+        assert_eq!(Engine::Legacy.label(), "legacy");
     }
 }

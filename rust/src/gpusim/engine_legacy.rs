@@ -1,0 +1,649 @@
+//! The pre-vectorization reference engine, kept verbatim as the
+//! bit-for-bit oracle for [`crate::gpusim::engine`].
+//!
+//! Every policy loop in this module is the original per-event
+//! implementation: per-round `BTreeMap` grouping with owned `String` keys,
+//! `Vec<KernelDesc>` chasing, unconditional [`TraceEvent`] construction
+//! (label clones even with tracing disabled), and fresh scratch `Vec`s per
+//! event. That is exactly the allocation profile the struct-of-arrays
+//! engine removes — and exactly why this copy must stay: the equivalence
+//! property test and `benches/fig13_sim_scale.rs` replay both engines on
+//! identical workloads and require *bitwise* identical reports, so any
+//! semantic drift in the fast path is caught against this one.
+//!
+//! Reachable at runtime via [`crate::gpusim::Engine::Legacy`]
+//! (`stgpu simulate --engine legacy`), not only under `#[cfg(test)]`: the
+//! fig13 bench measures the speedup ratio between the two engines in a
+//! release build.
+
+use crate::gpusim::cost::{kernel_service_time, CostCtx};
+use crate::gpusim::engine::{
+    LaneMode, Policy, SimConfig, SimReport, TenantReport, TenantWorkload, ADAPTIVE_DWELL_ROUNDS,
+};
+use crate::gpusim::kernel::{KernelDesc, TenantId};
+use crate::gpusim::mps::MpsAnomaly;
+use crate::gpusim::trace::{Trace, TraceEvent};
+
+/// Run `workloads` under `cfg` on the reference engine. Dispatch mirrors
+/// [`crate::gpusim::engine::run`] exactly.
+pub(crate) fn run_legacy(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    match &cfg.policy {
+        Policy::Exclusive => run_exclusive(cfg, workloads),
+        Policy::TimeMux => run_time_mux(cfg, workloads),
+        Policy::SpaceMuxMps { anomaly_seed } => {
+            let anomaly = MpsAnomaly::new(*anomaly_seed, workloads.len());
+            run_space_mux(cfg, workloads, &anomaly, true, cfg.spec.mps_launch_overhead_s)
+        }
+        Policy::SpaceMuxStreams => {
+            let anomaly = MpsAnomaly::none(workloads.len());
+            run_space_mux(
+                cfg,
+                workloads,
+                &anomaly,
+                false,
+                cfg.spec.dispatch_serialization_s,
+            )
+        }
+        Policy::SpaceTime { max_batch } => {
+            run_space_time(cfg, workloads, *max_batch, LaneMode::Static(1))
+        }
+        Policy::SpaceTimeLanes { max_batch, lanes } => {
+            run_space_time(cfg, workloads, *max_batch, LaneMode::Static((*lanes).max(1)))
+        }
+        Policy::SpaceTimeAdaptive { max_batch, max_lanes } => run_space_time(
+            cfg,
+            workloads,
+            *max_batch,
+            LaneMode::Adaptive { max_lanes: (*max_lanes).max(1) },
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exclusive: each tenant on a private device.
+// ---------------------------------------------------------------------------
+
+fn run_exclusive(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    let spec = &cfg.spec;
+    let mut report = SimReport {
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    let ctx = CostCtx::exclusive(spec);
+    let mut makespan: f64 = 0.0;
+    for (tid, w) in workloads.iter().enumerate() {
+        let mut t = 0.0;
+        let mut tr = TenantReport::default();
+        if w.kernels.is_empty() {
+            report.tenants.push(tr);
+            continue;
+        }
+        for iter in 0..w.iterations {
+            let start = t;
+            for k in &w.kernels {
+                let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
+                report.trace.record(TraceEvent {
+                    t_start: t,
+                    t_end: t + dur,
+                    lane: tid,
+                    tenant: tid,
+                    label: k.name.clone(),
+                    sms: (k.ctas as f64).min(spec.sms as f64),
+                    fused: k.fused,
+                    round: iter as u64,
+                });
+                t += dur;
+                report.kernel_launches += 1;
+                tr.flops += k.flops;
+            }
+            tr.latencies.push(t - start);
+            tr.completed += 1;
+        }
+        makespan = makespan.max(t);
+        // Exclusive "rounds" are inference iterations (events are tagged
+        // with theirs); the run spans the longest tenant's count.
+        if !w.kernels.is_empty() {
+            report.rounds = report.rounds.max(w.iterations as u64);
+        }
+        report.tenants.push(tr);
+    }
+    report.makespan = makespan;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Time multiplexing: one resident context, round-robin quanta.
+// ---------------------------------------------------------------------------
+
+fn run_time_mux(cfg: &SimConfig, workloads: &[TenantWorkload]) -> SimReport {
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let mut report = SimReport {
+        tenants: vec![TenantReport::default(); n],
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    // Per-tenant cursor. `inf_start` is the *submission* time of the
+    // in-flight inference: in the saturated closed loop every tenant's
+    // first inference is submitted at t=0 and each completion immediately
+    // submits the next, so waiting for other tenants' quanta is part of the
+    // measured latency (this is what makes time-mux latency grow linearly
+    // with the tenant count — paper Fig 3).
+    struct Cursor {
+        iter: u32,
+        kidx: usize,
+        inf_start: f64,
+    }
+    let mut cursors: Vec<Cursor> = workloads
+        .iter()
+        .map(|_| Cursor {
+            iter: 0,
+            kidx: 0,
+            inf_start: 0.0,
+        })
+        .collect();
+    let ctx = CostCtx::exclusive(spec);
+    let mut clock = 0.0f64;
+    let pending = |c: &Cursor, w: &TenantWorkload| c.iter < w.iterations && !w.kernels.is_empty();
+    let mut current = 0usize;
+    // Number of tenants with work left.
+    let mut live: usize = workloads
+        .iter()
+        .zip(cursors.iter())
+        .filter(|(w, c)| pending(c, w))
+        .count();
+    let multi = live > 1;
+    let mut quantum: u64 = 0;
+    while live > 0 {
+        // Find next tenant with pending work.
+        let mut hops = 0;
+        while !pending(&cursors[current], &workloads[current]) {
+            current = (current + 1) % n;
+            hops += 1;
+            debug_assert!(hops <= n, "live>0 but no pending tenant");
+        }
+        // Context switch cost applies when more than one context exists.
+        if multi {
+            clock += spec.ctx_switch_s;
+        }
+        // Run this tenant's kernels until the quantum is spent (kernels are
+        // non-preemptible: always finish the one we started).
+        let mut quantum_left = spec.timeslice_quantum_s;
+        let w = &workloads[current];
+        while quantum_left > 0.0 && pending(&cursors[current], w) {
+            let c = &mut cursors[current];
+            let k = &w.kernels[c.kidx];
+            let dur = spec.launch_overhead_s + kernel_service_time(spec, k, &ctx);
+            report.trace.record(TraceEvent {
+                t_start: clock,
+                t_end: clock + dur,
+                lane: current,
+                tenant: current,
+                label: k.name.clone(),
+                sms: (k.ctas as f64).min(spec.sms as f64),
+                fused: k.fused,
+                round: quantum,
+            });
+            clock += dur;
+            quantum_left -= dur;
+            report.kernel_launches += 1;
+            report.tenants[current].flops += k.flops;
+            c.kidx += 1;
+            if c.kidx == w.kernels.len() {
+                c.kidx = 0;
+                c.iter += 1;
+                report.tenants[current].latencies.push(clock - c.inf_start);
+                report.tenants[current].completed += 1;
+                c.inf_start = clock; // next inference submitted immediately
+                if c.iter == w.iterations {
+                    live -= 1;
+                }
+            }
+        }
+        quantum += 1;
+        current = (current + 1) % n;
+    }
+    report.rounds = quantum;
+    report.makespan = clock;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Spatial multiplexing: event-driven processor sharing over SMs.
+// ---------------------------------------------------------------------------
+
+fn run_space_mux(
+    cfg: &SimConfig,
+    workloads: &[TenantWorkload],
+    anomaly: &MpsAnomaly,
+    static_bw: bool,
+    per_kernel_overhead: f64,
+) -> SimReport {
+    let spec = &cfg.spec;
+    let n = workloads.len();
+    let mut report = SimReport {
+        tenants: vec![TenantReport::default(); n],
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+
+    /// In-flight kernel state: a dispatch phase of absolute duration followed
+    /// by an execution phase tracked as a remaining fraction (the service
+    /// time is re-evaluated whenever the resident set changes).
+    struct Flight {
+        tenant: TenantId,
+        dispatch_left: f64,
+        exec_frac_left: f64,
+        started_at: f64,
+    }
+    struct Cursor {
+        iter: u32,
+        kidx: usize,
+        /// Submission time of the in-flight inference (saturated closed
+        /// loop: t=0, then each completion submits the next).
+        inf_start: f64,
+        done: bool,
+    }
+
+    let mut cursors: Vec<Cursor> = workloads
+        .iter()
+        .map(|w| Cursor {
+            iter: 0,
+            kidx: 0,
+            inf_start: 0.0,
+            done: w.iterations == 0 || w.kernels.is_empty(),
+        })
+        .collect();
+
+    let max_resident = spec.max_concurrent_kernels as usize;
+    let mut resident: Vec<Flight> = Vec::with_capacity(max_resident);
+    // Tenants whose next kernel is ready but waiting for a hardware queue.
+    let mut waiting: std::collections::VecDeque<TenantId> = (0..n)
+        .filter(|&t| !cursors[t].done)
+        .collect();
+    let mut clock = 0.0f64;
+
+    // Admit from the waiting queue into the resident set.
+    fn admit(
+        resident: &mut Vec<Flight>,
+        waiting: &mut std::collections::VecDeque<TenantId>,
+        cursors: &mut [Cursor],
+        clock: f64,
+        max_resident: usize,
+        overhead: f64,
+    ) {
+        while resident.len() < max_resident {
+            let Some(t) = waiting.pop_front() else { break };
+            debug_assert!(!cursors[t].done);
+            resident.push(Flight {
+                tenant: t,
+                dispatch_left: overhead,
+                exec_frac_left: 1.0,
+                started_at: clock,
+            });
+        }
+    }
+
+    admit(
+        &mut resident,
+        &mut waiting,
+        &mut cursors,
+        clock,
+        max_resident,
+        per_kernel_overhead,
+    );
+
+    while !resident.is_empty() {
+        let conc = resident.len() as u32;
+        // SM allocation proportional to CTA demand, capped by each kernel's
+        // own CTA count; one redistribution round picks up the slack.
+        let total_ctas: f64 = resident
+            .iter()
+            .map(|f| workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64)
+            .sum();
+        let total_sms = spec.sms as f64;
+        let mut allocs: Vec<f64> = resident
+            .iter()
+            .map(|f| {
+                let ctas = workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64;
+                (total_sms * ctas / total_ctas.max(1.0)).min(ctas)
+            })
+            .collect();
+        let used: f64 = allocs.iter().sum();
+        let slack = (total_sms - used).max(0.0);
+        if slack > 0.0 {
+            // Give slack to kernels that can still use it (ctas > alloc).
+            let extra_demand: f64 = resident
+                .iter()
+                .zip(allocs.iter())
+                .map(|(f, &a)| {
+                    (workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64 - a).max(0.0)
+                })
+                .sum();
+            if extra_demand > 0.0 {
+                for (i, f) in resident.iter().enumerate() {
+                    let ctas = workloads[f.tenant].kernels[cursors[f.tenant].kidx].ctas as f64;
+                    let want = (ctas - allocs[i]).max(0.0);
+                    allocs[i] += slack * want / extra_demand;
+                    allocs[i] = allocs[i].min(ctas);
+                }
+            }
+        }
+
+        // Time to next completion.
+        let mut dt = f64::INFINITY;
+        let mut times: Vec<f64> = Vec::with_capacity(resident.len());
+        for (i, f) in resident.iter().enumerate() {
+            let k = &workloads[f.tenant].kernels[cursors[f.tenant].kidx];
+            let t_exec = kernel_service_time(
+                spec,
+                k,
+                &CostCtx {
+                    sms: allocs[i].max(1e-9),
+                    concurrency: conc,
+                    static_bw_partition: static_bw,
+                },
+            ) * anomaly.multiplier(f.tenant);
+            times.push(t_exec);
+            let remaining = f.dispatch_left + f.exec_frac_left * t_exec;
+            dt = dt.min(remaining);
+        }
+        debug_assert!(dt.is_finite() && dt >= 0.0);
+
+        clock += dt;
+        // Advance all flights by dt; collect completions.
+        let mut completed_idx: Vec<usize> = Vec::new();
+        for (i, f) in resident.iter_mut().enumerate() {
+            let mut step = dt;
+            if f.dispatch_left > 0.0 {
+                let d = f.dispatch_left.min(step);
+                f.dispatch_left -= d;
+                step -= d;
+            }
+            if step > 0.0 && f.exec_frac_left > 0.0 {
+                f.exec_frac_left -= step / times[i];
+            }
+            if f.dispatch_left <= 1e-15 && f.exec_frac_left <= 1e-9 {
+                completed_idx.push(i);
+            }
+        }
+
+        // Process completions (highest index first so removals are stable).
+        for &i in completed_idx.iter().rev() {
+            let f = resident.swap_remove(i);
+            let t = f.tenant;
+            let c = &mut cursors[t];
+            let k = &workloads[t].kernels[c.kidx];
+            report.kernel_launches += 1;
+            report.tenants[t].flops += k.flops;
+            report.trace.record(TraceEvent {
+                t_start: f.started_at,
+                t_end: clock,
+                lane: t % max_resident.max(1),
+                tenant: t,
+                label: k.name.clone(),
+                sms: (k.ctas as f64).min(spec.sms as f64 / (conc as f64)),
+                fused: k.fused,
+                // Event-driven path: no round structure to tag.
+                round: 0,
+            });
+            c.kidx += 1;
+            if c.kidx == workloads[t].kernels.len() {
+                c.kidx = 0;
+                c.iter += 1;
+                report.tenants[t].latencies.push(clock - c.inf_start);
+                report.tenants[t].completed += 1;
+                c.inf_start = clock;
+                if c.iter == workloads[t].iterations {
+                    c.done = true;
+                }
+            }
+            if !c.done {
+                waiting.push_back(t);
+            }
+        }
+        admit(
+            &mut resident,
+            &mut waiting,
+            &mut cursors,
+            clock,
+            max_resident,
+            per_kernel_overhead,
+        );
+    }
+    report.makespan = clock;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Space-time: per-round inter-model super-kernel batching (the contribution),
+// optionally spread over concurrent spatial lanes — statically or under the
+// adaptive controller.
+// ---------------------------------------------------------------------------
+
+fn run_space_time(
+    cfg: &SimConfig,
+    workloads: &[TenantWorkload],
+    max_batch: u32,
+    mode: LaneMode,
+) -> SimReport {
+    use crate::coordinator::controller::{
+        AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
+    };
+    assert!(max_batch >= 1);
+    let spec = &cfg.spec;
+    let (static_lanes, mut controller) = match mode {
+        LaneMode::Static(l) => (l.max(1), None),
+        LaneMode::Adaptive { max_lanes } => (
+            1,
+            Some(AdaptiveController::new(
+                ControllerParams {
+                    max_lanes: max_lanes as usize,
+                    max_depth: 1, // the simulator has no pipeline to deepen
+                    dwell_rounds: ADAPTIVE_DWELL_ROUNDS,
+                    improvement: 0.05,
+                    slo_target: 0.99,
+                },
+                Decision { lanes: 1, depth: 1 },
+            )),
+        ),
+    };
+    let mut tracker = SignalTracker::default();
+    let n = workloads.len();
+    let mut report = SimReport {
+        tenants: vec![TenantReport::default(); n],
+        trace: Trace::new(cfg.capture_trace),
+        ..Default::default()
+    };
+    struct Cursor {
+        iter: u32,
+        kidx: usize,
+        inf_start: f64,
+        done: bool,
+    }
+    let mut cursors: Vec<Cursor> = workloads
+        .iter()
+        .map(|w| Cursor {
+            iter: 0,
+            kidx: 0,
+            inf_start: 0.0,
+            done: w.iterations == 0 || w.kernels.is_empty(),
+        })
+        .collect();
+    let mut clock = 0.0f64;
+    let mut round: u64 = 0;
+
+    loop {
+        // Heads of all live tenants this round.
+        let live: Vec<TenantId> = (0..n).filter(|&t| !cursors[t].done).collect();
+        if live.is_empty() {
+            break;
+        }
+        // Group heads: GEMMs by shape class, others by kernel name (the
+        // same-architecture assumption of paper §2 makes names align).
+        use std::collections::BTreeMap;
+        #[derive(PartialEq, Eq, PartialOrd, Ord)]
+        enum GroupKey {
+            Gemm(u32, u32, u32),
+            Other(String),
+        }
+        let mut groups: BTreeMap<GroupKey, Vec<TenantId>> = BTreeMap::new();
+        for &t in &live {
+            let k = &workloads[t].kernels[cursors[t].kidx];
+            let key = match k.shape {
+                Some(s) => GroupKey::Gemm(s.m, s.n, s.k),
+                None => GroupKey::Other(k.name.clone()),
+            };
+            groups.entry(key).or_default().push(t);
+        }
+
+        // Plan the round's launches: each group in chunks of max_batch.
+        let mut launches: Vec<(KernelDesc, Vec<TenantId>)> = Vec::new();
+        for (key, members) in groups {
+            for chunk in members.chunks(max_batch as usize) {
+                let kernels: Vec<KernelDesc> = chunk
+                    .iter()
+                    .map(|&t| workloads[t].kernels[cursors[t].kidx].clone())
+                    .collect();
+                let merged = match key {
+                    GroupKey::Gemm(..) if kernels.len() > 1 => {
+                        KernelDesc::superkernel(&kernels)
+                    }
+                    _ => {
+                        // Non-GEMM heads (or a singleton): pack grids by
+                        // concatenation — same cost structure, summed work.
+                        let mut k = kernels[0].clone();
+                        for extra in &kernels[1..] {
+                            k.flops += extra.flops;
+                            k.bytes += extra.bytes;
+                            k.ctas += extra.ctas;
+                            k.fused += extra.fused;
+                        }
+                        k
+                    }
+                };
+                launches.push((merged, chunk.to_vec()));
+            }
+        }
+
+        // Adaptive mode: at each dwell boundary hand the controller the
+        // tracker's signals — round width, exclusive-time launch duration
+        // EWMA, and the measured overlapped/solo stretch (seeded from the
+        // device spec before any overlapped round ran) — and take its
+        // decision for this round. Static mode uses the configured count.
+        let lanes_now = match &mut controller {
+            Some(ctl) => {
+                if ctl.tick() {
+                    let max_lanes = ctl.params().max_lanes;
+                    let stretch =
+                        tracker.stretch_table(max_lanes, |n| spec.lane_stretch(n as u32));
+                    let signals = ControlSignals {
+                        backlog: 0, // closed loop: the heads ARE the demand
+                        arrival_rate: 0.0,
+                        launches_per_round: tracker.launches_per_round(),
+                        requests_per_round: tracker.requests_per_round(),
+                        mean_launch_s: tracker.mean_launch_s(),
+                        plan_s: 0.0,
+                        stretch,
+                        slo_attainment: None,
+                        min_slo_s: 0.0,
+                    };
+                    ctl.decide(&signals);
+                }
+                ctl.decision().lanes as u32
+            }
+            None => static_lanes,
+        };
+        // Assign launches to spatial lanes: greedy makespan balancing by
+        // exclusive-time weight, in plan order (mirrors the coordinator's
+        // lane assignment). With one lane (or one launch) this degenerates
+        // to the classic serial round.
+        let active = (lanes_now as usize).min(launches.len()).max(1);
+        let mut lane_of: Vec<usize> = Vec::with_capacity(launches.len());
+        let mut lane_load = vec![0.0f64; active];
+        let excl = CostCtx::exclusive(spec);
+        for (merged, _) in &launches {
+            let w = spec.launch_overhead_s + kernel_service_time(spec, merged, &excl);
+            let lane = (0..active)
+                .min_by(|&a, &b| lane_load[a].partial_cmp(&lane_load[b]).unwrap())
+                .unwrap();
+            lane_of.push(lane);
+            lane_load[lane] += w;
+        }
+        // Concurrently-resident lanes each execute on a static SM fraction
+        // with the deterministic interference derate — planned spatial
+        // sharing, not the MPS anomaly lottery (the explicit interference
+        // model replaces the anomaly table on this path).
+        let ctx = CostCtx {
+            sms: spec.sms as f64 / active as f64,
+            concurrency: active as u32,
+            static_bw_partition: false,
+        };
+        let mut lane_cursor = vec![0.0f64; active];
+        let mut problems_this_round = 0usize;
+        for (i, (merged, chunk)) in launches.iter().enumerate() {
+            let lane = lane_of[i];
+            let dur = spec.launch_overhead_s + kernel_service_time(spec, merged, &ctx);
+            if controller.is_some() {
+                // Simulated measurement feedback: solo-equivalent launch
+                // duration, and (overlapped rounds only) the ground-truth
+                // stretch the controller's utility model calibrates from.
+                let solo = spec.launch_overhead_s + kernel_service_time(spec, merged, &excl);
+                tracker.observe_launch(solo);
+                if active > 1 {
+                    tracker.observe_stretch(active, dur / solo.max(1e-12));
+                }
+                problems_this_round += chunk.len();
+            }
+            let t_start = clock + lane_cursor[lane];
+            let t_end = t_start + dur;
+            lane_cursor[lane] += dur;
+            report.trace.record(TraceEvent {
+                t_start,
+                t_end,
+                lane,
+                tenant: if chunk.len() == 1 { chunk[0] } else { usize::MAX },
+                label: merged.name.clone(),
+                sms: (merged.ctas as f64).min(ctx.sms),
+                fused: merged.fused,
+                // Round-tagged completion: every member of this round's
+                // plan carries the planning round it belongs to, matching
+                // the coordinator driver's pipelined attribution.
+                round,
+            });
+            report.kernel_launches += 1;
+            if merged.fused > 1 {
+                report.superkernel_launches += 1;
+                report.fused_problems += merged.fused as u64;
+            }
+            for &t in chunk {
+                let k = &workloads[t].kernels[cursors[t].kidx];
+                report.tenants[t].flops += k.flops;
+            }
+            // Members complete at their launch's end on its lane.
+            for &t in chunk {
+                let c = &mut cursors[t];
+                c.kidx += 1;
+                if c.kidx == workloads[t].kernels.len() {
+                    c.kidx = 0;
+                    c.iter += 1;
+                    report.tenants[t].latencies.push(t_end - c.inf_start);
+                    report.tenants[t].completed += 1;
+                    c.inf_start = t_end;
+                    if c.iter == workloads[t].iterations {
+                        c.done = true;
+                    }
+                }
+            }
+        }
+        if controller.is_some() {
+            tracker.observe_round(launches.len(), problems_this_round, 0.0);
+        }
+        // The round barrier: the next round plans once every lane drains.
+        clock += lane_cursor.iter().cloned().fold(0.0, f64::max);
+        round += 1;
+    }
+    report.rounds = round;
+    report.makespan = clock;
+    report
+}

@@ -11,18 +11,27 @@
 //! * [`trace`] — schedule trace capture and Gantt rendering (Figure 6).
 //! * [`pool`] — multi-device pools: shard tenants across N devices
 //!   (least-loaded, class-affine) and aggregate throughput.
+//! * [`classes`] — interned fusion-group classes for the vectorized engine.
+//!
+//! [`engine`] ships two implementations behind one [`run`] entry point: the
+//! default struct-of-arrays engine and the original per-event reference
+//! engine (module `engine_legacy`), selectable via [`Engine`] — kept as the
+//! bit-for-bit oracle for the equivalence tests and the fig13 bench.
 
+pub mod classes;
 pub mod cost;
 pub mod device;
 pub mod engine;
+pub(crate) mod engine_legacy;
 pub mod kernel;
 pub mod memory;
 pub mod mps;
 pub mod pool;
 pub mod trace;
 
+pub use classes::{ClassId, ClassTable, WorkloadClassRef};
 pub use device::DeviceSpec;
-pub use engine::{run, Policy, SimConfig, SimReport, TenantWorkload, WorkloadClass};
+pub use engine::{run, Engine, Policy, SimConfig, SimReport, TenantWorkload, WorkloadClass};
 pub use kernel::{GemmShape, KernelDesc, TenantId};
 pub use pool::{run_pool, PoolReport};
 pub use trace::{Trace, TraceEvent};

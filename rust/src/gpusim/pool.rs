@@ -83,19 +83,27 @@ impl PoolReport {
 /// sharding tenants least-loaded with class affinity.
 pub fn run_pool(cfg: &SimConfig, workloads: &[TenantWorkload], n_devices: usize) -> PoolReport {
     assert!(n_devices >= 1, "need at least one device");
+    // Borrowed classes: placement groups by the same keys as `class_key()`
+    // (WorkloadClassRef has the identical variant order) without cloning a
+    // name per tenant.
     let items: Vec<_> = workloads
         .iter()
-        .map(|w| (w.class_key(), w.total_flops()))
+        .map(|w| (w.class_ref(), w.total_flops()))
         .collect();
     let assignment = place(&items, n_devices).device_of;
     let per_device = (0..n_devices)
         .map(|d| {
-            let shard: Vec<TenantWorkload> = workloads
-                .iter()
-                .zip(&assignment)
-                .filter(|(_, &dev)| dev == d)
-                .map(|(w, _)| w.clone())
-                .collect();
+            // Pre-count the shard so collecting it never reallocates.
+            let members = assignment.iter().filter(|&&dev| dev == d).count();
+            let mut shard: Vec<TenantWorkload> = Vec::with_capacity(members);
+            shard.extend(
+                workloads
+                    .iter()
+                    .zip(&assignment)
+                    .filter(|(_, &dev)| dev == d)
+                    .map(|(w, _)| w.clone()),
+            );
+            debug_assert_eq!(shard.len(), members, "pre-counted shard must not grow");
             run(cfg, &shard)
         })
         .collect();
@@ -144,6 +152,28 @@ mod tests {
         for d in 0..4 {
             let members = r.assignment.iter().filter(|&&x| x == d).count();
             assert_eq!(members, 4, "device {d} should host 4 of 16 tenants");
+        }
+    }
+
+    #[test]
+    fn borrowed_class_placement_matches_owned() {
+        use crate::gpusim::kernel::KernelDesc;
+        // Mixed GEMM + named kernels: the borrowed WorkloadClassRef keys
+        // must shard tenants exactly like the owned WorkloadClass keys.
+        let mut w = sgemm_tenants(6, 2, GemmShape::SQUARE_256);
+        w.push(TenantWorkload::new(
+            vec![KernelDesc::other(6, "relu", 1e7, 1e6, 8)],
+            2,
+        ));
+        w.push(TenantWorkload::new(
+            vec![KernelDesc::other(7, "relu", 1e7, 1e6, 8)],
+            2,
+        ));
+        w.push(TenantWorkload::new(vec![], 1));
+        let owned: Vec<_> = w.iter().map(|x| (x.class_key(), x.total_flops())).collect();
+        let borrowed: Vec<_> = w.iter().map(|x| (x.class_ref(), x.total_flops())).collect();
+        for n in [1usize, 2, 3] {
+            assert_eq!(place(&owned, n).device_of, place(&borrowed, n).device_of);
         }
     }
 

@@ -49,6 +49,27 @@ impl Trace {
         }
     }
 
+    /// Record an event built lazily: the closure — and any label clone or
+    /// allocation inside it — runs only when capture is enabled. This is
+    /// the hot-path entry point: with tracing off, a simulation that only
+    /// calls `record_with` performs zero per-event allocations (the
+    /// `events` vector never even allocates).
+    pub fn record_with(&mut self, f: impl FnOnce() -> TraceEvent) {
+        if self.enabled {
+            let ev = f();
+            debug_assert!(ev.t_end >= ev.t_start, "trace event must not be reversed");
+            self.events.push(ev);
+        }
+    }
+
+    /// Pre-size the event buffer for `n` additional events. No-op (and no
+    /// allocation) when capture is disabled.
+    pub fn reserve(&mut self, n: usize) {
+        if self.enabled {
+            self.events.reserve(n);
+        }
+    }
+
     pub fn makespan(&self) -> f64 {
         self.events.iter().map(|e| e.t_end).fold(0.0, f64::max)
     }
@@ -163,6 +184,32 @@ mod tests {
         let mut t = Trace::new(false);
         t.record(ev(0.0, 1.0, 0, 0, 1));
         assert_eq!(t.launches(), 0);
+    }
+
+    #[test]
+    fn record_with_skips_the_closure_when_disabled() {
+        let mut t = Trace::new(false);
+        let mut built = 0u32;
+        t.record_with(|| {
+            built += 1;
+            ev(0.0, 1.0, 0, 0, 1)
+        });
+        t.reserve(1024);
+        assert_eq!(built, 0, "closure must not run while disabled");
+        assert_eq!(t.launches(), 0);
+        assert_eq!(t.events.capacity(), 0, "disabled trace must not allocate");
+
+        let mut on = Trace::new(true);
+        on.reserve(2);
+        let cap = on.events.capacity();
+        assert!(cap >= 2);
+        on.record_with(|| {
+            built += 1;
+            ev(0.0, 1.0, 0, 0, 1)
+        });
+        assert_eq!(built, 1);
+        assert_eq!(on.launches(), 1);
+        assert_eq!(on.events.capacity(), cap, "reserve must pre-size the push");
     }
 
     #[test]

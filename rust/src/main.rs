@@ -7,9 +7,16 @@
 //!   (paper §2: saturated queues), print per-tenant and per-device
 //!   metrics. Overload sheds with a 429-style `Overloaded` rejection.
 //! * `simulate --policy <p> --tenants N [--shape MxNxK] [--iters N]
-//!   [--devices N]`
+//!   [--devices N] [--engine vectorized|legacy]`
 //!   Run the V100 discrete-event simulator under a multiplexing policy;
-//!   `--devices > 1` shards tenants across a device pool.
+//!   `--devices > 1` shards tenants across a device pool; `--engine
+//!   legacy` selects the per-event reference engine (the equivalence
+//!   oracle) instead of the default struct-of-arrays engine.
+//! * `tune     [--workload fig12] [--budget N] [--out-toml F]
+//!   [--out-leaderboard F] [--check-baseline F]`
+//!   Offline autotuner: search (lanes, pipeline depth, EDF slack,
+//!   controller knobs) against gpusim ground truth, emit the winner as a
+//!   validated `[server]`/`[controller]` TOML fragment + JSON leaderboard.
 //! * `artifacts [--dir artifacts]`
 //!   List the AOT artifact manifest the runtime would load.
 //! * `trace    [--tenants N] [--policy <p>]`
@@ -26,8 +33,8 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use stgpu::config::{SchedulerKind, ServerConfig};
-use stgpu::coordinator::Coordinator;
-use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
+use stgpu::coordinator::{tuner, Coordinator};
+use stgpu::gpusim::{self, DeviceSpec, Engine, GemmShape, Policy, SimConfig};
 use stgpu::runtime::Manifest;
 use stgpu::server::{ServeOpts, Server, StatusEndpoint};
 use stgpu::util::bench::{fmt_flops, fmt_secs, Table};
@@ -40,10 +47,11 @@ fn main() {
     let code = match cmd.as_deref() {
         Some("serve") => cmd_serve(&flags),
         Some("simulate") => cmd_simulate(&flags),
+        Some("tune") => cmd_tune(&flags),
         Some("artifacts") => cmd_artifacts(&flags),
         Some("trace") => cmd_trace(&flags),
         _ => {
-            eprintln!("usage: stgpu <serve|simulate|artifacts|trace> [--flag value]...");
+            eprintln!("usage: stgpu <serve|simulate|tune|artifacts|trace> [--flag value]...");
             eprintln!("{}", include_str!("main_help.txt"));
             2
         }
@@ -342,11 +350,19 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let cfg = SimConfig::new(DeviceSpec::v100(), policy);
+    let engine = match Engine::parse(flag(flags, "engine", "vectorized")) {
+        Some(e) => e,
+        None => {
+            eprintln!("simulate: unknown --engine (expected vectorized|legacy)");
+            return 2;
+        }
+    };
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy).with_engine(engine);
     let workloads = sgemm_tenants(tenants, iters, shape);
     println!(
-        "policy={} tenants={} shape={}x{}x{} iters={} devices={}",
+        "policy={} engine={} tenants={} shape={}x{}x{} iters={} devices={}",
         cfg.policy.label(),
+        cfg.engine.label(),
         tenants,
         shape.m,
         shape.n,
@@ -386,6 +402,94 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         report.superkernel_launches,
         report.fused_problems,
     );
+    0
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_tune(flags: &HashMap<String, String>) -> i32 {
+    let workload = flag(flags, "workload", "fig12");
+    let budget: usize = flag(flags, "budget", "64").parse().unwrap_or(64);
+    eprintln!("tune: workload={workload} budget={budget} (each evaluation replays the trace)");
+    let report = match tuner::tune(workload, budget) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("tune: {e}");
+            return 2;
+        }
+    };
+    let mut ranked: Vec<&stgpu::coordinator::TuneOutcome> = report.outcomes.iter().collect();
+    ranked.sort_by(|a, b| b.goodput_rps.partial_cmp(&a.goodput_rps).unwrap());
+    let mut table =
+        Table::new(&["rank", "config", "goodput_rps", "slo_att", "p50", "p99", "reconfigs"]);
+    for (i, o) in ranked.iter().enumerate().take(10) {
+        table.row(&[
+            (i + 1).to_string(),
+            o.label.clone(),
+            format!("{:.1}", o.goodput_rps),
+            format!("{:.4}", o.attainment),
+            fmt_secs(o.p50_s),
+            fmt_secs(o.p99_s),
+            o.reconfigs.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let best = report.best();
+    println!(
+        "tune: winner after {} evaluations: {} -> {:.1} req/s SLO-met goodput, attainment {:.4}",
+        report.outcomes.len(),
+        best.label,
+        best.goodput_rps,
+        best.attainment
+    );
+    match flags.get("out-toml") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, report.best_toml()) {
+                eprintln!("tune: cannot write {path}: {e}");
+                return 1;
+            }
+            println!("tune: wrote {path}");
+        }
+        None => print!("{}", report.best_toml()),
+    }
+    if let Some(path) = flags.get("out-leaderboard") {
+        let mut body = report.leaderboard_json().to_string();
+        body.push('\n');
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("tune: cannot write {path}: {e}");
+            return 1;
+        }
+        println!("tune: wrote {path}");
+    }
+    if let Some(path) = flags.get("check-baseline") {
+        let floor = std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|s| stgpu::util::json::Json::parse(&s))
+            .and_then(|j| {
+                j.get("throughput")
+                    .and_then(stgpu::util::json::Json::as_f64)
+                    .ok_or_else(|| "baseline has no numeric 'throughput'".to_string())
+            });
+        match floor {
+            Ok(floor) => {
+                if best.goodput_rps < floor {
+                    eprintln!(
+                        "tune: winner goodput {:.1} req/s BELOW baseline {floor:.1} ({path})",
+                        best.goodput_rps
+                    );
+                    return 1;
+                }
+                println!(
+                    "tune: winner goodput {:.1} req/s clears baseline {floor:.1} ({path})",
+                    best.goodput_rps
+                );
+            }
+            Err(e) => {
+                eprintln!("tune: cannot check baseline {path}: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -445,7 +549,14 @@ fn cmd_trace(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let cfg = SimConfig::new(DeviceSpec::v100(), policy).with_trace();
+    let engine = match Engine::parse(flag(flags, "engine", "vectorized")) {
+        Some(e) => e,
+        None => {
+            eprintln!("trace: unknown --engine (expected vectorized|legacy)");
+            return 2;
+        }
+    };
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy).with_trace().with_engine(engine);
     let workloads = sgemm_tenants(tenants, 3, shape);
     let report = gpusim::run(&cfg, &workloads);
     println!("{}", report.trace.render_gantt(100));

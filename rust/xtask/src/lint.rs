@@ -631,6 +631,41 @@ fn relaxed(&self) -> String {
         assert!(lint(src).is_empty());
     }
 
+    /// The vectorized engine's idiom (`gpusim/engine.rs`): the annotated
+    /// round loop stays allocation-free by routing trace-label
+    /// construction into an *unannotated* record helper whose
+    /// `record_with` closure only runs when capture is enabled. The
+    /// helper may allocate; the hot loop may not; and a rustc/clippy
+    /// attribute above the marker still arms the context.
+    #[test]
+    fn engine_record_helper_pattern_is_clean_but_inlined_label_is_not() {
+        let clean = r#"
+fn record_kernel(trace: &mut Trace, k: &KernelDesc, t0: f64, t1: f64) {
+    trace.record_with(|| TraceEvent { label: k.name.clone(), t0, t1 });
+}
+
+#[allow(clippy::too_many_arguments)]
+// lint: hot-path
+fn space_time_rounds(&mut self) {
+    self.clock += self.dur;
+    record_kernel(&mut self.trace, &self.k, 0.0, self.clock);
+}
+"#;
+        let v = lint(clean);
+        assert!(v.is_empty(), "helper-routed labels must pass: {v:?}");
+        let dirty = r#"
+#[allow(clippy::too_many_arguments)]
+// lint: hot-path
+fn space_time_rounds(&mut self) {
+    let label = self.k.name.clone();
+    self.consume(label);
+}
+"#;
+        let v = lint(dirty);
+        assert_eq!(rules(&v), vec![Rule::HotPathAlloc], "{v:?}");
+        assert_eq!(v[0].line, 5, "the inlined clone is the flagged site");
+    }
+
     #[test]
     fn pure_function_must_not_read_the_clock() {
         let src = r#"

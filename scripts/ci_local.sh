@@ -7,8 +7,10 @@
 # Steps (in CI-job order):
 #   build-test:  cargo build --release && cargo test -q
 #                && cargo build --benches --examples
-#   bench-gate:  cargo bench --no-run, the fig11/fig12 smokes, then
-#                scripts/bench_gate.py against rust/bench_baselines
+#   bench-gate:  cargo bench --no-run, the fig11/fig12/fig13 smokes, the
+#                `stgpu tune --budget 20` smoke (validated-TOML + baseline
+#                check), then scripts/bench_gate.py against
+#                rust/bench_baselines
 #   lint:        cargo fmt --check && cargo clippy --all-targets -D warnings
 #                && cargo run -p xtask -- lint (repo-specific rules)
 #   model-check: the schedule-exhaustive lane-protocol suite with
@@ -49,6 +51,16 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
     cargo bench --bench fig11_round_overhead
     step "bench-gate: fig12 adaptive-lanes smoke"
     cargo bench --bench fig12_adaptive_lanes
+    step "bench-gate: fig13 sim-scale smoke"
+    cargo bench --bench fig13_sim_scale
+    step "bench-gate: stgpu tune smoke (budget 20)"
+    cargo run --release --bin stgpu -- tune --workload fig12 --budget 20 \
+        --out-toml rust/results/tune_fig12.toml \
+        --out-leaderboard rust/results/BENCH_tune_fig12_leaderboard.json \
+        --check-baseline rust/bench_baselines/BENCH_fig12_adaptive_lanes.json
+    grep -q '^\[server\]' rust/results/tune_fig12.toml
+    grep -q '^\[controller\]' rust/results/tune_fig12.toml
+    python3 -c "import json; json.load(open('rust/results/BENCH_tune_fig12_leaderboard.json'))"
     step "bench-gate: scripts/bench_gate.py"
     python3 scripts/bench_gate.py
 else

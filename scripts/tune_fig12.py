@@ -1,447 +1,63 @@
 #!/usr/bin/env python3
-"""Tuning mirror for benches/fig12_adaptive_lanes.rs.
+"""Thin wrapper around `stgpu tune` for the fig12 workload.
 
-The fig12 bench asserts, on a simulated clock, that the adaptive
-space-time controller matches or beats the best *static* lane setting per
-load phase and strictly beats every static setting on the whole trace.
-Those assertions gate CI, and their margins depend on the interaction of
-the V100 roofline cost model, the batcher's bucketing, the greedy lane
-balancer, and the controller's decision rules. This script mirrors all
-four (same formulas as rust/src/gpusim/cost.rs + kernel.rs, same
-controller logic as rust/src/coordinator/controller.rs, same replay
-structure as the bench) so the bench's workload constants can be tuned
-numerically before committing them.
+This script used to carry a full Python mirror of the cost model, batcher,
+lane balancer, and adaptive controller so the fig12 bench constants could
+be tuned numerically. That mirror is retired: the Rust autotuner
+(rust/src/coordinator/tuner.rs, `stgpu tune`) replays the identical fig12
+workload against the gpusim ground-truth cost model directly, so there is
+exactly one implementation to keep in sync with the bench. This wrapper
+just builds and invokes it.
 
 Usage:
-    python3 scripts/tune_fig12.py [seed ...]
+    python3 scripts/tune_fig12.py [--budget N] [--out-toml PATH]
+        [--out-leaderboard PATH] [--check-baseline PATH] [--no-baseline]
 
-Prints per-phase goodput, overall throughput/attainment and the margin of
-every bench assertion for each seed (default: a handful of seeds). Keep
-the constants here in sync with the bench when retuning.
+Defaults tune the fig12 workload with the CI smoke budget, write the
+winning config + leaderboard under rust/results/, and fail (exit 1) if
+the recommendation's replayed SLO-met goodput falls below the committed
+fig12 adaptive baseline — the same contract as the CI "tune smoke" step.
+Pass `--no-baseline` to skip that check, or any `stgpu tune` flag via the
+options above. Run `stgpu tune` directly (see `stgpu help`) for other
+workloads or flags.
 """
 
-import math
-import random
+import argparse
+import os
+import subprocess
 import sys
-from collections import defaultdict, deque
 
-# --- DeviceSpec::v100 ------------------------------------------------------
-SMS = 80.0
-FLOPS_PER_SM = 175e9
-HBM_BW = 900e9
-LAUNCH_OVERHEAD_S = 5e-6
-OCC_HALF_SAT = 6.0
-INTERF_COEFF = 0.08
-BW_SAT_SMS = 20.0
-
-
-def occupancy(cpsm):
-    return cpsm / (cpsm + OCC_HALF_SAT) if cpsm > 0 else 0.0
-
-
-def interference(n):
-    return 1.0 / (1.0 + INTERF_COEFF * (n - 1))
-
-
-def lane_stretch_seed(n):
-    return 1.0 + INTERF_COEFF * (n - 1)
-
-
-# --- GemmShape::tiling / ctas / tiled_bytes --------------------------------
-def tiling(m, n, k):
-    if n <= 4:
-        return 64, max(n, 1), 1
-    tm = 128 if m >= 128 else min(64, 1 << (m - 1).bit_length())
-    tn = 64 if n >= 128 else min(32, 1 << (n - 1).bit_length())
-    base = -(-m // tm) * -(-n // tn)
-    split_k = min(max(32 // base, 1), 8) if (base < 32 and k >= 256) else 1
-    return tm, tn, split_k
-
-
-def gemm_ctas(m, n, k):
-    tm, tn, sk = tiling(m, n, k)
-    return -(-m // tm) * -(-n // tn) * sk
-
-
-def gemm_bytes(m, n, k):
-    tm, tn, sk = tiling(m, n, k)
-    n_tiles = -(-n // tn)
-    m_tiles = -(-m // tm)
-    c = m * n * (2.0 * sk if sk > 1 else 1.0)
-    return 4.0 * (m * k * n_tiles + k * n * m_tiles + c)
-
-
-def gemm_flops(m, n, k):
-    return 2.0 * m * n * k
-
-
-# --- kernel_service_time (static_bw_partition = false, like fig10) ---------
-def service_time(flops, bytes_, ctas, sms, conc):
-    used = max(min(sms, ctas), 1e-9)
-    cpsm = ctas / used
-    eff = occupancy(cpsm) * interference(conc)
-    compute = flops / (used * FLOPS_PER_SM * max(eff, 1e-12))
-    bw = min(1.0, used / BW_SAT_SMS)
-    memory = bytes_ / (HBM_BW * bw * interference(conc))
-    return max(compute, memory)
-
-
-def ground_truth(cls, r, active):
-    m, n, k = cls
-    r = max(r, 1)
-    active = max(active, 1)
-    return LAUNCH_OVERHEAD_S + service_time(
-        r * gemm_flops(m, n, k),
-        r * gemm_bytes(m, n, k),
-        r * gemm_ctas(m, n, k),
-        SMS / active,
-        active,
-    )
-
-
-# --- queue::ArrivalRate mirror ---------------------------------------------
-class ArrivalRate:
-    def __init__(self, tau=0.1):
-        self.rate = 0.0
-        self.last = None
-        self.tau = tau
-
-    def observe(self, now):
-        if self.last is None:
-            self.last = now
-            return
-        dt = max(now - self.last, 1e-9)
-        alpha = 1.0 - math.exp(-dt / self.tau)
-        self.rate = alpha * (1.0 / dt) + (1.0 - alpha) * self.rate
-        if now > self.last:
-            self.last = now
-
-    def rate_at(self, now):
-        if self.last is None:
-            return 0.0
-        return self.rate * math.exp(-max(now - self.last, 0.0) / self.tau)
-
-
-# --- controller mirror (coordinator::controller) ---------------------------
-class Tracker:
-    def __init__(self, alpha=0.2):
-        self.alpha = alpha
-        self.launches_pr = 0.0
-        self.requests_pr = 0.0
-        self.mean_launch = 0.0
-        self.rounds = 0
-        self.launch_obs = 0
-        self.stretch = {}
-
-    def _blend(self, seeded, ewma, sample):
-        return self.alpha * sample + (1 - self.alpha) * ewma if seeded else sample
-
-    def observe_round(self, launches, drained):
-        if launches == 0:
-            return
-        self.launches_pr = self._blend(self.rounds > 0, self.launches_pr, launches)
-        self.requests_pr = self._blend(self.rounds > 0, self.requests_pr, drained)
-        self.rounds += 1
-
-    def observe_launch(self, solo):
-        if solo <= 0:
-            return
-        self.mean_launch = self._blend(self.launch_obs > 0, self.mean_launch, solo)
-        self.launch_obs += 1
-
-    def observe_stretch(self, lanes, ratio):
-        if lanes <= 1 or ratio <= 0:
-            return
-        ew, obs = self.stretch.get(lanes, (0.0, 0))
-        self.stretch[lanes] = (self._blend(obs > 0, ew, max(ratio, 1.0)), obs + 1)
-
-    def stretch_table(self, max_lanes):
-        out = [1.0, 1.0]
-        for n in range(2, max_lanes + 1):
-            ew, obs = self.stretch.get(n, (0.0, 0))
-            out.append(max(ew, 1.0) if obs > 0 else lane_stretch_seed(n))
-        return out
-
-
-class Controller:
-    def __init__(self, max_lanes, max_depth, dwell, improvement, slo_target):
-        self.max_lanes = max_lanes
-        self.max_depth = max_depth
-        self.dwell = dwell
-        self.improvement = improvement
-        self.slo_target = slo_target
-        self.lanes, self.depth = 1, 1
-        self.since = 0
-        self.prev_backlog = 0
-        self.evals = 0
-        self.last_explore = 0
-        self.reconfigs = 0
-
-    def _score(self, s, lanes, depth):
-        launches = max(s["L"], 1.0)
-        eff = max(min(lanes, math.ceil(launches)), 1)
-        waves = max(launches / eff, 1.0)
-        mk = waves * s["dur"] * s["stretch"][min(eff, len(s["stretch"]) - 1)]
-        cadence = s["plan"] + mk if depth <= 1 else max(s["plan"], mk)
-        tput = max(s["R"], 1.0) / max(cadence, 1e-12)
-        lat = (depth - 1) * cadence + mk
-        feas = s["slo"] <= 0 or lat <= s["slo"]
-        return tput, lat, feas
-
-    def tick(self):
-        self.since += 1
-        if self.since < self.dwell:
-            return False
-        self.since = 0
-        return True
-
-    def decide(self, s):
-        if s["dur"] <= 0 or s["R"] <= 0:
-            return
-        self.evals += 1
-        best = None
-        cur = self._score(s, self.lanes, self.depth)
-        for lanes in range(1, self.max_lanes + 1):
-            for depth in range(1, self.max_depth + 1):
-                c = (lanes, depth) + self._score(s, lanes, depth)
-                if best is None:
-                    best = c
-                    continue
-                cf, bf = c[4], best[4]
-                if cf != bf:
-                    if cf:
-                        best = c
-                elif cf:
-                    if c[2] > best[2] * (1 + 1e-9):
-                        best = c
-                else:
-                    if c[3] < best[3] * (1 - 1e-9):
-                        best = c
-        backlog_p = s["backlog"] > 2 * max(s["R"], 1.0) and (
-            s["backlog"] >= self.prev_backlog or s["rate"] > cur[0])
-        slo_p = s["att"] is not None and s["att"] < self.slo_target
-        self.prev_backlog = s["backlog"]
-        nl, nd = self.lanes, self.depth
-        bl, bd, bt = best[0], best[1], best[2]
-        if slo_p and not backlog_p:
-            if self.lanes > 1:
-                nl -= 1
-            elif self.depth > 1:
-                nd -= 1
-        elif (bl, bd) != (self.lanes, self.depth) and (
-            bt > cur[0] * (1 + self.improvement)
-            or (not cur[2] and best[4])
-            or (backlog_p and bt > cur[0])
-        ):
-            nl, nd = bl, bd
-        elif backlog_p and self.lanes < self.max_lanes and (
-            self.last_explore == 0 or self.evals >= self.last_explore + 2
-        ):
-            nl = max(math.ceil(max(s["L"], 1.0)), self.lanes + 1)
-            self.last_explore = self.evals
-        nl = min(max(nl, 1), self.max_lanes)
-        nd = min(max(nd, 1), self.max_depth)
-        if (nl, nd) != (self.lanes, self.depth):
-            self.lanes, self.depth = nl, nd
-            self.reconfigs += 1
-
-
-# --- workload (keep in sync with the bench) --------------------------------
-LAT_CLASSES = [(8192, 8192, 128), (8192, 8064, 128), (8064, 8192, 128), (8064, 8064, 128)]
-BATCH_CLASSES = [(256, 128, 1152), (128, 256, 1152), (256, 128, 1024), (128, 256, 1024)]
-N_LAT = 8  # two tenants per lat class
-N_BATCH = 8  # two tenants per batch class
-LAT_SLO = 0.0115
-BATCH_SLO = 0.400
-MAX_BATCH = 16
-BUCKETS = [1, 2, 4, 8, 16, 32, 64]
-PH_A, PH_B, PH_C = 1.0, 1.5, 2.0  # phase durations, seconds
-HORIZON = PH_A + PH_B + PH_C
-WAVE_PERIOD = 0.025
-B_BATCH, C_BATCH = 68_000.0, 200.0
-DWELL = 4
-IMPROVEMENT = 0.10
-
-
-def tenant_class(t):
-    return LAT_CLASSES[t // 2] if t < N_LAT else BATCH_CLASSES[(t - N_LAT) // 2]
-
-
-def tenant_slo(t):
-    return LAT_SLO if t < N_LAT else BATCH_SLO
-
-
-def phase_of(t_arr):
-    if t_arr < PH_A:
-        return 0
-    if t_arr < PH_A + PH_B:
-        return 1
-    return 2
-
-
-def gen_trace(seed):
-    rng = random.Random(seed)
-    reqs = []
-    # Phase A: deterministic waves of the first two lat classes (tenants
-    # 0..4), one request each, aligned — every round is a 2-launch wave.
-    k = 1
-    while k * WAVE_PERIOD < PH_A:
-        for t in range(4):
-            reqs.append((k * WAVE_PERIOD, t))
-        k += 1
-    # Phase C: waves of all four lat classes (tenants 0..8).
-    k = 1
-    while PH_A + PH_B + k * WAVE_PERIOD < HORIZON:
-        for t in range(N_LAT):
-            reqs.append((PH_A + PH_B + k * WAVE_PERIOD, t))
-        k += 1
-    # Batch tenants: Poisson, heavy in B, light in C.
-    for t in range(N_LAT, N_LAT + N_BATCH):
-        for (t0, t1), rate in [((PH_A, PH_A + PH_B), B_BATCH / N_BATCH),
-                               ((PH_A + PH_B, HORIZON), C_BATCH / N_BATCH)]:
-            x = t0 + rng.expovariate(rate)
-            while x < t1:
-                reqs.append((x, t))
-                x += rng.expovariate(rate)
-    reqs.sort()
-    return reqs
-
-
-def bucket_for(n):
-    for b in BUCKETS:
-        if b >= n:
-            return b
-    return BUCKETS[-1]
-
-
-def run(trace, lanes_mode):
-    """lanes_mode: int (static) or 'adaptive'."""
-    ctl = Controller(4, 1, DWELL, IMPROVEMENT, 0.99) if lanes_mode == "adaptive" else None
-    tracker = Tracker()
-    est = ArrivalRate()
-    queues = [deque() for _ in range(N_LAT + N_BATCH)]
-    idx, t = 0, 0.0
-    hits = misses = 0
-    win_hits = win_misses = 0
-    phase_hits = [0, 0, 0]
-    done = 0
-    while True:
-        while idx < len(trace) and trace[idx][0] <= t:
-            arr, tn = trace[idx]
-            est.observe(arr)
-            queues[tn].append((arr, arr + tenant_slo(tn)))
-            idx += 1
-        if all(not q for q in queues):
-            if idx < len(trace):
-                t = trace[idx][0]
-                continue
-            break
-        # controller
-        if ctl is not None and ctl.tick():
-            backlog = sum(len(q) for q in queues)
-            att = win_hits / (win_hits + win_misses) if (win_hits + win_misses) else None
-            ctl.decide({
-                "L": tracker.launches_pr, "R": tracker.requests_pr,
-                "dur": tracker.mean_launch, "plan": 0.0,
-                "stretch": tracker.stretch_table(4),
-                "backlog": backlog,
-                "att": att,
-                "slo": LAT_SLO,
-                "rate": est.rate_at(t),
-            })
-            # The window's verdicts are consumed at every dwell boundary
-            # (verdicts imply completions imply usable signals, so a
-            # boundary with verdicts always evaluates).
-            win_hits = win_misses = 0
-        lanes_now = ctl.lanes if ctl is not None else lanes_mode
-        # fair drain up to MAX_BATCH
-        drained = []
-        while len(drained) < MAX_BATCH:
-            took = False
-            for tn in range(len(queues)):
-                if len(drained) >= MAX_BATCH:
-                    break
-                if queues[tn]:
-                    drained.append((tn,) + queues[tn].popleft())
-                    took = True
-            if not took:
-                break
-        # batch per class (sorted), chunks of MAX_BATCH, pad to bucket
-        by_class = defaultdict(list)
-        for tn, arr, dl in drained:
-            by_class[tenant_class(tn)].append((arr, dl))
-        launches = []
-        for cls in sorted(by_class):
-            entries = by_class[cls]
-            for i in range(0, len(entries), MAX_BATCH):
-                chunk = entries[i:i + MAX_BATCH]
-                launches.append((cls, chunk, bucket_for(len(chunk))))
-        active = max(min(lanes_now, len(launches)), 1)
-        # greedy lane assignment by flop-proxy weight, plan order
-        load = [0.0] * active
-        cursor = [0.0] * active
-        for cls, chunk, rb in launches:
-            lane = min(range(active), key=lambda i: load[i])
-            load[lane] += gemm_flops(*cls) * rb
-            dur = ground_truth(cls, rb, active)
-            solo = ground_truth(cls, rb, 1)
-            if ctl is not None:
-                tracker.observe_launch(solo)
-                if active > 1:
-                    tracker.observe_stretch(active, dur / solo)
-            cursor[lane] += dur
-            fin = t + cursor[lane]
-            for arr, dl in chunk:
-                done += 1
-                if fin <= dl:
-                    hits += 1
-                    win_hits += 1
-                    phase_hits[phase_of(arr)] += 1
-                else:
-                    misses += 1
-                    win_misses += 1
-        if ctl is not None:
-            tracker.observe_round(len(launches), len(drained))
-        t += max(cursor)
-    spans = [PH_A, PH_B, PH_C]
-    return {
-        "makespan": t, "done": done,
-        # Whole-trace SLO-met throughput: the y-axis of fig12 (throughput
-        # subject to SLO feasibility — the utility the controller targets).
-        "tput": hits / HORIZON,
-        "att": hits / max(hits + misses, 1),
-        "goodput": [phase_hits[i] / spans[i] for i in range(3)],
-        "reconfigs": ctl.reconfigs if ctl else 0,
-    }
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main():
-    seeds = [int(s) for s in sys.argv[1:]] or [1042, 7, 99, 2024]
-    for seed in seeds:
-        trace = gen_trace(seed)
-        res = {m: run(trace, m) for m in [1, 2, 4, "adaptive"]}
-        print(f"== seed {seed} ({len(trace)} requests) ==")
-        for m, r in res.items():
-            gp = " ".join(f"{g:9.0f}" for g in r["goodput"])
-            print(f"  {str(m):>8}: tput {r['tput']:9.0f}  att {r['att']:.4f}  "
-                  f"makespan {r['makespan']:.3f}  goodput[{gp}]  "
-                  f"reconfigs {r['reconfigs']}")
-        ad = res["adaptive"]
-        ok = True
-        for p in range(3):
-            best = max(res[m]["goodput"][p] for m in [1, 2, 4])
-            margin = ad["goodput"][p] / best if best > 0 else float("inf")
-            flag = "OK " if margin >= 0.95 else "FAIL"
-            ok &= margin >= 0.95
-            print(f"  phase {p}: adaptive/best-static goodput = {margin:.3f} {flag}")
-        for m in [1, 2, 4]:
-            tm = ad["tput"] / res[m]["tput"]
-            am = ad["att"] - res[m]["att"]
-            flag = "OK " if (tm > 1.0 and am >= 0.0) else "FAIL"
-            ok &= tm > 1.0 and am >= 0.0
-            print(f"  vs static {m}: tput x{tm:.3f}, att {am:+.4f} {flag}")
-        print("  =>", "ALL OK" if ok else "ASSERTIONS WOULD FAIL")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--budget", type=int, default=20,
+                    help="evaluation budget (grid + refinement), default 20")
+    ap.add_argument("--out-toml", default="rust/results/tune_fig12.toml",
+                    help="where to write the winning config fragment")
+    ap.add_argument("--out-leaderboard",
+                    default="rust/results/BENCH_tune_fig12_leaderboard.json",
+                    help="where to write the JSON leaderboard")
+    ap.add_argument("--check-baseline",
+                    default="rust/bench_baselines/BENCH_fig12_adaptive_lanes.json",
+                    help="baseline BENCH json the winner must clear")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the baseline goodput check")
+    args = ap.parse_args()
+
+    cmd = [
+        "cargo", "run", "--release", "--bin", "stgpu", "--", "tune",
+        "--workload", "fig12",
+        "--budget", str(args.budget),
+        "--out-toml", args.out_toml,
+        "--out-leaderboard", args.out_leaderboard,
+    ]
+    if not args.no_baseline:
+        cmd += ["--check-baseline", args.check_baseline]
+    print("+", " ".join(cmd), file=sys.stderr)
+    return subprocess.call(cmd, cwd=REPO)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())
