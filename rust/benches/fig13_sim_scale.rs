@@ -187,5 +187,6 @@ fn main() {
         .throughput(vec128.eps)
         .p50_s(vec128.wall_s)
         .p99_s(legacy128.wall_s)
+        .scale(128.0)
         .write();
 }

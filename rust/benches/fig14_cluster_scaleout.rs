@@ -1,0 +1,150 @@
+//! Figure 14 (extension) — SLO-met goodput scaling across the cluster
+//! tier, with a mid-run node kill/rejoin at the largest scale.
+//!
+//! The paper fills one V100; PR 7 scaled the *simulator* to cluster size;
+//! this bench scales the *control plane*: the sequencer → node-workers →
+//! in-order-committer cluster tier (`coordinator::cluster`) running 1, 4,
+//! and 16 in-process nodes, each node a full scheduler/controller stack
+//! over its own tenant set.
+//!
+//! Expected shape:
+//! * SLO-met goodput scales with node count (per-node load is constant,
+//!   so offered load — and, comfortably under SLO, goodput — grows
+//!   linearly; the acceptance floor is 16 nodes ≥ 3x 1 node).
+//! * A node killed mid-run at 16 nodes dents the SLO-met goodput of the
+//!   kill window boundedly (its tenants re-place onto survivors; the
+//!   stranded backlog is lost) rather than collapsing it, and the
+//!   post-rejoin window recovers to ~pre-kill goodput.
+//! * The 4-node parallel run's decision journal is bitwise identical to
+//!   the serial re-execution (the determinism contract `stgpu replay`
+//!   enforces; also asserted per-PR in rust/tests/cluster_replay.rs).
+
+use stgpu::coordinator::cluster::{ClusterOpts, FaultOpts, RoundStats};
+use stgpu::coordinator::run_cluster;
+use stgpu::util::bench::{banner, BenchJson, Table};
+
+/// SLO-met goodput (req/s) over a half-open round window.
+fn window_goodput(rounds: &[RoundStats], round_s: f64, from: u64, to: u64) -> f64 {
+    let hits: u64 = rounds
+        .iter()
+        .filter(|r| r.round >= from && r.round < to)
+        .map(|r| r.hits)
+        .sum();
+    let dur = (to - from) as f64 * round_s;
+    if dur > 0.0 {
+        hits as f64 / dur
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    banner(
+        "Figure 14: cluster scale-out (1 -> 4 -> 16 nodes) with kill/rejoin",
+        "SLO-met goodput scales with nodes; a killed node dents, not collapses, attainment",
+    );
+
+    // --- Scaling sweep: constant per-node load, growing node count. ---
+    let mut table = Table::new(&[
+        "nodes",
+        "offered",
+        "completed",
+        "goodput_rps",
+        "scaling",
+        "slo_att",
+        "migrations",
+    ]);
+    let mut goodput = Vec::new();
+    let mut att16 = 1.0;
+    for &nodes in &[1usize, 4, 16] {
+        let opts = ClusterOpts::demo(nodes);
+        let report = run_cluster(&opts, true).expect("cluster run");
+        assert!(report.conservation_ok(), "{nodes} nodes: requests not conserved");
+        let g = report.goodput_rps();
+        if goodput.is_empty() {
+            assert!(g > 0.0, "1-node goodput must be positive");
+        }
+        if nodes == 16 {
+            att16 = report.attainment();
+        }
+        table.row(&[
+            nodes.to_string(),
+            report.offered.to_string(),
+            report.completed.to_string(),
+            format!("{g:.1}"),
+            format!("{:.2}x", g / goodput.first().copied().unwrap_or(g)),
+            format!("{:.4}", report.attainment()),
+            report.migrations.to_string(),
+        ]);
+        goodput.push(g);
+    }
+    let (g1, g4, g16) = (goodput[0], goodput[1], goodput[2]);
+    assert!(
+        g4 >= 1.5 * g1,
+        "4-node goodput {g4:.1} < 1.5x the 1-node {g1:.1}"
+    );
+    // The ISSUE 8 acceptance floor (deliberately far under the ~linear
+    // scaling a constant per-node load produces).
+    assert!(
+        g16 >= 3.0 * g1,
+        "16-node goodput {g16:.1} < 3x the 1-node {g1:.1}"
+    );
+
+    // --- Determinism spot-check at 4 nodes: parallel == serial journal. ---
+    let opts4 = ClusterOpts::demo(4);
+    let par = run_cluster(&opts4, true).expect("parallel");
+    let ser = run_cluster(&opts4, false).expect("serial");
+    assert_eq!(
+        par.journal.digest(),
+        ser.journal.digest(),
+        "4-node parallel journal diverged from serial re-execution"
+    );
+    println!(
+        "determinism: 4-node parallel and serial journals share digest {}",
+        par.journal.digest_hex()
+    );
+
+    // --- Kill/rejoin at 16 nodes: the dip must be bounded. ---
+    let mut opts = ClusterOpts::demo(16);
+    let (kill, rejoin) = (opts.rounds / 3, 2 * opts.rounds / 3);
+    opts.fault = Some(FaultOpts { node: 3, kill_round: kill, rejoin_round: rejoin });
+    let faulted = run_cluster(&opts, true).expect("faulted run");
+    assert!(faulted.conservation_ok(), "faulted run: requests not conserved");
+    assert_eq!(faulted.node_downs, 1);
+    assert_eq!(faulted.node_ups, 1);
+    let pre = window_goodput(&faulted.rounds, opts.round_s, 0, kill);
+    let dip = window_goodput(&faulted.rounds, opts.round_s, kill, rejoin);
+    let post = window_goodput(&faulted.rounds, opts.round_s, rejoin, opts.rounds);
+    println!(
+        "kill/rejoin: goodput pre={pre:.1} dip={dip:.1} post={post:.1} req/s \
+         (node 3 down rounds {kill}..{rejoin})"
+    );
+    // Bounded, not collapsed: losing 1 of 16 nodes (plus its stranded
+    // backlog) must keep the kill window above half the pre-kill goodput.
+    assert!(
+        dip >= 0.5 * pre,
+        "kill window goodput {dip:.1} collapsed below 0.5x pre-kill {pre:.1}"
+    );
+    // And the rejoin must actually recover.
+    assert!(
+        post >= 0.9 * pre,
+        "post-rejoin goodput {post:.1} did not recover to 0.9x pre-kill {pre:.1}"
+    );
+
+    table.emit("fig14_cluster_scaleout");
+    // throughput = SLO-met goodput at the 16-node point (no fault).
+    BenchJson::new("fig14_cluster_scaleout")
+        .throughput(g16)
+        .slo_attainment(att16)
+        .scale(16.0)
+        .write();
+    println!(
+        "shape check: goodput scales {:.2}x at 4 nodes and {:.2}x at 16 \
+         (floor 3x); the kill window held {:.0}% of pre-kill goodput and \
+         the post-rejoin window {:.0}%.",
+        g4 / g1,
+        g16 / g1,
+        dip / pre * 100.0,
+        post / pre * 100.0
+    );
+}

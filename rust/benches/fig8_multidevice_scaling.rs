@@ -75,6 +75,7 @@ fn main() {
     // throughput = SpaceTime aggregate FLOP/s at the 4-device point.
     BenchJson::new("fig8_multidevice_scaling")
         .throughput(st_prev)
+        .scale(4.0)
         .write();
     println!(
         "shape check: SpaceTime aggregate throughput {} monotonically 1 -> 4 \

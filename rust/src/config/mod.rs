@@ -6,5 +6,5 @@
 pub mod schema;
 pub mod toml_lite;
 
-pub use schema::{ControllerConfig, SchedulerKind, ServerConfig, TenantConfig};
+pub use schema::{ClusterConfig, ControllerConfig, SchedulerKind, ServerConfig, TenantConfig};
 pub use toml_lite::TomlDoc;

@@ -184,6 +184,59 @@ impl ControllerConfig {
     }
 }
 
+/// The `[cluster]` section: scale-out across simulated nodes with a
+/// replayable decision journal (see `coordinator::cluster`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Simulated coordinator nodes. 1 (default) keeps the classic
+    /// single-process tier. Validated to [1, 64].
+    pub nodes: usize,
+    /// Hotspot threshold: a node is hot while its offered-load EWMA
+    /// exceeds `migrate_util` x its predicted service rate. Validated
+    /// finite, > 0.
+    pub migrate_util: f64,
+    /// Consecutive hot rounds before a tenant migration fires. Validated
+    /// to [1, 1024].
+    pub migrate_sustain: u32,
+    /// Where the decision journal is written (`stgpu replay` input).
+    /// `None` keeps the journal in memory only.
+    pub journal_path: Option<PathBuf>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { nodes: 1, migrate_util: 0.9, migrate_sustain: 3, journal_path: None }
+    }
+}
+
+impl ClusterConfig {
+    fn from_table(t: &TomlTable) -> Result<Self, String> {
+        let mut c = ClusterConfig::default();
+        if let Some(v) = t.get("nodes").and_then(|v| v.as_int()) {
+            if !(1..=64).contains(&v) {
+                return Err("cluster.nodes must be in [1, 64]".into());
+            }
+            c.nodes = v as usize;
+        }
+        if let Some(v) = t.get("migrate_util").and_then(|v| v.as_float()) {
+            if !v.is_finite() || v <= 0.0 {
+                return Err("cluster.migrate_util must be finite and > 0".into());
+            }
+            c.migrate_util = v;
+        }
+        if let Some(v) = t.get("migrate_sustain").and_then(|v| v.as_int()) {
+            if !(1..=1024).contains(&v) {
+                return Err("cluster.migrate_sustain must be in [1, 1024]".into());
+            }
+            c.migrate_sustain = v as u32;
+        }
+        if let Some(v) = t.get("journal_path").and_then(|v| v.as_str()) {
+            c.journal_path = Some(PathBuf::from(v));
+        }
+        Ok(c)
+    }
+}
+
 /// Server configuration (the `stgpu serve` entrypoint and the examples).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -242,6 +295,9 @@ pub struct ServerConfig {
     /// Adaptive space-time controller (`[controller]` section): online
     /// (lanes, depth) reconfiguration per device shard. Off by default.
     pub controller: ControllerConfig,
+    /// Cluster tier (`[cluster]` section): node count, hotspot-migration
+    /// thresholds, and the decision-journal path. Single node by default.
+    pub cluster: ClusterConfig,
     /// Directory holding the AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
     /// Worker threads executing batches.
@@ -269,6 +325,7 @@ impl Default for ServerConfig {
             eviction_threshold: 1.15,
             eviction_strikes: 3,
             controller: ControllerConfig::default(),
+            cluster: ClusterConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             workers: 1,
             seed: 0,
@@ -363,6 +420,9 @@ impl ServerConfig {
         if let Some(section) = doc.sections.get("controller") {
             cfg.controller = ControllerConfig::from_table(section)?;
         }
+        if let Some(section) = doc.sections.get("cluster") {
+            cfg.cluster = ClusterConfig::from_table(section)?;
+        }
         if let Some(tenants) = doc.lists.get("tenant") {
             cfg.tenants = tenants
                 .iter()
@@ -422,6 +482,28 @@ mod tests {
         assert!(cfg.eviction_threshold > 1.0);
         assert_eq!(cfg.devices, 1, "single device is the default");
         assert!(cfg.queue_cap >= cfg.queue_depth);
+    }
+
+    #[test]
+    fn cluster_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nnodes = 4\nmigrate_util = 0.8\nmigrate_sustain = 5\njournal_path = \"out/j.bin\"",
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.nodes, 4);
+        assert!((cfg.cluster.migrate_util - 0.8).abs() < 1e-12);
+        assert_eq!(cfg.cluster.migrate_sustain, 5);
+        assert_eq!(cfg.cluster.journal_path.as_deref(), Some(Path::new("out/j.bin")));
+        // Defaults: single node, no journal.
+        let d = ClusterConfig::default();
+        assert_eq!((d.nodes, d.migrate_sustain), (1, 3));
+        assert!(d.journal_path.is_none());
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[cluster]\nnodes = 0").is_err());
+        assert!(bad("[cluster]\nnodes = 65").is_err());
+        assert!(bad("[cluster]\nmigrate_util = 0.0").is_err());
+        assert!(bad("[cluster]\nmigrate_sustain = 0").is_err());
     }
 
     #[test]

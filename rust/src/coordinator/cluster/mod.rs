@@ -1,0 +1,998 @@
+//! The cluster tier: sequencer → node workers → committer.
+//!
+//! The single-process coordinator schedules one device pool; this module
+//! scales the same stack across N simulated nodes (in-process, no network
+//! dependency) while keeping every cluster-level decision deterministic
+//! and replayable:
+//!
+//! ```text
+//!                 ┌────────────┐   round tickets (dense, monotonic)
+//!                 │  Sequencer │──────────────┐
+//!                 └────────────┘              ▼
+//!   ┌─────────┐  NodeCmd   ┌──────────┐  NodeRoundResult  ┌───────────┐
+//!   │committer│──per node──▶ N node   │───any order──────▶│ in-order  │
+//!   │ (routes │            │ workers  │                   │ committer │
+//!   │arrivals,│            │(scheduler│                   └─────┬─────┘
+//!   │ owns    │            │+ctrl+EDF │        commits in ticket│order
+//!   │ placer) │            │ queues)  │                         ▼
+//!   └────▲────┘            └──────────┘                ┌────────────────┐
+//!        └───────── placement / migration / faults ────│ decision journal│
+//!                                                      └────────────────┘
+//! ```
+//!
+//! * The **committer** owns everything global: the pre-generated arrival
+//!   streams, the [`ClusterPlacer`], the hotspot detector, and the fault
+//!   plan. Each round it issues one [`NodeCmd`] per live node carrying
+//!   that node's admissions and queue migrations; node workers are pure
+//!   functions of their command streams (see [`node`]).
+//! * Results may arrive in any order but **commit strictly in ticket
+//!   order** through [`InOrderCommitter`], each committed round appending
+//!   one record to the decision [`Journal`]. Cluster events (migration,
+//!   node down/up) append in a fixed order at the round boundary.
+//! * **Hotspot migration**: per node, the committer tracks an offered-load
+//!   EWMA (arrivals at issue time) and a predicted service-rate EWMA
+//!   (completions per busy-second at commit time); when offered sustains
+//!   above `migrate_util x service` for `migrate_sustain` committed
+//!   rounds, the heaviest resident tenant migrates to the least-loaded
+//!   other live node: the placer re-homes it immediately (new arrivals
+//!   reroute), a drop command drains its queue from the source next
+//!   round, and the evicted backlog is routed to its new home at commit.
+//! * **Failure/rejoin** is fail-stop: a killed node's resident tenants
+//!   re-place onto live nodes (class affinity first), its queued requests
+//!   are simply lost until rejoin, when the node's first command carries
+//!   `reset` — the worker drains the stale state and reports it as
+//!   dropped, so the committer's conservation accounting stays exact —
+//!   and the displaced group re-homes through the readmit path.
+//!
+//! Because commands for round R are computed *before* any worker runs R
+//! (snapshot semantics) and commit order equals issue order, the parallel
+//! run ([`WorkerPool`] on OS threads) and the serial run (same workers
+//! inline, ticket order) produce **bitwise identical journals** —
+//! [`replay_journal`] re-executes a journal's header configuration
+//! through the serial path and compares digests, which is what
+//! `stgpu replay` and the CI replay smoke assert.
+
+pub mod node;
+pub mod ticket;
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::coordinator::journal::Journal;
+use crate::coordinator::placement::ClusterPlacer;
+use crate::coordinator::protocol::StdEnv;
+use crate::coordinator::ShapeClass;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+pub use node::{ArrivalMsg, NodeCmd, NodeRoundResult, NodeWorker, TenantTransfer};
+pub use ticket::{InOrderCommitter, Sequencer, TicketRunner, Ticketed, WorkerPool};
+
+/// The demo workload's shape class for tenant `t` (the fig10/fig12
+/// batch-class mix, cycled). Used by [`ClusterOpts`]-driven runs and the
+/// node-worker tests.
+pub fn demo_class(t: usize) -> ShapeClass {
+    const CLASSES: [ShapeClass; 4] = [
+        ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1152 },
+        ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 1152 },
+        ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1024 },
+        ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 1024 },
+    ];
+    CLASSES[t % CLASSES.len()]
+}
+
+/// A load spike: tenants initially resident on `node` arrive `factor`x
+/// faster during rounds `[from_round, to_round)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HotspotOpts {
+    pub node: usize,
+    pub from_round: u64,
+    pub to_round: u64,
+    pub factor: f64,
+}
+
+/// A fail-stop fault: `node` dies before round `kill_round` and rejoins
+/// before round `rejoin_round`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOpts {
+    pub node: usize,
+    pub kill_round: u64,
+    pub rejoin_round: u64,
+}
+
+/// Full configuration of a cluster run. Serialized into the journal's
+/// header record, so a journal is self-contained for replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterOpts {
+    pub nodes: usize,
+    pub tenants_per_node: usize,
+    pub rounds: u64,
+    /// Virtual seconds per round (the lockstep tick).
+    pub round_s: f64,
+    pub seed: u64,
+    /// Per-tenant base Poisson arrival rate, requests/second.
+    pub rate_rps: f64,
+    pub slo_s: f64,
+    pub max_lanes: usize,
+    pub max_batch: usize,
+    pub dwell_rounds: u32,
+    /// Hotspot threshold: a node is hot while its offered-load EWMA
+    /// exceeds `migrate_util x` its predicted service rate.
+    pub migrate_util: f64,
+    /// Consecutive hot rounds before a migration fires.
+    pub migrate_sustain: u32,
+    pub hotspot: Option<HotspotOpts>,
+    pub fault: Option<FaultOpts>,
+}
+
+impl ClusterOpts {
+    /// A small, comfortably-under-SLO demo configuration.
+    pub fn demo(nodes: usize) -> Self {
+        Self {
+            nodes,
+            tenants_per_node: 4,
+            rounds: 240,
+            round_s: 0.0025,
+            seed: 42,
+            rate_rps: 40.0,
+            slo_s: 0.025,
+            max_lanes: 2,
+            max_batch: 16,
+            dwell_rounds: 8,
+            migrate_util: 0.9,
+            migrate_sustain: 3,
+            hotspot: None,
+            fault: None,
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.nodes * self.tenants_per_node
+    }
+
+    /// Arrivals are generated strictly before the last round's start, so
+    /// every generated request is delivered by the final round.
+    pub fn horizon_s(&self) -> f64 {
+        self.rounds.saturating_sub(1) as f64 * self.round_s
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes < 1 || self.nodes > 64 {
+            return Err(format!("nodes must be in [1, 64], got {}", self.nodes));
+        }
+        if self.tenants_per_node < 1 {
+            return Err("tenants_per_node must be >= 1".into());
+        }
+        if self.rounds < 2 {
+            return Err("rounds must be >= 2".into());
+        }
+        if !(self.round_s > 0.0) {
+            return Err("round_s must be > 0".into());
+        }
+        if !(self.rate_rps > 0.0) {
+            return Err("rate_rps must be > 0".into());
+        }
+        if !(self.slo_s > 0.0) {
+            return Err("slo_s must be > 0".into());
+        }
+        if self.max_lanes < 1 || self.max_batch < 1 || self.dwell_rounds < 1 {
+            return Err("max_lanes, max_batch, dwell_rounds must be >= 1".into());
+        }
+        if !(self.migrate_util > 0.0) {
+            return Err("migrate_util must be > 0".into());
+        }
+        if self.migrate_sustain < 1 {
+            return Err("migrate_sustain must be >= 1".into());
+        }
+        if let Some(h) = &self.hotspot {
+            if h.node >= self.nodes {
+                return Err(format!("hotspot.node {} out of range", h.node));
+            }
+            if h.from_round >= h.to_round || !(h.factor > 0.0) {
+                return Err("hotspot window/factor invalid".into());
+            }
+        }
+        if let Some(f) = &self.fault {
+            if f.node >= self.nodes {
+                return Err(format!("fault.node {} out of range", f.node));
+            }
+            if self.nodes < 2 {
+                return Err("fault requires >= 2 nodes".into());
+            }
+            if f.kill_round < 1 || f.kill_round >= f.rejoin_round || f.rejoin_round > self.rounds {
+                return Err(format!(
+                    "fault rounds invalid: need 1 <= kill ({}) < rejoin ({}) <= rounds ({})",
+                    f.kill_round, f.rejoin_round, self.rounds
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let hotspot = match &self.hotspot {
+            Some(h) => Json::obj(vec![
+                ("node", Json::num(h.node as f64)),
+                ("from_round", Json::num(h.from_round as f64)),
+                ("to_round", Json::num(h.to_round as f64)),
+                ("factor", Json::num(h.factor)),
+            ]),
+            None => Json::Null,
+        };
+        let fault = match &self.fault {
+            Some(f) => Json::obj(vec![
+                ("node", Json::num(f.node as f64)),
+                ("kill_round", Json::num(f.kill_round as f64)),
+                ("rejoin_round", Json::num(f.rejoin_round as f64)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("tenants_per_node", Json::num(self.tenants_per_node as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("round_s", Json::num(self.round_s)),
+            ("seed", Json::num(self.seed as f64)),
+            ("rate_rps", Json::num(self.rate_rps)),
+            ("slo_s", Json::num(self.slo_s)),
+            ("max_lanes", Json::num(self.max_lanes as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("dwell_rounds", Json::num(self.dwell_rounds as f64)),
+            ("migrate_util", Json::num(self.migrate_util)),
+            ("migrate_sustain", Json::num(self.migrate_sustain as f64)),
+            ("hotspot", hotspot),
+            ("fault", fault),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterOpts, String> {
+        fn num(j: &Json, k: &str) -> Result<f64, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("cluster opts: missing numeric field '{k}'"))
+        }
+        let hotspot = match j.get("hotspot") {
+            Some(h @ Json::Obj(_)) => Some(HotspotOpts {
+                node: num(h, "node")? as usize,
+                from_round: num(h, "from_round")? as u64,
+                to_round: num(h, "to_round")? as u64,
+                factor: num(h, "factor")?,
+            }),
+            _ => None,
+        };
+        let fault = match j.get("fault") {
+            Some(f @ Json::Obj(_)) => Some(FaultOpts {
+                node: num(f, "node")? as usize,
+                kill_round: num(f, "kill_round")? as u64,
+                rejoin_round: num(f, "rejoin_round")? as u64,
+            }),
+            _ => None,
+        };
+        let opts = ClusterOpts {
+            nodes: num(j, "nodes")? as usize,
+            tenants_per_node: num(j, "tenants_per_node")? as usize,
+            rounds: num(j, "rounds")? as u64,
+            round_s: num(j, "round_s")?,
+            seed: num(j, "seed")? as u64,
+            rate_rps: num(j, "rate_rps")?,
+            slo_s: num(j, "slo_s")?,
+            max_lanes: num(j, "max_lanes")? as usize,
+            max_batch: num(j, "max_batch")? as usize,
+            dwell_rounds: num(j, "dwell_rounds")? as u32,
+            migrate_util: num(j, "migrate_util")?,
+            migrate_sustain: num(j, "migrate_sustain")? as u32,
+            hotspot,
+            fault,
+        };
+        opts.validate()?;
+        Ok(opts)
+    }
+}
+
+/// Aggregate counters for one committed round across all nodes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundStats {
+    pub round: u64,
+    pub offered: u64,
+    pub completed: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub dropped: u64,
+}
+
+/// Per-node totals across the run.
+#[derive(Debug, Clone, Default)]
+pub struct NodeSummary {
+    pub node: usize,
+    pub offered: u64,
+    pub completed: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub dropped: u64,
+    /// Backlog after the node's last committed round.
+    pub backlog: u64,
+    pub busy_s: f64,
+    pub reconfigs: u64,
+    pub rounds: u64,
+}
+
+impl NodeSummary {
+    /// Snapshot shape consumed by `server::status::aggregate_nodes`.
+    pub fn to_json(&self) -> Json {
+        let att = if self.completed > 0 {
+            self.hits as f64 / self.completed as f64
+        } else {
+            1.0
+        };
+        Json::obj(vec![
+            ("node", Json::num(self.node as f64)),
+            ("offered", Json::num(self.offered as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("backlog", Json::num(self.backlog as f64)),
+            ("busy_s", Json::num(self.busy_s)),
+            ("reconfigs", Json::num(self.reconfigs as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("slo_attainment", Json::num(att)),
+        ])
+    }
+}
+
+/// The outcome of a cluster run: the journal plus enough statistics for
+/// the scale-out bench and the CLI to report without re-parsing it.
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub opts: ClusterOpts,
+    pub journal: Journal,
+    pub rounds: Vec<RoundStats>,
+    pub nodes: Vec<NodeSummary>,
+    pub offered: u64,
+    pub completed: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub dropped: u64,
+    pub migrations: u64,
+    pub node_downs: u64,
+    pub node_ups: u64,
+    pub backlog_end: u64,
+    pub in_transfer_end: u64,
+}
+
+impl ClusterReport {
+    /// Fraction of completed requests that met their deadline.
+    pub fn attainment(&self) -> f64 {
+        if self.completed > 0 {
+            self.hits as f64 / self.completed as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// SLO-met goodput over the whole run, requests/second.
+    pub fn goodput_rps(&self) -> f64 {
+        let dur = self.opts.rounds as f64 * self.opts.round_s;
+        if dur > 0.0 {
+            self.hits as f64 / dur
+        } else {
+            0.0
+        }
+    }
+
+    /// Every offered request is accounted for: completed, dropped, still
+    /// queued, or mid-transfer.
+    pub fn conservation_ok(&self) -> bool {
+        self.offered == self.completed + self.dropped + self.backlog_end + self.in_transfer_end
+    }
+
+    pub fn node_json(&self) -> Vec<Json> {
+        self.nodes.iter().map(NodeSummary::to_json).collect()
+    }
+}
+
+/// Committer-side state of a cluster run: arrival streams, placement,
+/// hotspot/fault machinery, statistics, and the journal.
+pub struct ClusterSim {
+    opts: ClusterOpts,
+    placer: ClusterPlacer<ShapeClass>,
+    seq: Sequencer,
+    journal: Journal,
+    /// Pre-generated per-tenant arrival times (virtual seconds, sorted).
+    arrivals: Vec<Vec<f64>>,
+    cursor: Vec<usize>,
+    /// Per-node staging for the NEXT issued command.
+    pending_add: Vec<Vec<TenantTransfer>>,
+    pending_drop: Vec<Vec<usize>>,
+    pending_reset: Vec<bool>,
+    /// Tenants with a migration decided but the backlog not yet delivered
+    /// (guards against re-migrating a tenant mid-move).
+    in_flight: BTreeSet<usize>,
+    /// Tenants displaced by the current fault, for rejoin re-homing.
+    displaced: Vec<usize>,
+    offered_ewma: Vec<f64>,
+    service_rps: Vec<f64>,
+    hot_rounds: Vec<u32>,
+    round_stats: Vec<RoundStats>,
+    node_stats: Vec<NodeSummary>,
+    migrations: u64,
+    node_downs: u64,
+    node_ups: u64,
+    offered_total: u64,
+}
+
+/// Offered-load / service-rate EWMA smoothing.
+const EWMA_ALPHA: f64 = 0.3;
+
+impl ClusterSim {
+    pub fn new(opts: ClusterOpts) -> Result<Self, String> {
+        opts.validate()?;
+        let n = opts.n_tenants();
+        let tenants: Vec<(ShapeClass, f64)> = (0..n).map(|t| (demo_class(t), 1.0)).collect();
+        let placer = ClusterPlacer::new(&tenants, opts.nodes);
+
+        // Hotspot targets are the tenants INITIALLY resident on the hot
+        // node — a deterministic function of the opts, so the arrival
+        // streams are too.
+        let hot_tenants: BTreeSet<usize> = match &opts.hotspot {
+            Some(h) => placer.tenants_on(h.node).into_iter().collect(),
+            None => BTreeSet::new(),
+        };
+        let horizon = opts.horizon_s();
+        let mut arrivals = Vec::with_capacity(n);
+        for t in 0..n {
+            let mut rng =
+                Rng::new(opts.seed ^ (t as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let mut ts = Vec::new();
+            let mut now = 0.0f64;
+            loop {
+                let boosted = match &opts.hotspot {
+                    Some(h) if hot_tenants.contains(&t) => {
+                        let (from, to) =
+                            (h.from_round as f64 * opts.round_s, h.to_round as f64 * opts.round_s);
+                        now >= from && now < to
+                    }
+                    _ => false,
+                };
+                let rate = if boosted { opts.rate_rps * opts.hotspot.as_ref().unwrap().factor } else { opts.rate_rps };
+                now += rng.gen_exp(rate);
+                if now >= horizon {
+                    break;
+                }
+                ts.push(now);
+            }
+            arrivals.push(ts);
+        }
+
+        let mut journal = Journal::new();
+        journal.append(Json::obj(vec![
+            ("kind", Json::str("header")),
+            ("version", Json::num(1)),
+            ("opts", opts.to_json()),
+        ]));
+
+        let nodes = opts.nodes;
+        let rounds = opts.rounds as usize;
+        Ok(Self {
+            placer,
+            seq: Sequencer::new(),
+            journal,
+            arrivals,
+            cursor: vec![0; n],
+            pending_add: vec![Vec::new(); nodes],
+            pending_drop: vec![Vec::new(); nodes],
+            pending_reset: vec![false; nodes],
+            in_flight: BTreeSet::new(),
+            displaced: Vec::new(),
+            offered_ewma: vec![0.0; nodes],
+            service_rps: vec![0.0; nodes],
+            hot_rounds: vec![0; nodes],
+            round_stats: (0..rounds)
+                .map(|r| RoundStats { round: r as u64, ..RoundStats::default() })
+                .collect(),
+            node_stats: (0..nodes)
+                .map(|d| NodeSummary { node: d, ..NodeSummary::default() })
+                .collect(),
+            migrations: 0,
+            node_downs: 0,
+            node_ups: 0,
+            offered_total: 0,
+            opts,
+        })
+    }
+
+    /// Issue round `round`'s commands, one per live node in ascending node
+    /// order (== ticket order). All commands are computed before any
+    /// worker runs — snapshot semantics, identical for the parallel and
+    /// serial paths.
+    // lint: pure
+    pub fn issue_round(&mut self, round: u64) -> Vec<(usize, NodeCmd)> {
+        let now_s = round as f64 * self.opts.round_s;
+        let mut cmds = Vec::new();
+        for node in 0..self.opts.nodes {
+            if !self.placer.is_live(node) {
+                continue;
+            }
+            let ticket = self.seq.issue();
+            let reset = std::mem::take(&mut self.pending_reset[node]);
+            let add_tenants = std::mem::take(&mut self.pending_add[node]);
+            let drop_tenants = std::mem::take(&mut self.pending_drop[node]);
+            // Delivery completes a migration: the tenant may move again.
+            for tr in &add_tenants {
+                self.in_flight.remove(&tr.tenant);
+            }
+            let mut arrivals = Vec::new();
+            for t in self.placer.tenants_on(node) {
+                while self.cursor[t] < self.arrivals[t].len()
+                    && self.arrivals[t][self.cursor[t]] <= now_s
+                {
+                    let k = self.cursor[t];
+                    arrivals.push(ArrivalMsg {
+                        tenant: t,
+                        id: ((t as u64) << 32) | k as u64,
+                        arr_s: self.arrivals[t][k],
+                    });
+                    self.cursor[t] += 1;
+                }
+            }
+            let inst = arrivals.len() as f64 / self.opts.round_s;
+            self.offered_ewma[node] =
+                EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * self.offered_ewma[node];
+            let n_arr = arrivals.len() as u64;
+            self.offered_total += n_arr;
+            self.round_stats[round as usize].offered += n_arr;
+            self.node_stats[node].offered += n_arr;
+            cmds.push((
+                node,
+                NodeCmd { ticket, round, now_s, reset, arrivals, add_tenants, drop_tenants },
+            ));
+        }
+        cmds
+    }
+
+    /// Apply one committed result: append its journal record, fold its
+    /// counters into the statistics, update the node's service-rate
+    /// estimate, and route evicted tenant queues to their current homes.
+    /// MUST be called in ticket order (the in-order committer guarantees
+    /// it on the parallel path).
+    // lint: pure
+    pub fn apply_committed(&mut self, r: &NodeRoundResult) {
+        self.journal.append(Json::obj(vec![
+            ("kind", Json::str("round")),
+            ("ticket", Json::num(r.ticket as f64)),
+            ("round", Json::num(r.round as f64)),
+            ("node", Json::num(r.node as f64)),
+            ("plan", Json::str(format!("{:016x}", r.plan_digest))),
+            ("lanes", Json::num(r.decision.lanes as f64)),
+            ("depth", Json::num(r.decision.depth as f64)),
+            (
+                "lane_map",
+                Json::Arr(r.lane_map.iter().map(|&l| Json::num(l as f64)).collect()),
+            ),
+            ("reconfigs", Json::num(r.reconfigs as f64)),
+            ("launches", Json::num(r.lane_map.len() as f64)),
+            ("drained", Json::num(r.drained as f64)),
+            ("completed", Json::num(r.completed as f64)),
+            ("hits", Json::num(r.hits as f64)),
+            ("misses", Json::num(r.misses as f64)),
+            ("dropped", Json::num(r.dropped as f64)),
+            ("backlog", Json::num(r.backlog as f64)),
+        ]));
+
+        let rs = &mut self.round_stats[r.round as usize];
+        rs.completed += r.completed;
+        rs.hits += r.hits;
+        rs.misses += r.misses;
+        rs.dropped += r.dropped;
+
+        let ns = &mut self.node_stats[r.node];
+        ns.completed += r.completed;
+        ns.hits += r.hits;
+        ns.misses += r.misses;
+        ns.dropped += r.dropped;
+        ns.backlog = r.backlog as u64;
+        ns.busy_s += r.busy_s;
+        ns.reconfigs = r.reconfigs;
+        ns.rounds += 1;
+
+        if r.busy_s > 1e-9 {
+            let inst = r.completed as f64 / r.busy_s;
+            self.service_rps[r.node] = if self.service_rps[r.node] <= 0.0 {
+                inst
+            } else {
+                EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * self.service_rps[r.node]
+            };
+        }
+
+        // Route evicted queues to the tenant's CURRENT home (the placer
+        // moved it when the migration was decided). Empty transfers are
+        // routed too: delivery is what completes the migration.
+        for tr in &r.evicted {
+            let dst = self.placer.node_of(tr.tenant);
+            self.pending_add[dst].push(tr.clone());
+        }
+    }
+
+    /// Round boundary, after every result of `round` has committed:
+    /// hotspot detection/migration, then fault events, each journaled in
+    /// a fixed deterministic order (migrations ascending by source node,
+    /// then node_down, then node_up).
+    // lint: pure
+    pub fn end_round(&mut self, round: u64) {
+        // Hotspot detection per live node, ascending.
+        for node in 0..self.opts.nodes {
+            if !self.placer.is_live(node) {
+                continue;
+            }
+            let hot = self.service_rps[node] > 0.0
+                && self.offered_ewma[node] > self.opts.migrate_util * self.service_rps[node];
+            if hot {
+                self.hot_rounds[node] += 1;
+            } else {
+                self.hot_rounds[node] = 0;
+            }
+            if self.hot_rounds[node] < self.opts.migrate_sustain {
+                continue;
+            }
+            let movable: Vec<usize> = self
+                .placer
+                .tenants_on(node)
+                .into_iter()
+                .filter(|t| !self.in_flight.contains(t))
+                .collect();
+            let dst = (0..self.opts.nodes)
+                .filter(|&d| d != node && self.placer.is_live(d))
+                .min_by(|&a, &b| {
+                    self.placer
+                        .load_of(a)
+                        .partial_cmp(&self.placer.load_of(b))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+            let (Some(dst), true) = (dst, movable.len() >= 2) else {
+                continue;
+            };
+            // Heaviest movable tenant; ties break to the lowest id.
+            let mut pick = movable[0];
+            for &t in &movable[1..] {
+                if self.placer.weight_of(t) > self.placer.weight_of(pick) {
+                    pick = t;
+                }
+            }
+            self.placer.migrate(pick, dst);
+            self.pending_drop[node].push(pick);
+            self.in_flight.insert(pick);
+            self.hot_rounds[node] = 0;
+            self.migrations += 1;
+            self.journal.append(Json::obj(vec![
+                ("kind", Json::str("migrate")),
+                ("round", Json::num(round as f64)),
+                ("tenant", Json::num(pick as f64)),
+                ("from", Json::num(node as f64)),
+                ("to", Json::num(dst as f64)),
+            ]));
+        }
+
+        let Some(f) = self.opts.fault.clone() else {
+            return;
+        };
+        if round + 1 == f.kill_round && self.placer.is_live(f.node) {
+            let moves = self.placer.set_down(f.node);
+            self.displaced = moves.iter().map(|&(t, _)| t).collect();
+            // Transfers staged for the dead node re-route to the tenants'
+            // new homes; drop commands it will never run are cancelled
+            // (the backlog they would have drained is lost — the rejoin
+            // reset counts it).
+            let stranded = std::mem::take(&mut self.pending_add[f.node]);
+            for tr in stranded {
+                let dst = self.placer.node_of(tr.tenant);
+                self.pending_add[dst].push(tr);
+            }
+            for t in std::mem::take(&mut self.pending_drop[f.node]) {
+                self.in_flight.remove(&t);
+            }
+            self.offered_ewma[f.node] = 0.0;
+            self.service_rps[f.node] = 0.0;
+            self.hot_rounds[f.node] = 0;
+            self.node_downs += 1;
+            self.journal.append(Json::obj(vec![
+                ("kind", Json::str("node_down")),
+                ("round", Json::num(round as f64)),
+                ("node", Json::num(f.node as f64)),
+                (
+                    "replaced",
+                    Json::Arr(
+                        moves
+                            .iter()
+                            .map(|&(t, to)| {
+                                Json::Arr(vec![Json::num(t as f64), Json::num(to as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        if round + 1 == f.rejoin_round && !self.placer.is_live(f.node) {
+            self.placer.set_up(f.node);
+            self.pending_reset[f.node] = true;
+            let group: Vec<usize> = std::mem::take(&mut self.displaced)
+                .into_iter()
+                .filter(|t| !self.in_flight.contains(t))
+                .collect();
+            let returned: Vec<(usize, usize, usize)> = self
+                .placer
+                .rehome_group(&group)
+                .into_iter()
+                .filter(|&(_, from, to)| from != to)
+                .collect();
+            for &(t, from, _) in &returned {
+                self.pending_drop[from].push(t);
+                self.in_flight.insert(t);
+            }
+            self.node_ups += 1;
+            self.journal.append(Json::obj(vec![
+                ("kind", Json::str("node_up")),
+                ("round", Json::num(round as f64)),
+                ("node", Json::num(f.node as f64)),
+                (
+                    "returned",
+                    Json::Arr(
+                        returned
+                            .iter()
+                            .map(|&(t, from, _)| {
+                                Json::Arr(vec![Json::num(t as f64), Json::num(from as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+    }
+
+    /// Append the summary record and produce the report.
+    pub fn finish(mut self) -> ClusterReport {
+        let offered = self.offered_total;
+        let completed: u64 = self.node_stats.iter().map(|n| n.completed).sum();
+        let hits: u64 = self.node_stats.iter().map(|n| n.hits).sum();
+        let misses: u64 = self.node_stats.iter().map(|n| n.misses).sum();
+        let dropped: u64 = self.node_stats.iter().map(|n| n.dropped).sum();
+        let backlog_end: u64 = self.node_stats.iter().map(|n| n.backlog).sum();
+        let in_transfer_end: u64 = self
+            .pending_add
+            .iter()
+            .flatten()
+            .map(|tr| tr.backlog.len() as u64)
+            .sum();
+        self.journal.append(Json::obj(vec![
+            ("kind", Json::str("summary")),
+            ("rounds", Json::num(self.opts.rounds as f64)),
+            ("offered", Json::num(offered as f64)),
+            ("completed", Json::num(completed as f64)),
+            ("hits", Json::num(hits as f64)),
+            ("misses", Json::num(misses as f64)),
+            ("dropped", Json::num(dropped as f64)),
+            ("migrations", Json::num(self.migrations as f64)),
+            ("node_downs", Json::num(self.node_downs as f64)),
+            ("node_ups", Json::num(self.node_ups as f64)),
+            ("backlog", Json::num(backlog_end as f64)),
+            ("in_transfer", Json::num(in_transfer_end as f64)),
+        ]));
+        ClusterReport {
+            opts: self.opts,
+            journal: self.journal,
+            rounds: self.round_stats,
+            nodes: self.node_stats,
+            offered,
+            completed,
+            hits,
+            misses,
+            dropped,
+            migrations: self.migrations,
+            node_downs: self.node_downs,
+            node_ups: self.node_ups,
+            backlog_end,
+            in_transfer_end,
+        }
+    }
+}
+
+/// Run a full cluster simulation. `parallel` runs one OS thread per node
+/// behind the [`WorkerPool`]; otherwise the same workers run inline in
+/// ticket order. Both paths produce bitwise identical journals.
+pub fn run_cluster(opts: &ClusterOpts, parallel: bool) -> Result<ClusterReport, String> {
+    let mut sim = ClusterSim::new(opts.clone())?;
+    let tenants: Vec<(ShapeClass, f64)> =
+        (0..opts.n_tenants()).map(|t| (demo_class(t), opts.slo_s)).collect();
+    let base = Instant::now();
+    let make = |node: usize| {
+        NodeWorker::new(node, tenants.clone(), opts.max_lanes, opts.max_batch, opts.dwell_rounds, base)
+    };
+    if parallel {
+        let workers: Vec<NodeWorker> = (0..opts.nodes).map(make).collect();
+        let mut pool: WorkerPool<StdEnv, NodeCmd, NodeRoundResult> = WorkerPool::spawn(workers);
+        let mut com: InOrderCommitter<NodeRoundResult> = InOrderCommitter::new();
+        for round in 0..opts.rounds {
+            let cmds = sim.issue_round(round);
+            let expect = cmds.len();
+            for (node, cmd) in cmds {
+                if !pool.send(node, cmd) {
+                    return Err(format!("node {node} worker is gone"));
+                }
+            }
+            for _ in 0..expect {
+                let res = pool.recv().ok_or("worker pool died mid-round")?;
+                for (_, r) in com.offer(res.ticket(), res) {
+                    sim.apply_committed(&r);
+                }
+            }
+            sim.end_round(round);
+        }
+        pool.shutdown();
+    } else {
+        let mut workers: Vec<NodeWorker> = (0..opts.nodes).map(make).collect();
+        for round in 0..opts.rounds {
+            // Snapshot semantics: ALL commands are computed before any
+            // worker runs, exactly as on the parallel path.
+            for (node, cmd) in sim.issue_round(round) {
+                let res = workers[node].run_round(&cmd);
+                sim.apply_committed(&res);
+            }
+            sim.end_round(round);
+        }
+    }
+    Ok(sim.finish())
+}
+
+/// What [`replay_journal`] found.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    pub rounds: u64,
+    pub nodes: usize,
+    pub original: String,
+    pub replayed: String,
+    pub matches: bool,
+}
+
+/// Re-execute a journal's header configuration through the serial path
+/// and compare digests. A match proves the journal's parallel producer
+/// committed exactly the serial (sequencer-order) decision sequence.
+// lint: pure
+pub fn replay_journal(journal: &Journal) -> Result<ReplayOutcome, String> {
+    let header = journal.records().first().ok_or("empty journal")?;
+    if header.get("kind").and_then(Json::as_str) != Some("header") {
+        return Err("first record is not a header".into());
+    }
+    let opts_json = header.get("opts").ok_or("header record has no 'opts'")?;
+    let opts = ClusterOpts::from_json(opts_json)?;
+    let report = run_cluster(&opts, false)?;
+    Ok(ReplayOutcome {
+        rounds: opts.rounds,
+        nodes: opts.nodes,
+        original: format!("{:016x}", journal.digest()),
+        replayed: report.journal.digest_hex(),
+        matches: journal.digest() == report.journal.digest()
+            && journal.bytes().len() == report.journal.bytes().len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(nodes: usize) -> ClusterOpts {
+        ClusterOpts { rounds: 60, ..ClusterOpts::demo(nodes) }
+    }
+
+    fn kinds(j: &Journal) -> Vec<String> {
+        j.records()
+            .iter()
+            .filter_map(|r| r.get("kind").and_then(Json::as_str).map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn opts_round_trip_through_json() {
+        let mut o = small(3);
+        o.hotspot =
+            Some(HotspotOpts { node: 1, from_round: 10, to_round: 30, factor: 6.5 });
+        o.fault = Some(FaultOpts { node: 2, kill_round: 20, rejoin_round: 40 });
+        let back = ClusterOpts::from_json(&o.to_json()).expect("parse");
+        assert_eq!(back, o);
+        // And the header emission is stable across the round trip.
+        assert_eq!(back.to_json().to_string(), o.to_json().to_string());
+    }
+
+    #[test]
+    fn validation_rejects_bad_opts() {
+        let mut o = small(2);
+        o.rounds = 1;
+        assert!(o.validate().unwrap_err().contains("rounds"));
+        let mut o = small(1);
+        o.fault = Some(FaultOpts { node: 0, kill_round: 5, rejoin_round: 10 });
+        assert!(o.validate().unwrap_err().contains(">= 2 nodes"));
+        let mut o = small(2);
+        o.fault = Some(FaultOpts { node: 0, kill_round: 10, rejoin_round: 5 });
+        assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn parallel_and_serial_journals_are_bitwise_identical() {
+        let opts = small(2);
+        let par = run_cluster(&opts, true).expect("parallel");
+        let ser = run_cluster(&opts, false).expect("serial");
+        assert!(par.completed > 0, "work happened");
+        assert_eq!(par.journal.digest_hex(), ser.journal.digest_hex());
+        assert_eq!(par.journal.bytes(), ser.journal.bytes());
+    }
+
+    #[test]
+    fn replay_matches_a_parallel_run() {
+        let opts = small(2);
+        let par = run_cluster(&opts, true).expect("parallel");
+        let out = replay_journal(&par.journal).expect("replay");
+        assert!(out.matches, "original {} vs replayed {}", out.original, out.replayed);
+        assert_eq!(out.nodes, 2);
+    }
+
+    #[test]
+    fn sustained_hotspot_triggers_a_journaled_migration() {
+        let mut opts = small(2);
+        // Make every busy round look overloaded so the detector must
+        // fire: any positive offered EWMA beats util * service.
+        opts.migrate_util = 1e-9;
+        opts.migrate_sustain = 2;
+        let rep = run_cluster(&opts, false).expect("run");
+        assert!(rep.migrations >= 1, "no migration fired");
+        assert!(kinds(&rep.journal).iter().any(|k| k == "migrate"));
+        assert!(rep.conservation_ok(), "requests leaked across migration");
+    }
+
+    #[test]
+    fn kill_and_rejoin_are_journaled_and_conserve_requests() {
+        let mut opts = small(3);
+        opts.fault = Some(FaultOpts { node: 0, kill_round: 20, rejoin_round: 40 });
+        let rep = run_cluster(&opts, true).expect("run");
+        assert_eq!((rep.node_downs, rep.node_ups), (1, 1));
+        let ks = kinds(&rep.journal);
+        assert!(ks.iter().any(|k| k == "node_down"));
+        assert!(ks.iter().any(|k| k == "node_up"));
+        assert!(
+            rep.conservation_ok(),
+            "offered {} != completed {} + dropped {} + backlog {} + transfer {}",
+            rep.offered,
+            rep.completed,
+            rep.dropped,
+            rep.backlog_end,
+            rep.in_transfer_end
+        );
+        // The dead node planned nothing during the outage: it committed
+        // fewer rounds than the survivors.
+        assert!(rep.nodes[0].rounds < rep.nodes[1].rounds);
+        // Replay reproduces the faulted run bit for bit too.
+        assert!(replay_journal(&rep.journal).expect("replay").matches);
+    }
+
+    #[test]
+    fn every_round_commits_exactly_the_live_nodes() {
+        let mut opts = small(2);
+        opts.rounds = 30;
+        let rep = run_cluster(&opts, false).expect("run");
+        let round_records = rep
+            .journal
+            .records()
+            .iter()
+            .filter(|r| r.get("kind").and_then(Json::as_str) == Some("round"))
+            .count() as u64;
+        assert_eq!(round_records, 30 * 2);
+        assert!(rep.conservation_ok());
+        // Ticket order in the journal is strictly increasing.
+        let tickets: Vec<u64> = rep
+            .journal
+            .records()
+            .iter()
+            .filter(|r| r.get("kind").and_then(Json::as_str) == Some("round"))
+            .map(|r| r.get("ticket").and_then(Json::as_f64).unwrap() as u64)
+            .collect();
+        assert!(tickets.windows(2).all(|w| w[1] == w[0] + 1), "tickets not dense");
+    }
+}

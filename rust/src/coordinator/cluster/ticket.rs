@@ -1,0 +1,281 @@
+//! The sequencer → workers → committer ticket protocol.
+//!
+//! Three pieces, kept deliberately tiny so the whole protocol fits under
+//! the model checker ([`crate::util::modelcheck`], exercised by
+//! `tests/modelcheck_cluster.rs`):
+//!
+//! * [`Sequencer`] — hands out globally monotonically increasing round
+//!   tickets. A ticket is the cluster's only ordering primitive: results
+//!   may *arrive* in any order, but they *commit* in ticket order.
+//! * [`WorkerPool`] — N stateful node workers, one SPSC command queue
+//!   each, one shared MPSC results channel. Generic over
+//!   [`SyncEnv`](crate::coordinator::protocol::SyncEnv), so the SAME code
+//!   runs on OS threads in production (`StdEnv`) and under the
+//!   schedule-exhaustive model environment in tests (`ModelEnv`). Unlike
+//!   [`LaneProtocol`](crate::coordinator::protocol::LaneProtocol) — whose
+//!   lanes share one stateless `ItemRunner` — each worker here OWNS its
+//!   runner: a node worker is a whole scheduler/controller/queue stack and
+//!   must mutate it across rounds.
+//! * [`InOrderCommitter`] — the reorder buffer between the results channel
+//!   and the journal: results are offered as they arrive and released
+//!   strictly in ticket order, with no ticket skipped, duplicated, or
+//!   committed before all of its predecessors.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::protocol::{ProtoJoin, ProtoPayload, ProtoReceiver, ProtoSender, SyncEnv};
+
+/// A result that knows which ticket produced it.
+pub trait Ticketed {
+    fn ticket(&self) -> u64;
+}
+
+/// Issues globally monotonically increasing round tickets.
+#[derive(Default)]
+pub struct Sequencer {
+    next: u64,
+}
+
+impl Sequencer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take the next ticket. Tickets are dense: every issued ticket must
+    /// eventually be offered to the committer or the round stalls.
+    // lint: pure
+    pub fn issue(&mut self) -> u64 {
+        let t = self.next;
+        self.next += 1;
+        t
+    }
+
+    /// Tickets issued so far (the next ticket to be handed out).
+    pub fn issued(&self) -> u64 {
+        self.next
+    }
+}
+
+/// Reorder buffer releasing results strictly in ticket order.
+pub struct InOrderCommitter<T> {
+    next: u64,
+    pending: BTreeMap<u64, T>,
+}
+
+impl<T> Default for InOrderCommitter<T> {
+    fn default() -> Self {
+        Self { next: 0, pending: BTreeMap::new() }
+    }
+}
+
+impl<T> InOrderCommitter<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The ticket the next commit is waiting on.
+    pub fn next_ticket(&self) -> u64 {
+        self.next
+    }
+
+    /// Results buffered behind a missing predecessor.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Offer one out-of-order result; returns every `(ticket, result)` that
+    /// became committable, in ticket order (empty while a predecessor is
+    /// still outstanding). Panics on a duplicated or already-committed
+    /// ticket — both are protocol violations, not recoverable conditions.
+    // lint: pure
+    pub fn offer(&mut self, ticket: u64, result: T) -> Vec<(u64, T)> {
+        assert!(ticket >= self.next, "ticket {ticket} was already committed");
+        let dup = self.pending.insert(ticket, result);
+        assert!(dup.is_none(), "ticket {ticket} offered twice");
+        let mut out = Vec::new();
+        while let Some(r) = self.pending.remove(&self.next) {
+            out.push((self.next, r));
+            self.next += 1;
+        }
+        out
+    }
+}
+
+/// What a node worker runs per command. Owned (`&mut self`) — a node's
+/// scheduler/controller/queue state persists across rounds.
+pub trait TicketRunner<W, R>: Send + 'static {
+    fn run(&mut self, cmd: W) -> R;
+}
+
+/// N stateful workers behind SPSC command queues and one shared results
+/// channel. `send` targets a worker; `recv` surfaces results in arrival
+/// (NOT ticket) order — feed them through an [`InOrderCommitter`].
+pub struct WorkerPool<E: SyncEnv, W: ProtoPayload, R: ProtoPayload> {
+    /// `None` == that worker's queue is closed (shutdown).
+    cmd_txs: Vec<Option<E::Sender<W>>>,
+    results: E::Receiver<R>,
+    workers: Vec<E::Join>,
+}
+
+impl<E: SyncEnv, W: ProtoPayload, R: ProtoPayload> WorkerPool<E, W, R> {
+    /// Spawn one worker per runner. The pool keeps NO clone of the results
+    /// sender: once every worker exits (all command queues closed and
+    /// drained), `recv` returns `None`.
+    pub fn spawn<S: TicketRunner<W, R>>(runners: Vec<S>) -> Self {
+        let (done_tx, done_rx) = E::channel::<R>();
+        let mut cmd_txs = Vec::with_capacity(runners.len());
+        let mut workers = Vec::with_capacity(runners.len());
+        for (node, mut runner) in runners.into_iter().enumerate() {
+            let (tx, rx) = E::channel::<W>();
+            let done = done_tx.clone();
+            workers.push(E::spawn(format!("stgpu-node-{node}"), move || {
+                while let Some(cmd) = rx.recv() {
+                    let res = runner.run(cmd);
+                    if done.send(res).is_err() {
+                        return; // committer gone: nobody to report to
+                    }
+                }
+            }));
+            cmd_txs.push(Some(tx));
+        }
+        drop(done_tx);
+        Self { cmd_txs, results: done_rx, workers }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.cmd_txs.len()
+    }
+
+    /// Queue one command on `worker`'s SPSC queue. `false` if that worker
+    /// was already shut down.
+    pub fn send(&self, worker: usize, cmd: W) -> bool {
+        match &self.cmd_txs[worker] {
+            Some(tx) => tx.send(cmd).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Block for the next result from any worker; `None` once every worker
+    /// has exited.
+    pub fn recv(&mut self) -> Option<R> {
+        self.results.recv()
+    }
+
+    /// Close every command queue and join every worker. Workers drain what
+    /// is already queued before exiting (the `while let` in their loop),
+    /// so no accepted command is abandoned.
+    pub fn shutdown(&mut self) {
+        for tx in &mut self.cmd_txs {
+            *tx = None;
+        }
+        for w in self.workers.drain(..) {
+            w.join();
+        }
+    }
+}
+
+impl<E: SyncEnv, W: ProtoPayload, R: ProtoPayload> Drop for WorkerPool<E, W, R> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::StdEnv;
+
+    #[test]
+    fn sequencer_is_dense_and_monotonic() {
+        let mut s = Sequencer::new();
+        assert_eq!((s.issue(), s.issue(), s.issue()), (0, 1, 2));
+        assert_eq!(s.issued(), 3);
+    }
+
+    #[test]
+    fn committer_releases_strictly_in_ticket_order() {
+        let mut c = InOrderCommitter::new();
+        assert!(c.offer(2, "c").is_empty());
+        assert!(c.offer(1, "b").is_empty());
+        assert_eq!(c.pending(), 2);
+        let out = c.offer(0, "a");
+        assert_eq!(out, vec![(0, "a"), (1, "b"), (2, "c")]);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.next_ticket(), 3);
+        assert_eq!(c.offer(3, "d"), vec![(3, "d")]);
+    }
+
+    #[test]
+    #[should_panic(expected = "offered twice")]
+    fn committer_panics_on_a_duplicated_ticket() {
+        let mut c = InOrderCommitter::new();
+        let _ = c.offer(5, ());
+        let _ = c.offer(5, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "already committed")]
+    fn committer_panics_on_a_stale_ticket() {
+        let mut c = InOrderCommitter::new();
+        let _ = c.offer(0, ());
+        let _ = c.offer(0, ());
+    }
+
+    struct Cmd {
+        ticket: u64,
+        x: u64,
+    }
+    impl ProtoPayload for Cmd {}
+
+    struct Res {
+        ticket: u64,
+        node: usize,
+        x: u64,
+    }
+    impl ProtoPayload for Res {}
+    impl Ticketed for Res {
+        fn ticket(&self) -> u64 {
+            self.ticket
+        }
+    }
+
+    /// A stateful runner: proves the pool supports per-worker owned state.
+    struct Acc {
+        node: usize,
+        sum: u64,
+    }
+    impl TicketRunner<Cmd, Res> for Acc {
+        fn run(&mut self, cmd: Cmd) -> Res {
+            self.sum += cmd.x;
+            Res { ticket: cmd.ticket, node: self.node, x: self.sum }
+        }
+    }
+
+    #[test]
+    fn std_pool_round_trips_and_commits_in_ticket_order() {
+        let mut pool: WorkerPool<StdEnv, Cmd, Res> =
+            WorkerPool::spawn(vec![Acc { node: 0, sum: 0 }, Acc { node: 1, sum: 0 }]);
+        let mut seq = Sequencer::new();
+        let mut com = InOrderCommitter::new();
+        let mut committed: Vec<u64> = Vec::new();
+        for round in 0..3u64 {
+            for node in 0..2 {
+                let t = seq.issue();
+                assert!(pool.send(node, Cmd { ticket: t, x: round + 1 }));
+            }
+            for _ in 0..2 {
+                let r = pool.recv().expect("workers alive");
+                assert!(r.node < 2 && r.x > 0);
+                for (t, _) in com.offer(r.ticket(), r) {
+                    assert_eq!(t, committed.len() as u64, "commit out of ticket order");
+                    committed.push(t);
+                }
+            }
+        }
+        assert_eq!(committed, (0..6).collect::<Vec<_>>());
+        assert_eq!(com.pending(), 0);
+        pool.shutdown();
+        assert!(pool.recv().is_none(), "results channel closes after shutdown");
+        assert!(!pool.send(0, Cmd { ticket: 99, x: 0 }), "closed queue refuses sends");
+    }
+}

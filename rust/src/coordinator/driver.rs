@@ -140,6 +140,15 @@ pub struct RoundOutcome {
     pub launches_per_device: Vec<usize>,
 }
 
+/// A controller decision planned for one shard but not yet applied — the
+/// worker-side/committer-side seam the cluster tier journals a
+/// reconfiguration through before it takes effect.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlPlan {
+    pub device: usize,
+    pub decision: Decision,
+}
+
 /// Reusable per-shard round-plan storage: the scheduler fills the plan in
 /// place, dispatch drains the launch vector (keeping its capacity), and
 /// the next round reuses both vectors. `grows` counts capacity growths
@@ -1120,22 +1129,34 @@ impl Coordinator {
         Ok(sent > 0)
     }
 
-    /// Adaptive-controller hook, run before each round is planned: count
-    /// the round and, at each dwell boundary, gather this shard's signals
-    /// (backlog + offered-load EWMA from its `QueueSet`, round/launch
-    /// EWMAs from its tracker, calibrated interference stretch from its
-    /// cost model, windowed deadline attainment, tightest tenant SLO) and
-    /// let the controller re-decide (lanes, depth). A lane change resizes
-    /// the persistent pool and re-targets the scheduler in place — the
-    /// arena and scheduler scratch survive, so reconfiguration does not
-    /// reintroduce hot-path allocation. No-op when `adaptive = false`.
+    /// Adaptive-controller hook, run before each round is planned. Split
+    /// into the cluster tier's two halves — [`Coordinator::plan_control`]
+    /// (worker-side: gather signals, decide) and
+    /// [`Coordinator::apply_control`] (committer-side: apply the decided
+    /// operating point) — so a decision can be shipped across the
+    /// sequencer→committer boundary and journaled before it takes effect.
+    /// No-op when `adaptive = false`.
     fn control_round(&mut self, device: usize, now: Instant) {
+        if let Some(plan) = self.plan_control(device, now) {
+            self.apply_control(&plan);
+        }
+    }
+
+    /// Worker-side half: count the round and, at each dwell boundary,
+    /// gather this shard's signals (backlog + offered-load EWMA from its
+    /// `QueueSet`, round/launch EWMAs from its tracker, calibrated
+    /// interference stretch from its cost model, windowed deadline
+    /// attainment, tightest tenant SLO) and let the controller re-decide
+    /// (lanes, depth). Pure decision-making: nothing is reconfigured
+    /// here. Returns `None` off the dwell boundary or when the shard is
+    /// not adaptive.
+    fn plan_control(&mut self, device: usize, now: Instant) -> Option<ControlPlan> {
         let due = match &mut self.shards[device].controller {
             Some(ctl) => ctl.tick(),
-            None => return,
+            None => return None,
         };
         if !due {
-            return;
+            return None;
         }
         // Tightest SLO among servable tenants placed on this shard — the
         // deadline budget candidate latencies must fit.
@@ -1185,12 +1206,21 @@ impl Coordinator {
         // completions, which imply the tracker signals decide() needs).
         shard.win_hits = 0;
         shard.win_misses = 0;
-        if decision.lanes != shard.resident_lanes {
-            shard.pool.resize(decision.lanes);
-            shard.scheduler.set_lanes(decision.lanes);
-            shard.resident_lanes = decision.lanes;
+        Some(ControlPlan { device, decision })
+    }
+
+    /// Committer-side half: apply a decided operating point. A lane
+    /// change resizes the persistent pool and re-targets the scheduler in
+    /// place — the arena and scheduler scratch survive, so
+    /// reconfiguration does not reintroduce hot-path allocation.
+    fn apply_control(&mut self, plan: &ControlPlan) {
+        let shard = &mut self.shards[plan.device];
+        if plan.decision.lanes != shard.resident_lanes {
+            shard.pool.resize(plan.decision.lanes);
+            shard.scheduler.set_lanes(plan.decision.lanes);
+            shard.resident_lanes = plan.decision.lanes;
         }
-        shard.resident_depth = decision.depth;
+        shard.resident_depth = plan.decision.depth;
     }
 
     /// Collect completions for one shard until at most `allowed` rounds

@@ -1,0 +1,274 @@
+//! The append-only cluster decision journal.
+//!
+//! Every round the cluster committer commits (strictly in sequencer ticket
+//! order — see [`crate::coordinator::cluster`]) appends ONE record here:
+//! the node's plan digest, its lane map, controller reconfiguration
+//! counters, and any placement decision (tenant migration, node down/up)
+//! the committer made at that round boundary. The journal is the cluster
+//! tier's source of truth: `stgpu replay <journal>` re-executes the header
+//! configuration through the serial path and asserts a bitwise-identical
+//! digest, which is what makes parallel planning testable against serial
+//! planning (the PR 4/5 `depth=1` / `adaptive=false` equivalence trick,
+//! promoted to an architectural invariant).
+//!
+//! ## On-disk format
+//!
+//! A flat sequence of length-prefixed, checksummed JSON records:
+//!
+//! ```text
+//! [len: u32 LE] [body: `len` bytes of compact JSON] [fnv1a32(body): u32 LE]
+//! ```
+//!
+//! * The JSON body is emitted by [`crate::util::json::Json`], whose object
+//!   maps are `BTreeMap`s — key order (and therefore the byte stream) is a
+//!   pure function of the record's content.
+//! * The running **digest** is FNV-1a-64 over every framed byte in append
+//!   order. Two journals are bitwise identical iff their digests and
+//!   lengths match; the digest alone is what replay compares.
+//! * Record kinds (the `"kind"` field): `header` (the full run
+//!   configuration — a journal is self-contained for replay), `round` (one
+//!   per committed ticket), `migrate`, `node_down`, `node_up`, `summary`.
+//!
+//! Determinism contract: the append/decode paths are annotated
+//! `// lint: pure` — no clock, no RNG, no `HashMap` iteration (the xtask
+//! lint's `pure-clock` and `pure-map-iter` rules enforce both). Records
+//! must only ever contain values that are themselves deterministic
+//! functions of the run configuration: relative times, counts, digests —
+//! never wall-clock timestamps.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// FNV-1a 64-bit offset basis (the running-digest seed).
+pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+const FNV32_OFFSET: u32 = 0x811c_9dc5;
+const FNV32_PRIME: u32 = 0x0100_0193;
+
+/// Fold `bytes` into a running FNV-1a-64 hash (seed with
+/// [`FNV64_OFFSET`]). Used for the journal digest and for plan digests.
+// lint: pure
+pub fn fnv1a64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// FNV-1a-32 of `bytes` — the per-record checksum.
+// lint: pure
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h = FNV32_OFFSET;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(FNV32_PRIME);
+    }
+    h
+}
+
+/// An append-only decision journal: parsed records plus the exact framed
+/// byte stream and its running digest.
+pub struct Journal {
+    records: Vec<Json>,
+    bytes: Vec<u8>,
+    digest: u64,
+}
+
+impl Default for Journal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Journal {
+    pub fn new() -> Self {
+        Self { records: Vec::new(), bytes: Vec::new(), digest: FNV64_OFFSET }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[Json] {
+        &self.records
+    }
+
+    /// The framed byte stream exactly as it would be written to disk.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Running FNV-1a-64 over every framed byte appended so far.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    pub fn digest_hex(&self) -> String {
+        format!("{:016x}", self.digest)
+    }
+
+    /// Append one record: frame it (length prefix + FNV-1a-32 checksum)
+    /// and fold the frame into the running digest.
+    // lint: pure
+    pub fn append(&mut self, record: Json) {
+        let body = record.to_string().into_bytes();
+        let len = body.len() as u32;
+        let sum = fnv1a32(&body);
+        let at = self.bytes.len();
+        self.bytes.extend_from_slice(&len.to_le_bytes());
+        self.bytes.extend_from_slice(&body);
+        self.bytes.extend_from_slice(&sum.to_le_bytes());
+        self.digest = fnv1a64(self.digest, &self.bytes[at..]);
+        self.records.push(record);
+    }
+
+    /// Decode a framed byte stream, verifying every record's length prefix
+    /// and checksum. The returned journal preserves the input bytes
+    /// verbatim (records are *parsed from*, never re-encoded into, the
+    /// stream — float formatting round-trips are not assumed).
+    // lint: pure
+    pub fn decode(bytes: &[u8]) -> Result<Journal, String> {
+        let mut records = Vec::new();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let rec = records.len();
+            if i + 4 > bytes.len() {
+                return Err(format!("record {rec}: truncated length prefix at byte {i}"));
+            }
+            let len =
+                u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]) as usize;
+            i += 4;
+            if i + len + 4 > bytes.len() {
+                return Err(format!("record {rec}: body/checksum truncated (len {len})"));
+            }
+            let body = &bytes[i..i + len];
+            i += len;
+            let want =
+                u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
+            i += 4;
+            let got = fnv1a32(body);
+            if got != want {
+                return Err(format!(
+                    "record {rec}: checksum mismatch (stored {want:08x}, computed {got:08x})"
+                ));
+            }
+            let text = std::str::from_utf8(body)
+                .map_err(|e| format!("record {rec}: body is not UTF-8: {e}"))?;
+            let json = Json::parse(text).map_err(|e| format!("record {rec}: {e}"))?;
+            records.push(json);
+        }
+        let digest = fnv1a64(FNV64_OFFSET, bytes);
+        Ok(Journal { records, bytes: bytes.to_vec(), digest })
+    }
+
+    /// Write the framed stream to `path`, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, &self.bytes)
+    }
+
+    /// Read and verify a journal file.
+    pub fn read_from(path: &Path) -> Result<Journal, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a32(b""), 0x811c_9dc5);
+        assert_eq!(fnv1a32(b"a"), 0xe40c_292c);
+        assert_eq!(fnv1a64(FNV64_OFFSET, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(FNV64_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    fn sample() -> Journal {
+        let mut j = Journal::new();
+        j.append(Json::obj(vec![
+            ("kind", Json::str("header")),
+            ("nodes", Json::num(4)),
+            ("round_s", Json::num(0.0025)),
+        ]));
+        j.append(Json::obj(vec![
+            ("kind", Json::str("round")),
+            ("ticket", Json::num(0)),
+            ("plan", Json::str("00ff00ff00ff00ff")),
+        ]));
+        j.append(Json::obj(vec![
+            ("kind", Json::str("summary")),
+            ("completed", Json::num(128)),
+        ]));
+        j
+    }
+
+    #[test]
+    fn round_trips_through_decode_bit_for_bit() {
+        let j = sample();
+        let back = Journal::decode(j.bytes()).expect("decode");
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.bytes(), j.bytes());
+        assert_eq!(back.digest(), j.digest());
+        assert_eq!(back.digest_hex(), j.digest_hex());
+        for (a, b) in back.records().iter().zip(j.records()) {
+            assert_eq!(a.to_string(), b.to_string());
+        }
+    }
+
+    #[test]
+    fn digest_is_a_pure_function_of_the_records() {
+        let (a, b) = (sample(), sample());
+        assert_eq!(a.digest_hex(), b.digest_hex());
+        let mut c = Journal::new();
+        c.append(Json::obj(vec![("kind", Json::str("header"))]));
+        assert_ne!(a.digest_hex(), c.digest_hex());
+    }
+
+    #[test]
+    fn corrupted_body_is_rejected_by_the_checksum() {
+        let j = sample();
+        let mut bytes = j.bytes().to_vec();
+        // Flip a byte inside the first record's JSON body (past the
+        // 4-byte length prefix).
+        bytes[6] ^= 0x20;
+        let err = Journal::decode(&bytes).expect_err("corruption must be caught");
+        assert!(err.contains("checksum"), "got: {err}");
+    }
+
+    #[test]
+    fn truncated_stream_is_rejected() {
+        let j = sample();
+        let bytes = j.bytes();
+        let err = Journal::decode(&bytes[..bytes.len() - 3]).expect_err("truncation");
+        assert!(err.contains("truncated"), "got: {err}");
+        let err = Journal::decode(&bytes[..2]).expect_err("short prefix");
+        assert!(err.contains("truncated"), "got: {err}");
+    }
+
+    #[test]
+    fn write_and_read_round_trip_on_disk() {
+        let j = sample();
+        let dir = std::env::temp_dir().join("stgpu-journal-test");
+        let path = dir.join("sub").join("j.bin");
+        j.write_to(&path).expect("write");
+        let back = Journal::read_from(&path).expect("read");
+        assert_eq!(back.digest_hex(), j.digest_hex());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

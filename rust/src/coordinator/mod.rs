@@ -43,12 +43,21 @@
 //!   (`stgpu tune`): budgeted grid + local-refinement search against
 //!   gpusim ground truth, emitting a validated `[server]`/`[controller]`
 //!   TOML fragment and a JSON leaderboard.
+//! * [`journal`] — the append-only cluster decision journal:
+//!   length-prefixed, checksummed JSON records under a running FNV-1a-64
+//!   digest; `stgpu replay` re-executes a journal and diffs digests.
+//! * [`cluster`] — the cluster tier: a sequencer issuing round tickets, N
+//!   in-process node workers (each a full scheduler/controller stack),
+//!   and a committer applying results strictly in ticket order into the
+//!   journal, with tenant migration on hotspot and node failure/rejoin.
 
 pub mod batcher;
+pub mod cluster;
 pub mod controller;
 pub mod costmodel;
 pub mod driver;
 pub mod fusion_cache;
+pub mod journal;
 pub mod lanepool;
 pub mod monitor;
 pub mod placement;
@@ -61,15 +70,17 @@ pub mod tenant;
 pub mod tuner;
 
 pub use batcher::{BatcherStats, DynamicBatcher, Launch, PaddingPolicy};
+pub use cluster::{replay_journal, run_cluster, ClusterOpts, ClusterReport, ReplayOutcome};
 pub use controller::{
     AdaptiveController, ControlSignals, ControllerParams, Decision, SignalTracker,
 };
 pub use costmodel::{CostModel, SharedCostModel};
-pub use driver::{Coordinator, RoundArena, RoundOutcome};
+pub use driver::{Coordinator, ControlPlan, RoundArena, RoundOutcome};
 pub use fusion_cache::{FusionCache, FusionCacheStats, FusionKey, WeightSet};
 pub use lanepool::{Completion, LanePool, LaunchExecutor, PjrtExecutor, WorkItem};
+pub use journal::{fnv1a32, fnv1a64, Journal};
 pub use monitor::{Eviction, MonitorConfig, SloMonitor};
-pub use placement::{place, DevicePlacer, Placement};
+pub use placement::{place, ClusterPlacer, DevicePlacer, Placement};
 pub use protocol::{
     ItemRunner, LaneProtocol, LaneTagged, ProtoJoin, ProtoPayload, ProtoReceiver, ProtoSender,
     StdEnv, SyncEnv,

@@ -21,6 +21,19 @@
 //! The placer is generic over the class key (`ShapeClass` in the
 //! coordinator, GEMM `class_key()` tuples in the simulator pool) and fully
 //! deterministic: identical inputs always produce identical assignments.
+//!
+//! Two layers build on the raw [`place`] function:
+//!
+//! * [`DevicePlacer`] — per-device live accounting across the
+//!   eviction/re-admission lifecycle, with a class-affinity index (class →
+//!   device → active member count) that is swept on release so re-admission
+//!   never chases a device that no longer hosts the class.
+//! * [`ClusterPlacer`] — the cluster tier's view: the same placer with a
+//!   node liveness mask on top, plus the three cluster-only moves —
+//!   forced migration ([`ClusterPlacer::migrate`], the hotspot response),
+//!   fail-stop displacement ([`ClusterPlacer::set_down`]), and rejoin
+//!   re-homing ([`ClusterPlacer::rehome`]) through the existing readmit
+//!   path restricted to live nodes.
 
 use std::collections::BTreeMap;
 use std::hash::Hash;
@@ -152,16 +165,32 @@ pub struct DevicePlacer<K: Ord + Eq + Hash + Clone> {
     items: Vec<(K, f64)>,
     active: Vec<bool>,
     placement: Placement,
+    /// class → device → count of *active* members of that class on that
+    /// device. Entries are swept as they hit zero (on release/migration),
+    /// so a key's presence means the device genuinely hosts the class —
+    /// re-admission affinity reads this instead of scanning every tenant,
+    /// and can never chase a device the class has fully left.
+    class_index: BTreeMap<K, BTreeMap<usize, usize>>,
 }
 
 impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
     /// Place `tenants` — `(class, expected per-request load)` — on
     /// `n_devices`.
     pub fn new(tenants: &[(K, f64)], n_devices: usize) -> Self {
+        let placement = place(tenants, n_devices);
+        let mut class_index: BTreeMap<K, BTreeMap<usize, usize>> = BTreeMap::new();
+        for (i, (k, _)) in tenants.iter().enumerate() {
+            *class_index
+                .entry(k.clone())
+                .or_default()
+                .entry(placement.device_of[i])
+                .or_insert(0) += 1;
+        }
         Self {
             items: tenants.to_vec(),
             active: vec![true; tenants.len()],
-            placement: place(tenants, n_devices),
+            placement,
+            class_index,
         }
     }
 
@@ -189,9 +218,24 @@ impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
         self.items.get(tenant).map_or(0.0, |(_, l)| l.max(0.0))
     }
 
+    /// A tenant's load weight as the placer accounts it.
+    pub fn weight_of(&self, tenant: usize) -> f64 {
+        self.weight(tenant)
+    }
+
+    /// The class-affinity index: class → device → active member count.
+    /// Exposed for the placement-invariant property tests.
+    pub fn class_index(&self) -> &BTreeMap<K, BTreeMap<usize, usize>> {
+        &self.class_index
+    }
+
     /// Release an evicted tenant's load from its device. The tenant keeps
     /// its historical `device_of` entry (callers still drain its queues
-    /// there) but stops counting toward the shard's load. Idempotent.
+    /// there) but stops counting toward the shard's load, and its class
+    /// index entry is decremented — swept entirely when it was the last
+    /// active member of its class on that device, so affinity re-admission
+    /// under an eviction storm never lands on a device the class has
+    /// actually left. Idempotent.
     pub fn release(&mut self, tenant: usize) {
         if tenant >= self.items.len() || !self.active[tenant] {
             return;
@@ -199,6 +243,18 @@ impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
         self.active[tenant] = false;
         let d = self.placement.device_of[tenant];
         self.placement.load[d] = (self.placement.load[d] - self.weight(tenant)).max(0.0);
+        let class = self.items[tenant].0.clone();
+        if let Some(devices) = self.class_index.get_mut(&class) {
+            if let Some(n) = devices.get_mut(&d) {
+                *n -= 1;
+                if *n == 0 {
+                    devices.remove(&d);
+                }
+            }
+            if devices.is_empty() {
+                self.class_index.remove(&class);
+            }
+        }
     }
 
     /// Re-admit a released tenant: it re-joins the least-loaded device
@@ -207,14 +263,28 @@ impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
     /// class has no active member left. Returns the chosen device.
     /// A still-active tenant is a no-op returning its current device.
     pub fn readmit(&mut self, tenant: usize) -> usize {
+        self.readmit_where(tenant, |_| true)
+    }
+
+    /// [`DevicePlacer::readmit`] restricted to devices for which `allowed`
+    /// returns true — the cluster layer passes node liveness here. Panics
+    /// if no device is allowed.
+    pub fn readmit_where(
+        &mut self,
+        tenant: usize,
+        allowed: impl Fn(usize) -> bool,
+    ) -> usize {
         assert!(tenant < self.items.len(), "unknown tenant {tenant}");
         if self.active[tenant] {
             return self.placement.device_of[tenant];
         }
-        let class = &self.items[tenant].0;
-        let class_device = (0..self.items.len())
-            .filter(|&i| i != tenant && self.active[i] && &self.items[i].0 == class)
-            .map(|i| self.placement.device_of[i])
+        // The tenant itself is inactive, so the index only holds peers.
+        let class_device = self
+            .class_index
+            .get(&self.items[tenant].0)
+            .into_iter()
+            .flat_map(|devices| devices.keys().copied())
+            .filter(|&d| allowed(d))
             .min_by(|&a, &b| {
                 self.placement.load[a]
                     .partial_cmp(&self.placement.load[b])
@@ -222,18 +292,42 @@ impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
                     .then(a.cmp(&b))
             });
         let d = class_device.unwrap_or_else(|| {
-            let mut best = 0;
+            let mut best: Option<usize> = None;
             for (i, &l) in self.placement.load.iter().enumerate() {
-                if l < self.placement.load[best] {
-                    best = i;
+                if !allowed(i) {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => l < self.placement.load[b],
+                };
+                if better {
+                    best = Some(i);
                 }
             }
-            best
+            best.expect("readmit_where: no device allowed")
         });
-        self.active[tenant] = true;
-        self.placement.device_of[tenant] = d;
-        self.placement.load[d] += self.weight(tenant);
+        self.activate_on(tenant, d);
         d
+    }
+
+    /// Force-place `tenant` on `device` — the cluster tier's migration
+    /// primitive. Releases it from wherever it is (if active) and
+    /// re-activates it on `device`, keeping load and class-index
+    /// accounting exact.
+    pub fn assign(&mut self, tenant: usize, device: usize) {
+        assert!(tenant < self.items.len(), "unknown tenant {tenant}");
+        assert!(device < self.placement.n_devices, "unknown device {device}");
+        self.release(tenant);
+        self.activate_on(tenant, device);
+    }
+
+    fn activate_on(&mut self, tenant: usize, device: usize) {
+        self.active[tenant] = true;
+        self.placement.device_of[tenant] = device;
+        self.placement.load[device] += self.weight(tenant);
+        let class = self.items[tenant].0.clone();
+        *self.class_index.entry(class).or_default().entry(device).or_insert(0) += 1;
     }
 
     /// Sum of active tenants' load weights. With real (positive) loads
@@ -246,6 +340,123 @@ impl<K: Ord + Eq + Hash + Clone> DevicePlacer<K> {
             .filter(|&i| self.active[i])
             .map(|i| self.weight(i))
             .sum()
+    }
+}
+
+/// The cluster tier's placement layer: a [`DevicePlacer`] whose "devices"
+/// are whole nodes, plus a liveness mask. All moves go through the
+/// per-device release/readmit machinery so load and class-affinity
+/// accounting stay exact across migrations, failures, and rejoins.
+#[derive(Debug)]
+pub struct ClusterPlacer<K: Ord + Eq + Hash + Clone> {
+    placer: DevicePlacer<K>,
+    live: Vec<bool>,
+}
+
+impl<K: Ord + Eq + Hash + Clone> ClusterPlacer<K> {
+    /// Place `tenants` — `(class, expected load)` — across `n_nodes` live
+    /// nodes.
+    pub fn new(tenants: &[(K, f64)], n_nodes: usize) -> Self {
+        Self { placer: DevicePlacer::new(tenants, n_nodes), live: vec![true; n_nodes] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn is_live(&self, node: usize) -> bool {
+        self.live.get(node).copied().unwrap_or(false)
+    }
+
+    /// The node currently hosting (or, for an inactive tenant, last
+    /// hosting) `tenant`.
+    pub fn node_of(&self, tenant: usize) -> usize {
+        self.placer.device_of(tenant)
+    }
+
+    pub fn weight_of(&self, tenant: usize) -> f64 {
+        self.placer.weight_of(tenant)
+    }
+
+    pub fn load_of(&self, node: usize) -> f64 {
+        self.placer.placement().load[node]
+    }
+
+    /// Active tenants resident on `node`, ascending.
+    pub fn tenants_on(&self, node: usize) -> Vec<usize> {
+        self.placer
+            .members(node)
+            .into_iter()
+            .filter(|&t| self.placer.is_active(t))
+            .collect()
+    }
+
+    pub fn inner(&self) -> &DevicePlacer<K> {
+        &self.placer
+    }
+
+    /// Move `tenant` to live node `dst` — the hotspot-migration primitive.
+    pub fn migrate(&mut self, tenant: usize, dst: usize) {
+        assert!(self.is_live(dst), "cannot migrate tenant {tenant} to dead node {dst}");
+        self.placer.assign(tenant, dst);
+    }
+
+    /// Fail-stop `node`: every resident tenant is released and re-placed
+    /// on a live node (class affinity first, least-loaded fallback).
+    /// Returns `(tenant, new_node)` per displaced tenant, ascending by
+    /// tenant. Panics if this would leave zero live nodes.
+    pub fn set_down(&mut self, node: usize) -> Vec<(usize, usize)> {
+        assert!(self.is_live(node), "node {node} is already down");
+        self.live[node] = false;
+        assert!(self.n_live() > 0, "cannot take the last live node down");
+        let displaced = self.tenants_on(node);
+        // Release the whole group first so the re-placement of the first
+        // displaced tenant does not chase a class peer that is itself
+        // about to be displaced from the same dead node.
+        for &t in &displaced {
+            self.placer.release(t);
+        }
+        displaced.into_iter().map(|t| (t, self.readmit_live(t))).collect()
+    }
+
+    /// Re-admit a rejoined node. Tenants do NOT move back automatically —
+    /// the committer re-homes them explicitly (journaled) via
+    /// [`ClusterPlacer::rehome`].
+    pub fn set_up(&mut self, node: usize) {
+        assert!(node < self.live.len(), "unknown node {node}");
+        self.live[node] = true;
+    }
+
+    /// Re-admit an inactive tenant on the best live node.
+    pub fn readmit_live(&mut self, tenant: usize) -> usize {
+        let live = self.live.clone();
+        self.placer.readmit_where(tenant, |n| live[n])
+    }
+
+    /// Re-run placement for a group of tenants together — the node-rejoin
+    /// path. The whole group is released before any member is re-admitted:
+    /// re-homing displaced tenants one at a time would anchor each to the
+    /// class peers displaced alongside it, and nothing would ever migrate
+    /// back to a rejoined (empty, least-loaded) node. Returns
+    /// `(tenant, from, to)` ascending by tenant; `from == to` means it
+    /// stayed put.
+    pub fn rehome_group(&mut self, tenants: &[usize]) -> Vec<(usize, usize, usize)> {
+        let mut sorted: Vec<usize> = tenants.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let froms: Vec<usize> = sorted.iter().map(|&t| self.node_of(t)).collect();
+        for &t in &sorted {
+            self.placer.release(t);
+        }
+        sorted
+            .into_iter()
+            .zip(froms)
+            .map(|(t, from)| (t, from, self.readmit_live(t)))
+            .collect()
     }
 }
 
@@ -384,5 +595,154 @@ mod tests {
         let d = p.readmit(1);
         let other = p.device_of(0);
         assert_ne!(d, other, "least-loaded fallback avoids the busy shard");
+    }
+
+    #[test]
+    fn release_sweeps_empty_class_index_entries() {
+        let items = [("a", 0.5), ("a", 0.5), ("b", 5.0), ("c", 2.0)];
+        let mut p = DevicePlacer::new(&items, 2);
+        let home = p.device_of(0);
+        assert_eq!(p.device_of(1), home, "class 'a' placed whole");
+        assert_eq!(p.class_index()["a"][&home], 2);
+
+        p.release(0);
+        assert_eq!(p.class_index()["a"][&home], 1, "one member left");
+        p.release(1);
+        assert!(p.class_index().get("a").is_none(), "empty class entry swept");
+
+        // Pile the remaining load onto the old home. With the stale entry
+        // swept, re-admission must fall back to the genuinely least-loaded
+        // device instead of chasing a device hosting zero 'a' tenants.
+        p.assign(2, home);
+        p.assign(3, home);
+        let d = p.readmit(0);
+        assert_ne!(d, home, "stale affinity entry was chased");
+    }
+
+    /// Seeded eviction/re-admission/migration storm asserting the
+    /// placement invariants after every step: the class index matches a
+    /// from-scratch recount (no stale or missing entries), per-device
+    /// loads sum to the active tenants' total weight, and re-admission
+    /// joins an active class peer whenever one exists.
+    #[test]
+    fn eviction_storm_preserves_placement_invariants() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0x5eed_cafe);
+        let n_devices = 4usize;
+        let items: Vec<(u32, f64)> =
+            (0..24).map(|i| (i as u32 % 6, 0.5 + rng.next_f64() * 3.0)).collect();
+        let mut p = DevicePlacer::new(&items, n_devices);
+        for step in 0..2000 {
+            let t = rng.gen_range(items.len() as u64) as usize;
+            match rng.gen_range(3) {
+                0 => p.release(t),
+                1 => {
+                    let expect_affinity =
+                        !p.is_active(t) && p.class_index().contains_key(&items[t].0);
+                    let d = p.readmit(t);
+                    if expect_affinity {
+                        let has_peer = (0..items.len()).any(|i| {
+                            i != t
+                                && p.is_active(i)
+                                && items[i].0 == items[t].0
+                                && p.device_of(i) == d
+                        });
+                        assert!(has_peer, "step {step}: readmit({t}) -> {d} has no class peer");
+                    }
+                }
+                _ => {
+                    let d = rng.gen_range(n_devices as u64) as usize;
+                    p.assign(t, d);
+                    assert!(p.is_active(t));
+                    assert_eq!(p.device_of(t), d);
+                }
+            }
+            // The index must equal a recount from scratch.
+            let mut want: BTreeMap<u32, BTreeMap<usize, usize>> = BTreeMap::new();
+            for (i, (k, _)) in items.iter().enumerate() {
+                if p.is_active(i) {
+                    *want.entry(*k).or_default().entry(p.device_of(i)).or_insert(0) += 1;
+                }
+            }
+            assert_eq!(p.class_index(), &want, "step {step}: class index drifted");
+            // Load accounting stays exact (modulo float error).
+            let dev_sum: f64 = p.placement().load.iter().sum();
+            assert!(
+                (dev_sum - p.active_load()).abs() < 1e-6,
+                "step {step}: device loads {dev_sum} vs active {}",
+                p.active_load()
+            );
+            assert!(p.placement().load.iter().all(|&l| l >= 0.0), "step {step}: negative load");
+        }
+        // Idempotence at the end of the storm.
+        let _ = p.readmit(0);
+        let before = p.active_load();
+        p.release(0);
+        p.release(0);
+        assert!((before - p.active_load() - p.weight_of(0)).abs() < 1e-6);
+        let d = p.readmit(0);
+        assert_eq!(p.readmit(0), d, "re-admitting an active tenant is a no-op");
+        assert!((p.active_load() - before).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cluster_set_down_displaces_and_rejoin_rehomes() {
+        // 4 classes x 2 tenants across 4 nodes: each class whole per node.
+        let items: Vec<(u32, f64)> = (0..8).map(|i| (i as u32 % 4, 1.0)).collect();
+        let mut c = ClusterPlacer::new(&items, 4);
+        assert_eq!((c.n_nodes(), c.n_live()), (4, 4));
+        let victim = c.node_of(0);
+        let residents = c.tenants_on(victim);
+        assert!(!residents.is_empty());
+
+        let moves = c.set_down(victim);
+        assert!(!c.is_live(victim));
+        assert_eq!(c.n_live(), 3);
+        assert_eq!(moves.iter().map(|&(t, _)| t).collect::<Vec<_>>(), residents);
+        for &(t, to) in &moves {
+            assert_ne!(to, victim, "tenant {t} placed on the dead node");
+            assert!(c.is_live(to));
+            assert_eq!(c.node_of(t), to);
+        }
+        assert!(c.tenants_on(victim).is_empty());
+        assert_eq!(c.load_of(victim), 0.0);
+        // The displaced class travelled together (affinity survives).
+        assert_eq!(moves[0].1, moves[1].1);
+
+        c.set_up(victim);
+        assert_eq!(c.n_live(), 4);
+        // Rejoined node is empty, hence least-loaded: re-homing the
+        // displaced group pulls it back there.
+        let group: Vec<usize> = moves.iter().map(|&(t, _)| t).collect();
+        let back = c.rehome_group(&group);
+        for &(t, from, to) in &back {
+            assert_eq!(from, moves.iter().find(|&&(mt, _)| mt == t).unwrap().1);
+            assert_eq!(to, victim, "tenant {t} returned to the rejoined node");
+        }
+    }
+
+    #[test]
+    fn cluster_migrate_moves_load_between_nodes() {
+        let items: Vec<(u32, f64)> = (0..4).map(|i| (i as u32, 1.0)).collect();
+        let mut c = ClusterPlacer::new(&items, 2);
+        let src = c.node_of(0);
+        let dst = 1 - src;
+        let (ls, ld) = (c.load_of(src), c.load_of(dst));
+        c.migrate(0, dst);
+        assert_eq!(c.node_of(0), dst);
+        assert!((c.load_of(src) - (ls - 1.0)).abs() < 1e-9);
+        assert!((c.load_of(dst) - (ld + 1.0)).abs() < 1e-9);
+        // Migrating to the current home leaves the totals unchanged.
+        c.migrate(0, dst);
+        assert!((c.load_of(dst) - (ld + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead node")]
+    fn cluster_migrate_to_a_dead_node_is_rejected() {
+        let items: Vec<(u32, f64)> = (0..4).map(|i| (i as u32, 1.0)).collect();
+        let mut c = ClusterPlacer::new(&items, 2);
+        let _ = c.set_down(0);
+        c.migrate(1, 0);
     }
 }

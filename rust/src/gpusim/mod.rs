@@ -10,7 +10,8 @@
 //! * [`memory`] — device memory accounting (paper Figure 5) + allocator.
 //! * [`trace`] — schedule trace capture and Gantt rendering (Figure 6).
 //! * [`pool`] — multi-device pools: shard tenants across N devices
-//!   (least-loaded, class-affine) and aggregate throughput.
+//!   (least-loaded, class-affine) and aggregate throughput; a multi-node
+//!   mode stacks the same sharding one level up for cluster benches.
 //! * [`classes`] — interned fusion-group classes for the vectorized engine.
 //!
 //! [`engine`] ships two implementations behind one [`run`] entry point: the
@@ -33,5 +34,5 @@ pub use classes::{ClassId, ClassTable, WorkloadClassRef};
 pub use device::DeviceSpec;
 pub use engine::{run, Engine, Policy, SimConfig, SimReport, TenantWorkload, WorkloadClass};
 pub use kernel::{GemmShape, KernelDesc, TenantId};
-pub use pool::{run_pool, PoolReport};
+pub use pool::{run_multinode, run_pool, MultiNodeReport, PoolReport};
 pub use trace::{Trace, TraceEvent};

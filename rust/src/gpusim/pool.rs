@@ -79,6 +79,87 @@ impl PoolReport {
     }
 }
 
+/// Result of a multi-node run: one [`PoolReport`] per node plus the
+/// tenant→node assignment (global tenant index → node id). Nodes are
+/// independent machines — they share no devices — so cluster makespan is
+/// the slowest node's makespan, mirroring [`PoolReport::makespan`] one
+/// level up. `benches/fig14_cluster_scaleout.rs` uses this as the
+/// simulator-side ground truth for the cluster tier
+/// ([`crate::coordinator::cluster`]).
+#[derive(Debug, Clone)]
+pub struct MultiNodeReport {
+    pub node_of: Vec<usize>,
+    pub per_node: Vec<PoolReport>,
+}
+
+impl MultiNodeReport {
+    pub fn n_nodes(&self) -> usize {
+        self.per_node.len()
+    }
+
+    /// Cluster makespan: nodes run concurrently, so the cluster finishes
+    /// when the slowest node does.
+    pub fn makespan(&self) -> f64 {
+        self.per_node
+            .iter()
+            .map(PoolReport::makespan)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.per_node.iter().map(PoolReport::total_flops).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.per_node.iter().map(PoolReport::total_completed).sum()
+    }
+
+    pub fn kernel_launches(&self) -> u64 {
+        self.per_node.iter().map(PoolReport::kernel_launches).sum()
+    }
+
+    /// Aggregate FLOP throughput of the whole cluster.
+    pub fn throughput_flops(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.total_flops() / span
+        }
+    }
+}
+
+/// Run `workloads` across `n_nodes` nodes of `devices_per_node` devices
+/// each. Tenants shard across nodes by the same least-loaded/class-affine
+/// rule used within a node, then each node runs its shard as an
+/// independent device pool.
+pub fn run_multinode(
+    cfg: &SimConfig,
+    workloads: &[TenantWorkload],
+    n_nodes: usize,
+    devices_per_node: usize,
+) -> MultiNodeReport {
+    assert!(n_nodes >= 1, "need at least one node");
+    assert!(devices_per_node >= 1, "need at least one device per node");
+    let items: Vec<_> = workloads
+        .iter()
+        .map(|w| (w.class_ref(), w.total_flops()))
+        .collect();
+    let node_of = place(&items, n_nodes).device_of;
+    let per_node = (0..n_nodes)
+        .map(|node| {
+            let shard: Vec<TenantWorkload> = workloads
+                .iter()
+                .zip(&node_of)
+                .filter(|(_, &n)| n == node)
+                .map(|(w, _)| w.clone())
+                .collect();
+            run_pool(cfg, &shard, devices_per_node)
+        })
+        .collect();
+    MultiNodeReport { node_of, per_node }
+}
+
 /// Run `workloads` across a pool of `n_devices` copies of `cfg.spec`,
 /// sharding tenants least-loaded with class affinity.
 pub fn run_pool(cfg: &SimConfig, workloads: &[TenantWorkload], n_devices: usize) -> PoolReport {
@@ -175,6 +256,42 @@ mod tests {
         for n in [1usize, 2, 3] {
             assert_eq!(place(&owned, n).device_of, place(&borrowed, n).device_of);
         }
+    }
+
+    #[test]
+    fn multinode_conserves_inferences_and_flops() {
+        let w = sgemm_tenants(16, 3, GemmShape::SQUARE_256);
+        let expected_flops: f64 = w.iter().map(|x| x.total_flops()).sum();
+        for nodes in [1usize, 2, 4] {
+            let r = run_multinode(&cfg(Policy::SpaceTime { max_batch: 8 }), &w, nodes, 2);
+            assert_eq!(r.n_nodes(), nodes);
+            assert_eq!(r.total_completed(), 48, "nodes={nodes}");
+            assert!((r.total_flops() - expected_flops).abs() < 1e-3);
+            assert_eq!(r.node_of.len(), 16);
+            assert!(r.node_of.iter().all(|&n| n < nodes));
+        }
+    }
+
+    #[test]
+    fn one_node_multinode_matches_plain_pool() {
+        let w = sgemm_tenants(8, 4, GemmShape::RESNET18_CONV2_2);
+        let multi = run_multinode(&cfg(Policy::SpaceTime { max_batch: 16 }), &w, 1, 3);
+        let pool = run_pool(&cfg(Policy::SpaceTime { max_batch: 16 }), &w, 3);
+        assert_eq!(multi.makespan(), pool.makespan());
+        assert_eq!(multi.total_completed(), pool.total_completed());
+        assert_eq!(multi.kernel_launches(), pool.kernel_launches());
+    }
+
+    #[test]
+    fn multinode_makespan_is_max_of_nodes_and_scaling_helps() {
+        let w = sgemm_tenants(24, 4, GemmShape::SQUARE_256);
+        let r4 = run_multinode(&cfg(Policy::SpaceTime { max_batch: 8 }), &w, 4, 2);
+        let per: Vec<f64> = r4.per_node.iter().map(PoolReport::makespan).collect();
+        assert_eq!(r4.makespan(), per.iter().cloned().fold(0.0, f64::max));
+        // More nodes → shorter makespan for a uniform workload.
+        let r1 = run_multinode(&cfg(Policy::SpaceTime { max_batch: 8 }), &w, 1, 2);
+        assert!(r4.makespan() < r1.makespan());
+        assert!(r4.throughput_flops() > r1.throughput_flops());
     }
 
     #[test]

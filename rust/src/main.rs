@@ -11,7 +11,13 @@
 //!   Run the V100 discrete-event simulator under a multiplexing policy;
 //!   `--devices > 1` shards tenants across a device pool; `--engine
 //!   legacy` selects the per-event reference engine (the equivalence
-//!   oracle) instead of the default struct-of-arrays engine.
+//!   oracle) instead of the default struct-of-arrays engine. With
+//!   `--cluster N [--rounds R] [--seed S] [--journal F] [--serial]` it
+//!   runs the cluster tier instead and can persist the decision journal.
+//! * `replay   <journal>`
+//!   Re-execute a decision journal's configuration through the serial
+//!   path and verify the regenerated journal is bitwise identical
+//!   (exit 1 on digest mismatch).
 //! * `tune     [--workload fig12] [--budget N] [--out-toml F]
 //!   [--out-leaderboard F] [--check-baseline F]`
 //!   Offline autotuner: search (lanes, pipeline depth, EDF slack,
@@ -33,25 +39,31 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use stgpu::config::{SchedulerKind, ServerConfig};
-use stgpu::coordinator::{tuner, Coordinator};
+use stgpu::coordinator::{
+    replay_journal, run_cluster, tuner, ClusterOpts, Coordinator, Journal,
+};
 use stgpu::gpusim::{self, DeviceSpec, Engine, GemmShape, Policy, SimConfig};
 use stgpu::runtime::Manifest;
-use stgpu::server::{ServeOpts, Server, StatusEndpoint};
+use stgpu::server::{aggregate_nodes, ServeOpts, Server, StatusEndpoint};
+use stgpu::util::json::Json;
 use stgpu::util::bench::{fmt_flops, fmt_secs, Table};
 use stgpu::util::prng::Rng;
 use stgpu::workload::sgemm_tenants;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (cmd, flags) = parse(&args);
+    let (cmd, positional, flags) = parse(&args);
     let code = match cmd.as_deref() {
         Some("serve") => cmd_serve(&flags),
         Some("simulate") => cmd_simulate(&flags),
+        Some("replay") => cmd_replay(&positional, &flags),
         Some("tune") => cmd_tune(&flags),
         Some("artifacts") => cmd_artifacts(&flags),
         Some("trace") => cmd_trace(&flags),
         _ => {
-            eprintln!("usage: stgpu <serve|simulate|tune|artifacts|trace> [--flag value]...");
+            eprintln!(
+                "usage: stgpu <serve|simulate|replay|tune|artifacts|trace> [--flag value]..."
+            );
             eprintln!("{}", include_str!("main_help.txt"));
             2
         }
@@ -59,9 +71,11 @@ fn main() {
     std::process::exit(code);
 }
 
-/// `--flag value` pairs after the subcommand; bare `--flag` maps to "true".
-fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+/// `--flag value` pairs after the subcommand; bare `--flag` maps to "true";
+/// non-flag arguments collect as positionals (e.g. `replay <journal>`).
+fn parse(args: &[String]) -> (Option<String>, Vec<String>, HashMap<String, String>) {
     let mut flags = HashMap::new();
+    let mut positional = Vec::new();
     let cmd = args.first().cloned();
     let mut i = 1;
     while i < args.len() {
@@ -74,11 +88,11 @@ fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
             };
             flags.insert(name.to_string(), val);
         } else {
-            eprintln!("ignoring stray argument {:?}", args[i]);
+            positional.push(args[i].clone());
         }
         i += 1;
     }
-    (cmd, flags)
+    (cmd, positional, flags)
 }
 
 fn flag<'a>(flags: &'a HashMap<String, String>, name: &str, default: &'a str) -> &'a str {
@@ -325,6 +339,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
 // ---------------------------------------------------------------------------
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    if flags.contains_key("cluster") {
+        return cmd_simulate_cluster(flags);
+    }
     let tenants: usize = flag(flags, "tenants", "8").parse().unwrap_or(8);
     let iters: u32 = flag(flags, "iters", "50").parse().unwrap_or(50);
     let max_batch: u32 = flag(flags, "max-batch", "64").parse().unwrap_or(64);
@@ -403,6 +420,137 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         report.fused_problems,
     );
     0
+}
+
+// ---------------------------------------------------------------------------
+
+/// `simulate --cluster N`: run the cluster tier (sequencer → node workers →
+/// in-order committer) instead of the raw device simulator, print per-node
+/// and aggregate statistics, and optionally persist the decision journal
+/// for `stgpu replay`.
+fn cmd_simulate_cluster(flags: &HashMap<String, String>) -> i32 {
+    let nodes: usize = match flag(flags, "cluster", "2").parse() {
+        Ok(n) => n,
+        Err(_) => {
+            eprintln!("simulate: bad --cluster value (expected a node count)");
+            return 2;
+        }
+    };
+    let mut opts = ClusterOpts::demo(nodes);
+    if let Some(r) = flags.get("rounds") {
+        match r.parse() {
+            Ok(v) => opts.rounds = v,
+            Err(_) => {
+                eprintln!("simulate: bad --rounds {r:?}");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = flags.get("seed") {
+        match s.parse() {
+            Ok(v) => opts.seed = v,
+            Err(_) => {
+                eprintln!("simulate: bad --seed {s:?}");
+                return 2;
+            }
+        }
+    }
+    let serial = flag(flags, "serial", "false") == "true";
+    let report = match run_cluster(&opts, !serial) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simulate: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "cluster: nodes={} rounds={} mode={} seed={}",
+        opts.nodes,
+        opts.rounds,
+        if serial { "serial" } else { "parallel" },
+        opts.seed,
+    );
+    let mut table =
+        Table::new(&["node", "rounds", "offered", "completed", "dropped", "slo_att", "reconfigs"]);
+    for n in &report.nodes {
+        let att = if n.completed > 0 { n.hits as f64 / n.completed as f64 } else { 1.0 };
+        table.row(&[
+            n.node.to_string(),
+            n.rounds.to_string(),
+            n.offered.to_string(),
+            n.completed.to_string(),
+            n.dropped.to_string(),
+            format!("{:.1}%", att * 100.0),
+            n.reconfigs.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let per_node: Vec<Json> = report.nodes.iter().map(|n| n.to_json()).collect();
+    let agg = aggregate_nodes(&per_node);
+    println!(
+        "aggregate: offered={} completed={} dropped={} slo_attainment={:.4} goodput={:.1} req/s",
+        report.offered,
+        report.completed,
+        report.dropped,
+        agg.get("slo_attainment").and_then(Json::as_f64).unwrap_or(1.0),
+        report.goodput_rps(),
+    );
+    println!(
+        "journal: {} records, digest {}",
+        report.journal.records().len(),
+        report.journal.digest_hex(),
+    );
+    if let Some(path) = flags.get("journal") {
+        if let Err(e) = report.journal.write_to(std::path::Path::new(path)) {
+            eprintln!("simulate: cannot write journal {path}: {e}");
+            return 1;
+        }
+        println!("journal: wrote {path}");
+    }
+    0
+}
+
+// ---------------------------------------------------------------------------
+
+/// `replay <journal>`: re-execute a decision journal's recorded
+/// configuration through the deterministic serial path and fail unless the
+/// regenerated journal is bitwise identical to the file.
+fn cmd_replay(positional: &[String], flags: &HashMap<String, String>) -> i32 {
+    let path = match positional.first().map(String::as_str).or_else(|| {
+        flags.get("journal").map(String::as_str)
+    }) {
+        Some(p) => p,
+        None => {
+            eprintln!("replay: usage: stgpu replay <journal>");
+            return 2;
+        }
+    };
+    let journal = match Journal::read_from(std::path::Path::new(path)) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("replay: {e}");
+            return 1;
+        }
+    };
+    match replay_journal(&journal) {
+        Ok(out) => {
+            println!(
+                "replay: {} rounds x {} nodes; original digest {}, replayed digest {}",
+                out.rounds, out.nodes, out.original, out.replayed
+            );
+            if out.matches {
+                println!("replay: MATCH — journal is a faithful serial re-execution");
+                0
+            } else {
+                eprintln!("replay: MISMATCH — parallel commit order diverged from serial");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("replay: {e}");
+            1
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

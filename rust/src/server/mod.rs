@@ -5,4 +5,4 @@ pub mod frontend;
 pub mod status;
 
 pub use frontend::{Reply, ServeOpts, Server, ServerHandle};
-pub use status::StatusEndpoint;
+pub use status::{aggregate_nodes, StatusEndpoint};

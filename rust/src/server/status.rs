@@ -1,6 +1,11 @@
 //! Plaintext status endpoint: a minimal TCP listener that writes the
 //! current metrics snapshot as JSON to every connection and closes it
 //! (curl-able; no HTTP stack is vendored offline — DESIGN.md §7).
+//!
+//! The endpoint is generic over a snapshot *provider* closure
+//! ([`StatusEndpoint::start_with`]) so a cluster front-end can serve an
+//! aggregated view over per-node snapshots ([`aggregate_nodes`]) through
+//! the same listener the single-process server uses.
 
 use std::io::Write;
 use std::net::{TcpListener, ToSocketAddrs};
@@ -9,6 +14,50 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::server::frontend::ServerHandle;
+use crate::util::json::Json;
+
+/// Aggregate per-node status snapshots (shape of
+/// [`crate::coordinator::cluster::NodeSummary::to_json`]) into one
+/// cluster-level snapshot: counters sum, `busy_s` sums, and
+/// `slo_attainment` is recomputed from the summed hits/completed rather
+/// than averaged (nodes with more traffic weigh more).
+pub fn aggregate_nodes(nodes: &[Json]) -> Json {
+    fn get(j: &Json, k: &str) -> f64 {
+        j.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+    }
+    let mut offered = 0.0;
+    let mut completed = 0.0;
+    let mut hits = 0.0;
+    let mut misses = 0.0;
+    let mut dropped = 0.0;
+    let mut backlog = 0.0;
+    let mut busy_s = 0.0;
+    let mut reconfigs = 0.0;
+    for n in nodes {
+        offered += get(n, "offered");
+        completed += get(n, "completed");
+        hits += get(n, "hits");
+        misses += get(n, "misses");
+        dropped += get(n, "dropped");
+        backlog += get(n, "backlog");
+        busy_s += get(n, "busy_s");
+        reconfigs += get(n, "reconfigs");
+    }
+    let att = if completed > 0.0 { hits / completed } else { 1.0 };
+    Json::obj(vec![
+        ("nodes", Json::num(nodes.len() as f64)),
+        ("offered", Json::num(offered)),
+        ("completed", Json::num(completed)),
+        ("hits", Json::num(hits)),
+        ("misses", Json::num(misses)),
+        ("dropped", Json::num(dropped)),
+        ("backlog", Json::num(backlog)),
+        ("busy_s", Json::num(busy_s)),
+        ("reconfigs", Json::num(reconfigs)),
+        ("slo_attainment", Json::num(att)),
+        ("per_node", Json::Arr(nodes.to_vec())),
+    ])
+}
 
 /// Running status endpoint.
 pub struct StatusEndpoint {
@@ -21,6 +70,21 @@ impl StatusEndpoint {
     /// Bind and serve snapshots; `addr` may use port 0 for an ephemeral
     /// port (read back via [`StatusEndpoint::addr`]).
     pub fn start(addr: impl ToSocketAddrs, handle: ServerHandle) -> std::io::Result<Self> {
+        Self::start_with(addr, move || {
+            handle
+                .snapshot()
+                .map(|s| s.to_json().to_string())
+                .unwrap_or_else(|| "{\"error\":\"no snapshot\"}".into())
+        })
+    }
+
+    /// Bind and serve whatever `provider` returns per connection. This is
+    /// the seam the cluster tier uses to expose an [`aggregate_nodes`]
+    /// roll-up instead of a single shard's snapshot.
+    pub fn start_with(
+        addr: impl ToSocketAddrs,
+        provider: impl Fn() -> String + Send + 'static,
+    ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -32,10 +96,7 @@ impl StatusEndpoint {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((mut sock, _)) => {
-                            let body = handle
-                                .snapshot()
-                                .map(|s| s.to_json().to_string())
-                                .unwrap_or_else(|| "{\"error\":\"no snapshot\"}".into());
+                            let body = provider();
                             let _ = sock.write_all(body.as_bytes());
                             let _ = sock.write_all(b"\n");
                         }
@@ -67,5 +128,60 @@ impl Drop for StatusEndpoint {
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn node(offered: f64, completed: f64, hits: f64, busy_s: f64) -> Json {
+        Json::obj(vec![
+            ("node", Json::num(0.0)),
+            ("offered", Json::num(offered)),
+            ("completed", Json::num(completed)),
+            ("hits", Json::num(hits)),
+            ("misses", Json::num(completed - hits)),
+            ("dropped", Json::num(0.0)),
+            ("backlog", Json::num(offered - completed)),
+            ("busy_s", Json::num(busy_s)),
+            ("reconfigs", Json::num(1.0)),
+            ("slo_attainment", Json::num(if completed > 0.0 { hits / completed } else { 1.0 })),
+        ])
+    }
+
+    #[test]
+    fn aggregate_nodes_sums_counters_and_weighs_attainment_by_traffic() {
+        // Node 0: 100 completed, all hits. Node 1: 300 completed, none hit.
+        // A naive average of attainments would say 0.5; traffic-weighted
+        // aggregation must say 0.25.
+        let agg = aggregate_nodes(&[node(120.0, 100.0, 100.0, 0.5), node(310.0, 300.0, 0.0, 1.5)]);
+        assert_eq!(agg.get("nodes").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(agg.get("offered").and_then(Json::as_f64), Some(430.0));
+        assert_eq!(agg.get("completed").and_then(Json::as_f64), Some(400.0));
+        assert_eq!(agg.get("hits").and_then(Json::as_f64), Some(100.0));
+        assert_eq!(agg.get("backlog").and_then(Json::as_f64), Some(30.0));
+        assert!((agg.get("busy_s").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-12);
+        assert!((agg.get("slo_attainment").and_then(Json::as_f64).unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(agg.get("per_node").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+    }
+
+    #[test]
+    fn aggregate_of_no_nodes_is_empty_but_well_formed() {
+        let agg = aggregate_nodes(&[]);
+        assert_eq!(agg.get("nodes").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(agg.get("slo_attainment").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn start_with_serves_the_provider_string() {
+        let ep = StatusEndpoint::start_with("127.0.0.1:0", || "{\"ok\":true}".to_string())
+            .expect("bind ephemeral");
+        let mut sock = std::net::TcpStream::connect(ep.addr()).expect("connect");
+        let mut body = String::new();
+        sock.read_to_string(&mut body).expect("read snapshot");
+        assert_eq!(body, "{\"ok\":true}\n");
+        ep.stop();
     }
 }

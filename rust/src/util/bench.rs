@@ -191,6 +191,11 @@ pub struct BenchJson {
     p99_s: f64,
     /// Fraction of deadline-carrying requests that met their SLO.
     slo_attainment: Option<f64>,
+    /// The scale the headline number was measured at (devices for fig8,
+    /// simulated devices for fig13, nodes for fig14). Baseline comparison
+    /// (`scripts/bench_gate.py`) only compares runs at matching scale —
+    /// a 4-device throughput is not a regression floor for a 1-device run.
+    scale: Option<f64>,
 }
 
 impl BenchJson {
@@ -201,6 +206,7 @@ impl BenchJson {
             p50_s: 0.0,
             p99_s: 0.0,
             slo_attainment: None,
+            scale: None,
         }
     }
 
@@ -224,6 +230,11 @@ impl BenchJson {
         self
     }
 
+    pub fn scale(mut self, v: f64) -> Self {
+        self.scale = Some(v);
+        self
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj(vec![
@@ -235,6 +246,7 @@ impl BenchJson {
                 "slo_attainment",
                 self.slo_attainment.map_or(Json::Null, Json::num),
             ),
+            ("scale", self.scale.map_or(Json::Null, Json::num)),
         ])
     }
 
@@ -305,6 +317,7 @@ mod tests {
             .p50_s(0.001)
             .p99_s(0.005)
             .slo_attainment(0.99)
+            .scale(4.0)
             .to_json();
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("name").unwrap().as_str(), Some("fig0_test"));
@@ -312,11 +325,16 @@ mod tests {
         assert_eq!(back.get("p50").unwrap().as_f64(), Some(0.001));
         assert_eq!(back.get("p99").unwrap().as_f64(), Some(0.005));
         assert_eq!(back.get("slo_attainment").unwrap().as_f64(), Some(0.99));
-        // Unset attainment serializes as null.
+        assert_eq!(back.get("scale").unwrap().as_f64(), Some(4.0));
+        // Unset attainment and scale serialize as null.
         let j2 = BenchJson::new("fig0_na").to_json();
         let back2 = crate::util::json::Json::parse(&j2.to_string()).unwrap();
         assert!(matches!(
             back2.get("slo_attainment"),
+            Some(crate::util::json::Json::Null)
+        ));
+        assert!(matches!(
+            back2.get("scale"),
             Some(crate::util::json::Json::Null)
         ));
     }

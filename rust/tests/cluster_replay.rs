@@ -1,0 +1,102 @@
+//! Tier-1 integration tests for the cluster tier's determinism contract:
+//! a parallel (worker-pool) cluster run must produce a decision journal
+//! that is *bitwise identical* to a serial re-execution of the same
+//! configuration — including under hotspot-driven tenant migration and a
+//! mid-run node kill/rejoin — and `replay_journal` must prove it after a
+//! round trip through the on-disk framing.
+
+use stgpu::coordinator::cluster::{ClusterOpts, FaultOpts, HotspotOpts};
+use stgpu::coordinator::{replay_journal, run_cluster, Journal};
+use stgpu::util::json::Json;
+
+/// The ISSUE 8 acceptance check: replay of a 4-node parallel journal
+/// yields a bitwise-identical journal from the serial path.
+#[test]
+fn four_node_parallel_journal_replays_bitwise_identically() {
+    let mut opts = ClusterOpts::demo(4);
+    opts.rounds = 80;
+    let parallel = run_cluster(&opts, true).expect("parallel run");
+    let serial = run_cluster(&opts, false).expect("serial run");
+    assert_eq!(
+        parallel.journal.digest(),
+        serial.journal.digest(),
+        "parallel and serial digests diverged"
+    );
+    assert_eq!(parallel.journal.bytes(), serial.journal.bytes());
+
+    let out = replay_journal(&parallel.journal).expect("replay");
+    assert!(out.matches, "replay mismatch: {} vs {}", out.original, out.replayed);
+    assert_eq!(out.nodes, 4);
+}
+
+#[test]
+fn journal_survives_the_on_disk_round_trip() {
+    let mut opts = ClusterOpts::demo(2);
+    opts.rounds = 40;
+    let report = run_cluster(&opts, true).expect("run");
+    let dir = std::env::temp_dir().join(format!("stgpu_cluster_replay_{}", std::process::id()));
+    let path = dir.join("journal.bin");
+    report.journal.write_to(&path).expect("write journal");
+    let back = Journal::read_from(&path).expect("read journal");
+    assert_eq!(back.digest(), report.journal.digest());
+    assert_eq!(back.bytes(), report.journal.bytes());
+    assert_eq!(back.records().len(), report.journal.records().len());
+    let out = replay_journal(&back).expect("replay from disk");
+    assert!(out.matches);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Migration and fault events land in the journal as typed records, and
+/// the run conserves requests even while tenants are in transfer.
+#[test]
+fn migration_and_fault_records_replay_and_conserve() {
+    let mut opts = ClusterOpts::demo(3);
+    opts.rounds = 90;
+    // A near-zero utilization threshold forces the hotspot detector to
+    // fire as soon as it sustains; the hotspot window gives it material.
+    opts.migrate_util = 1e-9;
+    opts.migrate_sustain = 2;
+    opts.hotspot = Some(HotspotOpts { node: 0, from_round: 10, to_round: 50, factor: 4.0 });
+    opts.fault = Some(FaultOpts { node: 1, kill_round: 30, rejoin_round: 60 });
+    let parallel = run_cluster(&opts, true).expect("parallel run");
+    assert!(parallel.migrations >= 1, "hotspot never fired a migration");
+    assert_eq!(parallel.node_downs, 1);
+    assert_eq!(parallel.node_ups, 1);
+    assert!(parallel.conservation_ok(), "request conservation violated");
+
+    let kinds: Vec<&str> = parallel
+        .journal
+        .records()
+        .iter()
+        .filter_map(|r| r.get("kind").and_then(Json::as_str))
+        .collect();
+    assert!(kinds.contains(&"migrate"));
+    assert!(kinds.contains(&"node_down"));
+    assert!(kinds.contains(&"node_up"));
+    assert_eq!(kinds.first(), Some(&"header"));
+    assert_eq!(kinds.last(), Some(&"summary"));
+
+    let out = replay_journal(&parallel.journal).expect("replay");
+    assert!(
+        out.matches,
+        "journal with migration + kill/rejoin must still replay bitwise: {} vs {}",
+        out.original, out.replayed
+    );
+}
+
+/// A corrupted journal is rejected by the frame checksum, not silently
+/// replayed.
+#[test]
+fn corrupted_journal_fails_decode() {
+    let mut opts = ClusterOpts::demo(2);
+    opts.rounds = 20;
+    let report = run_cluster(&opts, false).expect("run");
+    let mut bytes = report.journal.bytes().to_vec();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let err = Journal::decode(&bytes).expect_err("corruption must not decode");
+    assert!(
+        err.contains("checksum mismatch") || err.contains("truncated"),
+        "unexpected error: {err}"
+    );
+}

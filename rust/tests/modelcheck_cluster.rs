@@ -1,0 +1,170 @@
+//! Schedule-exhaustive model checking of the cluster tier's
+//! sequencer → workers → committer ticket protocol.
+//!
+//! These tests instantiate the SAME generic
+//! [`stgpu::coordinator::cluster::WorkerPool`] the production cluster
+//! driver runs on `StdEnv` — but under [`ModelEnv`], where every channel
+//! operation is a decision point for the DFS schedule explorer. The trunk
+//! check asserts, on every interleaving:
+//!
+//! * no ticket is skipped or duplicated (the committed sequence is dense),
+//! * no result commits before all of its predecessors,
+//! * no worker or the committer gets stuck (the round always completes).
+//!
+//! The `mutation_*` tests re-introduce known-bad protocol variants and
+//! assert the checker CATCHES them: journaling results in arrival order
+//! (bypassing the reorder buffer), and issuing a ticket whose command is
+//! never dispatched (the stalled-round deadlock).
+
+use stgpu::coordinator::cluster::{
+    InOrderCommitter, Sequencer, TicketRunner, Ticketed, WorkerPool,
+};
+use stgpu::coordinator::protocol::ProtoPayload;
+use stgpu::util::modelcheck::{explore, CheckOpts, ModelEnv};
+
+struct MCmd {
+    ticket: u64,
+}
+
+impl ProtoPayload for MCmd {
+    fn fingerprint(&self) -> u64 {
+        self.ticket
+    }
+}
+
+struct MRes {
+    ticket: u64,
+    node: usize,
+}
+
+impl ProtoPayload for MRes {
+    fn fingerprint(&self) -> u64 {
+        self.ticket
+    }
+}
+
+impl Ticketed for MRes {
+    fn ticket(&self) -> u64 {
+        self.ticket
+    }
+}
+
+/// The model node worker: yields between taking a command and reporting
+/// its result — the window where a real node spends its round and where
+/// reordering happens.
+struct MNode {
+    node: usize,
+}
+
+impl TicketRunner<MCmd, MRes> for MNode {
+    fn run(&mut self, cmd: MCmd) -> MRes {
+        ModelEnv::yield_now();
+        MRes { ticket: cmd.ticket, node: self.node }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trunk protocol check (must pass on every schedule)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_ticket_protocol_commits_dense_and_in_order() {
+    // Three threads (driver + two node workers), two rounds. Preemption
+    // bound 2 (CHESS-style): nearly all real concurrency bugs surface
+    // within two preemptions.
+    let opts = CheckOpts { max_preemptions: 2, ..CheckOpts::default() };
+    let stats = explore("cluster-ticket-protocol", opts, || {
+        let mut pool: WorkerPool<ModelEnv, MCmd, MRes> =
+            WorkerPool::spawn(vec![MNode { node: 0 }, MNode { node: 1 }]);
+        let mut seq = Sequencer::new();
+        let mut com = InOrderCommitter::new();
+        let mut committed: Vec<u64> = Vec::new();
+        for _round in 0..2u64 {
+            for node in 0..2usize {
+                let t = seq.issue();
+                assert!(pool.send(node, MCmd { ticket: t }), "live worker refused a command");
+            }
+            for _ in 0..2 {
+                // A blocked recv here on any schedule == a stuck worker;
+                // the checker's deadlock detector would report it.
+                let r = pool.recv().expect("a worker exited mid-round");
+                // The committer itself panics on skipped/duplicated
+                // tickets; the assert pins the in-order release.
+                for (t, _r) in com.offer(r.ticket(), r) {
+                    assert_eq!(t, committed.len() as u64, "commit before a predecessor");
+                    committed.push(t);
+                }
+            }
+        }
+        assert_eq!(
+            committed,
+            (0..4).collect::<Vec<u64>>(),
+            "a ticket was skipped or duplicated"
+        );
+        assert_eq!(com.pending(), 0, "a result is stuck behind a missing predecessor");
+        pool.shutdown();
+        assert!(pool.recv().is_none(), "results channel closes after shutdown");
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("cluster ticket protocol: {stats}");
+    assert!(!stats.truncated, "exploration must be exhaustive");
+    assert!(stats.schedules > 1);
+}
+
+// ---------------------------------------------------------------------------
+// Mutation checks: known-bad variants the checker must catch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_commit_on_arrival_is_caught() {
+    // Re-introduce the out-of-order-commit bug the InOrderCommitter
+    // exists to prevent: journal each result as it ARRIVES. Arrival order
+    // is a race between the two workers' sends on the shared results
+    // channel, so some schedule delivers ticket 1 before ticket 0 — the
+    // checker must find that schedule and report the violated assert.
+    let err = explore("cluster-commit-on-arrival", CheckOpts::default(), || {
+        let mut pool: WorkerPool<ModelEnv, MCmd, MRes> =
+            WorkerPool::spawn(vec![MNode { node: 0 }, MNode { node: 1 }]);
+        let mut seq = Sequencer::new();
+        let mut committed: Vec<u64> = Vec::new();
+        for node in 0..2usize {
+            let t = seq.issue();
+            assert!(pool.send(node, MCmd { ticket: t }));
+        }
+        for _ in 0..2 {
+            let r = pool.recv().expect("workers alive");
+            // BUG: no reorder buffer between the channel and the journal.
+            assert_eq!(r.ticket(), committed.len() as u64, "commit out of ticket order");
+            committed.push(r.ticket());
+        }
+        pool.shutdown();
+    })
+    .expect_err("the checker must find an arrival order that is not ticket order");
+    assert!(err.message.contains("commit out of ticket order"), "got: {}", err.message);
+    println!("commit-on-arrival caught after {} schedule(s)", err.schedules);
+}
+
+#[test]
+fn mutation_skipped_ticket_stalls_the_round_and_is_caught() {
+    // Re-introduce the skipped-ticket bug: the sequencer issues a ticket
+    // whose command is never dispatched. The committer buffers every
+    // later result waiting for the hole, and the driver blocks on a
+    // result that can never arrive — the stalled-round deadlock the
+    // "no stuck worker" property forbids.
+    let err = explore("cluster-skipped-ticket", CheckOpts::default(), || {
+        let mut pool: WorkerPool<ModelEnv, MCmd, MRes> =
+            WorkerPool::spawn(vec![MNode { node: 0 }]);
+        let mut seq = Sequencer::new();
+        let mut com = InOrderCommitter::new();
+        let _skipped = seq.issue(); // BUG: issued, never sent to any worker
+        let t1 = seq.issue();
+        assert!(pool.send(0, MCmd { ticket: t1 }));
+        let r = pool.recv().expect("worker alive");
+        assert!(com.offer(r.ticket(), r).is_empty(), "t1 must buffer behind the hole");
+        // Wait for the predecessor that was never dispatched.
+        let _ = pool.recv();
+    })
+    .expect_err("the checker must catch the stalled round");
+    assert!(err.message.contains("deadlock"), "got: {}", err.message);
+    println!("skipped ticket caught after {} schedule(s)", err.schedules);
+}

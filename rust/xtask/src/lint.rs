@@ -12,6 +12,12 @@
 //!   explicit `now: Instant` parameter; calling `Instant::now()` /
 //!   `SystemTime::now()` / seeding an RNG inside them re-introduces the
 //!   hidden-clock nondeterminism the planners were refactored to avoid.
+//! * `pure-map-iter` — `// lint: pure` functions also feed the cluster
+//!   tier's replayable decision journal, so any container they touch must
+//!   have a deterministic iteration order: naming `HashMap`/`HashSet`
+//!   inside them is flagged (use `BTreeMap`/`BTreeSet`, or sort before
+//!   iterating and take the `// lint: allow(pure-map-iter)` escape with a
+//!   reason).
 //! * `lock-across-exec` — a `let`-bound mutex guard (`.lock()` /
 //!   `lock_recover(`) must not be live across a launch execution or weight
 //!   marshal (`.execute(`, `execute_prepared(`, `resolve_weights(`):
@@ -46,6 +52,7 @@ use std::path::{Path, PathBuf};
 pub enum Rule {
     HotPathAlloc,
     PureClock,
+    PureMapIter,
     LockAcrossExec,
     OrderingComment,
     UnsafeSafety,
@@ -56,6 +63,7 @@ impl Rule {
         match self {
             Rule::HotPathAlloc => "hot-path-alloc",
             Rule::PureClock => "pure-clock",
+            Rule::PureMapIter => "pure-map-iter",
             Rule::LockAcrossExec => "lock-across-exec",
             Rule::OrderingComment => "ordering-comment",
             Rule::UnsafeSafety => "unsafe-safety",
@@ -137,6 +145,11 @@ const ALLOC_TOKENS: &[&str] = &[
 /// Hidden-clock / hidden-randomness tokens flagged inside `// lint: pure`
 /// bodies.
 const CLOCK_TOKENS: &[&str] = &["Instant::now(", "SystemTime::now(", "Rng::new(", "rand::"];
+
+/// Unordered-container tokens flagged inside `// lint: pure` bodies:
+/// their iteration order varies run-to-run, which would leak into the
+/// replayable decision journal. Use `BTreeMap`/`BTreeSet` instead.
+const MAP_TOKENS: &[&str] = &["HashMap<", "HashMap::", "HashSet<", "HashSet::"];
 
 /// Device-work calls a lock guard must not be live across.
 const EXEC_TOKENS: &[&str] = &[".execute(", "execute_prepared(", "resolve_weights("];
@@ -351,6 +364,26 @@ fn run_checks(
         }
     }
 
+    if pure && !allowed(Rule::PureMapIter) {
+        for t in MAP_TOKENS {
+            if code.contains(t) {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: lineno,
+                    rule: Rule::PureMapIter,
+                    message: format!(
+                        "`{t}` in a `// lint: pure` function (hash iteration \
+                         order is nondeterministic and would leak into the \
+                         replayable journal; use BTreeMap/BTreeSet or sort \
+                         first and add `// lint: allow(pure-map-iter)` with \
+                         a reason)"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+
     if !guards.is_empty() && !allowed(Rule::LockAcrossExec) {
         for t in EXEC_TOKENS {
             if code.contains(t) {
@@ -412,6 +445,7 @@ fn rule_by_name(s: &str) -> Option<Rule> {
     Some(match s {
         "hot-path-alloc" => Rule::HotPathAlloc,
         "pure-clock" => Rule::PureClock,
+        "pure-map-iter" => Rule::PureMapIter,
         "lock-across-exec" => Rule::LockAcrossExec,
         "ordering-comment" => Rule::OrderingComment,
         "unsafe-safety" => Rule::UnsafeSafety,
@@ -675,6 +709,59 @@ fn plan(&mut self, now: Instant) {
 }
 "#;
         assert_eq!(rules(&lint(src)), vec![Rule::PureClock]);
+    }
+
+    /// The acceptance fixture: a seeded bare-HashMap use inside a
+    /// `// lint: pure` function must be flagged.
+    #[test]
+    fn seeded_pure_hashmap_iteration_is_flagged() {
+        let src = r#"
+// lint: pure
+fn issue_round(&mut self, round: u64) -> Vec<Cmd> {
+    let mut pending: HashMap<usize, Vec<Cmd>> = HashMap::new();
+    for (node, cmds) in &pending {
+        self.emit(*node, cmds);
+    }
+    Vec::new()
+}
+"#;
+        let v = lint(src);
+        assert_eq!(rules(&v), vec![Rule::PureMapIter], "{v:?}");
+        assert_eq!(v[0].line, 4, "the declaration is the first flagged site");
+    }
+
+    #[test]
+    fn pure_btreemap_is_deterministic_and_clean() {
+        let src = r#"
+// lint: pure
+fn issue_round(&mut self, round: u64) -> Vec<Cmd> {
+    let mut pending: BTreeMap<usize, Vec<Cmd>> = BTreeMap::new();
+    for (node, cmds) in &pending {
+        self.emit(*node, cmds);
+    }
+    Vec::new()
+}
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn unannotated_function_may_use_hashmap() {
+        let src = "fn cold(&self) { let m: HashMap<u32, u32> = HashMap::new(); drop(m); }";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn pure_map_iter_allow_escape_works() {
+        let src = r#"
+// lint: pure
+fn plan(&self, now: Instant) {
+    // lint: allow(pure-map-iter) — keys are sorted into a Vec below.
+    let mut keys: Vec<u32> = self.index.keys().copied().collect::<HashSet<u32>>().into_iter().collect();
+    keys.sort_unstable();
+}
+"#;
+        assert!(lint(src).is_empty());
     }
 
     #[test]

@@ -2,9 +2,9 @@
 """CI perf-regression gate over the figure benches' BENCH_*.json output.
 
 Every figure bench emits `results/BENCH_<name>.json` on one schema
-(name, throughput, p50, p99, slo_attainment). This gate compares the
-fresh results of the smoke benches against committed baselines and FAILS
-(exit 1) when the perf trajectory regresses:
+(name, throughput, p50, p99, slo_attainment, scale). This gate compares
+the fresh results of the smoke benches against committed baselines and
+FAILS (exit 1) when the perf trajectory regresses:
 
   * throughput drops more than --max-tput-drop (default 10%) below the
     baseline, or
@@ -14,6 +14,14 @@ fresh results of the smoke benches against committed baselines and FAILS
 
 p50/p99 deltas are reported informationally (latency distributions are
 runner-dependent; throughput + attainment are the gated trajectory).
+
+Scale-carrying benches (fig8 devices, fig13 simulated devices, fig14
+nodes) record the scale the headline number was measured at. The gate
+only compares throughput/attainment when baseline and fresh ran at the
+SAME scale — a 4-device baseline is not a regression floor for a
+1-device smoke run. A scale mismatch is reported as `scale-skip` (not a
+failure): it means the smoke run was intentionally downsized, and the
+baseline should be refreshed at the smoke scale if gating is desired.
 
 A delta table is printed to stdout and, when running in GitHub Actions,
 appended to the job summary ($GITHUB_STEP_SUMMARY).
@@ -93,6 +101,14 @@ def main():
                          base.get("slo_attainment"), None, "missing", "FAIL"))
             continue
         fresh = load(fpath)
+        scale_b, scale_f = base.get("scale"), fresh.get("scale")
+        if scale_b is not None and scale_f is not None and scale_b != scale_f:
+            print(f"[info] {base['name']}: baseline at scale {scale_b}, "
+                  f"fresh at scale {scale_f} — not comparable, skipping gate")
+            rows.append((base["name"], base["throughput"], fresh["throughput"],
+                         "n/a", base.get("slo_attainment"),
+                         fresh.get("slo_attainment"), "-", "scale-skip"))
+            continue
         verdicts = []
         tput_b, tput_f = base["throughput"], fresh["throughput"]
         if tput_b > 0 and tput_f < tput_b * (1.0 - args.max_tput_drop):

@@ -7,14 +7,18 @@
 # Steps (in CI-job order):
 #   build-test:  cargo build --release && cargo test -q
 #                && cargo build --benches --examples
-#   bench-gate:  cargo bench --no-run, the fig11/fig12/fig13 smokes, the
-#                `stgpu tune --budget 20` smoke (validated-TOML + baseline
-#                check), then scripts/bench_gate.py against
+#   bench-gate:  cargo bench --no-run, the fig11/fig12/fig13/fig14 smokes,
+#                the `stgpu tune --budget 20` smoke (validated-TOML +
+#                baseline check), then scripts/bench_gate.py against
 #                rust/bench_baselines
+#   journal-replay: a parallel 4-node cluster simulation persisting its
+#                decision journal, then `stgpu replay` asserting the
+#                serial re-execution is bitwise identical
 #   lint:        cargo fmt --check && cargo clippy --all-targets -D warnings
 #                && cargo run -p xtask -- lint (repo-specific rules)
-#   model-check: the schedule-exhaustive lane-protocol suite with
-#                --nocapture so explored-schedule counts are printed
+#   model-check: the schedule-exhaustive lane-protocol and cluster
+#                ticket-protocol suites with --nocapture so
+#                explored-schedule counts are printed
 #   doc:         cargo doc --no-deps with -D warnings
 #
 # --skip-bench skips the timed smoke benches + gate (the slowest step);
@@ -53,6 +57,8 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
     cargo bench --bench fig12_adaptive_lanes
     step "bench-gate: fig13 sim-scale smoke"
     cargo bench --bench fig13_sim_scale
+    step "bench-gate: fig14 cluster-scaleout smoke"
+    cargo bench --bench fig14_cluster_scaleout
     step "bench-gate: stgpu tune smoke (budget 20)"
     cargo run --release --bin stgpu -- tune --workload fig12 --budget 20 \
         --out-toml rust/results/tune_fig12.toml \
@@ -67,6 +73,13 @@ else
     step "bench-gate: SKIPPED (--skip-bench)"
 fi
 
+step "journal-replay: 4-node parallel cluster simulation"
+cargo run --release --bin stgpu -- simulate --cluster 4 --rounds 120 \
+    --journal rust/results/journal_smoke.bin
+
+step "journal-replay: serial re-execution must be bitwise identical"
+cargo run --release --bin stgpu -- replay rust/results/journal_smoke.bin
+
 step "lint: cargo fmt --check"
 cargo fmt --check
 
@@ -78,6 +91,9 @@ cargo run -p xtask -- lint
 
 step "model-check: lane-protocol exhaustive + mutation suite"
 cargo test --test modelcheck_protocol -- --nocapture
+
+step "model-check: cluster ticket-protocol exhaustive + mutation suite"
+cargo test --test modelcheck_cluster -- --nocapture
 
 step "model-check: checker unit tests"
 cargo test -p stgpu --lib util::modelcheck -- --nocapture
