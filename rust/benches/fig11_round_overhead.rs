@@ -96,6 +96,10 @@ fn work_item(round: u64, index: usize, lane: usize, lanes: usize) -> WorkItem {
         spec: ModelSpec::Sgemm { m: 64, n: 64, k: 64 },
         weights: None,
         weights_marshal_s: 0.0,
+        cost_hint: 0.0,
+        executed_lane: lane,
+        stolen: false,
+        attempt: 0,
     }
 }
 

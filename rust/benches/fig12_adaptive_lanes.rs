@@ -266,6 +266,7 @@ fn run(static_lanes: usize, adaptive: bool) -> RunResult {
                         None
                     },
                     min_slo_s: LAT_SLO_S,
+                    steal_rate: 0.0,
                 };
                 let decision = ctl.decide(&signals);
                 // Verdicts are consumed at every dwell boundary (a

@@ -1,0 +1,395 @@
+//! Figure 15 (extension) — work-conserving lane execution: SLO-met
+//! goodput of cost-guided work stealing vs static (private-queue) lanes
+//! under a heavy-tailed, mispredicted-duration workload.
+//!
+//! The setup isolates the failure mode stealing exists for: the planner
+//! balances lanes by *predicted* cost, but a deterministic heavy tail
+//! (10% of launches run 6-10x their prediction, keyed to the request —
+//! data-dependent, so no amount of class-level calibration can see it
+//! coming) concentrates real work on whichever lane drew the tail. With
+//! private queues the round barrier waits on that lane while its
+//! siblings idle; with stealing on, idle lanes take the back of the
+//! predicted-longest queue and the round closes near the work-conserving
+//! bound. Same trace, same plans' worth of work, same durations — only
+//! the execution discipline differs.
+//!
+//! The bench is self-calibrating so the asserted ratio does not depend
+//! on absolute cost-model magnitudes: a closed-loop drain first measures
+//! the static (steal-off) service capacity, then the open-loop trace
+//! arrives at 1.3x that capacity with an SLO of 30 mean round times.
+//! Static lanes saturate (backlog and latency grow without bound, so
+//! late arrivals blow the SLO); work-conserving lanes sustain the same
+//! offered load. Everything runs on a simulated clock with seeded
+//! arrivals and request-keyed tails: the numbers are deterministic.
+//!
+//! Asserted at the bottom (the ISSUE acceptance claims): steal-on
+//! SLO-met goodput >= 1.15x steal-off on the same trace, with no SLO
+//! attainment regression; steal-off records zero steals.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use stgpu::coordinator::scheduler::SpaceTimeSched;
+use stgpu::coordinator::{InferenceRequest, QueueSet, Scheduler, ShapeClass};
+use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
+use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
+use stgpu::util::bench::{banner, BenchJson, Table};
+use stgpu::util::prng::Rng;
+use stgpu::util::stats;
+
+/// 16 distinct small classes, one tenant each: every saturated round
+/// plans ~16 launches across 4 lanes, so a tail launch strands ~3
+/// launches' worth of queued work behind it on the unlucky lane.
+const CLASSES: [ShapeClass; 16] = [
+    ShapeClass { kind: "batched_gemm", m: 128, n: 128, k: 768 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 128, k: 896 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 128, k: 1024 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 128, k: 1152 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 768 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 896 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 1024 },
+    ShapeClass { kind: "batched_gemm", m: 128, n: 256, k: 1152 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 768 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 896 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1024 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 128, k: 1152 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 256, k: 768 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 256, k: 896 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 256, k: 1024 },
+    ShapeClass { kind: "batched_gemm", m: 256, n: 256, k: 1152 },
+];
+const N_TENANTS: usize = CLASSES.len();
+const LANES: usize = 4;
+const MAX_BATCH: usize = 64;
+const SEED: u64 = 1520;
+/// Fraction of launches that draw a heavy tail, and its stretch range.
+const TAIL_P: f64 = 0.10;
+const TAIL_LO: f64 = 6.0;
+const TAIL_HI: f64 = 10.0;
+/// Offered load relative to the measured static capacity. Far enough
+/// above 1.0 that the static run saturates even if the finite
+/// calibration drain underestimates true open-loop capacity by a few
+/// percent (round makespans are heavy-tailed, so the capacity estimate
+/// carries sampling noise), and far enough below the work-conserving
+/// uplift that the steal-on run keeps a healthy attainment.
+const OVERLOAD: f64 = 1.3;
+/// Horizon and SLO in units of the calibrated mean round time.
+const HORIZON_ROUNDS: f64 = 400.0;
+const SLO_ROUNDS: f64 = 30.0;
+
+fn class_of(tenant: usize) -> ShapeClass {
+    CLASSES[tenant.min(N_TENANTS - 1)]
+}
+
+/// The heavy tail, keyed to the request (the launch inherits its first
+/// entry's draw): a property of the WORK, not of the run, so steal-on
+/// and steal-off face the same tailed requests.
+fn tail_factor(id: u64) -> f64 {
+    let mut r = Rng::new(SEED ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    if r.gen_bool(TAIL_P) {
+        r.gen_f64_range(TAIL_LO, TAIL_HI)
+    } else {
+        1.0
+    }
+}
+
+/// gpusim ground truth for a fused launch of `r` problems of `class` with
+/// `active` lanes concurrently resident — the *predicted* duration; the
+/// tail multiplies it into the actual one.
+fn predicted(spec: &DeviceSpec, class: ShapeClass, r: usize, active: usize) -> f64 {
+    let shape =
+        GemmShape::new(class.m.max(1) as u32, class.n.max(1) as u32, class.k.max(1) as u32);
+    let mut merged = KernelDesc::sgemm(0, shape);
+    let r = r.max(1);
+    merged.flops *= r as f64;
+    merged.bytes *= r as f64;
+    merged.ctas = merged.ctas.saturating_mul(r as u32);
+    merged.fused = r as u32;
+    let active = active.max(1);
+    spec.launch_overhead_s
+        + kernel_service_time(
+            spec,
+            &merged,
+            &CostCtx {
+                sms: spec.sms as f64 / active as f64,
+                concurrency: active as u32,
+                static_bw_partition: false,
+            },
+        )
+}
+
+/// Work-conserving (or private-queue) execution of one planned round on a
+/// simulated clock — the lane-pool semantics: owners pop the front of
+/// their own queue; with `steal` on, a lane that runs dry takes the back
+/// of the lane with the largest predicted-remaining backlog (cost-guided
+/// victim selection on PREDICTED cost — the thief cannot see the tails
+/// either). Returns the round makespan; per-launch completion offsets go
+/// to `done_s`.
+fn execute_round(
+    lane_of: &[usize],
+    durs: &[f64],
+    preds: &[f64],
+    n_lanes: usize,
+    steal: bool,
+    done_s: &mut Vec<f64>,
+    steals: &mut u64,
+) -> f64 {
+    let n = durs.len();
+    done_s.clear();
+    done_s.resize(n, 0.0);
+    let mut qs: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_lanes];
+    let mut rem_pred = vec![0.0f64; n_lanes];
+    for i in 0..n {
+        qs[lane_of[i]].push_back(i);
+        rem_pred[lane_of[i]] += preds[i];
+    }
+    let mut cursor = vec![0.0f64; n_lanes];
+    let mut remaining = n;
+    while remaining > 0 {
+        // The earliest-free lane that can act: own work first, else (with
+        // stealing) anything left anywhere.
+        let mut l = usize::MAX;
+        for c in 0..n_lanes {
+            let can = !qs[c].is_empty()
+                || (steal && qs.iter().enumerate().any(|(o, q)| o != c && !q.is_empty()));
+            if can && (l == usize::MAX || cursor[c] < cursor[l]) {
+                l = c;
+            }
+        }
+        let i = if let Some(i) = qs[l].pop_front() {
+            rem_pred[l] -= preds[i];
+            i
+        } else {
+            let mut v = usize::MAX;
+            for c in 0..n_lanes {
+                if c == l || qs[c].is_empty() {
+                    continue;
+                }
+                if v == usize::MAX || rem_pred[c] > rem_pred[v] {
+                    v = c;
+                }
+            }
+            let i = qs[v].pop_back().expect("victim checked nonempty");
+            rem_pred[v] -= preds[i];
+            *steals += 1;
+            i
+        };
+        cursor[l] += durs[i];
+        done_s[i] = cursor[l];
+        remaining -= 1;
+    }
+    cursor.iter().cloned().fold(0.0, f64::max)
+}
+
+struct RunResult {
+    completed: u64,
+    hits: u64,
+    misses: u64,
+    makespan_s: f64,
+    rounds: u64,
+    steals: u64,
+    latencies: Vec<f64>,
+}
+
+impl RunResult {
+    fn attainment(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Replay `arrivals` (sorted `(t_arrival, tenant)`) through the real
+/// SpaceTimeSched at 4 lanes with tailed ground-truth durations.
+fn run(arrivals: &[(f64, usize)], slo_s: f64, steal: bool) -> RunResult {
+    let spec = DeviceSpec::v100();
+    let base = Instant::now();
+    let mut sched = SpaceTimeSched::new(vec![1, 2, 4, 8, 16, 32, 64], MAX_BATCH)
+        .spatial_lanes(LANES, None);
+    let mut q = QueueSet::new(N_TENANTS, 1 << 16);
+    let mut idx = 0usize;
+    let mut t = 0.0f64;
+    let mut res = RunResult {
+        completed: 0,
+        hits: 0,
+        misses: 0,
+        makespan_s: 0.0,
+        rounds: 0,
+        steals: 0,
+        latencies: Vec::with_capacity(arrivals.len()),
+    };
+    let mut done_s: Vec<f64> = Vec::new();
+    loop {
+        while idx < arrivals.len() && arrivals[idx].0 <= t {
+            let (arr, tenant) = arrivals[idx];
+            let arrived = base + Duration::from_secs_f64(arr);
+            q.push(InferenceRequest {
+                id: idx as u64,
+                tenant,
+                class: class_of(tenant),
+                payload: vec![],
+                arrived,
+                deadline: arrived + Duration::from_secs_f64(slo_s),
+            })
+            .expect("bench queues are effectively unbounded");
+            idx += 1;
+        }
+        if q.is_empty() {
+            match arrivals.get(idx) {
+                Some(&(next, _)) => {
+                    t = next; // idle-skip to the next arrival
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let now = base + Duration::from_secs_f64(t);
+        let plan = sched.plan_round_at(&mut q, now);
+        let n_lanes = plan.n_lanes.max(1);
+        let active = plan.lanes_used().max(1);
+        let preds: Vec<f64> = plan
+            .launches
+            .iter()
+            .map(|l| predicted(&spec, l.class, l.r_bucket, active))
+            .collect();
+        let durs: Vec<f64> = plan
+            .launches
+            .iter()
+            .enumerate()
+            .map(|(i, l)| preds[i] * l.entries.first().map_or(1.0, |e| tail_factor(e.id)))
+            .collect();
+        let lane_of: Vec<usize> = (0..plan.launches.len()).map(|i| plan.lane(i)).collect();
+        let dt =
+            execute_round(&lane_of, &durs, &preds, n_lanes, steal, &mut done_s, &mut res.steals);
+        for (i, launch) in plan.launches.iter().enumerate() {
+            let done = base + Duration::from_secs_f64(t + done_s[i]);
+            for e in &launch.entries {
+                res.completed += 1;
+                res.latencies.push(done.duration_since(e.arrived).as_secs_f64());
+                if done <= e.deadline {
+                    res.hits += 1;
+                } else {
+                    res.misses += 1;
+                }
+            }
+        }
+        res.rounds += 1;
+        t += dt;
+    }
+    res.makespan_s = t;
+    res.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    res
+}
+
+fn main() {
+    banner(
+        "Figure 15: work-conserving lane execution (cost-guided stealing, heavy-tailed load)",
+        "steal-on SLO-met goodput >= 1.15x steal-off at >= equal attainment on the same trace",
+    );
+
+    // Calibration: a closed-loop drain (everything queued at t = 0,
+    // steal OFF) measures the static service capacity and mean round
+    // time, anchoring the open-loop trace and the SLO to the device's
+    // actual speed instead of hard-coded absolutes.
+    // 8192 requests -> ~128 saturated rounds: enough samples that the
+    // heavy-tailed per-round makespan noise averages out of the capacity
+    // estimate (at 2048 / ~32 rounds the estimate can sit low enough
+    // that OVERLOAD x cap no longer saturates the static run).
+    let cal_n = 8192usize;
+    let cal: Vec<(f64, usize)> = (0..cal_n).map(|j| (0.0, j % N_TENANTS)).collect();
+    let calib = run(&cal, 1e9, false);
+    assert!(calib.makespan_s > 0.0 && calib.rounds > 0);
+    let cap_off_rps = calib.completed as f64 / calib.makespan_s;
+    let round_s = calib.makespan_s / calib.rounds as f64;
+    let rate = OVERLOAD * cap_off_rps;
+    let horizon_s = HORIZON_ROUNDS * round_s;
+    let slo_s = SLO_ROUNDS * round_s;
+
+    // Open-loop trace at OVERLOAD x static capacity: uniform spacing, tenants
+    // round-robin. Deterministic; tails are keyed per request id.
+    let mut arrivals: Vec<(f64, usize)> = Vec::new();
+    let mut j = 0usize;
+    loop {
+        let t = (j + 1) as f64 / rate;
+        if t >= horizon_s {
+            break;
+        }
+        arrivals.push((t, j % N_TENANTS));
+        j += 1;
+    }
+
+    let off = run(&arrivals, slo_s, false);
+    let on = run(&arrivals, slo_s, true);
+    let goodput = |r: &RunResult| r.hits as f64 / horizon_s;
+
+    let mut table = Table::new(&[
+        "mode",
+        "completed",
+        "slo_attainment",
+        "goodput_rps",
+        "makespan_s",
+        "steals",
+        "p50_s",
+        "p99_s",
+    ]);
+    for (name, r) in [("steal-off", &off), ("steal-on", &on)] {
+        table.row(&[
+            name.to_string(),
+            r.completed.to_string(),
+            format!("{:.4}", r.attainment()),
+            format!("{:.1}", goodput(r)),
+            format!("{:.4}", r.makespan_s),
+            r.steals.to_string(),
+            format!("{:.5}", stats::percentile_sorted(&r.latencies, 50.0)),
+            format!("{:.5}", stats::percentile_sorted(&r.latencies, 99.0)),
+        ]);
+    }
+    table.emit("fig15_work_stealing");
+
+    assert_eq!(
+        off.completed, on.completed,
+        "both disciplines must complete the whole trace"
+    );
+    assert_eq!(off.steals, 0, "steal-off must never steal");
+    assert!(on.steals > 0, "the tailed trace must actually provoke steals");
+    assert!(
+        on.attainment() >= off.attainment(),
+        "stealing must not regress attainment: {:.4} vs {:.4}",
+        on.attainment(),
+        off.attainment()
+    );
+    let ratio = goodput(&on) / goodput(&off).max(1e-9);
+    assert!(
+        ratio >= 1.15,
+        "steal-on SLO-met goodput must be >= 1.15x steal-off, got {:.3}x \
+         ({:.1} vs {:.1} rps)",
+        ratio,
+        goodput(&on),
+        goodput(&off)
+    );
+    println!(
+        "shape check: static capacity {:.1} rps (round {:.1} us); offered {:.1} rps; \
+         steal-on goodput {:.1} rps = {:.2}x steal-off {:.1} rps; \
+         attainment {:.4} vs {:.4}; {} steals across {} rounds.",
+        cap_off_rps,
+        round_s * 1e6,
+        rate,
+        goodput(&on),
+        ratio,
+        goodput(&off),
+        on.attainment(),
+        off.attainment(),
+        on.steals,
+        on.rounds,
+    );
+    BenchJson::new("fig15_work_stealing")
+        .throughput(goodput(&on))
+        .slo_attainment(on.attainment())
+        .p50_s(stats::percentile_sorted(&on.latencies, 50.0))
+        .p99_s(stats::percentile_sorted(&on.latencies, 99.0))
+        .scale(LANES as f64)
+        .write();
+}

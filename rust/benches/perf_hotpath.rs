@@ -5,9 +5,11 @@
 //! marshal. Run before/after each optimization; results land in
 //! EXPERIMENTS.md §Perf.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
+use stgpu::coordinator::protocol::{ItemRunner, LaneProtocol, LaneTagged, ProtoPayload, StdEnv};
 use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
 use stgpu::coordinator::{make_scheduler, Coordinator, QueueSet};
 use stgpu::runtime::HostTensor;
@@ -20,6 +22,7 @@ fn main() {
         "schedule decision <= 10 us/request; zero steady-state compiles",
     );
     scheduling_decision();
+    steal_path();
     marshal_path();
     end_to_end_components();
 }
@@ -63,6 +66,85 @@ fn scheduling_decision() {
         ]);
     }
     table.emit("perf_sched_decision");
+}
+
+/// Work-stealing dispatch/collect cost through the real lane protocol,
+/// plus the allocation discipline the driver relies on: once the deques
+/// reach steady-state capacity, the steal path must not grow them (no
+/// hot-path allocation), even under maximal steal pressure (every item
+/// planned onto one lane, three thieves draining it).
+fn steal_path() {
+    println!("--- lane-pool steal path (skewed dispatch, 4 lanes, no execution) ---");
+
+    struct Item {
+        id: u64,
+        lane: usize,
+        spin: u32,
+    }
+    impl ProtoPayload for Item {}
+    impl LaneTagged for Item {
+        fn lane(&self) -> usize {
+            self.lane
+        }
+        fn set_lane(&mut self, lane: usize) {
+            self.lane = lane;
+        }
+    }
+    struct Done;
+    impl ProtoPayload for Done {}
+    struct Spin;
+    impl ItemRunner<Item, Done> for Spin {
+        fn run(&self, item: Item) -> Done {
+            // A tiny compute so the owner lane stays busy long enough for
+            // idle lanes to actually steal.
+            let mut acc = item.id;
+            for x in 0..item.spin {
+                acc = acc.wrapping_mul(0x9E37_79B9).wrapping_add(x as u64);
+            }
+            std::hint::black_box(acc);
+            Done
+        }
+    }
+
+    const LANES: usize = 4;
+    const ROUND: usize = 64;
+    let mut pool: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(LANES, Arc::new(Spin));
+    pool.set_steal(true);
+    let mut next_id = 0u64;
+    let mut one_round = |pool: &mut LaneProtocol<StdEnv, Item, Done>| {
+        for _ in 0..ROUND {
+            // Worst case for work conservation: everything planned on lane 0.
+            pool.dispatch(Item { id: next_id, lane: 0, spin: 64 });
+            next_id += 1;
+        }
+        for _ in 0..ROUND {
+            let d = pool.collect().expect("lane workers alive");
+            std::hint::black_box(&d);
+        }
+    };
+
+    // Warmup until the deques and channels reach steady-state capacity.
+    for _ in 0..8 {
+        one_round(&mut pool);
+    }
+    let grows_warm = pool.queue_grows();
+    let steals_warm = pool.steals_total();
+
+    let bench = Bencher::new(5, 30);
+    let summary = bench.summarize(|| one_round(&mut pool));
+
+    let grows = pool.queue_grows() - grows_warm;
+    let steals = pool.steals_total() - steals_warm;
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["per-item dispatch+collect".into(), fmt_secs(summary.mean / ROUND as f64)]);
+    table.row(&["steals (measured window)".into(), steals.to_string()]);
+    table.row(&["deque growths post-warmup".into(), grows.to_string()]);
+    table.emit("perf_steal_path");
+
+    assert!(steals > 0, "skewed dispatch across {LANES} lanes must provoke steals");
+    assert_eq!(grows, 0, "steal path must be allocation-free post-warmup (deques grew {grows}x)");
+    let leftover = pool.shutdown_drain();
+    assert!(leftover.is_empty(), "all dispatched work was collected");
 }
 
 /// Gather/stack cost — the host-side marshal that precedes every launch.

@@ -201,11 +201,32 @@ pub struct ClusterConfig {
     /// Where the decision journal is written (`stgpu replay` input).
     /// `None` keeps the journal in memory only.
     pub journal_path: Option<PathBuf>,
+    /// Cross-node work stealing: an idle node may pull queued requests
+    /// from the most-backlogged node when the gap is below the migration
+    /// threshold (stealing smooths what migration would overreact to).
+    /// Every steal is journaled, so replay stays bitwise deterministic.
+    /// `false` (default) reproduces the migration-only cluster exactly.
+    pub steal: bool,
+    /// Minimum backlog gap (requests) between the most- and
+    /// least-loaded node before a cross-node steal fires. Validated to
+    /// [1, 1_000_000].
+    pub steal_gap: usize,
+    /// Most requests one cross-node steal may move. Validated to
+    /// [1, 4096].
+    pub steal_max: usize,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { nodes: 1, migrate_util: 0.9, migrate_sustain: 3, journal_path: None }
+        Self {
+            nodes: 1,
+            migrate_util: 0.9,
+            migrate_sustain: 3,
+            journal_path: None,
+            steal: false,
+            steal_gap: 8,
+            steal_max: 32,
+        }
     }
 }
 
@@ -232,6 +253,21 @@ impl ClusterConfig {
         }
         if let Some(v) = t.get("journal_path").and_then(|v| v.as_str()) {
             c.journal_path = Some(PathBuf::from(v));
+        }
+        if let Some(v) = t.get("steal").and_then(|v| v.as_bool()) {
+            c.steal = v;
+        }
+        if let Some(v) = t.get("steal_gap").and_then(|v| v.as_int()) {
+            if !(1..=1_000_000).contains(&v) {
+                return Err("cluster.steal_gap must be in [1, 1000000]".into());
+            }
+            c.steal_gap = v as usize;
+        }
+        if let Some(v) = t.get("steal_max").and_then(|v| v.as_int()) {
+            if !(1..=4096).contains(&v) {
+                return Err("cluster.steal_max must be in [1, 4096]".into());
+            }
+            c.steal_max = v as usize;
         }
         Ok(c)
     }
@@ -275,6 +311,16 @@ pub struct ServerConfig {
     /// overlapped); `2` (default) overlaps one round of planning with
     /// execution. Validated to [1, 8].
     pub pipeline_depth: usize,
+    /// Work-conserving lane execution (space-time only): an idle lane
+    /// whose queue is empty steals queued launches from the back of the
+    /// predicted-longest lane, and the balancer may deliberately overpack
+    /// the cheapest-to-steal class. `false` (default) keeps per-lane
+    /// queues strictly private — bit-for-bit the non-stealing behavior.
+    pub steal: bool,
+    /// Minimum queued items a lane must hold before a thief may steal
+    /// from it (>= 1). Higher values keep thieves off nearly-empty queues
+    /// where the owner is about to pick the work up anyway.
+    pub steal_min_queue: usize,
     /// How long the batcher waits to accumulate a batch, microseconds.
     pub batch_timeout_us: u64,
     /// Devices in the pool. Tenants are sharded across devices by the
@@ -317,6 +363,8 @@ impl Default for ServerConfig {
             deadline_slack: 0.0,
             lanes: 1,
             pipeline_depth: 2,
+            steal: false,
+            steal_min_queue: 1,
             batch_timeout_us: 200,
             devices: 1,
             queue_depth: 256,
@@ -374,6 +422,15 @@ impl ServerConfig {
                 return Err("pipeline_depth must be in [1, 8]".into());
             }
             cfg.pipeline_depth = v as usize;
+        }
+        if let Some(v) = server.get("steal").and_then(|v| v.as_bool()) {
+            cfg.steal = v;
+        }
+        if let Some(v) = server.get("steal_min_queue").and_then(|v| v.as_int()) {
+            if !(1..=64).contains(&v) {
+                return Err("steal_min_queue must be in [1, 64]".into());
+            }
+            cfg.steal_min_queue = v as usize;
         }
         if let Some(v) = server.get("batch_timeout_us").and_then(|v| v.as_int()) {
             cfg.batch_timeout_us = v as u64;
@@ -560,6 +617,37 @@ mod tests {
         let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
         assert!(bad("[server]\npipeline_depth = 0").is_err());
         assert!(bad("[server]\npipeline_depth = 9").is_err());
+    }
+
+    #[test]
+    fn steal_knobs_parse_and_validate() {
+        let doc =
+            TomlDoc::parse("[server]\nsteal = true\nsteal_min_queue = 2").unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert!(cfg.steal);
+        assert_eq!(cfg.steal_min_queue, 2);
+        // Defaults: off — lanes stay private, bit-for-bit the old driver.
+        let d = ServerConfig::default();
+        assert!(!d.steal);
+        assert_eq!(d.steal_min_queue, 1);
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        assert!(bad("[server]\nsteal_min_queue = 0").is_err());
+        assert!(bad("[server]\nsteal_min_queue = 65").is_err());
+        // Cluster-tier knobs: off by default, journaled when on.
+        let doc = TomlDoc::parse(
+            "[cluster]\nnodes = 4\nsteal = true\nsteal_gap = 16\nsteal_max = 8",
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        assert!(cfg.cluster.steal);
+        assert_eq!(cfg.cluster.steal_gap, 16);
+        assert_eq!(cfg.cluster.steal_max, 8);
+        let d = ClusterConfig::default();
+        assert!(!d.steal, "migration-only cluster by default");
+        assert!(d.steal_gap >= 1 && d.steal_max >= 1);
+        assert!(bad("[cluster]\nsteal_gap = 0").is_err());
+        assert!(bad("[cluster]\nsteal_max = 0").is_err());
+        assert!(bad("[cluster]\nsteal_max = 4097").is_err());
     }
 
     #[test]

@@ -37,6 +37,16 @@
 //!   other live node: the placer re-homes it immediately (new arrivals
 //!   reroute), a drop command drains its queue from the source next
 //!   round, and the evicted backlog is routed to its new home at commit.
+//! * **Work stealing** (`steal = true`) rebalances *below* the migration
+//!   threshold: once per round the committer compares committed backlogs
+//!   and tells the most-loaded live node to yield half its lead over the
+//!   least-loaded (capped at `steal_max`, only past `steal_gap`). The
+//!   victim surrenders its latest-deadline requests — the back of its EDF
+//!   order, the same end a lane thief takes — and the committer delivers
+//!   them to the thief next round with their original arrival stamps.
+//!   Tenants never move, so placement, dwell, and the migration detector
+//!   are untouched; every decision is journaled as a `steal` record, and
+//!   with stealing off the journal is byte-identical to pre-steal builds.
 //! * **Failure/rejoin** is fail-stop: a killed node's resident tenants
 //!   re-place onto live nodes (class affinity first), its queued requests
 //!   are simply lost until rejoin, when the node's first command carries
@@ -121,6 +131,15 @@ pub struct ClusterOpts {
     pub migrate_util: f64,
     /// Consecutive hot rounds before a migration fires.
     pub migrate_sustain: u32,
+    /// Work-conserving cross-node stealing: queued requests (not tenants)
+    /// move from the most- to the least-backlogged live node, below the
+    /// migration threshold (see the module docs). Off by default.
+    pub steal: bool,
+    /// Minimum backlog gap (victim minus thief, requests) before a steal
+    /// fires.
+    pub steal_gap: usize,
+    /// Upper bound on requests moved per steal decision.
+    pub steal_max: usize,
     pub hotspot: Option<HotspotOpts>,
     pub fault: Option<FaultOpts>,
 }
@@ -141,6 +160,9 @@ impl ClusterOpts {
             dwell_rounds: 8,
             migrate_util: 0.9,
             migrate_sustain: 3,
+            steal: false,
+            steal_gap: 8,
+            steal_max: 32,
             hotspot: None,
             fault: None,
         }
@@ -183,6 +205,9 @@ impl ClusterOpts {
         }
         if self.migrate_sustain < 1 {
             return Err("migrate_sustain must be >= 1".into());
+        }
+        if self.steal && (self.steal_gap < 1 || self.steal_max < 1) {
+            return Err("steal_gap and steal_max must be >= 1 when steal is on".into());
         }
         if let Some(h) = &self.hotspot {
             if h.node >= self.nodes {
@@ -227,7 +252,7 @@ impl ClusterOpts {
             ]),
             None => Json::Null,
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("nodes", Json::num(self.nodes as f64)),
             ("tenants_per_node", Json::num(self.tenants_per_node as f64)),
             ("rounds", Json::num(self.rounds as f64)),
@@ -242,7 +267,16 @@ impl ClusterOpts {
             ("migrate_sustain", Json::num(self.migrate_sustain as f64)),
             ("hotspot", hotspot),
             ("fault", fault),
-        ])
+        ];
+        // Steal knobs are emitted only when stealing is on: a steal-off
+        // header is byte-identical to one written before the feature
+        // existed, so journals recorded by older builds still replay.
+        if self.steal {
+            fields.push(("steal", Json::Bool(true)));
+            fields.push(("steal_gap", Json::num(self.steal_gap as f64)));
+            fields.push(("steal_max", Json::num(self.steal_max as f64)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterOpts, String> {
@@ -281,6 +315,10 @@ impl ClusterOpts {
             dwell_rounds: num(j, "dwell_rounds")? as u32,
             migrate_util: num(j, "migrate_util")?,
             migrate_sustain: num(j, "migrate_sustain")? as u32,
+            // Absent in pre-steal journals: default off, demo knobs.
+            steal: j.get("steal").and_then(Json::as_bool).unwrap_or(false),
+            steal_gap: j.get("steal_gap").and_then(Json::as_usize).unwrap_or(8),
+            steal_max: j.get("steal_max").and_then(Json::as_usize).unwrap_or(32),
             hotspot,
             fault,
         };
@@ -356,6 +394,10 @@ pub struct ClusterReport {
     pub migrations: u64,
     pub node_downs: u64,
     pub node_ups: u64,
+    /// Cross-node steal decisions fired (0 unless `opts.steal`).
+    pub steals: u64,
+    /// Requests moved by those steals.
+    pub stolen_requests: u64,
     pub backlog_end: u64,
     pub in_transfer_end: u64,
 }
@@ -408,6 +450,17 @@ pub struct ClusterSim {
     /// Tenants with a migration decided but the backlog not yet delivered
     /// (guards against re-migrating a tenant mid-move).
     in_flight: BTreeSet<usize>,
+    /// Work-stealing staging: how many requests each node must yield in
+    /// its NEXT command, where each victim's surrendered requests go, and
+    /// stolen requests committed but not yet delivered to the thief.
+    /// Deliberately separate from `pending_add`/`in_flight`: stealing
+    /// moves requests, never tenants, so it must not touch the migration
+    /// machinery.
+    pending_yield: Vec<usize>,
+    steal_dst: Vec<usize>,
+    pending_steal_add: Vec<Vec<ArrivalMsg>>,
+    steals: u64,
+    stolen_requests: u64,
     /// Tenants displaced by the current fault, for rejoin re-homing.
     displaced: Vec<usize>,
     offered_ewma: Vec<f64>,
@@ -483,6 +536,11 @@ impl ClusterSim {
             pending_drop: vec![Vec::new(); nodes],
             pending_reset: vec![false; nodes],
             in_flight: BTreeSet::new(),
+            pending_yield: vec![0; nodes],
+            steal_dst: vec![0; nodes],
+            pending_steal_add: vec![Vec::new(); nodes],
+            steals: 0,
+            stolen_requests: 0,
             displaced: Vec::new(),
             offered_ewma: vec![0.0; nodes],
             service_rps: vec![0.0; nodes],
@@ -542,9 +600,21 @@ impl ClusterSim {
             self.offered_total += n_arr;
             self.round_stats[round as usize].offered += n_arr;
             self.node_stats[node].offered += n_arr;
+            let yield_n = std::mem::take(&mut self.pending_yield[node]);
+            let steal_in = std::mem::take(&mut self.pending_steal_add[node]);
             cmds.push((
                 node,
-                NodeCmd { ticket, round, now_s, reset, arrivals, add_tenants, drop_tenants },
+                NodeCmd {
+                    ticket,
+                    round,
+                    now_s,
+                    reset,
+                    arrivals,
+                    add_tenants,
+                    drop_tenants,
+                    yield_n,
+                    steal_in,
+                },
             ));
         }
         cmds
@@ -611,12 +681,27 @@ impl ClusterSim {
             let dst = self.placer.node_of(tr.tenant);
             self.pending_add[dst].push(tr.clone());
         }
+
+        // Route stolen requests to the thief chosen when the steal was
+        // decided — or, if it died in the meantime, to each request's
+        // tenant's current home.
+        for a in &r.yielded {
+            let chosen = self.steal_dst[r.node];
+            let dst = if self.placer.is_live(chosen) {
+                chosen
+            } else {
+                self.placer.node_of(a.tenant)
+            };
+            self.pending_steal_add[dst].push(a.clone());
+            self.stolen_requests += 1;
+        }
     }
 
     /// Round boundary, after every result of `round` has committed:
-    /// hotspot detection/migration, then fault events, each journaled in
-    /// a fixed deterministic order (migrations ascending by source node,
-    /// then node_down, then node_up).
+    /// hotspot detection/migration, then the work-stealing decision, then
+    /// fault events, each journaled in a fixed deterministic order
+    /// (migrations ascending by source node, then steal, then node_down,
+    /// then node_up).
     // lint: pure
     pub fn end_round(&mut self, round: u64) {
         // Hotspot detection per live node, ascending.
@@ -673,6 +758,50 @@ impl ClusterSim {
             ]));
         }
 
+        // Work stealing below the migration threshold: queued requests
+        // (not tenants) move from the most- to the least-backlogged live
+        // node. One decision per round, taken from the same committed
+        // backlogs both the serial and parallel paths see, so the journal
+        // stays bitwise replayable. Runs after migration has had its
+        // chance: a sustained hotspot re-homes a tenant, a brief or small
+        // imbalance is absorbed here without churning placement.
+        if self.opts.steal {
+            let mut victim = usize::MAX;
+            let mut thief = usize::MAX;
+            for node in 0..self.opts.nodes {
+                if !self.placer.is_live(node) {
+                    continue;
+                }
+                let b = self.node_stats[node].backlog;
+                if victim == usize::MAX || b > self.node_stats[victim].backlog {
+                    victim = node;
+                }
+                if thief == usize::MAX || b < self.node_stats[thief].backlog {
+                    thief = node;
+                }
+            }
+            if victim != usize::MAX && thief != victim && self.pending_yield[victim] == 0 {
+                let gap = (self.node_stats[victim].backlog - self.node_stats[thief].backlog)
+                    as usize;
+                if gap >= self.opts.steal_gap {
+                    // Move half the gap (never past the cap): enough to
+                    // close the imbalance without ping-ponging work back
+                    // next round.
+                    let n = (gap / 2).clamp(1, self.opts.steal_max);
+                    self.pending_yield[victim] = n;
+                    self.steal_dst[victim] = thief;
+                    self.steals += 1;
+                    self.journal.append(Json::obj(vec![
+                        ("kind", Json::str("steal")),
+                        ("round", Json::num(round as f64)),
+                        ("from", Json::num(victim as f64)),
+                        ("to", Json::num(thief as f64)),
+                        ("n", Json::num(n as f64)),
+                    ]));
+                }
+            }
+        }
+
         let Some(f) = self.opts.fault.clone() else {
             return;
         };
@@ -691,6 +820,14 @@ impl ClusterSim {
             for t in std::mem::take(&mut self.pending_drop[f.node]) {
                 self.in_flight.remove(&t);
             }
+            // Stolen requests staged for the dead thief re-route to their
+            // tenants' current homes; a staged yield the victim will never
+            // run is cancelled (its queue is lost to the reset anyway).
+            for a in std::mem::take(&mut self.pending_steal_add[f.node]) {
+                let dst = self.placer.node_of(a.tenant);
+                self.pending_steal_add[dst].push(a);
+            }
+            self.pending_yield[f.node] = 0;
             self.offered_ewma[f.node] = 0.0;
             self.service_rps[f.node] = 0.0;
             self.hot_rounds[f.node] = 0;
@@ -762,8 +899,9 @@ impl ClusterSim {
             .iter()
             .flatten()
             .map(|tr| tr.backlog.len() as u64)
-            .sum();
-        self.journal.append(Json::obj(vec![
+            .sum::<u64>()
+            + self.pending_steal_add.iter().map(|v| v.len() as u64).sum::<u64>();
+        let mut summary = vec![
             ("kind", Json::str("summary")),
             ("rounds", Json::num(self.opts.rounds as f64)),
             ("offered", Json::num(offered as f64)),
@@ -776,7 +914,14 @@ impl ClusterSim {
             ("node_ups", Json::num(self.node_ups as f64)),
             ("backlog", Json::num(backlog_end as f64)),
             ("in_transfer", Json::num(in_transfer_end as f64)),
-        ]));
+        ];
+        // Same compatibility rule as the header: steal-off summaries are
+        // byte-identical to pre-steal builds.
+        if self.opts.steal {
+            summary.push(("steals", Json::num(self.steals as f64)));
+            summary.push(("stolen", Json::num(self.stolen_requests as f64)));
+        }
+        self.journal.append(Json::obj(summary));
         ClusterReport {
             opts: self.opts,
             journal: self.journal,
@@ -790,6 +935,8 @@ impl ClusterSim {
             migrations: self.migrations,
             node_downs: self.node_downs,
             node_ups: self.node_ups,
+            steals: self.steals,
+            stolen_requests: self.stolen_requests,
             backlog_end,
             in_transfer_end,
         }
@@ -896,10 +1043,27 @@ mod tests {
         o.hotspot =
             Some(HotspotOpts { node: 1, from_round: 10, to_round: 30, factor: 6.5 });
         o.fault = Some(FaultOpts { node: 2, kill_round: 20, rejoin_round: 40 });
+        o.steal = true;
+        o.steal_gap = 5;
+        o.steal_max = 10;
         let back = ClusterOpts::from_json(&o.to_json()).expect("parse");
         assert_eq!(back, o);
         // And the header emission is stable across the round trip.
         assert_eq!(back.to_json().to_string(), o.to_json().to_string());
+    }
+
+    #[test]
+    fn steal_off_header_is_byte_identical_to_the_legacy_shape() {
+        // The serialized opts of a steal-off run must not mention stealing
+        // at all: journals written before the feature existed parse AND
+        // re-serialize to the same bytes, so `stgpu replay` still matches
+        // them digest-for-digest.
+        let o = small(2);
+        let j = o.to_json().to_string();
+        assert!(!j.contains("steal"), "steal-off header leaks steal knobs: {j}");
+        let back = ClusterOpts::from_json(&o.to_json()).expect("parse");
+        assert!(!back.steal);
+        assert_eq!(back.to_json().to_string(), j);
     }
 
     #[test]
@@ -970,6 +1134,67 @@ mod tests {
         assert!(rep.nodes[0].rounds < rep.nodes[1].rounds);
         // Replay reproduces the faulted run bit for bit too.
         assert!(replay_journal(&rep.journal).expect("replay").matches);
+    }
+
+    /// A four-node run with one node hammered hard enough that its
+    /// round-capped scheduler cannot drain the spike, while the migration
+    /// detector is disabled — stealing is the only rebalancer.
+    fn steal_opts() -> ClusterOpts {
+        ClusterOpts {
+            rounds: 80,
+            steal: true,
+            steal_gap: 4,
+            steal_max: 16,
+            migrate_util: 1e9,
+            hotspot: Some(HotspotOpts { node: 0, from_round: 5, to_round: 70, factor: 60.0 }),
+            ..ClusterOpts::demo(4)
+        }
+    }
+
+    #[test]
+    fn stealing_fires_and_replays_bitwise_on_four_nodes() {
+        let opts = steal_opts();
+        let par = run_cluster(&opts, true).expect("parallel");
+        assert!(par.steals >= 1, "overload never triggered a steal");
+        assert!(par.stolen_requests >= 1, "steals moved no requests");
+        assert!(kinds(&par.journal).iter().any(|k| k == "steal"));
+        assert!(
+            par.conservation_ok(),
+            "requests leaked across steals: offered {} != completed {} + dropped {} \
+             + backlog {} + transfer {}",
+            par.offered,
+            par.completed,
+            par.dropped,
+            par.backlog_end,
+            par.in_transfer_end
+        );
+        // Thieves did real work: some node other than the hot one
+        // completed more than its own offered load... at minimum, the
+        // journal must replay bitwise through the serial path, parallel
+        // and serial runs byte-equal.
+        let ser = run_cluster(&opts, false).expect("serial");
+        assert_eq!(par.journal.bytes(), ser.journal.bytes());
+        let out = replay_journal(&par.journal).expect("replay");
+        assert!(out.matches, "original {} vs replayed {}", out.original, out.replayed);
+        assert_eq!(out.nodes, 4);
+    }
+
+    #[test]
+    fn stealing_beats_no_stealing_on_goodput_under_the_same_spike() {
+        let on = run_cluster(&steal_opts(), false).expect("steal on");
+        let off = run_cluster(
+            &ClusterOpts { steal: false, ..steal_opts() },
+            false,
+        )
+        .expect("steal off");
+        assert_eq!(off.steals, 0);
+        assert!(!kinds(&off.journal).iter().any(|k| k == "steal"));
+        assert!(
+            on.hits > off.hits,
+            "work-conserving stealing should lift SLO-met goodput: on {} vs off {}",
+            on.hits,
+            off.hits
+        );
     }
 
     #[test]

@@ -66,6 +66,14 @@ pub struct NodeCmd {
     /// Tenants migrating OUT: drain their queues into
     /// [`NodeRoundResult::evicted`] before planning.
     pub drop_tenants: Vec<usize>,
+    /// Work-stealing yield: after this round's admissions, surrender up to
+    /// this many of the latest-deadline pending requests into
+    /// [`NodeRoundResult::yielded`] (0 = no steal this round).
+    pub yield_n: usize,
+    /// Requests stolen FROM another node, delivered here by the committer.
+    /// Admitted like arrivals, with their original arrival times, so
+    /// latency keeps accruing across the move.
+    pub steal_in: Vec<ArrivalMsg>,
 }
 
 impl ProtoPayload for NodeCmd {}
@@ -97,6 +105,9 @@ pub struct NodeRoundResult {
     pub reconfigs: u64,
     /// Tenant queues drained for migration this round.
     pub evicted: Vec<TenantTransfer>,
+    /// Requests surrendered to the committer's work-stealing path this
+    /// round ([`NodeCmd::yield_n`] victims, latest deadlines first out).
+    pub yielded: Vec<ArrivalMsg>,
     /// Completion latencies (seconds) of requests finished this round.
     pub latencies: Vec<f64>,
 }
@@ -246,6 +257,29 @@ impl NodeWorker {
                 dropped += 1;
             }
         }
+        for a in &cmd.steal_in {
+            if !self.admit(a) {
+                dropped += 1;
+            }
+        }
+
+        // Work-stealing yield, after every admission and before the
+        // controller reads its signals: the backlog the controller (and
+        // the committer's next steal decision) sees already excludes the
+        // surrendered work.
+        let yielded: Vec<ArrivalMsg> = if cmd.yield_n > 0 {
+            self.queues
+                .steal_latest(cmd.yield_n)
+                .iter()
+                .map(|r| ArrivalMsg {
+                    tenant: r.tenant,
+                    id: r.id,
+                    arr_s: r.arrived.duration_since(self.base).as_secs_f64(),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
 
         // Controller dwell boundary — the same signal wiring as the
         // driver's `plan_control` (worker-side planning half).
@@ -266,6 +300,7 @@ impl NodeWorker {
                     None
                 },
                 min_slo_s: self.min_slo_s,
+                steal_rate: 0.0,
             };
             let decision = self.ctl.decide(&signals);
             self.win_hits = 0;
@@ -344,6 +379,7 @@ impl NodeWorker {
             decision: Decision { lanes: self.lanes_now, depth: 1 },
             reconfigs: self.reconfigs_base + self.ctl.reconfigs(),
             evicted,
+            yielded,
             latencies,
         }
     }
@@ -398,6 +434,8 @@ mod tests {
             arrivals,
             add_tenants: vec![],
             drop_tenants: vec![],
+            yield_n: 0,
+            steal_in: vec![],
         }
     }
 
@@ -465,6 +503,43 @@ mod tests {
             r1.latencies[0] > 0.009,
             "latency must count from the original arrival: {}",
             r1.latencies[0]
+        );
+    }
+
+    #[test]
+    fn yield_surrenders_newest_work_and_round_trips_as_steal_in() {
+        let base = Instant::now();
+        // Victim: four same-SLO arrivals, told to yield two. The yield
+        // runs after admission, so the two NEWEST arrivals (latest
+        // deadlines) go and the two oldest are planned locally.
+        let mut v = worker(base);
+        let mut c = cmd(0, 0, 0.002, vec![]);
+        c.arrivals = (0..4)
+            .map(|i| ArrivalMsg { tenant: i % 4, id: 30 + i as u64, arr_s: 0.0002 * (i + 1) as f64 })
+            .collect();
+        c.yield_n = 2;
+        let r = v.run_round(&c);
+        assert_eq!(r.yielded.len(), 2);
+        assert_eq!(
+            r.yielded.iter().map(|a| a.id).collect::<Vec<_>>(),
+            vec![32, 33],
+            "the latest-deadline requests are the ones surrendered"
+        );
+        assert_eq!(r.completed, 2, "the urgent front stays and is planned");
+        // The yielded arrival stamps survive the move exactly.
+        assert!((r.yielded[0].arr_s - 0.0006).abs() < 1e-12);
+
+        // Thief: the same messages delivered as `steal_in` plan with
+        // their ORIGINAL arrival times — latency accrues across the move.
+        let mut t = worker(base);
+        let mut c1 = cmd(0, 0, 0.010, vec![]);
+        c1.steal_in = r.yielded.clone();
+        let r1 = t.run_round(&c1);
+        assert_eq!(r1.completed, 2, "stolen work is planned by the thief");
+        assert!(
+            r1.latencies.iter().all(|&l| l > 0.009),
+            "latency counts from the original arrivals: {:?}",
+            r1.latencies
         );
     }
 

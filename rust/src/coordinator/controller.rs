@@ -73,6 +73,17 @@
 //!   `slo_target` while the backlog is NOT growing (so the misses come
 //!   from co-location stretch or pipeline residency, not under-capacity):
 //!   step one lane down (or, already serial, one depth down).
+//! * **steal imbalance** — with work-conserving lane execution on, a
+//!   sustained steal rate (EWMA of the fraction of completions executed
+//!   by a thief lane, fed via [`ControlSignals::steal_rate`]) means the
+//!   balancer's predicted placement and run-time reality disagree: work
+//!   keeps migrating at execution time. Occasional stealing is the
+//!   mechanism working as designed, so a single spiky window does
+//!   nothing; past [`STEAL_IMBALANCE`] the valve waives the
+//!   `improvement` hysteresis for a model-driven switch — any candidate
+//!   the model scores strictly better is taken, because the current
+//!   point is demonstrably mispriced. Inert (EWMA pinned at 0) for
+//!   non-stealing configs.
 //!
 //! With `adaptive = false` the driver never constructs a controller and
 //! the static `lanes` / `pipeline_depth` paths are executed unchanged.
@@ -151,7 +162,23 @@ pub struct ControlSignals {
     /// Tightest SLO among the shard's servable tenants, seconds
     /// (`<= 0` == no deadline constraint; every candidate is feasible).
     pub min_slo_s: f64,
+    /// Fraction of this window's completions that executed on a thief
+    /// lane (work-conserving execution; `0.0` with stealing off or for
+    /// hosts without a stealing pool — the imbalance valve stays inert).
+    pub steal_rate: f64,
 }
+
+/// Per-decision-window blend of the steal-rate EWMA. At `0.3`, one heavy
+/// window from a cold EWMA stays under [`STEAL_IMBALANCE`] (0.3 · 0.8 =
+/// 0.24) but a second consecutive one crosses it — "sustained" is at
+/// least two windows by construction.
+const STEAL_ALPHA: f64 = 0.3;
+
+/// Steal-rate EWMA above which the imbalance valve arms (see the module
+/// docs): a quarter of completions migrating at execution time, window
+/// after window, is no longer opportunistic smoothing — the operating
+/// point is mispriced.
+const STEAL_IMBALANCE: f64 = 0.25;
 
 impl ControlSignals {
     fn stretch_at(&self, lanes: usize) -> f64 {
@@ -195,6 +222,8 @@ pub struct AdaptiveController {
     last_explore_eval: u64,
     /// Times the decision actually changed.
     reconfigs: u64,
+    /// Steal-rate EWMA across decision windows (imbalance valve input).
+    steal_ewma: f64,
     /// Predicted throughput of the chosen decision at the last eval.
     last_utility: f64,
     /// Best predicted throughput per candidate lane count at the last
@@ -216,6 +245,7 @@ impl AdaptiveController {
             evals: 0,
             last_explore_eval: 0,
             reconfigs: 0,
+            steal_ewma: 0.0,
             last_utility: 0.0,
             last_utilities: Vec::new(),
         }
@@ -243,6 +273,12 @@ impl AdaptiveController {
 
     pub fn last_utilities(&self) -> &[(usize, f64)] {
         &self.last_utilities
+    }
+
+    /// Current steal-rate EWMA (0.0 unless the host feeds
+    /// [`ControlSignals::steal_rate`] from a stealing lane pool).
+    pub fn steal_ewma(&self) -> f64 {
+        self.steal_ewma
     }
 
     /// Score one candidate under the signals (see the module docs for the
@@ -307,6 +343,8 @@ impl AdaptiveController {
             return self.current;
         }
         self.evals += 1;
+        self.steal_ewma = STEAL_ALPHA * signals.steal_rate.clamp(0.0, 1.0)
+            + (1.0 - STEAL_ALPHA) * self.steal_ewma;
 
         // Score the whole candidate grid; remember the per-lane-count best
         // for the status export.
@@ -353,6 +391,10 @@ impl AdaptiveController {
         let slo_pressure = signals
             .slo_attainment
             .is_some_and(|a| a < self.params.slo_target);
+        // Sustained stealing: the current point is mispriced (see the
+        // module docs' imbalance valve) — waive the improvement bar for a
+        // model-driven switch below.
+        let steal_pressure = self.steal_ewma > STEAL_IMBALANCE;
         self.prev_backlog = signals.backlog;
 
         let mut next = self.current;
@@ -368,7 +410,8 @@ impl AdaptiveController {
         } else if best.decision != self.current
             && (best.throughput > current_score.throughput * (1.0 + self.params.improvement)
                 || (!current_score.feasible && best.feasible)
-                || (backlog_pressure && best.throughput > current_score.throughput))
+                || (backlog_pressure && best.throughput > current_score.throughput)
+                || (steal_pressure && best.throughput > current_score.throughput))
         {
             next = best.decision;
         } else if backlog_pressure
@@ -556,6 +599,7 @@ mod tests {
             stretch,
             slo_attainment: None,
             min_slo_s: slo,
+            steal_rate: 0.0,
         }
     }
 
@@ -698,6 +742,39 @@ mod tests {
     }
 
     #[test]
+    fn sustained_stealing_waives_the_switch_hysteresis() {
+        // Best candidate (4 lanes, ~1.33x) sits UNDER the 1.5x improvement
+        // bar: without steal pressure the controller holds serial.
+        let mut ctl = AdaptiveController::new(
+            ControllerParams {
+                max_lanes: 4,
+                max_depth: 1,
+                dwell_rounds: 4,
+                improvement: 0.5,
+                slo_target: 0.99,
+            },
+            Decision { lanes: 1, depth: 1 },
+        );
+        let mut s = signals(4.0, 16.0, 1e-3, vec![1.0, 1.0, 2.0, 2.5, 3.0], 0.0);
+        assert_eq!(decide(&mut ctl, &s).lanes, 1, "under the improvement bar");
+        // One heavy steal window from a cold EWMA is not "sustained".
+        s.steal_rate = 0.8;
+        assert_eq!(decide(&mut ctl, &s).lanes, 1, "one spike must not move it");
+        assert!(ctl.steal_ewma() > 0.0);
+        // The second consecutive heavy window crosses STEAL_IMBALANCE:
+        // placement and reality disagree, so the merely-better candidate
+        // is taken despite the hysteresis.
+        assert_eq!(decide(&mut ctl, &s).lanes, 4, "sustained stealing switches");
+        assert_eq!(ctl.reconfigs(), 1);
+        // Once rebalanced the rate collapses and the new point holds.
+        s.steal_rate = 0.0;
+        for _ in 0..3 {
+            assert_eq!(decide(&mut ctl, &s).lanes, 4);
+        }
+        assert_eq!(ctl.reconfigs(), 1, "no flapping after the switch");
+    }
+
+    #[test]
     fn no_signal_window_holds_the_decision() {
         let mut ctl =
             AdaptiveController::new(params(4, 2, 4), Decision { lanes: 2, depth: 2 });
@@ -759,6 +836,7 @@ mod tests {
                         None
                     },
                     min_slo_s: rng.gen_range(100) as f64 * 1e-3,
+                    steal_rate: rng.gen_range(100) as f64 / 100.0,
                 };
                 let d = ctl.observe_round(&s);
                 assert!((1..=max_lanes).contains(&d.lanes), "lanes {d:?}");

@@ -68,6 +68,28 @@
 //! allocation-free across reconfigurations. `adaptive = false` (default)
 //! constructs no controller and runs the static paths bit-for-bit.
 //!
+//! ## Work-conserving execution (`[server] steal = true`)
+//!
+//! With stealing enabled, the per-lane queues become stealable deques: a
+//! lane that drains early takes the back of the predicted-longest
+//! remaining lane instead of idling until the round barrier
+//! ([`LanePool::set_steal`]; victim selection is cost-guided via each
+//! item's `cost_hint`, filled from the shard cost model's concurrent
+//! prediction). Completions keep their *planned* round/lane tags — cost
+//! attribution and round accounting are unchanged — and additionally
+//! report `executed_lane`/`stolen`, which feed the per-lane steal
+//! counters exported through [`DeviceSnapshot`] (status JSON and the
+//! serve table). The scheduler overpacks the predicted-longest lane
+//! slightly when stealing is on (steal-aware overpacking), the adaptive
+//! controller tracks a steal-rate EWMA as a rebalance signal, and the
+//! driver force-disables stealing around solo-calibration probe rounds so
+//! probe measurements stay un-overlapped. Stealing also backstops
+//! launch-level faults: a failed launch is retried exactly once on
+//! another lane through the same re-dispatch path (counted in
+//! `launch_retries`); a second failure drops the launch's entries and
+//! serving continues. `steal = false` (default) runs the private SPSC
+//! queues bit-for-bit.
+//!
 //! ## Scheduling semantics (unchanged)
 //!
 //! Every round, for each device shard: the shard's scheduler drains its
@@ -228,6 +250,8 @@ struct SnapshotMirror {
     lane_launches: Vec<AtomicU64>,
     /// Busy time per lane in nanoseconds.
     lane_busy_ns: Vec<AtomicU64>,
+    /// Items stolen BY each lane (thief-side attribution).
+    lane_steals: Vec<AtomicU64>,
     /// Per-lane-count calibration error, f64 bits, indexed by concurrent
     /// lane count; [`UNOBSERVED`] until that count has been measured.
     lane_calib: Vec<AtomicU64>,
@@ -241,6 +265,7 @@ struct MirrorView {
     calib_err: f64,
     lane_launches: Vec<u64>,
     lane_busy_s: Vec<f64>,
+    lane_steals: Vec<u64>,
     lane_calibration: Vec<(usize, f64)>,
 }
 
@@ -251,6 +276,7 @@ impl SnapshotMirror {
             calib_err: AtomicU64::new(0.0f64.to_bits()),
             lane_launches: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
             lane_busy_ns: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            lane_steals: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
             lane_calib: (0..=lanes).map(|_| AtomicU64::new(UNOBSERVED)).collect(),
         }
     }
@@ -280,6 +306,16 @@ impl SnapshotMirror {
         self.lane_launches[lane].fetch_add(1, Ordering::Relaxed);
         self.lane_busy_ns[lane]
             .fetch_add((busy_s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+        self.end_write();
+    }
+
+    /// Count one steal executed BY `lane` (the thief). Driver thread only,
+    /// at completion processing — same single-writer discipline as
+    /// [`SnapshotMirror::record_launch`].
+    fn record_steal(&self, lane: usize) {
+        let lane = lane.min(self.lane_steals.len().saturating_sub(1));
+        self.begin_write();
+        self.lane_steals[lane].fetch_add(1, Ordering::Relaxed);
         self.end_write();
     }
 
@@ -341,6 +377,11 @@ impl SnapshotMirror {
                 .iter()
                 .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
                 .collect(),
+            lane_steals: self
+                .lane_steals
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
             lane_calibration: self
                 .lane_calib
                 .iter()
@@ -371,6 +412,11 @@ impl SnapshotMirror {
 
     fn lane_calibration(&self) -> Vec<(usize, f64)> {
         self.read().lane_calibration
+    }
+
+    #[cfg(test)]
+    fn lane_steals(&self) -> Vec<u64> {
+        self.read().lane_steals
     }
 }
 
@@ -424,6 +470,13 @@ struct DeviceShard {
     /// windowed attainment signal; reset at each evaluation).
     win_hits: u64,
     win_misses: u64,
+    /// Completions and stolen completions since the controller's last
+    /// decision point — their ratio is the steal-rate imbalance signal
+    /// (reset at each evaluation, like the attainment window).
+    win_launches: u64,
+    win_steals: u64,
+    /// Failed launches re-dispatched once onto another lane (lifetime).
+    launch_retries: u64,
 }
 
 /// The coordinator.
@@ -464,6 +517,10 @@ pub struct Coordinator {
     /// Lifetime round counter (drives round tags and the solo-calibration
     /// probe cadence).
     rounds_total: u64,
+    /// Cross-lane work stealing on (`[server] steal`; space-time only).
+    /// Stealing is suspended around solo-calibration probe rounds and
+    /// re-enabled from this flag afterwards.
+    steal: bool,
     started: Instant,
 }
 
@@ -484,6 +541,19 @@ impl Coordinator {
     }
 
     pub fn with_flavor(cfg: &ServerConfig, flavor: Flavor) -> Result<Self> {
+        Self::with_flavor_wrapped(cfg, flavor, &|exec| exec)
+    }
+
+    /// [`Coordinator::with_flavor`] with an executor wrapper: `wrap`
+    /// receives the real PJRT executor and may interpose on it — the
+    /// fault-injection hook the launch-retry regression tests use to make
+    /// a specific launch fail without touching the PJRT layer. Production
+    /// paths pass the identity wrapper via `with_flavor`.
+    pub fn with_flavor_wrapped(
+        cfg: &ServerConfig,
+        flavor: Flavor,
+        wrap: &dyn Fn(Arc<dyn LaunchExecutor>) -> Arc<dyn LaunchExecutor>,
+    ) -> Result<Self> {
         let engine = Arc::new(PjrtEngine::new(&cfg.artifacts_dir)?);
         let tenants = TenantRegistry::from_configs(&cfg.tenants)
             .map_err(|e| anyhow::anyhow!(e))?;
@@ -558,6 +628,12 @@ impl Coordinator {
         // from there. With `adaptive = false` nothing below changes:
         // resident == static, no controller, no tracker feeding.
         let adaptive = cfg.controller.adaptive && spacetime;
+        // Cross-lane work stealing only means anything under the
+        // space-time scheduler (the §3 baselines stay the paper's
+        // policies); with one static lane it is a harmless no-op, but the
+        // adaptive controller may grow lanes later, so gate on the config
+        // + scheduler only.
+        let steal = cfg.steal && spacetime;
         let ctrl_max_lanes = cfg.controller.max_lanes_or(lanes);
         let ctrl_max_depth = cfg.controller.max_depth_or(pipeline_depth);
         let (init_lanes, init_depth, lanes_cap) = if adaptive {
@@ -570,7 +646,7 @@ impl Coordinator {
             (lanes, pipeline_depth, lanes)
         };
         let executor: Arc<dyn LaunchExecutor> =
-            Arc::new(PjrtExecutor::new(engine.clone(), flavor));
+            wrap(Arc::new(PjrtExecutor::new(engine.clone(), flavor)));
         let shards = (0..devices)
             .map(|_| {
                 let cost_model: Option<SharedCostModel> =
@@ -579,7 +655,7 @@ impl Coordinator {
                     } else {
                         None
                     };
-                let scheduler = crate::coordinator::scheduler::make_scheduler_spatial(
+                let mut scheduler = crate::coordinator::scheduler::make_scheduler_spatial(
                     cfg.scheduler,
                     buckets.clone(),
                     cfg.max_batch as usize,
@@ -589,6 +665,10 @@ impl Coordinator {
                     cost_model.clone(),
                     if edf { Some(cfg.deadline_slack) } else { None },
                 );
+                scheduler.set_steal_aware(steal);
+                let mut pool = LanePool::new(init_lanes, executor.clone());
+                pool.set_steal(steal);
+                pool.set_steal_min(cfg.steal_min_queue);
                 let controller = if adaptive {
                     Some(AdaptiveController::new(
                         ControllerParams {
@@ -607,7 +687,7 @@ impl Coordinator {
                     queues: QueueSet::new(tenants.len(), cfg.queue_depth),
                     scheduler,
                     cost_model,
-                    pool: LanePool::new(init_lanes, executor.clone()),
+                    pool,
                     tickets: VecDeque::new(),
                     fusion_cache: Mutex::new(FusionCache::new(256)),
                     arena: RoundArena::default(),
@@ -623,6 +703,9 @@ impl Coordinator {
                     resident_depth: init_depth,
                     win_hits: 0,
                     win_misses: 0,
+                    win_launches: 0,
+                    win_steals: 0,
+                    launch_retries: 0,
                 }
             })
             .collect();
@@ -660,6 +743,7 @@ impl Coordinator {
             rounds_since_check: 0,
             check_every: 16,
             rounds_total: 0,
+            steal,
             started: Instant::now(),
         })
     }
@@ -786,6 +870,8 @@ impl Coordinator {
                     lane_launches: mirror.lane_launches,
                     lane_busy_s: mirror.lane_busy_s,
                     lane_calibration: mirror.lane_calibration,
+                    lane_steals: mirror.lane_steals,
+                    launch_retries: s.launch_retries,
                     ctrl_adaptive: s.controller.is_some(),
                     ctrl_lanes: s.resident_lanes as u64,
                     ctrl_depth: s.resident_depth as u64,
@@ -953,32 +1039,22 @@ impl Coordinator {
         let round = self.rounds_total;
         let probe_solo = self.rounds_total % SOLO_PROBE_EVERY == 0
             && self.shards.iter().any(|s| s.resident_lanes > 1);
-        if probe_solo {
-            // A solo probe's measurements must be genuinely un-overlapped
-            // or they would pollute the solo track with interference from
-            // rounds still executing: drain EVERY shard first (they share
-            // one underlying engine, so even another shard's in-flight
-            // round would contend), and below each shard's probe is
-            // collected before the next dispatches — a deliberate
-            // pipeline bubble once every SOLO_PROBE_EVERY rounds.
-            for device in 0..self.shards.len() {
-                self.collect_rounds(device, 0, &mut outcome)?;
+        if probe_solo && self.steal {
+            // Suspend stealing for the probe window: a thief lane pulling
+            // the probe's queued launches would re-overlap exactly the
+            // execution the solo-calibration track must measure
+            // un-overlapped. Restored below even on an error path.
+            for s in &mut self.shards {
+                s.pool.set_steal(false);
             }
         }
-        for device in 0..self.shards.len() {
-            let dispatched = self.dispatch_round(device, round, probe_solo, &mut outcome)?;
-            // With nothing new dispatched (idle shard) there is nothing to
-            // overlap with: collect every outstanding round so responses
-            // are never held hostage to a lull in arrivals.
-            let allowed = if dispatched && !probe_solo {
-                // Effective depth is per shard: the adaptive controller
-                // may have chosen a shallower pipeline than configured.
-                self.shards[device].resident_depth - 1
-            } else {
-                0
-            };
-            self.collect_rounds(device, allowed, &mut outcome)?;
+        let phases = self.run_round_phases(round, probe_solo, &mut outcome);
+        if probe_solo && self.steal {
+            for s in &mut self.shards {
+                s.pool.set_steal(true);
+            }
         }
+        phases?;
         // Periodic straggler check (stragglers judged against same-device
         // peers — see SloMonitor::with_device_map).
         self.rounds_since_check += 1;
@@ -1002,6 +1078,44 @@ impl Coordinator {
             outcome.evictions = evictions;
         }
         Ok(outcome)
+    }
+
+    /// The dispatch/collect body of [`Coordinator::run_round`], split out
+    /// so the probe-window steal suspension around it restores on every
+    /// exit path.
+    fn run_round_phases(
+        &mut self,
+        round: u64,
+        probe_solo: bool,
+        outcome: &mut RoundOutcome,
+    ) -> Result<()> {
+        if probe_solo {
+            // A solo probe's measurements must be genuinely un-overlapped
+            // or they would pollute the solo track with interference from
+            // rounds still executing: drain EVERY shard first (they share
+            // one underlying engine, so even another shard's in-flight
+            // round would contend), and below each shard's probe is
+            // collected before the next dispatches — a deliberate
+            // pipeline bubble once every SOLO_PROBE_EVERY rounds.
+            for device in 0..self.shards.len() {
+                self.collect_rounds(device, 0, outcome)?;
+            }
+        }
+        for device in 0..self.shards.len() {
+            let dispatched = self.dispatch_round(device, round, probe_solo, outcome)?;
+            // With nothing new dispatched (idle shard) there is nothing to
+            // overlap with: collect every outstanding round so responses
+            // are never held hostage to a lull in arrivals.
+            let allowed = if dispatched && !probe_solo {
+                // Effective depth is per shard: the adaptive controller
+                // may have chosen a shallower pipeline than configured.
+                self.shards[device].resident_depth - 1
+            } else {
+                0
+            };
+            self.collect_rounds(device, allowed, outcome)?;
+        }
+        Ok(())
     }
 
     /// Plan one shard's round in its recycled arena and dispatch every
@@ -1043,6 +1157,7 @@ impl Coordinator {
             (c.stats.hits, c.stats.misses)
         };
         let lane_of = std::mem::take(&mut plan.lane_of);
+        let cost_of = std::mem::take(&mut plan.cost_of);
         let mut sent = 0usize;
         let mut dispatch_err = None;
         for (index, launch) in plan.launches.drain(..).enumerate() {
@@ -1088,6 +1203,14 @@ impl Coordinator {
                         spec,
                         weights,
                         weights_marshal_s: marshal_t0.elapsed().as_secs_f64(),
+                        // Predicted cost from the balancer (0.0 when no
+                        // cost model): the victim-selection heuristic
+                        // ranks lanes by summed hints, so thieves steal
+                        // from the predicted-longest backlog.
+                        cost_hint: cost_of.get(index).copied().unwrap_or(0.0),
+                        executed_lane: lane,
+                        stolen: false,
+                        attempt: 0,
                     });
                     sent += 1;
                 }
@@ -1101,6 +1224,7 @@ impl Coordinator {
             }
         }
         plan.lane_of = lane_of;
+        plan.cost_of = cost_of;
         shard.arena.finish();
         if shard.controller.is_some() {
             // Plan + marshal time is what a deeper pipeline hides; the
@@ -1189,6 +1313,14 @@ impl Coordinator {
         } else {
             Some(shard.win_hits as f64 / win_total as f64)
         };
+        // Fraction of this window's completions that executed on a thief
+        // lane. 0.0 with stealing off (win_steals never increments), so
+        // the signal is inert for non-stealing configs.
+        let steal_rate = if shard.win_launches == 0 {
+            0.0
+        } else {
+            shard.win_steals as f64 / shard.win_launches as f64
+        };
         let signals = ControlSignals {
             backlog: shard.queues.total_pending(),
             arrival_rate: shard.queues.arrival_rate(now),
@@ -1199,6 +1331,7 @@ impl Coordinator {
             stretch,
             slo_attainment,
             min_slo_s,
+            steal_rate,
         };
         let decision = ctl.decide(&signals);
         // The window's verdicts are consumed at every dwell boundary: a
@@ -1206,6 +1339,8 @@ impl Coordinator {
         // completions, which imply the tracker signals decide() needs).
         shard.win_hits = 0;
         shard.win_misses = 0;
+        shard.win_launches = 0;
+        shard.win_steals = 0;
         Some(ControlPlan { device, decision })
     }
 
@@ -1262,6 +1397,53 @@ impl Coordinator {
         }
         let res = match c.result {
             Ok(res) => res,
+            Err(e) if c.attempt == 0 && shard.pool.lanes() > 1 => {
+                // First failure with somewhere else to run: retry ONCE
+                // through the steal path on the next lane over. The
+                // completion carries launch/spec/weights exactly so this
+                // rebuild needs no registry or fusion-cache access, and
+                // the weights are already device-resident (marshal cost
+                // was paid — and recorded — on the first attempt). The
+                // round's ticket was decremented above, so re-open it for
+                // the retried launch.
+                let lanes = shard.pool.lanes();
+                let target = (c.executed_lane + 1) % lanes;
+                log::warn!(
+                    "launch {} of round {} failed on lane {}: {e:#}; \
+                     retrying once on lane {target}",
+                    c.index,
+                    c.round,
+                    c.executed_lane
+                );
+                shard.launch_retries += 1;
+                if let Some(pos) =
+                    shard.tickets.iter().position(|t| t.round == c.round)
+                {
+                    shard.tickets[pos].outstanding += 1;
+                } else {
+                    shard
+                        .tickets
+                        .push_back(RoundTicket { round: c.round, outstanding: 1 });
+                }
+                shard.pool.dispatch(WorkItem {
+                    round: c.round,
+                    index: c.index,
+                    // Queued on the NEXT lane over (the pool queues by
+                    // `lane`); if that lane is also backed up, a thief can
+                    // still pull it — the retry rides the steal machinery.
+                    lane: target,
+                    lanes_resident: c.lanes_resident,
+                    launch: c.launch,
+                    spec: c.spec,
+                    weights: c.weights,
+                    weights_marshal_s: 0.0,
+                    cost_hint: c.cost_hint,
+                    executed_lane: target,
+                    stolen: false,
+                    attempt: 1,
+                });
+                return Ok(());
+            }
             Err(e) => {
                 // A failed launch must not discard the outcome: responses
                 // from OTHER rounds collected in this same call are
@@ -1271,9 +1453,10 @@ impl Coordinator {
                 // submitters are rejected at shutdown, as before), and
                 // keep serving.
                 log::error!(
-                    "launch {} of round {} failed: {e:#} ({} requests dropped)",
+                    "launch {} of round {} failed{}: {e:#} ({} requests dropped)",
                     c.index,
                     c.round,
+                    if c.attempt > 0 { " after retry" } else { "" },
                     c.launch.entries.len()
                 );
                 return Ok(());
@@ -1285,6 +1468,19 @@ impl Coordinator {
             shard.superkernel_launches += 1;
         } else {
             self.metrics.record_kernel_launch();
+        }
+        // Steal accounting: exported per-thief through the mirror, and
+        // windowed per dwell for the controller's imbalance signal
+        // (sustained stealing means the balancer's placement and reality
+        // disagree — a candidate reason to re-decide the lane count).
+        if c.stolen {
+            shard.mirror.record_steal(c.executed_lane);
+        }
+        if shard.controller.is_some() {
+            shard.win_launches += 1;
+            if c.stolen {
+                shard.win_steals += 1;
+            }
         }
         // Calibrate this shard's launch-latency predictor with the
         // measured end-to-end launch duration (marshal + execute — what a
@@ -1312,7 +1508,10 @@ impl Coordinator {
                 shard.tracker.observe_launch(deflated);
             }
         }
-        shard.mirror.record_launch(c.lane, res.service_s + res.marshal_s);
+        // Busy time lands on the lane that actually RAN the item (stolen
+        // items bill the thief) — lane_busy_s is a utilization view, while
+        // the cost-model feedback above keyed on the planned round tag.
+        shard.mirror.record_launch(c.executed_lane, res.service_s + res.marshal_s);
         let mut outputs = res.outputs.into_iter();
         for entry in &c.launch.entries {
             let output = outputs.next().expect("one output per launch entry");

@@ -9,15 +9,30 @@
 //! joined on shutdown, fed through per-lane SPSC work queues and drained
 //! through one shared completion channel.
 //!
-//! The synchronization protocol itself (SPSC dispatch, the shared
-//! completion channel, resize grow/retire/drain, shutdown) lives in
+//! The synchronization protocol itself (stealable deque dispatch, the
+//! shared completion channel, resize grow/retire/drain, shutdown) lives in
 //! [`crate::coordinator::protocol`] as [`LaneProtocol`], generic over a
 //! [`crate::coordinator::protocol::SyncEnv`]; this module instantiates it
 //! with real threads ([`StdEnv`]) and the production executor glue. The
 //! same protocol code runs under the deterministic model checker
-//! (`tests/modelcheck_protocol.rs`), which explores *every* interleaving
-//! of dispatch/collect/resize/shutdown — the tests below sample real-time
-//! schedules on top of that.
+//! (`tests/modelcheck_protocol.rs`, `tests/modelcheck_steal.rs`), which
+//! explores *every* interleaving of dispatch/collect/steal/resize/shutdown
+//! — the tests below sample real-time schedules on top of that.
+//!
+//! **Work stealing** ([`LanePool::set_steal`], off by default) makes round
+//! execution work-conserving: a lane whose queue drains early steals from
+//! the back of the predicted-longest remaining lane instead of idling
+//! until the round's slowest lane finishes — cost-model misprediction and
+//! heavy-tailed launch costs stop translating directly into dead device
+//! time. The steal victim is chosen by predicted-remaining cost, fed by
+//! each item's [`WorkItem::cost_hint`] (the driver fills it from the cost
+//! model's concurrent prediction). A stolen item keeps its **planned**
+//! round/lane tags and additionally reports
+//! [`Completion::executed_lane`]/[`Completion::stolen`], so cost-model
+//! attribution (`observe_concurrent` keyed by the round's resident lane
+//! count) stays correct while the driver's steal counters see where work
+//! actually ran. The driver disables stealing around solo-calibration
+//! probe rounds — probe measurements must stay un-overlapped.
 //!
 //! Every [`WorkItem`] is **round-tagged** at dispatch: it carries the
 //! round id it was planned in and the lane count that round planned to
@@ -28,11 +43,12 @@
 //! the completion is processed.
 //!
 //! Ordering guarantees: each lane's queue is FIFO, so launches sharing a
-//! lane execute in dispatch (urgency) order; across lanes completions
-//! interleave by actual finish time. The pool is execution-only — it
-//! never touches queues, the fusion cache, or the cost model, so the
-//! driver thread can plan round N+1 (drain admission, run the planner,
-//! marshal weights) while the pool executes round N.
+//! lane execute in dispatch (urgency) order (with stealing on, a thief
+//! takes the *least* urgent queued item — the back); across lanes
+//! completions interleave by actual finish time. The pool is
+//! execution-only — it never touches queues, the fusion cache, or the
+//! cost model, so the driver thread can plan round N+1 (drain admission,
+//! run the planner, marshal weights) while the pool executes round N.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -73,6 +89,18 @@ pub struct WorkItem {
     /// still observes the FULL launch cost even though the upload ran on
     /// the driver thread.
     pub weights_marshal_s: f64,
+    /// Predicted execution cost (seconds, or any consistent unit) used by
+    /// the steal-victim heuristic and resize re-homing. 0.0 degrades to
+    /// unit cost (longest-queue victim selection).
+    pub cost_hint: f64,
+    /// Lane the item actually executed on (stamped by the protocol just
+    /// before the runner; equals the planned `lane` unless stolen).
+    pub executed_lane: usize,
+    /// Whether the item was taken by a thief lane rather than its owner.
+    pub stolen: bool,
+    /// Execution attempt: 0 on first dispatch, 1 on the single
+    /// failed-launch retry the driver routes through another lane.
+    pub attempt: u32,
 }
 
 impl ProtoPayload for WorkItem {}
@@ -84,6 +112,17 @@ impl LaneTagged for WorkItem {
     fn set_lane(&mut self, lane: usize) {
         self.lane = lane;
     }
+    fn cost(&self) -> f64 {
+        if self.cost_hint > 0.0 {
+            self.cost_hint
+        } else {
+            1.0
+        }
+    }
+    fn set_executed(&mut self, lane: usize, stolen: bool) {
+        self.executed_lane = lane;
+        self.stolen = stolen;
+    }
 }
 
 /// A finished launch, echoing its round tag so the driver attributes the
@@ -92,11 +131,28 @@ impl LaneTagged for WorkItem {
 pub struct Completion {
     pub round: u64,
     pub index: usize,
+    /// The PLANNED lane (post-clamp) — what cost-model attribution and the
+    /// plan's lane accounting key on, even when the item was stolen.
     pub lane: usize,
     pub lanes_resident: usize,
+    /// The lane that actually executed the item (differs from `lane` only
+    /// when stolen, or after a resize re-home rewrote the plan).
+    pub executed_lane: usize,
+    /// Whether a thief lane executed the item.
+    pub stolen: bool,
+    /// Execution attempt this completion reports (0 = first, 1 = retry).
+    pub attempt: u32,
     /// The launch rides back so entries can be scattered to responses
-    /// without the driver holding the (already recycled) plan.
+    /// without the driver holding the (already recycled) plan — and so a
+    /// failed launch can be retried once on another lane without
+    /// re-planning.
     pub launch: Launch,
+    /// Spec/weights ride back for the same reason: the retry path rebuilds
+    /// a WorkItem without touching the tenant registry or fusion cache.
+    pub spec: ModelSpec,
+    pub weights: Option<Arc<WeightSet>>,
+    /// The original predicted cost, reused verbatim by the retry.
+    pub cost_hint: f64,
     pub result: Result<LaunchResult>,
     /// Instant the launch finished on its worker.
     pub done: Instant,
@@ -163,8 +219,35 @@ impl ItemRunner<WorkItem, Completion> for ExecRunner {
             res.marshal_s += item.weights_marshal_s;
         }
         let done = Instant::now();
-        let WorkItem { round, index, lane, lanes_resident, launch, .. } = item;
-        Completion { round, index, lane, lanes_resident, launch, result, done }
+        let WorkItem {
+            round,
+            index,
+            lane,
+            lanes_resident,
+            launch,
+            spec,
+            weights,
+            cost_hint,
+            executed_lane,
+            stolen,
+            attempt,
+            ..
+        } = item;
+        Completion {
+            round,
+            index,
+            lane,
+            lanes_resident,
+            executed_lane,
+            stolen,
+            attempt,
+            launch,
+            spec,
+            weights,
+            cost_hint,
+            result,
+            done,
+        }
     }
 }
 
@@ -232,6 +315,39 @@ impl LanePool {
         self.proto.in_flight()
     }
 
+    /// Enable or disable cross-lane work stealing (off by default — with
+    /// it off the pool behaves exactly like the pre-steal SPSC pool). The
+    /// driver flips this around solo-calibration probe rounds.
+    pub fn set_steal(&mut self, on: bool) {
+        self.proto.set_steal(on);
+    }
+
+    /// Whether stealing is currently enabled.
+    pub fn stealing(&self) -> bool {
+        self.proto.stealing()
+    }
+
+    /// Minimum victim queue length before a thief may steal (>= 1).
+    pub fn set_steal_min(&mut self, min: usize) {
+        self.proto.set_steal_min(min);
+    }
+
+    /// Lifetime items stolen BY each lane slot (thief-side attribution).
+    pub fn lane_steals(&self) -> Vec<u64> {
+        self.proto.lane_steals()
+    }
+
+    /// Lifetime steals across all lanes.
+    pub fn steals_total(&self) -> u64 {
+        self.proto.steals_total()
+    }
+
+    /// Work-queue capacity growths (flat post-warmup == the dispatch and
+    /// steal paths recycle their buffers without heap growth).
+    pub fn queue_grows(&self) -> u64 {
+        self.proto.queue_grows()
+    }
+
     /// Close the queues, join every worker, and return the completions
     /// that finished but were never collected — the zero-lost-completions
     /// drain contract: `collected + shutdown().len() == dispatched` as
@@ -272,6 +388,10 @@ mod tests {
             spec: ModelSpec::Sgemm { m: 8, n: 8, k: 8 },
             weights: None,
             weights_marshal_s: 0.0,
+            cost_hint: 0.0,
+            executed_lane: lane,
+            stolen: false,
+            attempt: 0,
         }
     }
 
@@ -485,6 +605,105 @@ mod tests {
         assert_eq!(per_round[&3], 6);
         let leftover = pool.shutdown();
         assert!(leftover.is_empty());
+    }
+
+    /// Blocks on items with `round == 0` until the test opens the gate;
+    /// signals entry so tests can wait until a worker is provably inside.
+    struct BlockRound0 {
+        gate: Arc<(std::sync::Mutex<(bool, u32)>, std::sync::Condvar)>,
+    }
+    impl BlockRound0 {
+        #[allow(clippy::type_complexity)]
+        fn new() -> (Arc<(std::sync::Mutex<(bool, u32)>, std::sync::Condvar)>, Self) {
+            let gate = Arc::new((std::sync::Mutex::new((false, 0)), std::sync::Condvar::new()));
+            (gate.clone(), BlockRound0 { gate })
+        }
+    }
+    impl LaunchExecutor for BlockRound0 {
+        fn execute(&self, item: &WorkItem) -> Result<LaunchResult> {
+            if item.round == 0 {
+                let (m, cv) = &*self.gate;
+                let mut st = m.lock().unwrap();
+                st.1 += 1;
+                cv.notify_all();
+                while !st.0 {
+                    st = cv.wait(st).unwrap();
+                }
+            }
+            EchoExec.execute(item)
+        }
+    }
+
+    #[test]
+    fn steal_rebalances_a_blocked_lane_and_tags_executed_lane() {
+        let (gate, exec) = BlockRound0::new();
+        let mut pool = LanePool::new(2, Arc::new(exec));
+        pool.set_steal(true);
+        assert!(pool.stealing());
+        // Blocker onto lane 0; wait until a worker is stuck inside it.
+        pool.dispatch(item(0, 99, 0, 2));
+        {
+            let (m, cv) = &*gate;
+            let mut st = m.lock().unwrap();
+            while st.1 < 1 {
+                st = cv.wait(st).unwrap();
+            }
+        }
+        // Backlog behind the blocker: the free worker must execute all of
+        // it while the gate is closed — work conservation under imbalance.
+        for i in 0..4usize {
+            pool.dispatch(item(1, i, 0, 2));
+        }
+        for _ in 0..4 {
+            let c = pool.collect().unwrap();
+            assert_eq!(c.round, 1, "gate item cannot finish while closed");
+            assert_eq!(c.lane, 0, "planned lane tag survives stealing");
+            assert!(c.executed_lane < 2);
+            assert_eq!(c.lanes_resident, 2, "round tag intact on stolen work");
+            if c.stolen {
+                assert_ne!(c.executed_lane, c.lane, "stolen implies a thief lane");
+            }
+        }
+        assert!(pool.steals_total() >= 1, "at least one item crossed lanes");
+        {
+            let (m, cv) = &*gate;
+            m.lock().unwrap().0 = true;
+            cv.notify_all();
+        }
+        let c = pool.collect().unwrap();
+        assert_eq!(c.round, 0);
+        assert_eq!(pool.in_flight(), 0);
+        assert!(pool.shutdown().is_empty());
+    }
+
+    #[test]
+    fn steal_off_by_default_keeps_lanes_private() {
+        let (gate, exec) = BlockRound0::new();
+        let mut pool = LanePool::new(2, Arc::new(exec));
+        assert!(!pool.stealing(), "stealing must be opt-in");
+        pool.dispatch(item(0, 99, 0, 2));
+        {
+            let (m, cv) = &*gate;
+            let mut st = m.lock().unwrap();
+            while st.1 < 1 {
+                st = cv.wait(st).unwrap();
+            }
+        }
+        for i in 0..3usize {
+            pool.dispatch(item(1, i, 0, 2));
+        }
+        {
+            let (m, cv) = &*gate;
+            m.lock().unwrap().0 = true;
+            cv.notify_all();
+        }
+        for _ in 0..4 {
+            let c = pool.collect().unwrap();
+            assert_eq!(c.executed_lane, 0, "steal off: only the owner executes");
+            assert!(!c.stolen);
+        }
+        assert_eq!(pool.steals_total(), 0);
+        assert!(pool.shutdown().is_empty());
     }
 
     #[test]

@@ -7,26 +7,60 @@
 //! * `ModelEnv` (in [`crate::util::modelcheck`]) — cooperative virtual
 //!   threads whose every channel operation is a *decision point* for a
 //!   DFS schedule explorer. The model-check tests in
-//!   `tests/modelcheck_protocol.rs` run the protocol below under **every**
-//!   interleaving (up to a bounded-preemption cap) and assert the
-//!   conservation invariants the example-based tests can only sample.
+//!   `tests/modelcheck_protocol.rs` and `tests/modelcheck_steal.rs` run the
+//!   protocol below under **every** interleaving (up to a bounded-preemption
+//!   cap) and assert the conservation invariants the example-based tests can
+//!   only sample.
 //!
-//! What the protocol owns (and what the checker therefore proves):
+//! Since the work-stealing PR, per-lane queues are **stealable deques**, not
+//! SPSC channels. The layout:
 //!
-//! * **SPSC dispatch** — one FIFO queue per lane; the driver is the only
-//!   sender, the lane worker the only receiver.
-//! * **Shared completion channel** — every worker reports into one MPSC
-//!   channel the driver collects from; the protocol keeps its own clone of
-//!   the sender so the channel never closes while the pool lives.
+//! * **Shared deque state** — one `VecDeque` per lane plus per-lane
+//!   predicted-remaining sums, guarded by a single mutex. The mutex is only
+//!   ever held *between* environment decision points (never across a channel
+//!   op or the runner), so under the model environment every critical
+//!   section is atomic per explored step and the mutex is always
+//!   uncontended — the explorer still covers all orderings of the critical
+//!   sections because each vthread reaches its section through a decision
+//!   point.
+//! * **Owner pops front, thief pops back** — a lane worker takes from the
+//!   front of its own queue (FIFO per lane, exactly the pre-steal order);
+//!   an idle worker whose own queue is empty steals from the *back* of the
+//!   predicted-longest remaining queue (ties break to the lowest lane).
+//!   [`LaneTagged::set_executed`] records where an item actually ran so
+//!   completions keep their *planned* round/lane tags for cost-model
+//!   attribution while reporting the executing lane for steal accounting.
+//! * **Wake tokens** — all blocking goes through one wake-token channel per
+//!   lane. A worker marks itself idle under the lock *before* parking on
+//!   its wake receiver; anyone who makes work available (dispatch, resize,
+//!   enabling steal) clears the idle flag at token-send time, so at most
+//!   one token is ever outstanding per parked worker and the channel buffer
+//!   makes lost wakeups impossible. A `None` from the wake receiver (its
+//!   sender dropped at retire/shutdown) is just another reason to re-check
+//!   the deque state — the observable condition always lives in the state,
+//!   never in the token.
 //! * **Round tags** — items carry their round id through dispatch and back
 //!   on the completion; conservation (`collected + drained == dispatched`,
-//!   per round) is the checker's core assertion.
-//! * **Resize grow/retire/drain** — growing spawns fresh workers onto the
-//!   shared completion channel; retiring drops a lane's sender so the
-//!   worker drains its queue and exits on its own, never abandoning a
-//!   queued item.
+//!   per round) is the checker's core assertion, now with stealing on.
+//! * **Resize grow/retire/drain** — retiring a lane moves everything still
+//!   queued on it to the least-loaded survivor under the lock (no item is
+//!   ever abandoned), stamps the lane's owner id so the retired worker
+//!   exits at its next re-check, and only then drops its wake sender.
+//!   Growing spawns fresh workers with new owner ids — a worker from an
+//!   earlier life of the same lane index can never race the replacement,
+//!   because its owner check fails before it touches a queue.
 //! * **Panic containment** — converting executor panics to `Err` payloads
 //!   is the [`ItemRunner`]'s job, so a worker thread never dies mid-round.
+//!
+//! Stealing is disabled around solo-calibration probe rounds (the driver
+//! flips [`LaneProtocol::set_steal`]) so probe measurements stay genuinely
+//! un-overlapped, and is off by default — with `steal = false` the protocol
+//! behaves exactly like the pre-steal SPSC pool: owners drain their own
+//! queues in FIFO order and nothing else touches them.
+
+use crate::util::sync::lock_recover;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 
 /// Payload that can flow through a protocol channel. `fingerprint` is the
 /// model checker's state-hash hook: two payloads with equal fingerprints
@@ -37,6 +71,15 @@ pub trait ProtoPayload: Send + 'static {
         0
     }
 }
+
+/// Wake token for parked lane workers. Carries no data on purpose: every
+/// observable condition (work queued, steal enabled, lane retired, pool
+/// closed) lives in the shared deque state, and a woken worker re-derives
+/// what to do from there — tokens can be spuriously consumed or arrive
+/// late without breaking anything.
+pub struct Wake;
+
+impl ProtoPayload for Wake {}
 
 /// Sending half of a protocol channel. Cloned by the environment when a
 /// worker needs its own handle (the completion channel is MPSC).
@@ -80,6 +123,20 @@ pub trait SyncEnv: 'static {
 pub trait LaneTagged {
     fn lane(&self) -> usize;
     fn set_lane(&mut self, lane: usize);
+    /// Predicted execution cost, used to pick the steal victim (the lane
+    /// with the largest predicted-remaining backlog) and the least-loaded
+    /// survivor on a resize drain. The default treats every item as unit
+    /// cost, which degrades victim selection to longest-queue — correct,
+    /// just less informed.
+    fn cost(&self) -> f64 {
+        1.0
+    }
+    /// Record where the item actually executed and whether it was stolen.
+    /// Called under the deque lock just before the item is handed to the
+    /// runner; the *planned* lane tag from [`LaneTagged::set_lane`] is left
+    /// untouched so completions attribute to the plan. Default: no-op (for
+    /// payloads that don't track execution placement).
+    fn set_executed(&mut self, _lane: usize, _stolen: bool) {}
 }
 
 /// What a lane worker runs per item. Implementations MUST NOT panic —
@@ -91,48 +148,184 @@ pub trait ItemRunner<W, C>: Send + Sync + 'static {
     fn run(&self, item: W) -> C;
 }
 
-/// The generic persistent lane pool: `lanes` workers, one SPSC queue each,
-/// one shared completion channel. See the module docs for the protocol
-/// invariants; see [`crate::coordinator::lanepool::LanePool`] for the
-/// production instantiation and user-facing docs.
+/// Owner id stamped on a retired lane so the outgoing worker's next
+/// re-check fails and it exits (real ids count up from 0 and never reach
+/// this).
+const RETIRED: u64 = u64::MAX;
+
+/// The shared stealable-deque state. One mutex guards all of it: lane
+/// queues are touched from the driver (dispatch/resize) and every worker
+/// (own pops + steals), and a single lock keeps the cross-lane invariants
+/// (`rem` sums, idle flags, owner ids) atomic with the queue edits. The
+/// lock is never held across a channel operation or the runner.
+struct DequeState<W> {
+    /// Per-lane FIFO of `(predicted cost, item)`. Owner pops front, thief
+    /// pops back. Indexed by lane; retired lanes keep their (empty) slot
+    /// so historical `steals` counters survive resizes.
+    queues: Vec<VecDeque<(f64, W)>>,
+    /// Predicted-remaining cost per lane (sum of queued costs). Steal
+    /// victim selection is argmax over this; resize drains re-home items
+    /// onto the argmin survivor.
+    rem: Vec<f64>,
+    /// Whether the lane's worker is parked on its wake channel. Set by the
+    /// worker under this lock before parking; cleared by whoever sends the
+    /// wake token, so at most one token is outstanding per parked worker.
+    idle: Vec<bool>,
+    /// Spawn id of the lane's current worker. A worker whose id no longer
+    /// matches (lane retired, or retired-then-regrown) exits without
+    /// touching the queues.
+    owner: Vec<u64>,
+    /// Items stolen BY each lane (thief-side attribution), lifetime.
+    steals: Vec<u64>,
+    /// Deque capacity growths (a push that found `len == capacity`).
+    /// Post-warmup this must stay flat — the steal path reuses the same
+    /// buffers the SPSC path warmed up.
+    grows: u64,
+    /// Work stealing enabled. Off: owners drain their own queues in FIFO
+    /// order and nothing else touches them (bit-for-bit the pre-steal
+    /// pool).
+    steal: bool,
+    /// Minimum victim queue length for a steal (>= 1).
+    steal_min: usize,
+    /// Shutdown flag: workers drain their own queue, then exit instead of
+    /// parking. Set before wake senders are dropped, so a `None` recv
+    /// always finds an exit condition on re-check.
+    closed: bool,
+}
+
+/// What a worker should do next, decided atomically under the deque lock.
+enum Step<W> {
+    Run(W),
+    Park,
+    Exit,
+}
+
+/// One atomic scheduling decision for the worker on `lane` with owner id
+/// `id`: own front first (FIFO per lane, and the drain guarantee — a
+/// closing worker empties its own queue before exiting), then a steal from
+/// the back of the predicted-longest other lane, then exit-or-park.
+// lint: hot-path
+fn take_work<W: LaneTagged>(
+    state: &Mutex<DequeState<W>>,
+    lane: usize,
+    id: u64,
+) -> Step<W> {
+    let mut st = lock_recover(state);
+    if st.owner[lane] != id {
+        return Step::Exit; // lane retired (or retired-then-regrown)
+    }
+    if let Some((cost, mut item)) = st.queues[lane].pop_front() {
+        st.rem[lane] -= cost;
+        if st.rem[lane] < 0.0 {
+            st.rem[lane] = 0.0; // float drift never goes negative
+        }
+        item.set_executed(lane, false);
+        return Step::Run(item);
+    }
+    if st.steal && !st.closed {
+        // Victim: the lane with the largest predicted-remaining backlog
+        // whose queue clears the steal threshold; ties break low.
+        let mut victim = usize::MAX;
+        let mut best = 0.0f64;
+        for l in 0..st.queues.len() {
+            let qlen = st.queues[l].len();
+            if l == lane || qlen == 0 || qlen < st.steal_min {
+                continue;
+            }
+            if victim == usize::MAX || st.rem[l] > best {
+                victim = l;
+                best = st.rem[l];
+            }
+        }
+        if victim != usize::MAX {
+            let (cost, mut item) =
+                st.queues[victim].pop_back().expect("victim checked nonempty");
+            st.rem[victim] -= cost;
+            if st.rem[victim] < 0.0 {
+                st.rem[victim] = 0.0;
+            }
+            st.steals[lane] += 1;
+            item.set_executed(lane, true);
+            return Step::Run(item);
+        }
+    }
+    if st.closed {
+        return Step::Exit;
+    }
+    st.idle[lane] = true;
+    Step::Park
+}
+
+/// One worker's loop: take a scheduling decision under the lock, run work
+/// outside it, park on the wake channel when there is nothing to do. Both
+/// `Some(Wake)` and `None` (wake sender dropped at retire/shutdown) just
+/// re-check: state changes always precede the signal that delivers them.
+fn worker_loop<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload>(
+    state: Arc<Mutex<DequeState<W>>>,
+    wake_rx: E::Receiver<Wake>,
+    done_tx: E::Sender<C>,
+    runner: Arc<dyn ItemRunner<W, C>>,
+    lane: usize,
+    id: u64,
+) {
+    loop {
+        match take_work(&state, lane, id) {
+            Step::Run(item) => {
+                let done = runner.run(item);
+                if done_tx.send(done).is_err() {
+                    return; // driver gone: nobody to report to
+                }
+            }
+            Step::Park => {
+                let _ = wake_rx.recv();
+            }
+            Step::Exit => return,
+        }
+    }
+}
+
+/// The generic persistent lane pool: `lanes` workers over stealable deques,
+/// one wake channel each, one shared completion channel. See the module
+/// docs for the protocol invariants; see
+/// [`crate::coordinator::lanepool::LanePool`] for the production
+/// instantiation and user-facing docs.
 pub struct LaneProtocol<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> {
-    senders: Vec<E::Sender<W>>,
+    state: Arc<Mutex<DequeState<W>>>,
+    /// Wake-token senders, one per active lane (`wake_tx.len()` is the
+    /// pool width). Dropping one (truncate on retire, clear on shutdown)
+    /// unblocks the parked worker with `None`.
+    wake_tx: Vec<E::Sender<Wake>>,
     completions: E::Receiver<C>,
     /// Kept so `resize` can hand fresh workers the shared channel — and so
     /// the channel stays open for the protocol's lifetime (a dead worker
     /// surfaces as items that never complete, not a closed-channel error).
     done_tx: E::Sender<C>,
-    runner: std::sync::Arc<dyn ItemRunner<W, C>>,
+    runner: Arc<dyn ItemRunner<W, C>>,
     /// Every worker ever spawned (active and retired); joined on drop.
     workers: Vec<E::Join>,
-    /// Lifetime worker spawns (names stay unique across resizes).
+    /// Lifetime worker spawns (names and owner ids stay unique across
+    /// resizes).
     spawned: u64,
     dispatched: u64,
     collected: u64,
 }
 
-/// One worker's receive loop: FIFO over its lane queue; exits when the
-/// protocol drops the lane's sender (shutdown, or the lane retiring in a
-/// resize) **after** draining everything already queued — the resize
-/// conservation guarantee lives in this `while let`.
-fn worker_loop<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload>(
-    rx: E::Receiver<W>,
-    done_tx: E::Sender<C>,
-    runner: std::sync::Arc<dyn ItemRunner<W, C>>,
-) {
-    while let Some(item) = rx.recv() {
-        let done = runner.run(item);
-        if done_tx.send(done).is_err() {
-            return; // driver gone: nobody to report to
-        }
-    }
-}
-
 impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> LaneProtocol<E, W, C> {
-    pub fn new(lanes: usize, runner: std::sync::Arc<dyn ItemRunner<W, C>>) -> Self {
+    pub fn new(lanes: usize, runner: Arc<dyn ItemRunner<W, C>>) -> Self {
         let (done_tx, done_rx) = E::channel::<C>();
         let mut proto = Self {
-            senders: Vec::new(),
+            state: Arc::new(Mutex::new(DequeState {
+                queues: Vec::new(),
+                rem: Vec::new(),
+                idle: Vec::new(),
+                owner: Vec::new(),
+                steals: Vec::new(),
+                grows: 0,
+                steal: false,
+                steal_min: 1,
+                closed: false,
+            })),
+            wake_tx: Vec::new(),
             completions: done_rx,
             done_tx,
             runner,
@@ -146,45 +339,189 @@ impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> LaneProtocol<E, 
     }
 
     /// Change the resident lane count (clamped to >= 1) without losing any
-    /// in-flight completion. Growing spawns fresh workers; shrinking
-    /// retires the top lanes by dropping their senders: a retired worker
-    /// drains everything already queued on its lane and exits. Retired
-    /// handles are joined lazily at shutdown/drop so a resize never blocks
-    /// the round loop on a lane's backlog.
+    /// item or in-flight completion. Shrinking re-homes everything still
+    /// queued on a retiring lane onto the least-loaded survivor (rewriting
+    /// the lane tag), stamps the retired owner id, and drops the wake
+    /// sender — the outgoing worker finishes its current item (reported
+    /// normally) and exits at its next re-check. Growing spawns fresh
+    /// workers with new owner ids. Retired handles are joined lazily at
+    /// shutdown/drop so a resize never blocks the round loop.
     pub fn resize(&mut self, lanes: usize) {
         let lanes = lanes.max(1);
-        // Shrink: dropping a sender ends that worker's receive loop after
-        // its queued items (never mid-item).
-        self.senders.truncate(lanes);
-        // Grow: fresh workers on the shared completion channel.
-        while self.senders.len() < lanes {
-            let lane = self.senders.len();
-            let (tx, rx) = E::channel::<W>();
-            self.senders.push(tx);
-            let name = format!("stgpu-lane-{lane}.{}", self.spawned);
+        let cur = self.wake_tx.len();
+        if lanes < cur {
+            let mut wakes: Vec<usize> = Vec::new();
+            {
+                let mut st = lock_recover(&self.state);
+                for lane in lanes..cur {
+                    while let Some((cost, mut item)) = st.queues[lane].pop_front() {
+                        let mut dst = 0usize;
+                        for l in 1..lanes {
+                            if st.rem[l] < st.rem[dst] {
+                                dst = l;
+                            }
+                        }
+                        item.set_lane(dst);
+                        let q = &mut st.queues[dst];
+                        if q.len() == q.capacity() {
+                            st.grows += 1;
+                        }
+                        q.push_back((cost, item));
+                        st.rem[dst] += cost;
+                    }
+                    st.rem[lane] = 0.0;
+                    st.owner[lane] = RETIRED;
+                    st.idle[lane] = false;
+                }
+                // Survivors that parked before the drain may now have
+                // work (their own queue grew, or steal can reach the
+                // re-homed backlog): clear idle at token-send decision.
+                for lane in 0..lanes {
+                    if st.idle[lane]
+                        && (!st.queues[lane].is_empty()
+                            || (st.steal
+                                && st.queues.iter().any(|q| !q.is_empty())))
+                    {
+                        st.idle[lane] = false;
+                        wakes.push(lane);
+                    }
+                }
+            }
+            // State changes above happen-before the sender drops below, so
+            // a retired worker's `None` recv always finds RETIRED on
+            // re-check.
+            self.wake_tx.truncate(lanes);
+            for lane in wakes {
+                let _ = self.wake_tx[lane].send(Wake);
+            }
+        }
+        while self.wake_tx.len() < lanes {
+            let lane = self.wake_tx.len();
+            let id = self.spawned;
             self.spawned += 1;
+            {
+                let mut st = lock_recover(&self.state);
+                if st.queues.len() <= lane {
+                    st.queues.push(VecDeque::new());
+                    st.rem.push(0.0);
+                    st.idle.push(false);
+                    st.owner.push(id);
+                    st.steals.push(0);
+                } else {
+                    // Reviving a previously retired slot: its queue was
+                    // drained at retire, so only the ownership changes.
+                    st.owner[lane] = id;
+                    st.idle[lane] = false;
+                    st.rem[lane] = 0.0;
+                }
+            }
+            let (tx, rx) = E::channel::<Wake>();
+            self.wake_tx.push(tx);
+            let name = format!("stgpu-lane-{lane}.{id}");
             let done_tx = self.done_tx.clone();
             let runner = self.runner.clone();
-            self.workers
-                .push(E::spawn(name, move || worker_loop::<E, W, C>(rx, done_tx, runner)));
+            let state = self.state.clone();
+            self.workers.push(E::spawn(name, move || {
+                worker_loop::<E, W, C>(state, rx, done_tx, runner, lane, id)
+            }));
         }
     }
 
     pub fn lanes(&self) -> usize {
-        self.senders.len()
+        self.wake_tx.len()
+    }
+
+    /// Enable or disable work stealing. Turning it on wakes every parked
+    /// worker when any backlog exists (they can now steal it); turning it
+    /// off lets in-progress steals finish but prevents new ones — the next
+    /// `take_work` sees the flag. The driver flips this around
+    /// solo-calibration probe rounds.
+    pub fn set_steal(&mut self, on: bool) {
+        let mut wakes: Vec<usize> = Vec::new();
+        {
+            let mut st = lock_recover(&self.state);
+            st.steal = on;
+            if on && st.queues.iter().any(|q| !q.is_empty()) {
+                for l in 0..self.wake_tx.len() {
+                    if st.idle[l] {
+                        st.idle[l] = false;
+                        wakes.push(l);
+                    }
+                }
+            }
+        }
+        for l in wakes {
+            let _ = self.wake_tx[l].send(Wake);
+        }
+    }
+
+    /// Whether stealing is currently enabled.
+    pub fn stealing(&self) -> bool {
+        lock_recover(&self.state).steal
+    }
+
+    /// Minimum victim queue length for a steal (clamped to >= 1).
+    pub fn set_steal_min(&mut self, min: usize) {
+        lock_recover(&self.state).steal_min = min.max(1);
+    }
+
+    /// Lifetime items stolen BY each lane (thief-side). Indexed by lane
+    /// slot — may be longer than the active width after a shrink, so
+    /// historical counters survive resizes.
+    pub fn lane_steals(&self) -> Vec<u64> {
+        lock_recover(&self.state).steals.clone()
+    }
+
+    /// Lifetime steals across all lanes.
+    pub fn steals_total(&self) -> u64 {
+        lock_recover(&self.state).steals.iter().sum()
+    }
+
+    /// Deque-capacity growths (pushes that found a full buffer). Flat
+    /// post-warmup == the steal path allocates nothing on the hot path.
+    pub fn queue_grows(&self) -> u64 {
+        lock_recover(&self.state).grows
     }
 
     /// Queue one item on its lane (clamped to the pool width; the item's
-    /// lane tag is rewritten so its completion reports the lane it actually
-    /// executed on). Returns immediately.
+    /// lane tag is rewritten so its completion reports the lane it was
+    /// planned onto after clamping). Wakes the owner if it is parked —
+    /// or, with stealing on, the first parked lane, which can steal the
+    /// new backlog. Returns immediately.
     // lint: hot-path
     pub fn dispatch(&mut self, mut item: W) {
-        let lane = item.lane().min(self.senders.len() - 1);
+        let width = self.wake_tx.len();
+        let lane = item.lane().min(width - 1);
         item.set_lane(lane);
         self.dispatched += 1;
-        // Send fails only if the worker's receive loop ended early, which
-        // it never does outside shutdown: runners contain panics per item.
-        let _ = self.senders[lane].send(item);
+        let cost = item.cost();
+        let mut wake = usize::MAX;
+        {
+            let mut st = lock_recover(&self.state);
+            let q = &mut st.queues[lane];
+            if q.len() == q.capacity() {
+                st.grows += 1;
+            }
+            q.push_back((cost, item));
+            st.rem[lane] += cost;
+            if st.idle[lane] {
+                st.idle[lane] = false;
+                wake = lane;
+            } else if st.steal {
+                for l in 0..width {
+                    if st.idle[l] {
+                        st.idle[l] = false;
+                        wake = l;
+                        break;
+                    }
+                }
+            }
+        }
+        // Token sent OUTSIDE the lock: a channel op is an environment
+        // decision point and the lock must never be held across one.
+        if wake != usize::MAX {
+            let _ = self.wake_tx[wake].send(Wake);
+        }
     }
 
     /// Block for the next completion (any lane, any in-flight round);
@@ -201,12 +538,14 @@ impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> LaneProtocol<E, 
         self.dispatched - self.collected
     }
 
-    /// Close the queues, join every worker, and return the completions
-    /// that finished but were never collected — the zero-lost-completions
-    /// drain contract: `collected + leftover.len() == dispatched` as long
-    /// as every dispatched item executed.
+    /// Close the pool, join every worker, and return the completions that
+    /// finished but were never collected — the zero-lost-completions drain
+    /// contract: `collected + leftover.len() == dispatched` as long as
+    /// every dispatched item executed. Each worker drains its OWN queue
+    /// before exiting (the own-front pop precedes the closed check), so
+    /// backlog is executed, not dropped, even with stealing off.
     pub fn shutdown_drain(&mut self) -> Vec<C> {
-        self.senders.clear(); // workers' receive loops end
+        self.close();
         for w in self.workers.drain(..) {
             w.join();
         }
@@ -217,13 +556,27 @@ impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> LaneProtocol<E, 
         }
         leftover
     }
+
+    /// Set `closed` (under the lock) and only then drop the wake senders:
+    /// a parked worker's `None` recv re-checks and finds the exit
+    /// condition already visible.
+    fn close(&mut self) {
+        {
+            let mut st = lock_recover(&self.state);
+            st.closed = true;
+            for i in st.idle.iter_mut() {
+                *i = false;
+            }
+        }
+        self.wake_tx.clear();
+    }
 }
 
 impl<E: SyncEnv, W: ProtoPayload + LaneTagged, C: ProtoPayload> Drop
     for LaneProtocol<E, W, C>
 {
     fn drop(&mut self) {
-        self.senders.clear();
+        self.close();
         for w in self.workers.drain(..) {
             w.join();
         }
@@ -295,12 +648,20 @@ impl SyncEnv for StdEnv {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+    use std::sync::{Arc, Condvar, Mutex};
 
     struct Item {
         round: u64,
         lane: usize,
+        executed: usize,
+        stolen: bool,
+        gate: bool,
     }
+
+    fn it(round: u64, lane: usize) -> Item {
+        Item { round, lane, executed: usize::MAX, stolen: false, gate: false }
+    }
+
     impl ProtoPayload for Item {}
     impl LaneTagged for Item {
         fn lane(&self) -> usize {
@@ -309,18 +670,72 @@ mod tests {
         fn set_lane(&mut self, lane: usize) {
             self.lane = lane;
         }
+        fn set_executed(&mut self, lane: usize, stolen: bool) {
+            self.executed = lane;
+            self.stolen = stolen;
+        }
     }
 
     struct Done {
         round: u64,
         lane: usize,
+        executed: usize,
+        stolen: bool,
     }
     impl ProtoPayload for Done {}
 
     struct Echo;
     impl ItemRunner<Item, Done> for Echo {
         fn run(&self, item: Item) -> Done {
-            Done { round: item.round, lane: item.lane }
+            Done {
+                round: item.round,
+                lane: item.lane,
+                executed: item.executed,
+                stolen: item.stolen,
+            }
+        }
+    }
+
+    /// Blocks on items with `gate = true` until the test opens the gate;
+    /// signals entry so tests can wait until a worker is provably inside.
+    struct GateExec {
+        gate: Arc<(Mutex<(bool, u32)>, Condvar)>,
+    }
+    impl GateExec {
+        fn new() -> (Arc<(Mutex<(bool, u32)>, Condvar)>, Self) {
+            let gate = Arc::new((Mutex::new((false, 0)), Condvar::new()));
+            (gate.clone(), GateExec { gate })
+        }
+        fn wait_entered(gate: &Arc<(Mutex<(bool, u32)>, Condvar)>, n: u32) {
+            let (m, cv) = &**gate;
+            let mut st = m.lock().unwrap();
+            while st.1 < n {
+                st = cv.wait(st).unwrap();
+            }
+        }
+        fn open(gate: &Arc<(Mutex<(bool, u32)>, Condvar)>) {
+            let (m, cv) = &**gate;
+            m.lock().unwrap().0 = true;
+            cv.notify_all();
+        }
+    }
+    impl ItemRunner<Item, Done> for GateExec {
+        fn run(&self, item: Item) -> Done {
+            if item.gate {
+                let (m, cv) = &*self.gate;
+                let mut st = m.lock().unwrap();
+                st.1 += 1;
+                cv.notify_all();
+                while !st.0 {
+                    st = cv.wait(st).unwrap();
+                }
+            }
+            Done {
+                round: item.round,
+                lane: item.lane,
+                executed: item.executed,
+                stolen: item.stolen,
+            }
         }
     }
 
@@ -328,7 +743,7 @@ mod tests {
     fn std_env_round_trip_conserves_items() {
         let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(2, Arc::new(Echo));
         for round in 0..6u64 {
-            p.dispatch(Item { round, lane: round as usize % 2 });
+            p.dispatch(it(round, round as usize % 2));
         }
         let mut seen = 0u64;
         for _ in 0..4 {
@@ -344,9 +759,95 @@ mod tests {
     #[test]
     fn std_env_dispatch_clamps_lane() {
         let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(1, Arc::new(Echo));
-        p.dispatch(Item { round: 1, lane: 7 });
+        p.dispatch(it(1, 7));
         let d = p.collect().unwrap();
         assert_eq!(d.lane, 0, "lane beyond width clamps to the last lane");
+        assert!(p.shutdown_drain().is_empty());
+    }
+
+    #[test]
+    fn std_env_steal_drains_a_blocked_lane() {
+        let (gate, exec) = GateExec::new();
+        let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(2, Arc::new(exec));
+        p.set_steal(true);
+        // Blocker to lane 0; wait until a worker is provably stuck in it
+        // (either the owner, or the other worker that stole it).
+        p.dispatch(Item { gate: true, ..it(0, 0) });
+        GateExec::wait_entered(&gate, 1);
+        // Backlog behind the blocker — the free worker must execute all of
+        // it while the gate is closed, proving work conservation.
+        for round in 1..=4u64 {
+            p.dispatch(it(round, 0));
+        }
+        let mut got = [false; 5];
+        for _ in 0..4 {
+            let d = p.collect().expect("workers alive");
+            assert_ne!(d.round, 0, "gate item cannot finish while closed");
+            assert_eq!(d.lane, 0, "planned lane tag survives stealing");
+            assert!(d.executed < 2, "executed lane recorded");
+            got[d.round as usize] = true;
+        }
+        assert!(got[1..].iter().all(|&g| g), "all backlog executed");
+        assert!(p.steals_total() >= 1, "at least one item crossed lanes");
+        GateExec::open(&gate);
+        let d = p.collect().unwrap();
+        assert_eq!(d.round, 0);
+        assert!(p.shutdown_drain().is_empty());
+        assert_eq!(p.in_flight(), 0);
+    }
+
+    #[test]
+    fn std_env_resize_drains_stealable_work_without_loss() {
+        let (gate, exec) = GateExec::new();
+        let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(2, Arc::new(exec));
+        // Steal OFF: only lane 1's owner can take the blocker, so the
+        // follow-ups are provably still queued on lane 1 at resize time.
+        p.dispatch(Item { gate: true, ..it(0, 1) });
+        GateExec::wait_entered(&gate, 1);
+        for round in 1..=3u64 {
+            p.dispatch(it(round, 1));
+        }
+        // Retire lane 1: its queued items must re-home to lane 0 and run
+        // there while the retired worker is still stuck mid-item.
+        p.resize(1);
+        let mut got = [false; 4];
+        for _ in 0..3 {
+            let d = p.collect().expect("workers alive");
+            assert_ne!(d.round, 0);
+            assert_eq!(d.lane, 0, "re-homed items carry the survivor lane");
+            assert_eq!(d.executed, 0);
+            assert!(!d.stolen, "resize drain is a re-home, not a steal");
+            got[d.round as usize] = true;
+        }
+        assert!(got[1..].iter().all(|&g| g), "no re-homed item lost");
+        GateExec::open(&gate);
+        let d = p.collect().unwrap();
+        assert_eq!(d.round, 0);
+        assert_eq!(d.lane, 1, "in-flight item keeps its original lane tag");
+        assert!(p.shutdown_drain().is_empty());
+        assert_eq!(p.in_flight(), 0);
+    }
+
+    #[test]
+    fn std_env_steal_off_keeps_lanes_private() {
+        let (gate, exec) = GateExec::new();
+        let mut p: LaneProtocol<StdEnv, Item, Done> = LaneProtocol::new(2, Arc::new(exec));
+        p.dispatch(Item { gate: true, ..it(0, 0) });
+        GateExec::wait_entered(&gate, 1);
+        for round in 1..=3u64 {
+            p.dispatch(it(round, 0));
+        }
+        // Lane 1 idles next to a backlog it is not allowed to touch.
+        GateExec::open(&gate);
+        let mut rounds = Vec::new();
+        for _ in 0..4 {
+            let d = p.collect().unwrap();
+            assert_eq!(d.executed, 0, "steal off: only the owner executes");
+            assert!(!d.stolen);
+            rounds.push(d.round);
+        }
+        assert_eq!(rounds, vec![0, 1, 2, 3], "FIFO order per lane preserved");
+        assert_eq!(p.steals_total(), 0);
         assert!(p.shutdown_drain().is_empty());
     }
 }

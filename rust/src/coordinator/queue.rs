@@ -172,6 +172,20 @@ impl TenantQueue {
         }
         out
     }
+
+    /// Re-insert a request previously removed from this queue (the
+    /// work-stealing keep-side re-queue): identical to `push` except the
+    /// lifetime `enqueued` counter does not advance, so admission metrics
+    /// count each request exactly once.
+    fn restore(&mut self, req: InferenceRequest) -> Result<(), Reject> {
+        if self.items.len() >= self.depth {
+            return Err(Reject::QueueFull);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.items.push(EdfEntry { deadline: req.deadline, seq, req });
+        Ok(())
+    }
 }
 
 /// All tenants' queues; index == tenant id. Admission enforces the
@@ -307,6 +321,40 @@ impl QueueSet {
             .unwrap_or_default();
         self.pending -= drained.len();
         drained
+    }
+
+    /// Yield up to `n` pending requests for a cross-node steal. The
+    /// victims are the **latest-deadline** requests across all tenants —
+    /// the back of the global EDF order, mirroring the lane deque's
+    /// back-of-queue steal — so this front keeps exactly the work it was
+    /// about to run and surrenders the work with the most slack left to
+    /// survive a move. Ties on deadline break by tenant id, then by each
+    /// tenant's own EDF insertion order, so the selection is fully
+    /// deterministic. Returns the stolen requests in deadline order.
+    ///
+    /// This is a dequeue path like `pop_tenant`/`drain_tenant`: `pending`
+    /// stays exact. It runs at most once per cluster round on a steal
+    /// victim, never on the per-request hot path, so the drain-and-restore
+    /// pass is deliberately simple.
+    pub fn steal_latest(&mut self, n: usize) -> Vec<InferenceRequest> {
+        if n == 0 || self.pending == 0 {
+            return Vec::new();
+        }
+        let mut all: Vec<InferenceRequest> = Vec::with_capacity(self.pending);
+        for q in &mut self.queues {
+            all.append(&mut q.drain());
+        }
+        // Stable sort: within a tenant, `drain` already yields EDF order.
+        all.sort_by(|a, b| a.deadline.cmp(&b.deadline).then(a.tenant.cmp(&b.tenant)));
+        let stolen = all.split_off(all.len().saturating_sub(n));
+        self.pending = all.len();
+        for r in all {
+            let t = r.tenant;
+            self.queues[t]
+                .restore(r)
+                .expect("re-queueing drained requests cannot exceed depth");
+        }
+        stolen
     }
 
     pub fn n_tenants(&self) -> usize {
@@ -468,6 +516,33 @@ mod tests {
         // Popping an empty queue leaves the counter alone.
         assert!(qs.pop_tenant(0).is_none());
         assert_eq!(qs.total_pending(), 0);
+    }
+
+    #[test]
+    fn steal_latest_takes_the_back_of_the_edf_order() {
+        use std::time::Duration;
+        let base = Instant::now();
+        let mut qs = QueueSet::new(3, 16);
+        // Interleave tenants so the latest deadlines are spread across
+        // queues: request i has deadline base + i ms.
+        for i in 0..9u64 {
+            qs.push(req_at(i, (i % 3) as usize, base + Duration::from_millis(i)))
+                .unwrap();
+        }
+        let stolen = qs.steal_latest(4);
+        // The four latest deadlines (ids 5..9) go, in deadline order.
+        assert_eq!(stolen.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5, 6, 7, 8]);
+        assert_eq!(qs.total_pending(), 5);
+        // The urgent front is untouched and still pops in EDF order.
+        assert_eq!(qs.pop_tenant(0).unwrap().id, 0);
+        assert_eq!(qs.pop_tenant(1).unwrap().id, 1);
+        assert_eq!(qs.pop_tenant(2).unwrap().id, 2);
+        assert_eq!(qs.total_pending(), 2);
+        // Oversteal drains everything; understeal of an empty set is a
+        // no-op.
+        assert_eq!(qs.steal_latest(10).len(), 2);
+        assert!(qs.is_empty());
+        assert!(qs.steal_latest(3).is_empty());
     }
 
     #[test]

@@ -117,6 +117,12 @@ pub struct RoundPlan {
     /// the driver; launches sharing a lane run in plan order. The §3
     /// baselines always stay single-lane.
     pub lane_of: Vec<usize>,
+    /// Predicted cost of each launch, parallel to `launches` (empty for
+    /// single-lane plans and the §3 baselines — the driver reads missing
+    /// hints as 0.0). Rides each `WorkItem` as its `cost_hint` so the
+    /// lane pool's steal-victim selection ranks backlogs by the same
+    /// predicted durations the balancer packed with.
+    pub cost_of: Vec<f64>,
     /// Concurrent lanes this plan spans (0 or 1 == serial round).
     pub n_lanes: usize,
     /// Requests drained this round (== sum of launch entries).
@@ -156,6 +162,13 @@ pub fn launch_weight(launch: &Launch) -> f64 {
     launch.class.flops() * launch.r_bucket.max(1) as f64
 }
 
+/// Fraction of its predicted weight the cheapest-to-steal class is
+/// accounted at when the balancer is steal-aware (see
+/// [`SpaceTimeSched::assign_lanes_into`]). Halving keeps the distortion
+/// bounded: the overpacked lane's predicted excess never exceeds what one
+/// idle thief clears in a single steal of the class's own launches.
+pub const STEAL_OVERPACK_DISCOUNT: f64 = 0.5;
+
 /// A scheduling policy over the admission queues.
 pub trait Scheduler: Send {
     /// Drain work for one round and plan launches.
@@ -192,6 +205,16 @@ pub trait Scheduler: Send {
     /// definition and ignore this (default no-op).
     fn set_lanes(&mut self, lanes: usize) {
         let _ = lanes;
+    }
+
+    /// Tell the policy the execution layer steals across lanes: the lane
+    /// balancer may then deliberately overpack the cheapest-to-steal
+    /// class, trusting idle thieves to rebalance at run time (see
+    /// [`SpaceTimeSched`]). With `on = false` — and for every policy that
+    /// keeps the default no-op — planning is bit-identical to the
+    /// non-stealing build. The §3 baselines never steal.
+    fn set_steal_aware(&mut self, on: bool) {
+        let _ = on;
     }
 }
 
@@ -451,6 +474,13 @@ pub struct SpaceTimeSched {
     /// Duration source for lane balancing when not in EDF mode (EDF reuses
     /// its own cost model). None falls back to the [`launch_weight`] proxy.
     lane_cost: Option<SharedCostModel>,
+    /// The execution layer steals across lanes (set via
+    /// [`Scheduler::set_steal_aware`]): the balancer discounts the round's
+    /// cheapest shape class in its load accounting, deliberately
+    /// overpacking it — misprediction there is cheap for a thief to fix,
+    /// while the expensive classes stay strictly balanced. False keeps
+    /// assignment bit-identical to the non-stealing planner.
+    steal_aware: bool,
     /// Round-scratch buffers recycled across `plan_round_into` calls so a
     /// steady-state round plans without heap growth: backlogged tenant
     /// ids, the drained request staging vector, the EDF pass's working
@@ -482,6 +512,7 @@ impl SpaceTimeSched {
             edf: None,
             lanes: 1,
             lane_cost: None,
+            steal_aware: false,
             scratch_ids: Vec::new(),
             scratch_reqs: Vec::new(),
             scratch_queue: VecDeque::new(),
@@ -527,6 +558,7 @@ impl SpaceTimeSched {
     fn plan_into(&mut self, queues: &mut QueueSet, now: Instant, out: &mut RoundPlan) {
         out.launches.clear();
         out.lane_of.clear();
+        out.cost_of.clear();
         out.n_lanes = 0;
         out.drained = 0;
         out.deadline_splits = 0;
@@ -578,7 +610,9 @@ impl SpaceTimeSched {
         if self.edf.is_some() {
             self.edf_pass(now, out);
         }
-        out.n_lanes = self.assign_lanes_into(&out.launches, &mut out.lane_of);
+        let mut cost_of = std::mem::take(&mut out.cost_of);
+        out.n_lanes = self.assign_lanes_into(&out.launches, &mut out.lane_of, &mut cost_of);
+        out.cost_of = cost_of;
     }
 
     /// Deadline-protection pass over a planned round (module docs, EDF
@@ -701,11 +735,29 @@ impl SpaceTimeSched {
     /// list scheduling, whose worst lane stays within
     /// `total/L + max single duration` of the optimum, while appending in
     /// order keeps each lane's launches urgency-sorted. Fills the
-    /// recycled `lane_of` vector and returns the plan's lane count.
+    /// recycled `lane_of` and `cost_of` vectors and returns the plan's
+    /// lane count.
+    ///
+    /// Steal-aware overpacking: with [`SpaceTimeSched::steal_aware`] set,
+    /// the round's cheapest shape class (by predicted per-launch cost) is
+    /// accounted at [`STEAL_OVERPACK_DISCOUNT`] of its predicted weight,
+    /// so the balancer concentrates it — if the prediction was right the
+    /// lane finishes barely late and a thief evens it out for the price
+    /// of one cheap migration; if the prediction was wrong (the paper's
+    /// heavy-tail case), the work was going to move anyway and the other
+    /// lanes' expensive launches were never put at risk. `cost_of`
+    /// records the UNdiscounted predictions — victim selection must rank
+    /// true remaining work, not the packing fiction.
     // lint: hot-path
     // lint: pure
-    fn assign_lanes_into(&mut self, launches: &[Launch], lane_of: &mut Vec<usize>) -> usize {
+    fn assign_lanes_into(
+        &mut self,
+        launches: &[Launch],
+        lane_of: &mut Vec<usize>,
+        cost_of: &mut Vec<f64>,
+    ) -> usize {
         lane_of.clear();
+        cost_of.clear();
         let n_lanes = self.lanes.min(launches.len()).max(1);
         if n_lanes <= 1 {
             return launches.len().min(1);
@@ -725,12 +777,29 @@ impl SpaceTimeSched {
                 None => launch_weight(l),
             };
             for l in launches {
-                let lane = (0..n_lanes)
-                    .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
-                    .unwrap();
-                lane_of.push(lane);
-                load[lane] += weight(l);
+                cost_of.push(weight(l));
             }
+        }
+        let discount_class = if self.steal_aware {
+            launches
+                .iter()
+                .zip(cost_of.iter())
+                .min_by(|a, b| a.1.partial_cmp(b.1).expect("costs are finite"))
+                .map(|(l, _)| l.class)
+        } else {
+            None
+        };
+        for (i, l) in launches.iter().enumerate() {
+            let lane = (0..n_lanes)
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .unwrap();
+            lane_of.push(lane);
+            let w = cost_of[i];
+            load[lane] += if discount_class == Some(l.class) {
+                w * STEAL_OVERPACK_DISCOUNT
+            } else {
+                w
+            };
         }
         self.scratch_load = load;
         n_lanes
@@ -766,6 +835,10 @@ impl Scheduler for SpaceTimeSched {
     /// resize does not reintroduce hot-path allocation.
     fn set_lanes(&mut self, lanes: usize) {
         self.lanes = lanes.max(1);
+    }
+
+    fn set_steal_aware(&mut self, on: bool) {
+        self.steal_aware = on;
     }
 }
 
@@ -1394,6 +1467,51 @@ mod tests {
         let mut q = QueueSet::new(4, 16);
         fill(&mut q, 0, 2, CLASS);
         assert!(t.plan_round(&mut q).n_lanes <= 1);
+    }
+
+    #[test]
+    fn steal_aware_overpacks_only_the_cheapest_class() {
+        // flops = 2*m*n*k for batched_gemm: weight ratio BIG:SMALL = 3:2,
+        // chosen so the greedy trace DIFFERS between the two modes.
+        let big = ShapeClass { kind: "batched_gemm", m: 3, n: 2, k: 1 };
+        let small = ShapeClass { kind: "batched_gemm", m: 2, n: 2, k: 1 };
+        let launch = |class: ShapeClass| Launch { class, entries: vec![], r_bucket: 1 };
+        let launches =
+            vec![launch(big), launch(small), launch(small), launch(small)];
+        let expected: Vec<f64> = launches.iter().map(launch_weight).collect();
+
+        // Off (default): plain least-loaded list scheduling splits the
+        // small class across both lanes.
+        let mut off = SpaceTimeSched::new(buckets(), 8).spatial_lanes(2, None);
+        let (mut lane_off, mut cost_off) = (Vec::new(), Vec::new());
+        let n = off.assign_lanes_into(&launches, &mut lane_off, &mut cost_off);
+        assert_eq!(n, 2);
+        assert_eq!(lane_off, vec![0, 1, 1, 0]);
+        assert_eq!(cost_off, expected, "hints are the undiscounted predictions");
+
+        // On: the small (cheapest) class is accounted at half weight, so
+        // the balancer concentrates ALL of it on one lane — overpacked on
+        // purpose, trusting thieves to even it out at run time.
+        let mut on = SpaceTimeSched::new(buckets(), 8).spatial_lanes(2, None);
+        on.set_steal_aware(true);
+        let (mut lane_on, mut cost_on) = (Vec::new(), Vec::new());
+        on.assign_lanes_into(&launches, &mut lane_on, &mut cost_on);
+        assert_eq!(lane_on, vec![0, 1, 1, 1], "cheapest class packed together");
+        assert_eq!(cost_on, expected, "hints must NOT carry the discount");
+
+        // Turning it back off restores the exact non-stealing assignment.
+        on.set_steal_aware(false);
+        let (mut lane_back, mut cost_back) = (Vec::new(), Vec::new());
+        on.assign_lanes_into(&launches, &mut lane_back, &mut cost_back);
+        assert_eq!(lane_back, lane_off, "steal-off must be bit-identical");
+        assert_eq!(cost_back, cost_off);
+
+        // Baselines ignore the hook entirely.
+        let mut t = make_scheduler(SchedulerKind::TimeMux, buckets(), 8);
+        t.set_steal_aware(true);
+        let mut q = QueueSet::new(4, 16);
+        fill(&mut q, 0, 2, CLASS);
+        assert!(t.plan_round(&mut q).cost_of.is_empty());
     }
 
     #[test]

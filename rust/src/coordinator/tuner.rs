@@ -2,8 +2,9 @@
 //!
 //! Searches the space-time scheduler's knob space — static `lanes` vs the
 //! adaptive controller (with its `max_lanes` / `dwell_rounds` /
-//! `improvement` / `slo_target` hysteresis knobs), `pipeline_depth`, and
-//! EDF deadline-aware planning with its `deadline_slack` margin — against
+//! `improvement` / `slo_target` hysteresis knobs), `pipeline_depth`, EDF
+//! deadline-aware planning with its `deadline_slack` margin, and
+//! work-conserving lane execution (`steal` / `steal_min_queue`) — against
 //! gpusim ground truth for a named workload, scoring **SLO-met goodput**
 //! (requests completed within deadline per second, the utility the paper's
 //! controller optimizes). The search is a deterministic coarse grid (the
@@ -194,6 +195,11 @@ pub struct TunePoint {
     pub dwell_rounds: u32,
     pub improvement: f64,
     pub slo_target: f64,
+    /// Work-conserving lane execution: idle lanes take the back of the
+    /// longest lane's queue (the `[server] steal` knob).
+    pub steal: bool,
+    /// Victim floor for a steal (the `[server] steal_min_queue` knob).
+    pub steal_min_queue: usize,
 }
 
 impl TunePoint {
@@ -212,6 +218,8 @@ impl TunePoint {
             dwell_rounds: 4,
             improvement: 0.10,
             slo_target: 0.99,
+            steal: false,
+            steal_min_queue: 1,
         }
     }
 
@@ -226,8 +234,13 @@ impl TunePoint {
         } else {
             String::new()
         };
+        let steal = if self.steal {
+            format!(" steal(min={})", self.steal_min_queue.max(1))
+        } else {
+            String::new()
+        };
         format!(
-            "{mode} depth={}{edf} dwell={} improv={:.2} slo={:.2}",
+            "{mode} depth={}{edf}{steal} dwell={} improv={:.2} slo={:.2}",
             self.pipeline_depth, self.dwell_rounds, self.improvement, self.slo_target
         )
     }
@@ -244,6 +257,8 @@ impl TunePoint {
         s.push_str(&format!("deadline_slack = {:.6}\n", self.deadline_slack_s));
         s.push_str(&format!("lanes = {}\n", self.lanes));
         s.push_str(&format!("pipeline_depth = {}\n", self.pipeline_depth));
+        s.push_str(&format!("steal = {}\n", self.steal));
+        s.push_str(&format!("steal_min_queue = {}\n", self.steal_min_queue.max(1)));
         s.push_str("\n[controller]\n");
         s.push_str(&format!("adaptive = {}\n", self.adaptive));
         s.push_str(&format!("dwell_rounds = {}\n", self.dwell_rounds));
@@ -272,6 +287,8 @@ impl TunePoint {
             ("dwell_rounds", Json::num(self.dwell_rounds)),
             ("improvement", Json::num(self.improvement)),
             ("slo_target", Json::num(self.slo_target)),
+            ("steal", Json::Bool(self.steal)),
+            ("steal_min_queue", Json::num(self.steal_min_queue as f64)),
         ])
     }
 }
@@ -289,6 +306,9 @@ pub struct TuneOutcome {
     pub attainment: f64,
     pub completed: u64,
     pub reconfigs: u64,
+    /// Launches rebalanced by the replay's work-stealing model (0 when
+    /// the point has `steal == false`).
+    pub steals: u64,
     pub p50_s: f64,
     pub p99_s: f64,
 }
@@ -307,9 +327,54 @@ impl TuneOutcome {
             ("p99_s", Json::num(self.p99_s)),
             ("completed", Json::num(self.completed as f64)),
             ("reconfigs", Json::num(self.reconfigs as f64)),
+            ("steals", Json::num(self.steals as f64)),
             ("point", self.point.to_json()),
         ])
     }
+}
+
+/// The replay's model of the lane pool's back-of-queue stealing: while
+/// the longest lane's tail launch would finish strictly sooner appended
+/// to the shortest lane (and the victim still holds `min_queue`
+/// launches), move it there. Mirrors `LanePool` semantics — owners run
+/// their queue front to back, thieves append stolen work after their
+/// own — so every launch's completion time weakly decreases and the
+/// round makespan never grows. Deterministic: ties pick the lowest lane.
+fn steal_rebalance(
+    lane_q: &mut [Vec<usize>],
+    stolen: &mut Vec<(usize, usize)>,
+    durs: &[f64],
+    min_queue: usize,
+) -> u64 {
+    let mut total: Vec<f64> = lane_q
+        .iter()
+        .map(|q| q.iter().map(|&i| durs[i]).sum())
+        .collect();
+    let mut steals = 0u64;
+    loop {
+        let (mut v, mut th) = (0usize, 0usize);
+        for l in 1..total.len() {
+            if total[l] > total[v] {
+                v = l;
+            }
+            if total[l] < total[th] {
+                th = l;
+            }
+        }
+        if v == th || lane_q[v].len() < min_queue.max(1) {
+            break;
+        }
+        let Some(&cand) = lane_q[v].last() else { break };
+        if total[v] - total[th] <= durs[cand] {
+            break;
+        }
+        lane_q[v].pop();
+        stolen.push((th, cand));
+        total[v] -= durs[cand];
+        total[th] += durs[cand];
+        steals += 1;
+    }
+    steals
 }
 
 /// Replay the fig12 trace through the real `SpaceTimeSched` (and, when
@@ -353,6 +418,7 @@ pub fn evaluate(point: &TunePoint) -> TuneOutcome {
     let mut win_misses = 0u64;
     let mut phase_hits = [0u64; 3];
     let mut completed = 0u64;
+    let mut steals = 0u64;
     let mut lanes_seen: HashMap<usize, u64> = HashMap::new();
     let mut lanes_now = point.lanes;
     let mut latencies = Vec::with_capacity(tr.len());
@@ -398,6 +464,7 @@ pub fn evaluate(point: &TunePoint) -> TuneOutcome {
                         None
                     },
                     min_slo_s: LAT_SLO_S,
+                    steal_rate: 0.0,
                 };
                 let decision = ctl.decide(&signals);
                 win_hits = 0;
@@ -416,19 +483,45 @@ pub fn evaluate(point: &TunePoint) -> TuneOutcome {
         let drained = plan.drained;
         let active = plan.lanes_used().max(1);
         *lanes_seen.entry(active).or_default() += 1;
-        let mut lane_time = vec![0.0f64; plan.n_lanes.max(1)];
-        for (i, launch) in plan.launches.iter().enumerate() {
-            let dur = ground_truth(&spec, launch.class, launch.r_bucket, active);
-            if ctl.is_some() {
+        let n_lanes = plan.n_lanes.max(1);
+        let durs: Vec<f64> = plan
+            .launches
+            .iter()
+            .map(|l| ground_truth(&spec, l.class, l.r_bucket, active))
+            .collect();
+        if ctl.is_some() {
+            for (i, launch) in plan.launches.iter().enumerate() {
                 let solo = ground_truth(&spec, launch.class, launch.r_bucket, 1);
                 tracker.observe_launch(solo);
                 if active > 1 {
-                    tracker.observe_stretch(active, dur / solo.max(1e-12));
+                    tracker.observe_stretch(active, durs[i] / solo.max(1e-12));
                 }
             }
-            let lane = plan.lane(i);
-            lane_time[lane] += dur;
-            let done = base + Duration::from_secs_f64(t + lane_time[lane]);
+        }
+        // Per-lane queues in plan order; stealing (when enabled) moves
+        // tail launches of the longest lane onto the shortest one.
+        let mut lane_q: Vec<Vec<usize>> = vec![Vec::new(); n_lanes];
+        for i in 0..plan.launches.len() {
+            lane_q[plan.lane(i)].push(i);
+        }
+        let mut stolen: Vec<(usize, usize)> = Vec::new();
+        if point.steal {
+            steals += steal_rebalance(&mut lane_q, &mut stolen, &durs, point.steal_min_queue);
+        }
+        let mut lane_time = vec![0.0f64; n_lanes];
+        let mut done_s = vec![0.0f64; plan.launches.len()];
+        for (lane, q) in lane_q.iter().enumerate() {
+            for &i in q {
+                lane_time[lane] += durs[i];
+                done_s[i] = lane_time[lane];
+            }
+        }
+        for &(th, i) in &stolen {
+            lane_time[th] += durs[i];
+            done_s[i] = lane_time[th];
+        }
+        for (i, launch) in plan.launches.iter().enumerate() {
+            let done = base + Duration::from_secs_f64(t + done_s[i]);
             for e in &launch.entries {
                 completed += 1;
                 let arr_s = e.arrived.duration_since(base).as_secs_f64();
@@ -462,6 +555,7 @@ pub fn evaluate(point: &TunePoint) -> TuneOutcome {
         attainment: hits as f64 / (hits + misses).max(1) as f64,
         completed,
         reconfigs: ctl.as_ref().map_or(0, |c| c.reconfigs()),
+        steals,
         p50_s: stats::percentile(&latencies, 50.0),
         p99_s: stats::percentile(&latencies, 99.0),
     }
@@ -478,17 +572,25 @@ pub fn candidates() -> Vec<TunePoint> {
     for &lanes in &[1usize, 2, 4] {
         for &depth in &[2usize, 1] {
             for &(edf, slack) in &[(false, 0.0), (true, 0.002)] {
-                out.push(TunePoint {
-                    adaptive: false,
-                    lanes,
-                    max_lanes: lanes,
-                    pipeline_depth: depth,
-                    edf,
-                    deadline_slack_s: slack,
-                    dwell_rounds: 4,
-                    improvement: 0.10,
-                    slo_target: 0.99,
-                });
+                // Stealing only has work to move with >= 2 lanes; the
+                // lanes == 1 steal variants would be duplicates.
+                let steal_axis: &[(bool, usize)] =
+                    if lanes >= 2 { &[(false, 1), (true, 1), (true, 2)] } else { &[(false, 1)] };
+                for &(steal, steal_min_queue) in steal_axis {
+                    out.push(TunePoint {
+                        adaptive: false,
+                        lanes,
+                        max_lanes: lanes,
+                        pipeline_depth: depth,
+                        edf,
+                        deadline_slack_s: slack,
+                        dwell_rounds: 4,
+                        improvement: 0.10,
+                        slo_target: 0.99,
+                        steal,
+                        steal_min_queue,
+                    });
+                }
             }
         }
     }
@@ -507,12 +609,16 @@ pub fn candidates() -> Vec<TunePoint> {
                             dwell_rounds: dwell,
                             improvement,
                             slo_target,
+                            steal: false,
+                            steal_min_queue: 1,
                         });
                     }
                 }
             }
         }
     }
+    // Work-conserving adaptive variant: the controller plus stealing.
+    out.push(TunePoint { steal: true, ..TunePoint::reference() });
     dedup(out)
 }
 
@@ -563,6 +669,16 @@ pub fn neighbors(p: &TunePoint) -> Vec<TunePoint> {
         out.push(TunePoint { edf: false, deadline_slack_s: 0.0, ..*p });
     } else {
         out.push(TunePoint { edf: true, deadline_slack_s: 0.002, ..*p });
+    }
+    if p.steal {
+        for &mq in &[1usize, 2, 4] {
+            if mq != p.steal_min_queue {
+                out.push(TunePoint { steal_min_queue: mq, ..*p });
+            }
+        }
+        out.push(TunePoint { steal: false, steal_min_queue: 1, ..*p });
+    } else {
+        out.push(TunePoint { steal: true, steal_min_queue: 1, ..*p });
     }
     dedup(out)
 }
@@ -700,6 +816,62 @@ mod tests {
             );
         }
         assert!(a.len() >= 32, "grid should cover the knob space");
+        assert!(
+            a.iter().any(|p| p.steal),
+            "grid must cover work-conserving (steal) points"
+        );
+        assert!(
+            a.iter().all(|p| !(p.steal && !p.adaptive && p.lanes < 2)),
+            "single-lane static steal points are meaningless"
+        );
+    }
+
+    #[test]
+    fn stealing_never_hurts_the_static_replay() {
+        // The replay's steal model only moves a tail launch when it
+        // strictly finishes sooner on the shortest lane, so for the SAME
+        // static plan every completion time weakly decreases: goodput and
+        // attainment cannot regress with stealing on.
+        let off = TunePoint {
+            adaptive: false,
+            lanes: 4,
+            max_lanes: 4,
+            pipeline_depth: 2,
+            edf: false,
+            deadline_slack_s: 0.0,
+            dwell_rounds: 4,
+            improvement: 0.10,
+            slo_target: 0.99,
+            steal: false,
+            steal_min_queue: 1,
+        };
+        let on = TunePoint { steal: true, ..off };
+        let a = evaluate(&off);
+        let b = evaluate(&on);
+        assert_eq!(a.steals, 0, "steal-off must never rebalance");
+        assert!(
+            b.goodput_rps >= a.goodput_rps,
+            "stealing regressed goodput: {} -> {}",
+            a.goodput_rps,
+            b.goodput_rps
+        );
+        assert!(b.attainment >= a.attainment);
+        assert_eq!(a.completed, b.completed, "stealing moves work, never drops it");
+    }
+
+    #[test]
+    fn steal_knobs_round_trip_through_toml_and_json() {
+        let p = TunePoint { steal: true, steal_min_queue: 2, ..TunePoint::reference() };
+        let cfg = p.validated_config().unwrap();
+        assert!(cfg.steal);
+        assert_eq!(cfg.steal_min_queue, 2);
+        let j = p.to_json();
+        assert_eq!(j.get("steal").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("steal_min_queue").and_then(Json::as_usize), Some(2));
+        assert!(p.label().contains("steal(min=2)"));
+        let out = evaluate(&p);
+        let row = out.to_json(1);
+        assert!(row.get("steals").and_then(Json::as_f64).is_some());
     }
 
     #[test]
@@ -717,6 +889,8 @@ mod tests {
             assert!((cfg.controller.improvement - p.improvement).abs() < 1e-4);
             assert!((cfg.controller.slo_target - p.slo_target).abs() < 1e-4);
             assert!((cfg.deadline_slack - p.deadline_slack_s).abs() < 1e-6);
+            assert_eq!(cfg.steal, p.steal);
+            assert_eq!(cfg.steal_min_queue, p.steal_min_queue.max(1));
             for n in neighbors(&p) {
                 n.validated_config()
                     .unwrap_or_else(|e| panic!("neighbor of {}: {e}", p.label()));

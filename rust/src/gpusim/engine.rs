@@ -225,6 +225,14 @@ pub struct SimConfig {
     pub policy: Policy,
     pub capture_trace: bool,
     pub engine: Engine,
+    /// Work-conserving lane execution for the space-time policies: a lane
+    /// that drains its queue steals the most recently planned launch off
+    /// the back of the lane with the most remaining work, mirroring the
+    /// coordinator's stealable-deque protocol. Vectorized engine only —
+    /// the legacy engine ignores it and stays the non-stealing oracle.
+    /// `false` (the default) leaves every policy bit-for-bit identical to
+    /// the pre-stealing engine.
+    pub steal: bool,
 }
 
 impl SimConfig {
@@ -234,6 +242,7 @@ impl SimConfig {
             policy,
             capture_trace: false,
             engine: Engine::default(),
+            steal: false,
         }
     }
 
@@ -244,6 +253,11 @@ impl SimConfig {
 
     pub fn with_engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    pub fn with_steal(mut self, steal: bool) -> Self {
+        self.steal = steal;
         self
     }
 }
@@ -283,6 +297,10 @@ pub struct SimReport {
     /// zero-alloc regression test and the fig13 bench. Always 0 on the
     /// legacy engine, which allocates fresh buffers per event instead.
     pub scratch_grows: u64,
+    /// Launches executed on a lane other than the one the round planner
+    /// assigned them to ([`SimConfig::steal`] mode). Always 0 with
+    /// stealing off and on the legacy engine.
+    pub steals: u64,
     pub trace: Trace,
 }
 
@@ -1042,6 +1060,22 @@ struct RoundScratch {
     l_lane: Vec<usize>,
     lane_load: Vec<f64>,
     lane_cursor: Vec<f64>,
+    /// Steal mode only — overlapped-context duration per launch, the
+    /// weight the work-conserving replay balances on (untouched with
+    /// stealing off).
+    l_dur: Vec<f64>,
+    /// Steal mode only — the work-conserving execution order (indices
+    /// into the round's launch arrays).
+    exec_seq: Vec<usize>,
+    /// Steal mode only — per-lane FIFO of planned launches. The owner
+    /// pops the front (`q_head` advance); a thief pops the back.
+    steal_q: Vec<Vec<usize>>,
+    q_head: Vec<usize>,
+    /// Steal mode only — remaining queued overlapped work per lane, the
+    /// victim-selection key (mirrors the coordinator deque's `rem`).
+    lane_rem: Vec<f64>,
+    lane_sim: Vec<f64>,
+    lane_done: Vec<bool>,
 }
 
 impl RoundScratch {
@@ -1061,6 +1095,13 @@ impl RoundScratch {
             l_lane: Vec::with_capacity(n_tenants),
             lane_load: Vec::with_capacity(max_lanes),
             lane_cursor: Vec::with_capacity(max_lanes),
+            l_dur: Vec::with_capacity(n_tenants),
+            exec_seq: Vec::with_capacity(n_tenants),
+            steal_q: (0..max_lanes).map(|_| Vec::with_capacity(n_tenants)).collect(),
+            q_head: Vec::with_capacity(max_lanes),
+            lane_rem: Vec::with_capacity(max_lanes),
+            lane_sim: Vec::with_capacity(max_lanes),
+            lane_done: Vec::with_capacity(max_lanes),
         }
     }
 }
@@ -1113,6 +1154,7 @@ fn run_space_time(
         &mut cursors,
         max_batch,
         static_lanes,
+        cfg.steal,
         &mut controller,
         &mut tracker,
         &mut scratch,
@@ -1120,6 +1162,78 @@ fn run_space_time(
         &mut report,
     );
     report
+}
+
+/// Work-conserving replay of a round's plan ([`SimConfig::steal`] mode):
+/// lanes drain their queues front-to-back in virtual time; a lane that
+/// runs dry steals the back of the queue holding the most remaining
+/// overlapped work — the coordinator deque's victim rule, ties to the
+/// lowest lane. Overwrites `l_lane` with the lane each launch actually
+/// executes on, records the execution order in `exec_seq`, and returns
+/// the steal count. Deterministic throughout (first-minimum lane pick,
+/// first-maximum victim pick), so stealing runs replay bitwise.
+// lint: hot-path
+fn steal_rebalance(scratch: &mut RoundScratch, active: usize, n_launches: usize) -> u64 {
+    for l in 0..active {
+        scratch.steal_q[l].clear();
+    }
+    scratch.q_head.clear();
+    scratch.q_head.resize(active, 0);
+    scratch.lane_rem.clear();
+    scratch.lane_rem.resize(active, 0.0);
+    scratch.lane_sim.clear();
+    scratch.lane_sim.resize(active, 0.0);
+    scratch.lane_done.clear();
+    scratch.lane_done.resize(active, false);
+    for i in 0..n_launches {
+        let l = scratch.l_lane[i];
+        scratch.steal_q[l].push(i);
+        scratch.lane_rem[l] += scratch.l_dur[i];
+    }
+    scratch.exec_seq.clear();
+    let mut steals = 0u64;
+    let mut remaining = n_launches;
+    while remaining > 0 {
+        // The next lane to act is the idle-soonest one still in play.
+        // `remaining > 0` guarantees some lane has queued work, and a
+        // lane with queued work is never marked done, so `l` resolves.
+        let mut l = usize::MAX;
+        for c in 0..active {
+            if !scratch.lane_done[c]
+                && (l == usize::MAX || scratch.lane_sim[c] < scratch.lane_sim[l])
+            {
+                l = c;
+            }
+        }
+        let i = if scratch.q_head[l] < scratch.steal_q[l].len() {
+            let i = scratch.steal_q[l][scratch.q_head[l]];
+            scratch.q_head[l] += 1;
+            i
+        } else {
+            let mut victim = usize::MAX;
+            for v in 0..active {
+                if scratch.steal_q[v].len() > scratch.q_head[v]
+                    && (victim == usize::MAX || scratch.lane_rem[v] > scratch.lane_rem[victim])
+                {
+                    victim = v;
+                }
+            }
+            if victim == usize::MAX {
+                // Nothing queued anywhere: this lane is done for the round.
+                scratch.lane_done[l] = true;
+                continue;
+            }
+            steals += 1;
+            scratch.steal_q[victim].pop().expect("victim has pending work")
+        };
+        let owner = scratch.l_lane[i];
+        scratch.lane_rem[owner] -= scratch.l_dur[i];
+        scratch.l_lane[i] = l;
+        scratch.exec_seq.push(i);
+        scratch.lane_sim[l] += scratch.l_dur[i];
+        remaining -= 1;
+    }
+    steals
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1132,6 +1246,7 @@ fn space_time_rounds(
     cursors: &mut CursorSoA,
     max_batch: u32,
     static_lanes: u32,
+    steal: bool,
     controller: &mut Option<AdaptiveController>,
     tracker: &mut SignalTracker,
     scratch: &mut RoundScratch,
@@ -1241,6 +1356,7 @@ fn space_time_rounds(
                         stretch,
                         slo_attainment: None,
                         min_slo_s: 0.0,
+                        steal_rate: 0.0,
                     };
                     ctl.decide(&signals);
                 }
@@ -1278,10 +1394,34 @@ fn space_time_rounds(
             concurrency: active as u32,
             static_bw_partition: false,
         };
+        // Steal mode: replay the plan work-conservingly on the overlapped
+        // durations (what the lanes actually experience — the planner
+        // balanced on exclusive-time weights, so memory- vs compute-bound
+        // class mixes skew under partitioning) and execute in the replay's
+        // order on the replay's lanes. With stealing off this block is
+        // never entered and the round is bit-for-bit the pre-stealing plan.
+        let stealing = steal && active > 1 && n_launches > 1;
+        if stealing {
+            scratch.l_dur.clear();
+            for i in 0..n_launches {
+                scratch.l_dur.push(
+                    spec.launch_overhead_s
+                        + probe.time(
+                            spec,
+                            scratch.l_flops[i],
+                            scratch.l_bytes[i],
+                            scratch.l_ctas[i],
+                            &ctx,
+                        ),
+                );
+            }
+            report.steals += steal_rebalance(scratch, active, n_launches);
+        }
         scratch.lane_cursor.clear();
         scratch.lane_cursor.resize(active, 0.0);
         let mut problems_this_round = 0usize;
-        for i in 0..n_launches {
+        for step in 0..n_launches {
+            let i = if stealing { scratch.exec_seq[step] } else { step };
             let lane = scratch.l_lane[i];
             let dur = spec.launch_overhead_s
                 + probe.time(spec, scratch.l_flops[i], scratch.l_bytes[i], scratch.l_ctas[i], &ctx);
@@ -1350,6 +1490,13 @@ fn space_time_rounds(
         for b in &scratch.buckets {
             bucket_cap += b.capacity();
         }
+        // The steal scratch rides in the bucket-cap slot: pre-sized like
+        // everything else, so its steady-state growth must also be zero
+        // (and with stealing off the capacities are constants).
+        for q in &scratch.steal_q {
+            bucket_cap += q.capacity();
+        }
+        bucket_cap += scratch.l_dur.capacity() + scratch.exec_seq.capacity();
         watch_caps(
             &mut warmed,
             &mut snap,
@@ -1490,6 +1637,84 @@ mod tests {
                 TenantWorkload::new(vec![KernelDesc::sgemm(t, shape)], iters)
             })
             .collect()
+    }
+
+    /// One compute-bound tenant (occupancy saturated at 60 CTAs/SM, so
+    /// halving the SM pool roughly doubles its duration) plus seven
+    /// memory-bound tenants (40 SMs still reach full HBM bandwidth, so
+    /// they barely stretch). The planner balances *exclusive-time*
+    /// weights, so under two lanes the memory lane drains early while the
+    /// compute lane still holds queued work — the imbalance work stealing
+    /// exists to absorb. Class names are chosen so the compute class
+    /// sorts (and therefore plans) first.
+    fn skewed_workloads(iters: u32) -> Vec<TenantWorkload> {
+        let mut w = vec![TenantWorkload::new(
+            vec![KernelDesc::other(0, "compute_heavy", 2.5e10, 1e6, 4800)],
+            iters,
+        )];
+        for t in 1..8 {
+            w.push(TenantWorkload::new(
+                vec![KernelDesc::other(t, "mem_stream", 1e9, 450e6, 4800)],
+                iters,
+            ));
+        }
+        w
+    }
+
+    #[test]
+    fn stealing_rebalances_a_skewed_round() {
+        let w = skewed_workloads(4);
+        let base = cfg(Policy::SpaceTimeLanes { max_batch: 1, lanes: 2 });
+        let off = run(&base.clone(), &w);
+        let on = run(&base.with_steal(true), &w);
+        assert_eq!(off.steals, 0, "stealing is opt-in");
+        assert!(on.steals > 0, "the skewed round must trigger steals");
+        assert_eq!(on.total_completed(), off.total_completed(), "no lost work");
+        assert!(
+            (on.total_flops() - off.total_flops()).abs() < 1e-3,
+            "FLOPs must be conserved under stealing"
+        );
+        assert!(
+            on.makespan < off.makespan * 0.95,
+            "work conservation must shorten the round barrier: {} vs {}",
+            on.makespan,
+            off.makespan
+        );
+    }
+
+    #[test]
+    fn stealing_keeps_round_tags_and_both_lanes_busy() {
+        let w = skewed_workloads(3);
+        let r = run(
+            &cfg(Policy::SpaceTimeLanes { max_batch: 1, lanes: 2 })
+                .with_steal(true)
+                .with_trace(),
+            &w,
+        );
+        assert!(r.steals > 0);
+        let max_lane = r.trace.events.iter().map(|e| e.lane).max().unwrap();
+        assert_eq!(max_lane, 1, "both lanes carry launches");
+        // Completions keep their *planned* round tag even when executed
+        // on a thief lane: tags ascend with time and cover every round.
+        let mut last = 0u64;
+        for e in &r.trace.events {
+            assert!(e.round >= last, "round tags must ascend with time");
+            last = e.round;
+        }
+        assert_eq!(last, r.rounds - 1, "every round appears in the trace");
+    }
+
+    #[test]
+    fn steal_is_inert_on_one_lane() {
+        let w = two_class_workloads(4, 6);
+        let off = run(&cfg(Policy::SpaceTimeLanes { max_batch: 64, lanes: 1 }), &w);
+        let on = run(
+            &cfg(Policy::SpaceTimeLanes { max_batch: 64, lanes: 1 }).with_steal(true),
+            &w,
+        );
+        assert_eq!(on.steals, 0);
+        assert_eq!(off.makespan.to_bits(), on.makespan.to_bits());
+        assert_eq!(off.kernel_launches, on.kernel_launches);
     }
 
     #[test]

@@ -547,6 +547,7 @@ fn run_space_time(
                         stretch,
                         slo_attainment: None,
                         min_slo_s: 0.0,
+                        steal_rate: 0.0,
                     };
                     ctl.decide(&signals);
                 }

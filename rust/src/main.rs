@@ -12,8 +12,11 @@
 //!   `--devices > 1` shards tenants across a device pool; `--engine
 //!   legacy` selects the per-event reference engine (the equivalence
 //!   oracle) instead of the default struct-of-arrays engine. With
-//!   `--cluster N [--rounds R] [--seed S] [--journal F] [--serial]` it
-//!   runs the cluster tier instead and can persist the decision journal.
+//!   `--cluster N [--rounds R] [--seed S] [--journal F] [--serial]
+//!   [--steal]` it runs the cluster tier instead (optionally with
+//!   cross-node work stealing) and can persist the decision journal.
+//!   `--steal` on the device path enables work-conserving lane stealing
+//!   in the vectorized engine.
 //! * `replay   <journal>`
 //!   Re-execute a decision journal's configuration through the serial
 //!   path and verify the regenerated journal is bitwise identical
@@ -268,6 +271,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             "dl_splits",
             "calib_err",
             "lane_util",
+            "steals",
             "lane_calib",
             "ctrl",
             "flops",
@@ -281,6 +285,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 .map(|u| format!("{:.0}%", u * 100.0))
                 .collect::<Vec<_>>()
                 .join("/");
+            // Work-steal traffic as "total (per-thief s0/s1/...)"; "-"
+            // until a lane stole anything (or with stealing off).
+            let steals_total: u64 = d.lane_steals.iter().sum();
+            let steals = if steals_total == 0 && d.launch_retries == 0 {
+                "-".to_string()
+            } else {
+                format!(
+                    "{} ({})",
+                    steals_total,
+                    d.lane_steals
+                        .iter()
+                        .map(|s| s.to_string())
+                        .collect::<Vec<_>>()
+                        .join("/")
+                )
+            };
             let lane_calib = if d.lane_calibration.is_empty() {
                 "-".to_string()
             } else {
@@ -307,6 +327,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 d.deadline_splits.to_string(),
                 format!("{:.3}", d.cost_calibration_error),
                 lane_util,
+                steals,
                 lane_calib,
                 ctrl,
                 format!("{:.3e}", d.flops),
@@ -374,7 +395,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
-    let cfg = SimConfig::new(DeviceSpec::v100(), policy).with_engine(engine);
+    let cfg = SimConfig::new(DeviceSpec::v100(), policy)
+        .with_engine(engine)
+        .with_steal(flag(flags, "steal", "false") == "true");
     let workloads = sgemm_tenants(tenants, iters, shape);
     println!(
         "policy={} engine={} tenants={} shape={}x{}x{} iters={} devices={}",
@@ -419,6 +442,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         report.superkernel_launches,
         report.fused_problems,
     );
+    if cfg.steal {
+        println!("steals={}", report.steals);
+    }
     0
 }
 
@@ -455,6 +481,7 @@ fn cmd_simulate_cluster(flags: &HashMap<String, String>) -> i32 {
             }
         }
     }
+    opts.steal = flag(flags, "steal", "false") == "true";
     let serial = flag(flags, "serial", "false") == "true";
     let report = match run_cluster(&opts, !serial) {
         Ok(r) => r,
@@ -495,6 +522,12 @@ fn cmd_simulate_cluster(flags: &HashMap<String, String>) -> i32 {
         agg.get("slo_attainment").and_then(Json::as_f64).unwrap_or(1.0),
         report.goodput_rps(),
     );
+    if opts.steal {
+        println!(
+            "stealing: {} decisions moved {} requests",
+            report.steals, report.stolen_requests,
+        );
+    }
     println!(
         "journal: {} records, digest {}",
         report.journal.records().len(),

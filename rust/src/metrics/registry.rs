@@ -144,6 +144,11 @@ pub struct DeviceSnapshot {
     /// Busy seconds (marshal + execute) accumulated per spatial lane —
     /// `lane_busy_s[i] / wall` is lane i's utilization.
     pub lane_busy_s: Vec<f64>,
+    /// Launches each lane stole from a sibling's queue (thief-side; index
+    /// == thief lane id). All zeros with `[server] steal = false`.
+    pub lane_steals: Vec<u64>,
+    /// Failed launches retried once on another lane via the steal path.
+    pub launch_retries: u64,
     /// Interference-model calibration: (concurrent lane count, EWMA
     /// relative prediction error) for every lane count with at least one
     /// overlapped observation.
@@ -313,6 +318,16 @@ impl Snapshot {
                                 d.lane_busy_s.iter().map(|&b| Json::num(b)).collect(),
                             ),
                         ),
+                        (
+                            "lane_steals",
+                            Json::Arr(
+                                d.lane_steals
+                                    .iter()
+                                    .map(|&s| Json::num(s as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        ("launch_retries", Json::num(d.launch_retries as f64)),
                         (
                             "lane_calibration",
                             Json::Obj(
@@ -508,6 +523,8 @@ mod tests {
             cost_calibration_error: 0.125,
             lane_launches: vec![4, 3],
             lane_busy_s: vec![0.5, 0.25],
+            lane_steals: vec![0, 2],
+            launch_retries: 1,
             lane_calibration: vec![(2, 0.0625)],
             ctrl_adaptive: true,
             ctrl_lanes: 2,
@@ -549,6 +566,9 @@ mod tests {
         assert_eq!(lanes[1].as_f64(), Some(3.0));
         let busy = d0.get("lane_busy_s").unwrap().as_arr().unwrap();
         assert_eq!(busy[0].as_f64(), Some(0.5));
+        let steals = d0.get("lane_steals").unwrap().as_arr().unwrap();
+        assert_eq!(steals[1].as_f64(), Some(2.0));
+        assert_eq!(d0.get("launch_retries").unwrap().as_f64(), Some(1.0));
         let calib = d0.get("lane_calibration").unwrap();
         assert_eq!(calib.get("2").unwrap().as_f64(), Some(0.0625));
         assert_eq!(d0.get("cache_hits").unwrap().as_f64(), Some(6.0));

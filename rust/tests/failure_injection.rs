@@ -248,3 +248,146 @@ fn coordinator_rejects_unservable_model_at_startup() {
     let err = Coordinator::new(&cfg).err().expect("must fail fast");
     assert!(err.to_string().contains("no AOT artifact"), "{err:#}");
 }
+
+// ---------------------------------------------------------------------------
+// Launch-failure retry via the steal path
+// ---------------------------------------------------------------------------
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use stgpu::coordinator::{Flavor, LaunchExecutor, LaunchResult, WorkItem};
+
+fn lanes2_config(dir: std::path::PathBuf) -> ServerConfig {
+    ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        lanes: 2,
+        artifacts_dir: dir,
+        tenants: vec![
+            TenantConfig {
+                name: "a".into(),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: 0,
+            },
+            TenantConfig {
+                name: "b".into(),
+                model: "sgemm:256x256x256".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: 1,
+            },
+        ],
+        ..Default::default()
+    }
+}
+
+/// Fails exactly one first-attempt launch, then delegates everything —
+/// the retry (attempt 1) lands on the real executor and succeeds.
+struct FailFirst {
+    inner: Arc<dyn LaunchExecutor>,
+    fired: AtomicBool,
+}
+
+impl LaunchExecutor for FailFirst {
+    fn execute(&self, item: &WorkItem) -> anyhow::Result<LaunchResult> {
+        if item.attempt == 0 && !self.fired.swap(true, Ordering::SeqCst) {
+            anyhow::bail!("injected launch failure");
+        }
+        self.inner.execute(item)
+    }
+}
+
+#[test]
+fn failed_launch_retries_once_on_another_lane_and_responses_survive() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = lanes2_config(dir);
+    let mut coord = Coordinator::with_flavor_wrapped(&cfg, Flavor::Xla, &|inner| {
+        Arc::new(FailFirst {
+            inner,
+            fired: AtomicBool::new(false),
+        })
+    })
+    .unwrap();
+    let mut rng = Rng::new(21);
+    let mut sent = 0;
+    for t in 0..2usize {
+        for _ in 0..3 {
+            let p = coord.random_payload(t, &mut rng);
+            coord.submit(t, p).unwrap();
+            sent += 1;
+        }
+    }
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(
+        responses.len(),
+        sent,
+        "the failed launch was re-run on another lane, so no response is lost"
+    );
+    let snaps = coord.device_snapshots();
+    assert_eq!(snaps[0].launch_retries, 1, "exactly one retry recorded");
+}
+
+/// Fails BOTH attempts of the first work item it sees (keyed by its
+/// round/index tag, so the retried copy is recognised on the other lane)
+/// and delegates everything else.
+struct FailTwice {
+    inner: Arc<dyn LaunchExecutor>,
+    target: Mutex<Option<(u64, usize)>>,
+}
+
+impl LaunchExecutor for FailTwice {
+    fn execute(&self, item: &WorkItem) -> anyhow::Result<LaunchResult> {
+        {
+            let mut t = self.target.lock().unwrap();
+            match *t {
+                None => {
+                    *t = Some((item.round, item.index));
+                    anyhow::bail!("injected launch failure (first attempt)");
+                }
+                Some(k) if k == (item.round, item.index) => {
+                    anyhow::bail!("injected launch failure (retry)");
+                }
+                _ => {}
+            }
+        }
+        self.inner.execute(item)
+    }
+}
+
+#[test]
+fn second_launch_failure_drops_the_item_but_serving_continues() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = lanes2_config(dir);
+    let mut coord = Coordinator::with_flavor_wrapped(&cfg, Flavor::Xla, &|inner| {
+        Arc::new(FailTwice {
+            inner,
+            target: Mutex::new(None),
+        })
+    })
+    .unwrap();
+    let mut rng = Rng::new(22);
+    let mut sent = 0;
+    for t in 0..2usize {
+        for _ in 0..3 {
+            let p = coord.random_payload(t, &mut rng);
+            coord.submit(t, p).unwrap();
+            sent += 1;
+        }
+    }
+    let responses = coord.run_until_drained().unwrap();
+    assert!(
+        responses.len() < sent,
+        "the twice-failed launch's requests are dropped, not silently retried forever"
+    );
+    assert!(
+        !responses.is_empty(),
+        "other launches in the same rounds still complete"
+    );
+    assert_eq!(coord.device_snapshots()[0].launch_retries, 1);
+    // The coordinator is not wedged: fresh traffic still drains.
+    let p = coord.random_payload(0, &mut rng);
+    coord.submit(0, p).unwrap();
+    let more = coord.run_until_drained().unwrap();
+    assert_eq!(more.len(), 1, "system keeps serving after the drop");
+}

@@ -50,6 +50,10 @@ fn item(round: u64, index: usize, lane: usize, lanes_resident: usize) -> WorkIte
         spec: ModelSpec::Sgemm { m: 8, n: 8, k: 8 },
         weights: None,
         weights_marshal_s: 0.0,
+        cost_hint: 0.0,
+        executed_lane: lane,
+        stolen: false,
+        attempt: 0,
     }
 }
 

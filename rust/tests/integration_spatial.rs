@@ -220,3 +220,115 @@ fn coordinator_runs_lane_rounds_end_to_end() {
     assert_eq!(snaps[0].lane_launches.len(), 2);
     assert!(snaps[0].lane_busy_s.iter().any(|&b| b > 0.0));
 }
+
+#[test]
+fn steal_off_coordinator_reports_zero_lane_steals() {
+    // `steal = false` (the default): per-lane queues stay strictly
+    // private, so the stealing machinery must remain fully disengaged —
+    // every lane counter reads zero and the plain lane accounting still
+    // ties out exactly as it did before stealing existed.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        lanes: 2,
+        steal: false,
+        artifacts_dir: dir,
+        tenants: vec![
+            TenantConfig {
+                name: "a".into(),
+                model: "sgemm:256x128x1152".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: 0,
+            },
+            TenantConfig {
+                name: "b".into(),
+                model: "sgemm:256x256x256".into(),
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: 1,
+            },
+        ],
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(31);
+    for t in 0..2usize {
+        for _ in 0..4 {
+            let p = coord.random_payload(t, &mut rng);
+            coord.submit(t, p).unwrap();
+        }
+    }
+    let responses = coord.run_until_drained().unwrap();
+    assert_eq!(responses.len(), 8);
+    let snaps = coord.device_snapshots();
+    assert!(
+        snaps[0].lane_steals.iter().all(|&s| s == 0),
+        "steal-off must never record a steal: {:?}",
+        snaps[0].lane_steals
+    );
+    let lane_total: u64 = snaps[0].lane_launches.iter().sum();
+    assert_eq!(lane_total, snaps[0].launches);
+}
+
+#[test]
+fn stealing_coordinator_preserves_numerics_end_to_end() {
+    // Work stealing moves launches between lanes; it must never change
+    // WHAT is computed. Each work item carries its launch/spec/weights,
+    // so the executing lane is irrelevant to the numerics: every request
+    // completes exactly once and matches the host GEMM reference.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        scheduler: SchedulerKind::SpaceTime,
+        lanes: 2,
+        steal: true,
+        steal_min_queue: 1,
+        artifacts_dir: dir,
+        tenants: (0..4)
+            .map(|i| TenantConfig {
+                name: format!("t{i}"),
+                // Imbalanced classes: heavy K on even tenants makes one
+                // lane's queue run long, giving thieves something to take.
+                model: if i % 2 == 0 {
+                    "sgemm:256x128x1152".into()
+                } else {
+                    "sgemm:256x256x256".into()
+                },
+                batch: 1,
+                slo_ms: 10_000.0,
+                weight_seed: i as u64,
+            })
+            .collect(),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&cfg).unwrap();
+    let mut rng = Rng::new(32);
+    let mut sent: Vec<(u64, Vec<stgpu::runtime::HostTensor>)> = Vec::new();
+    for wave in 0..3 {
+        for t in 0..4usize {
+            for _ in 0..2 {
+                let p = coord.random_payload(t, &mut rng);
+                let id = coord.submit(t, p.clone()).unwrap();
+                sent.push((id, p));
+            }
+        }
+        let _ = wave;
+        let responses = coord.run_until_drained().unwrap();
+        for (id, payload) in sent.drain(..) {
+            let resp = responses
+                .iter()
+                .find(|r| r.id == id)
+                .unwrap_or_else(|| panic!("no response for request {id}"));
+            let a = stgpu::runtime::HostTensor::stack(&[&payload[0]], 1);
+            let b = stgpu::runtime::HostTensor::stack(&[&payload[1]], 1);
+            let want = stgpu::runtime::host_batched_gemm(&a, &b).slice_problem(0);
+            let diff = resp.output.max_abs_diff(&want);
+            assert!(diff < 1e-2, "request {id}: diff {diff}");
+        }
+    }
+    // Stealing is permitted but not required here (timing-dependent);
+    // what IS required is that the accounting stays coherent.
+    let snaps = coord.device_snapshots();
+    let lane_total: u64 = snaps[0].lane_launches.iter().sum();
+    assert_eq!(lane_total, snaps[0].launches);
+}

@@ -1,0 +1,305 @@
+//! Schedule-exhaustive model checking of the **work-stealing** deque
+//! protocol.
+//!
+//! Companion to `tests/modelcheck_protocol.rs` (which pins the base
+//! dispatch/collect/resize/shutdown protocol): these tests turn
+//! [`LaneProtocol::set_steal`] ON and explore every interleaving of owner
+//! pops, back-of-queue steals, and collection under [`ModelEnv`]. The
+//! invariants are the ones the production driver relies on:
+//!
+//! * **Conservation with stealing on** — every dispatched item surfaces
+//!   exactly once, whether the owner ran it or a thief did.
+//! * **Attribution** — the *planned* lane tag survives a steal untouched
+//!   (cost-model feedback attributes to the plan), while the executed
+//!   lane and stolen flag report where it actually ran.
+//! * **Privacy with stealing off** — `steal = false` is bit-for-bit the
+//!   pre-steal SPSC pool: only the owner ever executes a lane's items.
+//!
+//! The `mutation_*` tests re-introduce the two canonical stealing bugs and
+//! prove the checker CATCHES them — the tooling's own regression suite:
+//! * **steal-by-copy** (thief reads the victim's back without popping):
+//!   the item executes twice and the duplicate completion is reported;
+//! * **lost steal** (thief pops the victim's back, then drops the item
+//!   instead of running it): the driver waits on a completion that can
+//!   never arrive and the checker reports the deadlock.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use stgpu::coordinator::protocol::{
+    ItemRunner, LaneProtocol, LaneTagged, ProtoPayload, ProtoReceiver, ProtoSender, SyncEnv,
+};
+use stgpu::util::modelcheck::{explore, CheckOpts, ModelEnv};
+
+// ---------------------------------------------------------------------------
+// Model payloads: items that remember where they actually executed.
+// ---------------------------------------------------------------------------
+
+struct SItem {
+    id: u64,
+    lane: usize,
+    executed: usize,
+    stolen: bool,
+}
+
+impl SItem {
+    fn new(id: u64, lane: usize) -> Self {
+        Self { id, lane, executed: usize::MAX, stolen: false }
+    }
+}
+
+impl ProtoPayload for SItem {
+    fn fingerprint(&self) -> u64 {
+        self.id ^ ((self.lane as u64) << 8)
+    }
+}
+
+impl LaneTagged for SItem {
+    fn lane(&self) -> usize {
+        self.lane
+    }
+    fn set_lane(&mut self, lane: usize) {
+        self.lane = lane;
+    }
+    fn set_executed(&mut self, lane: usize, stolen: bool) {
+        self.executed = lane;
+        self.stolen = stolen;
+    }
+}
+
+struct SDone {
+    id: u64,
+    planned: usize,
+    executed: usize,
+    stolen: bool,
+}
+
+impl ProtoPayload for SDone {
+    fn fingerprint(&self) -> u64 {
+        self.id ^ ((self.executed as u64) << 8) ^ ((self.stolen as u64) << 16)
+    }
+}
+
+/// Yields once mid-execution so the explorer can park a worker between
+/// taking an item (under the deque lock) and reporting it — the window
+/// where a racing thief must NOT be able to double-take the item.
+struct SRunner;
+
+impl ItemRunner<SItem, SDone> for SRunner {
+    fn run(&self, item: SItem) -> SDone {
+        ModelEnv::yield_now();
+        SDone {
+            id: item.id,
+            planned: item.lane,
+            executed: item.executed,
+            stolen: item.stolen,
+        }
+    }
+}
+
+fn model_pool(lanes: usize) -> LaneProtocol<ModelEnv, SItem, SDone> {
+    LaneProtocol::new(lanes, Arc::new(SRunner))
+}
+
+/// Mark `id` collected exactly once in `seen`.
+fn mark(seen: &mut [bool], id: u64) {
+    let slot = &mut seen[id as usize];
+    assert!(!*slot, "completion {id} surfaced twice");
+    *slot = true;
+}
+
+// ---------------------------------------------------------------------------
+// Trunk protocol checks (must pass on every schedule)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_stealing_conserves_items_and_attributes_both_lanes() {
+    // Three threads (driver + 2 workers), all work planned onto lane 0,
+    // stealing on: on every schedule each item runs exactly once — owner
+    // or thief — the planned tag survives, and the steal counter agrees
+    // with the completions' stolen flags.
+    let opts = CheckOpts { max_preemptions: 1, ..CheckOpts::default() };
+    let stats = explore("steal-conserve", opts, || {
+        let mut pool = model_pool(2);
+        pool.set_steal(true);
+        for id in 0..3 {
+            pool.dispatch(SItem::new(id, 0));
+        }
+        let mut seen = [false; 3];
+        let mut stolen_seen = 0u64;
+        for _ in 0..3 {
+            let d = pool.collect().expect("workers alive");
+            mark(&mut seen, d.id);
+            assert_eq!(d.planned, 0, "planned lane tag must survive stealing");
+            if d.stolen {
+                stolen_seen += 1;
+                assert_eq!(d.executed, 1, "only lane 1 can steal lane 0's work");
+            } else {
+                assert_eq!(d.executed, 0, "un-stolen work runs on its owner");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "an item was lost");
+        assert_eq!(
+            pool.steals_total(),
+            stolen_seen,
+            "steal counter must agree with completion attribution"
+        );
+        assert_eq!(pool.in_flight(), 0);
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("steal conservation: {stats}");
+    assert!(!stats.truncated, "exploration must complete within bound");
+    assert!(stats.schedules > 1);
+}
+
+#[test]
+fn model_steal_off_keeps_lanes_private_on_every_schedule() {
+    // The bit-identical claim at the protocol level: with stealing off
+    // (the default), no schedule exists where an item executes anywhere
+    // but its planned lane.
+    let opts = CheckOpts { max_preemptions: 1, ..CheckOpts::default() };
+    let stats = explore("steal-off-private", opts, || {
+        let mut pool = model_pool(2);
+        pool.dispatch(SItem::new(0, 0));
+        pool.dispatch(SItem::new(1, 0));
+        pool.dispatch(SItem::new(2, 1));
+        let mut seen = [false; 3];
+        for _ in 0..3 {
+            let d = pool.collect().expect("workers alive");
+            mark(&mut seen, d.id);
+            assert_eq!(d.executed, d.planned, "steal off: owner executes");
+            assert!(!d.stolen);
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(pool.steals_total(), 0, "no steals may be recorded");
+        assert_eq!(pool.in_flight(), 0);
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("steal-off privacy: {stats}");
+    assert!(!stats.truncated);
+}
+
+#[test]
+fn model_resize_with_steal_on_drains_without_loss() {
+    // Shrink 2 -> 1 with stealing enabled while the retired lane still
+    // owes queued work: the drain re-homes the backlog and no schedule
+    // loses or duplicates an item.
+    let opts = CheckOpts { max_preemptions: 1, ..CheckOpts::default() };
+    let stats = explore("steal-resize", opts, || {
+        let mut pool = model_pool(2);
+        pool.set_steal(true);
+        pool.dispatch(SItem::new(0, 1));
+        pool.dispatch(SItem::new(1, 1));
+        pool.resize(1);
+        pool.dispatch(SItem::new(2, 1)); // clamps onto lane 0
+        let mut seen = [false; 3];
+        for _ in 0..3 {
+            let d = pool.collect().expect("workers alive");
+            mark(&mut seen, d.id);
+        }
+        assert!(seen.iter().all(|&s| s), "resize lost stealable work");
+        assert_eq!(pool.lanes(), 1);
+        assert_eq!(pool.in_flight(), 0);
+    })
+    .unwrap_or_else(|f| panic!("{f}"));
+    println!("steal resize/drain: {stats}");
+    assert!(!stats.truncated);
+}
+
+// ---------------------------------------------------------------------------
+// Mutation checks: known-bad stealing variants the checker must catch
+// ---------------------------------------------------------------------------
+
+struct RawDone {
+    id: u64,
+}
+
+impl ProtoPayload for RawDone {
+    fn fingerprint(&self) -> u64 {
+        self.id
+    }
+}
+
+#[test]
+fn mutation_steal_by_copy_double_executes_and_is_caught() {
+    // Re-introduce the classic stealing bug: the thief READS the victim's
+    // back entry without popping it (steal-by-copy). On schedules where
+    // the owner has not yet drained that entry, it executes twice and the
+    // duplicate completion surfaces — the checker must find such a
+    // schedule. (Trunk pops under the same lock that owners pop under:
+    // see `model_stealing_conserves_items_and_attributes_both_lanes`.)
+    let err = explore("steal-by-copy", CheckOpts::default(), || {
+        let q = Arc::new(Mutex::new(VecDeque::from([1u64, 2])));
+        let (done_tx, done_rx) = ModelEnv::channel::<RawDone>();
+        let (q2, tx2) = (q.clone(), done_tx.clone());
+        let owner = ModelEnv::spawn("owner".into(), move || loop {
+            let front = q2.lock().unwrap_or_else(PoisonError::into_inner).pop_front();
+            match front {
+                Some(id) => {
+                    ModelEnv::yield_now(); // "execute"
+                    let _ = tx2.send(RawDone { id });
+                }
+                None => return,
+            }
+        });
+        let (q3, tx3) = (q, done_tx);
+        let thief = ModelEnv::spawn("thief".into(), move || {
+            // BUG: copy the back entry, leaving it for the owner too.
+            let back =
+                q3.lock().unwrap_or_else(PoisonError::into_inner).back().copied();
+            if let Some(id) = back {
+                ModelEnv::yield_now(); // "execute"
+                let _ = tx3.send(RawDone { id });
+            }
+        });
+        owner.join();
+        thief.join();
+        let mut seen = [false; 3];
+        while let Some(d) = done_rx.try_recv() {
+            mark(&mut seen, d.id); // panics on the double execution
+        }
+    })
+    .expect_err("the checker must catch the double execution");
+    assert!(err.message.contains("surfaced twice"), "got: {}", err.message);
+    println!("steal-by-copy caught after {} schedule(s)", err.schedules);
+}
+
+#[test]
+fn mutation_lost_steal_is_caught_as_a_stuck_collector() {
+    // The other canonical bug: the thief POPS the victim's back entry,
+    // then drops it on the floor instead of executing it. The driver then
+    // waits for a completion that can never arrive; the checker must
+    // report the stuck collector. (Trunk hands every popped item to the
+    // runner before anything else can touch the deques.)
+    let err = explore("lost-steal", CheckOpts::default(), || {
+        let q = Arc::new(Mutex::new(VecDeque::from([1u64, 2])));
+        let (done_tx, done_rx) = ModelEnv::channel::<RawDone>();
+        let done_keep = done_tx.clone(); // driver keeps the channel open (as the pool does)
+        let (q2, tx2) = (q.clone(), done_tx);
+        let owner = ModelEnv::spawn("owner".into(), move || loop {
+            let front = q2.lock().unwrap_or_else(PoisonError::into_inner).pop_front();
+            match front {
+                Some(id) => {
+                    ModelEnv::yield_now();
+                    let _ = tx2.send(RawDone { id });
+                }
+                None => return,
+            }
+        });
+        let thief = ModelEnv::spawn("thief".into(), move || {
+            // BUG: take the item and never run or report it.
+            let _lost = q.lock().unwrap_or_else(PoisonError::into_inner).pop_back();
+        });
+        let mut seen = [false; 3];
+        for _ in 0..2 {
+            let d = done_rx.recv().expect("completion"); // never arrives when the steal is lost
+            mark(&mut seen, d.id);
+        }
+        owner.join();
+        thief.join();
+        drop(done_keep);
+    })
+    .expect_err("the checker must catch the lost steal");
+    assert!(err.message.contains("deadlock"), "got: {}", err.message);
+    println!("lost steal caught after {} schedule(s)", err.schedules);
+}

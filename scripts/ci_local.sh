@@ -7,7 +7,7 @@
 # Steps (in CI-job order):
 #   build-test:  cargo build --release && cargo test -q
 #                && cargo build --benches --examples
-#   bench-gate:  cargo bench --no-run, the fig11/fig12/fig13/fig14 smokes,
+#   bench-gate:  cargo bench --no-run, the fig11-fig15 smokes,
 #                the `stgpu tune --budget 20` smoke (validated-TOML +
 #                baseline check), then scripts/bench_gate.py against
 #                rust/bench_baselines
@@ -59,6 +59,8 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
     cargo bench --bench fig13_sim_scale
     step "bench-gate: fig14 cluster-scaleout smoke"
     cargo bench --bench fig14_cluster_scaleout
+    step "bench-gate: fig15 work-stealing smoke"
+    cargo bench --bench fig15_work_stealing
     step "bench-gate: stgpu tune smoke (budget 20)"
     cargo run --release --bin stgpu -- tune --workload fig12 --budget 20 \
         --out-toml rust/results/tune_fig12.toml \
@@ -91,6 +93,9 @@ cargo run -p xtask -- lint
 
 step "model-check: lane-protocol exhaustive + mutation suite"
 cargo test --test modelcheck_protocol -- --nocapture
+
+step "model-check: work-stealing deques exhaustive + mutation suite"
+cargo test --test modelcheck_steal -- --nocapture
 
 step "model-check: cluster ticket-protocol exhaustive + mutation suite"
 cargo test --test modelcheck_cluster -- --nocapture
