@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
 use stgpu::coordinator::{Coordinator, DynamicBatcher, PaddingPolicy};
-use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
+use stgpu::coordinator::request::{InferenceRequest, Priority, ShapeClass};
 use stgpu::util::bench::{banner, fmt_secs, Table};
 use stgpu::util::prng::Rng;
 
@@ -56,6 +56,8 @@ fn bucket_granularity() {
                         payload: vec![],
                         arrived: Instant::now(),
                         deadline: Instant::now(),
+                        priority: Priority::Normal,
+                        trace_id: 0,
                     }
                 })
                 .collect();

@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use stgpu::coordinator::scheduler::SpaceTimeSched;
-use stgpu::coordinator::{CostModel, InferenceRequest, QueueSet, Scheduler, ShapeClass};
+use stgpu::coordinator::{CostModel, InferenceRequest, Priority, QueueSet, Scheduler, ShapeClass};
 use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
 use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
 use stgpu::util::bench::{banner, BenchJson, Table};
@@ -152,6 +152,8 @@ fn run_lanes(lanes: usize) -> LaneResult {
                 payload: vec![],
                 arrived,
                 deadline: arrived + Duration::from_secs_f64(SLO_S),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .expect("bench queues are effectively unbounded");
             idx += 1;

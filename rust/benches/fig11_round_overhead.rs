@@ -28,7 +28,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use stgpu::coordinator::lanepool::{LanePool, LaunchExecutor, WorkItem};
-use stgpu::coordinator::{InferenceRequest, Launch, LaunchResult, ModelSpec, ShapeClass};
+use stgpu::coordinator::{InferenceRequest, Launch, LaunchResult, ModelSpec, Priority, ShapeClass};
 use stgpu::util::bench::{banner, BenchJson, Table};
 use stgpu::util::stats;
 
@@ -90,6 +90,8 @@ fn work_item(round: u64, index: usize, lane: usize, lanes: usize) -> WorkItem {
                 payload: vec![],
                 arrived: now,
                 deadline: now + Duration::from_micros(SLO_US),
+                priority: Priority::Normal,
+                trace_id: 0,
             }],
             r_bucket: 1,
         },

@@ -43,8 +43,8 @@ use std::time::{Duration, Instant};
 
 use stgpu::coordinator::scheduler::SpaceTimeSched;
 use stgpu::coordinator::{
-    AdaptiveController, ControlSignals, ControllerParams, Decision, InferenceRequest,
-    QueueSet, Scheduler, ShapeClass, SignalTracker,
+    AdaptiveController, ControlSignals, ControllerParams, Decision, QueueSet, RequestContext,
+    Scheduler, ShapeClass, SignalTracker,
 };
 use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
 use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
@@ -229,15 +229,11 @@ fn run(static_lanes: usize, adaptive: bool) -> RunResult {
         while idx < tr.len() && tr[idx].0 <= t {
             let (arr, tenant) = tr[idx];
             let arrived = base + Duration::from_secs_f64(arr);
-            q.push(InferenceRequest {
-                id: idx as u64,
-                tenant,
-                class: tenant_class(tenant),
-                payload: vec![],
-                arrived,
-                deadline: arrived + Duration::from_secs_f64(tenant_slo_s(tenant)),
-            })
-            .expect("bench queues are effectively unbounded");
+            // Context-carrying API: deadline rides the RequestContext.
+            let ctx = RequestContext::new(tenant)
+                .with_budget(Duration::from_secs_f64(tenant_slo_s(tenant)));
+            q.push(ctx.into_request(idx as u64, tenant_class(tenant), vec![], arrived, Duration::ZERO))
+                .expect("bench queues are effectively unbounded");
             idx += 1;
         }
         if q.is_empty() {

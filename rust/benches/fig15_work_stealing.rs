@@ -30,7 +30,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use stgpu::coordinator::scheduler::SpaceTimeSched;
-use stgpu::coordinator::{InferenceRequest, QueueSet, Scheduler, ShapeClass};
+use stgpu::coordinator::{QueueSet, RequestContext, Scheduler, ShapeClass};
 use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
 use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
 use stgpu::util::bench::{banner, BenchJson, Table};
@@ -226,15 +226,11 @@ fn run(arrivals: &[(f64, usize)], slo_s: f64, steal: bool) -> RunResult {
         while idx < arrivals.len() && arrivals[idx].0 <= t {
             let (arr, tenant) = arrivals[idx];
             let arrived = base + Duration::from_secs_f64(arr);
-            q.push(InferenceRequest {
-                id: idx as u64,
-                tenant,
-                class: class_of(tenant),
-                payload: vec![],
-                arrived,
-                deadline: arrived + Duration::from_secs_f64(slo_s),
-            })
-            .expect("bench queues are effectively unbounded");
+            // Context-carrying API: deadline rides the RequestContext.
+            let ctx =
+                RequestContext::new(tenant).with_budget(Duration::from_secs_f64(slo_s));
+            q.push(ctx.into_request(idx as u64, class_of(tenant), vec![], arrived, Duration::ZERO))
+                .expect("bench queues are effectively unbounded");
             idx += 1;
         }
         if q.is_empty() {

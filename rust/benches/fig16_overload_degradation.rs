@@ -1,0 +1,360 @@
+//! Figure 16 (extension) — graceful degradation under overload through
+//! the gateway tier: goodput of the full admission stack (auth →
+//! validation → per-tenant token buckets → per-shard circuit breakers →
+//! backend) as offered load sweeps 1x → 10x → 100x of backend capacity
+//! across thousands of tenants.
+//!
+//! The claim the gateway exists for: a server WITHOUT admission control
+//! melts under a 100x front — every queue fills, every request pays the
+//! full queueing delay, goodput collapses. WITH the gateway, overload is
+//! absorbed at the cheapest possible layer: per-tenant buckets clamp the
+//! admitted stream to a sustainable aggregate just above capacity, and
+//! the burst-credit flood at t = 0 (every bucket starts full) trips the
+//! per-shard breakers exactly once, which shed the spike at the gateway
+//! until the half-open probes confirm the shards have drained. Past the
+//! transient, the admitted stream settles at ~1.2x capacity, the shards
+//! run saturated, and goodput stays pinned at capacity no matter how
+//! hard the front door is hammered.
+//!
+//! Everything runs on a virtual clock (the gateway takes `now`
+//! explicitly) against a deterministic tick-capacity shard model: the
+//! sweep is exactly reproducible — no real sockets, no real sleeps.
+//!
+//! Asserted at the bottom (the ISSUE acceptance claims): goodput at
+//! 100x >= 0.8x the 1x capacity goodput; admitted-request p99 stays
+//! bounded (no queueing collapse); every shard's breaker trips on the
+//! 100x burst, sheds WITHOUT backend submissions, and recovers to
+//! closed by the end of the run.
+
+use std::time::{Duration, Instant};
+
+use stgpu::config::{GatewayConfig, GatewayTenant, IsolationClass};
+use stgpu::coordinator::{InferenceResponse, Reject, RequestContext};
+use stgpu::runtime::HostTensor;
+use stgpu::server::{BackendReply, BreakerState, Gateway, GatewayBackend, WireRequest};
+use stgpu::util::bench::{banner, BenchJson, Table};
+use stgpu::util::prng::Rng;
+use stgpu::util::stats;
+
+const N_TENANTS: usize = 2000;
+const SHARDS: usize = 8;
+/// Virtual-time tick; shard capacity is per tick.
+const TICK_S: f64 = 0.001;
+const HORIZON_TICKS: u64 = 1000;
+/// Backend capacity: 5 per shard per tick = 40k requests/s total.
+const CAP_PER_TICK: usize = 5;
+const CAP_RPS: f64 = (CAP_PER_TICK * SHARDS) as f64 / TICK_S;
+/// Aggregate sustained token rate relative to capacity: just above 1.0
+/// so the shards run saturated but the steady overload fraction (~1/6)
+/// stays far under the breaker threshold (1/2).
+const RATE_OVER_CAP: f64 = 1.2;
+const SEED: u64 = 1601;
+/// Per-request deadline budget on the wire (all admitted requests
+/// complete well inside it — the sweep measures shedding, not misses).
+const BUDGET_MS: f64 = 50.0;
+
+/// Deterministic shard model: each shard serves up to [`CAP_PER_TICK`]
+/// submissions per tick at a latency that grows with its position in
+/// the tick (a drained shard answers fast, a busy one slower), and
+/// rejects the rest with `Overloaded`.
+struct SimShards {
+    counts: Vec<usize>,
+    submits: u64,
+    accepted: u64,
+}
+
+impl SimShards {
+    fn new() -> Self {
+        Self { counts: vec![0; SHARDS], submits: 0, accepted: 0 }
+    }
+
+    fn next_tick(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+impl GatewayBackend for SimShards {
+    fn devices(&self) -> usize {
+        SHARDS
+    }
+
+    fn device_of(&self, tenant: usize) -> usize {
+        tenant % SHARDS
+    }
+
+    fn submit(&mut self, ctx: RequestContext, _payload: Vec<HostTensor>) -> BackendReply {
+        self.submits += 1;
+        let shard = ctx.tenant % SHARDS;
+        let pos = self.counts[shard];
+        if pos >= CAP_PER_TICK {
+            return BackendReply::Ready(Err(Reject::Overloaded));
+        }
+        self.counts[shard] += 1;
+        self.accepted += 1;
+        let latency_s = 0.0005 + 0.004 * (pos + 1) as f64 / CAP_PER_TICK as f64;
+        BackendReply::Ready(Ok(InferenceResponse {
+            id: self.accepted,
+            tenant: ctx.tenant,
+            output: HostTensor { shape: vec![1], data: vec![0.0] },
+            latency_s,
+            service_s: latency_s,
+            fused_r: 1,
+            trace_id: ctx.trace_id,
+        }))
+    }
+}
+
+/// Tenant `i`'s isolation class. Decorrelated from `i % SHARDS` (the
+/// shard route) so every shard carries the same class mix.
+fn class_of(i: usize) -> IsolationClass {
+    match (i / SHARDS) % 4 {
+        0 => IsolationClass::Premium,
+        3 => IsolationClass::Batch,
+        _ => IsolationClass::Standard,
+    }
+}
+
+fn gateway_config() -> GatewayConfig {
+    // Aggregate sustained rate = RATE_OVER_CAP x capacity, split across
+    // tenants in proportion to their class rate multiplier.
+    let mult_sum: f64 = (0..N_TENANTS).map(|i| class_of(i).rate_mult()).sum();
+    let base_rate = RATE_OVER_CAP * CAP_RPS / mult_sum;
+    GatewayConfig {
+        rate: base_rate,
+        burst: 4.0,
+        // 64-outcome window: the 1x shard-arrival jitter (~1/6 overload
+        // fraction) can never cluster to 50% of a window this long, while
+        // the 100x burst flood fills it with overloads inside one tick.
+        breaker_window: 64,
+        breaker_threshold: 0.5,
+        breaker_cooldown_ms: 25.0,
+        half_open_probes: 3,
+        tenants: (0..N_TENANTS)
+            .map(|i| GatewayTenant {
+                api_key: format!("key-{i}"),
+                tenant: i,
+                class: class_of(i),
+            })
+            .collect(),
+        ..GatewayConfig::default()
+    }
+}
+
+/// The offered-load tenant sequence: each tenant appears in proportion
+/// to its sustainable share (class rate multiplier), deterministically
+/// shuffled, cycled for the whole run. At 1x this offers every tenant
+/// slightly LESS than its own token rate — the no-shedding baseline.
+fn arrival_sequence() -> Vec<u32> {
+    let mut seq = Vec::new();
+    for i in 0..N_TENANTS {
+        // 4x the multiplier -> integer copies: premium 16, standard 4,
+        // batch 1.
+        let copies = (class_of(i).rate_mult() * 4.0).round() as usize;
+        seq.extend(std::iter::repeat(i as u32).take(copies));
+    }
+    let mut rng = Rng::new(SEED);
+    rng.shuffle(&mut seq);
+    seq
+}
+
+struct SweepResult {
+    offered: u64,
+    completed: u64,
+    rate_limited: u64,
+    breaker_shed: u64,
+    backend_rejects: u64,
+    trips: Vec<u64>,
+    all_closed_at_end: bool,
+    latencies: Vec<f64>,
+}
+
+impl SweepResult {
+    fn goodput_rps(&self) -> f64 {
+        self.completed as f64 / (HORIZON_TICKS as f64 * TICK_S)
+    }
+}
+
+/// Run the full admission stack for `HORIZON_TICKS` of virtual time at
+/// `factor` x capacity offered load.
+fn run(factor: f64, keys: &[String], seq: &[u32]) -> SweepResult {
+    let base = Instant::now();
+    let mut gateway = Gateway::new(&gateway_config(), SimShards::new());
+    let per_tick = (factor * CAP_RPS * TICK_S).round() as usize;
+    let mut cursor = 0usize;
+    let mut res = SweepResult {
+        offered: 0,
+        completed: 0,
+        rate_limited: 0,
+        breaker_shed: 0,
+        backend_rejects: 0,
+        trips: Vec::new(),
+        all_closed_at_end: false,
+        latencies: Vec::new(),
+    };
+    for tick in 0..HORIZON_TICKS {
+        gateway.backend_mut().next_tick();
+        let t0 = tick as f64 * TICK_S;
+        for j in 0..per_tick {
+            // Arrivals spread uniformly inside the tick.
+            let now = base
+                + Duration::from_secs_f64(t0 + TICK_S * j as f64 / per_tick.max(1) as f64);
+            let tenant = seq[cursor] as usize;
+            cursor = (cursor + 1) % seq.len();
+            res.offered += 1;
+            let wire = WireRequest {
+                api_key: &keys[tenant],
+                budget_ms: Some(BUDGET_MS),
+                priority: None,
+                trace_id: res.offered,
+            };
+            match gateway.admit(&wire, Vec::new(), now) {
+                Ok(ticket) => {
+                    if let Ok(r) = gateway.wait(ticket, now) {
+                        res.completed += 1;
+                        res.latencies.push(r.latency_s);
+                    } else {
+                        unreachable!("sim backend replies synchronously");
+                    }
+                }
+                Err(Reject::Overloaded) => {} // counted via stats below
+                Err(Reject::RateLimited { .. }) => {}
+                Err(Reject::BreakerOpen { .. }) => {}
+                Err(other) => panic!("unexpected rejection: {other}"),
+            }
+        }
+    }
+    let gstats = gateway.stats();
+    res.rate_limited = gstats.rate_limited;
+    res.breaker_shed = gstats.breaker_shed;
+    res.backend_rejects = gstats.backend_rejects;
+    let end = base + Duration::from_secs_f64(HORIZON_TICKS as f64 * TICK_S);
+    res.all_closed_at_end =
+        (0..SHARDS).all(|d| gateway.breaker_state(d) == BreakerState::Closed);
+    let j = gateway.status_json(end);
+    if let Some(breakers) = j.get("breakers").and_then(stgpu::util::json::Json::as_arr) {
+        res.trips = breakers
+            .iter()
+            .map(|b| {
+                b.get("trips")
+                    .and_then(stgpu::util::json::Json::as_f64)
+                    .unwrap_or(0.0) as u64
+            })
+            .collect();
+    }
+    res.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    res
+}
+
+fn main() {
+    banner(
+        "Figure 16: overload degradation through the gateway (1x/10x/100x sweep)",
+        "goodput at 100x >= 0.8x capacity goodput, admitted p99 bounded, breakers trip once and recover",
+    );
+
+    let keys: Vec<String> = (0..N_TENANTS).map(|i| format!("key-{i}")).collect();
+    let seq = arrival_sequence();
+
+    let factors = [1.0, 10.0, 100.0];
+    let results: Vec<SweepResult> = factors.iter().map(|&f| run(f, &keys, &seq)).collect();
+
+    let mut table = Table::new(&[
+        "load",
+        "offered",
+        "completed",
+        "goodput_rps",
+        "rate_limited",
+        "breaker_shed",
+        "backend_rejects",
+        "trips",
+        "p50_ms",
+        "p99_ms",
+    ]);
+    for (f, r) in factors.iter().zip(&results) {
+        table.row(&[
+            format!("{f}x"),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            format!("{:.0}", r.goodput_rps()),
+            r.rate_limited.to_string(),
+            r.breaker_shed.to_string(),
+            r.backend_rejects.to_string(),
+            r.trips.iter().sum::<u64>().to_string(),
+            format!("{:.2}", stats::percentile_sorted(&r.latencies, 50.0) * 1e3),
+            format!("{:.2}", stats::percentile_sorted(&r.latencies, 99.0) * 1e3),
+        ]);
+    }
+    table.emit("fig16_overload_degradation");
+
+    let g1 = results[0].goodput_rps();
+    let g100 = results[2].goodput_rps();
+    let retention = g100 / g1.max(1e-9);
+    let p99_100 = stats::percentile_sorted(&results[2].latencies, 99.0);
+
+    // 1x: the no-overload baseline — offered below every token rate, so
+    // nothing is rate limited and no breaker ever trips.
+    assert_eq!(results[0].rate_limited, 0, "1x load must not be rate limited");
+    assert_eq!(
+        results[0].trips.iter().sum::<u64>(),
+        0,
+        "1x load must not trip breakers"
+    );
+    // The 1x trace is clumpy (shuffled weighted round-robin), so a shard
+    // occasionally sees more than its per-tick capacity; ~0.75-0.85x of
+    // ideal capacity is the expected realized baseline.
+    assert!(
+        g1 >= 0.7 * CAP_RPS,
+        "1x goodput should be near capacity: {g1:.0} vs {CAP_RPS:.0} rps"
+    );
+    // 100x: the headline claim — goodput holds within 20% of capacity
+    // goodput while 99% of the offered load is shed at the gateway.
+    assert!(
+        retention >= 0.8,
+        "goodput at 100x must be >= 0.8x capacity goodput: {g100:.0} vs {g1:.0} rps ({retention:.3}x)"
+    );
+    assert!(
+        p99_100 <= 0.010,
+        "admitted p99 must stay bounded under 100x overload: {p99_100:.4}s"
+    );
+    for (d, &t) in results[2].trips.iter().enumerate() {
+        assert!(
+            t >= 1,
+            "shard {d} breaker must trip on the 100x burst-credit flood"
+        );
+    }
+    assert!(
+        results[2].breaker_shed > 0,
+        "open breakers must shed at the gateway"
+    );
+    assert!(
+        results[2].all_closed_at_end,
+        "every breaker must probe back to closed by the end of the run"
+    );
+    assert!(
+        results[2].rate_limited > 50 * results[2].backend_rejects.max(1),
+        "at 100x the overwhelming majority of shed work must die at the \
+         token bucket, not reach the backend: {} rate-limited vs {} backend rejects",
+        results[2].rate_limited,
+        results[2].backend_rejects
+    );
+
+    println!(
+        "shape check: capacity {CAP_RPS:.0} rps; goodput {g1:.0} / {:.0} / {g100:.0} rps \
+         at 1x/10x/100x ({retention:.3}x retention at 100x); \
+         100x sheds {} rate-limited + {} breaker-shed + {} backend rejects; \
+         trips per shard {:?}; p99 {:.2} ms.",
+        results[1].goodput_rps(),
+        results[2].rate_limited,
+        results[2].breaker_shed,
+        results[2].backend_rejects,
+        results[2].trips,
+        p99_100 * 1e3,
+    );
+
+    BenchJson::new("fig16_overload_degradation")
+        .throughput(g100)
+        .slo_attainment(retention.min(1.0))
+        .p50_s(stats::percentile_sorted(&results[2].latencies, 50.0))
+        .p99_s(p99_100)
+        .scale(SHARDS as f64)
+        .write();
+}

@@ -30,7 +30,7 @@ use stgpu::coordinator::batcher::PaddingPolicy;
 use stgpu::coordinator::scheduler::{
     make_scheduler, make_scheduler_deadline_aware, Scheduler,
 };
-use stgpu::coordinator::{CostModel, InferenceRequest, QueueSet, ShapeClass};
+use stgpu::coordinator::{CostModel, QueueSet, RequestContext, ShapeClass};
 use stgpu::util::bench::{banner, BenchJson, Table};
 use stgpu::workload::arrivals::{ArrivalProcess, RequestTrace};
 
@@ -130,15 +130,12 @@ fn run_policy(mut sched: Box<dyn Scheduler>, cost: &Arc<Mutex<CostModel>>) -> Po
         while idx < tr.requests.len() && tr.requests[idx].t_arrival <= t {
             let r = tr.requests[idx];
             let arrived = base + Duration::from_secs_f64(r.t_arrival);
-            q.push(InferenceRequest {
-                id: idx as u64,
-                tenant: r.tenant,
-                class: CLASS,
-                payload: vec![],
-                arrived,
-                deadline: arrived + Duration::from_secs_f64(slo_of(r.tenant)),
-            })
-            .expect("bench queues are effectively unbounded");
+            // Context-carrying API: the wire deadline (tenant SLO as a
+            // budget) rides the RequestContext into the EDF heap.
+            let ctx = RequestContext::new(r.tenant)
+                .with_budget(Duration::from_secs_f64(slo_of(r.tenant)));
+            q.push(ctx.into_request(idx as u64, CLASS, vec![], arrived, Duration::ZERO))
+                .expect("bench queues are effectively unbounded");
             idx += 1;
         }
         if q.is_empty() {

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
 use stgpu::coordinator::protocol::{ItemRunner, LaneProtocol, LaneTagged, ProtoPayload, StdEnv};
-use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
+use stgpu::coordinator::request::{InferenceRequest, Priority, ShapeClass};
 use stgpu::coordinator::{make_scheduler, Coordinator, QueueSet};
 use stgpu::runtime::HostTensor;
 use stgpu::util::bench::{banner, fmt_secs, Bencher, Table};
@@ -51,6 +51,8 @@ fn scheduling_decision() {
                     payload: vec![],
                     arrived: Instant::now(),
                     deadline: Instant::now(),
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .unwrap();
             }

@@ -6,5 +6,8 @@
 pub mod schema;
 pub mod toml_lite;
 
-pub use schema::{ClusterConfig, ControllerConfig, SchedulerKind, ServerConfig, TenantConfig};
+pub use schema::{
+    ClusterConfig, ControllerConfig, GatewayConfig, GatewayTenant, IsolationClass,
+    SchedulerKind, ServerConfig, TenantConfig,
+};
 pub use toml_lite::TomlDoc;

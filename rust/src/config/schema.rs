@@ -344,12 +344,220 @@ pub struct ServerConfig {
     /// Cluster tier (`[cluster]` section): node count, hotspot-migration
     /// thresholds, and the decision-journal path. Single node by default.
     pub cluster: ClusterConfig,
+    /// Gateway tier (`[gateway]` + `[gateway.tenants]` sections): auth,
+    /// per-tenant rate limiting, and per-shard circuit breakers in front
+    /// of the coordinator. Disabled by default.
+    pub gateway: GatewayConfig,
     /// Directory holding the AOT artifacts (HLO text + manifest).
     pub artifacts_dir: PathBuf,
     /// Worker threads executing batches.
     pub workers: usize,
     pub seed: u64,
     pub tenants: Vec<TenantConfig>,
+}
+
+/// Isolation class an API key maps to: scales the tenant's token-bucket
+/// allowance and picks the default scheduling priority the gateway stamps
+/// on requests that don't name one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IsolationClass {
+    /// Latency-critical paid tier: biggest bucket, high priority.
+    Premium,
+    /// The default interactive tier.
+    #[default]
+    Standard,
+    /// Throughput-oriented background tier: smallest bucket, batch
+    /// priority, first to shed.
+    Batch,
+}
+
+impl IsolationClass {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "premium" => Ok(Self::Premium),
+            "standard" => Ok(Self::Standard),
+            "batch" => Ok(Self::Batch),
+            other => Err(format!(
+                "unknown isolation class {other:?} (expected premium|standard|batch)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Premium => "premium",
+            Self::Standard => "standard",
+            Self::Batch => "batch",
+        }
+    }
+
+    /// Multiplier on the `[gateway]` base refill rate for this class.
+    pub fn rate_mult(self) -> f64 {
+        match self {
+            Self::Premium => 4.0,
+            Self::Standard => 1.0,
+            Self::Batch => 0.25,
+        }
+    }
+
+    /// Multiplier on the `[gateway]` base burst credit for this class.
+    pub fn burst_mult(self) -> f64 {
+        match self {
+            Self::Premium => 4.0,
+            Self::Standard => 1.0,
+            Self::Batch => 0.5,
+        }
+    }
+}
+
+/// One `[gateway.tenants]` entry: an API key bound to a tenant (by name,
+/// resolved to its index) and an isolation class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayTenant {
+    pub api_key: String,
+    /// Index into `ServerConfig::tenants`.
+    pub tenant: usize,
+    pub class: IsolationClass,
+}
+
+/// The validated `[gateway]` section: the async gateway tier in front of
+/// the coordinator (auth → validation → rate limit → admission). With
+/// `enabled = false` (the default) the serving path is the bare
+/// [`crate::server::ServerHandle`] — bit-for-bit the pre-gateway
+/// behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayConfig {
+    pub enabled: bool,
+    /// TCP listen address for the reactor (e.g. `"127.0.0.1:7071"`);
+    /// `None` runs the gateway in-process only (tests, benches).
+    pub listen: Option<String>,
+    /// Reactor worker threads handling decoded connections. [1, 64].
+    pub reactor_workers: usize,
+    /// Base token refill rate, requests/second per tenant (scaled by
+    /// [`IsolationClass::rate_mult`]). Must be finite and > 0.
+    pub rate: f64,
+    /// Base burst credit, tokens (scaled by
+    /// [`IsolationClass::burst_mult`]). Must be finite and >= 1.
+    pub burst: f64,
+    /// Sliding outcome window per shard breaker (admissions observed).
+    /// [4, 65536].
+    pub breaker_window: usize,
+    /// Overload fraction of the window that trips the breaker. (0, 1].
+    pub breaker_threshold: f64,
+    /// How long a tripped breaker stays open before half-opening, ms.
+    pub breaker_cooldown_ms: f64,
+    /// Successful probes a half-open breaker needs to close. [1, 1024].
+    pub half_open_probes: u32,
+    /// API-key table from `[gateway.tenants]`.
+    pub tenants: Vec<GatewayTenant>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            listen: None,
+            reactor_workers: 4,
+            rate: 64.0,
+            burst: 128.0,
+            breaker_window: 32,
+            breaker_threshold: 0.5,
+            breaker_cooldown_ms: 250.0,
+            half_open_probes: 3,
+            tenants: Vec::new(),
+        }
+    }
+}
+
+impl GatewayConfig {
+    /// Parse `[gateway]` + the `[gateway.tenants]` key table. `tenants`
+    /// is the already-parsed `[[tenant]]` list — API keys bind to tenant
+    /// NAMES and resolve to indices here, so a typo fails at load time,
+    /// not at the first request.
+    fn from_doc(doc: &TomlDoc, tenants: &[TenantConfig]) -> Result<Self, String> {
+        let mut cfg = GatewayConfig::default();
+        if let Some(section) = doc.sections.get("gateway") {
+            if let Some(v) = section.get("enabled").and_then(|v| v.as_bool()) {
+                cfg.enabled = v;
+            }
+            if let Some(v) = section.get("listen").and_then(|v| v.as_str()) {
+                cfg.listen = Some(v.to_string());
+            }
+            if let Some(v) = section.get("reactor_workers").and_then(|v| v.as_int()) {
+                if !(1..=64).contains(&v) {
+                    return Err("gateway.reactor_workers must be in [1, 64]".into());
+                }
+                cfg.reactor_workers = v as usize;
+            }
+            if let Some(v) = section.get("rate").and_then(|v| v.as_float()) {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err("gateway.rate must be finite and > 0 (req/s)".into());
+                }
+                cfg.rate = v;
+            }
+            if let Some(v) = section.get("burst").and_then(|v| v.as_float()) {
+                if !v.is_finite() || v < 1.0 {
+                    return Err("gateway.burst must be finite and >= 1 (tokens)".into());
+                }
+                cfg.burst = v;
+            }
+            if let Some(v) = section.get("breaker_window").and_then(|v| v.as_int()) {
+                if !(4..=65536).contains(&v) {
+                    return Err("gateway.breaker_window must be in [4, 65536]".into());
+                }
+                cfg.breaker_window = v as usize;
+            }
+            if let Some(v) = section.get("breaker_threshold").and_then(|v| v.as_float()) {
+                if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                    return Err("gateway.breaker_threshold must be in (0, 1]".into());
+                }
+                cfg.breaker_threshold = v;
+            }
+            if let Some(v) = section.get("breaker_cooldown_ms").and_then(|v| v.as_float()) {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err("gateway.breaker_cooldown_ms must be finite and > 0".into());
+                }
+                cfg.breaker_cooldown_ms = v;
+            }
+            if let Some(v) = section.get("half_open_probes").and_then(|v| v.as_int()) {
+                if !(1..=1024).contains(&v) {
+                    return Err("gateway.half_open_probes must be in [1, 1024]".into());
+                }
+                cfg.half_open_probes = v as u32;
+            }
+        }
+        if let Some(keys) = doc.sections.get("gateway.tenants") {
+            for (api_key, v) in keys.iter() {
+                let spec = v.as_str().ok_or_else(|| {
+                    format!("gateway.tenants.{api_key}: value must be a \"tenant:class\" string")
+                })?;
+                let (name, class) = match spec.split_once(':') {
+                    Some((n, c)) => (n, IsolationClass::parse(c)?),
+                    None => (spec, IsolationClass::Standard),
+                };
+                let tenant = tenants
+                    .iter()
+                    .position(|t| t.name == name)
+                    .ok_or_else(|| {
+                        format!("gateway.tenants.{api_key}: unknown tenant {name:?}")
+                    })?;
+                if cfg.tenants.iter().any(|k| k.api_key == *api_key) {
+                    return Err(format!("gateway.tenants: duplicate API key {api_key:?}"));
+                }
+                cfg.tenants.push(GatewayTenant {
+                    api_key: api_key.clone(),
+                    tenant,
+                    class,
+                });
+            }
+        }
+        if cfg.enabled && cfg.tenants.is_empty() {
+            return Err(
+                "gateway.enabled = true requires at least one [gateway.tenants] API key".into(),
+            );
+        }
+        Ok(cfg)
+    }
 }
 
 impl Default for ServerConfig {
@@ -374,6 +582,7 @@ impl Default for ServerConfig {
             eviction_strikes: 3,
             controller: ControllerConfig::default(),
             cluster: ClusterConfig::default(),
+            gateway: GatewayConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             workers: 1,
             seed: 0,
@@ -487,6 +696,8 @@ impl ServerConfig {
                 .map(|(i, t)| TenantConfig::from_table(t, i))
                 .collect::<Result<Vec<_>, _>>()?;
         }
+        // Gateway parses AFTER tenants: its API keys bind to tenant names.
+        cfg.gateway = GatewayConfig::from_doc(doc, &cfg.tenants)?;
         Ok(cfg)
     }
 
@@ -539,6 +750,84 @@ mod tests {
         assert!(cfg.eviction_threshold > 1.0);
         assert_eq!(cfg.devices, 1, "single device is the default");
         assert!(cfg.queue_cap >= cfg.queue_depth);
+    }
+
+    #[test]
+    fn gateway_section_parses_keys_and_validates() {
+        let doc = TomlDoc::parse(
+            r#"
+            [gateway]
+            enabled = true
+            listen = "127.0.0.1:7071"
+            reactor_workers = 8
+            rate = 100.0
+            burst = 200.0
+            breaker_window = 16
+            breaker_threshold = 0.75
+            breaker_cooldown_ms = 100.0
+            half_open_probes = 2
+
+            [gateway.tenants]
+            key-a = "a:premium"
+            key-b = "b"
+
+            [[tenant]]
+            name = "a"
+            model = "resnet18"
+
+            [[tenant]]
+            name = "b"
+            model = "resnet18"
+            "#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_doc(&doc).unwrap();
+        let g = &cfg.gateway;
+        assert!(g.enabled);
+        assert_eq!(g.listen.as_deref(), Some("127.0.0.1:7071"));
+        assert_eq!(g.reactor_workers, 8);
+        assert_eq!(g.rate, 100.0);
+        assert_eq!(g.breaker_window, 16);
+        assert_eq!(g.half_open_probes, 2);
+        assert_eq!(g.tenants.len(), 2);
+        let a = g.tenants.iter().find(|k| k.api_key == "key-a").unwrap();
+        assert_eq!((a.tenant, a.class), (0, IsolationClass::Premium));
+        let b = g.tenants.iter().find(|k| k.api_key == "key-b").unwrap();
+        // Class defaults to standard when the spec has no ":class" suffix.
+        assert_eq!((b.tenant, b.class), (1, IsolationClass::Standard));
+        // Defaults: disabled, no keys.
+        let d = GatewayConfig::default();
+        assert!(!d.enabled && d.tenants.is_empty());
+    }
+
+    #[test]
+    fn gateway_section_rejects_bad_keys() {
+        let bad = |s: &str| ServerConfig::from_doc(&TomlDoc::parse(s).unwrap());
+        // Unknown tenant name.
+        assert!(bad("[gateway.tenants]\nk = \"ghost:premium\"").is_err());
+        // Unknown isolation class.
+        assert!(bad(
+            "[gateway.tenants]\nk = \"a:gold\"\n[[tenant]]\nname = \"a\"\nmodel = \"resnet18\""
+        )
+        .is_err());
+        // Enabled with no keys.
+        assert!(bad("[gateway]\nenabled = true").is_err());
+        // Out-of-range knobs.
+        assert!(bad("[gateway]\nrate = 0.0").is_err());
+        assert!(bad("[gateway]\nbreaker_threshold = 1.5").is_err());
+        assert!(bad("[gateway]\nbreaker_window = 2").is_err());
+    }
+
+    #[test]
+    fn isolation_class_scales_and_parses() {
+        assert!(IsolationClass::Premium.rate_mult() > IsolationClass::Standard.rate_mult());
+        assert!(IsolationClass::Batch.rate_mult() < IsolationClass::Standard.rate_mult());
+        assert!(IsolationClass::Premium.burst_mult() >= 1.0);
+        assert_eq!(IsolationClass::parse("premium"), Ok(IsolationClass::Premium));
+        assert_eq!(IsolationClass::parse("batch"), Ok(IsolationClass::Batch));
+        assert!(IsolationClass::parse("gold").is_err());
+        assert_eq!(IsolationClass::default(), IsolationClass::Standard);
+        assert_eq!(IsolationClass::Premium.as_str(), "premium");
     }
 
     #[test]

@@ -12,6 +12,8 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::request::{InferenceRequest, ShapeClass};
+#[cfg(test)]
+use crate::coordinator::request::Priority;
 
 /// A planned super-kernel launch: `entries.len()` real problems padded up
 /// to `r_bucket` lanes of one artifact execution.
@@ -283,7 +285,16 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64, tenant: usize, class: ShapeClass) -> InferenceRequest {
-        InferenceRequest { id, tenant, class, payload: vec![], arrived: Instant::now(), deadline: Instant::now() }
+        InferenceRequest {
+            id,
+            tenant,
+            class,
+            payload: vec![],
+            arrived: Instant::now(),
+            deadline: Instant::now(),
+            priority: Priority::Normal,
+            trace_id: 0,
+        }
     }
 
     fn gemm(m: usize) -> ShapeClass {

@@ -22,8 +22,8 @@ use crate::coordinator::journal::{fnv1a64, FNV64_OFFSET};
 use crate::coordinator::protocol::ProtoPayload;
 use crate::coordinator::scheduler::SpaceTimeSched;
 use crate::coordinator::{
-    AdaptiveController, ControlSignals, ControllerParams, Decision, InferenceRequest, QueueSet,
-    Scheduler, ShapeClass, SignalTracker,
+    AdaptiveController, ControlSignals, ControllerParams, Decision, InferenceRequest, Priority,
+    QueueSet, Scheduler, ShapeClass, SignalTracker,
 };
 use crate::gpusim::cost::{kernel_service_time, CostCtx};
 use crate::gpusim::{DeviceSpec, GemmShape, KernelDesc};
@@ -207,6 +207,8 @@ impl NodeWorker {
                 payload: vec![],
                 arrived,
                 deadline: arrived + Duration::from_secs_f64(slo_s),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .is_ok()
     }

@@ -133,7 +133,7 @@ use crate::coordinator::monitor::{Eviction, MonitorConfig, SloMonitor};
 use crate::coordinator::placement::DevicePlacer;
 use crate::coordinator::queue::QueueSet;
 use crate::coordinator::request::{
-    InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass,
+    InferenceRequest, InferenceResponse, Reject, RequestContext, RequestId, ShapeClass,
 };
 use crate::coordinator::scheduler::{RoundPlan, Scheduler};
 use crate::coordinator::superkernel::{Flavor, SuperKernelExec};
@@ -920,17 +920,35 @@ impl Coordinator {
         }
     }
 
-    /// Submit a request for `tenant` with the given payload tensors.
-    ///
-    /// Admission is bounded twice: a global cap across the pool
-    /// ([`Reject::Overloaded`], 429-style shed) and the per-tenant queue
-    /// depth ([`Reject::QueueFull`]).
+    /// Submit a request for `tenant` with the given payload tensors — the
+    /// deprecation-path signature: builds a default [`RequestContext`]
+    /// (SLO-default deadline, normal priority) and delegates to
+    /// [`Coordinator::submit_ctx`]. New callers should build a context.
     pub fn submit(
         &mut self,
         tenant: usize,
         payload: Vec<HostTensor>,
     ) -> Result<RequestId, Reject> {
+        self.submit_ctx(RequestContext::new(tenant), payload)
+    }
+
+    /// Submit a request described by a full [`RequestContext`]: the
+    /// context's deadline (wire-supplied absolute instant or budget, or
+    /// the tenant SLO as the explicit default) is the deadline the EDF
+    /// queues order by — admission does not re-derive it from config.
+    ///
+    /// Admission is bounded twice: a global cap across the pool
+    /// ([`Reject::Overloaded`], 429-style shed) and the per-tenant queue
+    /// depth ([`Reject::QueueFull`]). With EDF on, a request whose
+    /// context deadline is already infeasible sheds with
+    /// [`Reject::DeadlineInfeasible`].
+    pub fn submit_ctx(
+        &mut self,
+        ctx: RequestContext,
+        payload: Vec<HostTensor>,
+    ) -> Result<RequestId, Reject> {
         self.intern_tenant_metrics();
+        let tenant = ctx.tenant;
         let t = self
             .tenants
             .get(tenant)
@@ -955,17 +973,25 @@ impl Coordinator {
                 )));
             }
         }
-        let slo_ms = t.slo_ms;
+        let slo = std::time::Duration::from_secs_f64(t.slo_ms / 1e3);
         let class = t.spec.shape_class();
         let device = self.placer.device_of(tenant);
+        let arrived = Instant::now();
         // Deadline-aware admission: a request whose *minimal immediate*
         // launch is already predicted past its deadline is lost no matter
         // what the planner does — shed it now (504-style) instead of
-        // queueing doomed work (DARIS, arXiv:2504.08795).
+        // queueing doomed work (DARIS, arXiv:2504.08795). The budget is
+        // the CONTEXT's remaining time, so a client-tightened deadline
+        // sheds earlier and a client-relaxed one admits more — config is
+        // no longer the arbiter.
         if self.edf {
             if let Some(cm) = &self.shards[device].cost_model {
+                let budget_s = ctx
+                    .resolve_deadline(arrived, slo)
+                    .saturating_duration_since(arrived)
+                    .as_secs_f64();
                 let infeasible = lock_recover(cm)
-                    .deadline_infeasible(class, slo_ms / 1e3, self.deadline_slack);
+                    .deadline_infeasible(class, budget_s, self.deadline_slack);
                 if infeasible {
                     self.infeasible_seen += 1;
                     // Recovery valve: admit every PROBE_EVERY-th infeasible
@@ -976,7 +1002,7 @@ impl Coordinator {
                     if self.infeasible_seen % PROBE_EVERY != 0 {
                         // The shed request is still offered load: keep the
                         // shard's arrival-rate estimate truthful.
-                        self.shards[device].queues.note_arrival(Instant::now());
+                        self.shards[device].queues.note_arrival(arrived);
                         self.tenant_metrics[tenant].record_rejection();
                         return Err(Reject::DeadlineInfeasible);
                     }
@@ -986,21 +1012,13 @@ impl Coordinator {
         // Global admission cap across every shard: shed, don't grow (the
         // shed still counts toward the shard's offered-load estimate).
         if self.pending() >= self.queue_cap {
-            self.shards[device].queues.record_shed_at(Instant::now());
+            self.shards[device].queues.record_shed_at(arrived);
             self.tenant_metrics[tenant].record_rejection();
             return Err(Reject::Overloaded);
         }
         let id = self.next_id;
         self.next_id += 1;
-        let arrived = Instant::now();
-        let req = InferenceRequest {
-            id,
-            tenant,
-            class,
-            payload,
-            arrived,
-            deadline: arrived + std::time::Duration::from_secs_f64(slo_ms / 1e3),
-        };
+        let req = ctx.into_request(id, class, payload, arrived, slo);
         match self.shards[device].queues.push(req) {
             Ok(()) => Ok(id),
             Err(rej) => {
@@ -1542,6 +1560,7 @@ impl Coordinator {
             outcome.responses.push(InferenceResponse {
                 id: entry.id,
                 tenant: entry.tenant,
+                trace_id: entry.trace_id,
                 output,
                 latency_s,
                 service_s: res.service_s,
@@ -1659,7 +1678,7 @@ mod tests {
     fn round_arena_counts_growth_only_after_warmup() {
         let mut arena = RoundArena::default();
         use crate::coordinator::batcher::Launch;
-        use crate::coordinator::request::{InferenceRequest, ShapeClass};
+        use crate::coordinator::request::{InferenceRequest, Priority, ShapeClass};
         const CLASS: ShapeClass = ShapeClass { kind: "batched_gemm", m: 8, n: 8, k: 8 };
         let mk = |n: usize, plan: &mut RoundPlan| {
             for i in 0..n {
@@ -1673,6 +1692,8 @@ mod tests {
                         payload: vec![],
                         arrived: now,
                         deadline: now,
+                        priority: Priority::Normal,
+                        trace_id: 0,
                     }],
                     r_bucket: 1,
                 });

@@ -214,7 +214,7 @@ mod tests {
 
     #[test]
     fn key_captures_lane_assignment() {
-        use crate::coordinator::request::{InferenceRequest, ShapeClass};
+        use crate::coordinator::request::{InferenceRequest, Priority, ShapeClass};
         use std::time::Instant;
         let mk = |tenants: &[usize]| Launch {
             class: ShapeClass::batched_gemm(8, 8, 8),
@@ -227,6 +227,8 @@ mod tests {
                     payload: vec![],
                     arrived: Instant::now(),
                     deadline: Instant::now(),
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .collect(),
             r_bucket: 4,

@@ -360,7 +360,7 @@ impl LanePool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{InferenceRequest, ShapeClass};
+    use crate::coordinator::request::{InferenceRequest, Priority, ShapeClass};
     use std::collections::HashMap;
     use std::time::Duration;
 
@@ -382,6 +382,8 @@ mod tests {
                     payload: vec![],
                     arrived: now,
                     deadline: now,
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 }],
                 r_bucket: 1,
             },

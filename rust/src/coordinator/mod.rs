@@ -86,7 +86,10 @@ pub use protocol::{
     StdEnv, SyncEnv,
 };
 pub use queue::{QueueSet, TenantQueue};
-pub use request::{InferenceRequest, InferenceResponse, Reject, RequestId, ShapeClass};
+pub use request::{
+    DeadlineSpec, InferenceRequest, InferenceResponse, Priority, Reject, RejectKind,
+    RejectProvenance, RequestContext, RequestId, ShapeClass,
+};
 pub use scheduler::{
     launch_weight, make_scheduler, make_scheduler_deadline_aware, make_scheduler_spatial,
     RoundPlan, Scheduler,

@@ -2,11 +2,16 @@
 //! a per-tenant depth cap and a global cap across the whole set.
 //!
 //! Each tenant's queue is ordered by absolute request deadline (a binary
-//! heap keyed by `(deadline, seq)`): `pop`/`peek` always surface the most
-//! urgent pending request. Because every request of one tenant carries the
-//! same SLO, deadlines within a tenant ascend with arrival order, so the
-//! EDF order degenerates to FIFO for the paper's §3 baselines — ties on
-//! deadline break by insertion sequence, preserving FIFO exactly.
+//! heap keyed by `(deadline, priority rank, seq)`): `pop`/`peek` always
+//! surface the most urgent pending request. The deadline is the one the
+//! request's [`crate::coordinator::request::RequestContext`] resolved —
+//! wire-supplied when the client sent one, the tenant SLO only as the
+//! explicit default — so the heap orders by what the client asked for,
+//! not by a config constant. Priority breaks deadline ties
+//! (`High < Normal < Batch`); insertion sequence breaks the rest, so for
+//! same-priority traffic of one tenant (deadlines ascend with arrival
+//! order) the EDF order degenerates to FIFO for the paper's §3 baselines
+//! exactly as before.
 //!
 //! The paper's §2 model saturates queues; the per-tenant bound keeps an
 //! overloaded or evicted tenant from consuming unbounded memory, and the
@@ -74,18 +79,21 @@ impl ArrivalRate {
     }
 }
 
-/// Heap entry: min-heap by `(deadline, seq)` via reversed `Ord`. `seq` is a
-/// per-queue insertion counter, so equal deadlines pop in FIFO order.
+/// Heap entry: min-heap by `(deadline, priority rank, seq)` via reversed
+/// `Ord`. `rank` is the request's [`Priority`] tie-break rank (0 most
+/// urgent); `seq` is a per-queue insertion counter, so equal
+/// deadline+priority pops in FIFO order.
 #[derive(Debug)]
 struct EdfEntry {
     deadline: Instant,
+    rank: u8,
     seq: u64,
     req: InferenceRequest,
 }
 
 impl PartialEq for EdfEntry {
     fn eq(&self, other: &Self) -> bool {
-        self.deadline == other.deadline && self.seq == other.seq
+        self.deadline == other.deadline && self.rank == other.rank && self.seq == other.seq
     }
 }
 
@@ -100,10 +108,11 @@ impl PartialOrd for EdfEntry {
 impl Ord for EdfEntry {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reversed: BinaryHeap is a max-heap, we want the earliest deadline
-        // (then the lowest seq) on top.
+        // (then the most urgent priority, then the lowest seq) on top.
         other
             .deadline
             .cmp(&self.deadline)
+            .then_with(|| other.rank.cmp(&self.rank))
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -139,7 +148,8 @@ impl TenantQueue {
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.items.push(EdfEntry { deadline: req.deadline, seq, req });
+        self.items
+            .push(EdfEntry { deadline: req.deadline, rank: req.priority.rank(), seq, req });
         self.enqueued += 1;
         Ok(())
     }
@@ -183,7 +193,8 @@ impl TenantQueue {
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.items.push(EdfEntry { deadline: req.deadline, seq, req });
+        self.items
+            .push(EdfEntry { deadline: req.deadline, rank: req.priority.rank(), seq, req });
         Ok(())
     }
 }
@@ -394,7 +405,7 @@ impl QueueSet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::ShapeClass;
+    use crate::coordinator::request::{Priority, ShapeClass};
     use std::time::Instant;
 
     fn req(id: u64, tenant: usize) -> InferenceRequest {
@@ -405,7 +416,42 @@ mod tests {
             payload: vec![],
             arrived: Instant::now(),
             deadline: Instant::now(),
+            priority: Priority::Normal,
+            trace_id: 0,
         }
+    }
+
+    #[test]
+    fn priority_breaks_deadline_ties_then_fifo() {
+        let now = Instant::now();
+        let deadline = now + std::time::Duration::from_millis(10);
+        let at = |id: u64, priority: Priority| InferenceRequest {
+            id,
+            tenant: 0,
+            class: ShapeClass::batched_gemm(8, 8, 8),
+            payload: vec![],
+            arrived: now,
+            deadline,
+            priority,
+            trace_id: 0,
+        };
+        let mut q = TenantQueue::new(8);
+        q.push(at(1, Priority::Batch)).unwrap();
+        q.push(at(2, Priority::Normal)).unwrap();
+        q.push(at(3, Priority::High)).unwrap();
+        q.push(at(4, Priority::High)).unwrap();
+        // Equal deadlines: High first (FIFO within High), Batch last.
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 4);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 1);
+        // An earlier deadline still beats a higher priority.
+        let mut q = TenantQueue::new(8);
+        let mut early = at(5, Priority::Batch);
+        early.deadline = now + std::time::Duration::from_millis(1);
+        q.push(early).unwrap();
+        q.push(at(6, Priority::High)).unwrap();
+        assert_eq!(q.pop().unwrap().id, 5, "deadline remains the primary EDF key");
     }
 
     #[test]
@@ -561,6 +607,8 @@ mod tests {
             payload: vec![],
             arrived,
             deadline: arrived,
+            priority: Priority::Normal,
+            trace_id: 0,
         }
     }
 
@@ -702,6 +750,8 @@ mod tests {
             payload: vec![],
             arrived: Instant::now(),
             deadline,
+            priority: Priority::Normal,
+            trace_id: 0,
         }
     }
 

@@ -1,8 +1,25 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator, plus the
+//! client-facing request context and the structured rejection API.
+//!
+//! The [`RequestContext`] is the unit of the gateway redesign: what used
+//! to travel as a bare `(tenant, payload)` tuple — with the deadline
+//! silently re-derived from config defaults at admission — is now an
+//! explicit `{ tenant, deadline, priority, trace_id }` record carried
+//! from the wire all the way into the EDF queues. The deadline the heap
+//! orders by is the deadline the client supplied (or the tenant's SLO
+//! only when the client supplied none), so wire deadlines are honored
+//! end-to-end.
+//!
+//! [`Reject`] is the matching structured error API: every rejection has a
+//! machine-readable [`RejectKind`], an optional `retry_after` hint, and —
+//! for gateway-originated sheds — shard/breaker provenance.
+//! [`Reject::http_status`] remains as a thin compatibility shim for
+//! embedders that still speak status codes.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::runtime::HostTensor;
+use crate::util::json::Json;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
@@ -62,6 +79,147 @@ impl std::fmt::Display for ShapeClass {
     }
 }
 
+/// Scheduling priority class carried by every request. Deadline remains
+/// the primary EDF key; priority breaks deadline ties (then insertion
+/// order breaks priority ties), so two requests due at the same instant
+/// pop urgent-first instead of arrival-first.
+///
+/// The derived `Ord` follows declaration order: `High < Normal < Batch`,
+/// i.e. "smaller sorts more urgent" — the same convention as deadlines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Latency-critical: wins EDF ties, first through gateway admission.
+    High,
+    /// The default interactive class.
+    #[default]
+    Normal,
+    /// Throughput-oriented background work: loses ties, sheds first.
+    Batch,
+}
+
+impl Priority {
+    /// Tie-break rank used by the EDF heaps (0 is most urgent).
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Wire/config name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire/config name (`high` / `normal` / `batch`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// How a request's completion deadline is specified on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeadlineSpec {
+    /// No wire deadline: fall back to the tenant's configured SLO (the
+    /// pre-redesign behaviour, now an explicit default instead of the
+    /// only option).
+    #[default]
+    SloDefault,
+    /// Absolute completion deadline.
+    At(Instant),
+    /// Relative budget from the arrival instant.
+    Budget(Duration),
+}
+
+/// The client-facing request context: everything the caller asserts about
+/// a request besides its payload. Replaces the bare `(tenant, payload)`
+/// tuple; built by the gateway from the authenticated principal + wire
+/// fields, or by [`RequestContext::new`] for the compatibility path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestContext {
+    pub tenant: usize,
+    pub deadline: DeadlineSpec,
+    pub priority: Priority,
+    /// Opaque caller-chosen correlation id, echoed on the response.
+    pub trace_id: u64,
+}
+
+impl RequestContext {
+    /// The default context the deprecated `(tenant, payload)` signature
+    /// builds: SLO-default deadline, normal priority, trace id 0.
+    pub fn new(tenant: usize) -> Self {
+        Self {
+            tenant,
+            deadline: DeadlineSpec::SloDefault,
+            priority: Priority::Normal,
+            trace_id: 0,
+        }
+    }
+
+    pub fn with_deadline(mut self, at: Instant) -> Self {
+        self.deadline = DeadlineSpec::At(at);
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.deadline = DeadlineSpec::Budget(budget);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_trace_id(mut self, trace_id: u64) -> Self {
+        self.trace_id = trace_id;
+        self
+    }
+
+    /// The absolute deadline this context resolves to for a request that
+    /// arrived at `arrived`, given the tenant's configured SLO. This is
+    /// THE deadline the EDF heaps order by — there is no other
+    /// derivation site.
+    pub fn resolve_deadline(&self, arrived: Instant, slo_default: Duration) -> Instant {
+        match self.deadline {
+            DeadlineSpec::SloDefault => arrived + slo_default,
+            DeadlineSpec::At(at) => at,
+            DeadlineSpec::Budget(budget) => arrived + budget,
+        }
+    }
+
+    /// Materialize the concrete [`InferenceRequest`] the queues hold.
+    pub fn into_request(
+        self,
+        id: RequestId,
+        class: ShapeClass,
+        payload: Vec<HostTensor>,
+        arrived: Instant,
+        slo_default: Duration,
+    ) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            tenant: self.tenant,
+            class,
+            payload,
+            arrived,
+            deadline: self.resolve_deadline(arrived, slo_default),
+            priority: self.priority,
+            trace_id: self.trace_id,
+        }
+    }
+}
+
 /// One inference request: a single problem instance for one tenant.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
@@ -74,10 +232,16 @@ pub struct InferenceRequest {
     /// for `rnn_cell`: [x, h] `[hidden,1]`.
     pub payload: Vec<HostTensor>,
     pub arrived: Instant,
-    /// SLO deadline (`arrived + tenant slo`). Drives the SLO-aware drain
-    /// order (paper §4.1: "determine when to execute workloads based on
-    /// per-model SLOs").
+    /// Absolute completion deadline, resolved by
+    /// [`RequestContext::resolve_deadline`] — the wire deadline when one
+    /// was supplied, `arrived + tenant slo` otherwise. Drives the
+    /// SLO-aware drain order (paper §4.1: "determine when to execute
+    /// workloads based on per-model SLOs").
     pub deadline: Instant,
+    /// EDF tie-break class (carried from the [`RequestContext`]).
+    pub priority: Priority,
+    /// Correlation id echoed on the response.
+    pub trace_id: u64,
 }
 
 /// Completion record handed back to the caller.
@@ -92,9 +256,63 @@ pub struct InferenceResponse {
     pub service_s: f64,
     /// How many problems shared the launch that produced this response.
     pub fused_r: usize,
+    /// Correlation id from the submitting [`RequestContext`].
+    pub trace_id: u64,
 }
 
-/// Terminal failure for a request.
+/// Machine-readable rejection kind — the stable vocabulary dashboards and
+/// wire clients key on ([`Reject::kind`] / [`RejectKind::as_str`]).
+/// Non-exhaustive: new kinds may appear; match with a wildcard arm.
+#[non_exhaustive]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RejectKind {
+    QueueFull,
+    Overloaded,
+    TenantEvicted,
+    DeadlineInfeasible,
+    BadRequest,
+    ServerShutdown,
+    RateLimited,
+    BreakerOpen,
+    AuthFailed,
+}
+
+impl RejectKind {
+    /// The stable wire name of this kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectKind::QueueFull => "queue_full",
+            RejectKind::Overloaded => "overloaded",
+            RejectKind::TenantEvicted => "tenant_evicted",
+            RejectKind::DeadlineInfeasible => "deadline_infeasible",
+            RejectKind::BadRequest => "bad_request",
+            RejectKind::ServerShutdown => "server_shutdown",
+            RejectKind::RateLimited => "rate_limited",
+            RejectKind::BreakerOpen => "breaker_open",
+            RejectKind::AuthFailed => "auth_failed",
+        }
+    }
+}
+
+/// Where a rejection originated, when a specific device shard is known.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RejectProvenance {
+    /// Device shard the rejected request was routed toward.
+    pub device: usize,
+    /// True when the gateway's circuit breaker shed the request before it
+    /// touched any coordinator queue (the shard itself was never asked).
+    pub breaker: bool,
+}
+
+/// Terminal failure for a request — the structured rejection API.
+///
+/// Every variant maps to a stable [`RejectKind`]; retry hints and
+/// shard/breaker provenance ride the variants that have them
+/// ([`Reject::retry_after`], [`Reject::provenance`]). The enum is
+/// non-exhaustive: downstream matches need a wildcard arm, which is what
+/// lets new admission layers (like the gateway) add outcomes without
+/// breaking embedders.
+#[non_exhaustive]
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Reject {
     /// This tenant's admission queue is full (per-tenant backpressure).
@@ -108,23 +326,99 @@ pub enum Reject {
     /// Admission-time deadline check failed: even an immediate, minimal
     /// launch of this request's shape class is predicted (by the
     /// [`crate::coordinator::costmodel::CostModel`]) to complete after the
-    /// request's SLO deadline. Shedding at admission is strictly better
+    /// request's deadline. Shedding at admission is strictly better
     /// than queueing work that is already lost (DARIS-style deadline-aware
     /// admission, arXiv:2504.08795).
     DeadlineInfeasible,
-    /// Tenant unknown / shape not servable.
+    /// Tenant unknown / shape not servable / malformed context.
     BadRequest(String),
+    /// The serving frontend is stopped: surfaced synchronously at submit
+    /// time (a dead server must not hand out receivers that only fail on
+    /// `recv`).
+    ServerShutdown,
+    /// The gateway's per-tenant token bucket is empty; retry once it has
+    /// refilled (`retry_after` is the exact refill time at rejection).
+    RateLimited { retry_after: Duration },
+    /// The circuit breaker for this request's device shard is open: the
+    /// shard has been rejecting at a sustained rate and the gateway sheds
+    /// without touching coordinator queues until the breaker half-opens
+    /// (`retry_after` is the remaining cooldown).
+    BreakerOpen { device: usize, retry_after: Duration },
+    /// Unknown or missing API key at the gateway.
+    AuthFailed,
 }
 
 impl Reject {
-    /// HTTP-style status code the serving frontend surfaces.
-    pub fn http_status(&self) -> u16 {
+    /// The machine-readable kind of this rejection.
+    pub fn kind(&self) -> RejectKind {
         match self {
-            Reject::QueueFull | Reject::Overloaded => 429,
-            Reject::TenantEvicted => 503,
-            Reject::DeadlineInfeasible => 504,
-            Reject::BadRequest(_) => 400,
+            Reject::QueueFull => RejectKind::QueueFull,
+            Reject::Overloaded => RejectKind::Overloaded,
+            Reject::TenantEvicted => RejectKind::TenantEvicted,
+            Reject::DeadlineInfeasible => RejectKind::DeadlineInfeasible,
+            Reject::BadRequest(_) => RejectKind::BadRequest,
+            Reject::ServerShutdown => RejectKind::ServerShutdown,
+            Reject::RateLimited { .. } => RejectKind::RateLimited,
+            Reject::BreakerOpen { .. } => RejectKind::BreakerOpen,
+            Reject::AuthFailed => RejectKind::AuthFailed,
         }
+    }
+
+    /// When to retry, for rejections that carry a concrete hint.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            Reject::RateLimited { retry_after } => Some(*retry_after),
+            Reject::BreakerOpen { retry_after, .. } => Some(*retry_after),
+            _ => None,
+        }
+    }
+
+    /// Shard/breaker provenance, for rejections tied to one device shard.
+    pub fn provenance(&self) -> Option<RejectProvenance> {
+        match self {
+            Reject::BreakerOpen { device, .. } => {
+                Some(RejectProvenance { device: *device, breaker: true })
+            }
+            _ => None,
+        }
+    }
+
+    /// Whether this rejection signals downstream overload pressure — the
+    /// outcomes the gateway's circuit breakers trip on.
+    pub fn is_overload(&self) -> bool {
+        matches!(self, Reject::Overloaded | Reject::DeadlineInfeasible)
+    }
+
+    /// HTTP-style status code — kept as a thin compatibility shim over
+    /// [`Reject::kind`] for embedders that still speak status codes.
+    pub fn http_status(&self) -> u16 {
+        match self.kind() {
+            RejectKind::QueueFull | RejectKind::Overloaded | RejectKind::RateLimited => 429,
+            RejectKind::TenantEvicted | RejectKind::ServerShutdown | RejectKind::BreakerOpen => {
+                503
+            }
+            RejectKind::DeadlineInfeasible => 504,
+            RejectKind::AuthFailed => 401,
+            _ => 400,
+        }
+    }
+
+    /// Wire representation: kind + status + message, plus `retry_after_ms`
+    /// and `device` when known.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("error", Json::str(self.kind().as_str())),
+            ("status", Json::num(self.http_status() as f64)),
+            ("message", Json::str(self.to_string())),
+        ];
+        if let Some(retry) = self.retry_after() {
+            pairs.push(("retry_after_ms", Json::num(retry.as_secs_f64() * 1e3)));
+        }
+        if let Some(p) = self.provenance() {
+            pairs.push(("device", Json::num(p.device as f64)));
+            pairs.push(("breaker", Json::Bool(p.breaker)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -135,9 +429,19 @@ impl std::fmt::Display for Reject {
             Reject::Overloaded => write!(f, "overloaded: global admission cap reached"),
             Reject::TenantEvicted => write!(f, "tenant evicted"),
             Reject::DeadlineInfeasible => {
-                write!(f, "deadline infeasible: predicted completion exceeds SLO deadline")
+                write!(f, "deadline infeasible: predicted completion exceeds deadline")
             }
             Reject::BadRequest(m) => write!(f, "bad request: {m}"),
+            Reject::ServerShutdown => write!(f, "server shut down"),
+            Reject::RateLimited { retry_after } => {
+                write!(f, "rate limited: retry after {:.1} ms", retry_after.as_secs_f64() * 1e3)
+            }
+            Reject::BreakerOpen { device, retry_after } => write!(
+                f,
+                "circuit breaker open for device {device}: retry after {:.1} ms",
+                retry_after.as_secs_f64() * 1e3
+            ),
+            Reject::AuthFailed => write!(f, "authentication failed"),
         }
     }
 }
@@ -179,7 +483,104 @@ mod tests {
         assert_eq!(Reject::TenantEvicted.http_status(), 503);
         assert_eq!(Reject::DeadlineInfeasible.http_status(), 504);
         assert_eq!(Reject::BadRequest("x".into()).http_status(), 400);
+        assert_eq!(Reject::ServerShutdown.http_status(), 503);
+        assert_eq!(
+            Reject::RateLimited { retry_after: Duration::from_millis(5) }.http_status(),
+            429
+        );
+        assert_eq!(
+            Reject::BreakerOpen { device: 1, retry_after: Duration::from_millis(9) }
+                .http_status(),
+            503
+        );
+        assert_eq!(Reject::AuthFailed.http_status(), 401);
         assert!(Reject::Overloaded.to_string().contains("overloaded"));
         assert!(Reject::DeadlineInfeasible.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn reject_kind_and_hints_are_machine_readable() {
+        assert_eq!(Reject::Overloaded.kind().as_str(), "overloaded");
+        assert_eq!(Reject::AuthFailed.kind(), RejectKind::AuthFailed);
+        assert_eq!(Reject::Overloaded.retry_after(), None);
+        let rl = Reject::RateLimited { retry_after: Duration::from_millis(12) };
+        assert_eq!(rl.retry_after(), Some(Duration::from_millis(12)));
+        assert!(rl.provenance().is_none());
+        let br = Reject::BreakerOpen { device: 3, retry_after: Duration::from_millis(40) };
+        let p = br.provenance().expect("breaker rejections carry provenance");
+        assert_eq!(p.device, 3);
+        assert!(p.breaker);
+        assert!(Reject::Overloaded.is_overload());
+        assert!(Reject::DeadlineInfeasible.is_overload());
+        assert!(!Reject::QueueFull.is_overload());
+        assert!(!br.is_overload());
+    }
+
+    #[test]
+    fn reject_to_json_carries_kind_hint_and_provenance() {
+        let br = Reject::BreakerOpen { device: 2, retry_after: Duration::from_millis(50) };
+        let j = br.to_json();
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("breaker_open"));
+        assert_eq!(j.get("status").and_then(Json::as_f64), Some(503.0));
+        assert_eq!(j.get("device").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("breaker").and_then(Json::as_bool), Some(true));
+        assert!((j.get("retry_after_ms").and_then(Json::as_f64).unwrap() - 50.0).abs() < 1e-9);
+        let plain = Reject::QueueFull.to_json();
+        assert_eq!(plain.get("error").and_then(Json::as_str), Some("queue_full"));
+        assert!(plain.get("retry_after_ms").is_none());
+        assert!(plain.get("device").is_none());
+    }
+
+    #[test]
+    fn priority_orders_and_parses() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Batch);
+        assert_eq!(Priority::High.rank(), 0);
+        assert_eq!(Priority::Batch.rank(), 2);
+        assert_eq!(Priority::parse("high"), Some(Priority::High));
+        assert_eq!(Priority::parse("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::Normal.as_str(), "normal");
+    }
+
+    #[test]
+    fn context_resolves_wire_deadline_not_config_default() {
+        let arrived = Instant::now();
+        let slo = Duration::from_millis(50);
+        // No wire deadline: the SLO default applies.
+        let d = RequestContext::new(0).resolve_deadline(arrived, slo);
+        assert_eq!(d, arrived + slo);
+        // Absolute wire deadline: honored verbatim, SLO ignored.
+        let at = arrived + Duration::from_millis(7);
+        let d = RequestContext::new(0).with_deadline(at).resolve_deadline(arrived, slo);
+        assert_eq!(d, at);
+        assert_ne!(d, arrived + slo);
+        // Relative budget: anchored at arrival, SLO ignored.
+        let d = RequestContext::new(0)
+            .with_budget(Duration::from_millis(9))
+            .resolve_deadline(arrived, slo);
+        assert_eq!(d, arrived + Duration::from_millis(9));
+    }
+
+    #[test]
+    fn context_materializes_into_request() {
+        let arrived = Instant::now();
+        let ctx = RequestContext::new(3)
+            .with_budget(Duration::from_millis(20))
+            .with_priority(Priority::High)
+            .with_trace_id(77);
+        let req = ctx.into_request(
+            9,
+            ShapeClass::batched_gemm(8, 8, 8),
+            vec![],
+            arrived,
+            Duration::from_secs(1),
+        );
+        assert_eq!(req.id, 9);
+        assert_eq!(req.tenant, 3);
+        assert_eq!(req.deadline, arrived + Duration::from_millis(20));
+        assert_eq!(req.priority, Priority::High);
+        assert_eq!(req.trace_id, 77);
     }
 }

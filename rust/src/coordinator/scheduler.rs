@@ -845,7 +845,7 @@ impl Scheduler for SpaceTimeSched {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::ShapeClass;
+    use crate::coordinator::request::{Priority, ShapeClass};
     use std::time::Instant;
 
     fn fill(queues: &mut QueueSet, tenant: usize, n: usize, class: ShapeClass) {
@@ -858,6 +858,8 @@ mod tests {
                     payload: vec![],
                     arrived: Instant::now(),
                     deadline: Instant::now(),
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .unwrap();
         }
@@ -973,6 +975,8 @@ mod tests {
                     payload: vec![],
                     arrived: now,
                     deadline: now + Duration::from_millis(slo_ms),
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .unwrap();
             }
@@ -996,6 +1000,8 @@ mod tests {
                 payload: vec![],
                 arrived: now,
                 deadline: now + Duration::from_millis(slo_ms),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -1035,6 +1041,8 @@ mod tests {
                 payload: vec![],
                 arrived: now,
                 deadline: now + slo,
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -1082,6 +1090,8 @@ mod tests {
                 arrived: now,
                 // Deadline already effectively now: no bucket can make it.
                 deadline: now,
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -1118,6 +1128,8 @@ mod tests {
                 payload: vec![],
                 arrived: now,
                 deadline: now,
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -1129,6 +1141,8 @@ mod tests {
                 payload: vec![],
                 arrived: now,
                 deadline: now + Duration::from_millis(30),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -1257,6 +1271,8 @@ mod tests {
                 payload: vec![],
                 arrived: now,
                 deadline: now + Duration::from_millis(100 + 50 * t as u64),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -1310,6 +1326,8 @@ mod tests {
                     payload: vec![],
                     arrived: now,
                     deadline: now + Duration::from_millis(40),
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .unwrap();
             }
@@ -1321,6 +1339,8 @@ mod tests {
                     payload: vec![],
                     arrived: now,
                     deadline: now + Duration::from_secs(10),
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .unwrap();
             }
@@ -1571,6 +1591,8 @@ mod tests {
                 payload: vec![],
                 arrived: now,
                 deadline: now + slo,
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }

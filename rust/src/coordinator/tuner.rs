@@ -41,7 +41,7 @@ use crate::coordinator::controller::{
 };
 use crate::coordinator::costmodel::CostModel;
 use crate::coordinator::queue::QueueSet;
-use crate::coordinator::request::{InferenceRequest, ShapeClass};
+use crate::coordinator::request::{InferenceRequest, Priority, ShapeClass};
 use crate::coordinator::scheduler::{Scheduler, SpaceTimeSched};
 use crate::gpusim::cost::{kernel_service_time, CostCtx};
 use crate::gpusim::{DeviceSpec, GemmShape, KernelDesc};
@@ -433,6 +433,8 @@ pub fn evaluate(point: &TunePoint) -> TuneOutcome {
                 payload: vec![],
                 arrived,
                 deadline: arrived + Duration::from_secs_f64(tenant_slo_s(tenant)),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .expect("tuner queues are effectively unbounded");
             idx += 1;

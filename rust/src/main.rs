@@ -47,7 +47,8 @@ use stgpu::coordinator::{
 };
 use stgpu::gpusim::{self, DeviceSpec, Engine, GemmShape, Policy, SimConfig};
 use stgpu::runtime::Manifest;
-use stgpu::server::{aggregate_nodes, ServeOpts, Server, StatusEndpoint};
+use stgpu::server::gateway::reactor::gateway_handler;
+use stgpu::server::{aggregate_nodes, Gateway, Reactor, ServeOpts, Server, ServerBackend, StatusEndpoint};
 use stgpu::util::json::Json;
 use stgpu::util::bench::{fmt_flops, fmt_secs, Table};
 use stgpu::util::prng::Rng;
@@ -192,6 +193,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         coord.engine().platform()
     );
 
+    // The gateway needs tenant → device placement, captured before the
+    // coordinator moves into the server.
+    let gw_placement = cfg
+        .gateway
+        .enabled
+        .then(|| ((0..n_tenants).map(|t| coord.device_of(t)).collect::<Vec<_>>(), coord.devices()));
+
     let server = Server::start(
         coord,
         ServeOpts {
@@ -199,9 +207,56 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             ..Default::default()
         },
     );
+
+    let gateway = gw_placement.map(|(placement, devices)| {
+        let backend = ServerBackend::new(server.handle(), placement, devices);
+        std::sync::Arc::new(std::sync::Mutex::new(Gateway::new(&cfg.gateway, backend)))
+    });
+    let reactor = match (&gateway, &cfg.gateway.listen) {
+        (Some(gw), Some(listen)) => {
+            let models: Vec<String> = cfg.tenants.iter().map(|t| t.model.clone()).collect();
+            let payload_for = std::sync::Arc::new(move |t: usize| {
+                let spec = stgpu::coordinator::ModelSpec::parse(&models[t]).expect("model");
+                let mut rng = Rng::new(0x6A7E + t as u64);
+                spec.payload_shapes()
+                    .iter()
+                    .map(|s| stgpu::runtime::HostTensor::random(s, &mut rng))
+                    .collect::<Vec<_>>()
+            });
+            let r = Reactor::start(
+                listen.as_str(),
+                cfg.gateway.reactor_workers,
+                gateway_handler(gw.clone(), payload_for),
+            )
+            .expect("bind gateway listener");
+            eprintln!(
+                "serve: gateway on {} ({} workers, {} keys)",
+                r.addr(),
+                cfg.gateway.reactor_workers,
+                cfg.gateway.tenants.len()
+            );
+            Some(r)
+        }
+        _ => None,
+    };
+
     let status = flags.get("status").map(|addr| {
-        let ep = StatusEndpoint::start(addr.as_str(), server.handle())
-            .expect("bind status endpoint");
+        let handle = server.handle();
+        let gw = gateway.clone();
+        let ep = StatusEndpoint::start_with(addr.as_str(), move || {
+            let mut j = handle
+                .snapshot()
+                .map(|s| s.to_json())
+                .unwrap_or_else(|| Json::obj(vec![("error", Json::str("no snapshot"))]));
+            if let (Some(gw), Json::Obj(map)) = (&gw, &mut j) {
+                map.insert(
+                    "gateway".to_string(),
+                    gw.lock().unwrap().status_json(Instant::now()),
+                );
+            }
+            j.to_string()
+        })
+        .expect("bind status endpoint");
         eprintln!("serve: status endpoint on {}", ep.addr());
         ep
     });
@@ -235,8 +290,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     for c in clients {
         let _ = c.join();
     }
+    if let Some(r) = reactor {
+        r.stop();
+    }
     if let Some(ep) = status {
         ep.stop();
+    }
+    if let Some(gw) = &gateway {
+        let g = gw.lock().unwrap();
+        let s = g.stats();
+        eprintln!(
+            "serve: gateway admitted={} rate_limited={} breaker_shed={} backend_rejects={} auth_failures={}",
+            s.admitted,
+            s.rate_limited,
+            s.breaker_shed,
+            s.backend_rejects,
+            g.auth_failures()
+        );
     }
     let coord = server.shutdown();
     let snap = coord.snapshot();

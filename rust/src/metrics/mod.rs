@@ -5,4 +5,4 @@ pub mod histogram;
 pub mod registry;
 
 pub use histogram::Histogram;
-pub use registry::{DeviceSnapshot, MetricsRegistry, Snapshot, TenantMetrics};
+pub use registry::{DeviceSnapshot, MetricsRegistry, Snapshot, TenantMetrics, STATUS_SCHEMA_VERSION};

@@ -12,6 +12,13 @@ use std::sync::Mutex;
 use crate::metrics::histogram::Histogram;
 use crate::util::json::Json;
 
+/// Version of the status JSON schema emitted by [`Snapshot::to_json`]
+/// (and the `/status` endpoint that serves it). Consumers should accept
+/// unknown keys within a version; the version bumps only when existing
+/// keys change meaning or move. Version history is documented in the
+/// README's "Status endpoint" section.
+pub const STATUS_SCHEMA_VERSION: u64 = 2;
+
 /// Metrics owned by one tenant (one deployed model replica).
 #[derive(Debug, Default)]
 pub struct TenantMetrics {
@@ -362,6 +369,7 @@ impl Snapshot {
                 .collect(),
         );
         Json::obj(vec![
+            ("schema_version", Json::num(STATUS_SCHEMA_VERSION as f64)),
             ("tenants", tenants),
             ("devices", devices),
             ("wall_seconds", Json::num(self.wall_seconds)),
@@ -505,6 +513,10 @@ mod tests {
         let back = crate::util::json::Json::parse(&text).unwrap();
         assert!(back.get("tenants").is_some());
         assert_eq!(back.get("throughput_rps").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            back.get("schema_version").unwrap().as_f64(),
+            Some(STATUS_SCHEMA_VERSION as f64)
+        );
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Coordinator, InferenceResponse, Reject, RequestId};
+use crate::coordinator::{Coordinator, InferenceResponse, Reject, RequestContext, RequestId};
 use crate::metrics::Snapshot;
 use crate::runtime::HostTensor;
 
@@ -30,7 +30,7 @@ pub type Reply = Result<InferenceResponse, Reject>;
 
 enum Msg {
     Submit {
-        tenant: usize,
+        ctx: RequestContext,
         payload: Vec<HostTensor>,
         reply: Sender<Reply>,
     },
@@ -47,19 +47,50 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit and return a receiver for the eventual reply.
-    pub fn submit(&self, tenant: usize, payload: Vec<HostTensor>) -> Receiver<Reply> {
+    /// Submit a context-carrying request; returns a receiver for the
+    /// eventual reply, or [`Reject::ServerShutdown`] right here when the
+    /// leader is gone — a dead server must fail at submit time, not hand
+    /// out a receiver that only errors on `recv`.
+    pub fn submit_ctx(
+        &self,
+        ctx: RequestContext,
+        payload: Vec<HostTensor>,
+    ) -> Result<Receiver<Reply>, Reject> {
         let (reply_tx, reply_rx) = channel();
-        // If the server is gone the receiver errors out on recv.
-        let _ = self.tx.send(Msg::Submit { tenant, payload, reply: reply_tx });
-        reply_rx
+        self.tx
+            .send(Msg::Submit { ctx, payload, reply: reply_tx })
+            .map_err(|_| Reject::ServerShutdown)?;
+        Ok(reply_rx)
     }
 
-    /// Submit and block for the reply.
+    /// Submit and return a receiver for the eventual reply — the
+    /// deprecation-path `(tenant, payload)` signature, now a thin wrapper
+    /// over [`ServerHandle::submit_ctx`] with a default context. When the
+    /// server is already down the receiver is preloaded with
+    /// [`Reject::ServerShutdown`] so the failure is observable immediately
+    /// instead of surfacing as a bare channel disconnect.
+    pub fn submit(&self, tenant: usize, payload: Vec<HostTensor>) -> Receiver<Reply> {
+        match self.submit_ctx(RequestContext::new(tenant), payload) {
+            Ok(rx) => rx,
+            Err(rej) => {
+                let (tx, rx) = channel();
+                let _ = tx.send(Err(rej));
+                rx
+            }
+        }
+    }
+
+    /// Submit a context-carrying request and block for the reply.
+    pub fn submit_blocking_ctx(&self, ctx: RequestContext, payload: Vec<HostTensor>) -> Reply {
+        match self.submit_ctx(ctx, payload) {
+            Ok(rx) => rx.recv().unwrap_or(Err(Reject::ServerShutdown)),
+            Err(rej) => Err(rej),
+        }
+    }
+
+    /// Submit and block for the reply (default-context compatibility path).
     pub fn submit_blocking(&self, tenant: usize, payload: Vec<HostTensor>) -> Reply {
-        self.submit(tenant, payload)
-            .recv()
-            .unwrap_or(Err(Reject::BadRequest("server stopped".into())))
+        self.submit_blocking_ctx(RequestContext::new(tenant), payload)
     }
 
     /// Snapshot the server's metrics.
@@ -173,8 +204,8 @@ fn leader_loop(mut coord: Coordinator, rx: Receiver<Msg>, opts: ServeOpts) -> Co
                 Err(RecvTimeoutError::Disconnected) => break 'serve,
             };
             match msg {
-                Some(Msg::Submit { tenant, payload, reply }) => {
-                    match coord.submit(tenant, payload) {
+                Some(Msg::Submit { ctx, payload, reply }) => {
+                    match coord.submit_ctx(ctx, payload) {
                         Ok(id) => inflight.add(id, reply),
                         Err(rej) => {
                             let _ = reply.send(Err(rej));
@@ -233,7 +264,7 @@ fn leader_loop(mut coord: Coordinator, rx: Receiver<Msg>, opts: ServeOpts) -> Co
         }
     }
     for (_, tx) in inflight.entries.drain(..) {
-        let _ = tx.send(Err(Reject::BadRequest("server shutting down".into())));
+        let _ = tx.send(Err(Reject::ServerShutdown));
     }
     coord
 }
@@ -248,5 +279,27 @@ mod tests {
         let o = ServeOpts::default();
         assert!(o.batch_timeout < Duration::from_millis(10));
         assert!(o.eager_backlog >= 1);
+    }
+
+    /// Regression for the silent-drop: submitting to a dead server must
+    /// surface [`Reject::ServerShutdown`] at submit time (context path) or
+    /// as an immediately available preloaded reply (compat path) — never a
+    /// bare channel disconnect the caller only hits on `recv`.
+    #[test]
+    fn dead_server_rejects_at_submit_time() {
+        let (tx, rx) = channel::<Msg>();
+        drop(rx); // leader gone
+        let handle = ServerHandle { tx };
+        match handle.submit_ctx(RequestContext::new(0), vec![]) {
+            Err(Reject::ServerShutdown) => {}
+            other => panic!("expected ServerShutdown at submit time, got {other:?}"),
+        }
+        // Compat wrapper: receiver is preloaded, try_recv succeeds NOW.
+        let rx = handle.submit(0, vec![]);
+        assert_eq!(rx.try_recv().unwrap().unwrap_err(), Reject::ServerShutdown);
+        assert_eq!(
+            handle.submit_blocking(0, vec![]).unwrap_err(),
+            Reject::ServerShutdown
+        );
     }
 }

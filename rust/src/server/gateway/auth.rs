@@ -1,0 +1,142 @@
+//! API-key authentication: the validated `[gateway.tenants]` table.
+//!
+//! Keys are bound to tenant NAMES in config and resolved to tenant
+//! indices at load time ([`crate::config::GatewayConfig`]), so the table
+//! the gateway consults at admission is already index-checked — a lookup
+//! either yields a [`Principal`] or fails with
+//! [`crate::coordinator::Reject::AuthFailed`]. Lookup is a single hash
+//! probe with no per-request allocation.
+
+use std::collections::HashMap;
+
+use crate::config::{GatewayConfig, IsolationClass};
+use crate::coordinator::Priority;
+
+/// The authenticated identity behind an API key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Principal {
+    /// Tenant index (into the coordinator's tenant registry).
+    pub tenant: usize,
+    /// Isolation class: scales the rate-limit bucket and picks the
+    /// default priority.
+    pub class: IsolationClass,
+}
+
+impl Principal {
+    /// The scheduling priority this principal's requests default to when
+    /// the wire names none.
+    pub fn default_priority(&self) -> Priority {
+        match self.class {
+            IsolationClass::Premium => Priority::High,
+            IsolationClass::Standard => Priority::Normal,
+            IsolationClass::Batch => Priority::Batch,
+        }
+    }
+}
+
+/// Immutable key → principal table built from the validated config.
+#[derive(Debug, Default)]
+pub struct AuthTable {
+    keys: HashMap<String, Principal>,
+    /// Lifetime failed-lookup count (status JSON).
+    failures: u64,
+}
+
+impl AuthTable {
+    pub fn from_config(cfg: &GatewayConfig) -> Self {
+        let keys = cfg
+            .tenants
+            .iter()
+            .map(|k| (k.api_key.clone(), Principal { tenant: k.tenant, class: k.class }))
+            .collect();
+        Self { keys, failures: 0 }
+    }
+
+    /// Authenticate one API key; a miss is counted.
+    // lint: hot-path
+    pub fn authenticate(&mut self, api_key: &str) -> Option<Principal> {
+        match self.keys.get(api_key) {
+            Some(p) => Some(*p),
+            None => {
+                self.failures += 1;
+                None
+            }
+        }
+    }
+
+    /// Look a key up WITHOUT counting a failure — for transport layers
+    /// that need the tenant (e.g. to build the payload) before the real
+    /// authenticated admission runs.
+    pub fn peek(&self, api_key: &str) -> Option<Principal> {
+        self.keys.get(api_key).copied()
+    }
+
+    /// Lifetime failed authentications.
+    pub fn failures(&self) -> u64 {
+        self.failures
+    }
+
+    /// Every principal in the table, sorted by tenant index (for building
+    /// per-tenant gateway state deterministically).
+    pub fn principals(&self) -> Vec<Principal> {
+        let mut out: Vec<Principal> = self.keys.values().copied().collect();
+        out.sort_by_key(|p| p.tenant);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GatewayTenant;
+
+    fn cfg() -> GatewayConfig {
+        GatewayConfig {
+            tenants: vec![
+                GatewayTenant {
+                    api_key: "key-prem".into(),
+                    tenant: 0,
+                    class: IsolationClass::Premium,
+                },
+                GatewayTenant {
+                    api_key: "key-batch".into(),
+                    tenant: 1,
+                    class: IsolationClass::Batch,
+                },
+            ],
+            ..GatewayConfig::default()
+        }
+    }
+
+    #[test]
+    fn known_keys_resolve_and_misses_count() {
+        let mut t = AuthTable::from_config(&cfg());
+        assert_eq!(t.len(), 2);
+        let p = t.authenticate("key-prem").expect("known key");
+        assert_eq!(p.tenant, 0);
+        assert_eq!(p.class, IsolationClass::Premium);
+        assert_eq!(p.default_priority(), Priority::High);
+        let b = t.authenticate("key-batch").unwrap();
+        assert_eq!(b.default_priority(), Priority::Batch);
+        assert_eq!(t.failures(), 0);
+        assert!(t.authenticate("nope").is_none());
+        assert!(t.authenticate("").is_none());
+        assert_eq!(t.failures(), 2);
+    }
+
+    #[test]
+    fn principals_sorted_by_tenant() {
+        let t = AuthTable::from_config(&cfg());
+        let ps = t.principals();
+        assert_eq!(ps.len(), 2);
+        assert!(ps[0].tenant <= ps[1].tenant);
+    }
+}

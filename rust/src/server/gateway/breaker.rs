@@ -1,0 +1,281 @@
+//! Per-shard circuit breakers: trip on sustained overload rejections,
+//! shed at the gateway while open, and probe back via half-open.
+//!
+//! One [`CircuitBreaker`] guards each device shard. Admission outcomes
+//! feed a sliding window; when the overload fraction
+//! ([`crate::coordinator::Reject::is_overload`]: `Overloaded` /
+//! `DeadlineInfeasible`) of a full window reaches the trip threshold the
+//! breaker opens and the gateway rejects with
+//! [`crate::coordinator::Reject::BreakerOpen`] WITHOUT touching
+//! coordinator queues — the shard gets its cooldown without also paying
+//! the admission traffic that tripped it. After the cooldown the breaker
+//! half-opens: a bounded number of probe requests pass through, and the
+//! breaker closes only when all of them come back clean (any overload
+//! outcome re-opens it for another cooldown).
+//!
+//! All transitions take `now` explicitly — no hidden clock — so the
+//! trip/half-open/close cycle is deterministic under test and in the
+//! fig16 virtual-time overload sweep.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Breaker position, in the classic three-state protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Traffic flows; outcomes are being watched.
+    Closed,
+    /// Shedding at the gateway until the cooldown elapses.
+    Open,
+    /// Cooldown over: letting a few probes through to test the shard.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable wire name (status JSON).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Circuit breaker for one device shard.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    /// Sliding outcome window size (admissions observed while closed).
+    window: usize,
+    /// Overload fraction of a FULL window that trips the breaker.
+    threshold: f64,
+    /// How long a tripped breaker sheds before half-opening.
+    cooldown: Duration,
+    /// Clean probes required to close from half-open.
+    probes_to_close: u32,
+    state: BreakerState,
+    /// Outcomes while closed: `true` = overload rejection.
+    outcomes: VecDeque<bool>,
+    /// Overload count inside `outcomes` (kept in step, O(1) updates).
+    overloads: usize,
+    /// When the breaker last opened.
+    opened_at: Option<Instant>,
+    /// Probes admitted this half-open episode.
+    probes_issued: u32,
+    /// Clean probe outcomes this half-open episode.
+    probes_ok: u32,
+    /// Lifetime trip count (status/metrics).
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(
+        window: usize,
+        threshold: f64,
+        cooldown: Duration,
+        probes_to_close: u32,
+    ) -> Self {
+        Self {
+            window: window.max(1),
+            threshold: threshold.clamp(f64::MIN_POSITIVE, 1.0),
+            cooldown,
+            probes_to_close: probes_to_close.max(1),
+            state: BreakerState::Closed,
+            outcomes: VecDeque::with_capacity(window.max(1)),
+            overloads: 0,
+            opened_at: None,
+            probes_issued: 0,
+            probes_ok: 0,
+            trips: 0,
+        }
+    }
+
+    /// May a request pass right now? `Err` carries the remaining cooldown
+    /// (the `retry_after` hint for [`crate::coordinator::Reject::BreakerOpen`]).
+    // lint: hot-path
+    pub fn allow(&mut self, now: Instant) -> Result<(), Duration> {
+        match self.state {
+            BreakerState::Closed => Ok(()),
+            BreakerState::Open => {
+                let opened = self.opened_at.expect("open breaker has a trip instant");
+                let elapsed = now.saturating_duration_since(opened);
+                if elapsed >= self.cooldown {
+                    // Cooldown over: half-open and admit this caller as the
+                    // first probe.
+                    self.state = BreakerState::HalfOpen;
+                    self.probes_issued = 1;
+                    self.probes_ok = 0;
+                    Ok(())
+                } else {
+                    Err(self.cooldown - elapsed)
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probes_issued < self.probes_to_close {
+                    self.probes_issued += 1;
+                    Ok(())
+                } else {
+                    // Probe quota in flight: hold further traffic for the
+                    // probes' verdict rather than stampeding the shard.
+                    Err(self.cooldown)
+                }
+            }
+        }
+    }
+
+    /// Record the admission outcome of a request this breaker allowed.
+    /// `overload` is [`crate::coordinator::Reject::is_overload`] for
+    /// rejections and `false` for accepted requests.
+    // lint: hot-path
+    pub fn record(&mut self, overload: bool, now: Instant) {
+        match self.state {
+            BreakerState::Closed => {
+                self.outcomes.push_back(overload);
+                if overload {
+                    self.overloads += 1;
+                }
+                if self.outcomes.len() > self.window
+                    && self.outcomes.pop_front() == Some(true)
+                {
+                    self.overloads -= 1;
+                }
+                let full = self.outcomes.len() >= self.window;
+                if full && self.overloads as f64 >= self.threshold * self.window as f64 {
+                    self.trip(now);
+                }
+            }
+            BreakerState::HalfOpen => {
+                if overload {
+                    // The shard is still drowning: re-open for another
+                    // full cooldown.
+                    self.trip(now);
+                } else {
+                    self.probes_ok += 1;
+                    if self.probes_ok >= self.probes_to_close {
+                        self.state = BreakerState::Closed;
+                        self.opened_at = None;
+                    }
+                }
+            }
+            // A straggler completion from before the trip: the open
+            // breaker's verdict doesn't change.
+            BreakerState::Open => {}
+        }
+    }
+
+    // lint: hot-path
+    fn trip(&mut self, now: Instant) {
+        self.state = BreakerState::Open;
+        self.opened_at = Some(now);
+        self.outcomes.clear();
+        self.overloads = 0;
+        self.probes_issued = 0;
+        self.probes_ok = 0;
+        self.trips += 1;
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Lifetime trip count.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Overload fraction of the current closed-state window (0 when the
+    /// window is empty or the breaker is not closed).
+    pub fn window_overload_frac(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            0.0
+        } else {
+            self.overloads as f64 / self.outcomes.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker() -> CircuitBreaker {
+        // window 4, trip at >= 50%, 100ms cooldown, 2 probes to close.
+        CircuitBreaker::new(4, 0.5, Duration::from_millis(100), 2)
+    }
+
+    #[test]
+    fn trips_only_on_a_full_window_at_threshold() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        // Three overloads in a row: window not full yet, still closed.
+        for _ in 0..3 {
+            assert!(b.allow(t0).is_ok());
+            b.record(true, t0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Fourth outcome fills the window at 100% overload: trip.
+        assert!(b.allow(t0).is_ok());
+        b.record(true, t0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        // Open: shed with the remaining cooldown as the hint.
+        let retry = b.allow(t0 + Duration::from_millis(40)).unwrap_err();
+        assert!((retry.as_secs_f64() - 0.060).abs() < 1e-9, "{retry:?}");
+    }
+
+    #[test]
+    fn healthy_window_never_trips() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        for i in 0..64 {
+            assert!(b.allow(t0).is_ok());
+            // 25% overload: under the 50% threshold.
+            b.record(i % 4 == 0, t0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.window_overload_frac() <= 0.5);
+    }
+
+    #[test]
+    fn half_open_probes_close_or_reopen() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        for _ in 0..4 {
+            b.allow(t0).unwrap();
+            b.record(true, t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // Cooldown elapses: the next caller is probe #1.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.allow(t1).is_ok());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // Probe #2 passes; probe #3 is held while the verdict is out.
+        assert!(b.allow(t1).is_ok());
+        assert!(b.allow(t1).is_err());
+        // Both probes come back clean: closed again.
+        b.record(false, t1);
+        b.record(false, t1);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(t1).is_ok());
+        // Trip again, half-open again, and this time a probe sees
+        // overload: straight back to open, full cooldown.
+        for _ in 0..4 {
+            b.allow(t1).unwrap();
+            b.record(true, t1);
+        }
+        let t2 = t1 + Duration::from_millis(100);
+        assert!(b.allow(t2).is_ok());
+        b.record(true, t2);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 3);
+        assert!(b.allow(t2 + Duration::from_millis(99)).is_err());
+        assert!(b.allow(t2 + Duration::from_millis(100)).is_ok());
+    }
+
+    #[test]
+    fn state_names_are_stable() {
+        assert_eq!(BreakerState::Closed.as_str(), "closed");
+        assert_eq!(BreakerState::Open.as_str(), "open");
+        assert_eq!(BreakerState::HalfOpen.as_str(), "half_open");
+    }
+}

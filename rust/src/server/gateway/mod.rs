@@ -1,0 +1,535 @@
+//! The async gateway tier in front of the coordinator.
+//!
+//! Layered like an Axum middleware stack, evaluated in order on every
+//! request — each layer either passes the request down or rejects with a
+//! structured [`Reject`]:
+//!
+//! ```text
+//!   wire (reactor: non-blocking accept + worker pool)
+//!     │
+//!     ▼
+//!   auth        [`AuthTable`]      — API key → tenant + isolation class
+//!     ▼                              (`Reject::AuthFailed`)
+//!   validation                     — wire fields well-formed
+//!     ▼                              (`Reject::BadRequest`)
+//!   rate limit  [`TokenBucket`]    — per-tenant tokens + burst credit
+//!     ▼                              (`Reject::RateLimited{retry_after}`)
+//!   breaker     [`CircuitBreaker`] — per-shard trip/half-open/close
+//!     ▼                              (`Reject::BreakerOpen{device,..}`)
+//!   admission   [`GatewayBackend`] — coordinator submit (EDF queues)
+//! ```
+//!
+//! The gateway builds the [`RequestContext`] from the authenticated
+//! principal plus wire fields (deadline budget, priority, trace id), so
+//! the deadline that reaches the EDF heaps is the wire's — config SLOs
+//! apply only when the wire names no deadline. A breaker-tripped shard
+//! sheds HERE: the coordinator's queues never see the request.
+//!
+//! Every admission-path method takes `now: Instant` explicitly, which is
+//! what lets the integration tests and the fig16 overload sweep drive
+//! auth/rate-limit/breaker dynamics on a virtual clock, deterministically.
+
+pub mod auth;
+pub mod breaker;
+pub mod ratelimit;
+pub mod reactor;
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+pub use auth::{AuthTable, Principal};
+pub use breaker::{BreakerState, CircuitBreaker};
+pub use ratelimit::TokenBucket;
+pub use reactor::{Reactor, ReactorHandle};
+
+use crate::config::{GatewayConfig, IsolationClass};
+use crate::coordinator::{Coordinator, Priority, Reject, RequestContext};
+use crate::runtime::HostTensor;
+use crate::server::frontend::{Reply, ServerHandle};
+use crate::util::json::Json;
+
+/// What a backend submission yields: an immediate verdict (simulated or
+/// rejected-at-admission backends) or a receiver the reply will land on
+/// (the threaded serving frontend).
+#[derive(Debug)]
+pub enum BackendReply {
+    Ready(Reply),
+    Pending(Receiver<Reply>),
+}
+
+/// The admission target behind the gateway. Production uses
+/// [`ServerBackend`]; tests inject synchronous fakes (e.g. an
+/// always-overloaded shard) and fig16 drives a virtual-clock simulator.
+pub trait GatewayBackend {
+    /// Device shards behind this backend (breaker count).
+    fn devices(&self) -> usize;
+    /// Which shard `tenant`'s requests route to (breaker key).
+    fn device_of(&self, tenant: usize) -> usize;
+    /// Submit an admitted request.
+    fn submit(&mut self, ctx: RequestContext, payload: Vec<HostTensor>) -> BackendReply;
+}
+
+/// Production backend: the threaded serving frontend, with the
+/// tenant → device placement captured from the coordinator at build time
+/// (placement is static per run).
+pub struct ServerBackend {
+    handle: ServerHandle,
+    placement: Vec<usize>,
+    devices: usize,
+}
+
+impl ServerBackend {
+    /// Capture placement from the coordinator (before `Server::start`
+    /// takes ownership of it) and pair it with the serving handle.
+    pub fn from_coordinator(handle: ServerHandle, coord: &Coordinator) -> Self {
+        let placement = (0..coord.tenants.len()).map(|t| coord.device_of(t)).collect();
+        Self { handle, placement, devices: coord.devices() }
+    }
+
+    /// Build from pre-captured placement — for callers that must record
+    /// `device_of` before the coordinator moves into `Server::start`.
+    pub fn new(handle: ServerHandle, placement: Vec<usize>, devices: usize) -> Self {
+        Self { handle, placement, devices: devices.max(1) }
+    }
+}
+
+impl GatewayBackend for ServerBackend {
+    fn devices(&self) -> usize {
+        self.devices
+    }
+
+    fn device_of(&self, tenant: usize) -> usize {
+        self.placement.get(tenant).copied().unwrap_or(0)
+    }
+
+    fn submit(&mut self, ctx: RequestContext, payload: Vec<HostTensor>) -> BackendReply {
+        match self.handle.submit_ctx(ctx, payload) {
+            Ok(rx) => BackendReply::Pending(rx),
+            Err(rej) => BackendReply::Ready(Err(rej)),
+        }
+    }
+}
+
+/// Wire-decoded request fields (everything but the payload).
+#[derive(Debug, Clone, Copy)]
+pub struct WireRequest<'a> {
+    pub api_key: &'a str,
+    /// Client deadline budget in milliseconds; `None` falls back to the
+    /// tenant's SLO default.
+    pub budget_ms: Option<f64>,
+    /// Scheduling priority; `None` takes the isolation class default.
+    pub priority: Option<Priority>,
+    pub trace_id: u64,
+}
+
+/// An admitted request in flight: pass back to [`Gateway::wait`] for the
+/// reply (which also feeds the breaker the outcome).
+#[derive(Debug)]
+pub struct GatewayTicket {
+    /// Shard the request was routed to.
+    pub device: usize,
+    /// True once the admission outcome already reached the breaker (the
+    /// synchronous-reply path records during `admit`).
+    recorded: bool,
+    reply: BackendReply,
+}
+
+/// Monotonic gateway counters (status JSON / tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GatewayStats {
+    /// Requests that passed every layer and reached the backend.
+    pub admitted: u64,
+    /// Rejected by the per-tenant token bucket.
+    pub rate_limited: u64,
+    /// Shed by an open breaker (the backend was never asked).
+    pub breaker_shed: u64,
+    /// Admitted requests whose backend verdict was a rejection.
+    pub backend_rejects: u64,
+    /// Rejected before the bucket: malformed wire fields.
+    pub bad_requests: u64,
+}
+
+/// The gateway: auth → validation → rate limit → breaker → admission.
+pub struct Gateway<B: GatewayBackend> {
+    auth: AuthTable,
+    /// Per-tenant buckets, indexed by tenant id (only tenants with API
+    /// keys have one; admission always goes through auth first).
+    buckets: Vec<Option<TokenBucket>>,
+    /// One breaker per device shard.
+    breakers: Vec<CircuitBreaker>,
+    backend: B,
+    stats: GatewayStats,
+    /// Isolation class per tenant (status JSON), same indexing as
+    /// `buckets`.
+    classes: Vec<Option<IsolationClass>>,
+}
+
+impl<B: GatewayBackend> Gateway<B> {
+    pub fn new(cfg: &GatewayConfig, backend: B) -> Self {
+        let auth = AuthTable::from_config(cfg);
+        let n_tenants = auth.principals().iter().map(|p| p.tenant + 1).max().unwrap_or(0);
+        let mut buckets: Vec<Option<TokenBucket>> = Vec::new();
+        let mut classes = Vec::new();
+        buckets.resize_with(n_tenants, || None);
+        classes.resize(n_tenants, None);
+        for p in auth.principals() {
+            // First key (in tenant-sorted order) wins if a tenant has
+            // several; buckets are per TENANT, not per key.
+            if buckets[p.tenant].is_none() {
+                buckets[p.tenant] = Some(TokenBucket::new(
+                    cfg.rate * p.class.rate_mult(),
+                    cfg.burst * p.class.burst_mult(),
+                ));
+                classes[p.tenant] = Some(p.class);
+            }
+        }
+        let breakers = (0..backend.devices().max(1))
+            .map(|_| {
+                CircuitBreaker::new(
+                    cfg.breaker_window,
+                    cfg.breaker_threshold,
+                    Duration::from_secs_f64(cfg.breaker_cooldown_ms / 1e3),
+                    cfg.half_open_probes,
+                )
+            })
+            .collect();
+        Self { auth, buckets, breakers, backend, stats: GatewayStats::default(), classes }
+    }
+
+    /// Run one request through the full layer stack. On `Ok` the request
+    /// reached the backend; use [`Gateway::wait`] on the ticket for the
+    /// reply. Allocation-free after warmup: every rejection on this path
+    /// carries only `Copy` data (`BadRequest` strings are built in cold
+    /// helpers).
+    // lint: hot-path
+    pub fn admit(
+        &mut self,
+        wire: &WireRequest<'_>,
+        payload: Vec<HostTensor>,
+        now: Instant,
+    ) -> Result<GatewayTicket, Reject> {
+        // Layer 1: auth.
+        let Some(principal) = self.auth.authenticate(wire.api_key) else {
+            return Err(Reject::AuthFailed);
+        };
+        // Layer 2: validation.
+        if let Some(ms) = wire.budget_ms {
+            if !ms.is_finite() || ms <= 0.0 {
+                self.stats.bad_requests += 1;
+                return Err(bad_budget());
+            }
+        }
+        // Layer 3: per-tenant token bucket.
+        let bucket = self.buckets[principal.tenant]
+            .as_mut()
+            .expect("authenticated tenants have a bucket");
+        if let Err(retry_after) = bucket.try_take(now) {
+            self.stats.rate_limited += 1;
+            return Err(Reject::RateLimited { retry_after });
+        }
+        // Layer 4: the shard's circuit breaker. An open breaker sheds
+        // HERE — the coordinator queues are never touched.
+        let device = self.backend.device_of(principal.tenant);
+        if let Err(retry_after) = self.breakers[device].allow(now) {
+            self.stats.breaker_shed += 1;
+            return Err(Reject::BreakerOpen { device, retry_after });
+        }
+        // Layer 5: admission. Build the context the EDF queues will
+        // order by: wire deadline/priority, class default priority, SLO
+        // only if the wire named nothing.
+        let mut ctx = RequestContext::new(principal.tenant)
+            .with_priority(match wire.priority {
+                Some(p) => p,
+                None => principal.default_priority(),
+            })
+            .with_trace_id(wire.trace_id);
+        if let Some(ms) = wire.budget_ms {
+            ctx = ctx.with_budget(Duration::from_secs_f64(ms / 1e3));
+        }
+        self.stats.admitted += 1;
+        match self.backend.submit(ctx, payload) {
+            BackendReply::Ready(Err(rej)) => {
+                // Synchronous verdict: feed the breaker now.
+                self.breakers[device].record(rej.is_overload(), now);
+                self.stats.backend_rejects += 1;
+                Err(rej)
+            }
+            BackendReply::Ready(Ok(res)) => {
+                self.breakers[device].record(false, now);
+                Ok(GatewayTicket { device, recorded: true, reply: BackendReply::Ready(Ok(res)) })
+            }
+            BackendReply::Pending(rx) => {
+                Ok(GatewayTicket { device, recorded: false, reply: BackendReply::Pending(rx) })
+            }
+        }
+    }
+
+    /// Collect an admitted request's reply (blocking on the pending
+    /// path) and feed the breaker its outcome. `now` timestamps the
+    /// outcome for breaker bookkeeping.
+    pub fn wait(&mut self, ticket: GatewayTicket, now: Instant) -> Reply {
+        let out = match ticket.reply {
+            BackendReply::Ready(r) => r,
+            BackendReply::Pending(rx) => rx.recv().unwrap_or(Err(Reject::ServerShutdown)),
+        };
+        if !ticket.recorded {
+            self.breakers[ticket.device].record(
+                matches!(&out, Err(r) if r.is_overload()),
+                now,
+            );
+            if out.is_err() {
+                self.stats.backend_rejects += 1;
+            }
+        }
+        out
+    }
+
+    pub fn stats(&self) -> GatewayStats {
+        self.stats
+    }
+
+    /// Tenant behind `api_key`, without counting an auth attempt (the
+    /// reactor uses this to build the payload before admission; a miss
+    /// still flows through [`Gateway::admit`] so the failure is counted
+    /// exactly once).
+    pub fn peek_tenant(&self, api_key: &str) -> Option<usize> {
+        self.auth.peek(api_key).map(|p| p.tenant)
+    }
+
+    pub fn auth_failures(&self) -> u64 {
+        self.auth.failures()
+    }
+
+    pub fn breaker_state(&self, device: usize) -> BreakerState {
+        self.breakers[device].state()
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// The `"gateway"` section of the versioned status JSON: per-tenant
+    /// token balances, per-shard breaker states, and the layer counters.
+    pub fn status_json(&self, now: Instant) -> Json {
+        let tenants: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(t, b)| b.as_ref().map(|b| (t, b)))
+            .map(|(t, b)| {
+                let class = self.classes[t].map(|c| c.as_str()).unwrap_or("standard");
+                Json::obj(vec![
+                    ("tenant", Json::num(t as f64)),
+                    ("class", Json::str(class)),
+                    ("tokens", Json::num(b.available(now))),
+                    ("rate", Json::num(b.rate())),
+                    ("burst", Json::num(b.burst())),
+                ])
+            })
+            .collect();
+        let breakers: Vec<Json> = self
+            .breakers
+            .iter()
+            .enumerate()
+            .map(|(d, br)| {
+                Json::obj(vec![
+                    ("device", Json::num(d as f64)),
+                    ("state", Json::str(br.state().as_str())),
+                    ("trips", Json::num(br.trips() as f64)),
+                    ("window_overload", Json::num(br.window_overload_frac())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("tenants", Json::Arr(tenants)),
+            ("breakers", Json::Arr(breakers)),
+            ("auth_failures", Json::num(self.auth.failures() as f64)),
+            ("admitted", Json::num(self.stats.admitted as f64)),
+            ("rate_limited", Json::num(self.stats.rate_limited as f64)),
+            ("breaker_shed", Json::num(self.stats.breaker_shed as f64)),
+            ("backend_rejects", Json::num(self.stats.backend_rejects as f64)),
+            ("bad_requests", Json::num(self.stats.bad_requests as f64)),
+        ])
+    }
+}
+
+/// Cold constructor for the one validation rejection that carries a
+/// message — keeps the admission fast path allocation-free.
+#[cold]
+fn bad_budget() -> Reject {
+    Reject::BadRequest("budget_ms must be finite and > 0".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GatewayTenant, IsolationClass};
+    use crate::coordinator::InferenceResponse;
+
+    /// A scriptable synchronous backend: replies with a fixed verdict and
+    /// counts submissions.
+    struct FakeBackend {
+        devices: usize,
+        verdict: Option<Reject>,
+        calls: u64,
+        last_ctx: Option<RequestContext>,
+    }
+
+    impl FakeBackend {
+        fn ok(devices: usize) -> Self {
+            Self { devices, verdict: None, calls: 0, last_ctx: None }
+        }
+
+        fn rejecting(devices: usize, rej: Reject) -> Self {
+            Self { devices, verdict: Some(rej), calls: 0, last_ctx: None }
+        }
+    }
+
+    impl GatewayBackend for FakeBackend {
+        fn devices(&self) -> usize {
+            self.devices
+        }
+
+        fn device_of(&self, tenant: usize) -> usize {
+            tenant % self.devices
+        }
+
+        fn submit(&mut self, ctx: RequestContext, _payload: Vec<HostTensor>) -> BackendReply {
+            self.calls += 1;
+            self.last_ctx = Some(ctx);
+            match &self.verdict {
+                Some(rej) => BackendReply::Ready(Err(rej.clone())),
+                None => BackendReply::Ready(Ok(InferenceResponse {
+                    id: self.calls,
+                    tenant: ctx.tenant,
+                    output: HostTensor { shape: vec![1], data: vec![0.0] },
+                    latency_s: 0.001,
+                    service_s: 0.001,
+                    fused_r: 1,
+                    trace_id: ctx.trace_id,
+                })),
+            }
+        }
+    }
+
+    fn cfg() -> GatewayConfig {
+        GatewayConfig {
+            rate: 10.0,
+            burst: 2.0,
+            breaker_window: 4,
+            breaker_threshold: 0.5,
+            breaker_cooldown_ms: 100.0,
+            half_open_probes: 1,
+            tenants: vec![GatewayTenant {
+                api_key: "k0".into(),
+                tenant: 0,
+                class: IsolationClass::Standard,
+            }],
+            ..GatewayConfig::default()
+        }
+    }
+
+    fn wire(key: &str) -> WireRequest<'_> {
+        WireRequest { api_key: key, budget_ms: None, priority: None, trace_id: 0 }
+    }
+
+    #[test]
+    fn layers_reject_in_order() {
+        let t0 = Instant::now();
+        let mut g = Gateway::new(&cfg(), FakeBackend::ok(1));
+        // Unknown key: auth, before any token is spent.
+        assert_eq!(g.admit(&wire("nope"), vec![], t0).unwrap_err(), Reject::AuthFailed);
+        assert_eq!(g.auth_failures(), 1);
+        // Malformed budget: validation, before the bucket.
+        let bad = WireRequest { budget_ms: Some(-1.0), ..wire("k0") };
+        assert!(matches!(g.admit(&bad, vec![], t0), Err(Reject::BadRequest(_))));
+        // Two tokens of burst pass, the third is rate limited with a hint.
+        assert!(g.admit(&wire("k0"), vec![], t0).is_ok());
+        assert!(g.admit(&wire("k0"), vec![], t0).is_ok());
+        match g.admit(&wire("k0"), vec![], t0) {
+            Err(Reject::RateLimited { retry_after }) => {
+                assert!((retry_after.as_secs_f64() - 0.1).abs() < 1e-9);
+            }
+            other => panic!("expected RateLimited, got {:?}", other.map(|t| t.device)),
+        }
+        let s = g.stats();
+        assert_eq!((s.admitted, s.rate_limited, s.bad_requests), (2, 1, 1));
+        assert_eq!(g.backend().calls, 2);
+    }
+
+    #[test]
+    fn wire_fields_land_in_the_context() {
+        let t0 = Instant::now();
+        let mut g = Gateway::new(&cfg(), FakeBackend::ok(1));
+        let w = WireRequest {
+            api_key: "k0",
+            budget_ms: Some(7.0),
+            priority: Some(Priority::Batch),
+            trace_id: 42,
+        };
+        let ticket = g.admit(&w, vec![], t0).unwrap();
+        let reply = g.wait(ticket, t0).unwrap();
+        assert_eq!(reply.trace_id, 42);
+        let ctx = g.backend().last_ctx.unwrap();
+        assert_eq!(ctx.tenant, 0);
+        assert_eq!(ctx.priority, Priority::Batch);
+        assert_eq!(
+            ctx.resolve_deadline(t0, Duration::from_secs(1)),
+            t0 + Duration::from_millis(7)
+        );
+    }
+
+    #[test]
+    fn breaker_trips_and_sheds_without_backend_calls() {
+        let t0 = Instant::now();
+        let mut c = cfg();
+        c.burst = 1000.0; // keep the bucket out of the way
+        let mut g = Gateway::new(&c, FakeBackend::rejecting(1, Reject::Overloaded));
+        // Four overload verdicts fill the window and trip the breaker.
+        for _ in 0..4 {
+            assert_eq!(g.admit(&wire("k0"), vec![], t0).unwrap_err(), Reject::Overloaded);
+        }
+        assert_eq!(g.breaker_state(0), BreakerState::Open);
+        let calls_at_trip = g.backend().calls;
+        // Open: sheds at the gateway; the backend is NOT called.
+        match g.admit(&wire("k0"), vec![], t0).unwrap_err() {
+            Reject::BreakerOpen { device, retry_after } => {
+                assert_eq!(device, 0);
+                assert!(retry_after <= Duration::from_millis(100));
+            }
+            other => panic!("expected BreakerOpen, got {other:?}"),
+        }
+        assert_eq!(g.backend().calls, calls_at_trip);
+        assert_eq!(g.stats().breaker_shed, 1);
+        // After the cooldown the shard has recovered: one clean probe
+        // closes the breaker (half_open_probes = 1).
+        g.backend_mut().verdict = None;
+        let t1 = t0 + Duration::from_millis(100);
+        let ticket = g.admit(&wire("k0"), vec![], t1).unwrap();
+        assert!(g.wait(ticket, t1).is_ok());
+        assert_eq!(g.breaker_state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn status_json_reports_tokens_and_breakers() {
+        let t0 = Instant::now();
+        let mut g = Gateway::new(&cfg(), FakeBackend::ok(1));
+        let _ = g.admit(&wire("k0"), vec![], t0);
+        let _ = g.admit(&wire("missing"), vec![], t0);
+        let j = g.status_json(t0);
+        let tenants = j.get("tenants").and_then(Json::as_arr).unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("tenant").and_then(Json::as_f64), Some(0.0));
+        // One of the two burst tokens is spent.
+        assert!((tenants[0].get("tokens").and_then(Json::as_f64).unwrap() - 1.0).abs() < 1e-9);
+        let breakers = j.get("breakers").and_then(Json::as_arr).unwrap();
+        assert_eq!(breakers.len(), 1);
+        assert_eq!(breakers[0].get("state").and_then(Json::as_str), Some("closed"));
+        assert_eq!(j.get("auth_failures").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("admitted").and_then(Json::as_f64), Some(1.0));
+    }
+}

@@ -1,0 +1,392 @@
+//! The gateway's connection/reactor layer: a non-blocking accept loop
+//! feeding a fixed pool of worker threads (no async runtime is vendored
+//! offline — same constraint as [`crate::server::status`], same idiom).
+//!
+//! The acceptor thread polls a non-blocking [`TcpListener`] and hands
+//! accepted connections to workers over an mpsc queue; each worker
+//! speaks a line-delimited JSON protocol — one request object per line,
+//! one response object per line, connections are kept alive across
+//! requests. The reactor is transport-only: it is generic over a
+//! `Fn(&str) -> String` handler, and [`gateway_handler`] adapts a
+//! [`Gateway`] (auth → validation → rate limit → breaker → admission)
+//! into that shape.
+//!
+//! Wire request fields: `{"api_key": "...", "budget_ms": 12.5,
+//! "priority": "high", "trace_id": 7}` — everything but `api_key` is
+//! optional. Responses are either
+//! `{"ok": true, "id": .., "tenant": .., "latency_ms": .., "trace_id": ..}`
+//! or `{"ok": false, "error": <structured Reject JSON>}`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Priority, Reject};
+use crate::runtime::HostTensor;
+use crate::server::gateway::{Gateway, GatewayBackend, WireRequest};
+use crate::util::json::Json;
+
+/// Per-connection request handler: one request line in, one response
+/// line out (without the trailing newline).
+pub type Handler = dyn Fn(&str) -> String + Send + Sync;
+
+/// The reactor: builder entry point. See [`Reactor::start`].
+pub struct Reactor;
+
+/// A running reactor; dropping (or [`ReactorHandle::stop`]) shuts it
+/// down and joins every thread.
+pub struct ReactorHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Bind `addr` (port 0 for ephemeral) and serve connections on
+    /// `workers` pool threads, passing each request line to `handler`.
+    pub fn start(
+        addr: impl ToSocketAddrs,
+        workers: usize,
+        handler: Arc<Handler>,
+    ) -> std::io::Result<ReactorHandle> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx): (Sender<TcpStream>, Receiver<TcpStream>) = channel();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut pool = Vec::new();
+        for i in 0..workers.max(1) {
+            let rx = rx.clone();
+            let handler = handler.clone();
+            let stop = stop.clone();
+            pool.push(
+                std::thread::Builder::new()
+                    .name(format!("stgpu-gw-worker-{i}"))
+                    .spawn(move || worker_loop(&rx, &*handler, &stop))?,
+            );
+        }
+
+        let stop2 = stop.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("stgpu-gw-acceptor".into())
+            .spawn(move || {
+                // `tx` moves in here: when the acceptor exits, the queue
+                // sender drops and idle workers see the disconnect.
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            // Workers poll the stop flag between reads.
+                            let _ = sock.set_read_timeout(Some(Duration::from_millis(50)));
+                            let _ = sock.set_nonblocking(false);
+                            if tx.send(sock).is_err() {
+                                break;
+                            }
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+
+        Ok(ReactorHandle { addr: local, stop, acceptor: Some(acceptor), workers: pool })
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, handler: &Handler, stop: &AtomicBool) {
+    loop {
+        // Hold the queue lock only for the dequeue, not for the whole
+        // connection.
+        let sock = {
+            let guard = rx.lock().expect("reactor queue poisoned");
+            guard.recv_timeout(Duration::from_millis(50))
+        };
+        match sock {
+            Ok(sock) => serve_connection(sock, handler, stop),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Serve one keep-alive connection: request line in, response line out,
+/// until EOF, a write error, or shutdown.
+fn serve_connection(sock: TcpStream, handler: &Handler, stop: &AtomicBool) {
+    let mut writer = match sock.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(sock);
+    let mut line = String::new();
+    while !stop.load(Ordering::Relaxed) {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let resp = handler(trimmed);
+                if writer.write_all(resp.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                {
+                    return;
+                }
+            }
+            // Read timeout: re-check the stop flag and keep waiting.
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+impl ReactorHandle {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.acceptor.take() {
+            let _ = t.join();
+        }
+        for t in self.workers.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReactorHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Adapt a [`Gateway`] into a reactor [`Handler`]: decode the wire JSON,
+/// run the admission stack, wait for the backend reply, and encode the
+/// response. `payload_for` supplies the model-input tensors for an
+/// authenticated tenant (the wire carries request metadata, not
+/// activations — the serving CLI generates payloads from the tenant's
+/// configured shape, exactly like the driver path).
+pub fn gateway_handler<B: GatewayBackend + Send + 'static>(
+    gateway: Arc<Mutex<Gateway<B>>>,
+    payload_for: Arc<dyn Fn(usize) -> Vec<HostTensor> + Send + Sync>,
+) -> Arc<Handler> {
+    Arc::new(move |line: &str| {
+        let reply = handle_line(&gateway, &payload_for, line);
+        let json = match reply {
+            Ok(ok) => ok,
+            Err(rej) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", rej.to_json()),
+            ]),
+        };
+        json.to_string()
+    })
+}
+
+fn handle_line<B: GatewayBackend>(
+    gateway: &Mutex<Gateway<B>>,
+    payload_for: &(dyn Fn(usize) -> Vec<HostTensor> + Send + Sync),
+    line: &str,
+) -> Result<Json, Reject> {
+    let req = Json::parse(line).map_err(|e| Reject::BadRequest(format!("bad json: {e}")))?;
+    let api_key = req
+        .get("api_key")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Reject::BadRequest("missing api_key".into()))?;
+    let budget_ms = req.get("budget_ms").and_then(Json::as_f64);
+    let priority = match req.get("priority").and_then(Json::as_str) {
+        None => None,
+        Some(p) => Some(
+            Priority::parse(p)
+                .ok_or_else(|| Reject::BadRequest(format!("unknown priority {p:?}")))?,
+        ),
+    };
+    let trace_id = req.get("trace_id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let wire = WireRequest { api_key, budget_ms, priority, trace_id };
+
+    // Admission holds the gateway lock; the (possibly blocking) wait for
+    // the backend reply does too — per-request replies are matched to
+    // their ticket, and the simulated backend's submit is itself
+    // synchronous, so the lock is the ordering domain. The worker pool
+    // provides the connection-level concurrency.
+    let mut gw = gateway.lock().expect("gateway poisoned");
+    let tenant = match gw.peek_tenant(api_key) {
+        Some(t) => t,
+        None => {
+            // Let admit() record the auth failure.
+            let now = Instant::now();
+            return match gw.admit(&wire, Vec::new(), now) {
+                Err(rej) => Err(rej),
+                Ok(_) => unreachable!("unknown key cannot admit"),
+            };
+        }
+    };
+    let payload = payload_for(tenant);
+    let now = Instant::now();
+    let ticket = gw.admit(&wire, payload, now)?;
+    let res = gw.wait(ticket, Instant::now())?;
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(res.id as f64)),
+        ("tenant", Json::num(res.tenant as f64)),
+        ("latency_ms", Json::num(res.latency_s * 1e3)),
+        ("trace_id", Json::num(res.trace_id as f64)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GatewayConfig, GatewayTenant, IsolationClass};
+    use crate::coordinator::{InferenceResponse, RequestContext};
+    use crate::server::gateway::BackendReply;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    #[test]
+    fn echo_round_trip_and_keep_alive() {
+        let handler: Arc<Handler> = Arc::new(|line: &str| format!("echo:{line}"));
+        let r = Reactor::start("127.0.0.1:0", 2, handler).expect("bind");
+        let sock = TcpStream::connect(r.addr()).expect("connect");
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        // Two requests on ONE connection: the reactor keeps it alive.
+        for i in 0..2 {
+            w.write_all(format!("ping{i}\n").as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            assert_eq!(resp.trim(), format!("echo:ping{i}"));
+        }
+        r.stop();
+    }
+
+    #[test]
+    fn concurrent_connections_are_served_by_the_pool() {
+        let handler: Arc<Handler> = Arc::new(|line: &str| line.to_uppercase());
+        let r = Reactor::start("127.0.0.1:0", 4, handler).expect("bind");
+        let addr = r.addr();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let sock = TcpStream::connect(addr).expect("connect");
+                    let mut reader = BufReader::new(sock.try_clone().unwrap());
+                    let mut w = sock;
+                    w.write_all(format!("req{i}\n").as_bytes()).unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    assert_eq!(resp.trim(), format!("REQ{i}"));
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("client thread");
+        }
+        r.stop();
+    }
+
+    /// Synchronous always-OK backend for protocol tests.
+    struct OkBackend {
+        calls: u64,
+    }
+
+    impl GatewayBackend for OkBackend {
+        fn devices(&self) -> usize {
+            1
+        }
+
+        fn device_of(&self, _tenant: usize) -> usize {
+            0
+        }
+
+        fn submit(&mut self, ctx: RequestContext, _payload: Vec<HostTensor>) -> BackendReply {
+            self.calls += 1;
+            BackendReply::Ready(Ok(InferenceResponse {
+                id: self.calls,
+                tenant: ctx.tenant,
+                output: HostTensor { shape: vec![1], data: vec![0.0] },
+                latency_s: 0.002,
+                service_s: 0.002,
+                fused_r: 1,
+                trace_id: ctx.trace_id,
+            }))
+        }
+    }
+
+    #[test]
+    fn gateway_handler_speaks_the_wire_protocol() {
+        let cfg = GatewayConfig {
+            rate: 1000.0,
+            burst: 1000.0,
+            tenants: vec![GatewayTenant {
+                api_key: "secret".into(),
+                tenant: 0,
+                class: IsolationClass::Standard,
+            }],
+            ..GatewayConfig::default()
+        };
+        let gw = Arc::new(Mutex::new(Gateway::new(&cfg, OkBackend { calls: 0 })));
+        let handler = gateway_handler(gw.clone(), Arc::new(|_t| Vec::new()));
+        let r = Reactor::start("127.0.0.1:0", 2, handler).expect("bind");
+        let sock = TcpStream::connect(r.addr()).expect("connect");
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+
+        // A well-formed request completes and echoes the trace id.
+        w.write_all(b"{\"api_key\":\"secret\",\"budget_ms\":50,\"trace_id\":9}\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).expect("response json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("trace_id").and_then(Json::as_f64), Some(9.0));
+
+        // A bad key is rejected with the structured error and counted.
+        w.write_all(b"{\"api_key\":\"wrong\"}\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).expect("error json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            j.get("error").and_then(|e| e.get("error")).and_then(Json::as_str),
+            Some("auth_failed")
+        );
+
+        // Malformed JSON is a bad_request, not a hangup.
+        w.write_all(b"not json\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).expect("error json");
+        assert_eq!(
+            j.get("error").and_then(|e| e.get("error")).and_then(Json::as_str),
+            Some("bad_request")
+        );
+
+        r.stop();
+        let g = gw.lock().unwrap();
+        assert_eq!(g.stats().admitted, 1);
+        assert_eq!(g.auth_failures(), 1);
+    }
+}

@@ -1,8 +1,15 @@
-//! Serving frontend: the threaded leader loop that pumps the coordinator,
-//! plus a plaintext TCP status endpoint.
+//! Serving frontend: the async gateway tier (auth → validation → rate
+//! limit → admission), the threaded leader loop that pumps the
+//! coordinator, plus a plaintext TCP status endpoint.
 
 pub mod frontend;
+pub mod gateway;
 pub mod status;
 
 pub use frontend::{Reply, ServeOpts, Server, ServerHandle};
+pub use gateway::{
+    AuthTable, BackendReply, BreakerState, CircuitBreaker, Gateway, GatewayBackend,
+    GatewayStats, GatewayTicket, Principal, Reactor, ReactorHandle, ServerBackend, TokenBucket,
+    WireRequest,
+};
 pub use status::{aggregate_nodes, StatusEndpoint};

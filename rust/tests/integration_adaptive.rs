@@ -20,7 +20,7 @@ use std::time::Instant;
 use stgpu::config::{ControllerConfig, SchedulerKind, ServerConfig, TenantConfig};
 use stgpu::coordinator::lanepool::{LanePool, LaunchExecutor, WorkItem};
 use stgpu::coordinator::{
-    Coordinator, InferenceRequest, Launch, LaunchResult, ModelSpec, ShapeClass,
+    Coordinator, InferenceRequest, Launch, LaunchResult, ModelSpec, Priority, ShapeClass,
 };
 use stgpu::runtime::HostTensor;
 use stgpu::util::prng::Rng;
@@ -44,6 +44,8 @@ fn item(round: u64, index: usize, lane: usize, lanes_resident: usize) -> WorkIte
                 payload: vec![],
                 arrived: now,
                 deadline: now,
+                priority: Priority::Normal,
+                trace_id: 0,
             }],
             r_bucket: 1,
         },

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
 use stgpu::coordinator::{
     make_scheduler_deadline_aware, Coordinator, CostModel, InferenceRequest,
-    PaddingPolicy, QueueSet, Reject, Scheduler, ShapeClass,
+    PaddingPolicy, Priority, QueueSet, Reject, Scheduler, ShapeClass,
 };
 use stgpu::util::prng::Rng;
 
@@ -26,6 +26,8 @@ fn req(id: u64, tenant: usize, now: Instant, slo_ms: u64) -> InferenceRequest {
         payload: vec![],
         arrived: now,
         deadline: now + Duration::from_millis(slo_ms),
+        priority: Priority::Normal,
+        trace_id: 0,
     }
 }
 

@@ -1,0 +1,326 @@
+//! Integration: the gateway tier — layered admission over a scriptable
+//! backend shard, on a virtual clock (no artifacts needed).
+//!
+//! Covers the four behaviours the PR's acceptance gates on:
+//!   1. auth rejection happens before any other layer does work (no
+//!      token spent, backend never called);
+//!   2. token-bucket refill timing, including the isolation-class rate
+//!      multipliers and the exact `retry_after` hint;
+//!   3. the breaker trip → shed → half-open → close cycle against an
+//!      injected always-overloaded shard, with call-count proof that an
+//!      open breaker stops backend traffic at the gateway;
+//!   4. end-to-end deadline propagation: the contexts the gateway builds
+//!      from wire fields resolve to wire deadlines, and the EDF heap
+//!      pops in wire-deadline order — the config SLO applies only to
+//!      requests that named no deadline.
+//! Plus the reactor's TCP wire protocol over the same stack.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use stgpu::config::{GatewayConfig, GatewayTenant, IsolationClass};
+use stgpu::coordinator::{
+    DeadlineSpec, InferenceResponse, Priority, QueueSet, Reject, RequestContext, ShapeClass,
+};
+use stgpu::runtime::HostTensor;
+use stgpu::server::gateway::reactor::gateway_handler;
+use stgpu::server::{BackendReply, BreakerState, Gateway, GatewayBackend, Reactor, WireRequest};
+use stgpu::util::json::Json;
+
+/// One scriptable synchronous shard: records every admitted context and
+/// replies with a fixed verdict (`None` = success).
+struct FakeShard {
+    verdict: Option<Reject>,
+    calls: u64,
+    ctxs: Vec<RequestContext>,
+}
+
+impl FakeShard {
+    fn ok() -> Self {
+        Self { verdict: None, calls: 0, ctxs: Vec::new() }
+    }
+
+    fn overloaded() -> Self {
+        Self { verdict: Some(Reject::Overloaded), calls: 0, ctxs: Vec::new() }
+    }
+}
+
+impl GatewayBackend for FakeShard {
+    fn devices(&self) -> usize {
+        1
+    }
+
+    fn device_of(&self, _tenant: usize) -> usize {
+        0
+    }
+
+    fn submit(&mut self, ctx: RequestContext, _payload: Vec<HostTensor>) -> BackendReply {
+        self.calls += 1;
+        self.ctxs.push(ctx);
+        match &self.verdict {
+            Some(rej) => BackendReply::Ready(Err(rej.clone())),
+            None => BackendReply::Ready(Ok(InferenceResponse {
+                id: self.calls,
+                tenant: ctx.tenant,
+                output: HostTensor { shape: vec![1], data: vec![0.0] },
+                latency_s: 0.001,
+                service_s: 0.001,
+                fused_r: 1,
+                trace_id: ctx.trace_id,
+            })),
+        }
+    }
+}
+
+fn cfg(keys: Vec<(&str, usize, IsolationClass)>, rate: f64, burst: f64) -> GatewayConfig {
+    GatewayConfig {
+        rate,
+        burst,
+        breaker_window: 4,
+        breaker_threshold: 0.5,
+        breaker_cooldown_ms: 100.0,
+        half_open_probes: 2,
+        tenants: keys
+            .into_iter()
+            .map(|(k, t, c)| GatewayTenant { api_key: k.into(), tenant: t, class: c })
+            .collect(),
+        ..GatewayConfig::default()
+    }
+}
+
+fn wire(key: &str) -> WireRequest<'_> {
+    WireRequest { api_key: key, budget_ms: None, priority: None, trace_id: 0 }
+}
+
+#[test]
+fn auth_rejects_before_any_token_is_spent() {
+    let t0 = Instant::now();
+    let mut g = Gateway::new(
+        &cfg(vec![("good", 0, IsolationClass::Standard)], 10.0, 2.0),
+        FakeShard::ok(),
+    );
+    // Repeated unknown-key attempts: counted, but the backend is never
+    // asked and no layer below auth runs.
+    for _ in 0..3 {
+        assert_eq!(g.admit(&wire("bad"), vec![], t0).unwrap_err(), Reject::AuthFailed);
+    }
+    assert_eq!(g.auth_failures(), 3);
+    assert_eq!(g.backend().calls, 0);
+    assert_eq!(g.stats().admitted, 0);
+    // The valid tenant's FULL burst (2 tokens) is still there — the auth
+    // failures spent none of it.
+    assert!(g.admit(&wire("good"), vec![], t0).is_ok());
+    assert!(g.admit(&wire("good"), vec![], t0).is_ok());
+    assert!(matches!(
+        g.admit(&wire("good"), vec![], t0),
+        Err(Reject::RateLimited { .. })
+    ));
+}
+
+#[test]
+fn token_bucket_refills_on_schedule_with_class_multipliers() {
+    let t0 = Instant::now();
+    // Standard: 10 req/s, burst 2. Premium: x4 rate (40 req/s), x4 burst (8).
+    let mut g = Gateway::new(
+        &cfg(
+            vec![
+                ("std", 0, IsolationClass::Standard),
+                ("pro", 1, IsolationClass::Premium),
+            ],
+            10.0,
+            2.0,
+        ),
+        FakeShard::ok(),
+    );
+    // Standard: the burst passes, then the bucket names its exact refill.
+    assert!(g.admit(&wire("std"), vec![], t0).is_ok());
+    assert!(g.admit(&wire("std"), vec![], t0).is_ok());
+    match g.admit(&wire("std"), vec![], t0) {
+        Err(Reject::RateLimited { retry_after }) => {
+            assert!((retry_after.as_secs_f64() - 0.1).abs() < 1e-6, "{retry_after:?}");
+        }
+        other => panic!("expected RateLimited, got {:?}", other.map(|_| ())),
+    }
+    // 99 ms later only 0.99 tokens have refilled: still limited.
+    assert!(g.admit(&wire("std"), vec![], t0 + Duration::from_millis(99)).is_err());
+    // 150 ms after the drain a whole token is back.
+    assert!(g.admit(&wire("std"), vec![], t0 + Duration::from_millis(150)).is_ok());
+    // ... and it was exactly one token.
+    assert!(g.admit(&wire("std"), vec![], t0 + Duration::from_millis(150)).is_err());
+
+    // Premium drains 8 burst tokens and refills 4x faster: 25 ms/token.
+    for _ in 0..8 {
+        assert!(g.admit(&wire("pro"), vec![], t0).is_ok());
+    }
+    match g.admit(&wire("pro"), vec![], t0) {
+        Err(Reject::RateLimited { retry_after }) => {
+            assert!((retry_after.as_secs_f64() - 0.025).abs() < 1e-6, "{retry_after:?}");
+        }
+        other => panic!("expected RateLimited, got {:?}", other.map(|_| ())),
+    }
+    assert!(g.admit(&wire("pro"), vec![], t0 + Duration::from_millis(30)).is_ok());
+    assert_eq!(g.stats().rate_limited, 4);
+    assert_eq!(g.stats().admitted, 12);
+}
+
+#[test]
+fn breaker_cycle_against_an_overloaded_shard() {
+    let t0 = Instant::now();
+    // Big bucket so only the breaker is in play; window 4, threshold 0.5,
+    // 100 ms cooldown, 2 clean probes to close.
+    let mut g = Gateway::new(
+        &cfg(vec![("k", 0, IsolationClass::Standard)], 1000.0, 1000.0),
+        FakeShard::overloaded(),
+    );
+    // Four sustained overload verdicts fill the window: trip.
+    for _ in 0..4 {
+        assert_eq!(g.admit(&wire("k"), vec![], t0).unwrap_err(), Reject::Overloaded);
+    }
+    assert_eq!(g.breaker_state(0), BreakerState::Open);
+    assert_eq!(g.backend().calls, 4);
+    // Open: the gateway sheds and the shard is NOT called — provenance
+    // names the shard and flags the breaker.
+    let rej = g.admit(&wire("k"), vec![], t0 + Duration::from_millis(50)).unwrap_err();
+    match &rej {
+        Reject::BreakerOpen { device: 0, retry_after } => {
+            assert!((retry_after.as_secs_f64() - 0.05).abs() < 1e-6, "{retry_after:?}");
+        }
+        other => panic!("expected BreakerOpen, got {other:?}"),
+    }
+    let prov = rej.provenance().expect("breaker sheds carry provenance");
+    assert!(prov.breaker);
+    assert_eq!(g.backend().calls, 4, "open breaker stops backend traffic");
+    assert_eq!(g.stats().breaker_shed, 1);
+    // Cooldown over, shard still drowning: the half-open probe fails and
+    // the breaker re-opens for a full cooldown.
+    let t1 = t0 + Duration::from_millis(100);
+    assert_eq!(g.admit(&wire("k"), vec![], t1).unwrap_err(), Reject::Overloaded);
+    assert_eq!(g.breaker_state(0), BreakerState::Open);
+    assert_eq!(g.backend().calls, 5, "exactly one probe reached the shard");
+    assert!(matches!(
+        g.admit(&wire("k"), vec![], t1 + Duration::from_millis(99)).unwrap_err(),
+        Reject::BreakerOpen { .. }
+    ));
+    // The shard recovers; two clean probes close the breaker.
+    g.backend_mut().verdict = None;
+    let t2 = t1 + Duration::from_millis(100);
+    let ticket = g.admit(&wire("k"), vec![], t2).expect("probe 1 admitted");
+    assert!(g.wait(ticket, t2).is_ok());
+    assert_eq!(g.breaker_state(0), BreakerState::HalfOpen);
+    let ticket = g.admit(&wire("k"), vec![], t2).expect("probe 2 admitted");
+    assert!(g.wait(ticket, t2).is_ok());
+    assert_eq!(g.breaker_state(0), BreakerState::Closed);
+    assert_eq!(g.backend().calls, 7);
+    // The status JSON reports the lifetime trip count (t0 and t1).
+    let j = g.status_json(t2);
+    let breakers = j.get("breakers").and_then(Json::as_arr).unwrap();
+    assert_eq!(breakers[0].get("trips").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(breakers[0].get("state").and_then(Json::as_str), Some("closed"));
+}
+
+#[test]
+fn wire_deadlines_order_the_edf_heap_not_the_config_slo() {
+    let t0 = Instant::now();
+    let mut g = Gateway::new(
+        &cfg(vec![("k", 0, IsolationClass::Premium)], 1000.0, 1000.0),
+        FakeShard::ok(),
+    );
+    // Four wire requests, submitted loosest-deadline first.
+    let admit = |g: &mut Gateway<FakeShard>, budget_ms, priority, trace_id| {
+        let w = WireRequest { api_key: "k", budget_ms, priority, trace_id };
+        g.admit(&w, vec![], t0).expect("admitted");
+    };
+    admit(&mut g, Some(300.0), None, 1);
+    admit(&mut g, Some(10.0), None, 2);
+    admit(&mut g, None, None, 3); // no wire deadline: SLO default applies
+    admit(&mut g, Some(10.0), Some(Priority::Batch), 4);
+
+    // The contexts the gateway built carry the wire's words, not config
+    // defaults: class default priority, wire budgets, SLO only for #3.
+    let ctxs = g.backend().ctxs.clone();
+    assert_eq!(ctxs[0].priority, Priority::High, "premium class default");
+    assert_eq!(ctxs[3].priority, Priority::Batch, "wire priority wins");
+    assert_eq!(ctxs[1].deadline, DeadlineSpec::Budget(Duration::from_millis(10)));
+    assert_eq!(ctxs[2].deadline, DeadlineSpec::SloDefault);
+
+    // Materialize through the SAME path the server uses and push into a
+    // real EDF queue set, in submission order.
+    let slo = Duration::from_millis(100);
+    let mut qs = QueueSet::new(1, 8);
+    for ctx in &ctxs {
+        let req = ctx.into_request(
+            ctx.trace_id,
+            ShapeClass::batched_gemm(8, 8, 8),
+            vec![],
+            t0,
+            slo,
+        );
+        qs.push(req).unwrap();
+    }
+    // EDF pops by wire deadline (priority breaking the 10 ms tie), with
+    // the SLO-default request at its 100 ms slot — NOT submission order,
+    // which would be 1, 2, 3, 4.
+    let a = qs.pop_tenant(0).unwrap();
+    assert_eq!((a.id, a.deadline), (2, t0 + Duration::from_millis(10)));
+    let b = qs.pop_tenant(0).unwrap();
+    assert_eq!((b.id, b.deadline), (4, t0 + Duration::from_millis(10)));
+    let c = qs.pop_tenant(0).unwrap();
+    assert_eq!((c.id, c.deadline), (3, t0 + slo), "SLO only when the wire named nothing");
+    let d = qs.pop_tenant(0).unwrap();
+    assert_eq!((d.id, d.deadline), (1, t0 + Duration::from_millis(300)));
+}
+
+#[test]
+fn reactor_serves_the_full_stack_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+    // One token of burst and a glacial refill: the second admitted
+    // request must be rate limited no matter how slow the test host is.
+    let gw = Arc::new(Mutex::new(Gateway::new(
+        &cfg(vec![("key-0", 0, IsolationClass::Premium)], 0.001, 1.0),
+        FakeShard::ok(),
+    )));
+    let handler = gateway_handler(gw.clone(), Arc::new(|_t| Vec::new()));
+    let r = Reactor::start("127.0.0.1:0", 2, handler).expect("bind");
+    let sock = std::net::TcpStream::connect(r.addr()).expect("connect");
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut w = sock;
+    let mut ask = |line: &str| {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).expect("response json")
+    };
+
+    // An unknown priority is a validation error before any token is spent.
+    let j = ask("{\"api_key\":\"key-0\",\"priority\":\"urgent\"}");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        j.get("error").and_then(|e| e.get("error")).and_then(Json::as_str),
+        Some("bad_request")
+    );
+
+    // The full stack admits a well-formed request and echoes the trace.
+    let j = ask("{\"api_key\":\"key-0\",\"budget_ms\":25,\"priority\":\"high\",\"trace_id\":11}");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("tenant").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(j.get("trace_id").and_then(Json::as_f64), Some(11.0));
+
+    // The bucket is empty: a structured rate-limit error with a retry hint.
+    let j = ask("{\"api_key\":\"key-0\",\"trace_id\":12}");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    let err = j.get("error").expect("error body");
+    assert_eq!(err.get("error").and_then(Json::as_str), Some("rate_limited"));
+    assert_eq!(err.get("status").and_then(Json::as_f64), Some(429.0));
+    assert!(err.get("retry_after_ms").and_then(Json::as_f64).unwrap() > 0.0);
+
+    r.stop();
+    let g = gw.lock().unwrap();
+    assert_eq!(g.stats().admitted, 1);
+    assert_eq!(g.stats().rate_limited, 1);
+    // The wire's deadline/priority landed in the submitted context.
+    let ctx = g.backend().ctxs[0];
+    assert_eq!(ctx.deadline, DeadlineSpec::Budget(Duration::from_millis(25)));
+    assert_eq!(ctx.priority, Priority::High);
+    assert_eq!(ctx.trace_id, 11);
+}

@@ -12,7 +12,7 @@
 use std::time::Instant;
 
 use stgpu::coordinator::placement::{place, DevicePlacer};
-use stgpu::coordinator::request::{InferenceRequest, Reject, ShapeClass};
+use stgpu::coordinator::request::{InferenceRequest, Priority, Reject, ShapeClass};
 use stgpu::coordinator::QueueSet;
 use stgpu::gpusim::{self, DeviceSpec, GemmShape, Policy, SimConfig};
 use stgpu::workload::sgemm_tenants;
@@ -107,6 +107,8 @@ fn req(id: u64, tenant: usize) -> InferenceRequest {
         payload: vec![],
         arrived: Instant::now(),
         deadline: Instant::now(),
+        priority: Priority::Normal,
+        trace_id: 0,
     }
 }
 

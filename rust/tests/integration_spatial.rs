@@ -11,7 +11,7 @@ use std::time::Instant;
 use stgpu::config::{SchedulerKind, ServerConfig, TenantConfig};
 use stgpu::coordinator::scheduler::SpaceTimeSched;
 use stgpu::coordinator::{
-    Coordinator, CostModel, InferenceRequest, QueueSet, Scheduler, ShapeClass,
+    Coordinator, CostModel, InferenceRequest, Priority, QueueSet, Scheduler, ShapeClass,
 };
 use stgpu::gpusim::cost::{kernel_service_time, CostCtx};
 use stgpu::gpusim::{DeviceSpec, GemmShape, KernelDesc};
@@ -105,6 +105,8 @@ fn drain_backlog(lanes: usize, cost: &Arc<Mutex<CostModel>>) -> (f64, usize) {
                     payload: vec![],
                     arrived: now,
                     deadline: now,
+                    priority: Priority::Normal,
+                    trace_id: 0,
                 })
                 .unwrap();
                 id += 1;

@@ -7,7 +7,7 @@ use std::time::Instant;
 use stgpu::coordinator::batcher::{DynamicBatcher, PaddingPolicy};
 use stgpu::coordinator::monitor::{MonitorConfig, SloMonitor};
 use stgpu::coordinator::queue::QueueSet;
-use stgpu::coordinator::request::{InferenceRequest, ShapeClass};
+use stgpu::coordinator::request::{InferenceRequest, Priority, ShapeClass};
 use stgpu::coordinator::scheduler::{
     launch_weight, make_scheduler, Scheduler, SpaceTimeSched,
 };
@@ -34,6 +34,8 @@ fn rand_requests(rng: &mut Rng, n_tenants: usize, max: usize) -> Vec<InferenceRe
             payload: vec![],
             arrived: Instant::now(),
             deadline: Instant::now(),
+            priority: Priority::Normal,
+            trace_id: 0,
         })
         .collect()
 }
@@ -251,6 +253,8 @@ fn fill_queues(rng: &mut Rng, n_tenants: usize, max_per: usize) -> (QueueSet, us
                 payload: vec![],
                 arrived: Instant::now(),
                 deadline: Instant::now(),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
             id += 1;
@@ -369,6 +373,8 @@ fn prop_spacetime_single_class_fills_before_splitting() {
                 payload: vec![],
                 arrived: Instant::now(),
                 deadline: Instant::now(),
+                priority: Priority::Normal,
+                trace_id: 0,
             })
             .unwrap();
         }
@@ -468,6 +474,8 @@ fn prop_queue_depth_is_hard_bound() {
                 payload: vec![],
                 arrived: Instant::now(),
                 deadline: Instant::now(),
+                priority: Priority::Normal,
+                trace_id: 0,
             };
             if q.push(r).is_ok() {
                 accepted += 1;

@@ -7,7 +7,7 @@
 # Steps (in CI-job order):
 #   build-test:  cargo build --release && cargo test -q
 #                && cargo build --benches --examples
-#   bench-gate:  cargo bench --no-run, the fig11-fig15 smokes,
+#   bench-gate:  cargo bench --no-run, the fig11-fig16 smokes,
 #                the `stgpu tune --budget 20` smoke (validated-TOML +
 #                baseline check), then scripts/bench_gate.py against
 #                rust/bench_baselines
@@ -61,6 +61,8 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
     cargo bench --bench fig14_cluster_scaleout
     step "bench-gate: fig15 work-stealing smoke"
     cargo bench --bench fig15_work_stealing
+    step "bench-gate: fig16 overload-degradation smoke"
+    cargo bench --bench fig16_overload_degradation
     step "bench-gate: stgpu tune smoke (budget 20)"
     cargo run --release --bin stgpu -- tune --workload fig12 --budget 20 \
         --out-toml rust/results/tune_fig12.toml \
