@@ -433,6 +433,10 @@ pub struct GatewayConfig {
     pub listen: Option<String>,
     /// Reactor worker threads handling decoded connections. [1, 64].
     pub reactor_workers: usize,
+    /// Keep-alive connections idle (no complete request, no new bytes)
+    /// longer than this are closed so they stop pinning a reactor
+    /// worker. Milliseconds, [1, 3_600_000].
+    pub idle_timeout_ms: f64,
     /// Base token refill rate, requests/second per tenant (scaled by
     /// [`IsolationClass::rate_mult`]). Must be finite and > 0.
     pub rate: f64,
@@ -458,6 +462,7 @@ impl Default for GatewayConfig {
             enabled: false,
             listen: None,
             reactor_workers: 4,
+            idle_timeout_ms: 10_000.0,
             rate: 64.0,
             burst: 128.0,
             breaker_window: 32,
@@ -488,6 +493,12 @@ impl GatewayConfig {
                     return Err("gateway.reactor_workers must be in [1, 64]".into());
                 }
                 cfg.reactor_workers = v as usize;
+            }
+            if let Some(v) = section.get("idle_timeout_ms").and_then(|v| v.as_float()) {
+                if !v.is_finite() || !(1.0..=3_600_000.0).contains(&v) {
+                    return Err("gateway.idle_timeout_ms must be in [1, 3600000] (ms)".into());
+                }
+                cfg.idle_timeout_ms = v;
             }
             if let Some(v) = section.get("rate").and_then(|v| v.as_float()) {
                 if !v.is_finite() || v <= 0.0 {
@@ -760,6 +771,7 @@ mod tests {
             enabled = true
             listen = "127.0.0.1:7071"
             reactor_workers = 8
+            idle_timeout_ms = 5000
             rate = 100.0
             burst = 200.0
             breaker_window = 16
@@ -786,6 +798,7 @@ mod tests {
         assert!(g.enabled);
         assert_eq!(g.listen.as_deref(), Some("127.0.0.1:7071"));
         assert_eq!(g.reactor_workers, 8);
+        assert_eq!(g.idle_timeout_ms, 5000.0);
         assert_eq!(g.rate, 100.0);
         assert_eq!(g.breaker_window, 16);
         assert_eq!(g.half_open_probes, 2);

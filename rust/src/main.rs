@@ -52,6 +52,7 @@ use stgpu::server::{aggregate_nodes, Gateway, Reactor, ServeOpts, Server, Server
 use stgpu::util::json::Json;
 use stgpu::util::bench::{fmt_flops, fmt_secs, Table};
 use stgpu::util::prng::Rng;
+use stgpu::util::sync::lock_recover;
 use stgpu::workload::sgemm_tenants;
 
 fn main() {
@@ -223,9 +224,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                     .map(|s| stgpu::runtime::HostTensor::random(s, &mut rng))
                     .collect::<Vec<_>>()
             });
-            let r = Reactor::start(
+            let r = Reactor::start_with(
                 listen.as_str(),
                 cfg.gateway.reactor_workers,
+                Duration::from_secs_f64(cfg.gateway.idle_timeout_ms / 1e3),
                 gateway_handler(gw.clone(), payload_for),
             )
             .expect("bind gateway listener");
@@ -251,7 +253,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             if let (Some(gw), Json::Obj(map)) = (&gw, &mut j) {
                 map.insert(
                     "gateway".to_string(),
-                    gw.lock().unwrap().status_json(Instant::now()),
+                    lock_recover(gw).status_json(Instant::now()),
                 );
             }
             j.to_string()

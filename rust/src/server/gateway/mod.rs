@@ -43,6 +43,13 @@ pub use ratelimit::TokenBucket;
 pub use reactor::{Reactor, ReactorHandle};
 
 use crate::config::{GatewayConfig, IsolationClass};
+
+/// Ceiling on a wire-supplied `budget_ms`: 24 hours. Anything larger is
+/// a client bug, and `Duration::from_secs_f64` panics near `f64::MAX` —
+/// the validation layer rejects out-of-range budgets before a duration
+/// is ever constructed, so a hostile `{"budget_ms":1e300}` is a
+/// `BadRequest`, not a worker panic.
+pub const MAX_BUDGET_MS: f64 = 86_400_000.0;
 use crate::coordinator::{Coordinator, Priority, Reject, RequestContext};
 use crate::runtime::HostTensor;
 use crate::server::frontend::{Reply, ServerHandle};
@@ -123,7 +130,9 @@ pub struct WireRequest<'a> {
 }
 
 /// An admitted request in flight: pass back to [`Gateway::wait`] for the
-/// reply (which also feeds the breaker the outcome).
+/// reply (which also feeds the breaker the outcome), or — when the
+/// gateway sits behind a lock — block on [`GatewayTicket::into_reply`]
+/// WITHOUT the lock and feed the outcome back via [`Gateway::finish`].
 #[derive(Debug)]
 pub struct GatewayTicket {
     /// Shard the request was routed to.
@@ -132,6 +141,30 @@ pub struct GatewayTicket {
     /// synchronous-reply path records during `admit`).
     recorded: bool,
     reply: BackendReply,
+}
+
+impl GatewayTicket {
+    /// Block for the backend reply. Needs no gateway access, so callers
+    /// that share a `Mutex<Gateway>` across threads (the reactor) drop
+    /// the guard first — a stalled backend must not serialize every
+    /// other worker's auth/rate-limit rejections behind one in-flight
+    /// request. Pass the returned [`TicketOutcome`] to
+    /// [`Gateway::finish`] for breaker bookkeeping.
+    pub fn into_reply(self) -> (TicketOutcome, Reply) {
+        let out = match self.reply {
+            BackendReply::Ready(r) => r,
+            BackendReply::Pending(rx) => rx.recv().unwrap_or(Err(Reject::ServerShutdown)),
+        };
+        (TicketOutcome { device: self.device, recorded: self.recorded }, out)
+    }
+}
+
+/// What's left of a ticket once the reply arrived: the breaker key and
+/// whether the outcome was already recorded at admission.
+#[derive(Debug, Clone, Copy)]
+pub struct TicketOutcome {
+    device: usize,
+    recorded: bool,
 }
 
 /// Monotonic gateway counters (status JSON / tests).
@@ -212,9 +245,10 @@ impl<B: GatewayBackend> Gateway<B> {
         let Some(principal) = self.auth.authenticate(wire.api_key) else {
             return Err(Reject::AuthFailed);
         };
-        // Layer 2: validation.
+        // Layer 2: validation. The upper bound is load-bearing:
+        // `Duration::from_secs_f64` in layer 5 panics on huge values.
         if let Some(ms) = wire.budget_ms {
-            if !ms.is_finite() || ms <= 0.0 {
+            if !ms.is_finite() || ms <= 0.0 || ms > MAX_BUDGET_MS {
                 self.stats.bad_requests += 1;
                 return Err(bad_budget());
             }
@@ -266,22 +300,29 @@ impl<B: GatewayBackend> Gateway<B> {
 
     /// Collect an admitted request's reply (blocking on the pending
     /// path) and feed the breaker its outcome. `now` timestamps the
-    /// outcome for breaker bookkeeping.
+    /// outcome for breaker bookkeeping. Convenience for single-threaded
+    /// callers (tests, the fig16 sweep); the reactor uses the split
+    /// [`GatewayTicket::into_reply`] + [`Gateway::finish`] path so the
+    /// blocking wait happens outside the gateway lock.
     pub fn wait(&mut self, ticket: GatewayTicket, now: Instant) -> Reply {
-        let out = match ticket.reply {
-            BackendReply::Ready(r) => r,
-            BackendReply::Pending(rx) => rx.recv().unwrap_or(Err(Reject::ServerShutdown)),
-        };
-        if !ticket.recorded {
-            self.breakers[ticket.device].record(
-                matches!(&out, Err(r) if r.is_overload()),
+        let (outcome, out) = ticket.into_reply();
+        self.finish(outcome, &out, now);
+        out
+    }
+
+    /// Record a completed request's verdict into the breaker and the
+    /// counters (no-op if the synchronous path already recorded it at
+    /// admission).
+    pub fn finish(&mut self, outcome: TicketOutcome, out: &Reply, now: Instant) {
+        if !outcome.recorded {
+            self.breakers[outcome.device].record(
+                matches!(out, Err(r) if r.is_overload()),
                 now,
             );
             if out.is_err() {
                 self.stats.backend_rejects += 1;
             }
         }
-        out
     }
 
     pub fn stats(&self) -> GatewayStats {
@@ -361,7 +402,7 @@ impl<B: GatewayBackend> Gateway<B> {
 /// message — keeps the admission fast path allocation-free.
 #[cold]
 fn bad_budget() -> Reject {
-    Reject::BadRequest("budget_ms must be finite and > 0".into())
+    Reject::BadRequest("budget_ms must be finite, > 0, and <= 86400000 (24h)".into())
 }
 
 #[cfg(test)]
@@ -459,6 +500,22 @@ mod tests {
         let s = g.stats();
         assert_eq!((s.admitted, s.rate_limited, s.bad_requests), (2, 1, 1));
         assert_eq!(g.backend().calls, 2);
+    }
+
+    #[test]
+    fn huge_budget_is_a_bad_request_not_a_panic() {
+        let t0 = Instant::now();
+        let mut g = Gateway::new(&cfg(), FakeBackend::ok(1));
+        // 1e300 ms is finite and > 0 but would panic in
+        // Duration::from_secs_f64; the ceiling catches it first.
+        for ms in [1e300, MAX_BUDGET_MS * 2.0, f64::MAX] {
+            let w = WireRequest { budget_ms: Some(ms), ..wire("k0") };
+            assert!(matches!(g.admit(&w, vec![], t0), Err(Reject::BadRequest(_))));
+        }
+        assert_eq!(g.stats().bad_requests, 3);
+        // The gateway keeps serving: exactly at the ceiling is fine.
+        let w = WireRequest { budget_ms: Some(MAX_BUDGET_MS), ..wire("k0") };
+        assert!(g.admit(&w, vec![], t0).is_ok());
     }
 
     #[test]

@@ -16,6 +16,17 @@
 //! optional. Responses are either
 //! `{"ok": true, "id": .., "tenant": .., "latency_ms": .., "trace_id": ..}`
 //! or `{"ok": false, "error": <structured Reject JSON>}`.
+//!
+//! `trace_id` rides as a JSON number only while it is exactly
+//! representable in an `f64` (< 2^53); larger 64-bit ids must be sent —
+//! and are echoed back — as a decimal **string** (`"trace_id":
+//! "18446744073709551615"`), so caller-chosen random u64 ids round-trip
+//! bit-exactly. A numeric id at or above 2^53 is rejected as
+//! `bad_request` rather than silently altered.
+//!
+//! Keep-alive connections each occupy one pool worker, so a connection
+//! that stays idle past the configured idle timeout (no complete
+//! request and no new bytes) is closed to let queued connections in.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -29,6 +40,16 @@ use crate::coordinator::{Priority, Reject};
 use crate::runtime::HostTensor;
 use crate::server::gateway::{Gateway, GatewayBackend, WireRequest};
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+
+/// Default idle-connection bound for [`Reactor::start`]; the serving CLI
+/// threads `gateway.idle_timeout_ms` through [`Reactor::start_with`].
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Largest integer exactly representable in an `f64` (2^53): the bound
+/// up to which a numeric JSON `trace_id` round-trips without precision
+/// loss. Ids at or above it travel as decimal strings.
+const TRACE_ID_NUM_MAX: u64 = 1 << 53;
 
 /// Per-connection request handler: one request line in, one response
 /// line out (without the trailing newline).
@@ -48,10 +69,24 @@ pub struct ReactorHandle {
 
 impl Reactor {
     /// Bind `addr` (port 0 for ephemeral) and serve connections on
-    /// `workers` pool threads, passing each request line to `handler`.
+    /// `workers` pool threads, passing each request line to `handler`,
+    /// with the [`DEFAULT_IDLE_TIMEOUT`] keep-alive bound.
     pub fn start(
         addr: impl ToSocketAddrs,
         workers: usize,
+        handler: Arc<Handler>,
+    ) -> std::io::Result<ReactorHandle> {
+        Self::start_with(addr, workers, DEFAULT_IDLE_TIMEOUT, handler)
+    }
+
+    /// [`Reactor::start`] with an explicit idle-connection timeout: a
+    /// keep-alive connection that produces no complete request and no
+    /// new bytes for this long is closed, freeing its pool worker for
+    /// queued connections.
+    pub fn start_with(
+        addr: impl ToSocketAddrs,
+        workers: usize,
+        idle_timeout: Duration,
         handler: Arc<Handler>,
     ) -> std::io::Result<ReactorHandle> {
         let listener = TcpListener::bind(addr)?;
@@ -69,7 +104,7 @@ impl Reactor {
             pool.push(
                 std::thread::Builder::new()
                     .name(format!("stgpu-gw-worker-{i}"))
-                    .spawn(move || worker_loop(&rx, &*handler, &stop))?,
+                    .spawn(move || worker_loop(&rx, &*handler, &stop, idle_timeout))?,
             );
         }
 
@@ -101,16 +136,21 @@ impl Reactor {
     }
 }
 
-fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, handler: &Handler, stop: &AtomicBool) {
+fn worker_loop(
+    rx: &Mutex<Receiver<TcpStream>>,
+    handler: &Handler,
+    stop: &AtomicBool,
+    idle_timeout: Duration,
+) {
     loop {
         // Hold the queue lock only for the dequeue, not for the whole
         // connection.
         let sock = {
-            let guard = rx.lock().expect("reactor queue poisoned");
+            let guard = lock_recover(rx);
             guard.recv_timeout(Duration::from_millis(50))
         };
         match sock {
-            Ok(sock) => serve_connection(sock, handler, stop),
+            Ok(sock) => serve_connection(sock, handler, stop, idle_timeout),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                 if stop.load(Ordering::Relaxed) {
                     return;
@@ -122,36 +162,59 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, handler: &Handler, stop: &Atomic
 }
 
 /// Serve one keep-alive connection: request line in, response line out,
-/// until EOF, a write error, or shutdown.
-fn serve_connection(sock: TcpStream, handler: &Handler, stop: &AtomicBool) {
+/// until EOF, a write error, the idle timeout, or shutdown.
+fn serve_connection(
+    sock: TcpStream,
+    handler: &Handler,
+    stop: &AtomicBool,
+    idle_timeout: Duration,
+) {
     let mut writer = match sock.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let mut reader = BufReader::new(sock);
     let mut line = String::new();
+    // Bytes of `line` already seen at the last activity check: lets a
+    // slowly-trickling request count as activity without resetting the
+    // idle clock for a buffer that is merely non-empty.
+    let mut seen_len = 0usize;
+    let mut last_activity = Instant::now();
     while !stop.load(Ordering::Relaxed) {
-        line.clear();
         match reader.read_line(&mut line) {
             Ok(0) => return, // EOF
             Ok(_) => {
                 let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
+                if !trimmed.is_empty() {
+                    let resp = handler(trimmed);
+                    if writer.write_all(resp.as_bytes()).is_err()
+                        || writer.write_all(b"\n").is_err()
+                    {
+                        return;
+                    }
                 }
-                let resp = handler(trimmed);
-                if writer.write_all(resp.as_bytes()).is_err()
-                    || writer.write_all(b"\n").is_err()
-                {
-                    return;
-                }
+                // Only a COMPLETE line retires the buffer. On the
+                // timeout path below, `read_line` has already appended
+                // any partially-read bytes (read_until's contract), and
+                // clearing there would corrupt a request that straddles
+                // a timeout boundary.
+                line.clear();
+                seen_len = 0;
+                last_activity = Instant::now();
             }
-            // Read timeout: re-check the stop flag and keep waiting.
+            // Read timeout: keep the partial buffer, re-check the stop
+            // flag and the idle clock, and keep accumulating.
             Err(ref e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                continue;
+                if line.len() > seen_len {
+                    seen_len = line.len();
+                    last_activity = Instant::now();
+                }
+                if last_activity.elapsed() >= idle_timeout {
+                    return;
+                }
             }
             Err(_) => return,
         }
@@ -225,37 +288,78 @@ fn handle_line<B: GatewayBackend>(
                 .ok_or_else(|| Reject::BadRequest(format!("unknown priority {p:?}")))?,
         ),
     };
-    let trace_id = req.get("trace_id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let trace_id = decode_trace_id(&req)?;
     let wire = WireRequest { api_key, budget_ms, priority, trace_id };
 
-    // Admission holds the gateway lock; the (possibly blocking) wait for
-    // the backend reply does too — per-request replies are matched to
-    // their ticket, and the simulated backend's submit is itself
-    // synchronous, so the lock is the ordering domain. The worker pool
-    // provides the connection-level concurrency.
-    let mut gw = gateway.lock().expect("gateway poisoned");
-    let tenant = match gw.peek_tenant(api_key) {
-        Some(t) => t,
-        None => {
-            // Let admit() record the auth failure.
-            let now = Instant::now();
-            return match gw.admit(&wire, Vec::new(), now) {
-                Err(rej) => Err(rej),
-                Ok(_) => unreachable!("unknown key cannot admit"),
-            };
+    // The gateway lock is held for the cheap admission stack only —
+    // NEVER across the blocking wait for the backend reply, so one
+    // in-flight request can't serialize the other workers' (or the
+    // status endpoint's) auth/rate-limit/breaker verdicts behind it.
+    let tenant = {
+        let mut gw = lock_recover(gateway);
+        match gw.peek_tenant(api_key) {
+            Some(t) => t,
+            None => {
+                // Let admit() record the auth failure.
+                let now = Instant::now();
+                return match gw.admit(&wire, Vec::new(), now) {
+                    Err(rej) => Err(rej),
+                    Ok(_) => unreachable!("unknown key cannot admit"),
+                };
+            }
         }
     };
+    // Payload generation is also lock-free: only admit() needs the
+    // gateway.
     let payload = payload_for(tenant);
-    let now = Instant::now();
-    let ticket = gw.admit(&wire, payload, now)?;
-    let res = gw.wait(ticket, Instant::now())?;
+    let ticket = lock_recover(gateway).admit(&wire, payload, Instant::now())?;
+    // Blocking wait with the lock RELEASED; re-lock briefly to feed the
+    // breaker the outcome.
+    let (outcome, out) = ticket.into_reply();
+    lock_recover(gateway).finish(outcome, &out, Instant::now());
+    let res = out?;
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("id", Json::num(res.id as f64)),
         ("tenant", Json::num(res.tenant as f64)),
         ("latency_ms", Json::num(res.latency_s * 1e3)),
-        ("trace_id", Json::num(res.trace_id as f64)),
+        ("trace_id", trace_id_json(res.trace_id)),
     ]))
+}
+
+/// Decode the wire `trace_id`: a JSON number for ids below 2^53 (the
+/// f64-exact range — the JSON parser stores numbers as `f64`, so larger
+/// numerics would be silently rounded and break client correlation), or
+/// a decimal string for full-range u64 ids. Absent means 0.
+fn decode_trace_id(req: &Json) -> Result<u64, Reject> {
+    match req.get("trace_id") {
+        None | Some(Json::Null) => Ok(0),
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|_| Reject::BadRequest(format!("trace_id string must be a u64, got {s:?}"))),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| Reject::BadRequest("trace_id must be an integer or string".into()))?;
+            if !(f.is_finite() && f >= 0.0 && f.fract() == 0.0 && f < TRACE_ID_NUM_MAX as f64) {
+                return Err(Reject::BadRequest(
+                    "numeric trace_id must be an integer in [0, 2^53); send larger ids as a string"
+                        .into(),
+                ));
+            }
+            Ok(f as u64)
+        }
+    }
+}
+
+/// Encode a `trace_id` for the response: number while exact in f64,
+/// decimal string beyond — whichever form round-trips bit-exactly.
+fn trace_id_json(id: u64) -> Json {
+    if id < TRACE_ID_NUM_MAX {
+        Json::num(id as f64)
+    } else {
+        Json::Str(id.to_string())
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +385,46 @@ mod tests {
             reader.read_line(&mut resp).unwrap();
             assert_eq!(resp.trim(), format!("echo:ping{i}"));
         }
+        r.stop();
+    }
+
+    #[test]
+    fn request_straddling_a_read_timeout_is_reassembled() {
+        let handler: Arc<Handler> = Arc::new(|line: &str| format!("echo:{line}"));
+        let r = Reactor::start("127.0.0.1:0", 1, handler).expect("bind");
+        let sock = TcpStream::connect(r.addr()).expect("connect");
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        // First half, then a pause well past the worker's 50ms read
+        // timeout, then the rest: the partial bytes must survive the
+        // timeout (not be discarded with the cleared buffer).
+        w.write_all(b"pi").unwrap();
+        w.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        w.write_all(b"ng\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim(), "echo:ping");
+        r.stop();
+    }
+
+    #[test]
+    fn idle_connections_are_closed_after_the_timeout() {
+        let handler: Arc<Handler> = Arc::new(|line: &str| format!("echo:{line}"));
+        let r = Reactor::start_with("127.0.0.1:0", 1, Duration::from_millis(200), handler)
+            .expect("bind");
+        let sock = TcpStream::connect(r.addr()).expect("connect");
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut w = sock;
+        // The connection works while active...
+        w.write_all(b"hi\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim(), "echo:hi");
+        // ...then the worker hangs up once it sits idle, freeing the
+        // pool slot (EOF on our side).
+        let mut eof = String::new();
+        assert_eq!(reader.read_line(&mut eof).unwrap(), 0);
         r.stop();
     }
 
@@ -388,5 +532,139 @@ mod tests {
         let g = gw.lock().unwrap();
         assert_eq!(g.stats().admitted, 1);
         assert_eq!(g.auth_failures(), 1);
+    }
+
+    #[test]
+    fn trace_ids_round_trip_including_full_u64_range() {
+        let cfg = GatewayConfig {
+            rate: 1000.0,
+            burst: 1000.0,
+            tenants: vec![GatewayTenant {
+                api_key: "secret".into(),
+                tenant: 0,
+                class: IsolationClass::Standard,
+            }],
+            ..GatewayConfig::default()
+        };
+        let gw = Arc::new(Mutex::new(Gateway::new(&cfg, OkBackend { calls: 0 })));
+        let handler = gateway_handler(gw, Arc::new(|_t| Vec::new()));
+        let call = &*handler;
+        let big = u64::MAX - 1;
+
+        // Numeric form: exact below 2^53, echoed as a number.
+        let resp = call("{\"api_key\":\"secret\",\"trace_id\":12345}");
+        let j = Json::parse(&resp).expect("response json");
+        assert_eq!(j.get("trace_id").and_then(Json::as_f64), Some(12345.0));
+
+        // String form: the full u64 range round-trips bit-exactly.
+        let resp = call(&format!("{{\"api_key\":\"secret\",\"trace_id\":\"{big}\"}}"));
+        let j = Json::parse(&resp).expect("response json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("trace_id").and_then(Json::as_str), Some(big.to_string().as_str()));
+
+        // A numeric id at/above 2^53 would be silently rounded by the
+        // f64 decode, so it is rejected rather than altered.
+        let resp = call("{\"api_key\":\"secret\",\"trace_id\":9007199254740993}");
+        let j = Json::parse(&resp).expect("error json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            j.get("error").and_then(|e| e.get("error")).and_then(Json::as_str),
+            Some("bad_request")
+        );
+
+        // Garbage string ids are rejected too.
+        let resp = call("{\"api_key\":\"secret\",\"trace_id\":\"not-a-number\"}");
+        let j = Json::parse(&resp).expect("error json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    /// Backend that parks every submission as a pending reply the test
+    /// completes by hand — models the production threaded frontend.
+    struct ParkedBackend {
+        parked: Arc<Mutex<Vec<(RequestContext, std::sync::mpsc::Sender<crate::server::frontend::Reply>)>>>,
+    }
+
+    impl GatewayBackend for ParkedBackend {
+        fn devices(&self) -> usize {
+            1
+        }
+
+        fn device_of(&self, _tenant: usize) -> usize {
+            0
+        }
+
+        fn submit(&mut self, ctx: RequestContext, _payload: Vec<HostTensor>) -> BackendReply {
+            let (tx, rx) = std::sync::mpsc::channel();
+            self.parked.lock().unwrap().push((ctx, tx));
+            BackendReply::Pending(rx)
+        }
+    }
+
+    #[test]
+    fn gateway_lock_is_released_while_a_reply_is_pending() {
+        let cfg = GatewayConfig {
+            rate: 1000.0,
+            burst: 1000.0,
+            tenants: vec![GatewayTenant {
+                api_key: "secret".into(),
+                tenant: 0,
+                class: IsolationClass::Standard,
+            }],
+            ..GatewayConfig::default()
+        };
+        let parked = Arc::new(Mutex::new(Vec::new()));
+        let gw = Arc::new(Mutex::new(Gateway::new(&cfg, ParkedBackend { parked: parked.clone() })));
+        let handler = gateway_handler(gw.clone(), Arc::new(|_t| Vec::new()));
+        let r = Reactor::start("127.0.0.1:0", 2, handler).expect("bind");
+
+        // Connection A: a request whose backend reply we hold parked.
+        let sock_a = TcpStream::connect(r.addr()).expect("connect a");
+        let mut reader_a = BufReader::new(sock_a.try_clone().unwrap());
+        let mut wa = sock_a;
+        wa.write_all(b"{\"api_key\":\"secret\",\"trace_id\":7}\n").unwrap();
+        // Wait until A's request has actually been admitted and parked.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while parked.lock().unwrap().is_empty() {
+            assert!(Instant::now() < deadline, "request never reached the backend");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // Connection B: with A still in flight, a cheap rejection must
+        // complete — the worker serving A may NOT be holding the
+        // gateway lock across its blocking wait.
+        let sock_b = TcpStream::connect(r.addr()).expect("connect b");
+        sock_b.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader_b = BufReader::new(sock_b.try_clone().unwrap());
+        let mut wb = sock_b;
+        wb.write_all(b"{\"api_key\":\"wrong\"}\n").unwrap();
+        let mut resp_b = String::new();
+        reader_b.read_line(&mut resp_b).expect("b served while a pending");
+        let j = Json::parse(resp_b.trim()).expect("b json");
+        assert_eq!(
+            j.get("error").and_then(|e| e.get("error")).and_then(Json::as_str),
+            Some("auth_failed")
+        );
+
+        // Release A and check the reply (with its breaker outcome)
+        // still lands.
+        let (ctx, tx) = parked.lock().unwrap().pop().unwrap();
+        tx.send(Ok(InferenceResponse {
+            id: 1,
+            tenant: ctx.tenant,
+            output: HostTensor { shape: vec![1], data: vec![0.0] },
+            latency_s: 0.002,
+            service_s: 0.002,
+            fused_r: 1,
+            trace_id: ctx.trace_id,
+        }))
+        .unwrap();
+        let mut resp_a = String::new();
+        reader_a.read_line(&mut resp_a).unwrap();
+        let j = Json::parse(resp_a.trim()).expect("a json");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("trace_id").and_then(Json::as_f64), Some(7.0));
+
+        r.stop();
+        assert_eq!(gw.lock().unwrap().stats().admitted, 1);
     }
 }

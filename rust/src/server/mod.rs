@@ -9,7 +9,7 @@ pub mod status;
 pub use frontend::{Reply, ServeOpts, Server, ServerHandle};
 pub use gateway::{
     AuthTable, BackendReply, BreakerState, CircuitBreaker, Gateway, GatewayBackend,
-    GatewayStats, GatewayTicket, Principal, Reactor, ReactorHandle, ServerBackend, TokenBucket,
-    WireRequest,
+    GatewayStats, GatewayTicket, Principal, Reactor, ReactorHandle, ServerBackend,
+    TicketOutcome, TokenBucket, WireRequest,
 };
 pub use status::{aggregate_nodes, StatusEndpoint};

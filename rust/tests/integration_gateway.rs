@@ -324,3 +324,46 @@ fn reactor_serves_the_full_stack_over_tcp() {
     assert_eq!(ctx.priority, Priority::High);
     assert_eq!(ctx.trace_id, 11);
 }
+
+#[test]
+fn hostile_budget_cannot_disable_the_gateway() {
+    use std::io::{BufRead, BufReader, Write};
+    let gw = Arc::new(Mutex::new(Gateway::new(
+        &cfg(vec![("key-0", 0, IsolationClass::Standard)], 1000.0, 1000.0),
+        FakeShard::ok(),
+    )));
+    let handler = gateway_handler(gw.clone(), Arc::new(|_t| Vec::new()));
+    let r = Reactor::start("127.0.0.1:0", 2, handler).expect("bind");
+    let sock = std::net::TcpStream::connect(r.addr()).expect("connect");
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut w = sock;
+    let mut ask = |line: &str| {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).expect("worker must answer, not die");
+        Json::parse(resp.trim()).expect("response json")
+    };
+
+    // budget_ms:1e300 is finite and positive but far past the 24h
+    // ceiling; it used to panic inside Duration::from_secs_f64 with the
+    // gateway mutex held, poisoning it for every later request. Now it
+    // is a structured bad_request...
+    let j = ask("{\"api_key\":\"key-0\",\"budget_ms\":1e300,\"trace_id\":1}");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        j.get("error").and_then(|e| e.get("error")).and_then(Json::as_str),
+        Some("bad_request")
+    );
+
+    // ...and the gateway is still fully alive afterwards.
+    let j = ask("{\"api_key\":\"key-0\",\"budget_ms\":25,\"trace_id\":2}");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("trace_id").and_then(Json::as_f64), Some(2.0));
+
+    r.stop();
+    let g = gw.lock().unwrap();
+    assert_eq!(g.stats().bad_requests, 1);
+    assert_eq!(g.stats().admitted, 1);
+}
